@@ -1,0 +1,63 @@
+//! End-to-end driver (DESIGN.md §E2E): the isentropic-like model — the
+//! paper's Tasmania analog — run on a real small workload, proving all
+//! layers compose: GTScript-RS sources → analysis pipeline → backends
+//! (including the JAX/Pallas AOT tier) inside a multi-stencil time loop
+//! with boundary conditions and conservation diagnostics.
+//!
+//!     cargo run --release --example isentropic_model [steps] [backend]
+//!
+//! Results are recorded in EXPERIMENTS.md §E2E.
+
+use anyhow::Result;
+use gt4rs::model::{IsentropicModel, ModelConfig};
+use std::time::Instant;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let steps: usize = args.first().map(|s| s.parse()).transpose()?.unwrap_or(300);
+    let backend = args.get(1).cloned().unwrap_or_else(|| "vector".to_string());
+
+    let config = ModelConfig {
+        domain: [48, 48, 16],
+        u: 1.2,
+        v: 0.7,
+        w_amp: 0.1,
+        diffusion_coeff: 0.03,
+        dt: 0.15,
+        backend: backend.clone(),
+        ..ModelConfig::default()
+    };
+    println!(
+        "# isentropic-like model | domain {:?} | backend {} | {} steps",
+        config.domain, backend, steps
+    );
+    let mut model = IsentropicModel::new(config)?;
+
+    let mass0 = model.phi_snapshot().domain_sum();
+    println!("{:>6} {:>16} {:>12} {:>12} {:>10}", "step", "mass", "min", "max", "wall");
+    let t0 = Instant::now();
+    let mut last = None;
+    for s in 1..=steps {
+        let d = model.step()?;
+        if s % (steps / 15).max(1) == 0 || s == steps {
+            println!(
+                "{:>6} {:>16.9e} {:>12.4e} {:>12.4e} {:>10?}",
+                d.step, d.mass, d.min, d.max, d.wall
+            );
+        }
+        last = Some(d);
+    }
+    let total = t0.elapsed();
+    let d = last.unwrap();
+    let drift = ((d.mass - mass0) / mass0).abs();
+
+    println!("\n=== summary ===");
+    println!("steps/s          : {:.2}", steps as f64 / total.as_secs_f64());
+    println!("total wall       : {total:?}");
+    println!("mass drift       : {:.3e} (relative)", drift);
+    println!("field bounds     : [{:.4e}, {:.4e}]", d.min, d.max);
+    assert!(d.max.is_finite() && d.max < 10.0, "model blew up");
+    assert!(drift < 0.2, "mass drift too large: {drift}");
+    println!("isentropic_model OK");
+    Ok(())
+}

@@ -1,0 +1,111 @@
+"""AOT export: lower the L2 graphs to HLO text artifacts.
+
+HLO *text* (never ``.serialize()``): jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids that the image's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/gen_hlo.py.
+
+Artifacts land in ``artifacts/`` named
+``<stencil>[__<variant>]_<ni>x<nj>x<nk>.hlo.txt``; the default (no-suffix)
+artifact is the Pallas lowering where one exists. Run via ``make
+artifacts`` (a no-op when inputs are unchanged — make tracks the python
+sources).
+
+Usage: python -m compile.aot [--out-dir DIR] [--quick]
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+# Domain sweep of the Figure-3 benchmarks (kept in sync with
+# rust/benches/fig3_*.rs) plus the small domains tests/examples use.
+BENCH_DOMAINS = [
+    (16, 16, 8),
+    (32, 32, 16),
+    (48, 48, 24),
+    (64, 64, 32),
+    (96, 96, 48),
+    (128, 128, 64),
+]
+TEST_DOMAINS = [(8, 8, 4), (12, 10, 6)]
+MODEL_DOMAINS = [(32, 32, 8), (48, 48, 16)]
+
+#: (stencil, variant, emit-default-alias) — default artifact = pallas.
+EXPORTS = [
+    ("hdiff", "pallas", True),
+    ("hdiff", "jnp", False),
+    ("vadv", "pallas", True),
+    ("vadv", "jnp", False),
+    ("upwind_advect", "jnp", True),
+    ("model_step", "pallas", True),
+]
+
+DOMAINS_BY_STENCIL = {
+    "hdiff": BENCH_DOMAINS + TEST_DOMAINS + MODEL_DOMAINS,
+    "vadv": BENCH_DOMAINS + TEST_DOMAINS + MODEL_DOMAINS,
+    "upwind_advect": TEST_DOMAINS + MODEL_DOMAINS,
+    "model_step": TEST_DOMAINS + MODEL_DOMAINS,
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_one(out_dir, stencil, variant, domain, default_alias):
+    fn = model.BUILDERS[stencil](variant=variant)
+    specs = model.input_specs(stencil, domain)
+    # keep_unused: the AOT calling convention passes *every* field
+    # (including pure outputs, which the graph ignores) — jit must not
+    # prune them or the Rust side's argument count would not match.
+    lowered = jax.jit(fn, keep_unused=True).lower(*specs)
+    text = to_hlo_text(lowered)
+    ni, nj, nk = domain
+    names = [f"{stencil}__{variant}_{ni}x{nj}x{nk}.hlo.txt"]
+    if default_alias:
+        names.append(f"{stencil}_{ni}x{nj}x{nk}.hlo.txt")
+    for name in names:
+        path = os.path.join(out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+    return len(text), names
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--quick",
+        action="store_true",
+        help="only the small test/model domains (fast CI path)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    total = 0
+    for stencil, variant, default_alias in EXPORTS:
+        domains = DOMAINS_BY_STENCIL[stencil]
+        if args.quick:
+            domains = [d for d in domains if d in TEST_DOMAINS + MODEL_DOMAINS]
+        for domain in domains:
+            n, names = export_one(args.out_dir, stencil, variant, domain, default_alias)
+            total += 1
+            print(f"  wrote {names[-1]} ({n} chars)", file=sys.stderr)
+    print(f"exported {total} artifacts to {args.out_dir}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

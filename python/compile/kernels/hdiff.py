@@ -1,0 +1,79 @@
+"""L1 Pallas kernel: flux-limited horizontal diffusion.
+
+TPU mapping of the paper's `gtcuda` hdiff benchmark (DESIGN.md
+§Hardware-Adaptation): where the CUDA backend tiles the horizontal plane
+into threadblocks that stage a halo into shared memory, this kernel tiles
+the vertical axis — each grid step loads one full (ni+4, nj+4) halo plane
+into VMEM (a (128+4)² f64 plane is ~140 KB, far below the ~16 MB VMEM
+budget), computes the whole five-stage stencil as fused VPU element-wise
+arithmetic on registers/VMEM, and writes back the (ni, nj) interior.
+BlockSpec index maps express the HBM→VMEM schedule; there is no MXU work
+in a stencil (this kernel is memory-bound by design, matching the paper's
+roofline discussion).
+
+Lowered with ``interpret=True``: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so CPU artifacts are interpret-lowered while the kernel
+structure remains the real TPU one (see DESIGN.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hdiff_kernel(in_ref, coeff_ref, out_ref):
+    """One vertical level: in_ref (ni+4, nj+4, 1), coeff/out (ni, nj, 1)."""
+    ni = out_ref.shape[0]
+    nj = out_ref.shape[1]
+    phi = in_ref[...]  # (ni+4, nj+4, 1) VMEM block
+
+    def lap(i0, j0, li, lj):
+        c = phi[i0 : i0 + li, j0 : j0 + lj, :]
+        le = phi[i0 - 1 : i0 - 1 + li, j0 : j0 + lj, :]
+        r = phi[i0 + 1 : i0 + 1 + li, j0 : j0 + lj, :]
+        d = phi[i0 : i0 + li, j0 - 1 : j0 - 1 + lj, :]
+        u = phi[i0 : i0 + li, j0 + 1 : j0 + 1 + lj, :]
+        return 4.0 * c - (le + r + d + u)
+
+    lapf = lap(1, 1, ni + 2, nj + 2)  # lap over ±1, lapf[1+di, 1+dj]
+
+    flx = lapf[1 : ni + 2, 1 : nj + 1, :] - lapf[0 : ni + 1, 1 : nj + 1, :]
+    dphi_x = phi[2 : ni + 3, 2 : nj + 2, :] - phi[1 : ni + 2, 2 : nj + 2, :]
+    flx = jnp.where(flx * dphi_x > 0.0, 0.0, flx)
+
+    fly = lapf[1 : ni + 1, 1 : nj + 2, :] - lapf[1 : ni + 1, 0 : nj + 1, :]
+    dphi_y = phi[2 : ni + 2, 2 : nj + 3, :] - phi[2 : ni + 2, 1 : nj + 2, :]
+    fly = jnp.where(fly * dphi_y > 0.0, 0.0, fly)
+
+    out_ref[...] = phi[2 : ni + 2, 2 : nj + 2, :] - coeff_ref[...] * (
+        flx[1:, :, :] - flx[:-1, :, :] + fly[:, 1:, :] - fly[:, :-1, :]
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def hdiff_pallas(in_phi, coeff, *, interpret=True):
+    """Pallas horizontal diffusion.
+
+    Args:
+      in_phi: (ni+4, nj+4, nk) f64 — domain plus halo 2.
+      coeff:  (ni, nj, nk) f64.
+
+    Returns:
+      (ni, nj, nk) f64.
+    """
+    ni, nj, nk = coeff.shape
+    grid = (nk,)
+    return pl.pallas_call(
+        _hdiff_kernel,
+        grid=grid,
+        in_specs=[
+            # one full halo plane per level
+            pl.BlockSpec((ni + 4, nj + 4, 1), lambda k: (0, 0, k)),
+            pl.BlockSpec((ni, nj, 1), lambda k: (0, 0, k)),
+        ],
+        out_specs=pl.BlockSpec((ni, nj, 1), lambda k: (0, 0, k)),
+        out_shape=jax.ShapeDtypeStruct((ni, nj, nk), in_phi.dtype),
+        interpret=interpret,
+    )(in_phi, coeff)

@@ -1,0 +1,95 @@
+"""L1 Pallas kernel: implicit vertical advection (Thomas solver).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the solve is sequential in K
+and embarrassingly parallel in (I, J) — the same structure GTScript
+expresses with ``computation(FORWARD)/(BACKWARD)``. The kernel keeps whole
+columns resident in VMEM: the grid tiles the I axis, each program owning a
+(bi, nj, nk) slab (a 8×128×128 f64 slab is ~1 MB — comfortably inside
+VMEM), and runs the two sweeps as ``lax.scan`` over K on VPU lanes spanning
+the horizontal block. A GPU implementation would assign columns to threads;
+here the vector lanes play that role.
+
+Lowered with ``interpret=True`` for CPU-PJRT execution (see hdiff.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _vadv_kernel(phi_ref, w_ref, dtdz_ref, out_ref):
+    """One I-slab: phi/w/out (bi, nj, nk); dtdz scalar (1, 1) in SMEM-ish."""
+    phi = phi_ref[...]
+    w = w_ref[...]
+    dtdz = dtdz_ref[0, 0]
+
+    c_coef = 0.5 * dtdz * w  # (bi, nj, nk)
+    a_coef = -c_coef
+
+    # Forward elimination, carried over K by scan.
+    def fwd(carry, xs):
+        cp_prev, dp_prev = carry
+        a_k, c_k, d_k = xs
+        denom = 1.0 - a_k * cp_prev
+        cp_k = c_k / denom
+        dp_k = (d_k - a_k * dp_prev) / denom
+        return (cp_k, dp_k), (cp_k, dp_k)
+
+    a_t = jnp.moveaxis(a_coef, 2, 0)  # (nk, bi, nj)
+    c_t = jnp.moveaxis(c_coef, 2, 0)
+    d_t = jnp.moveaxis(phi, 2, 0)
+
+    cp0 = c_t[0]
+    dp0 = d_t[0]
+    (_, _), (cp_rest, dp_rest) = jax.lax.scan(
+        fwd, (cp0, dp0), (a_t[1:], c_t[1:], d_t[1:])
+    )
+    cp = jnp.concatenate([cp0[None], cp_rest], axis=0)  # (nk, bi, nj)
+    dp = jnp.concatenate([dp0[None], dp_rest], axis=0)
+
+    # Backward substitution.
+    def bwd(x_next, xs):
+        cp_k, dp_k = xs
+        x_k = dp_k - cp_k * x_next
+        return x_k, x_k
+
+    x_last = dp[-1]
+    _, x_rest = jax.lax.scan(
+        bwd, x_last, (cp[:-1], dp[:-1]), reverse=True
+    )
+    x = jnp.concatenate([x_rest, x_last[None]], axis=0)  # (nk, bi, nj)
+    out_ref[...] = jnp.moveaxis(x, 0, 2)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_i"))
+def vadv_pallas(phi, w, dtdz, *, interpret=True, block_i=8):
+    """Pallas implicit vertical advection.
+
+    Args:
+      phi: (ni, nj, nk) f64.
+      w:   (ni, nj, nk) f64.
+      dtdz: scalar f64.
+
+    Returns:
+      (ni, nj, nk) f64 solved tracer.
+    """
+    ni, nj, nk = phi.shape
+    bi = min(block_i, ni)
+    while ni % bi != 0:
+        bi -= 1
+    grid = (ni // bi,)
+    dtdz_arr = jnp.reshape(jnp.asarray(dtdz, dtype=phi.dtype), (1, 1))
+    return pl.pallas_call(
+        _vadv_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bi, nj, nk), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bi, nj, nk), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bi, nj, nk), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((ni, nj, nk), phi.dtype),
+        interpret=interpret,
+    )(phi, w, dtdz_arr)

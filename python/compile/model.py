@@ -1,0 +1,110 @@
+"""L2: the JAX compute graphs exported as AOT artifacts.
+
+Each builder returns a function with the AOT calling convention shared with
+the Rust ``pjrt-aot`` backend (see `rust/src/backend/pjrt_aot.rs`):
+
+* one f64 input per stencil field, shaped to the field's *box* (compute
+  domain + required halo, C-order I,J,K) — including output fields, whose
+  incoming values are the storage's current contents;
+* one rank-0 f64 input per scalar parameter;
+* returns a tuple with one (ni, nj, nk) array per *written* field, in
+  declaration order.
+
+Two lowering variants exist per kernel: ``pallas`` (the L1 kernels, the
+default artifact, the paper's `gtcuda` analog) and ``jnp`` (plain jnp, the
+ablation variant).
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+from .kernels import ref  # noqa: E402
+from .kernels.hdiff import hdiff_pallas  # noqa: E402
+from .kernels.vadv import vadv_pallas  # noqa: E402
+
+
+def build_hdiff(variant="pallas"):
+    """hdiff(in_phi box(+2,+2,0), coeff box(0), out_phi box(0)) -> (out,)."""
+
+    def fn(in_phi, coeff, out_phi):
+        del out_phi  # fully overwritten
+        if variant == "pallas":
+            out = hdiff_pallas(in_phi, coeff)
+        else:
+            out = ref.hdiff_ref(in_phi, coeff)
+        return (out,)
+
+    return fn
+
+
+def build_vadv(variant="pallas"):
+    """vadv(phi box(0), w box(0); dtdz) -> (phi_new,)."""
+
+    def fn(phi, w, dtdz):
+        if variant == "pallas":
+            out = vadv_pallas(phi, w, dtdz)
+        else:
+            out = ref.vadv_ref(phi, w, dtdz)
+        return (out,)
+
+    return fn
+
+
+def build_upwind_advect(variant="jnp"):
+    """upwind_advect(phi box(+1,+1,0), out box(0); u, v, dtdx, dtdy)."""
+    del variant
+
+    def fn(phi, out, u, v, dtdx, dtdy):
+        del out
+        return (ref.upwind_ref(phi, u, v, dtdx, dtdy),)
+
+    return fn
+
+
+def build_model_step(variant="pallas"):
+    """One fused L2 model macro-step: hdiff then vadv on the tracer.
+
+    Demonstrates L2 composition of L1 kernels in a single XLA program
+    (inputs: phi box(+2,+2,0), coeff box(0), w box(0); scalar dtdz).
+    Returns the updated (ni, nj, nk) tracer.
+    """
+
+    def fn(phi_box, coeff, w, dtdz):
+        if variant == "pallas":
+            diffused = hdiff_pallas(phi_box, coeff)
+            out = vadv_pallas(diffused, w, dtdz)
+        else:
+            diffused = ref.hdiff_ref(phi_box, coeff)
+            out = ref.vadv_ref(diffused, w, dtdz)
+        return (out,)
+
+    return fn
+
+
+#: stencil name -> (builder, input spec builder)
+def input_specs(name, domain):
+    """ShapeDtypeStructs for a stencil's AOT inputs at `domain`."""
+    ni, nj, nk = domain
+    f64 = jnp.float64
+    box = lambda hi, hj: jax.ShapeDtypeStruct((ni + hi, nj + hj, nk), f64)
+    scalar = jax.ShapeDtypeStruct((), f64)
+    if name == "hdiff":
+        return [box(4, 4), box(0, 0), box(0, 0)]
+    if name == "vadv":
+        return [box(0, 0), box(0, 0), scalar]
+    if name == "upwind_advect":
+        return [box(2, 2), box(0, 0), scalar, scalar, scalar, scalar]
+    if name == "model_step":
+        return [box(4, 4), box(0, 0), box(0, 0), scalar]
+    raise KeyError(f"unknown AOT stencil {name!r}")
+
+
+BUILDERS = {
+    "hdiff": build_hdiff,
+    "vadv": build_vadv,
+    "upwind_advect": build_upwind_advect,
+    "model_step": build_model_step,
+}

@@ -1,0 +1,95 @@
+"""Pallas vadv kernel vs pure-jnp oracle and the tridiagonal residual."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.vadv import vadv_pallas
+
+
+def rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), dtype=jnp.float64)
+
+
+@pytest.mark.parametrize(
+    "domain", [(4, 4, 2), (8, 8, 8), (12, 10, 6), (5, 9, 16), (16, 16, 8)]
+)
+def test_vadv_pallas_matches_ref(domain):
+    ni, nj, nk = domain
+    phi = rand((ni, nj, nk), seed=1)
+    w = rand((ni, nj, nk), seed=2)
+    out_p = vadv_pallas(phi, w, 0.3)
+    out_r = ref.vadv_ref(phi, w, 0.3)
+    np.testing.assert_allclose(out_p, out_r, rtol=1e-12, atol=1e-12)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    ni=st.integers(min_value=1, max_value=10),
+    nj=st.integers(min_value=1, max_value=10),
+    nk=st.integers(min_value=2, max_value=12),
+    dtdz=st.floats(min_value=-0.8, max_value=0.8),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_vadv_pallas_matches_ref_hypothesis(ni, nj, nk, dtdz, seed):
+    phi = rand((ni, nj, nk), seed=seed)
+    w = rand((ni, nj, nk), seed=seed + 1)
+    out_p = vadv_pallas(phi, w, dtdz)
+    out_r = ref.vadv_ref(phi, w, dtdz)
+    np.testing.assert_allclose(out_p, out_r, rtol=1e-11, atol=1e-11)
+
+
+def test_vadv_solves_the_tridiagonal_system():
+    # a_k x_{k-1} + x_k + c_k x_{k+1} = phi_k with a_0 = 0, c_last = 0.
+    ni, nj, nk = 4, 3, 9
+    phi = rand((ni, nj, nk), seed=5)
+    w = rand((ni, nj, nk), seed=6)
+    dtdz = 0.4
+    x = np.asarray(vadv_pallas(phi, w, dtdz))
+    phi_np = np.asarray(phi)
+    w_np = np.asarray(w)
+    for k in range(nk):
+        a = -0.5 * dtdz * w_np[:, :, k] if k > 0 else 0.0
+        c = 0.5 * dtdz * w_np[:, :, k] if k < nk - 1 else 0.0
+        lhs = x[:, :, k].copy()
+        if k > 0:
+            lhs += a * x[:, :, k - 1]
+        if k < nk - 1:
+            lhs += c * x[:, :, k + 1]
+        np.testing.assert_allclose(lhs, phi_np[:, :, k], rtol=1e-10, atol=1e-10)
+
+
+def test_vadv_zero_wind_is_identity():
+    ni, nj, nk = 6, 6, 5
+    phi = rand((ni, nj, nk), seed=9)
+    w = jnp.zeros((ni, nj, nk), dtype=jnp.float64)
+    out = vadv_pallas(phi, w, 0.7)
+    np.testing.assert_allclose(out, phi)
+
+
+def test_vadv_block_sizes_equivalent():
+    # The I-axis blocking is an implementation detail: results must not
+    # depend on the VMEM slab size.
+    ni, nj, nk = 12, 6, 7
+    phi = rand((ni, nj, nk), seed=20)
+    w = rand((ni, nj, nk), seed=21)
+    outs = [
+        vadv_pallas(phi, w, 0.25, block_i=b) for b in (1, 3, 4, 12)
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=1e-13, atol=1e-13)
+
+
+def test_vadv_single_level_column():
+    # nk == 1: the system degenerates to x = phi.
+    phi = rand((3, 3, 1), seed=30)
+    w = rand((3, 3, 1), seed=31)
+    out = vadv_pallas(phi, w, 0.5)
+    np.testing.assert_allclose(out, phi)

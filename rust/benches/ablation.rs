@@ -1,0 +1,162 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//!  A1  pallas vs plain-jnp lowering of the AOT artifacts (is the L1
+//!      kernel structure preserved through interpret-mode lowering?)
+//!  A2  JIT codegen cost vs domain (why the fingerprint cache exists:
+//!      first call = build+compile, later calls = cache hit)
+//!  A3  definition-fingerprint cache: re-compiling a reformatted source
+//!      must be a pure hash lookup
+//!
+//!     cargo bench --bench ablation
+
+#[path = "harness.rs"]
+mod harness;
+
+use gt4rs::backend::pjrt_aot::PjrtAotBackend;
+use gt4rs::backend::xlagen;
+use gt4rs::backend::{Backend, StencilArgs};
+use gt4rs::coordinator::{def_fingerprint, Coordinator};
+use gt4rs::runtime::Runtime;
+use gt4rs::stdlib;
+use gt4rs::storage::Storage;
+use harness::*;
+use std::time::Instant;
+
+fn main() {
+    a1_pallas_vs_jnp();
+    a2_jit_compile_cost();
+    a3_fingerprint_cache();
+}
+
+fn a1_pallas_vs_jnp() {
+    println!("# A1: AOT artifact lowering variant — pallas kernels vs plain jnp");
+    println!("{:<12} {:>8} {:>12} {:>12}", "domain", "stencil", "pallas", "jnp");
+    let ir_h = stdlib::compile("hdiff").unwrap();
+    let ir_v = stdlib::compile("vadv").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    for domain in [[32, 32, 16], [64, 64, 32], [128, 128, 64]] {
+        let dstr = format!("{}x{}x{}", domain[0], domain[1], domain[2]);
+        for (name, ir, scalars) in [
+            ("hdiff", &ir_h, vec![]),
+            ("vadv", &ir_v, vec![("dtdz", 0.3)]),
+        ] {
+            let mut medians = Vec::new();
+            for variant in ["pallas", "jnp"] {
+                let mut be =
+                    PjrtAotBackend::with_runtime(rt.clone()).with_variant(variant);
+                let mut fields: Vec<(String, Storage)> = ir
+                    .fields
+                    .iter()
+                    .map(|f| {
+                        let e = f.extent;
+                        let mut s = Storage::zeros(gt4rs::storage::StorageInfo::new(
+                            domain,
+                            [
+                                ((-e.i.0) as usize, e.i.1 as usize),
+                                ((-e.j.0) as usize, e.j.1 as usize),
+                                ((-e.k.0) as usize, e.k.1 as usize),
+                            ],
+                        ));
+                        fill_storage(&mut s, 1.0);
+                        (f.name.clone(), s)
+                    })
+                    .collect();
+                let sample = bench(9, || {
+                    let mut refs: Vec<(&str, &mut Storage)> = fields
+                        .iter_mut()
+                        .map(|(n, s)| (n.as_str(), s))
+                        .collect();
+                    be.run(ir, &mut StencilArgs {
+                        fields: &mut refs,
+                        scalars: &scalars,
+                        domain,
+                    })
+                    .unwrap();
+                });
+                medians.push(sample.median);
+            }
+            println!(
+                "{dstr:<12} {name:>8} {:>12} {:>12}",
+                fmt_duration(medians[0]),
+                fmt_duration(medians[1])
+            );
+        }
+    }
+    println!();
+}
+
+fn a2_jit_compile_cost() {
+    println!("# A2: xla-codegen JIT cost — first call (build+compile) vs cached call");
+    println!("{:<12} {:>8} {:>14} {:>14}", "domain", "stencil", "first", "cached");
+    for domain in [[16, 16, 8], [48, 48, 24], [96, 96, 32]] {
+        let dstr = format!("{}x{}x{}", domain[0], domain[1], domain[2]);
+        for name in ["hdiff", "vadv"] {
+            let ir = stdlib::compile(name).unwrap();
+            let mut be = xlagen::XlaBackend::new().unwrap();
+            let mut fields: Vec<(String, Storage)> = ir
+                .fields
+                .iter()
+                .map(|f| {
+                    let e = f.extent;
+                    let mut s = Storage::zeros(gt4rs::storage::StorageInfo::new(
+                        domain,
+                        [
+                            ((-e.i.0) as usize, e.i.1 as usize),
+                            ((-e.j.0) as usize, e.j.1 as usize),
+                            ((-e.k.0) as usize, e.k.1 as usize),
+                        ],
+                    ));
+                    fill_storage(&mut s, 1.0);
+                    (f.name.clone(), s)
+                })
+                .collect();
+            let scalars: Vec<(&str, f64)> =
+                ir.scalars.iter().map(|s| (s.name.as_str(), 0.3)).collect();
+            let mut run = |be: &mut xlagen::XlaBackend| {
+                let t0 = Instant::now();
+                let mut refs: Vec<(&str, &mut Storage)> = fields
+                    .iter_mut()
+                    .map(|(n, s)| (n.as_str(), s))
+                    .collect();
+                be.run(&ir, &mut StencilArgs {
+                    fields: &mut refs,
+                    scalars: &scalars,
+                    domain,
+                })
+                .unwrap();
+                t0.elapsed()
+            };
+            let first = run(&mut be);
+            let cached = run(&mut be);
+            println!(
+                "{dstr:<12} {name:>8} {:>14} {:>14}",
+                fmt_duration(first),
+                fmt_duration(cached)
+            );
+        }
+    }
+    println!();
+}
+
+fn a3_fingerprint_cache() {
+    println!("# A3: definition-fingerprint cache — reformatted source recompile cost");
+    let src = stdlib::HDIFF_SRC;
+    let reformatted = src.replace('\n', " \n ").replace("    ", "  ");
+    let externals = std::collections::BTreeMap::new();
+
+    let t0 = Instant::now();
+    let mut coord = Coordinator::new();
+    coord.compile_source(src, "hdiff", &externals).unwrap();
+    let cold = t0.elapsed();
+
+    let t1 = Instant::now();
+    coord.compile_source(&reformatted, "hdiff", &externals).unwrap();
+    let warm = t1.elapsed();
+    let (hits, misses) = coord.cache_stats();
+
+    let fp_a = def_fingerprint(src, "hdiff", &externals).unwrap();
+    let fp_b = def_fingerprint(&reformatted, "hdiff", &externals).unwrap();
+    assert_eq!(fp_a, fp_b, "reformatting changed the fingerprint!");
+    println!("cold compile: {}   reformatted recompile: {}   cache hits/misses: {}/{}",
+        fmt_duration(cold), fmt_duration(warm), hits, misses);
+}

@@ -1,0 +1,91 @@
+//! FIG3-L: horizontal diffusion execution time per backend vs domain size
+//! (paper Figure 3, left panel).
+//!
+//! Solid lines in the paper = total call time including run-time storage
+//! checks; dashed lines = raw execution. Both are reported here (`total`
+//! vs `exec`); the `overhead` bench isolates the gap.
+//!
+//!     cargo bench --bench fig3_hdiff
+
+#[path = "harness.rs"]
+mod harness;
+
+use gt4rs::baseline;
+use gt4rs::coordinator::Coordinator;
+use gt4rs::storage::Storage;
+use harness::*;
+
+fn main() {
+    let mut coord = Coordinator::new();
+    let fp = coord.compile_library("hdiff").expect("compile hdiff");
+
+    println!("# FIG3-L horizontal diffusion — median wall/call (paper Fig. 3 left)");
+    println!(
+        "{:<12} {:>10} {:>12} {:>12} {:>10}",
+        "domain", "backend", "exec", "total", "iters"
+    );
+
+    for domain in FIG3_DOMAINS {
+        let dstr = format!("{}x{}x{}", domain[0], domain[1], domain[2]);
+        for be in ["debug", "vector", "xla", "pjrt-aot"] {
+            let mut in_phi = coord.alloc_field(fp, "in_phi", domain).unwrap();
+            let mut coeff = coord.alloc_field(fp, "coeff", domain).unwrap();
+            let mut out = coord.alloc_field(fp, "out_phi", domain).unwrap();
+            fill_storage(&mut in_phi, 1.0);
+            coeff.fill(0.025);
+
+            // availability probe (also the JIT warmup)
+            let probe = {
+                let mut refs: Vec<(&str, &mut Storage)> = vec![
+                    ("in_phi", &mut in_phi),
+                    ("coeff", &mut coeff),
+                    ("out_phi", &mut out),
+                ];
+                coord.run(fp, be, &mut refs, &[], domain)
+            };
+            if probe.is_err() {
+                println!("{dstr:<12} {be:>10} {:>12} {:>12} {:>10}", "n/a", "n/a", 0);
+                continue;
+            }
+
+            let iters = if be == "debug" && domain[0] >= 96 { 3 } else { 9 };
+            let mut last_checks = std::time::Duration::ZERO;
+            let sample = bench(iters, || {
+                let mut refs: Vec<(&str, &mut Storage)> = vec![
+                    ("in_phi", &mut in_phi),
+                    ("coeff", &mut coeff),
+                    ("out_phi", &mut out),
+                ];
+                let stats = coord.run(fp, be, &mut refs, &[], domain).unwrap();
+                last_checks = stats.checks;
+            });
+            println!(
+                "{dstr:<12} {be:>10} {:>12} {:>12} {iters:>10}",
+                fmt_duration(sample.median.saturating_sub(last_checks)),
+                fmt_duration(sample.median),
+            );
+        }
+
+        // hand-written native reference (the paper's "near-native C++")
+        {
+            let mut in_phi = coord.alloc_field(fp, "in_phi", domain).unwrap();
+            let mut coeff = coord.alloc_field(fp, "coeff", domain).unwrap();
+            let mut out = coord.alloc_field(fp, "out_phi", domain).unwrap();
+            fill_storage(&mut in_phi, 1.0);
+            coeff.fill(0.025);
+            let sample = bench(9, || {
+                baseline::hdiff_native(&in_phi, &coeff, &mut out, domain);
+            });
+            println!(
+                "{dstr:<12} {:>10} {:>12} {:>12} {:>10}",
+                "native",
+                fmt_duration(sample.median),
+                fmt_duration(sample.median),
+                9
+            );
+        }
+    }
+    println!("# shape check (paper): compiled backends >= 10x faster than the");
+    println!("# interpreter tiers; gap grows with domain size; constant small-");
+    println!("# domain overhead on the total column.");
+}

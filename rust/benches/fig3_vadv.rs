@@ -1,0 +1,90 @@
+//! FIG3-R: implicit vertical advection execution time per backend vs
+//! domain size (paper Figure 3, right panel).
+//!
+//!     cargo bench --bench fig3_vadv
+
+#[path = "harness.rs"]
+mod harness;
+
+use gt4rs::baseline;
+use gt4rs::coordinator::Coordinator;
+use gt4rs::storage::Storage;
+use harness::*;
+
+fn main() {
+    let mut coord = Coordinator::new();
+    let fp = coord.compile_library("vadv").expect("compile vadv");
+    let dtdz = 0.3;
+
+    println!("# FIG3-R vertical advection — median wall/call (paper Fig. 3 right)");
+    println!(
+        "{:<12} {:>10} {:>12} {:>12} {:>10}",
+        "domain", "backend", "exec", "total", "iters"
+    );
+
+    for domain in FIG3_DOMAINS {
+        let dstr = format!("{}x{}x{}", domain[0], domain[1], domain[2]);
+        for be in ["debug", "vector", "xla", "pjrt-aot"] {
+            // The xla backend unrolls K in the graph: JIT compile cost grows
+            // superlinearly with nk. Cap it (the pjrt-aot tier is the
+            // compiled path at scale); see DESIGN.md §Perf.
+            if be == "xla" && domain[2] > 32 {
+                println!(
+                    "{dstr:<12} {be:>10} {:>12} {:>12} {:>10}",
+                    "(skipped)", "(compile)", 0
+                );
+                continue;
+            }
+            let mut phi = coord.alloc_field(fp, "phi", domain).unwrap();
+            let mut w = coord.alloc_field(fp, "w", domain).unwrap();
+            fill_storage(&mut phi, 2.0);
+            fill_storage(&mut w, 3.0);
+
+            let probe = {
+                let mut refs: Vec<(&str, &mut Storage)> =
+                    vec![("phi", &mut phi), ("w", &mut w)];
+                coord.run(fp, be, &mut refs, &[("dtdz", dtdz)], domain)
+            };
+            if probe.is_err() {
+                println!("{dstr:<12} {be:>10} {:>12} {:>12} {:>10}", "n/a", "n/a", 0);
+                continue;
+            }
+
+            let iters = if be == "debug" && domain[0] >= 96 { 3 } else { 9 };
+            let mut last_checks = std::time::Duration::ZERO;
+            let sample = bench(iters, || {
+                let mut refs: Vec<(&str, &mut Storage)> =
+                    vec![("phi", &mut phi), ("w", &mut w)];
+                let stats =
+                    coord.run(fp, be, &mut refs, &[("dtdz", dtdz)], domain).unwrap();
+                last_checks = stats.checks;
+            });
+            println!(
+                "{dstr:<12} {be:>10} {:>12} {:>12} {iters:>10}",
+                fmt_duration(sample.median.saturating_sub(last_checks)),
+                fmt_duration(sample.median),
+            );
+        }
+
+        // hand-written native Thomas solver
+        {
+            let mut phi = coord.alloc_field(fp, "phi", domain).unwrap();
+            let w = {
+                let mut w = coord.alloc_field(fp, "w", domain).unwrap();
+                fill_storage(&mut w, 3.0);
+                w
+            };
+            fill_storage(&mut phi, 2.0);
+            let sample = bench(9, || {
+                baseline::vadv_native(&mut phi, &w, dtdz, domain);
+            });
+            println!(
+                "{dstr:<12} {:>10} {:>12} {:>12} {:>10}",
+                "native",
+                fmt_duration(sample.median),
+                fmt_duration(sample.median),
+                9
+            );
+        }
+    }
+}

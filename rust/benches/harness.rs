@@ -1,0 +1,82 @@
+//! Minimal benchmark harness shared by the `cargo bench` targets.
+//!
+//! (criterion is not in the offline vendored crate set, so the harness is
+//! in-repo: warmup + N timed iterations, reporting min/median/mean — the
+//! same methodology, smaller machinery. Bench targets set
+//! `harness = false`.)
+
+use std::time::{Duration, Instant};
+
+/// Timing summary of one benchmark case.
+#[derive(Debug, Clone, Copy)]
+pub struct Sample {
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+}
+
+/// Run `f` once as warmup (compile/caches), then `iters` timed times.
+pub fn bench(iters: usize, mut f: impl FnMut()) -> Sample {
+    f(); // warmup: JIT compile, cache fill — excluded, like criterion's warmup
+    let mut times: Vec<Duration> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    times.sort();
+    let min = times[0];
+    let median = times[times.len() / 2];
+    let mean = times.iter().sum::<Duration>() / times.len() as u32;
+    Sample { min, median, mean }
+}
+
+/// Pick an iteration count so slow cases don't stall the suite.
+pub fn auto_iters(probe: impl FnOnce()) -> usize {
+    let t0 = Instant::now();
+    probe();
+    let dt = t0.elapsed();
+    if dt > Duration::from_millis(500) {
+        3
+    } else if dt > Duration::from_millis(50) {
+        7
+    } else {
+        15
+    }
+}
+
+pub fn fmt_duration(d: Duration) -> String {
+    let us = d.as_secs_f64() * 1e6;
+    if us < 1000.0 {
+        format!("{us:.1}µs")
+    } else if us < 1_000_000.0 {
+        format!("{:.2}ms", us / 1000.0)
+    } else {
+        format!("{:.3}s", us / 1e6)
+    }
+}
+
+/// Deterministic smooth field filler shared by the benches.
+pub fn fill_storage(s: &mut gt4rs::storage::Storage, seed: f64) {
+    let [ni, nj, nk] = s.info.shape;
+    let h = s.info.halo;
+    for i in -(h[0].0 as i64)..(ni + h[0].1) as i64 {
+        for j in -(h[1].0 as i64)..(nj + h[1].1) as i64 {
+            for k in -(h[2].0 as i64)..(nk + h[2].1) as i64 {
+                let v = ((i as f64) * 0.21 + seed).sin() * ((j as f64) * 0.17).cos()
+                    + 0.05 * (k as f64);
+                s.set(i, j, k, v);
+            }
+        }
+    }
+}
+
+/// The Figure-3 domain sweep (kept in sync with python/compile/aot.py).
+pub const FIG3_DOMAINS: [[usize; 3]; 6] = [
+    [16, 16, 8],
+    [32, 32, 16],
+    [48, 48, 24],
+    [64, 64, 32],
+    [96, 96, 48],
+    [128, 128, 64],
+];

@@ -1,0 +1,60 @@
+//! FIG3-OVH: the constant per-call overhead of run-time storage checks
+//! (the gap between the paper's solid and dashed lines at small domains,
+//! §3.1: "a noticeable (≈1 ms) overhead ... caused by various checks
+//! performed at run-time on the memory layout and data type of the
+//! storage arguments").
+//!
+//!     cargo bench --bench overhead
+
+#[path = "harness.rs"]
+mod harness;
+
+use gt4rs::coordinator::Coordinator;
+use gt4rs::storage::Storage;
+use harness::*;
+
+fn main() {
+    println!("# FIG3-OVH run-time checks overhead (solid vs dashed, small domains)");
+    println!("# `checks` is the coordinator's directly-measured validation time");
+    println!("# (the paper's is ~1 ms because its checks run in the Python");
+    println!("# interpreter; ours are compiled — the *shape* to verify is that");
+    println!("# the cost is constant in domain size and only matters where the");
+    println!("# execute time is comparably small).");
+    println!(
+        "{:<12} {:>10} {:>12} {:>12} {:>10}",
+        "domain", "backend", "execute", "checks", "ratio"
+    );
+
+    for domain in [[8, 8, 4], [16, 16, 8], [32, 32, 16], [64, 64, 32]] {
+        let dstr = format!("{}x{}x{}", domain[0], domain[1], domain[2]);
+        for be in ["vector", "xla"] {
+            let mut coord = Coordinator::new();
+            let fp = coord.compile_library("hdiff").unwrap();
+            let mut in_phi = coord.alloc_field(fp, "in_phi", domain).unwrap();
+            let mut coeff = coord.alloc_field(fp, "coeff", domain).unwrap();
+            let mut out = coord.alloc_field(fp, "out_phi", domain).unwrap();
+            fill_storage(&mut in_phi, 1.0);
+            coeff.fill(0.025);
+
+            bench(50, || {
+                let mut refs: Vec<(&str, &mut Storage)> = vec![
+                    ("in_phi", &mut in_phi),
+                    ("coeff", &mut coeff),
+                    ("out_phi", &mut out),
+                ];
+                coord.run(fp, be, &mut refs, &[], domain).unwrap();
+            });
+            let t = coord.metrics.get("hdiff", be).unwrap();
+            let calls = t.calls as u32;
+            let (exec, checks) = (t.execute / calls, t.checks / calls);
+            println!(
+                "{dstr:<12} {be:>10} {:>12} {:>12} {:>9.4}%",
+                fmt_duration(exec),
+                fmt_duration(checks),
+                100.0 * checks.as_secs_f64() / exec.as_secs_f64().max(1e-12),
+            );
+        }
+    }
+    println!("# shape check: `checks` column constant across domains; the ratio");
+    println!("# column decays as the domain grows (paper Fig. 3 solid vs dashed).");
+}

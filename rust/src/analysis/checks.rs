@@ -1,0 +1,296 @@
+//! Compile-time semantic checks (paper §2.2):
+//!
+//! * In `PARALLEL` computations, self-assignment with a dependency in any
+//!   direction is forbidden ("This is why line 15 ... reads from `in` and
+//!   writes into `lap`").
+//! * In `FORWARD`/`BACKWARD` computations, vertical offsets are validated
+//!   against the iteration direction: a field written in the computation
+//!   may only be read at levels already visited, and never with a
+//!   horizontal offset at the current level (undefined within the parallel
+//!   horizontal plane).
+//! * Temporaries must be written before they are read (stage order).
+//! * All fields of one stencil share a single element dtype.
+
+use crate::dsl::ast::{IterationPolicy, StencilDef};
+use crate::dsl::span::{CResult, CompileError};
+use crate::ir::implir::{Assign, Stage};
+use std::collections::HashSet;
+
+/// A lowered computation: the policy plus its per-interval assignment list,
+/// produced by the pipeline before scheduling.
+pub struct LoweredComputation {
+    pub policy: IterationPolicy,
+    /// `(interval index within computation, assignment)` in program order.
+    pub assigns: Vec<(crate::dsl::ast::Interval, Assign)>,
+}
+
+/// Check vertical-dependency rules within each computation.
+pub fn check_dependencies(computations: &[LoweredComputation]) -> CResult<()> {
+    for comp in computations {
+        let written: HashSet<&str> =
+            comp.assigns.iter().map(|(_, a)| a.target.as_str()).collect();
+        for (_, a) in &comp.assigns {
+            let reads = Stage::collect_reads(a);
+            for (f, off) in &reads {
+                let is_self = *f == a.target;
+                let nonzero = *off != [0, 0, 0];
+                match comp.policy {
+                    IterationPolicy::Parallel => {
+                        if is_self && nonzero {
+                            return Err(CompileError::new(
+                                "checks",
+                                format!(
+                                    "self-assignment of `{f}` with offset [{},{},{}] in a PARALLEL computation (undefined evaluation order; compute into a temporary instead)",
+                                    off[0], off[1], off[2]
+                                ),
+                            ));
+                        }
+                    }
+                    IterationPolicy::Forward | IterationPolicy::Backward => {
+                        if !written.contains(f.as_str()) {
+                            continue; // pure input: any offset is fine
+                        }
+                        let k = off[2];
+                        let against_direction = match comp.policy {
+                            IterationPolicy::Forward => k < 0,
+                            IterationPolicy::Backward => k > 0,
+                            IterationPolicy::Parallel => unreachable!(),
+                        };
+                        let ahead = match comp.policy {
+                            IterationPolicy::Forward => k > 0,
+                            IterationPolicy::Backward => k < 0,
+                            IterationPolicy::Parallel => unreachable!(),
+                        };
+                        if ahead {
+                            return Err(CompileError::new(
+                                "checks",
+                                format!(
+                                    "`{f}` is written in this {} computation but read at k-offset {k}, a level not yet computed",
+                                    comp.policy
+                                ),
+                            ));
+                        }
+                        if !against_direction && (off[0] != 0 || off[1] != 0) {
+                            return Err(CompileError::new(
+                                "checks",
+                                format!(
+                                    "`{f}` is written in this {} computation and read with horizontal offset [{},{}] at the current level (undefined within the parallel plane)",
+                                    comp.policy, off[0], off[1]
+                                ),
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Check that temporaries are written before any read, at stage granularity
+/// across the whole stencil. A same-stage self-read is permitted only in a
+/// sequential computation with the k-offset strictly against the iteration
+/// direction (reading the level computed on the previous sweep step).
+pub fn check_temporaries_initialized(
+    computations: &[LoweredComputation],
+    temporaries: &[String],
+) -> CResult<()> {
+    let temps: HashSet<&str> = temporaries.iter().map(|s| s.as_str()).collect();
+    let mut written: HashSet<&str> = HashSet::new();
+    for comp in computations {
+        for (_, a) in &comp.assigns {
+            let reads = Stage::collect_reads(a);
+            for (f, off) in &reads {
+                if !temps.contains(f.as_str()) || written.contains(f.as_str()) {
+                    continue;
+                }
+                // Not yet written by an earlier stage; a self-read against
+                // the sweep direction in the same statement is legal past
+                // the first level, which requires an earlier interval to
+                // have initialized it — and none did. Always an error,
+                // except the benign case of the statement defining it now
+                // reading strictly backwards *after* some interval block
+                // initialized it (handled by `written` above).
+                let self_seq_read = *f == a.target
+                    && match comp.policy {
+                        IterationPolicy::Forward => off[2] < 0,
+                        IterationPolicy::Backward => off[2] > 0,
+                        IterationPolicy::Parallel => false,
+                    };
+                if !self_seq_read {
+                    return Err(CompileError::new(
+                        "checks",
+                        format!("temporary `{f}` is read before it is written"),
+                    ));
+                }
+            }
+            if let Some(t) = temps.get(a.target.as_str()) {
+                written.insert(t);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// All fields (and scalars) of one stencil must share a dtype; backends and
+/// the AOT artifacts are specialized per element type.
+pub fn check_dtypes(def: &StencilDef) -> CResult<()> {
+    let mut dtypes = def
+        .fields
+        .iter()
+        .map(|f| f.dtype)
+        .chain(def.scalars.iter().map(|s| s.dtype));
+    if let Some(first) = dtypes.next() {
+        if dtypes.any(|d| d != first) {
+            return Err(CompileError::new(
+                "checks",
+                format!(
+                    "stencil `{}` mixes element dtypes; all fields and scalars must share one",
+                    def.name
+                ),
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::ast::{Expr, Interval};
+
+    fn comp(
+        policy: IterationPolicy,
+        assigns: Vec<Assign>,
+    ) -> LoweredComputation {
+        LoweredComputation {
+            policy,
+            assigns: assigns.into_iter().map(|a| (Interval::full(), a)).collect(),
+        }
+    }
+
+    fn asg(t: &str, v: Expr) -> Assign {
+        Assign { target: t.into(), value: v }
+    }
+
+    #[test]
+    fn parallel_self_offset_forbidden() {
+        let c = comp(
+            IterationPolicy::Parallel,
+            vec![asg("a", Expr::field("a", [1, 0, 0]))],
+        );
+        assert!(check_dependencies(&[c]).is_err());
+    }
+
+    #[test]
+    fn parallel_self_zero_offset_allowed() {
+        let c = comp(
+            IterationPolicy::Parallel,
+            vec![asg(
+                "a",
+                Expr::binary(
+                    crate::dsl::ast::BinOp::Mul,
+                    Expr::field("a", [0, 0, 0]),
+                    Expr::Float(2.0),
+                ),
+            )],
+        );
+        assert!(check_dependencies(&[c]).is_ok());
+    }
+
+    #[test]
+    fn forward_backward_k_direction_enforced() {
+        // FORWARD reading k+1 of a written field: error.
+        let bad = comp(
+            IterationPolicy::Forward,
+            vec![asg("a", Expr::field("a", [0, 0, 1]))],
+        );
+        assert!(check_dependencies(&[bad]).is_err());
+        // FORWARD reading k-1: fine.
+        let good = comp(
+            IterationPolicy::Forward,
+            vec![asg("a", Expr::field("a", [0, 0, -1]))],
+        );
+        assert!(check_dependencies(&[good]).is_ok());
+        // BACKWARD mirrored.
+        let bad_b = comp(
+            IterationPolicy::Backward,
+            vec![asg("a", Expr::field("a", [0, 0, -1]))],
+        );
+        assert!(check_dependencies(&[bad_b]).is_err());
+        let good_b = comp(
+            IterationPolicy::Backward,
+            vec![asg("a", Expr::field("a", [0, 0, 1]))],
+        );
+        assert!(check_dependencies(&[good_b]).is_ok());
+    }
+
+    #[test]
+    fn sequential_horizontal_offset_on_written_field_forbidden() {
+        let c = comp(
+            IterationPolicy::Forward,
+            vec![
+                asg("t", Expr::field("x", [0, 0, 0])),
+                asg("y", Expr::field("t", [1, 0, 0])),
+            ],
+        );
+        assert!(check_dependencies(&[c]).is_err());
+        // ... but allowed when combined with a k-offset against direction.
+        let ok = comp(
+            IterationPolicy::Forward,
+            vec![
+                asg("t", Expr::field("x", [0, 0, 0])),
+                asg("y", Expr::field("t", [1, 0, -1])),
+            ],
+        );
+        assert!(check_dependencies(&[ok]).is_ok());
+    }
+
+    #[test]
+    fn pure_input_reads_unrestricted_in_sequential() {
+        let c = comp(
+            IterationPolicy::Forward,
+            vec![asg("out", Expr::field("inp", [2, -1, 1]))],
+        );
+        assert!(check_dependencies(&[c]).is_ok());
+    }
+
+    #[test]
+    fn temp_read_before_write_rejected() {
+        let c = comp(
+            IterationPolicy::Parallel,
+            vec![
+                asg("b", Expr::field("t", [0, 0, 0])),
+                asg("t", Expr::field("a", [0, 0, 0])),
+            ],
+        );
+        assert!(check_temporaries_initialized(&[c], &["t".to_string()]).is_err());
+    }
+
+    #[test]
+    fn temp_write_then_read_ok() {
+        let c = comp(
+            IterationPolicy::Parallel,
+            vec![
+                asg("t", Expr::field("a", [0, 0, 0])),
+                asg("b", Expr::field("t", [1, 0, 0])),
+            ],
+        );
+        assert!(check_temporaries_initialized(&[c], &["t".to_string()]).is_ok());
+    }
+
+    #[test]
+    fn dtype_mixing_rejected() {
+        use crate::dsl::builder::*;
+        use crate::dsl::ast::DType;
+        let s = stencil("s")
+            .field("a", DType::F64)
+            .field("b", DType::F32)
+            .computation(parallel().interval_full(|b| {
+                b.assign("b", here("a"));
+            }))
+            .build()
+            .unwrap();
+        assert!(check_dtypes(&s).is_err());
+    }
+}

@@ -1,0 +1,212 @@
+//! Access-extent (halo) analysis.
+//!
+//! The backward dataflow pass at the heart of the analysis pipeline: walking
+//! the scheduled stages in reverse program order, it computes
+//!
+//! * the *compute extent* of every stage — how far beyond the compute
+//!   domain a temporary must be evaluated so all its consumers see valid
+//!   values (paper §2.2: implicit iteration "ultimately also enables
+//!   performance" — exact loop bounds are derived here, not by the user);
+//! * the *halo requirement* of every API field — how much padding the
+//!   caller's storages must provide around the compute domain;
+//! * the allocation extent of every temporary.
+//!
+//! API (parameter) fields are only ever *written* over the unextended
+//! compute domain (writes outside it would be observable side effects);
+//! temporaries are computed over their full required extent.
+
+use crate::dsl::ast::{Interval, IterationPolicy, LevelBound};
+use crate::ir::implir::{Assign, Extent, Stage};
+use std::collections::HashMap;
+
+/// A scheduled-but-unextended stage list for one computation.
+pub struct ScheduledComputation {
+    pub policy: IterationPolicy,
+    pub assigns: Vec<(Interval, Assign)>,
+}
+
+/// Result of the extent pass.
+pub struct ExtentInfo {
+    /// Compute extent per stage, in flat program order across computations.
+    pub stage_extents: Vec<Extent>,
+    /// Storage halo required per field (API fields and temporaries alike).
+    pub field_requirements: HashMap<String, Extent>,
+}
+
+/// Run the backward extent pass.
+///
+/// `is_temporary(name)` distinguishes temporaries from API fields.
+pub fn compute_extents(
+    computations: &[ScheduledComputation],
+    is_temporary: impl Fn(&str) -> bool,
+) -> ExtentInfo {
+    // Flatten to program order.
+    let flat: Vec<(&Interval, &Assign)> = computations
+        .iter()
+        .flat_map(|c| c.assigns.iter().map(|(iv, a)| (iv, a)))
+        .collect();
+
+    let mut req: HashMap<String, Extent> = HashMap::new();
+    // Every write to an API field is observable over the compute domain.
+    for (_, a) in &flat {
+        if !is_temporary(&a.target) {
+            req.entry(a.target.clone()).or_insert_with(Extent::zero);
+        }
+    }
+
+    let mut stage_extents = vec![Extent::zero(); flat.len()];
+    for (idx, (interval, a)) in flat.iter().enumerate().rev() {
+        // Temporaries are computed over everything their consumers need;
+        // API fields only over the compute domain.
+        let ext = if is_temporary(&a.target) {
+            req.get(&a.target).copied().unwrap_or_else(Extent::zero)
+        } else {
+            Extent::zero()
+        };
+        stage_extents[idx] = ext;
+        for (f, off) in Stage::collect_reads(a) {
+            let mut need = ext.translate(off);
+            // Refine the vertical requirement against the reading stage's
+            // interval: a read at k-1 from `interval(1, None)` never leaves
+            // the domain, so it must not demand a k-halo.
+            let (klo_rel, khi_rel) = (ext.k.0 + off[2], ext.k.1 + off[2]);
+            need.k.0 = match interval.lo {
+                LevelBound::FromStart(n) => (n + klo_rel).min(0),
+                LevelBound::FromEnd(_) => klo_rel.min(0),
+            };
+            need.k.1 = match interval.hi {
+                LevelBound::FromEnd(m) => (khi_rel - m).max(0),
+                LevelBound::FromStart(_) => khi_rel.max(0),
+            };
+            req.entry(f)
+                .and_modify(|e| *e = e.union(need))
+                .or_insert(need);
+        }
+    }
+
+    ExtentInfo { stage_extents, field_requirements: req }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::ast::{BinOp, Expr};
+
+    fn asg(t: &str, v: Expr) -> (Interval, Assign) {
+        (Interval::full(), Assign { target: t.into(), value: v })
+    }
+
+    fn lap(of: &str) -> Expr {
+        // simplified: f[-1,0,0] + f[1,0,0] + f[0,-1,0] + f[0,1,0]
+        let f = |o| Expr::field(of, o);
+        Expr::binary(
+            BinOp::Add,
+            Expr::binary(BinOp::Add, f([-1, 0, 0]), f([1, 0, 0])),
+            Expr::binary(BinOp::Add, f([0, -1, 0]), f([0, 1, 0])),
+        )
+    }
+
+    #[test]
+    fn laplacian_of_laplacian_extents() {
+        // lap = Δ(in); out = Δ(lap)  =>  lap computed over ±1, in needed ±2.
+        let comps = [ScheduledComputation {
+            policy: IterationPolicy::Parallel,
+            assigns: vec![asg("lap", lap("inp")), asg("out", lap("lap"))],
+        }];
+        let info = compute_extents(&comps, |n| n == "lap");
+        assert_eq!(info.stage_extents[1], Extent::zero()); // out: API field
+        assert_eq!(info.stage_extents[0].i, (-1, 1)); // lap computed ±1
+        assert_eq!(info.stage_extents[0].j, (-1, 1));
+        let inp = info.field_requirements["inp"];
+        assert_eq!(inp.i, (-2, 2));
+        assert_eq!(inp.j, (-2, 2));
+        let lap_req = info.field_requirements["lap"];
+        assert_eq!(lap_req.i, (-1, 1));
+    }
+
+    #[test]
+    fn api_writes_not_extended() {
+        // out1 = in[+1]; out2 = out1[+1]  — out1 is an API field, so it is
+        // computed only over the domain and still *requires* halo 1 of the
+        // caller for out2's read.
+        let comps = [ScheduledComputation {
+            policy: IterationPolicy::Parallel,
+            assigns: vec![
+                asg("out1", Expr::field("inp", [1, 0, 0])),
+                asg("out2", Expr::field("out1", [1, 0, 0])),
+            ],
+        }];
+        let info = compute_extents(&comps, |_| false);
+        assert_eq!(info.stage_extents[0], Extent::zero());
+        assert_eq!(info.field_requirements["out1"].i, (0, 1));
+        assert_eq!(info.field_requirements["inp"].i, (0, 1));
+    }
+
+    #[test]
+    fn dead_temporary_gets_zero_extent() {
+        let comps = [ScheduledComputation {
+            policy: IterationPolicy::Parallel,
+            assigns: vec![
+                asg("unused", Expr::field("inp", [1, 0, 0])),
+                asg("out", Expr::field("inp", [0, 0, 0])),
+            ],
+        }];
+        let info = compute_extents(&comps, |n| n == "unused");
+        assert_eq!(info.stage_extents[0], Extent::zero());
+    }
+
+    #[test]
+    fn k_offsets_tracked() {
+        let comps = [ScheduledComputation {
+            policy: IterationPolicy::Forward,
+            assigns: vec![asg("out", Expr::field("inp", [0, 0, -1]))],
+        }];
+        let info = compute_extents(&comps, |_| false);
+        assert_eq!(info.field_requirements["inp"].k, (-1, 0));
+    }
+
+    #[test]
+    fn k_requirement_interval_aware() {
+        use crate::dsl::ast::LevelBound;
+        // Reading b[0,0,-1] from interval(1, None) stays inside the domain:
+        // no k-halo demanded of the caller.
+        let iv = Interval::new(LevelBound::FromStart(1), LevelBound::FromEnd(0));
+        let comps = [ScheduledComputation {
+            policy: IterationPolicy::Forward,
+            assigns: vec![(iv, Assign {
+                target: "out".into(),
+                value: Expr::field("b", [0, 0, -1]),
+            })],
+        }];
+        let info = compute_extents(&comps, |_| false);
+        assert_eq!(info.field_requirements["b"].k, (0, 0));
+        // Reading b[0,0,1] from interval(0, -1) also stays inside.
+        let iv2 = Interval::new(LevelBound::FromStart(0), LevelBound::FromEnd(1));
+        let comps2 = [ScheduledComputation {
+            policy: IterationPolicy::Backward,
+            assigns: vec![(iv2, Assign {
+                target: "out".into(),
+                value: Expr::field("b", [0, 0, 1]),
+            })],
+        }];
+        let info2 = compute_extents(&comps2, |_| false);
+        assert_eq!(info2.field_requirements["b"].k, (0, 0));
+    }
+
+    #[test]
+    fn chained_temporaries_accumulate() {
+        // t1 over ±1 because t2 reads it at ±1; t2 over zero; in needs ±2.
+        let comps = [ScheduledComputation {
+            policy: IterationPolicy::Parallel,
+            assigns: vec![
+                asg("t1", lap("inp")),
+                asg("t2", lap("t1")),
+                asg("out", Expr::field("t2", [0, 0, 0])),
+            ],
+        }];
+        let info = compute_extents(&comps, |n| n.starts_with('t'));
+        assert_eq!(info.stage_extents[0].i, (-1, 1));
+        assert_eq!(info.stage_extents[1], Extent::zero());
+        assert_eq!(info.field_requirements["inp"].i, (-2, 2));
+    }
+}

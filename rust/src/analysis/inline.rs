@@ -1,0 +1,290 @@
+//! GTScript function inlining.
+//!
+//! GT4Py functions (`@gtscript.function`) are *pure, point-wise* mappings:
+//! a sequence of local bindings followed by a returned expression. Calls are
+//! inlined by substitution; locals never materialize as fields. Offsets
+//! compose additively: if a caller passes `fx[-1,0,0]` and the function body
+//! reads its parameter at `[1,0,0]`, the inlined access is `fx[0,0,0]`
+//! (paper §2.2, Figure 1 line 33).
+
+use crate::dsl::ast::{Expr, Module, Stmt};
+use crate::dsl::span::{CResult, CompileError};
+use std::collections::HashMap;
+
+/// Inline all `Expr::Call` nodes in an expression.
+pub fn inline_expr(e: &Expr, module: &Module) -> CResult<Expr> {
+    let mut stack = Vec::new();
+    inline_rec(e, module, &mut stack)
+}
+
+/// Inline all calls in every statement of a stencil body.
+pub fn inline_stmts(stmts: &[Stmt], module: &Module) -> CResult<Vec<Stmt>> {
+    stmts
+        .iter()
+        .map(|s| {
+            Ok(match s {
+                Stmt::Assign { target, value, span } => Stmt::Assign {
+                    target: target.clone(),
+                    value: inline_expr(value, module)?,
+                    span: *span,
+                },
+                Stmt::If { cond, then_body, else_body, span } => Stmt::If {
+                    cond: inline_expr(cond, module)?,
+                    then_body: inline_stmts(then_body, module)?,
+                    else_body: inline_stmts(else_body, module)?,
+                    span: *span,
+                },
+            })
+        })
+        .collect()
+}
+
+fn inline_rec(e: &Expr, module: &Module, stack: &mut Vec<String>) -> CResult<Expr> {
+    match e {
+        Expr::Call { name, args, span } => {
+            let func = module.function(name).ok_or_else(|| {
+                CompileError::with_span(
+                    "inline",
+                    format!("call to undefined function `{name}`"),
+                    *span,
+                )
+            })?;
+            if stack.contains(name) {
+                return Err(CompileError::with_span(
+                    "inline",
+                    format!("recursive function call cycle through `{name}`"),
+                    *span,
+                ));
+            }
+            if args.len() != func.params.len() {
+                return Err(CompileError::with_span(
+                    "inline",
+                    format!(
+                        "function `{name}` takes {} argument(s), got {}",
+                        func.params.len(),
+                        args.len()
+                    ),
+                    *span,
+                ));
+            }
+            // Inline nested calls inside the arguments first.
+            let mut env: HashMap<String, Expr> = HashMap::new();
+            for (p, a) in func.params.iter().zip(args) {
+                env.insert(p.clone(), inline_rec(a, module, stack)?);
+            }
+            stack.push(name.clone());
+            // Bindings are evaluated in order; each may reference parameters
+            // and earlier locals.
+            for (local, bexpr) in &func.bindings {
+                let inlined = subst(bexpr, &env, module, stack)?;
+                env.insert(local.clone(), inlined);
+            }
+            let result = subst(&func.ret, &env, module, stack)?;
+            stack.pop();
+            Ok(result)
+        }
+        Expr::Unary { op, operand } => Ok(Expr::Unary {
+            op: *op,
+            operand: Box::new(inline_rec(operand, module, stack)?),
+        }),
+        Expr::Binary { op, lhs, rhs } => Ok(Expr::Binary {
+            op: *op,
+            lhs: Box::new(inline_rec(lhs, module, stack)?),
+            rhs: Box::new(inline_rec(rhs, module, stack)?),
+        }),
+        Expr::Ternary { cond, then_e, else_e } => Ok(Expr::Ternary {
+            cond: Box::new(inline_rec(cond, module, stack)?),
+            then_e: Box::new(inline_rec(then_e, module, stack)?),
+            else_e: Box::new(inline_rec(else_e, module, stack)?),
+        }),
+        Expr::Builtin { func, args } => Ok(Expr::Builtin {
+            func: *func,
+            args: args.iter().map(|a| inline_rec(a, module, stack)).collect::<CResult<_>>()?,
+        }),
+        other => Ok(other.clone()),
+    }
+}
+
+/// Substitute environment bindings into a function-body expression while
+/// inlining nested calls. `Name(p)` becomes `env[p]`; `Field{p, off}`
+/// becomes `env[p]` with all its field accesses shifted by `off`.
+fn subst(
+    e: &Expr,
+    env: &HashMap<String, Expr>,
+    module: &Module,
+    stack: &mut Vec<String>,
+) -> CResult<Expr> {
+    match e {
+        Expr::Name(n, _) => {
+            if let Some(bound) = env.get(n) {
+                Ok(bound.clone())
+            } else {
+                // Not a parameter or local: leave for the resolution pass
+                // (it may be an external).
+                Ok(e.clone())
+            }
+        }
+        Expr::Field { name, offset, span } => {
+            if let Some(bound) = env.get(name) {
+                // A parameter/local *accessed as a field* resolves to the
+                // bound expression shifted by the access offset; a bound
+                // bare `Name` becomes an explicit field access so the
+                // offset is preserved even when it is zero.
+                match bound {
+                    Expr::Name(n, s) => {
+                        Ok(Expr::Field { name: n.clone(), offset: *offset, span: *s })
+                    }
+                    other => Ok(other.shifted(*offset)),
+                }
+            } else {
+                Ok(Expr::Field { name: name.clone(), offset: *offset, span: *span })
+            }
+        }
+        Expr::Call { name, args, span } => {
+            let new_args = args
+                .iter()
+                .map(|a| subst(a, env, module, stack))
+                .collect::<CResult<Vec<_>>>()?;
+            inline_rec(
+                &Expr::Call { name: name.clone(), args: new_args, span: *span },
+                module,
+                stack,
+            )
+        }
+        Expr::Unary { op, operand } => Ok(Expr::Unary {
+            op: *op,
+            operand: Box::new(subst(operand, env, module, stack)?),
+        }),
+        Expr::Binary { op, lhs, rhs } => Ok(Expr::Binary {
+            op: *op,
+            lhs: Box::new(subst(lhs, env, module, stack)?),
+            rhs: Box::new(subst(rhs, env, module, stack)?),
+        }),
+        Expr::Ternary { cond, then_e, else_e } => Ok(Expr::Ternary {
+            cond: Box::new(subst(cond, env, module, stack)?),
+            then_e: Box::new(subst(then_e, env, module, stack)?),
+            else_e: Box::new(subst(else_e, env, module, stack)?),
+        }),
+        Expr::Builtin { func, args } => Ok(Expr::Builtin {
+            func: *func,
+            args: args
+                .iter()
+                .map(|a| subst(a, env, module, stack))
+                .collect::<CResult<Vec<_>>>()?,
+        }),
+        other => Ok(other.clone()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::parser::parse_module;
+
+    fn module(src: &str) -> Module {
+        parse_module(src).unwrap()
+    }
+
+    #[test]
+    fn inlines_laplacian() {
+        let m = module(
+            "function lap(phi) {\n\
+               return -4.0 * phi[0,0,0] + phi[-1,0,0] + phi[1,0,0] + phi[0,-1,0] + phi[0,1,0];\n\
+             }\n\
+             stencil s(a: Field<f64>, b: Field<f64>) {\n\
+               with computation(PARALLEL), interval(...) { b = lap(a); }\n\
+             }",
+        );
+        let body = &m.stencils[0].computations[0].blocks[0].body;
+        let inlined = inline_stmts(body, &m).unwrap();
+        let Stmt::Assign { value, .. } = &inlined[0] else { panic!() };
+        let mut offsets = vec![];
+        value.visit_fields(&mut |n, off| {
+            assert_eq!(n, "a");
+            offsets.push(off);
+        });
+        assert_eq!(offsets.len(), 5);
+        assert!(offsets.contains(&[-1, 0, 0]));
+        assert!(offsets.contains(&[0, 1, 0]));
+    }
+
+    #[test]
+    fn offsets_compose_through_calls() {
+        // gradx(f) = f[1,0,0] - f[0,0,0]; calling gradx(fx[-1,0,0]) must
+        // access fx at [0,0,0] and [-1,0,0] (paper Figure 1, line 33).
+        let m = module(
+            "function gradx(f) { return f[1,0,0] - f[0,0,0]; }\n\
+             stencil s(fx: Field<f64>, out: Field<f64>) {\n\
+               with computation(PARALLEL), interval(...) { out = gradx(fx[-1,0,0]); }\n\
+             }",
+        );
+        let body = &m.stencils[0].computations[0].blocks[0].body;
+        let inlined = inline_stmts(body, &m).unwrap();
+        let Stmt::Assign { value, .. } = &inlined[0] else { panic!() };
+        let mut offsets = vec![];
+        value.visit_fields(&mut |_, off| offsets.push(off));
+        assert_eq!(offsets, vec![[0, 0, 0], [-1, 0, 0]]);
+    }
+
+    #[test]
+    fn nested_function_calls_inline() {
+        let m = module(
+            "function lap(phi) {\n\
+               return -4.0 * phi[0,0,0] + phi[-1,0,0] + phi[1,0,0] + phi[0,-1,0] + phi[0,1,0];\n\
+             }\n\
+             function bilap(phi) { return lap(lap(phi)); }\n\
+             stencil s(a: Field<f64>, b: Field<f64>) {\n\
+               with computation(PARALLEL), interval(...) { b = bilap(a); }\n\
+             }",
+        );
+        let body = &m.stencils[0].computations[0].blocks[0].body;
+        let inlined = inline_stmts(body, &m).unwrap();
+        let Stmt::Assign { value, .. } = &inlined[0] else { panic!() };
+        // laplacian-of-laplacian touches offsets up to ±2.
+        let mut max_off = 0;
+        value.visit_fields(&mut |_, off| {
+            max_off = max_off.max(off[0].abs()).max(off[1].abs());
+        });
+        assert_eq!(max_off, 2);
+    }
+
+    #[test]
+    fn local_bindings_shift_correctly() {
+        // d = f[1,0,0]; return d[0,1,0]  ==> f[1,1,0]
+        let m = module(
+            "function g(f) { d = f[1,0,0]; return d[0,1,0]; }\n\
+             stencil s(a: Field<f64>, b: Field<f64>) {\n\
+               with computation(PARALLEL), interval(...) { b = g(a); }\n\
+             }",
+        );
+        let body = &m.stencils[0].computations[0].blocks[0].body;
+        let inlined = inline_stmts(body, &m).unwrap();
+        let Stmt::Assign { value, .. } = &inlined[0] else { panic!() };
+        let mut offsets = vec![];
+        value.visit_fields(&mut |_, off| offsets.push(off));
+        assert_eq!(offsets, vec![[1, 1, 0]]);
+    }
+
+    #[test]
+    fn undefined_function_is_error() {
+        let m = module(
+            "stencil s(a: Field<f64>) {\n\
+               with computation(PARALLEL), interval(...) { a = nosuch(a); }\n\
+             }",
+        );
+        let body = &m.stencils[0].computations[0].blocks[0].body;
+        assert!(inline_stmts(body, &m).is_err());
+    }
+
+    #[test]
+    fn arity_mismatch_is_error() {
+        let m = module(
+            "function g(f) { return f; }\n\
+             stencil s(a: Field<f64>) {\n\
+               with computation(PARALLEL), interval(...) { a = g(a, a); }\n\
+             }",
+        );
+        let body = &m.stencils[0].computations[0].blocks[0].body;
+        assert!(inline_stmts(body, &m).is_err());
+    }
+}

@@ -1,0 +1,205 @@
+//! Control-flow lowering: point-wise `if/else` → guarded assignments.
+//!
+//! GTScript if/else has *per-point* semantics: at every point of the
+//! iteration space the condition selects which branch's assignments apply.
+//! We lower each assignment `t = v` under guard `g` to `t = g ? v : t`,
+//! preserving program order. When a branch writes a field that the
+//! condition reads, the condition is first materialized into a *mask
+//! temporary* (`__mask_N`) so later guarded statements keep seeing the
+//! entry value of the condition — the same mask-field strategy GT4Py's
+//! analysis pipeline uses.
+
+use crate::dsl::ast::{BinOp, Expr, Stmt, UnOp};
+use crate::dsl::span::CResult;
+use crate::ir::implir::Assign;
+use std::collections::HashSet;
+
+/// Lower a resolved statement tree into a flat assignment list.
+/// Returns the assignments plus names of any generated mask temporaries.
+pub fn lower_stmts(stmts: &[Stmt]) -> CResult<(Vec<Assign>, Vec<String>)> {
+    let mut out = Vec::new();
+    let mut masks = Vec::new();
+    let mut counter = 0usize;
+    lower_block(stmts, None, &mut out, &mut masks, &mut counter)?;
+    Ok((out, masks))
+}
+
+fn lower_block(
+    stmts: &[Stmt],
+    guard: Option<&Expr>,
+    out: &mut Vec<Assign>,
+    masks: &mut Vec<String>,
+    counter: &mut usize,
+) -> CResult<()> {
+    for s in stmts {
+        match s {
+            Stmt::Assign { target, value, .. } => {
+                let value = match guard {
+                    Some(g) => Expr::ternary(
+                        g.clone(),
+                        value.clone(),
+                        Expr::field(target.clone(), [0, 0, 0]),
+                    ),
+                    None => value.clone(),
+                };
+                out.push(Assign { target: target.clone(), value });
+            }
+            Stmt::If { cond, then_body, else_body, .. } => {
+                // Effective condition includes the enclosing guard.
+                let full_cond = match guard {
+                    Some(g) => Expr::binary(BinOp::And, g.clone(), cond.clone()),
+                    None => cond.clone(),
+                };
+                // Materialize when any branch writes a field the condition
+                // reads (entry-value semantics would otherwise break).
+                let cond_reads = expr_fields(&full_cond);
+                let mut branch_writes = Vec::new();
+                super::resolve::collect_targets(then_body, &mut branch_writes);
+                super::resolve::collect_targets(else_body, &mut branch_writes);
+                let needs_mask =
+                    branch_writes.iter().any(|w| cond_reads.contains(w.as_str()));
+                let guard_expr = if needs_mask {
+                    let mask = format!("__mask_{}", *counter);
+                    *counter += 1;
+                    out.push(Assign {
+                        target: mask.clone(),
+                        value: Expr::ternary(full_cond, Expr::Float(1.0), Expr::Float(0.0)),
+                    });
+                    masks.push(mask.clone());
+                    Expr::binary(BinOp::Gt, Expr::field(mask, [0, 0, 0]), Expr::Float(0.5))
+                } else {
+                    full_cond
+                };
+                lower_block(then_body, Some(&guard_expr), out, masks, counter)?;
+                if !else_body.is_empty() {
+                    let neg = Expr::Unary { op: UnOp::Not, operand: Box::new(guard_expr) };
+                    lower_block(else_body, Some(&neg), out, masks, counter)?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+fn expr_fields(e: &Expr) -> HashSet<&str> {
+    let mut set = HashSet::new();
+    collect(e, &mut set);
+    fn collect<'a>(e: &'a Expr, set: &mut HashSet<&'a str>) {
+        match e {
+            Expr::Field { name, .. } => {
+                set.insert(name.as_str());
+            }
+            Expr::Unary { operand, .. } => collect(operand, set),
+            Expr::Binary { lhs, rhs, .. } => {
+                collect(lhs, set);
+                collect(rhs, set);
+            }
+            Expr::Ternary { cond, then_e, else_e } => {
+                collect(cond, set);
+                collect(then_e, set);
+                collect(else_e, set);
+            }
+            Expr::Call { args, .. } | Expr::Builtin { args, .. } => {
+                for a in args {
+                    collect(a, set);
+                }
+            }
+            _ => {}
+        }
+    }
+    set
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::ast::Span;
+
+    fn assign(t: &str, v: Expr) -> Stmt {
+        Stmt::Assign { target: t.into(), value: v, span: Span::default() }
+    }
+
+    fn iff(cond: Expr, then_body: Vec<Stmt>, else_body: Vec<Stmt>) -> Stmt {
+        Stmt::If { cond, then_body, else_body, span: Span::default() }
+    }
+
+    fn agt(name: &str, v: f64) -> Expr {
+        Expr::binary(BinOp::Gt, Expr::field(name, [0, 0, 0]), Expr::Float(v))
+    }
+
+    #[test]
+    fn plain_assignments_pass_through() {
+        let (lowered, masks) =
+            lower_stmts(&[assign("b", Expr::field("a", [0, 0, 0]))]).unwrap();
+        assert_eq!(lowered.len(), 1);
+        assert!(masks.is_empty());
+        assert_eq!(lowered[0].target, "b");
+        assert!(matches!(lowered[0].value, Expr::Field { .. }));
+    }
+
+    #[test]
+    fn if_lowered_to_guarded_select() {
+        // if a > 0 { b = 1 } else { b = 2 }
+        let (lowered, masks) = lower_stmts(&[iff(
+            agt("a", 0.0),
+            vec![assign("b", Expr::Float(1.0))],
+            vec![assign("b", Expr::Float(2.0))],
+        )])
+        .unwrap();
+        assert!(masks.is_empty());
+        assert_eq!(lowered.len(), 2);
+        // both lowered to ternaries writing b
+        for a in &lowered {
+            assert_eq!(a.target, "b");
+            assert!(matches!(a.value, Expr::Ternary { .. }));
+        }
+    }
+
+    #[test]
+    fn mask_materialized_when_branch_writes_cond_field() {
+        // if a > 0 { a = -a; b = a } — cond reads `a`, branch writes it.
+        let (lowered, masks) = lower_stmts(&[iff(
+            agt("a", 0.0),
+            vec![
+                assign("a", Expr::Unary {
+                    op: UnOp::Neg,
+                    operand: Box::new(Expr::field("a", [0, 0, 0])),
+                }),
+                assign("b", Expr::field("a", [0, 0, 0])),
+            ],
+            vec![],
+        )])
+        .unwrap();
+        assert_eq!(masks.len(), 1);
+        assert_eq!(lowered.len(), 3); // mask + two guarded assigns
+        assert_eq!(lowered[0].target, masks[0]);
+    }
+
+    #[test]
+    fn nested_ifs_conjoin_guards() {
+        // if a > 0 { if b > 0 { c = 1 } }
+        let (lowered, _) = lower_stmts(&[iff(
+            agt("a", 0.0),
+            vec![iff(agt("b", 0.0), vec![assign("c", Expr::Float(1.0))], vec![])],
+            vec![],
+        )])
+        .unwrap();
+        assert_eq!(lowered.len(), 1);
+        let Expr::Ternary { cond, .. } = &lowered[0].value else { panic!() };
+        assert!(matches!(**cond, Expr::Binary { op: BinOp::And, .. }));
+    }
+
+    #[test]
+    fn guarded_assign_preserves_current_value_in_else_arm() {
+        let (lowered, _) = lower_stmts(&[iff(
+            agt("a", 0.0),
+            vec![assign("b", Expr::Float(1.0))],
+            vec![],
+        )])
+        .unwrap();
+        let Expr::Ternary { else_e, .. } = &lowered[0].value else { panic!() };
+        assert!(
+            matches!(&**else_e, Expr::Field { name, offset: [0, 0, 0], .. } if name == "b")
+        );
+    }
+}

@@ -1,0 +1,10 @@
+//! The analysis pipeline (paper Fig. 2): definition IR → implementation IR.
+
+pub mod checks;
+pub mod extents;
+pub mod inline;
+pub mod lowering;
+pub mod pipeline;
+pub mod resolve;
+
+pub use pipeline::{analyze, compile_source, fingerprint_ir};

@@ -1,0 +1,336 @@
+//! The analysis pipeline: definition IR → implementation IR (paper Fig. 2).
+//!
+//! Phases, in order:
+//! 1. **inline** — expand GTScript function calls (offsets compose);
+//! 2. **resolve** — classify names (field / scalar / temporary / external)
+//!    and fold externals into literals;
+//! 3. **lower** — rewrite point-wise if/else into guarded selects
+//!    (materializing mask temporaries where required);
+//! 4. **checks** — vertical-dependency and initialization rules;
+//! 5. **schedule** — one multistage per `with computation`, one stage per
+//!    lowered assignment;
+//! 6. **extents** — backward halo analysis, stamping per-stage compute
+//!    extents and per-field storage requirements;
+//! 7. **fingerprint** — canonical-IR identity for the compilation cache.
+
+use crate::dsl::ast::{DType, Module, StencilDef};
+use crate::dsl::span::{CResult, CompileError};
+use crate::ir::canon;
+use crate::ir::implir::*;
+use std::collections::BTreeMap;
+
+use super::checks::{self, LoweredComputation};
+use super::extents::{self, ScheduledComputation};
+use super::inline;
+use super::lowering;
+use super::resolve;
+
+/// Compile a stencil definition into implementation IR.
+///
+/// `extern_overrides` provides/overrides compile-time external constants
+/// (the analog of the `externals={...}` argument of `@gtscript.stencil`).
+pub fn analyze(
+    def: &StencilDef,
+    module: &Module,
+    extern_overrides: &BTreeMap<String, f64>,
+) -> CResult<StencilIr> {
+    checks::check_dtypes(def)?;
+
+    // Phase 1+2: inline calls, then resolve names / fold externals.
+    let sym = resolve::build_symbols(def, module, extern_overrides)?;
+    let mut lowered_comps: Vec<LoweredComputation> = Vec::new();
+    let mut mask_temps: Vec<String> = Vec::new();
+    for comp in &def.computations {
+        let mut assigns = Vec::new();
+        for block in &comp.blocks {
+            let inlined = inline::inline_stmts(&block.body, module)?;
+            let resolved = resolve::resolve_stmts(&inlined, &sym)?;
+            let (lowered, masks) = lowering::lower_stmts(&resolved)?;
+            mask_temps.extend(masks);
+            for a in lowered {
+                assigns.push((block.interval, a));
+            }
+        }
+        lowered_comps.push(LoweredComputation { policy: comp.policy, assigns });
+    }
+
+    // Temporaries: user temporaries (first-on-lhs) plus generated masks.
+    let mut temp_names = sym.temporaries.clone();
+    temp_names.extend(mask_temps);
+
+    // Re-resolve any mask fields introduced by lowering: they are already
+    // `Expr::Field` nodes, nothing to do — but they must participate in the
+    // initialization check.
+    checks::check_dependencies(&lowered_comps)?;
+    checks::check_temporaries_initialized(&lowered_comps, &temp_names)?;
+
+    // Phase 5: schedule.
+    let scheduled: Vec<ScheduledComputation> = lowered_comps
+        .into_iter()
+        .map(|c| ScheduledComputation { policy: c.policy, assigns: c.assigns })
+        .collect();
+
+    // Phase 6: extents.
+    let is_temp = |n: &str| temp_names.iter().any(|t| t == n);
+    let info = extents::compute_extents(&scheduled, is_temp);
+
+    // Assemble the implementation IR.
+    let temp_dtype = def.fields.first().map(|f| f.dtype).unwrap_or(DType::F64);
+    let mut multistages = Vec::new();
+    let mut flat_idx = 0usize;
+    for comp in &scheduled {
+        let mut stages = Vec::new();
+        for (interval, assign) in &comp.assigns {
+            let reads = Stage::collect_reads(assign);
+            stages.push(Stage {
+                stmt: assign.clone(),
+                interval: *interval,
+                extent: info.stage_extents[flat_idx],
+                reads,
+            });
+            flat_idx += 1;
+        }
+        multistages.push(Multistage { policy: comp.policy, stages });
+    }
+
+    // Field intents.
+    let mut fields = Vec::new();
+    for f in &def.fields {
+        let written = multistages
+            .iter()
+            .flat_map(|m| &m.stages)
+            .any(|s| s.stmt.target == f.name);
+        let read = multistages
+            .iter()
+            .flat_map(|m| &m.stages)
+            .any(|s| s.reads.iter().any(|(n, _)| n == &f.name));
+        let intent = match (read, written) {
+            (true, true) => Intent::InOut,
+            (false, true) => Intent::Out,
+            (true, false) => Intent::In,
+            (false, false) => {
+                return Err(CompileError::new(
+                    "pipeline",
+                    format!("field parameter `{}` is never used in stencil `{}`", f.name, def.name),
+                ))
+            }
+        };
+        let extent = info
+            .field_requirements
+            .get(&f.name)
+            .copied()
+            .unwrap_or_else(Extent::zero)
+            // Normalize: halo requirements always include the center.
+            .union(Extent::zero());
+        fields.push(FieldInfo { name: f.name.clone(), dtype: f.dtype, intent, extent });
+    }
+
+    let temporaries: Vec<TempField> = temp_names
+        .iter()
+        .map(|t| TempField {
+            name: t.clone(),
+            dtype: temp_dtype,
+            extent: info
+                .field_requirements
+                .get(t)
+                .copied()
+                .unwrap_or_else(Extent::zero)
+                .union(Extent::zero()),
+        })
+        .collect();
+
+    let mut ir = StencilIr {
+        name: def.name.clone(),
+        fields,
+        scalars: def.scalars.clone(),
+        temporaries,
+        multistages,
+        externals: sym.externals.clone(),
+        fingerprint: 0,
+    };
+    ir.fingerprint = fingerprint_ir(&ir);
+    Ok(ir)
+}
+
+/// Formatting-insensitive fingerprint over the canonical IR (paper §2.3:
+/// "code reformatting would not trigger a new compilation").
+pub fn fingerprint_ir(ir: &StencilIr) -> u64 {
+    use std::fmt::Write as _;
+    let mut s = String::with_capacity(1024);
+    let _ = write!(s, "stencil {};", ir.name);
+    for f in &ir.fields {
+        let _ = write!(s, "f {}:{};", f.name, f.dtype);
+    }
+    for sc in &ir.scalars {
+        let _ = write!(s, "s {}:{};", sc.name, sc.dtype);
+    }
+    for (k, v) in &ir.externals {
+        let _ = write!(s, "x {}={:016x};", k, v.to_bits());
+    }
+    for ms in &ir.multistages {
+        let _ = write!(s, "ms {};", ms.policy);
+        for st in &ms.stages {
+            let _ = write!(s, "st {} {}=", st.interval, st.stmt.target);
+            canon::canon_expr(&st.stmt.value, &mut s);
+            s.push(';');
+        }
+    }
+    canon::fnv1a64(s.as_bytes())
+}
+
+/// Convenience: parse + analyze a single-stencil module source.
+pub fn compile_source(
+    src: &str,
+    stencil_name: &str,
+    extern_overrides: &BTreeMap<String, f64>,
+) -> CResult<StencilIr> {
+    let module = crate::dsl::parser::parse_module(src)?;
+    let def = module
+        .stencil(stencil_name)
+        .ok_or_else(|| CompileError::new("pipeline", format!("no stencil `{stencil_name}` in module")))?;
+    analyze(def, &module, extern_overrides)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::ast::IterationPolicy;
+
+    const HDIFF_SIMPLE: &str = "
+        function lap(phi) {
+            return -4.0 * phi[0,0,0] + phi[-1,0,0] + phi[1,0,0] + phi[0,-1,0] + phi[0,1,0];
+        }
+        stencil hdiff(in_phi: Field<f64>, out_phi: Field<f64>; alpha: f64) {
+            with computation(PARALLEL), interval(...) {
+                l = lap(in_phi);
+                out_phi = in_phi + alpha * lap(l);
+            }
+        }";
+
+    #[test]
+    fn full_pipeline_hdiff() {
+        let ir = compile_source(HDIFF_SIMPLE, "hdiff", &BTreeMap::new()).unwrap();
+        assert_eq!(ir.temporaries.len(), 1);
+        assert_eq!(ir.num_stages(), 2);
+        // l computed over ±1, in_phi needs ±2 halo.
+        let inp = ir.field("in_phi").unwrap();
+        assert_eq!(inp.extent.i, (-2, 2));
+        assert_eq!(inp.intent, Intent::In);
+        let out = ir.field("out_phi").unwrap();
+        assert_eq!(out.intent, Intent::Out);
+        assert_eq!(out.extent, Extent::zero());
+        let l = ir.temporary("l").unwrap();
+        assert_eq!(l.extent.i, (-1, 1));
+        assert_eq!(ir.multistages[0].stages[0].extent.i, (-1, 1));
+    }
+
+    #[test]
+    fn fingerprint_formatting_insensitive() {
+        let a = compile_source(HDIFF_SIMPLE, "hdiff", &BTreeMap::new()).unwrap();
+        let reformatted = HDIFF_SIMPLE.replace("\n            ", " ").replace("  ", " ");
+        let b = compile_source(&reformatted, "hdiff", &BTreeMap::new()).unwrap();
+        assert_eq!(a.fingerprint, b.fingerprint);
+    }
+
+    #[test]
+    fn fingerprint_sensitive_to_externals() {
+        const SRC: &str = "
+            extern C = 1.0;
+            stencil s(a: Field<f64>, b: Field<f64>) {
+                with computation(PARALLEL), interval(...) { b = a * C; }
+            }";
+        let a = compile_source(SRC, "s", &BTreeMap::new()).unwrap();
+        let mut ov = BTreeMap::new();
+        ov.insert("C".to_string(), 2.0);
+        let b = compile_source(SRC, "s", &ov).unwrap();
+        assert_ne!(a.fingerprint, b.fingerprint);
+    }
+
+    #[test]
+    fn sequential_policies_preserved() {
+        const SRC: &str = "
+            stencil cum(a: Field<f64>, b: Field<f64>) {
+                with computation(FORWARD) {
+                    interval(0, 1) { b = a; }
+                    interval(1, None) { b = b[0,0,-1] + a; }
+                }
+                with computation(BACKWARD) {
+                    interval(-1, None) { a = b; }
+                    interval(0, -1) { a = a[0,0,1] + b; }
+                }
+            }";
+        let ir = compile_source(SRC, "cum", &BTreeMap::new()).unwrap();
+        assert_eq!(ir.multistages.len(), 2);
+        assert_eq!(ir.multistages[0].policy, IterationPolicy::Forward);
+        assert_eq!(ir.multistages[1].policy, IterationPolicy::Backward);
+        assert_eq!(ir.multistages[0].stages.len(), 2);
+        let a = ir.field("a").unwrap();
+        assert_eq!(a.intent, Intent::InOut);
+    }
+
+    #[test]
+    fn unused_field_is_error() {
+        const SRC: &str = "
+            stencil s(a: Field<f64>, ghost: Field<f64>) {
+                with computation(PARALLEL), interval(...) { a = a * 2.0; }
+            }";
+        assert!(compile_source(SRC, "s", &BTreeMap::new()).is_err());
+    }
+
+    #[test]
+    fn if_else_produces_select_stages() {
+        const SRC: &str = "
+            stencil s(a: Field<f64>, b: Field<f64>; lim: f64) {
+                with computation(PARALLEL), interval(...) {
+                    if a > lim { b = a; } else { b = lim; }
+                }
+            }";
+        let ir = compile_source(SRC, "s", &BTreeMap::new()).unwrap();
+        assert_eq!(ir.num_stages(), 2);
+        assert!(ir.temporaries.is_empty());
+    }
+
+    #[test]
+    fn parallel_self_dependency_rejected_by_pipeline() {
+        const SRC: &str = "
+            stencil s(a: Field<f64>) {
+                with computation(PARALLEL), interval(...) { a = a[1,0,0]; }
+            }";
+        let err = compile_source(SRC, "s", &BTreeMap::new()).unwrap_err();
+        assert_eq!(err.phase, "checks");
+    }
+
+    #[test]
+    fn figure1_hdiff_with_flux_limiter_compiles() {
+        // The paper's Figure 1 stencil, transcribed into GTScript-RS.
+        const SRC: &str = "
+            extern LIM = 0.01;
+            function laplacian(phi) {
+                return -4.0 * phi[0,0,0]
+                    + (phi[-1,0,0] + phi[1,0,0] + phi[0,-1,0] + phi[0,1,0]);
+            }
+            function gradx(f) { return f[1,0,0] - f[0,0,0]; }
+            function grady(f) { return f[0,1,0] - f[0,0,0]; }
+            stencil diffusion(in_phi: Field<f64>, out_phi: Field<f64>; alpha: f64) {
+                with computation(PARALLEL), interval(...) {
+                    lap = laplacian(in_phi);
+                    bilap = laplacian(lap);
+                    flux_x = gradx(bilap);
+                    flux_y = grady(bilap);
+                    grad_x = gradx(in_phi);
+                    grad_y = grady(in_phi);
+                    fx = flux_x * grad_x > LIM ? flux_x : LIM;
+                    fy = flux_y * grad_y > LIM ? flux_y : LIM;
+                    out_phi = in_phi + alpha * (gradx(fx[-1,0,0]) + grady(fy[0,-1,0]));
+                }
+            }";
+        let ir = compile_source(SRC, "diffusion", &BTreeMap::new()).unwrap();
+        assert_eq!(ir.temporaries.len(), 8);
+        // in_phi needs a halo of 3: fx at [-1,0] -> flux_x at [-1,0] ->
+        // bilap at [-1,1] -> lap at [-2,2] -> in_phi at [-3,3].
+        let inp = ir.field("in_phi").unwrap();
+        assert_eq!(inp.extent.i, (-3, 3));
+        assert_eq!(inp.extent.j, (-3, 3));
+        assert_eq!(ir.externals.get("LIM"), Some(&0.01));
+    }
+}

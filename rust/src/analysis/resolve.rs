@@ -1,0 +1,319 @@
+//! Name resolution and external folding.
+//!
+//! After inlining, every remaining name in a stencil body refers to one of:
+//! a field parameter, a scalar parameter, a *temporary field* (a name whose
+//! first appearance is on a lhs — paper §2.2: "Fields appearing for the
+//! first time on the lhs of expressions ... are treated as temporary
+//! fields"), or an external compile-time constant. This pass classifies
+//! every `Name`, rewrites bare names into `Field` accesses at offset 0, and
+//! folds externals into literals.
+
+use crate::dsl::ast::{Expr, Module, StencilDef, Stmt};
+use crate::dsl::span::{CResult, CompileError, Span};
+use std::collections::{BTreeMap, HashSet};
+
+/// Symbol classification computed for one stencil.
+pub struct SymbolTable {
+    pub fields: HashSet<String>,
+    pub scalars: HashSet<String>,
+    pub temporaries: Vec<String>,
+    pub externals: BTreeMap<String, f64>,
+}
+
+/// Collect every assignment target in a statement tree.
+pub fn collect_targets(stmts: &[Stmt], out: &mut Vec<String>) {
+    for s in stmts {
+        match s {
+            Stmt::Assign { target, .. } => {
+                if !out.contains(target) {
+                    out.push(target.clone());
+                }
+            }
+            Stmt::If { then_body, else_body, .. } => {
+                collect_targets(then_body, out);
+                collect_targets(else_body, out);
+            }
+        }
+    }
+}
+
+/// Build the symbol table for a stencil given the module's extern defaults
+/// and compile-time external overrides.
+pub fn build_symbols(
+    def: &StencilDef,
+    module: &Module,
+    extern_overrides: &BTreeMap<String, f64>,
+) -> CResult<SymbolTable> {
+    let fields: HashSet<String> = def.fields.iter().map(|f| f.name.clone()).collect();
+    let scalars: HashSet<String> = def.scalars.iter().map(|s| s.name.clone()).collect();
+
+    let mut externals: BTreeMap<String, f64> = BTreeMap::new();
+    for (name, default) in &module.extern_defaults {
+        externals.insert(name.clone(), *default);
+    }
+    for (name, value) in extern_overrides {
+        externals.insert(name.clone(), *value);
+    }
+    for (name, value) in &externals {
+        if value.is_nan() {
+            return Err(CompileError::new(
+                "resolve",
+                format!("external `{name}` has no value (declare a default or pass one at compile time)"),
+            ));
+        }
+        if fields.contains(name) || scalars.contains(name) {
+            return Err(CompileError::new(
+                "resolve",
+                format!("external `{name}` shadows a stencil parameter"),
+            ));
+        }
+    }
+
+    let mut targets = Vec::new();
+    for c in &def.computations {
+        for b in &c.blocks {
+            collect_targets(&b.body, &mut targets);
+        }
+    }
+    let temporaries: Vec<String> = targets
+        .into_iter()
+        .filter(|t| !fields.contains(t) && !scalars.contains(t))
+        .collect();
+    for t in &temporaries {
+        if externals.contains_key(t) {
+            return Err(CompileError::new(
+                "resolve",
+                format!("cannot assign to external `{t}`"),
+            ));
+        }
+    }
+    Ok(SymbolTable { fields, scalars, temporaries, externals })
+}
+
+/// Resolve all names in an expression and fold externals to literals.
+pub fn resolve_expr(e: &Expr, sym: &SymbolTable) -> CResult<Expr> {
+    match e {
+        Expr::Name(n, span) => resolve_name(n, [0, 0, 0], *span, sym),
+        Expr::Field { name, offset, span } => resolve_name(name, *offset, *span, sym),
+        Expr::Scalar(n) => {
+            if sym.scalars.contains(n) {
+                Ok(e.clone())
+            } else {
+                Err(CompileError::new("resolve", format!("unknown scalar `{n}`")))
+            }
+        }
+        Expr::External(n, span) => fold_external(n, *span, sym),
+        Expr::Unary { op, operand } => Ok(Expr::Unary {
+            op: *op,
+            operand: Box::new(resolve_expr(operand, sym)?),
+        }),
+        Expr::Binary { op, lhs, rhs } => Ok(Expr::Binary {
+            op: *op,
+            lhs: Box::new(resolve_expr(lhs, sym)?),
+            rhs: Box::new(resolve_expr(rhs, sym)?),
+        }),
+        Expr::Ternary { cond, then_e, else_e } => Ok(Expr::Ternary {
+            cond: Box::new(resolve_expr(cond, sym)?),
+            then_e: Box::new(resolve_expr(then_e, sym)?),
+            else_e: Box::new(resolve_expr(else_e, sym)?),
+        }),
+        Expr::Call { name, span, .. } => Err(CompileError::with_span(
+            "resolve",
+            format!("unresolved call to `{name}` survived inlining (internal error)"),
+            *span,
+        )),
+        Expr::Builtin { func, args } => Ok(Expr::Builtin {
+            func: *func,
+            args: args.iter().map(|a| resolve_expr(a, sym)).collect::<CResult<_>>()?,
+        }),
+        lit => Ok(lit.clone()),
+    }
+}
+
+fn resolve_name(
+    name: &str,
+    offset: [i32; 3],
+    span: Span,
+    sym: &SymbolTable,
+) -> CResult<Expr> {
+    if sym.fields.contains(name) || sym.temporaries.iter().any(|t| t == name) {
+        return Ok(Expr::Field { name: name.to_string(), offset, span });
+    }
+    if sym.scalars.contains(name) {
+        if offset != [0, 0, 0] {
+            return Err(CompileError::with_span(
+                "resolve",
+                format!("scalar parameter `{name}` cannot be indexed with an offset"),
+                span,
+            ));
+        }
+        return Ok(Expr::Scalar(name.to_string()));
+    }
+    if sym.externals.contains_key(name) {
+        if offset != [0, 0, 0] {
+            return Err(CompileError::with_span(
+                "resolve",
+                format!("external `{name}` cannot be indexed with an offset"),
+                span,
+            ));
+        }
+        return fold_external(name, span, sym);
+    }
+    Err(CompileError::with_span(
+        "resolve",
+        format!("undefined symbol `{name}`"),
+        span,
+    ))
+}
+
+fn fold_external(name: &str, span: Span, sym: &SymbolTable) -> CResult<Expr> {
+    match sym.externals.get(name) {
+        Some(v) => Ok(Expr::Float(*v)),
+        None => Err(CompileError::with_span(
+            "resolve",
+            format!("undefined external `{name}`"),
+            span,
+        )),
+    }
+}
+
+/// Resolve a full statement tree.
+pub fn resolve_stmts(stmts: &[Stmt], sym: &SymbolTable) -> CResult<Vec<Stmt>> {
+    stmts
+        .iter()
+        .map(|s| {
+            Ok(match s {
+                Stmt::Assign { target, value, span } => {
+                    // Targets must be fields or temporaries.
+                    if sym.scalars.contains(target) {
+                        return Err(CompileError::with_span(
+                            "resolve",
+                            format!("cannot assign to scalar parameter `{target}`"),
+                            *span,
+                        ));
+                    }
+                    Stmt::Assign {
+                        target: target.clone(),
+                        value: resolve_expr(value, sym)?,
+                        span: *span,
+                    }
+                }
+                Stmt::If { cond, then_body, else_body, span } => Stmt::If {
+                    cond: resolve_expr(cond, sym)?,
+                    then_body: resolve_stmts(then_body, sym)?,
+                    else_body: resolve_stmts(else_body, sym)?,
+                    span: *span,
+                },
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::parser::parse_module;
+
+    fn setup(src: &str) -> (Module, SymbolTable) {
+        let m = parse_module(src).unwrap();
+        let sym = build_symbols(&m.stencils[0], &m, &BTreeMap::new()).unwrap();
+        (m, sym)
+    }
+
+    #[test]
+    fn classifies_temporaries() {
+        let (_, sym) = setup(
+            "stencil s(a: Field<f64>, b: Field<f64>; c: f64) {\n\
+               with computation(PARALLEL), interval(...) { tmp = a * c; b = tmp; }\n\
+             }",
+        );
+        assert_eq!(sym.temporaries, vec!["tmp".to_string()]);
+        assert!(sym.fields.contains("a"));
+        assert!(sym.scalars.contains("c"));
+    }
+
+    #[test]
+    fn bare_name_becomes_zero_offset_field() {
+        let (m, sym) = setup(
+            "stencil s(a: Field<f64>, b: Field<f64>) {\n\
+               with computation(PARALLEL), interval(...) { b = a; }\n\
+             }",
+        );
+        let body = resolve_stmts(&m.stencils[0].computations[0].blocks[0].body, &sym).unwrap();
+        let Stmt::Assign { value, .. } = &body[0] else { panic!() };
+        assert!(matches!(value, Expr::Field { offset: [0, 0, 0], .. }));
+    }
+
+    #[test]
+    fn externals_fold_to_literals() {
+        let m = parse_module(
+            "extern LIM = 0.25;\n\
+             stencil s(a: Field<f64>, b: Field<f64>) {\n\
+               with computation(PARALLEL), interval(...) { b = a * LIM; }\n\
+             }",
+        )
+        .unwrap();
+        let sym = build_symbols(&m.stencils[0], &m, &BTreeMap::new()).unwrap();
+        let body = resolve_stmts(&m.stencils[0].computations[0].blocks[0].body, &sym).unwrap();
+        let Stmt::Assign { value, .. } = &body[0] else { panic!() };
+        let Expr::Binary { rhs, .. } = value else { panic!() };
+        assert_eq!(**rhs, Expr::Float(0.25));
+    }
+
+    #[test]
+    fn extern_override_wins() {
+        let m = parse_module(
+            "extern LIM = 0.25;\n\
+             stencil s(a: Field<f64>) {\n\
+               with computation(PARALLEL), interval(...) { a = LIM; }\n\
+             }",
+        )
+        .unwrap();
+        let mut ov = BTreeMap::new();
+        ov.insert("LIM".to_string(), 9.0);
+        let sym = build_symbols(&m.stencils[0], &m, &ov).unwrap();
+        assert_eq!(sym.externals["LIM"], 9.0);
+    }
+
+    #[test]
+    fn extern_without_value_is_error() {
+        let m = parse_module(
+            "extern LIM;\n\
+             stencil s(a: Field<f64>) {\n\
+               with computation(PARALLEL), interval(...) { a = LIM; }\n\
+             }",
+        )
+        .unwrap();
+        assert!(build_symbols(&m.stencils[0], &m, &BTreeMap::new()).is_err());
+    }
+
+    #[test]
+    fn undefined_symbol_is_error() {
+        let (m, sym) = setup(
+            "stencil s(a: Field<f64>) {\n\
+               with computation(PARALLEL), interval(...) { a = ghost; }\n\
+             }",
+        );
+        assert!(resolve_stmts(&m.stencils[0].computations[0].blocks[0].body, &sym).is_err());
+    }
+
+    #[test]
+    fn scalar_with_offset_is_error() {
+        let (m, sym) = setup(
+            "stencil s(a: Field<f64>; c: f64) {\n\
+               with computation(PARALLEL), interval(...) { a = c[1,0,0]; }\n\
+             }",
+        );
+        assert!(resolve_stmts(&m.stencils[0].computations[0].blocks[0].body, &sym).is_err());
+    }
+
+    #[test]
+    fn assign_to_scalar_is_error() {
+        let (m, sym) = setup(
+            "stencil s(a: Field<f64>; c: f64) {\n\
+               with computation(PARALLEL), interval(...) { c = a; }\n\
+             }",
+        );
+        assert!(resolve_stmts(&m.stencils[0].computations[0].blocks[0].body, &sym).is_err());
+    }
+}

@@ -1,0 +1,183 @@
+//! Compiled expressions: the backend-internal form of stage right-hand
+//! sides. Field names are pre-resolved to dense slot indices and scalars to
+//! positions so the interpreting backends pay no hashing on the hot path.
+//! Booleans are represented as 1.0 / 0.0 (selects compare against 0.5).
+
+use crate::dsl::ast::{BinOp, Builtin, Expr, Offset, UnOp};
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// A compiled point-wise expression.
+#[derive(Debug, Clone)]
+pub enum CExpr {
+    Const(f64),
+    Scalar(usize),
+    Field { slot: usize, off: Offset },
+    Neg(Box<CExpr>),
+    Not(Box<CExpr>),
+    Bin(BinOp, Box<CExpr>, Box<CExpr>),
+    Select(Box<CExpr>, Box<CExpr>, Box<CExpr>),
+    Call1(Builtin, Box<CExpr>),
+    Call2(Builtin, Box<CExpr>, Box<CExpr>),
+}
+
+impl CExpr {
+    /// Compile a resolved AST expression against slot/scalar tables.
+    pub fn compile(
+        e: &Expr,
+        slots: &HashMap<String, usize>,
+        scalars: &HashMap<String, usize>,
+    ) -> Result<CExpr> {
+        Ok(match e {
+            Expr::Float(v) => CExpr::Const(*v),
+            Expr::Bool(b) => CExpr::Const(if *b { 1.0 } else { 0.0 }),
+            Expr::Field { name, offset, .. } => {
+                let slot = *slots
+                    .get(name)
+                    .ok_or_else(|| anyhow::anyhow!("unbound field `{name}`"))?;
+                CExpr::Field { slot, off: *offset }
+            }
+            Expr::Scalar(name) => {
+                let idx = *scalars
+                    .get(name)
+                    .ok_or_else(|| anyhow::anyhow!("unbound scalar `{name}`"))?;
+                CExpr::Scalar(idx)
+            }
+            Expr::Unary { op, operand } => {
+                let c = Box::new(CExpr::compile(operand, slots, scalars)?);
+                match op {
+                    UnOp::Neg => CExpr::Neg(c),
+                    UnOp::Not => CExpr::Not(c),
+                }
+            }
+            Expr::Binary { op, lhs, rhs } => CExpr::Bin(
+                *op,
+                Box::new(CExpr::compile(lhs, slots, scalars)?),
+                Box::new(CExpr::compile(rhs, slots, scalars)?),
+            ),
+            Expr::Ternary { cond, then_e, else_e } => CExpr::Select(
+                Box::new(CExpr::compile(cond, slots, scalars)?),
+                Box::new(CExpr::compile(then_e, slots, scalars)?),
+                Box::new(CExpr::compile(else_e, slots, scalars)?),
+            ),
+            Expr::Builtin { func, args } => {
+                if args.len() == 1 {
+                    CExpr::Call1(*func, Box::new(CExpr::compile(&args[0], slots, scalars)?))
+                } else {
+                    CExpr::Call2(
+                        *func,
+                        Box::new(CExpr::compile(&args[0], slots, scalars)?),
+                        Box::new(CExpr::compile(&args[1], slots, scalars)?),
+                    )
+                }
+            }
+            Expr::Name(n, _) | Expr::External(n, _) => {
+                bail!("unresolved symbol `{n}` reached a backend (analysis bug)")
+            }
+            Expr::Call { name, .. } => {
+                bail!("unresolved call `{name}` reached a backend (analysis bug)")
+            }
+        })
+    }
+}
+
+/// Apply a binary operator to scalar values (booleans as 0.0/1.0).
+#[inline(always)]
+pub fn apply_bin(op: BinOp, a: f64, b: f64) -> f64 {
+    match op {
+        BinOp::Add => a + b,
+        BinOp::Sub => a - b,
+        BinOp::Mul => a * b,
+        BinOp::Div => a / b,
+        // Truncated remainder, matching XLA's `rem` so all backends agree.
+        BinOp::Mod => a % b,
+        BinOp::Lt => ((a < b) as u8) as f64,
+        BinOp::Le => ((a <= b) as u8) as f64,
+        BinOp::Gt => ((a > b) as u8) as f64,
+        BinOp::Ge => ((a >= b) as u8) as f64,
+        BinOp::Eq => ((a == b) as u8) as f64,
+        BinOp::Ne => ((a != b) as u8) as f64,
+        BinOp::And => (((a != 0.0) && (b != 0.0)) as u8) as f64,
+        BinOp::Or => (((a != 0.0) || (b != 0.0)) as u8) as f64,
+    }
+}
+
+/// Apply a unary builtin.
+#[inline(always)]
+pub fn apply_builtin1(f: Builtin, a: f64) -> f64 {
+    match f {
+        Builtin::Abs => a.abs(),
+        Builtin::Sqrt => a.sqrt(),
+        Builtin::Exp => a.exp(),
+        Builtin::Log => a.ln(),
+        Builtin::Floor => a.floor(),
+        Builtin::Ceil => a.ceil(),
+        Builtin::Sin => a.sin(),
+        Builtin::Cos => a.cos(),
+        Builtin::Tanh => a.tanh(),
+        _ => unreachable!("binary builtin used as unary"),
+    }
+}
+
+/// Apply a binary builtin.
+#[inline(always)]
+pub fn apply_builtin2(f: Builtin, a: f64, b: f64) -> f64 {
+    match f {
+        Builtin::Min => a.min(b),
+        Builtin::Max => a.max(b),
+        Builtin::Pow => a.powf(b),
+        _ => unreachable!("unary builtin used as binary"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::parser::parse_expr;
+
+    #[test]
+    fn compiles_resolved_expression() {
+        // Build a resolved expr by hand: a[1,0,0] * s + 2.0
+        let e = Expr::binary(
+            BinOp::Add,
+            Expr::binary(
+                BinOp::Mul,
+                Expr::field("a", [1, 0, 0]),
+                Expr::Scalar("s".into()),
+            ),
+            Expr::Float(2.0),
+        );
+        let mut slots = HashMap::new();
+        slots.insert("a".to_string(), 0);
+        let mut scalars = HashMap::new();
+        scalars.insert("s".to_string(), 0);
+        let c = CExpr::compile(&e, &slots, &scalars).unwrap();
+        assert!(matches!(c, CExpr::Bin(BinOp::Add, _, _)));
+    }
+
+    #[test]
+    fn unresolved_name_rejected() {
+        let e = parse_expr("ghost + 1.0").unwrap();
+        let r = CExpr::compile(&e, &HashMap::new(), &HashMap::new());
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn apply_bin_semantics() {
+        assert_eq!(apply_bin(BinOp::Add, 2.0, 3.0), 5.0);
+        assert_eq!(apply_bin(BinOp::Lt, 1.0, 2.0), 1.0);
+        assert_eq!(apply_bin(BinOp::Lt, 2.0, 1.0), 0.0);
+        assert_eq!(apply_bin(BinOp::And, 1.0, 0.0), 0.0);
+        assert_eq!(apply_bin(BinOp::Or, 1.0, 0.0), 1.0);
+        assert_eq!(apply_bin(BinOp::Mod, 7.0, 3.0), 1.0);
+    }
+
+    #[test]
+    fn builtins_semantics() {
+        assert_eq!(apply_builtin1(Builtin::Abs, -2.0), 2.0);
+        assert_eq!(apply_builtin1(Builtin::Sqrt, 9.0), 3.0);
+        assert_eq!(apply_builtin2(Builtin::Min, 1.0, 2.0), 1.0);
+        assert_eq!(apply_builtin2(Builtin::Max, 1.0, 2.0), 2.0);
+        assert_eq!(apply_builtin2(Builtin::Pow, 2.0, 10.0), 1024.0);
+    }
+}

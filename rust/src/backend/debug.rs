@@ -1,0 +1,350 @@
+//! The `debug` backend: a scalar tree-walking interpreter.
+//!
+//! The analog of GT4Py's pure-Python `debug` backend (§2.3): every point of
+//! the iteration space is evaluated by walking the expression tree with
+//! dynamic dispatch. Deliberately unoptimized — it exists to define the
+//! reference semantics, to be steppable, and to be the slow baseline of the
+//! Fig. 3 reproduction. Do not optimize this backend.
+
+use super::cexpr::{apply_bin, apply_builtin1, apply_builtin2, CExpr};
+use super::program::{Env, Program};
+use super::{Backend, StencilArgs};
+use crate::dsl::ast::IterationPolicy;
+use crate::ir::implir::StencilIr;
+use anyhow::Result;
+
+#[derive(Default)]
+pub struct DebugBackend {
+    /// Programs keyed by stencil fingerprint (backend instances are shared
+    /// across stencils by the coordinator).
+    programs: std::collections::HashMap<u64, Program>,
+}
+
+impl DebugBackend {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+fn eval(env: &Env, e: &CExpr, i: i64, j: i64, k: i64) -> f64 {
+    match e {
+        CExpr::Const(v) => *v,
+        CExpr::Scalar(ix) => env.scalars[*ix],
+        CExpr::Field { slot, off } => env.storages[*slot].get(
+            i + off[0] as i64,
+            j + off[1] as i64,
+            k + off[2] as i64,
+        ),
+        CExpr::Neg(a) => -eval(env, a, i, j, k),
+        CExpr::Not(a) => {
+            if eval(env, a, i, j, k) != 0.0 {
+                0.0
+            } else {
+                1.0
+            }
+        }
+        CExpr::Bin(op, a, b) => {
+            apply_bin(*op, eval(env, a, i, j, k), eval(env, b, i, j, k))
+        }
+        // Short-circuit select: only the taken branch is evaluated, the
+        // natural semantics for a per-point interpreter.
+        CExpr::Select(c, t, f) => {
+            if eval(env, c, i, j, k) != 0.0 {
+                eval(env, t, i, j, k)
+            } else {
+                eval(env, f, i, j, k)
+            }
+        }
+        CExpr::Call1(f, a) => apply_builtin1(*f, eval(env, a, i, j, k)),
+        CExpr::Call2(f, a, b) => {
+            apply_builtin2(*f, eval(env, a, i, j, k), eval(env, b, i, j, k))
+        }
+    }
+}
+
+fn run_program(program: &Program, env: &mut Env) {
+    let [ni, nj, _] = env.domain;
+    for ms in &program.multistages {
+        match ms.policy {
+            IterationPolicy::Parallel => {
+                // Stage-outermost: each assignment is applied over its full
+                // 3-D region before the next statement starts.
+                for st in &ms.stages {
+                    let (k0, k1) = env.krange(&st.interval);
+                    let e = st.extent;
+                    for k in k0..k1 {
+                        for i in e.i.0 as i64..ni as i64 + e.i.1 as i64 {
+                            for j in e.j.0 as i64..nj as i64 + e.j.1 as i64 {
+                                let v = eval(env, &st.expr, i, j, k);
+                                env.storages[st.target].set(i, j, k, v);
+                            }
+                        }
+                    }
+                }
+            }
+            IterationPolicy::Forward | IterationPolicy::Backward => {
+                // k-outermost: on each level, in-interval stages run in
+                // program order over the horizontal plane.
+                let ranges: Vec<(i64, i64)> =
+                    ms.stages.iter().map(|s| env.krange(&s.interval)).collect();
+                let kmin = ranges.iter().map(|r| r.0).min().unwrap_or(0);
+                let kmax = ranges.iter().map(|r| r.1).max().unwrap_or(0);
+                let ks: Vec<i64> = if ms.policy == IterationPolicy::Forward {
+                    (kmin..kmax).collect()
+                } else {
+                    (kmin..kmax).rev().collect()
+                };
+                for k in ks {
+                    for (st, (k0, k1)) in ms.stages.iter().zip(&ranges) {
+                        if k < *k0 || k >= *k1 {
+                            continue;
+                        }
+                        let e = st.extent;
+                        for i in e.i.0 as i64..ni as i64 + e.i.1 as i64 {
+                            for j in e.j.0 as i64..nj as i64 + e.j.1 as i64 {
+                                let v = eval(env, &st.expr, i, j, k);
+                                env.storages[st.target].set(i, j, k, v);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl Backend for DebugBackend {
+    fn name(&self) -> &'static str {
+        "debug"
+    }
+
+    fn prepare(&mut self, ir: &StencilIr) -> Result<()> {
+        if !self.programs.contains_key(&ir.fingerprint) {
+            self.programs.insert(ir.fingerprint, Program::compile(ir)?);
+        }
+        Ok(())
+    }
+
+    fn run(&mut self, ir: &StencilIr, args: &mut StencilArgs) -> Result<()> {
+        self.prepare(ir)?;
+        let program = &self.programs[&ir.fingerprint];
+        let mut env = Env::build(program, args.fields, args.scalars, args.domain)?;
+        run_program(program, &mut env);
+        env.restore(program, args.fields);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::compile_source;
+    use crate::storage::Storage;
+    use std::collections::BTreeMap;
+
+    fn run_stencil<'b>(
+        src: &str,
+        name: &str,
+        fields: &mut [(&'b str, &'b mut Storage)],
+        scalars: &[(&'b str, f64)],
+        domain: [usize; 3],
+    ) {
+        let ir = compile_source(src, name, &BTreeMap::new()).unwrap();
+        let mut be = DebugBackend::new();
+        let mut args = StencilArgs { fields, scalars, domain };
+        be.run(&ir, &mut args).unwrap();
+    }
+
+    #[test]
+    fn copy_stencil() {
+        let mut a = Storage::from_fn([3, 3, 2], 0, |i, j, k| (i + 10 * j + 100 * k) as f64);
+        let mut b = Storage::with_halo([3, 3, 2], 0);
+        run_stencil(
+            "stencil c(a: Field<f64>, b: Field<f64>) {\n\
+               with computation(PARALLEL), interval(...) { b = a; }\n\
+             }",
+            "c",
+            &mut [("a", &mut a), ("b", &mut b)],
+            &[],
+            [3, 3, 2],
+        );
+        assert_eq!(b.get(2, 1, 1), 112.0);
+        assert_eq!(a.max_abs_diff(&b), 0.0);
+    }
+
+    #[test]
+    fn laplacian_values() {
+        let mut a = Storage::from_fn_extended([3, 3, 1], 1, |i, j, _| (i * i + j * j) as f64);
+        let mut out = Storage::with_horizontal_halo([3, 3, 1], 0);
+        run_stencil(
+            "function lap(p) {\n\
+               return -4.0*p[0,0,0] + p[-1,0,0] + p[1,0,0] + p[0,-1,0] + p[0,1,0];\n\
+             }\n\
+             stencil s(a: Field<f64>, out: Field<f64>) {\n\
+               with computation(PARALLEL), interval(...) { out = lap(a); }\n\
+             }",
+            "s",
+            &mut [("a", &mut a), ("out", &mut out)],
+            &[],
+            [3, 3, 1],
+        );
+        // Δ(i²+j²) = 4 exactly on the 5-point stencil.
+        for i in 0..3 {
+            for j in 0..3 {
+                assert_eq!(out.get(i, j, 0), 4.0, "at ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn temporary_with_halo_used() {
+        // t needs ±1 extent: halo of `a` = 2.
+        let mut a = Storage::from_fn_extended([4, 4, 1], 2, |i, j, _| (i + j) as f64);
+        let mut out = Storage::with_horizontal_halo([4, 4, 1], 0);
+        run_stencil(
+            "stencil s(a: Field<f64>, out: Field<f64>) {\n\
+               with computation(PARALLEL), interval(...) {\n\
+                 t = a[-1,0,0] + a[1,0,0];\n\
+                 out = t[0,-1,0] + t[0,1,0];\n\
+               }\n\
+             }",
+            "s",
+            &mut [("a", &mut a), ("out", &mut out)],
+            &[],
+            [4, 4, 1],
+        );
+        // t(i,j) = 2(i+j); out = t(i,j-1)+t(i,j+1) = 4(i+j).
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(out.get(i, j, 0), 4.0 * (i + j) as f64);
+            }
+        }
+    }
+
+    #[test]
+    fn forward_cumulative_sum() {
+        let mut a = Storage::from_fn([2, 2, 5], 0, |_, _, _| 1.0);
+        let mut b = Storage::with_halo([2, 2, 5], 0);
+        run_stencil(
+            "stencil cum(a: Field<f64>, b: Field<f64>) {\n\
+               with computation(FORWARD) {\n\
+                 interval(0, 1) { b = a; }\n\
+                 interval(1, None) { b = b[0,0,-1] + a; }\n\
+               }\n\
+             }",
+            "cum",
+            &mut [("a", &mut a), ("b", &mut b)],
+            &[],
+            [2, 2, 5],
+        );
+        for k in 0..5 {
+            assert_eq!(b.get(0, 0, k), (k + 1) as f64);
+            assert_eq!(b.get(1, 1, k), (k + 1) as f64);
+        }
+    }
+
+    #[test]
+    fn backward_cumulative_sum() {
+        let mut a = Storage::from_fn([2, 2, 5], 0, |_, _, _| 1.0);
+        let mut b = Storage::with_halo([2, 2, 5], 0);
+        run_stencil(
+            "stencil cum(a: Field<f64>, b: Field<f64>) {\n\
+               with computation(BACKWARD) {\n\
+                 interval(-1, None) { b = a; }\n\
+                 interval(0, -1) { b = b[0,0,1] + a; }\n\
+               }\n\
+             }",
+            "cum",
+            &mut [("a", &mut a), ("b", &mut b)],
+            &[],
+            [2, 2, 5],
+        );
+        for k in 0..5 {
+            assert_eq!(b.get(0, 0, k), (5 - k) as f64);
+        }
+    }
+
+    #[test]
+    fn ternary_flux_limiter() {
+        let mut a = Storage::from_fn([4, 1, 1], 0, |i, _, _| i as f64 - 1.5);
+        let mut b = Storage::with_halo([4, 1, 1], 0);
+        run_stencil(
+            "stencil s(a: Field<f64>, b: Field<f64>; lim: f64) {\n\
+               with computation(PARALLEL), interval(...) { b = a > lim ? a : lim; }\n\
+             }",
+            "s",
+            &mut [("a", &mut a), ("b", &mut b)],
+            &[("lim", 0.0)],
+            [4, 1, 1],
+        );
+        assert_eq!(b.get(0, 0, 0), 0.0);
+        assert_eq!(b.get(1, 0, 0), 0.0);
+        assert_eq!(b.get(2, 0, 0), 0.5);
+        assert_eq!(b.get(3, 0, 0), 1.5);
+    }
+
+    #[test]
+    fn if_else_semantics() {
+        let mut a = Storage::from_fn([4, 1, 1], 0, |i, _, _| i as f64 - 1.5);
+        let mut b = Storage::with_halo([4, 1, 1], 0);
+        run_stencil(
+            "stencil s(a: Field<f64>, b: Field<f64>) {\n\
+               with computation(PARALLEL), interval(...) {\n\
+                 if a > 0.0 { b = 1.0; } else { b = -1.0; }\n\
+               }\n\
+             }",
+            "s",
+            &mut [("a", &mut a), ("b", &mut b)],
+            &[],
+            [4, 1, 1],
+        );
+        assert_eq!(b.get(0, 0, 0), -1.0);
+        assert_eq!(b.get(3, 0, 0), 1.0);
+    }
+
+    #[test]
+    fn interval_split_specializes_levels() {
+        let mut a = Storage::from_fn([1, 1, 4], 0, |_, _, _| 1.0);
+        let mut b = Storage::with_halo([1, 1, 4], 0);
+        run_stencil(
+            "stencil s(a: Field<f64>, b: Field<f64>) {\n\
+               with computation(PARALLEL) {\n\
+                 interval(0, 1) { b = a * 10.0; }\n\
+                 interval(1, -1) { b = a * 20.0; }\n\
+                 interval(-1, None) { b = a * 30.0; }\n\
+               }\n\
+             }",
+            "s",
+            &mut [("a", &mut a), ("b", &mut b)],
+            &[],
+            [1, 1, 4],
+        );
+        assert_eq!(b.get(0, 0, 0), 10.0);
+        assert_eq!(b.get(0, 0, 1), 20.0);
+        assert_eq!(b.get(0, 0, 2), 20.0);
+        assert_eq!(b.get(0, 0, 3), 30.0);
+    }
+
+    #[test]
+    fn parallel_statement_order_domain_wide() {
+        // Second statement reads the temp at an offset — requires the first
+        // statement to have completed over the whole (extended) domain.
+        let mut a = Storage::from_fn_extended([4, 1, 1], 1, |i, _, _| i as f64);
+        let mut out = Storage::with_horizontal_halo([4, 1, 1], 0);
+        run_stencil(
+            "stencil s(a: Field<f64>, out: Field<f64>) {\n\
+               with computation(PARALLEL), interval(...) {\n\
+                 t = a * 2.0;\n\
+                 out = t[1,0,0] - t[-1,0,0];\n\
+               }\n\
+             }",
+            "s",
+            &mut [("a", &mut a), ("out", &mut out)],
+            &[],
+            [4, 1, 1],
+        );
+        for i in 0..4 {
+            assert_eq!(out.get(i, 0, 0), 4.0);
+        }
+    }
+}

@@ -1,0 +1,76 @@
+//! Execution backends (paper §2.3).
+//!
+//! | Paper backend  | gt4rs backend | Strategy                                   |
+//! |----------------|---------------|--------------------------------------------|
+//! | `debug`        | [`debug`]     | scalar tree-walking interpreter            |
+//! | `numpy`        | [`vector`]    | plane-vectorized, materialized temporaries |
+//! | `gtx86`/`gtmc` | [`xlagen`]    | XlaBuilder codegen, JIT-compiled on PJRT   |
+//! | `gtcuda`       | [`pjrt_aot`]  | prebuilt JAX/**Pallas** HLO artifacts      |
+//!
+//! All backends consume the same implementation IR and are interchangeable
+//! behind the [`Backend`] trait; equivalence across backends is asserted in
+//! the test suites.
+
+pub mod cexpr;
+pub mod debug;
+pub mod pjrt_aot;
+pub mod program;
+pub mod vector;
+pub mod xlagen;
+
+use crate::ir::implir::StencilIr;
+use crate::storage::Storage;
+use anyhow::Result;
+
+/// Arguments for one stencil invocation.
+pub struct StencilArgs<'a, 'b> {
+    /// `(name, storage)` for every field parameter, any order.
+    pub fields: &'a mut [(&'b str, &'b mut Storage)],
+    /// `(name, value)` for every scalar parameter.
+    pub scalars: &'a [(&'b str, f64)],
+    /// Compute-domain shape (ni, nj, nk).
+    pub domain: [usize; 3],
+}
+
+/// A stencil execution backend.
+pub trait Backend {
+    fn name(&self) -> &'static str;
+
+    /// One-time compilation/codegen for a stencil (cached by the
+    /// coordinator); optional — `run` must self-prepare when skipped.
+    fn prepare(&mut self, _ir: &StencilIr) -> Result<()> {
+        Ok(())
+    }
+
+    /// Execute the stencil over `args.domain`.
+    fn run(&mut self, ir: &StencilIr, args: &mut StencilArgs) -> Result<()>;
+}
+
+/// Names of all built-in backends, in the tier order of Fig. 3.
+pub const BACKEND_NAMES: [&str; 4] = ["debug", "vector", "xla", "pjrt-aot"];
+
+/// Instantiate a backend by name.
+pub fn create(name: &str) -> Result<Box<dyn Backend>> {
+    Ok(match name {
+        "debug" => Box::new(debug::DebugBackend::new()),
+        "vector" => Box::new(vector::VectorBackend::new()),
+        "xla" => Box::new(xlagen::XlaBackend::new()?),
+        "pjrt-aot" => Box::new(pjrt_aot::PjrtAotBackend::new()?),
+        other => anyhow::bail!(
+            "unknown backend `{other}` (available: {})",
+            BACKEND_NAMES.join(", ")
+        ),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn create_interpreting_backends() {
+        assert_eq!(create("debug").unwrap().name(), "debug");
+        assert_eq!(create("vector").unwrap().name(), "vector");
+        assert!(create("nope").is_err());
+    }
+}

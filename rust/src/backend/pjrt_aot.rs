@@ -1,0 +1,232 @@
+//! The `pjrt-aot` backend: prebuilt JAX/Pallas HLO artifacts.
+//!
+//! The analog of GT4Py's `gtcuda` backend: the highest-performance tier is
+//! generated outside the Rust process — here by the L2 JAX model and L1
+//! Pallas kernels in `python/compile/`, lowered once by `make artifacts` to
+//! HLO text under `artifacts/` — and only *loaded and executed* on the hot
+//! path, Python-free.
+//!
+//! Calling convention (shared with `python/compile/aot.py`):
+//! * one f64 input per field parameter, shaped to the field's *box*
+//!   (compute domain + required extent, same geometry as the `xla`
+//!   backend);
+//! * one rank-0 f64 input per scalar parameter;
+//! * output: a tuple with one (ni, nj, nk) array per written field, in
+//!   declaration order.
+//!
+//! Artifacts are named `<stencil>[__<variant>]_<ni>x<nj>x<nk>.hlo.txt`.
+//! Because XLA programs are shape-specialized, one artifact exists per
+//! domain size used by the benchmarks/examples; the run-time cache below
+//! mirrors GT4Py's compiled-stencil cache.
+
+use super::{Backend, StencilArgs};
+use crate::ir::implir::{Intent, StencilIr};
+use crate::runtime::{Arg, Executable, Runtime};
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+/// Environment variable overriding the artifact directory.
+pub const ARTIFACTS_ENV: &str = "GT4RS_ARTIFACTS";
+
+fn default_artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var(ARTIFACTS_ENV) {
+        return PathBuf::from(dir);
+    }
+    // Walk up from the current dir to find an `artifacts/` directory so
+    // tests/examples work from any workspace subdirectory.
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.is_dir() {
+            return cand;
+        }
+        if !cur.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+pub struct PjrtAotBackend {
+    runtime: Runtime,
+    dir: PathBuf,
+    /// `(artifact key, domain)` → executable.
+    cache: HashMap<(String, [usize; 3]), Rc<Executable>>,
+    /// Reused host staging buffers (see EXPERIMENTS.md §Perf).
+    staging: Vec<Vec<f64>>,
+    /// Optional variant suffix (e.g. "pallas" vs "jnp" lowering).
+    pub variant: Option<String>,
+}
+
+impl PjrtAotBackend {
+    pub fn new() -> Result<PjrtAotBackend> {
+        Ok(PjrtAotBackend {
+            runtime: Runtime::cpu()?,
+            dir: default_artifacts_dir(),
+            cache: HashMap::new(),
+            staging: Vec::new(),
+            variant: None,
+        })
+    }
+
+    pub fn with_runtime(runtime: Runtime) -> PjrtAotBackend {
+        PjrtAotBackend {
+            runtime,
+            dir: default_artifacts_dir(),
+            cache: HashMap::new(),
+            staging: Vec::new(),
+            variant: None,
+        }
+    }
+
+    /// Select a lowering variant (artifact suffix), e.g. `pallas`.
+    pub fn with_variant(mut self, variant: &str) -> Self {
+        self.variant = Some(variant.to_string());
+        self
+    }
+
+    pub fn artifacts_dir(&self) -> &PathBuf {
+        &self.dir
+    }
+
+    /// Path of the artifact for a stencil + domain.
+    pub fn artifact_path(&self, stencil: &str, domain: [usize; 3]) -> PathBuf {
+        let stem = match &self.variant {
+            Some(v) => format!("{stencil}__{v}"),
+            None => stencil.to_string(),
+        };
+        self.dir
+            .join(format!("{stem}_{}x{}x{}.hlo.txt", domain[0], domain[1], domain[2]))
+    }
+
+    /// Whether an artifact exists for this stencil + domain.
+    pub fn available(&self, stencil: &str, domain: [usize; 3]) -> bool {
+        self.artifact_path(stencil, domain).is_file()
+    }
+
+    fn executable(&mut self, stencil: &str, domain: [usize; 3]) -> Result<Rc<Executable>> {
+        let key = (stencil.to_string(), domain);
+        if let Some(e) = self.cache.get(&key) {
+            return Ok(e.clone());
+        }
+        let path = self.artifact_path(stencil, domain);
+        let exe = Rc::new(self.runtime.load_hlo_text(&path).with_context(|| {
+            format!(
+                "no AOT artifact for stencil `{stencil}` at domain {domain:?} — run `make artifacts` (looked at {})",
+                path.display()
+            )
+        })?);
+        self.cache.insert(key, exe.clone());
+        Ok(exe)
+    }
+}
+
+impl Backend for PjrtAotBackend {
+    fn name(&self) -> &'static str {
+        "pjrt-aot"
+    }
+
+    fn run(&mut self, ir: &StencilIr, args: &mut StencilArgs) -> Result<()> {
+        let domain = args.domain;
+        let exe = self.executable(&ir.name, domain)?;
+
+        // Stage inputs with exactly the xla-backend geometry; staging
+        // buffers are reused across calls.
+        self.staging.resize_with(ir.fields.len(), Vec::new);
+        let mut dims_list: Vec<Vec<usize>> = Vec::with_capacity(ir.fields.len());
+        for (buf, f) in self.staging.iter_mut().zip(&ir.fields) {
+            let e = f.extent;
+            let lo = [e.i.0 as i64, e.j.0 as i64, e.k.0 as i64];
+            let dims = [
+                (domain[0] as i64 + (e.i.1 - e.i.0) as i64) as usize,
+                (domain[1] as i64 + (e.j.1 - e.j.0) as i64) as usize,
+                (domain[2] as i64 + (e.k.1 - e.k.0) as i64) as usize,
+            ];
+            let (_, storage) = args
+                .fields
+                .iter()
+                .find(|(n, _)| *n == f.name)
+                .ok_or_else(|| anyhow!("missing field argument `{}`", f.name))?;
+            storage.box_write_c_order(lo, dims, buf);
+            dims_list.push(dims.to_vec());
+        }
+        let mut xargs: Vec<Arg> = self
+            .staging
+            .iter()
+            .zip(&dims_list)
+            .map(|(d, dims)| Arg::F64(d, dims.clone()))
+            .collect();
+        for s in &ir.scalars {
+            let v = args
+                .scalars
+                .iter()
+                .find(|(n, _)| *n == s.name)
+                .map(|(_, v)| *v)
+                .ok_or_else(|| anyhow!("missing scalar argument `{}`", s.name))?;
+            xargs.push(Arg::Scalar(v));
+        }
+
+        let outputs = exe.run_f64(&xargs)?;
+        let expected: usize =
+            ir.fields.iter().filter(|f| f.intent != Intent::In).count();
+        if outputs.len() != expected {
+            anyhow::bail!(
+                "artifact for `{}` returned {} outputs, stencil writes {} fields",
+                ir.name,
+                outputs.len(),
+                expected
+            );
+        }
+        let mut oi = 0;
+        for f in &ir.fields {
+            if f.intent == Intent::In {
+                continue;
+            }
+            let (_, storage) = args
+                .fields
+                .iter_mut()
+                .find(|(n, _)| *n == f.name)
+                .ok_or_else(|| anyhow!("missing field argument `{}`", f.name))?;
+            storage.domain_from_c_order(&outputs[oi]);
+            oi += 1;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_paths() {
+        let be = PjrtAotBackend::new().unwrap();
+        let p = be.artifact_path("hdiff", [64, 64, 16]);
+        assert!(p.to_string_lossy().ends_with("hdiff_64x64x16.hlo.txt"));
+        let bev = PjrtAotBackend::new().unwrap().with_variant("pallas");
+        let pv = bev.artifact_path("hdiff", [8, 8, 4]);
+        assert!(pv.to_string_lossy().ends_with("hdiff__pallas_8x8x4.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_artifact_reports_make_hint() {
+        let ir = crate::analysis::compile_source(
+            "stencil ghost_stencil(a: Field<f64>, b: Field<f64>) {\n\
+               with computation(PARALLEL), interval(...) { b = a; }\n\
+             }",
+            "ghost_stencil",
+            &std::collections::BTreeMap::new(),
+        )
+        .unwrap();
+        let mut be = PjrtAotBackend::new().unwrap();
+        let mut a = crate::storage::Storage::with_halo([2, 2, 2], 0);
+        let mut b = crate::storage::Storage::with_halo([2, 2, 2], 0);
+        let mut refs: Vec<(&str, &mut crate::storage::Storage)> =
+            vec![("a", &mut a), ("b", &mut b)];
+        let err = be
+            .run(&ir, &mut StencilArgs { fields: &mut refs, scalars: &[], domain: [2, 2, 2] })
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,304 @@
+//! Slot-resolved stencil programs and the execution environment shared by
+//! the interpreting backends (`debug`, `vector`).
+
+use super::cexpr::CExpr;
+use crate::dsl::ast::{Interval, IterationPolicy};
+use crate::ir::implir::{Extent, StencilIr};
+use crate::storage::{Storage, StorageInfo};
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// Per-slot metadata. Parameters occupy the first `num_params` slots in
+/// declaration order; temporaries follow.
+#[derive(Debug, Clone)]
+pub struct SlotInfo {
+    pub name: String,
+    pub is_temp: bool,
+    /// Allocation extent for temporaries; halo requirement for params.
+    pub extent: Extent,
+}
+
+/// A stage with its expression compiled to slots.
+#[derive(Debug, Clone)]
+pub struct CStage {
+    pub target: usize,
+    pub expr: CExpr,
+    pub interval: Interval,
+    pub extent: Extent,
+}
+
+#[derive(Debug, Clone)]
+pub struct CMultistage {
+    pub policy: IterationPolicy,
+    pub stages: Vec<CStage>,
+}
+
+/// A fully slot-resolved program, independent of any particular domain.
+#[derive(Debug, Clone)]
+pub struct Program {
+    pub slots: Vec<SlotInfo>,
+    pub num_params: usize,
+    pub scalar_names: Vec<String>,
+    pub multistages: Vec<CMultistage>,
+}
+
+impl Program {
+    pub fn compile(ir: &StencilIr) -> Result<Program> {
+        let mut slots = Vec::new();
+        let mut slot_index = HashMap::new();
+        for f in &ir.fields {
+            slot_index.insert(f.name.clone(), slots.len());
+            slots.push(SlotInfo { name: f.name.clone(), is_temp: false, extent: f.extent });
+        }
+        let num_params = slots.len();
+        for t in &ir.temporaries {
+            slot_index.insert(t.name.clone(), slots.len());
+            slots.push(SlotInfo { name: t.name.clone(), is_temp: true, extent: t.extent });
+        }
+        let scalar_names: Vec<String> = ir.scalars.iter().map(|s| s.name.clone()).collect();
+        let scalar_index: HashMap<String, usize> = scalar_names
+            .iter()
+            .enumerate()
+            .map(|(i, n)| (n.clone(), i))
+            .collect();
+
+        let mut multistages = Vec::new();
+        for ms in &ir.multistages {
+            let mut stages = Vec::new();
+            for st in &ms.stages {
+                let target = *slot_index
+                    .get(&st.stmt.target)
+                    .ok_or_else(|| anyhow::anyhow!("unbound target `{}`", st.stmt.target))?;
+                let expr = CExpr::compile(&st.stmt.value, &slot_index, &scalar_index)?;
+                stages.push(CStage { target, expr, interval: st.interval, extent: st.extent });
+            }
+            multistages.push(CMultistage { policy: ms.policy, stages });
+        }
+        Ok(Program { slots, num_params, scalar_names, multistages })
+    }
+}
+
+/// Execution environment: owns every field slot for the duration of a run.
+/// Parameter storages are moved in (swapped) so evaluation can read any
+/// slot through `&self` while writes go through `&mut self`.
+pub struct Env {
+    pub storages: Vec<Storage>,
+    pub scalars: Vec<f64>,
+    pub domain: [usize; 3],
+}
+
+impl Env {
+    /// Build an environment: takes the caller's parameter storages (swapped
+    /// out of the slice) and allocates temporaries sized for `domain`.
+    pub fn build(
+        program: &Program,
+        fields: &mut [(&str, &mut Storage)],
+        scalars: &[(&str, f64)],
+        domain: [usize; 3],
+    ) -> Result<Env> {
+        let mut storages = Vec::with_capacity(program.slots.len());
+        for (idx, slot) in program.slots.iter().enumerate() {
+            if idx < program.num_params {
+                let pos = fields
+                    .iter()
+                    .position(|(n, _)| *n == slot.name)
+                    .ok_or_else(|| anyhow::anyhow!("missing field argument `{}`", slot.name))?;
+                let taken = std::mem::replace(
+                    fields[pos].1,
+                    Storage::zeros(StorageInfo::new([0, 0, 0], [(0, 0); 3])),
+                );
+                storages.push(taken);
+            } else {
+                // Temporary: allocate with its analysis extent as halo.
+                let e = slot.extent;
+                let info = StorageInfo::new(
+                    domain,
+                    [
+                        ((-e.i.0) as usize, e.i.1 as usize),
+                        ((-e.j.0) as usize, e.j.1 as usize),
+                        ((-e.k.0) as usize, e.k.1 as usize),
+                    ],
+                );
+                storages.push(Storage::zeros(info));
+            }
+        }
+        let mut scalar_vals = Vec::with_capacity(program.scalar_names.len());
+        for name in &program.scalar_names {
+            let v = scalars
+                .iter()
+                .find(|(n, _)| n == name)
+                .map(|(_, v)| *v)
+                .ok_or_else(|| anyhow::anyhow!("missing scalar argument `{name}`"))?;
+            scalar_vals.push(v);
+        }
+        Ok(Env { storages, scalars: scalar_vals, domain })
+    }
+
+    /// Return parameter storages to the caller (inverse of `build`).
+    pub fn restore(mut self, program: &Program, fields: &mut [(&str, &mut Storage)]) {
+        for idx in (0..program.num_params).rev() {
+            let name = &program.slots[idx].name;
+            let pos = fields
+                .iter()
+                .position(|(n, _)| n == name)
+                .expect("field disappeared during run");
+            let storage = std::mem::replace(
+                &mut self.storages[idx],
+                Storage::zeros(StorageInfo::new([0, 0, 0], [(0, 0); 3])),
+            );
+            *fields[pos].1 = storage;
+        }
+    }
+
+    /// Resolve a stage's vertical range against the domain, clamped.
+    pub fn krange(&self, interval: &Interval) -> (i64, i64) {
+        let (lo, hi) = interval.resolve(self.domain[2]);
+        (lo.max(0), hi.min(self.domain[2] as i64))
+    }
+}
+
+/// Validate that each parameter storage provides the halo the IR requires
+/// and covers the domain — the run-time checks responsible for the paper's
+/// Fig. 3 constant per-call overhead (solid vs dashed lines).
+pub fn validate_args(
+    ir: &StencilIr,
+    fields: &[(&str, &mut Storage)],
+    scalars: &[(&str, f64)],
+    domain: [usize; 3],
+) -> Result<()> {
+    for f in &ir.fields {
+        let (_, storage) = fields
+            .iter()
+            .find(|(n, _)| *n == f.name)
+            .ok_or_else(|| anyhow::anyhow!("missing field argument `{}`", f.name))?;
+        let shape = storage.info.shape;
+        for ax in 0..3 {
+            if shape[ax] < domain[ax] {
+                bail!(
+                    "field `{}` shape {:?} smaller than domain {:?}",
+                    f.name,
+                    shape,
+                    domain
+                );
+            }
+        }
+        let halo = storage.info.halo;
+        let need = f.extent;
+        let have = [
+            (halo[0].0 as i32, halo[0].1 as i32),
+            (halo[1].0 as i32, halo[1].1 as i32),
+            (halo[2].0 as i32, halo[2].1 as i32),
+        ];
+        let needs = [
+            ((-need.i.0), need.i.1),
+            ((-need.j.0), need.j.1),
+            ((-need.k.0), need.k.1),
+        ];
+        for ax in 0..3 {
+            if have[ax].0 < needs[ax].0 || have[ax].1 < needs[ax].1 {
+                bail!(
+                    "field `{}` halo {:?} insufficient for required extent {} (axis {})",
+                    f.name,
+                    halo,
+                    need,
+                    ax
+                );
+            }
+        }
+        if storage.info.dtype != f.dtype {
+            bail!(
+                "field `{}` dtype {} does not match declared {}",
+                f.name,
+                storage.info.dtype,
+                f.dtype
+            );
+        }
+    }
+    for s in &ir.scalars {
+        if !scalars.iter().any(|(n, _)| *n == s.name) {
+            bail!("missing scalar argument `{}`", s.name);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::compile_source;
+    use std::collections::BTreeMap;
+
+    const SRC: &str = "
+        stencil sm(a: Field<f64>, b: Field<f64>; w: f64) {
+            with computation(PARALLEL), interval(...) {
+                t = (a[-1,0,0] + a[1,0,0]) * 0.5;
+                b = t * w;
+            }
+        }";
+
+    fn ir() -> StencilIr {
+        compile_source(SRC, "sm", &BTreeMap::new()).unwrap()
+    }
+
+    #[test]
+    fn program_compiles_slots() {
+        let p = Program::compile(&ir()).unwrap();
+        assert_eq!(p.num_params, 2);
+        assert_eq!(p.slots.len(), 3);
+        assert!(p.slots[2].is_temp);
+        assert_eq!(p.scalar_names, vec!["w".to_string()]);
+        assert_eq!(p.multistages.len(), 1);
+        assert_eq!(p.multistages[0].stages.len(), 2);
+    }
+
+    #[test]
+    fn env_build_restore_roundtrip() {
+        let ir = ir();
+        let p = Program::compile(&ir).unwrap();
+        let mut a = Storage::with_horizontal_halo([4, 4, 2], 1);
+        a.set(0, 0, 0, 3.0);
+        let mut b = Storage::with_horizontal_halo([4, 4, 2], 1);
+        let mut fields: Vec<(&str, &mut Storage)> =
+            vec![("a", &mut a), ("b", &mut b)];
+        let env = Env::build(&p, &mut fields, &[("w", 2.0)], [4, 4, 2]).unwrap();
+        assert_eq!(env.storages.len(), 3);
+        assert_eq!(env.scalars, vec![2.0]);
+        env.restore(&p, &mut fields);
+        assert_eq!(a.get(0, 0, 0), 3.0); // storage returned intact
+    }
+
+    #[test]
+    fn validate_rejects_insufficient_halo() {
+        let ir = ir();
+        let mut a = Storage::with_horizontal_halo([4, 4, 2], 0); // needs 1
+        let mut b = Storage::with_horizontal_halo([4, 4, 2], 0);
+        let fields: Vec<(&str, &mut Storage)> = vec![("a", &mut a), ("b", &mut b)];
+        let r = validate_args(&ir, &fields, &[("w", 1.0)], [4, 4, 2]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn validate_rejects_missing_scalar() {
+        let ir = ir();
+        let mut a = Storage::with_horizontal_halo([4, 4, 2], 1);
+        let mut b = Storage::with_horizontal_halo([4, 4, 2], 1);
+        let fields: Vec<(&str, &mut Storage)> = vec![("a", &mut a), ("b", &mut b)];
+        assert!(validate_args(&ir, &fields, &[], [4, 4, 2]).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_small_storage() {
+        let ir = ir();
+        let mut a = Storage::with_horizontal_halo([2, 4, 2], 1);
+        let mut b = Storage::with_horizontal_halo([4, 4, 2], 1);
+        let fields: Vec<(&str, &mut Storage)> = vec![("a", &mut a), ("b", &mut b)];
+        assert!(validate_args(&ir, &fields, &[("w", 1.0)], [4, 4, 2]).is_err());
+    }
+
+    #[test]
+    fn krange_clamps() {
+        let env = Env { storages: vec![], scalars: vec![], domain: [4, 4, 8] };
+        let (lo, hi) = env.krange(&Interval::full());
+        assert_eq!((lo, hi), (0, 8));
+    }
+}

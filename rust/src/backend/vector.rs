@@ -1,0 +1,573 @@
+//! The `vector` backend: region-vectorized evaluation.
+//!
+//! The analog of GT4Py's `numpy` backend (§2.3): each stage's expression is
+//! evaluated with whole-region elementwise operations, materializing a
+//! buffer per expression node exactly as NumPy materializes array
+//! temporaries. Faster than `debug` by an order of magnitude or more, but
+//! still far from the compiled backends because every intermediate value
+//! makes a round trip through memory — the Fig. 3 middle tier.
+//!
+//! Perf notes (EXPERIMENTS.md §Perf): PARALLEL stages evaluate their whole
+//! 3-D region in one shot with the storage's stride-1 axis (K for the IJK
+//! layout) innermost, so gathers/scatters of zero-k-offset rows degenerate
+//! to `copy_from_slice`. Sequential (FORWARD/BACKWARD) stages evaluate one
+//! plane per level — the vertical dependence forbids more.
+
+use super::cexpr::{apply_bin, apply_builtin1, apply_builtin2, CExpr};
+use super::program::{Env, Program};
+use super::{Backend, StencilArgs};
+use crate::dsl::ast::{BinOp, IterationPolicy};
+use crate::ir::implir::StencilIr;
+use anyhow::Result;
+
+#[derive(Default)]
+pub struct VectorBackend {
+    /// Programs keyed by stencil fingerprint (backend instances are shared
+    /// across stencils by the coordinator).
+    programs: std::collections::HashMap<u64, Program>,
+    pool: Pool,
+}
+
+impl VectorBackend {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Recycles region buffers between expression nodes and stages.
+#[derive(Default)]
+struct Pool {
+    free: Vec<Vec<f64>>,
+}
+
+impl Pool {
+    fn take(&mut self, n: usize) -> Vec<f64> {
+        match self.free.pop() {
+            Some(mut b) => {
+                b.clear();
+                b.resize(n, 0.0);
+                b
+            }
+            None => vec![0.0; n],
+        }
+    }
+    fn put(&mut self, b: Vec<f64>) {
+        if self.free.len() < 48 {
+            self.free.push(b);
+        }
+    }
+}
+
+/// A 3-D evaluation region `[i0,i1) x [j0,j1) x [k0,k1)`.
+#[derive(Clone, Copy)]
+struct Region {
+    i0: i64,
+    i1: i64,
+    j0: i64,
+    j1: i64,
+    k0: i64,
+    k1: i64,
+}
+
+impl Region {
+    #[inline]
+    fn wk(&self) -> usize {
+        (self.k1 - self.k0) as usize
+    }
+    fn len(&self) -> usize {
+        ((self.i1 - self.i0) * (self.j1 - self.j0)) as usize * self.wk()
+    }
+}
+
+/// Evaluation result: a broadcast scalar or a materialized region buffer.
+enum Val {
+    S(f64),
+    B(Vec<f64>),
+}
+
+fn gather(env: &Env, slot: usize, off: [i32; 3], r: Region, pool: &mut Pool) -> Vec<f64> {
+    let s = &env.storages[slot];
+    let raw = s.raw();
+    let st = s.raw_strides();
+    let (s0, s1, s2) = (st[0] as i64, st[1] as i64, st[2] as i64);
+    let org = s.raw_origin() as i64;
+    let wk = r.wk();
+    let mut buf = pool.take(r.len());
+    let mut idx = 0;
+    if s2 == 1 {
+        // stride-1 K rows: bulk copies
+        for i in r.i0..r.i1 {
+            let ibase = org + (i + off[0] as i64) * s0;
+            for j in r.j0..r.j1 {
+                let base =
+                    (ibase + (j + off[1] as i64) * s1 + (r.k0 + off[2] as i64)) as usize;
+                buf[idx..idx + wk].copy_from_slice(&raw[base..base + wk]);
+                idx += wk;
+            }
+        }
+    } else {
+        for i in r.i0..r.i1 {
+            let ibase = org + (i + off[0] as i64) * s0;
+            for j in r.j0..r.j1 {
+                let jbase = ibase + (j + off[1] as i64) * s1;
+                for k in r.k0..r.k1 {
+                    buf[idx] = raw[(jbase + (k + off[2] as i64) * s2) as usize];
+                    idx += 1;
+                }
+            }
+        }
+    }
+    buf
+}
+
+fn scatter(env: &mut Env, slot: usize, r: Region, buf: &[f64]) {
+    let s = &mut env.storages[slot];
+    let st = s.raw_strides();
+    let (s0, s1, s2) = (st[0] as i64, st[1] as i64, st[2] as i64);
+    let org = s.raw_origin() as i64;
+    let raw = s.raw_mut();
+    let wk = r.wk();
+    let mut idx = 0;
+    if s2 == 1 {
+        for i in r.i0..r.i1 {
+            let ibase = org + i * s0;
+            for j in r.j0..r.j1 {
+                let base = (ibase + j * s1 + r.k0) as usize;
+                raw[base..base + wk].copy_from_slice(&buf[idx..idx + wk]);
+                idx += wk;
+            }
+        }
+    } else {
+        for i in r.i0..r.i1 {
+            let ibase = org + i * s0;
+            for j in r.j0..r.j1 {
+                let jbase = ibase + j * s1;
+                for k in r.k0..r.k1 {
+                    raw[(jbase + k * s2) as usize] = buf[idx];
+                    idx += 1;
+                }
+            }
+        }
+    }
+}
+
+/// Elementwise binary op with buffer reuse; specializes the hot arithmetic
+/// operators so the inner loops are branch-free and auto-vectorizable.
+fn bin_bb(op: BinOp, mut a: Vec<f64>, b: &[f64]) -> Vec<f64> {
+    match op {
+        BinOp::Add => {
+            for (x, y) in a.iter_mut().zip(b) {
+                *x += *y;
+            }
+        }
+        BinOp::Sub => {
+            for (x, y) in a.iter_mut().zip(b) {
+                *x -= *y;
+            }
+        }
+        BinOp::Mul => {
+            for (x, y) in a.iter_mut().zip(b) {
+                *x *= *y;
+            }
+        }
+        BinOp::Div => {
+            for (x, y) in a.iter_mut().zip(b) {
+                *x /= *y;
+            }
+        }
+        _ => {
+            for (x, y) in a.iter_mut().zip(b) {
+                *x = apply_bin(op, *x, *y);
+            }
+        }
+    }
+    a
+}
+
+fn eval_region(env: &Env, e: &CExpr, r: Region, pool: &mut Pool) -> Val {
+    match e {
+        CExpr::Const(v) => Val::S(*v),
+        CExpr::Scalar(ix) => Val::S(env.scalars[*ix]),
+        CExpr::Field { slot, off } => Val::B(gather(env, *slot, *off, r, pool)),
+        CExpr::Neg(a) => match eval_region(env, a, r, pool) {
+            Val::S(v) => Val::S(-v),
+            Val::B(mut b) => {
+                for x in &mut b {
+                    *x = -*x;
+                }
+                Val::B(b)
+            }
+        },
+        CExpr::Not(a) => match eval_region(env, a, r, pool) {
+            Val::S(v) => Val::S(if v != 0.0 { 0.0 } else { 1.0 }),
+            Val::B(mut b) => {
+                for x in &mut b {
+                    *x = if *x != 0.0 { 0.0 } else { 1.0 };
+                }
+                Val::B(b)
+            }
+        },
+        CExpr::Bin(op, a, b) => {
+            let va = eval_region(env, a, r, pool);
+            let vb = eval_region(env, b, r, pool);
+            match (va, vb) {
+                (Val::S(x), Val::S(y)) => Val::S(apply_bin(*op, x, y)),
+                (Val::S(x), Val::B(mut by)) => {
+                    for v in &mut by {
+                        *v = apply_bin(*op, x, *v);
+                    }
+                    Val::B(by)
+                }
+                (Val::B(mut bx), Val::S(y)) => {
+                    match op {
+                        BinOp::Add => bx.iter_mut().for_each(|v| *v += y),
+                        BinOp::Sub => bx.iter_mut().for_each(|v| *v -= y),
+                        BinOp::Mul => bx.iter_mut().for_each(|v| *v *= y),
+                        BinOp::Div => bx.iter_mut().for_each(|v| *v /= y),
+                        _ => bx.iter_mut().for_each(|v| *v = apply_bin(*op, *v, y)),
+                    }
+                    Val::B(bx)
+                }
+                (Val::B(bx), Val::B(by)) => {
+                    let out = bin_bb(*op, bx, &by);
+                    pool.put(by);
+                    Val::B(out)
+                }
+            }
+        }
+        CExpr::Select(c, t, f) => {
+            // NumPy `where` semantics: both branches evaluated everywhere.
+            let vc = eval_region(env, c, r, pool);
+            let vt = eval_region(env, t, r, pool);
+            let vf = eval_region(env, f, r, pool);
+            match vc {
+                Val::S(cv) => {
+                    let keep = cv != 0.0;
+                    let (sel, other) = if keep { (vt, vf) } else { (vf, vt) };
+                    if let Val::B(b) = other {
+                        pool.put(b);
+                    }
+                    sel
+                }
+                Val::B(cb) => {
+                    let n = cb.len();
+                    let mut out = pool.take(n);
+                    match (&vt, &vf) {
+                        (Val::B(tb), Val::B(fb)) => {
+                            for i in 0..n {
+                                out[i] = if cb[i] != 0.0 { tb[i] } else { fb[i] };
+                            }
+                        }
+                        (Val::B(tb), Val::S(fv)) => {
+                            for i in 0..n {
+                                out[i] = if cb[i] != 0.0 { tb[i] } else { *fv };
+                            }
+                        }
+                        (Val::S(tv), Val::B(fb)) => {
+                            for i in 0..n {
+                                out[i] = if cb[i] != 0.0 { *tv } else { fb[i] };
+                            }
+                        }
+                        (Val::S(tv), Val::S(fv)) => {
+                            for i in 0..n {
+                                out[i] = if cb[i] != 0.0 { *tv } else { *fv };
+                            }
+                        }
+                    }
+                    pool.put(cb);
+                    if let Val::B(b) = vt {
+                        pool.put(b);
+                    }
+                    if let Val::B(b) = vf {
+                        pool.put(b);
+                    }
+                    Val::B(out)
+                }
+            }
+        }
+        CExpr::Call1(f, a) => match eval_region(env, a, r, pool) {
+            Val::S(v) => Val::S(apply_builtin1(*f, v)),
+            Val::B(mut b) => {
+                for x in &mut b {
+                    *x = apply_builtin1(*f, *x);
+                }
+                Val::B(b)
+            }
+        },
+        CExpr::Call2(f, a, b) => {
+            let va = eval_region(env, a, r, pool);
+            let vb = eval_region(env, b, r, pool);
+            match (va, vb) {
+                (Val::S(x), Val::S(y)) => Val::S(apply_builtin2(*f, x, y)),
+                (Val::S(x), Val::B(mut by)) => {
+                    for v in &mut by {
+                        *v = apply_builtin2(*f, x, *v);
+                    }
+                    Val::B(by)
+                }
+                (Val::B(mut bx), Val::S(y)) => {
+                    for v in &mut bx {
+                        *v = apply_builtin2(*f, *v, y);
+                    }
+                    Val::B(bx)
+                }
+                (Val::B(mut bx), Val::B(by)) => {
+                    for (v, w) in bx.iter_mut().zip(&by) {
+                        *v = apply_builtin2(*f, *v, *w);
+                    }
+                    pool.put(by);
+                    Val::B(bx)
+                }
+            }
+        }
+    }
+}
+
+fn run_stage_region(
+    env: &mut Env,
+    stage: &super::program::CStage,
+    k0: i64,
+    k1: i64,
+    pool: &mut Pool,
+) {
+    let [ni, nj, _] = env.domain;
+    let r = Region {
+        i0: stage.extent.i.0 as i64,
+        i1: ni as i64 + stage.extent.i.1 as i64,
+        j0: stage.extent.j.0 as i64,
+        j1: nj as i64 + stage.extent.j.1 as i64,
+        k0,
+        k1,
+    };
+    let v = eval_region(env, &stage.expr, r, pool);
+    match v {
+        Val::S(s) => {
+            let mut buf = pool.take(r.len());
+            buf.fill(s);
+            scatter(env, stage.target, r, &buf);
+            pool.put(buf);
+        }
+        Val::B(b) => {
+            scatter(env, stage.target, r, &b);
+            pool.put(b);
+        }
+    }
+}
+
+fn run_program(program: &Program, env: &mut Env, pool: &mut Pool) {
+    for ms in &program.multistages {
+        match ms.policy {
+            IterationPolicy::Parallel => {
+                // Whole 3-D region per stage: one gather/op/scatter pass.
+                for st in &ms.stages {
+                    let (k0, k1) = env.krange(&st.interval);
+                    if k0 < k1 {
+                        run_stage_region(env, st, k0, k1, pool);
+                    }
+                }
+            }
+            IterationPolicy::Forward | IterationPolicy::Backward => {
+                let ranges: Vec<(i64, i64)> =
+                    ms.stages.iter().map(|s| env.krange(&s.interval)).collect();
+                let kmin = ranges.iter().map(|r| r.0).min().unwrap_or(0);
+                let kmax = ranges.iter().map(|r| r.1).max().unwrap_or(0);
+                let ks: Vec<i64> = if ms.policy == IterationPolicy::Forward {
+                    (kmin..kmax).collect()
+                } else {
+                    (kmin..kmax).rev().collect()
+                };
+                for k in ks {
+                    for (st, (k0, k1)) in ms.stages.iter().zip(&ranges) {
+                        if k >= *k0 && k < *k1 {
+                            run_stage_region(env, st, k, k + 1, pool);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl Backend for VectorBackend {
+    fn name(&self) -> &'static str {
+        "vector"
+    }
+
+    fn prepare(&mut self, ir: &StencilIr) -> Result<()> {
+        if !self.programs.contains_key(&ir.fingerprint) {
+            self.programs.insert(ir.fingerprint, Program::compile(ir)?);
+        }
+        Ok(())
+    }
+
+    fn run(&mut self, ir: &StencilIr, args: &mut StencilArgs) -> Result<()> {
+        self.prepare(ir)?;
+        let program = &self.programs[&ir.fingerprint];
+        let mut env = Env::build(program, args.fields, args.scalars, args.domain)?;
+        run_program(program, &mut env, &mut self.pool);
+        env.restore(program, args.fields);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::compile_source;
+    use crate::backend::debug::DebugBackend;
+    use crate::storage::Storage;
+    use std::collections::BTreeMap;
+
+    /// Run the same stencil through `debug` and `vector` on identical
+    /// pseudo-random inputs and require bitwise-equal outputs.
+    fn assert_backends_agree(src: &str, name: &str, out_names: &[&str], domain: [usize; 3]) {
+        let ir = compile_source(src, name, &BTreeMap::new()).unwrap();
+        let halo = 3usize;
+        // deterministic LCG inputs
+        let mut seed = 42u64;
+        let mut rand = move || {
+            seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((seed >> 33) as f64) / (u32::MAX as f64) - 0.5
+        };
+        let mut make = |_: &str| Storage::from_fn_extended(domain, halo, |_, _, _| rand());
+        let names: Vec<String> = ir.fields.iter().map(|f| f.name.clone()).collect();
+        let mut d_fields: Vec<Storage> = names.iter().map(|n| make(n)).collect();
+        let mut v_fields: Vec<Storage> = d_fields.clone();
+        let scalars: Vec<(&str, f64)> =
+            ir.scalars.iter().map(|s| (s.name.as_str(), 0.37)).collect();
+
+        {
+            let mut refs: Vec<(&str, &mut Storage)> = names
+                .iter()
+                .map(|n| n.as_str())
+                .zip(d_fields.iter_mut())
+                .collect();
+            let mut be = DebugBackend::new();
+            be.run(&ir, &mut StencilArgs { fields: &mut refs, scalars: &scalars, domain })
+                .unwrap();
+        }
+        {
+            let mut refs: Vec<(&str, &mut Storage)> = names
+                .iter()
+                .map(|n| n.as_str())
+                .zip(v_fields.iter_mut())
+                .collect();
+            let mut be = VectorBackend::new();
+            be.run(&ir, &mut StencilArgs { fields: &mut refs, scalars: &scalars, domain })
+                .unwrap();
+        }
+        for (n, (d, v)) in names.iter().zip(d_fields.iter().zip(&v_fields)) {
+            if out_names.contains(&n.as_str()) {
+                assert_eq!(d.max_abs_diff(v), 0.0, "field `{n}` differs");
+            }
+        }
+    }
+
+    #[test]
+    fn agrees_on_laplacian() {
+        assert_backends_agree(
+            "function lap(p) {\n\
+               return -4.0*p[0,0,0] + p[-1,0,0] + p[1,0,0] + p[0,-1,0] + p[0,1,0];\n\
+             }\n\
+             stencil s(a: Field<f64>, out: Field<f64>) {\n\
+               with computation(PARALLEL), interval(...) { out = lap(lap(a)); }\n\
+             }",
+            "s",
+            &["out"],
+            [7, 6, 3],
+        );
+    }
+
+    #[test]
+    fn agrees_on_sequential_solver() {
+        assert_backends_agree(
+            "stencil tri(a: Field<f64>, b: Field<f64>, x: Field<f64>) {\n\
+               with computation(FORWARD) {\n\
+                 interval(0, 1) { x = a; }\n\
+                 interval(1, None) { x = x[0,0,-1] * 0.5 + a * b; }\n\
+               }\n\
+               with computation(BACKWARD) {\n\
+                 interval(-1, None) { b = x; }\n\
+                 interval(0, -1) { b = b[0,0,1] * 0.25 + x; }\n\
+               }\n\
+             }",
+            "tri",
+            &["b", "x"],
+            [5, 4, 6],
+        );
+    }
+
+    #[test]
+    fn agrees_on_conditionals() {
+        assert_backends_agree(
+            "stencil s(a: Field<f64>, out: Field<f64>; lim: f64) {\n\
+               with computation(PARALLEL), interval(...) {\n\
+                 g = a[1,0,0] - a[-1,0,0];\n\
+                 out = g * a > lim ? g : lim;\n\
+                 if out > 0.0 { out = out * 2.0; } else { out = a; }\n\
+               }\n\
+             }",
+            "s",
+            &["out"],
+            [6, 6, 2],
+        );
+    }
+
+    #[test]
+    fn agrees_on_builtins() {
+        assert_backends_agree(
+            "stencil s(a: Field<f64>, out: Field<f64>) {\n\
+               with computation(PARALLEL), interval(...) {\n\
+                 out = max(abs(a[1,0,0]), abs(a[-1,0,0])) + sqrt(abs(a)) + exp(min(a, 0.5));\n\
+               }\n\
+             }",
+            "s",
+            &["out"],
+            [5, 5, 4],
+        );
+    }
+
+    #[test]
+    fn scalar_const_folding_matches() {
+        assert_backends_agree(
+            "stencil s(a: Field<f64>, out: Field<f64>; w: f64) {\n\
+               with computation(PARALLEL), interval(...) { out = a * (w * 2.0 + 1.0); }\n\
+             }",
+            "s",
+            &["out"],
+            [4, 4, 2],
+        );
+    }
+
+    #[test]
+    fn agrees_with_k_offsets_in_parallel() {
+        // Non-zero k offsets exercise the 3-D region gather path.
+        assert_backends_agree(
+            "stencil s(a: Field<f64>, out: Field<f64>) {\n\
+               with computation(PARALLEL), interval(...) {\n\
+                 t = a[0,0,1] - a[0,0,-1];\n\
+                 out = t[1,0,0] + t[-1,0,0] + a[0,1,1];\n\
+               }\n\
+             }",
+            "s",
+            &["out"],
+            [6, 5, 4],
+        );
+    }
+
+    #[test]
+    fn agrees_on_interval_split_regions() {
+        assert_backends_agree(
+            "stencil s(a: Field<f64>, b: Field<f64>) {\n\
+               with computation(PARALLEL) {\n\
+                 interval(0, 2) { b = a * 10.0; }\n\
+                 interval(2, -1) { b = a * 20.0; }\n\
+                 interval(-1, None) { b = a * 30.0; }\n\
+               }\n\
+             }",
+            "s",
+            &["b"],
+            [4, 4, 7],
+        );
+    }
+}

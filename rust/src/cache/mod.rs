@@ -1,0 +1,143 @@
+//! Compilation caching (paper §2.3).
+//!
+//! GT4Py "provides a caching mechanism to create unique hash identifiers
+//! for every stencil implementation ... based on fingerprinting in such a
+//! way that code reformatting would not trigger a new compilation."
+//!
+//! gt4rs splits this into:
+//! * the fingerprint itself — [`crate::analysis::fingerprint_ir`], a FNV-1a
+//!   over the canonical (formatting-free) implementation IR including the
+//!   folded external values;
+//! * an in-memory stencil cache ([`StencilCache`]) used by the coordinator
+//!   so re-compiling an unchanged source is a hash lookup;
+//! * an on-disk artifact store ([`DiskCache`]) keyed by fingerprint, used
+//!   to persist generated HLO text across processes (the analog of
+//!   GT4Py's `.gt_cache` directory).
+
+use crate::ir::implir::StencilIr;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// In-memory cache of analyzed stencils keyed by fingerprint.
+#[derive(Default)]
+pub struct StencilCache {
+    by_fingerprint: HashMap<u64, StencilIr>,
+    pub hits: usize,
+    pub misses: usize,
+}
+
+impl StencilCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get an analyzed stencil, or analyze it with `f` and memoize.
+    pub fn get_or_insert(
+        &mut self,
+        fingerprint: u64,
+        f: impl FnOnce() -> Result<StencilIr>,
+    ) -> Result<&StencilIr> {
+        if self.by_fingerprint.contains_key(&fingerprint) {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
+            let ir = f()?;
+            self.by_fingerprint.insert(fingerprint, ir);
+        }
+        Ok(&self.by_fingerprint[&fingerprint])
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_fingerprint.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_fingerprint.is_empty()
+    }
+}
+
+/// On-disk cache directory: text blobs keyed by `(kind, fingerprint)`.
+pub struct DiskCache {
+    root: PathBuf,
+}
+
+impl DiskCache {
+    /// Default location, overridable with `GT4RS_CACHE_DIR`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("GT4RS_CACHE_DIR")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from(".gt4rs_cache"))
+    }
+
+    pub fn new(root: impl AsRef<Path>) -> Result<DiskCache> {
+        let root = root.as_ref().to_path_buf();
+        std::fs::create_dir_all(&root)
+            .with_context(|| format!("creating cache dir {}", root.display()))?;
+        Ok(DiskCache { root })
+    }
+
+    fn path(&self, kind: &str, fingerprint: u64) -> PathBuf {
+        self.root.join(format!("{kind}_{fingerprint:016x}.txt"))
+    }
+
+    pub fn get(&self, kind: &str, fingerprint: u64) -> Option<String> {
+        std::fs::read_to_string(self.path(kind, fingerprint)).ok()
+    }
+
+    pub fn put(&self, kind: &str, fingerprint: u64, data: &str) -> Result<()> {
+        let p = self.path(kind, fingerprint);
+        // Write-then-rename for atomicity under concurrent builds.
+        let tmp = p.with_extension("tmp");
+        std::fs::write(&tmp, data)
+            .with_context(|| format!("writing cache file {}", tmp.display()))?;
+        std::fs::rename(&tmp, &p)
+            .with_context(|| format!("publishing cache file {}", p.display()))?;
+        Ok(())
+    }
+
+    pub fn contains(&self, kind: &str, fingerprint: u64) -> bool {
+        self.path(kind, fingerprint).is_file()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::compile_source;
+    use std::collections::BTreeMap;
+
+    const SRC: &str = "stencil c(a: Field<f64>, b: Field<f64>) {\n\
+        with computation(PARALLEL), interval(...) { b = a; }\n\
+    }";
+
+    #[test]
+    fn stencil_cache_hits_on_same_fingerprint() {
+        let ir = compile_source(SRC, "c", &BTreeMap::new()).unwrap();
+        let fp = ir.fingerprint;
+        let mut cache = StencilCache::new();
+        cache.get_or_insert(fp, || Ok(ir.clone())).unwrap();
+        cache
+            .get_or_insert(fp, || panic!("should not recompile"))
+            .unwrap();
+        assert_eq!(cache.hits, 1);
+        assert_eq!(cache.misses, 1);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn disk_cache_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("gt4rs_cache_test_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cache = DiskCache::new(&dir).unwrap();
+        assert!(!cache.contains("hlo", 42));
+        assert_eq!(cache.get("hlo", 42), None);
+        cache.put("hlo", 42, "HloModule m").unwrap();
+        assert!(cache.contains("hlo", 42));
+        assert_eq!(cache.get("hlo", 42).unwrap(), "HloModule m");
+        // Different kind or fingerprint miss.
+        assert!(!cache.contains("hlo", 43));
+        assert!(!cache.contains("cpp", 42));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,114 @@
+//! Per-stencil, per-backend execution metrics.
+//!
+//! The coordinator records wall-clock timings split into *check* time (the
+//! run-time storage validation responsible for the paper's constant
+//! per-call overhead, Fig. 3 solid-vs-dashed) and *execute* time, so the
+//! overhead experiment is a first-class query.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Timing {
+    pub calls: u64,
+    pub checks: Duration,
+    pub execute: Duration,
+}
+
+impl Timing {
+    pub fn total(&self) -> Duration {
+        self.checks + self.execute
+    }
+
+    pub fn mean_execute(&self) -> Duration {
+        if self.calls == 0 {
+            Duration::ZERO
+        } else {
+            self.execute / self.calls as u32
+        }
+    }
+
+    pub fn mean_total(&self) -> Duration {
+        if self.calls == 0 {
+            Duration::ZERO
+        } else {
+            self.total() / self.calls as u32
+        }
+    }
+}
+
+/// Metrics registry keyed by `(stencil, backend)`.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    entries: BTreeMap<(String, String), Timing>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, stencil: &str, backend: &str, checks: Duration, execute: Duration) {
+        let e = self
+            .entries
+            .entry((stencil.to_string(), backend.to_string()))
+            .or_default();
+        e.calls += 1;
+        e.checks += checks;
+        e.execute += execute;
+    }
+
+    pub fn get(&self, stencil: &str, backend: &str) -> Option<&Timing> {
+        self.entries.get(&(stencil.to_string(), backend.to_string()))
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&(String, String), &Timing)> {
+        self.entries.iter()
+    }
+
+    /// Human-readable report table.
+    pub fn report(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "{:<24} {:<10} {:>8} {:>14} {:>14}",
+            "stencil", "backend", "calls", "mean exec", "mean checks"
+        );
+        for ((st, be), t) in &self.entries {
+            let _ = writeln!(
+                s,
+                "{:<24} {:<10} {:>8} {:>14?} {:>14?}",
+                st,
+                be,
+                t.calls,
+                t.mean_execute(),
+                if t.calls == 0 { Duration::ZERO } else { t.checks / t.calls as u32 }
+            );
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_averages() {
+        let mut m = Metrics::new();
+        m.record("hdiff", "xla", Duration::from_micros(100), Duration::from_micros(900));
+        m.record("hdiff", "xla", Duration::from_micros(100), Duration::from_micros(1100));
+        let t = m.get("hdiff", "xla").unwrap();
+        assert_eq!(t.calls, 2);
+        assert_eq!(t.mean_execute(), Duration::from_micros(1000));
+        assert_eq!(t.total(), Duration::from_micros(2200));
+        assert!(m.report().contains("hdiff"));
+    }
+
+    #[test]
+    fn missing_entry_is_none() {
+        let m = Metrics::new();
+        assert!(m.get("x", "y").is_none());
+    }
+}

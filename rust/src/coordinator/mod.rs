@@ -1,0 +1,344 @@
+//! The coordinator: the user-facing engine tying frontend, cache, backends
+//! and run-time checks together (the role `gtscript.stencil(...)` +
+//! generated stencil objects play in GT4Py).
+//!
+//! Responsibilities:
+//! * compile sources (or library stencils) through the pipeline, memoized
+//!   by a formatting-insensitive definition fingerprint;
+//! * dispatch runs to any registered backend, reusing backend instances so
+//!   their executable caches stay warm;
+//! * perform the run-time storage checks (layout/halo/dtype) the paper
+//!   attributes its small-domain constant overhead to — and allow turning
+//!   them off (`checks_enabled`), reproducing the Fig. 3 dashed lines;
+//! * collect per-(stencil, backend) metrics.
+
+pub mod metrics;
+
+use crate::analysis;
+use crate::backend::{self, Backend, StencilArgs};
+use crate::cache::StencilCache;
+use crate::dsl::parser::parse_module;
+use crate::ir::canon;
+use crate::ir::implir::StencilIr;
+use crate::stdlib;
+use crate::storage::{Storage, StorageInfo};
+use anyhow::{anyhow, Result};
+use metrics::Metrics;
+use std::collections::{BTreeMap, HashMap};
+use std::time::{Duration, Instant};
+
+/// Formatting-insensitive fingerprint of a stencil *definition* plus its
+/// externals — computable before analysis, used to memoize the pipeline.
+pub fn def_fingerprint(
+    src: &str,
+    stencil: &str,
+    externals: &BTreeMap<String, f64>,
+) -> Result<u64> {
+    let module = parse_module(src).map_err(|e| anyhow!("{e}"))?;
+    let def = module
+        .stencil(stencil)
+        .ok_or_else(|| anyhow!("no stencil `{stencil}` in module"))?;
+    let mut s = String::new();
+    use std::fmt::Write as _;
+    let _ = write!(s, "def {stencil};");
+    for f in &def.fields {
+        let _ = write!(s, "f {}:{};", f.name, f.dtype);
+    }
+    for sc in &def.scalars {
+        let _ = write!(s, "s {}:{};", sc.name, sc.dtype);
+    }
+    for (k, v) in externals {
+        let _ = write!(s, "x {}={:016x};", k, v.to_bits());
+    }
+    for (k, v) in &module.extern_defaults {
+        let _ = write!(s, "d {}={:016x};", k, v.to_bits());
+    }
+    for c in &def.computations {
+        let _ = write!(s, "c {};", c.policy);
+        for b in &c.blocks {
+            let _ = write!(s, "i {};", b.interval);
+            canon::canon_stmts(&b.body, &mut s);
+        }
+    }
+    // Functions are part of the definition: include them canonically.
+    for func in &module.functions {
+        let _ = write!(s, "fn {}(", func.name);
+        for p in &func.params {
+            let _ = write!(s, "{p},");
+        }
+        let _ = write!(s, ");");
+        for (n, e) in &func.bindings {
+            let _ = write!(s, "let {n}=");
+            canon::canon_expr(e, &mut s);
+            s.push(';');
+        }
+        canon::canon_expr(&func.ret, &mut s);
+        s.push(';');
+    }
+    Ok(canon::fnv1a64(s.as_bytes()))
+}
+
+/// Statistics of one `run` call.
+#[derive(Debug, Clone, Copy)]
+pub struct RunStats {
+    pub checks: Duration,
+    pub execute: Duration,
+}
+
+impl RunStats {
+    pub fn total(&self) -> Duration {
+        self.checks + self.execute
+    }
+}
+
+/// The engine. One instance per thread (PJRT clients are not `Sync`).
+pub struct Coordinator {
+    backends: HashMap<String, Box<dyn Backend>>,
+    stencils: StencilCache,
+    /// Fingerprints by registered stencil name, for name-based dispatch.
+    by_name: HashMap<String, u64>,
+    /// Run-time storage validation (the paper's per-call checks).
+    pub checks_enabled: bool,
+    pub metrics: Metrics,
+}
+
+impl Default for Coordinator {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Coordinator {
+    pub fn new() -> Coordinator {
+        Coordinator {
+            backends: HashMap::new(),
+            stencils: StencilCache::new(),
+            by_name: HashMap::new(),
+            checks_enabled: true,
+            metrics: Metrics::new(),
+        }
+    }
+
+    /// Compile (or fetch from cache) a stencil from module source.
+    /// Returns the analyzed stencil's fingerprint.
+    pub fn compile_source(
+        &mut self,
+        src: &str,
+        stencil: &str,
+        externals: &BTreeMap<String, f64>,
+    ) -> Result<u64> {
+        let def_fp = def_fingerprint(src, stencil, externals)?;
+        let ir = self.stencils.get_or_insert(def_fp, || {
+            analysis::compile_source(src, stencil, externals).map_err(|e| anyhow!("{e}"))
+        })?;
+        let name = ir.name.clone();
+        self.by_name.insert(name, def_fp);
+        Ok(def_fp)
+    }
+
+    /// Compile a stencil from the standard library.
+    pub fn compile_library(&mut self, name: &str) -> Result<u64> {
+        let src = stdlib::source(name)
+            .ok_or_else(|| anyhow!("no library stencil named `{name}`"))?;
+        self.compile_source(src, name, &BTreeMap::new())
+    }
+
+    /// The analyzed IR for a previously compiled stencil.
+    pub fn ir(&mut self, fingerprint: u64) -> Result<StencilIr> {
+        Ok(self
+            .stencils
+            .get_or_insert(fingerprint, || {
+                Err(anyhow!("fingerprint {fingerprint:016x} not compiled"))
+            })?
+            .clone())
+    }
+
+    /// Fingerprint registered for a stencil name.
+    pub fn fingerprint_of(&self, name: &str) -> Option<u64> {
+        self.by_name.get(name).copied()
+    }
+
+    /// Cache statistics `(hits, misses)` of the stencil cache.
+    pub fn cache_stats(&self) -> (usize, usize) {
+        (self.stencils.hits, self.stencils.misses)
+    }
+
+    fn backend(&mut self, name: &str) -> Result<&mut Box<dyn Backend>> {
+        if !self.backends.contains_key(name) {
+            let be = backend::create(name)?;
+            self.backends.insert(name.to_string(), be);
+        }
+        Ok(self.backends.get_mut(name).unwrap())
+    }
+
+    /// Register a custom backend instance under its name (e.g. a
+    /// pre-warmed `XlaBackend` sharing a runtime).
+    pub fn register_backend(&mut self, be: Box<dyn Backend>) {
+        self.backends.insert(be.name().to_string(), be);
+    }
+
+    /// Allocate a zeroed storage with exactly the halo a stencil's field
+    /// requires for `domain` (the `gt4py.storage.zeros(backend=...)`
+    /// analog).
+    pub fn alloc_field(
+        &mut self,
+        fingerprint: u64,
+        field: &str,
+        domain: [usize; 3],
+    ) -> Result<Storage> {
+        let ir = self.ir(fingerprint)?;
+        let f = ir
+            .field(field)
+            .ok_or_else(|| anyhow!("stencil `{}` has no field `{field}`", ir.name))?;
+        let e = f.extent;
+        Ok(Storage::zeros(StorageInfo::new(
+            domain,
+            [
+                ((-e.i.0) as usize, e.i.1 as usize),
+                ((-e.j.0) as usize, e.j.1 as usize),
+                ((-e.k.0) as usize, e.k.1 as usize),
+            ],
+        )))
+    }
+
+    /// Run a compiled stencil on a backend.
+    pub fn run<'b>(
+        &mut self,
+        fingerprint: u64,
+        backend_name: &str,
+        fields: &mut [(&'b str, &'b mut Storage)],
+        scalars: &[(&'b str, f64)],
+        domain: [usize; 3],
+    ) -> Result<RunStats> {
+        let ir = self.ir(fingerprint)?;
+
+        let checks = if self.checks_enabled {
+            let t0 = Instant::now();
+            crate::backend::program::validate_args(&ir, fields, scalars, domain)?;
+            t0.elapsed()
+        } else {
+            Duration::ZERO
+        };
+
+        let be = self.backend(backend_name)?;
+        let t1 = Instant::now();
+        be.run(&ir, &mut StencilArgs { fields, scalars, domain })?;
+        let execute = t1.elapsed();
+
+        self.metrics.record(&ir.name, backend_name, checks, execute);
+        Ok(RunStats { checks, execute })
+    }
+
+    /// Run a stencil by registered name.
+    pub fn run_by_name<'b>(
+        &mut self,
+        stencil: &str,
+        backend_name: &str,
+        fields: &mut [(&'b str, &'b mut Storage)],
+        scalars: &[(&'b str, f64)],
+        domain: [usize; 3],
+    ) -> Result<RunStats> {
+        let fp = self
+            .fingerprint_of(stencil)
+            .ok_or_else(|| anyhow!("stencil `{stencil}` not compiled"))?;
+        self.run(fp, backend_name, fields, scalars, domain)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compile_run_roundtrip_with_cache() {
+        let mut c = Coordinator::new();
+        let fp = c.compile_library("copy").unwrap();
+        // Recompiling is a cache hit.
+        let fp2 = c.compile_library("copy").unwrap();
+        assert_eq!(fp, fp2);
+        assert_eq!(c.cache_stats(), (1, 1));
+
+        let domain = [4, 3, 2];
+        let mut src = c.alloc_field(fp, "src", domain).unwrap();
+        let mut dst = c.alloc_field(fp, "dst", domain).unwrap();
+        src.set(1, 2, 1, 7.0);
+        let mut refs: Vec<(&str, &mut Storage)> =
+            vec![("src", &mut src), ("dst", &mut dst)];
+        let stats = c.run(fp, "debug", &mut refs, &[], domain).unwrap();
+        assert!(stats.execute > Duration::ZERO);
+        assert_eq!(dst.get(1, 2, 1), 7.0);
+        assert!(c.metrics.get("copy", "debug").is_some());
+    }
+
+    #[test]
+    fn reformatted_source_hits_cache() {
+        let a = "stencil s(a: Field<f64>, b: Field<f64>) {\n\
+                   with computation(PARALLEL), interval(...) { b = a; }\n\
+                 }";
+        let b = "stencil   s(  a : Field<f64>,   b : Field<f64> ) {
+                   # a comment
+                   with computation(PARALLEL), interval(...) {
+                       b = a;
+                   }
+                 }";
+        let mut c = Coordinator::new();
+        let fa = c.compile_source(a, "s", &BTreeMap::new()).unwrap();
+        let fb = c.compile_source(b, "s", &BTreeMap::new()).unwrap();
+        assert_eq!(fa, fb);
+        assert_eq!(c.cache_stats(), (1, 1));
+    }
+
+    #[test]
+    fn checks_catch_bad_halo_and_can_be_disabled() {
+        let mut c = Coordinator::new();
+        let fp = c.compile_library("laplacian").unwrap();
+        let domain = [4, 4, 2];
+        // Deliberately halo-less storages: checks must reject them.
+        let mut phi = Storage::with_halo(domain, 0);
+        let mut out = Storage::with_halo(domain, 0);
+        {
+            let mut refs: Vec<(&str, &mut Storage)> =
+                vec![("phi", &mut phi), ("out", &mut out)];
+            assert!(c.run(fp, "debug", &mut refs, &[], domain).is_err());
+        }
+        // Disabling the checks reproduces the unvalidated (dashed-line)
+        // path; with an OOB halo this would be UB-ish, so use valid
+        // storages and just assert the checks time is zero-ish.
+        c.checks_enabled = false;
+        let mut phi = c.alloc_field(fp, "phi", domain).unwrap();
+        let mut out = c.alloc_field(fp, "out", domain).unwrap();
+        let mut refs: Vec<(&str, &mut Storage)> =
+            vec![("phi", &mut phi), ("out", &mut out)];
+        let stats = c.run(fp, "debug", &mut refs, &[], domain).unwrap();
+        assert_eq!(stats.checks, Duration::ZERO);
+    }
+
+    #[test]
+    fn scalar_args_flow_through() {
+        let mut c = Coordinator::new();
+        let fp = c.compile_library("diffuse").unwrap();
+        let domain = [4, 4, 1];
+        let mut phi = c.alloc_field(fp, "phi", domain).unwrap();
+        phi.fill(1.0);
+        let mut out = c.alloc_field(fp, "out", domain).unwrap();
+        let mut refs: Vec<(&str, &mut Storage)> =
+            vec![("phi", &mut phi), ("out", &mut out)];
+        c.run(fp, "debug", &mut refs, &[("alpha", 0.1)], domain).unwrap();
+        // constant field: laplacian zero, out == phi
+        assert_eq!(out.get(2, 2, 0), 1.0);
+    }
+
+    #[test]
+    fn unknown_backend_or_name_errors() {
+        let mut c = Coordinator::new();
+        let fp = c.compile_library("copy").unwrap();
+        let domain = [2, 2, 1];
+        let mut a = c.alloc_field(fp, "src", domain).unwrap();
+        let mut b = c.alloc_field(fp, "dst", domain).unwrap();
+        let mut refs: Vec<(&str, &mut Storage)> = vec![("src", &mut a), ("dst", &mut b)];
+        assert!(c.run(fp, "warp-drive", &mut refs, &[], domain).is_err());
+        assert!(c
+            .run_by_name("never_compiled", "debug", &mut [], &[], domain)
+            .is_err());
+    }
+}

@@ -1,0 +1,542 @@
+//! Abstract syntax tree of GTScript-RS.
+//!
+//! This doubles as the paper's *definition IR*: the frontend (text parser or
+//! builder API) produces these trees, and the analysis pipeline consumes them.
+//! Mirrors GT4Py §2.2: stencils, pure functions, externals, scalar
+//! parameters, `computation(PARALLEL|FORWARD|BACKWARD)`, `interval(a, b)`
+//! with Python-range semantics, relative field offsets, assignments and
+//! (point-wise) if/else control flow.
+
+pub use super::span::Span;
+use std::fmt;
+
+/// Relative offset of a field access in (I, J, K).
+pub type Offset = [i32; 3];
+
+/// Element type of a field or scalar parameter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    F64,
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DType::F32 => write!(f, "f32"),
+            DType::F64 => write!(f, "f64"),
+        }
+    }
+}
+
+/// Built-in math functions usable in any backend.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Builtin {
+    Abs,
+    Min,
+    Max,
+    Sqrt,
+    Exp,
+    Log,
+    Pow,
+    Floor,
+    Ceil,
+    Sin,
+    Cos,
+    Tanh,
+}
+
+impl Builtin {
+    pub fn from_name(name: &str) -> Option<Builtin> {
+        Some(match name {
+            "abs" => Builtin::Abs,
+            "min" => Builtin::Min,
+            "max" => Builtin::Max,
+            "sqrt" => Builtin::Sqrt,
+            "exp" => Builtin::Exp,
+            "log" => Builtin::Log,
+            "pow" => Builtin::Pow,
+            "floor" => Builtin::Floor,
+            "ceil" => Builtin::Ceil,
+            "sin" => Builtin::Sin,
+            "cos" => Builtin::Cos,
+            "tanh" => Builtin::Tanh,
+        _ => return None,
+        })
+    }
+
+    pub fn arity(&self) -> usize {
+        match self {
+            Builtin::Min | Builtin::Max | Builtin::Pow => 2,
+            _ => 1,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Builtin::Abs => "abs",
+            Builtin::Min => "min",
+            Builtin::Max => "max",
+            Builtin::Sqrt => "sqrt",
+            Builtin::Exp => "exp",
+            Builtin::Log => "log",
+            Builtin::Pow => "pow",
+            Builtin::Floor => "floor",
+            Builtin::Ceil => "ceil",
+            Builtin::Sin => "sin",
+            Builtin::Cos => "cos",
+            Builtin::Tanh => "tanh",
+        }
+    }
+}
+
+/// Binary operators. Comparisons/logical ops produce boolean values that may
+/// only be consumed by ternaries, `if` conditions, and other logical ops.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Mod,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Eq,
+    Ne,
+    And,
+    Or,
+}
+
+impl BinOp {
+    pub fn is_comparison(&self) -> bool {
+        matches!(self, BinOp::Lt | BinOp::Le | BinOp::Gt | BinOp::Ge | BinOp::Eq | BinOp::Ne)
+    }
+    pub fn is_logical(&self) -> bool {
+        matches!(self, BinOp::And | BinOp::Or)
+    }
+    pub fn symbol(&self) -> &'static str {
+        match self {
+            BinOp::Add => "+",
+            BinOp::Sub => "-",
+            BinOp::Mul => "*",
+            BinOp::Div => "/",
+            BinOp::Mod => "%",
+            BinOp::Lt => "<",
+            BinOp::Le => "<=",
+            BinOp::Gt => ">",
+            BinOp::Ge => ">=",
+            BinOp::Eq => "==",
+            BinOp::Ne => "!=",
+            BinOp::And => "and",
+            BinOp::Or => "or",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum UnOp {
+    Neg,
+    Not,
+}
+
+/// Expressions. After name resolution (`analysis::resolve`), `Name` no
+/// longer appears: bare names have become `Field` (offset 0), `Scalar`, or
+/// `External` references.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    /// Floating-point literal (also used for folded externals).
+    Float(f64),
+    /// Boolean literal.
+    Bool(bool),
+    /// Unresolved name (only before the resolution pass / inside functions).
+    Name(String, Span),
+    /// Field access at a relative offset.
+    Field { name: String, offset: Offset, span: Span },
+    /// Run-time scalar parameter.
+    Scalar(String),
+    /// Compile-time external constant (folded before analysis).
+    External(String, Span),
+    Unary { op: UnOp, operand: Box<Expr> },
+    Binary { op: BinOp, lhs: Box<Expr>, rhs: Box<Expr> },
+    /// `cond ? then_e : else_e` — point-wise select.
+    Ternary { cond: Box<Expr>, then_e: Box<Expr>, else_e: Box<Expr> },
+    /// Call of a user GTScript function (inlined by the analysis pipeline).
+    Call { name: String, args: Vec<Expr>, span: Span },
+    Builtin { func: Builtin, args: Vec<Expr> },
+}
+
+impl Expr {
+    pub fn binary(op: BinOp, lhs: Expr, rhs: Expr) -> Expr {
+        Expr::Binary { op, lhs: Box::new(lhs), rhs: Box::new(rhs) }
+    }
+    pub fn ternary(cond: Expr, then_e: Expr, else_e: Expr) -> Expr {
+        Expr::Ternary { cond: Box::new(cond), then_e: Box::new(then_e), else_e: Box::new(else_e) }
+    }
+    pub fn field(name: impl Into<String>, offset: Offset) -> Expr {
+        Expr::Field { name: name.into(), offset, span: Span::default() }
+    }
+
+    /// Walk all field accesses in the expression.
+    pub fn visit_fields<'a>(&'a self, f: &mut impl FnMut(&'a str, Offset)) {
+        match self {
+            Expr::Field { name, offset, .. } => f(name, *offset),
+            Expr::Unary { operand, .. } => operand.visit_fields(f),
+            Expr::Binary { lhs, rhs, .. } => {
+                lhs.visit_fields(f);
+                rhs.visit_fields(f);
+            }
+            Expr::Ternary { cond, then_e, else_e } => {
+                cond.visit_fields(f);
+                then_e.visit_fields(f);
+                else_e.visit_fields(f);
+            }
+            Expr::Call { args, .. } | Expr::Builtin { args, .. } => {
+                for a in args {
+                    a.visit_fields(f);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// Shift every field access by `off` (used when inlining function calls
+    /// whose arguments were accessed at an offset: offsets compose
+    /// additively, per GT4Py semantics).
+    pub fn shifted(&self, off: Offset) -> Expr {
+        if off == [0, 0, 0] {
+            return self.clone();
+        }
+        match self {
+            // A bare name accessed at an offset is a field access: scalars
+            // and externals reject offsets later, at resolution.
+            Expr::Name(name, span) => {
+                Expr::Field { name: name.clone(), offset: off, span: *span }
+            }
+            Expr::Field { name, offset, span } => Expr::Field {
+                name: name.clone(),
+                offset: [offset[0] + off[0], offset[1] + off[1], offset[2] + off[2]],
+                span: *span,
+            },
+            Expr::Unary { op, operand } => {
+                Expr::Unary { op: *op, operand: Box::new(operand.shifted(off)) }
+            }
+            Expr::Binary { op, lhs, rhs } => Expr::Binary {
+                op: *op,
+                lhs: Box::new(lhs.shifted(off)),
+                rhs: Box::new(rhs.shifted(off)),
+            },
+            Expr::Ternary { cond, then_e, else_e } => Expr::Ternary {
+                cond: Box::new(cond.shifted(off)),
+                then_e: Box::new(then_e.shifted(off)),
+                else_e: Box::new(else_e.shifted(off)),
+            },
+            Expr::Call { name, args, span } => Expr::Call {
+                name: name.clone(),
+                args: args.iter().map(|a| a.shifted(off)).collect(),
+                span: *span,
+            },
+            Expr::Builtin { func, args } => Expr::Builtin {
+                func: *func,
+                args: args.iter().map(|a| a.shifted(off)).collect(),
+            },
+            other => other.clone(),
+        }
+    }
+
+    /// Number of AST nodes (used for canonical fingerprints and tests).
+    pub fn size(&self) -> usize {
+        match self {
+            Expr::Unary { operand, .. } => 1 + operand.size(),
+            Expr::Binary { lhs, rhs, .. } => 1 + lhs.size() + rhs.size(),
+            Expr::Ternary { cond, then_e, else_e } => {
+                1 + cond.size() + then_e.size() + else_e.size()
+            }
+            Expr::Call { args, .. } | Expr::Builtin { args, .. } => {
+                1 + args.iter().map(Expr::size).sum::<usize>()
+            }
+            _ => 1,
+        }
+    }
+}
+
+/// Statements allowed in `with interval` bodies (paper: assignments and
+/// if-else only).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Stmt {
+    /// `target = value` — target is always written at offset (0,0,0).
+    Assign { target: String, value: Expr, span: Span },
+    /// Point-wise conditional execution.
+    If { cond: Expr, then_body: Vec<Stmt>, else_body: Vec<Stmt>, span: Span },
+}
+
+/// Vertical iteration order of a `with computation(...)` block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum IterationPolicy {
+    Parallel,
+    Forward,
+    Backward,
+}
+
+impl fmt::Display for IterationPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            IterationPolicy::Parallel => write!(f, "PARALLEL"),
+            IterationPolicy::Forward => write!(f, "FORWARD"),
+            IterationPolicy::Backward => write!(f, "BACKWARD"),
+        }
+    }
+}
+
+/// One end of a vertical interval, relative to the start or end of the axis.
+/// Follows Python range conventions: `interval(0, None)` is the full axis,
+/// `interval(-1, None)` the top level, `interval(1, -1)` the interior.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LevelBound {
+    /// `FromStart(n)`: level n (n >= 0).
+    FromStart(i32),
+    /// `FromEnd(n)`: level K - n (n >= 0); `FromEnd(0)` is the exclusive end.
+    FromEnd(i32),
+}
+
+impl LevelBound {
+    /// Resolve against a concrete vertical size.
+    pub fn resolve(&self, ksize: usize) -> i64 {
+        match self {
+            LevelBound::FromStart(n) => *n as i64,
+            LevelBound::FromEnd(n) => ksize as i64 - *n as i64,
+        }
+    }
+
+    /// Convert a Python-style index to a bound (negative = from end).
+    pub fn from_index(idx: i32) -> LevelBound {
+        if idx >= 0 {
+            LevelBound::FromStart(idx)
+        } else {
+            LevelBound::FromEnd(-idx)
+        }
+    }
+}
+
+/// Half-open vertical interval `[lo, hi)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Interval {
+    pub lo: LevelBound,
+    pub hi: LevelBound,
+}
+
+impl Interval {
+    /// The full vertical axis, `interval(...)`.
+    pub fn full() -> Interval {
+        Interval { lo: LevelBound::FromStart(0), hi: LevelBound::FromEnd(0) }
+    }
+
+    /// Build from Python-style indices; `hi = None` is expressed as
+    /// `LevelBound::FromEnd(0)` by the caller.
+    pub fn new(lo: LevelBound, hi: LevelBound) -> Interval {
+        Interval { lo, hi }
+    }
+
+    /// Concrete `[lo, hi)` range for a vertical size; empty ranges resolve
+    /// with `lo >= hi`.
+    pub fn resolve(&self, ksize: usize) -> (i64, i64) {
+        (self.lo.resolve(ksize), self.hi.resolve(ksize))
+    }
+
+    /// True when the interval is empty for every possible axis size — a
+    /// user error detected statically.
+    pub fn statically_empty(&self) -> bool {
+        match (self.lo, self.hi) {
+            (LevelBound::FromStart(a), LevelBound::FromStart(b)) => a >= b,
+            (LevelBound::FromEnd(a), LevelBound::FromEnd(b)) => a <= b,
+            // Mixed bounds depend on the axis size.
+            _ => false,
+        }
+    }
+
+    /// Whether two intervals can be shown to overlap for some axis size; a
+    /// conservative test used by the overlap check.
+    pub fn overlaps(&self, other: &Interval, ksize_probe: &[usize]) -> bool {
+        for &k in ksize_probe {
+            let (a0, a1) = self.resolve(k);
+            let (b0, b1) = other.resolve(k);
+            if a0 < a1 && b0 < b1 && a0 < b1 && b0 < a1 {
+                return true;
+            }
+        }
+        false
+    }
+}
+
+impl fmt::Display for Interval {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let b = |b: &LevelBound| match b {
+            LevelBound::FromStart(n) => format!("{n}"),
+            LevelBound::FromEnd(0) => "None".to_string(),
+            LevelBound::FromEnd(n) => format!("-{n}"),
+        };
+        write!(f, "interval({}, {})", b(&self.lo), b(&self.hi))
+    }
+}
+
+/// Body of a single `with interval(...)` region.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IntervalBlock {
+    pub interval: Interval,
+    pub body: Vec<Stmt>,
+    pub span: Span,
+}
+
+/// A `with computation(policy)` block with one or more interval regions,
+/// executed in program order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Computation {
+    pub policy: IterationPolicy,
+    pub blocks: Vec<IntervalBlock>,
+    pub span: Span,
+}
+
+/// Declaration of a field parameter of a stencil.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FieldDecl {
+    pub name: String,
+    pub dtype: DType,
+    pub span: Span,
+}
+
+/// Declaration of a read-only scalar parameter (after `;` in the signature,
+/// the analog of Python's keyword-only `*,` marker in GTScript).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScalarDecl {
+    pub name: String,
+    pub dtype: DType,
+    pub span: Span,
+}
+
+/// A stencil definition (the `@gtscript.stencil` analog).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StencilDef {
+    pub name: String,
+    pub fields: Vec<FieldDecl>,
+    pub scalars: Vec<ScalarDecl>,
+    /// Names of externals referenced (values provided at compile time).
+    pub externals: Vec<String>,
+    pub computations: Vec<Computation>,
+    pub span: Span,
+}
+
+/// A pure GTScript function (the `@gtscript.function` analog): a sequence of
+/// local bindings followed by a single returned expression. Functions are
+/// inlined by the analysis pipeline; locals never materialize.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FunctionDef {
+    pub name: String,
+    pub params: Vec<String>,
+    /// Local bindings `(name, expr)` evaluated in order.
+    pub bindings: Vec<(String, Expr)>,
+    pub ret: Expr,
+    pub span: Span,
+}
+
+/// A parsed module: functions, stencils and module-level extern defaults.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Module {
+    pub functions: Vec<FunctionDef>,
+    pub stencils: Vec<StencilDef>,
+    /// `extern NAME = value;` defaults (overridable at compile time).
+    pub extern_defaults: Vec<(String, f64)>,
+}
+
+impl Module {
+    pub fn function(&self, name: &str) -> Option<&FunctionDef> {
+        self.functions.iter().find(|f| f.name == name)
+    }
+    pub fn stencil(&self, name: &str) -> Option<&StencilDef> {
+        self.stencils.iter().find(|s| s.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_roundtrip() {
+        for b in [
+            Builtin::Abs,
+            Builtin::Min,
+            Builtin::Max,
+            Builtin::Sqrt,
+            Builtin::Exp,
+            Builtin::Log,
+            Builtin::Pow,
+            Builtin::Floor,
+            Builtin::Ceil,
+            Builtin::Sin,
+            Builtin::Cos,
+            Builtin::Tanh,
+        ] {
+            assert_eq!(Builtin::from_name(b.name()), Some(b));
+        }
+        assert_eq!(Builtin::from_name("nope"), None);
+    }
+
+    #[test]
+    fn shifted_composes_offsets() {
+        let e = Expr::binary(
+            BinOp::Add,
+            Expr::field("phi", [1, 0, 0]),
+            Expr::field("phi", [-1, 0, 0]),
+        );
+        let s = e.shifted([0, 2, -1]);
+        let mut offs = vec![];
+        s.visit_fields(&mut |name, off| {
+            assert_eq!(name, "phi");
+            offs.push(off);
+        });
+        assert_eq!(offs, vec![[1, 2, -1], [-1, 2, -1]]);
+    }
+
+    #[test]
+    fn interval_resolution_python_semantics() {
+        let full = Interval::full();
+        assert_eq!(full.resolve(80), (0, 80));
+        let first = Interval::new(LevelBound::from_index(0), LevelBound::from_index(1));
+        assert_eq!(first.resolve(80), (0, 1));
+        let last = Interval::new(LevelBound::from_index(-1), LevelBound::FromEnd(0));
+        assert_eq!(last.resolve(80), (79, 80));
+        let interior = Interval::new(LevelBound::from_index(1), LevelBound::from_index(-1));
+        assert_eq!(interior.resolve(80), (1, 79));
+    }
+
+    #[test]
+    fn statically_empty_detection() {
+        let e = Interval::new(LevelBound::FromStart(3), LevelBound::FromStart(3));
+        assert!(e.statically_empty());
+        let ok = Interval::new(LevelBound::FromStart(0), LevelBound::FromEnd(0));
+        assert!(!ok.statically_empty());
+        let mixed = Interval::new(LevelBound::FromStart(5), LevelBound::FromEnd(2));
+        assert!(!mixed.statically_empty()); // empty only for K <= 7
+    }
+
+    #[test]
+    fn interval_overlap_probe() {
+        let a = Interval::new(LevelBound::FromStart(0), LevelBound::FromStart(1));
+        let b = Interval::new(LevelBound::FromStart(1), LevelBound::FromEnd(0));
+        let probes = [1usize, 2, 8, 80];
+        assert!(!a.overlaps(&b, &probes));
+        let c = Interval::full();
+        assert!(a.overlaps(&c, &probes));
+    }
+
+    #[test]
+    fn expr_size_counts_nodes() {
+        let e = Expr::ternary(
+            Expr::binary(BinOp::Gt, Expr::field("a", [0, 0, 0]), Expr::Float(0.0)),
+            Expr::field("b", [0, 0, 0]),
+            Expr::Float(1.0),
+        );
+        assert_eq!(e.size(), 6);
+    }
+}

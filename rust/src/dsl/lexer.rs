@@ -1,0 +1,410 @@
+//! Hand-written lexer for the GTScript-RS textual frontend.
+//!
+//! GTScript proper is a strict subset of Python syntax parsed with Python's
+//! own `ast` module; since our host language is Rust we define an equivalent
+//! free-standing surface syntax (`.gts` files) with a conventional lexer.
+//! `#` starts a line comment, like Python.
+
+use super::span::{CResult, CompileError, Span};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tok {
+    Ident(String),
+    Float(f64),
+    Int(i64),
+    // punctuation
+    LParen,
+    RParen,
+    LBrace,
+    RBrace,
+    LBracket,
+    RBracket,
+    Comma,
+    Semi,
+    Colon,
+    Question,
+    Ellipsis,
+    // operators
+    Plus,
+    Minus,
+    Star,
+    Slash,
+    Percent,
+    Assign,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    EqEq,
+    Ne,
+    Not,
+    // keywords
+    KwStencil,
+    KwFunction,
+    KwReturn,
+    KwWith,
+    KwComputation,
+    KwInterval,
+    KwIf,
+    KwElse,
+    KwExtern,
+    KwAnd,
+    KwOr,
+    KwNot,
+    KwTrue,
+    KwFalse,
+    KwNone,
+    Eof,
+}
+
+impl Tok {
+    pub fn describe(&self) -> String {
+        match self {
+            Tok::Ident(s) => format!("identifier `{s}`"),
+            Tok::Float(v) => format!("float literal `{v}`"),
+            Tok::Int(v) => format!("int literal `{v}`"),
+            other => format!("{other:?}"),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub tok: Tok,
+    pub span: Span,
+}
+
+pub struct Lexer<'a> {
+    src: &'a [u8],
+    pos: usize,
+    line: u32,
+    col: u32,
+}
+
+impl<'a> Lexer<'a> {
+    pub fn new(src: &'a str) -> Self {
+        Lexer { src: src.as_bytes(), pos: 0, line: 1, col: 1 }
+    }
+
+    pub fn tokenize(src: &str) -> CResult<Vec<Token>> {
+        let mut lx = Lexer::new(src);
+        let mut out = Vec::new();
+        loop {
+            let t = lx.next_token()?;
+            let eof = t.tok == Tok::Eof;
+            out.push(t);
+            if eof {
+                break;
+            }
+        }
+        Ok(out)
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.src.get(self.pos).copied()
+    }
+
+    fn peek2(&self) -> Option<u8> {
+        self.src.get(self.pos + 1).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let c = self.peek()?;
+        self.pos += 1;
+        if c == b'\n' {
+            self.line += 1;
+            self.col = 1;
+        } else {
+            self.col += 1;
+        }
+        Some(c)
+    }
+
+    fn skip_ws_and_comments(&mut self) {
+        while let Some(c) = self.peek() {
+            if c == b'#' {
+                while let Some(c2) = self.peek() {
+                    if c2 == b'\n' {
+                        break;
+                    }
+                    self.bump();
+                }
+            } else if c.is_ascii_whitespace() {
+                self.bump();
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn span_from(&self, start: usize, line: u32, col: u32) -> Span {
+        Span::new(start, self.pos, line, col)
+    }
+
+    fn next_token(&mut self) -> CResult<Token> {
+        self.skip_ws_and_comments();
+        let (start, line, col) = (self.pos, self.line, self.col);
+        let mk = |lx: &Lexer, tok: Tok| Token { tok, span: lx.span_from(start, line, col) };
+        let c = match self.peek() {
+            None => return Ok(mk(self, Tok::Eof)),
+            Some(c) => c,
+        };
+
+        // identifiers / keywords
+        if c.is_ascii_alphabetic() || c == b'_' {
+            let mut s = String::new();
+            while let Some(c2) = self.peek() {
+                if c2.is_ascii_alphanumeric() || c2 == b'_' {
+                    s.push(c2 as char);
+                    self.bump();
+                } else {
+                    break;
+                }
+            }
+            let tok = match s.as_str() {
+                "stencil" => Tok::KwStencil,
+                "function" => Tok::KwFunction,
+                "return" => Tok::KwReturn,
+                "with" => Tok::KwWith,
+                "computation" => Tok::KwComputation,
+                "interval" => Tok::KwInterval,
+                "if" => Tok::KwIf,
+                "else" => Tok::KwElse,
+                "extern" => Tok::KwExtern,
+                "and" => Tok::KwAnd,
+                "or" => Tok::KwOr,
+                "not" => Tok::KwNot,
+                "true" | "True" => Tok::KwTrue,
+                "false" | "False" => Tok::KwFalse,
+                "None" => Tok::KwNone,
+                _ => Tok::Ident(s),
+            };
+            return Ok(mk(self, tok));
+        }
+
+        // numbers: int or float (decimal point and/or exponent)
+        if c.is_ascii_digit() {
+            let mut s = String::new();
+            let mut is_float = false;
+            while let Some(c2) = self.peek() {
+                if c2.is_ascii_digit() {
+                    s.push(c2 as char);
+                    self.bump();
+                } else if c2 == b'.' && self.peek2() != Some(b'.') {
+                    // not the start of `..` / `...`
+                    if is_float {
+                        break;
+                    }
+                    is_float = true;
+                    s.push('.');
+                    self.bump();
+                } else if c2 == b'e' || c2 == b'E' {
+                    is_float = true;
+                    s.push('e');
+                    self.bump();
+                    if let Some(sign) = self.peek() {
+                        if sign == b'+' || sign == b'-' {
+                            s.push(sign as char);
+                            self.bump();
+                        }
+                    }
+                } else {
+                    break;
+                }
+            }
+            let span = self.span_from(start, line, col);
+            if is_float {
+                let v: f64 = s.parse().map_err(|_| {
+                    CompileError::with_span("lex", format!("invalid float literal `{s}`"), span)
+                })?;
+                return Ok(Token { tok: Tok::Float(v), span });
+            }
+            let v: i64 = s.parse().map_err(|_| {
+                CompileError::with_span("lex", format!("invalid int literal `{s}`"), span)
+            })?;
+            return Ok(Token { tok: Tok::Int(v), span });
+        }
+
+        // punctuation and operators
+        self.bump();
+        let tok = match c {
+            b'(' => Tok::LParen,
+            b')' => Tok::RParen,
+            b'{' => Tok::LBrace,
+            b'}' => Tok::RBrace,
+            b'[' => Tok::LBracket,
+            b']' => Tok::RBracket,
+            b',' => Tok::Comma,
+            b';' => Tok::Semi,
+            b':' => Tok::Colon,
+            b'?' => Tok::Question,
+            b'+' => Tok::Plus,
+            b'-' => Tok::Minus,
+            b'*' => Tok::Star,
+            b'/' => Tok::Slash,
+            b'%' => Tok::Percent,
+            b'.' => {
+                if self.peek() == Some(b'.') && self.peek2() == Some(b'.') {
+                    self.bump();
+                    self.bump();
+                    Tok::Ellipsis
+                } else {
+                    return Err(CompileError::with_span(
+                        "lex",
+                        "unexpected `.` (did you mean `...`?)",
+                        self.span_from(start, line, col),
+                    ));
+                }
+            }
+            b'=' => {
+                if self.peek() == Some(b'=') {
+                    self.bump();
+                    Tok::EqEq
+                } else {
+                    Tok::Assign
+                }
+            }
+            b'<' => {
+                if self.peek() == Some(b'=') {
+                    self.bump();
+                    Tok::Le
+                } else {
+                    Tok::Lt
+                }
+            }
+            b'>' => {
+                if self.peek() == Some(b'=') {
+                    self.bump();
+                    Tok::Ge
+                } else {
+                    Tok::Gt
+                }
+            }
+            b'!' => {
+                if self.peek() == Some(b'=') {
+                    self.bump();
+                    Tok::Ne
+                } else {
+                    Tok::Not
+                }
+            }
+            other => {
+                return Err(CompileError::with_span(
+                    "lex",
+                    format!("unexpected character `{}`", other as char),
+                    self.span_from(start, line, col),
+                ))
+            }
+        };
+        Ok(Token { tok, span: self.span_from(start, line, col) })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(src: &str) -> Vec<Tok> {
+        Lexer::tokenize(src).unwrap().into_iter().map(|t| t.tok).collect()
+    }
+
+    #[test]
+    fn lexes_stencil_header() {
+        let t = toks("stencil copy(a: Field<f64>) {}");
+        assert_eq!(
+            t,
+            vec![
+                Tok::KwStencil,
+                Tok::Ident("copy".into()),
+                Tok::LParen,
+                Tok::Ident("a".into()),
+                Tok::Colon,
+                Tok::Ident("Field".into()),
+                Tok::Lt,
+                Tok::Ident("f64".into()),
+                Tok::Gt,
+                Tok::RParen,
+                Tok::LBrace,
+                Tok::RBrace,
+                Tok::Eof,
+            ]
+        );
+    }
+
+    #[test]
+    fn lexes_numbers() {
+        assert_eq!(toks("1 2.5 1e3 2.5e-2 4."), vec![
+            Tok::Int(1),
+            Tok::Float(2.5),
+            Tok::Float(1000.0),
+            Tok::Float(0.025),
+            Tok::Float(4.0),
+            Tok::Eof
+        ]);
+    }
+
+    #[test]
+    fn lexes_offsets_and_ellipsis() {
+        assert_eq!(toks("phi[-1, 0, 0] interval(...)"), vec![
+            Tok::Ident("phi".into()),
+            Tok::LBracket,
+            Tok::Minus,
+            Tok::Int(1),
+            Tok::Comma,
+            Tok::Int(0),
+            Tok::Comma,
+            Tok::Int(0),
+            Tok::RBracket,
+            Tok::KwInterval,
+            Tok::LParen,
+            Tok::Ellipsis,
+            Tok::RParen,
+            Tok::Eof
+        ]);
+    }
+
+    #[test]
+    fn comments_ignored_and_positions_tracked() {
+        let tokens = Lexer::tokenize("# header\n  x = 1; # trailing\ny").unwrap();
+        assert_eq!(tokens[0].span.line, 2);
+        assert_eq!(tokens[0].span.col, 3);
+        let y = &tokens[4];
+        assert_eq!(y.tok, Tok::Ident("y".into()));
+        assert_eq!(y.span.line, 3);
+    }
+
+    #[test]
+    fn comparison_operators() {
+        assert_eq!(toks("< <= > >= == != ="), vec![
+            Tok::Lt,
+            Tok::Le,
+            Tok::Gt,
+            Tok::Ge,
+            Tok::EqEq,
+            Tok::Ne,
+            Tok::Assign,
+            Tok::Eof
+        ]);
+    }
+
+    #[test]
+    fn rejects_stray_chars() {
+        assert!(Lexer::tokenize("a $ b").is_err());
+        assert!(Lexer::tokenize("a . b").is_err());
+    }
+
+    #[test]
+    fn float_then_int_not_range() {
+        // `4.` is a float; `4...` would be float then `..`, an error — keep
+        // the simple rule: digits followed by `..` lex as int + ellipsis-ish.
+        assert_eq!(toks("interval(0, 2)"), vec![
+            Tok::KwInterval,
+            Tok::LParen,
+            Tok::Int(0),
+            Tok::Comma,
+            Tok::Int(2),
+            Tok::RParen,
+            Tok::Eof
+        ]);
+    }
+}

@@ -1,0 +1,23 @@
+//! GTScript-RS frontend: surface syntax, AST (definition IR), and builders.
+//!
+//! The paper's GTScript is a DSL embedded in Python, parsed by the Python
+//! interpreter itself (§2.2). Our host is Rust, so the frontend offers two
+//! equivalent entry points producing the same definition IR:
+//!
+//! * [`parser::parse_module`] — a textual `.gts` syntax mirroring GTScript
+//!   construct-for-construct (stencils, functions, externals, computations,
+//!   intervals, relative offsets, point-wise if/else);
+//! * [`builder`] — a fluent Rust API, the "embedded" flavor.
+
+pub mod ast;
+pub mod builder;
+pub mod lexer;
+pub mod parser;
+pub mod span;
+
+pub use ast::{
+    BinOp, Builtin, Computation, DType, Expr, FieldDecl, FunctionDef, Interval, IntervalBlock,
+    IterationPolicy, LevelBound, Module, Offset, ScalarDecl, StencilDef, Stmt, UnOp,
+};
+pub use parser::{parse_expr, parse_module};
+pub use span::{CResult, CompileError, Span};

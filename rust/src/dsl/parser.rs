@@ -1,0 +1,814 @@
+//! Recursive-descent parser for the GTScript-RS surface syntax.
+//!
+//! Grammar (EBNF-ish):
+//! ```text
+//! module        := (extern_decl | function_def | stencil_def)*
+//! extern_decl   := "extern" IDENT ("=" number)? ";"
+//! function_def  := "function" IDENT "(" [IDENT ("," IDENT)*] ")"
+//!                  "{" (assign ";")* "return" expr ";" "}"
+//! stencil_def   := "stencil" IDENT "(" field_decls [";" scalar_decls] ")"
+//!                  "{" computation+ "}"
+//! field_decls   := IDENT ":" "Field" "<" ("f32"|"f64") ">" ("," ...)*
+//! scalar_decls  := IDENT ":" ("f32"|"f64") ("," ...)*
+//! computation   := "with" "computation" "(" POLICY ")"
+//!                  ( "," "interval" "(" ispec ")" block
+//!                  | "{" ("interval" "(" ispec ")" block)+ "}" )
+//! ispec         := "..." | bound "," bound
+//! bound         := INT | "-" INT | "None"
+//! block         := "{" stmt* "}"
+//! stmt          := IDENT "=" expr ";" | "if" expr block ["else" (block|if)]
+//! expr          := or_expr ["?" expr ":" expr]
+//! or_expr       := and_expr ("or" and_expr)*
+//! and_expr      := not_expr ("and" not_expr)*
+//! not_expr      := "not" not_expr | cmp_expr
+//! cmp_expr      := add_expr [("<"|"<="|">"|">="|"=="|"!=") add_expr]
+//! add_expr      := mul_expr (("+"|"-") mul_expr)*
+//! mul_expr      := unary (("*"|"/"|"%") unary)*
+//! unary         := "-" unary | primary
+//! primary       := number | "true" | "false" | "(" expr ")"
+//!                | IDENT [ "[" INT "," INT "," INT "]" | "(" args ")" ]
+//! ```
+//!
+//! The GTScript-in-Python example of the paper's Figure 1 maps 1:1 onto this
+//! syntax; see `rust/src/stdlib/hdiff.gts`.
+
+use super::ast::*;
+use super::lexer::{Lexer, Tok, Token};
+use super::span::{CResult, CompileError, Span};
+
+pub struct Parser {
+    toks: Vec<Token>,
+    pos: usize,
+}
+
+/// Parse a `.gts` module source.
+pub fn parse_module(src: &str) -> CResult<Module> {
+    let toks = Lexer::tokenize(src)?;
+    let mut p = Parser { toks, pos: 0 };
+    p.module()
+}
+
+/// Parse a single expression (used by tests and the REPL-ish CLI).
+pub fn parse_expr(src: &str) -> CResult<Expr> {
+    let toks = Lexer::tokenize(src)?;
+    let mut p = Parser { toks, pos: 0 };
+    let e = p.expr()?;
+    p.expect(Tok::Eof)?;
+    Ok(e)
+}
+
+impl Parser {
+    fn peek(&self) -> &Tok {
+        &self.toks[self.pos].tok
+    }
+
+    fn peek_span(&self) -> Span {
+        self.toks[self.pos].span
+    }
+
+    fn bump(&mut self) -> Token {
+        let t = self.toks[self.pos].clone();
+        if self.pos + 1 < self.toks.len() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn eat(&mut self, tok: &Tok) -> bool {
+        if self.peek() == tok {
+            self.bump();
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect(&mut self, tok: Tok) -> CResult<Token> {
+        if self.peek() == &tok {
+            Ok(self.bump())
+        } else {
+            Err(CompileError::with_span(
+                "parse",
+                format!("expected {:?}, found {}", tok, self.peek().describe()),
+                self.peek_span(),
+            ))
+        }
+    }
+
+    fn expect_ident(&mut self) -> CResult<(String, Span)> {
+        match self.peek().clone() {
+            Tok::Ident(s) => {
+                let t = self.bump();
+                Ok((s, t.span))
+            }
+            other => Err(CompileError::with_span(
+                "parse",
+                format!("expected identifier, found {}", other.describe()),
+                self.peek_span(),
+            )),
+        }
+    }
+
+    fn module(&mut self) -> CResult<Module> {
+        let mut m = Module::default();
+        loop {
+            match self.peek() {
+                Tok::Eof => break,
+                Tok::KwExtern => {
+                    self.bump();
+                    let (name, _) = self.expect_ident()?;
+                    let mut value = f64::NAN;
+                    if self.eat(&Tok::Assign) {
+                        value = self.number_literal()?;
+                    }
+                    self.expect(Tok::Semi)?;
+                    m.extern_defaults.push((name, value));
+                }
+                Tok::KwFunction => {
+                    let f = self.function_def()?;
+                    if m.function(&f.name).is_some() {
+                        return Err(CompileError::with_span(
+                            "parse",
+                            format!("duplicate function `{}`", f.name),
+                            f.span,
+                        ));
+                    }
+                    m.functions.push(f);
+                }
+                Tok::KwStencil => {
+                    let s = self.stencil_def()?;
+                    if m.stencil(&s.name).is_some() {
+                        return Err(CompileError::with_span(
+                            "parse",
+                            format!("duplicate stencil `{}`", s.name),
+                            s.span,
+                        ));
+                    }
+                    m.stencils.push(s);
+                }
+                other => {
+                    return Err(CompileError::with_span(
+                        "parse",
+                        format!(
+                            "expected `stencil`, `function` or `extern`, found {}",
+                            other.describe()
+                        ),
+                        self.peek_span(),
+                    ))
+                }
+            }
+        }
+        Ok(m)
+    }
+
+    fn number_literal(&mut self) -> CResult<f64> {
+        let neg = self.eat(&Tok::Minus);
+        let v = match self.peek().clone() {
+            Tok::Float(v) => {
+                self.bump();
+                v
+            }
+            Tok::Int(v) => {
+                self.bump();
+                v as f64
+            }
+            other => {
+                return Err(CompileError::with_span(
+                    "parse",
+                    format!("expected numeric literal, found {}", other.describe()),
+                    self.peek_span(),
+                ))
+            }
+        };
+        Ok(if neg { -v } else { v })
+    }
+
+    fn function_def(&mut self) -> CResult<FunctionDef> {
+        let kw = self.expect(Tok::KwFunction)?;
+        let (name, _) = self.expect_ident()?;
+        self.expect(Tok::LParen)?;
+        let mut params = Vec::new();
+        if self.peek() != &Tok::RParen {
+            loop {
+                let (p, pspan) = self.expect_ident()?;
+                if params.contains(&p) {
+                    return Err(CompileError::with_span(
+                        "parse",
+                        format!("duplicate parameter `{p}`"),
+                        pspan,
+                    ));
+                }
+                params.push(p);
+                if !self.eat(&Tok::Comma) {
+                    break;
+                }
+            }
+        }
+        self.expect(Tok::RParen)?;
+        self.expect(Tok::LBrace)?;
+        let mut bindings = Vec::new();
+        let ret;
+        loop {
+            if self.eat(&Tok::KwReturn) {
+                ret = self.expr()?;
+                self.expect(Tok::Semi)?;
+                break;
+            }
+            let (target, _) = self.expect_ident()?;
+            self.expect(Tok::Assign)?;
+            let value = self.expr()?;
+            self.expect(Tok::Semi)?;
+            bindings.push((target, value));
+        }
+        let close = self.expect(Tok::RBrace)?;
+        Ok(FunctionDef { name, params, bindings, ret, span: kw.span.merge(close.span) })
+    }
+
+    fn dtype(&mut self) -> CResult<DType> {
+        let (name, span) = self.expect_ident()?;
+        match name.as_str() {
+            "f32" => Ok(DType::F32),
+            "f64" => Ok(DType::F64),
+            other => Err(CompileError::with_span(
+                "parse",
+                format!("unknown dtype `{other}` (expected f32 or f64)"),
+                span,
+            )),
+        }
+    }
+
+    fn stencil_def(&mut self) -> CResult<StencilDef> {
+        let kw = self.expect(Tok::KwStencil)?;
+        let (name, _) = self.expect_ident()?;
+        self.expect(Tok::LParen)?;
+
+        let mut fields: Vec<FieldDecl> = Vec::new();
+        let mut scalars: Vec<ScalarDecl> = Vec::new();
+        let mut in_scalars = false;
+        if self.peek() != &Tok::RParen {
+            loop {
+                let (pname, pspan) = self.expect_ident()?;
+                if fields.iter().any(|f| f.name == pname)
+                    || scalars.iter().any(|s| s.name == pname)
+                {
+                    return Err(CompileError::with_span(
+                        "parse",
+                        format!("duplicate parameter `{pname}`"),
+                        pspan,
+                    ));
+                }
+                self.expect(Tok::Colon)?;
+                if !in_scalars {
+                    // field decl: Field<dtype>
+                    let (tyname, tyspan) = self.expect_ident()?;
+                    if tyname != "Field" {
+                        return Err(CompileError::with_span(
+                            "parse",
+                            format!(
+                                "expected `Field<...>` before `;` separator, found `{tyname}`"
+                            ),
+                            tyspan,
+                        ));
+                    }
+                    self.expect(Tok::Lt)?;
+                    let dt = self.dtype()?;
+                    self.expect(Tok::Gt)?;
+                    fields.push(FieldDecl { name: pname, dtype: dt, span: pspan });
+                } else {
+                    let dt = self.dtype()?;
+                    scalars.push(ScalarDecl { name: pname, dtype: dt, span: pspan });
+                }
+                if self.eat(&Tok::Comma) {
+                    continue;
+                }
+                if self.eat(&Tok::Semi) {
+                    if in_scalars {
+                        return Err(CompileError::with_span(
+                            "parse",
+                            "only one `;` separator allowed in stencil signature",
+                            self.peek_span(),
+                        ));
+                    }
+                    in_scalars = true;
+                    continue;
+                }
+                break;
+            }
+        }
+        self.expect(Tok::RParen)?;
+        self.expect(Tok::LBrace)?;
+        let mut computations = Vec::new();
+        while self.peek() == &Tok::KwWith {
+            computations.push(self.computation()?);
+        }
+        let close = self.expect(Tok::RBrace)?;
+        if computations.is_empty() {
+            return Err(CompileError::with_span(
+                "parse",
+                format!("stencil `{name}` has no computations"),
+                kw.span,
+            ));
+        }
+        Ok(StencilDef {
+            name,
+            fields,
+            scalars,
+            externals: Vec::new(), // filled by the resolution pass
+            computations,
+            span: kw.span.merge(close.span),
+        })
+    }
+
+    fn computation(&mut self) -> CResult<Computation> {
+        let kw = self.expect(Tok::KwWith)?;
+        self.expect(Tok::KwComputation)?;
+        self.expect(Tok::LParen)?;
+        let (pname, pspan) = self.expect_ident()?;
+        let policy = match pname.as_str() {
+            "PARALLEL" => IterationPolicy::Parallel,
+            "FORWARD" => IterationPolicy::Forward,
+            "BACKWARD" => IterationPolicy::Backward,
+            other => {
+                return Err(CompileError::with_span(
+                    "parse",
+                    format!("unknown iteration policy `{other}`"),
+                    pspan,
+                ))
+            }
+        };
+        self.expect(Tok::RParen)?;
+
+        let mut blocks = Vec::new();
+        if self.eat(&Tok::Comma) {
+            // single-interval shorthand: with computation(P), interval(...) { }
+            blocks.push(self.interval_block()?);
+        } else {
+            self.expect(Tok::LBrace)?;
+            while self.peek() == &Tok::KwInterval {
+                blocks.push(self.interval_block()?);
+            }
+            self.expect(Tok::RBrace)?;
+            if blocks.is_empty() {
+                return Err(CompileError::with_span(
+                    "parse",
+                    "computation block contains no interval regions",
+                    kw.span,
+                ));
+            }
+        }
+        let span = kw.span.merge(blocks.last().map(|b| b.span).unwrap_or(kw.span));
+        Ok(Computation { policy, blocks, span })
+    }
+
+    fn interval_bound(&mut self) -> CResult<LevelBound> {
+        match self.peek().clone() {
+            Tok::KwNone => {
+                self.bump();
+                Ok(LevelBound::FromEnd(0))
+            }
+            Tok::Minus => {
+                self.bump();
+                match self.peek().clone() {
+                    Tok::Int(v) => {
+                        self.bump();
+                        Ok(LevelBound::from_index(-(v as i32)))
+                    }
+                    other => Err(CompileError::with_span(
+                        "parse",
+                        format!("expected integer after `-`, found {}", other.describe()),
+                        self.peek_span(),
+                    )),
+                }
+            }
+            Tok::Int(v) => {
+                self.bump();
+                Ok(LevelBound::from_index(v as i32))
+            }
+            other => Err(CompileError::with_span(
+                "parse",
+                format!("expected interval bound, found {}", other.describe()),
+                self.peek_span(),
+            )),
+        }
+    }
+
+    fn interval_block(&mut self) -> CResult<IntervalBlock> {
+        let kw = self.expect(Tok::KwInterval)?;
+        self.expect(Tok::LParen)?;
+        let interval = if self.eat(&Tok::Ellipsis) {
+            Interval::full()
+        } else {
+            let lo = self.interval_bound()?;
+            self.expect(Tok::Comma)?;
+            let hi = self.interval_bound()?;
+            Interval::new(lo, hi)
+        };
+        self.expect(Tok::RParen)?;
+        if interval.statically_empty() {
+            return Err(CompileError::with_span(
+                "parse",
+                format!("{interval} is empty for every axis size"),
+                kw.span,
+            ));
+        }
+        let (body, bspan) = self.block()?;
+        if body.is_empty() {
+            return Err(CompileError::with_span("parse", "empty interval body", kw.span));
+        }
+        Ok(IntervalBlock { interval, body, span: kw.span.merge(bspan) })
+    }
+
+    fn block(&mut self) -> CResult<(Vec<Stmt>, Span)> {
+        let open = self.expect(Tok::LBrace)?;
+        let mut stmts = Vec::new();
+        while self.peek() != &Tok::RBrace {
+            stmts.push(self.stmt()?);
+        }
+        let close = self.expect(Tok::RBrace)?;
+        Ok((stmts, open.span.merge(close.span)))
+    }
+
+    fn stmt(&mut self) -> CResult<Stmt> {
+        if self.peek() == &Tok::KwIf {
+            return self.if_stmt();
+        }
+        let (target, tspan) = self.expect_ident()?;
+        self.expect(Tok::Assign)?;
+        let value = self.expr()?;
+        let semi = self.expect(Tok::Semi)?;
+        Ok(Stmt::Assign { target, value, span: tspan.merge(semi.span) })
+    }
+
+    fn if_stmt(&mut self) -> CResult<Stmt> {
+        let kw = self.expect(Tok::KwIf)?;
+        let cond = self.expr()?;
+        let (then_body, mut span) = self.block()?;
+        let mut else_body = Vec::new();
+        if self.eat(&Tok::KwElse) {
+            if self.peek() == &Tok::KwIf {
+                let nested = self.if_stmt()?;
+                else_body.push(nested);
+            } else {
+                let (eb, espan) = self.block()?;
+                else_body = eb;
+                span = span.merge(espan);
+            }
+        }
+        Ok(Stmt::If { cond, then_body, else_body, span: kw.span.merge(span) })
+    }
+
+    // ---- expressions (precedence climbing) ----
+
+    pub(crate) fn expr(&mut self) -> CResult<Expr> {
+        let cond = self.or_expr()?;
+        if self.eat(&Tok::Question) {
+            let then_e = self.expr()?;
+            self.expect(Tok::Colon)?;
+            let else_e = self.expr()?;
+            return Ok(Expr::ternary(cond, then_e, else_e));
+        }
+        Ok(cond)
+    }
+
+    fn or_expr(&mut self) -> CResult<Expr> {
+        let mut lhs = self.and_expr()?;
+        while self.eat(&Tok::KwOr) {
+            let rhs = self.and_expr()?;
+            lhs = Expr::binary(BinOp::Or, lhs, rhs);
+        }
+        Ok(lhs)
+    }
+
+    fn and_expr(&mut self) -> CResult<Expr> {
+        let mut lhs = self.not_expr()?;
+        while self.eat(&Tok::KwAnd) {
+            let rhs = self.not_expr()?;
+            lhs = Expr::binary(BinOp::And, lhs, rhs);
+        }
+        Ok(lhs)
+    }
+
+    fn not_expr(&mut self) -> CResult<Expr> {
+        if self.eat(&Tok::KwNot) || self.eat(&Tok::Not) {
+            let operand = self.not_expr()?;
+            return Ok(Expr::Unary { op: UnOp::Not, operand: Box::new(operand) });
+        }
+        self.cmp_expr()
+    }
+
+    fn cmp_expr(&mut self) -> CResult<Expr> {
+        let lhs = self.add_expr()?;
+        let op = match self.peek() {
+            Tok::Lt => BinOp::Lt,
+            Tok::Le => BinOp::Le,
+            Tok::Gt => BinOp::Gt,
+            Tok::Ge => BinOp::Ge,
+            Tok::EqEq => BinOp::Eq,
+            Tok::Ne => BinOp::Ne,
+            _ => return Ok(lhs),
+        };
+        self.bump();
+        let rhs = self.add_expr()?;
+        Ok(Expr::binary(op, lhs, rhs))
+    }
+
+    fn add_expr(&mut self) -> CResult<Expr> {
+        let mut lhs = self.mul_expr()?;
+        loop {
+            let op = match self.peek() {
+                Tok::Plus => BinOp::Add,
+                Tok::Minus => BinOp::Sub,
+                _ => break,
+            };
+            self.bump();
+            let rhs = self.mul_expr()?;
+            lhs = Expr::binary(op, lhs, rhs);
+        }
+        Ok(lhs)
+    }
+
+    fn mul_expr(&mut self) -> CResult<Expr> {
+        let mut lhs = self.unary()?;
+        loop {
+            let op = match self.peek() {
+                Tok::Star => BinOp::Mul,
+                Tok::Slash => BinOp::Div,
+                Tok::Percent => BinOp::Mod,
+                _ => break,
+            };
+            self.bump();
+            let rhs = self.unary()?;
+            lhs = Expr::binary(op, lhs, rhs);
+        }
+        Ok(lhs)
+    }
+
+    fn unary(&mut self) -> CResult<Expr> {
+        if self.eat(&Tok::Minus) {
+            let operand = self.unary()?;
+            // fold negation of literals immediately for cleaner IRs
+            if let Expr::Float(v) = operand {
+                return Ok(Expr::Float(-v));
+            }
+            return Ok(Expr::Unary { op: UnOp::Neg, operand: Box::new(operand) });
+        }
+        self.primary()
+    }
+
+    fn offset_component(&mut self) -> CResult<i32> {
+        let neg = self.eat(&Tok::Minus);
+        match self.peek().clone() {
+            Tok::Int(v) => {
+                self.bump();
+                Ok(if neg { -(v as i32) } else { v as i32 })
+            }
+            other => Err(CompileError::with_span(
+                "parse",
+                format!("field offsets must be integer literals, found {}", other.describe()),
+                self.peek_span(),
+            )),
+        }
+    }
+
+    fn primary(&mut self) -> CResult<Expr> {
+        match self.peek().clone() {
+            Tok::Float(v) => {
+                self.bump();
+                Ok(Expr::Float(v))
+            }
+            Tok::Int(v) => {
+                self.bump();
+                Ok(Expr::Float(v as f64))
+            }
+            Tok::KwTrue => {
+                self.bump();
+                Ok(Expr::Bool(true))
+            }
+            Tok::KwFalse => {
+                self.bump();
+                Ok(Expr::Bool(false))
+            }
+            Tok::LParen => {
+                self.bump();
+                let e = self.expr()?;
+                self.expect(Tok::RParen)?;
+                Ok(e)
+            }
+            Tok::Ident(name) => {
+                let t = self.bump();
+                match self.peek() {
+                    Tok::LBracket => {
+                        self.bump();
+                        let i = self.offset_component()?;
+                        self.expect(Tok::Comma)?;
+                        let j = self.offset_component()?;
+                        self.expect(Tok::Comma)?;
+                        let k = self.offset_component()?;
+                        let close = self.expect(Tok::RBracket)?;
+                        Ok(Expr::Field {
+                            name,
+                            offset: [i, j, k],
+                            span: t.span.merge(close.span),
+                        })
+                    }
+                    Tok::LParen => {
+                        self.bump();
+                        let mut args = Vec::new();
+                        if self.peek() != &Tok::RParen {
+                            loop {
+                                args.push(self.expr()?);
+                                if !self.eat(&Tok::Comma) {
+                                    break;
+                                }
+                            }
+                        }
+                        let close = self.expect(Tok::RParen)?;
+                        let span = t.span.merge(close.span);
+                        if let Some(b) = Builtin::from_name(&name) {
+                            if args.len() != b.arity() {
+                                return Err(CompileError::with_span(
+                                    "parse",
+                                    format!(
+                                        "builtin `{}` takes {} argument(s), got {}",
+                                        b.name(),
+                                        b.arity(),
+                                        args.len()
+                                    ),
+                                    span,
+                                ));
+                            }
+                            Ok(Expr::Builtin { func: b, args })
+                        } else {
+                            Ok(Expr::Call { name, args, span })
+                        }
+                    }
+                    _ => Ok(Expr::Name(name, t.span)),
+                }
+            }
+            other => Err(CompileError::with_span(
+                "parse",
+                format!("expected expression, found {}", other.describe()),
+                self.peek_span(),
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_stencil() {
+        let m = parse_module(
+            "stencil copy(a: Field<f64>, b: Field<f64>) {\n\
+               with computation(PARALLEL), interval(...) { b = a; }\n\
+             }",
+        )
+        .unwrap();
+        assert_eq!(m.stencils.len(), 1);
+        let s = &m.stencils[0];
+        assert_eq!(s.name, "copy");
+        assert_eq!(s.fields.len(), 2);
+        assert_eq!(s.computations.len(), 1);
+        assert_eq!(s.computations[0].policy, IterationPolicy::Parallel);
+    }
+
+    #[test]
+    fn parses_scalars_after_semicolon() {
+        let m = parse_module(
+            "stencil axpy(x: Field<f64>, y: Field<f64>; alpha: f64) {\n\
+               with computation(PARALLEL), interval(...) { y = y + alpha * x; }\n\
+             }",
+        )
+        .unwrap();
+        let s = &m.stencils[0];
+        assert_eq!(s.scalars.len(), 1);
+        assert_eq!(s.scalars[0].name, "alpha");
+    }
+
+    #[test]
+    fn parses_function_with_bindings() {
+        let m = parse_module(
+            "function lap(phi) {\n\
+               c = -4.0 * phi[0,0,0];\n\
+               return c + phi[-1,0,0] + phi[1,0,0] + phi[0,-1,0] + phi[0,1,0];\n\
+             }\n\
+             stencil s(a: Field<f64>, b: Field<f64>) {\n\
+               with computation(PARALLEL), interval(...) { b = lap(a); }\n\
+             }",
+        )
+        .unwrap();
+        assert_eq!(m.functions.len(), 1);
+        assert_eq!(m.functions[0].bindings.len(), 1);
+    }
+
+    #[test]
+    fn parses_multi_interval_computation() {
+        let m = parse_module(
+            "stencil s(a: Field<f64>, b: Field<f64>) {\n\
+               with computation(FORWARD) {\n\
+                 interval(0, 1) { b = a; }\n\
+                 interval(1, None) { b = b[0,0,-1] + a; }\n\
+               }\n\
+             }",
+        )
+        .unwrap();
+        let c = &m.stencils[0].computations[0];
+        assert_eq!(c.policy, IterationPolicy::Forward);
+        assert_eq!(c.blocks.len(), 2);
+        assert_eq!(c.blocks[1].interval.resolve(10), (1, 10));
+    }
+
+    #[test]
+    fn parses_ternary_and_if() {
+        let m = parse_module(
+            "stencil s(a: Field<f64>, b: Field<f64>; lim: f64) {\n\
+               with computation(PARALLEL), interval(...) {\n\
+                 b = a * a > lim ? a : lim;\n\
+                 if b > 0.0 { b = b * 2.0; } else { b = 0.0; }\n\
+               }\n\
+             }",
+        )
+        .unwrap();
+        let body = &m.stencils[0].computations[0].blocks[0].body;
+        assert_eq!(body.len(), 2);
+        assert!(matches!(body[0], Stmt::Assign { .. }));
+        assert!(matches!(body[1], Stmt::If { .. }));
+    }
+
+    #[test]
+    fn parses_externals_and_builtins() {
+        let m = parse_module(
+            "extern LIM = 0.01;\n\
+             stencil s(a: Field<f64>, b: Field<f64>) {\n\
+               with computation(PARALLEL), interval(...) { b = max(a, LIM) + sqrt(abs(a)); }\n\
+             }",
+        )
+        .unwrap();
+        assert_eq!(m.extern_defaults, vec![("LIM".to_string(), 0.01)]);
+    }
+
+    #[test]
+    fn precedence_mul_over_add_and_cmp() {
+        let e = parse_expr("a + b * c > d ? 1.0 : 0.0").unwrap();
+        // (((a + (b*c)) > d) ? 1 : 0)
+        match e {
+            Expr::Ternary { cond, .. } => match *cond {
+                Expr::Binary { op: BinOp::Gt, lhs, .. } => match *lhs {
+                    Expr::Binary { op: BinOp::Add, rhs, .. } => {
+                        assert!(matches!(*rhs, Expr::Binary { op: BinOp::Mul, .. }));
+                    }
+                    other => panic!("expected Add, got {other:?}"),
+                },
+                other => panic!("expected Gt, got {other:?}"),
+            },
+            other => panic!("expected ternary, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_empty_interval() {
+        let r = parse_module(
+            "stencil s(a: Field<f64>) {\n\
+               with computation(PARALLEL), interval(2, 2) { a = 1.0; }\n\
+             }",
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_params() {
+        assert!(parse_module(
+            "stencil s(a: Field<f64>, a: Field<f64>) {\n\
+               with computation(PARALLEL), interval(...) { a = 1.0; }\n\
+             }"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_builtin_arity() {
+        assert!(parse_expr("max(a)").is_err());
+        assert!(parse_expr("sqrt(a, b)").is_err());
+    }
+
+    #[test]
+    fn parses_negative_interval_bounds() {
+        let m = parse_module(
+            "stencil s(a: Field<f64>) {\n\
+               with computation(BACKWARD), interval(-1, None) { a = 0.0; }\n\
+             }",
+        )
+        .unwrap();
+        let iv = m.stencils[0].computations[0].blocks[0].interval;
+        assert_eq!(iv.resolve(80), (79, 80));
+    }
+
+    #[test]
+    fn error_reports_span() {
+        let err = parse_module("stencil s(a Field<f64>) {}").unwrap_err();
+        assert_eq!(err.phase, "parse");
+        assert!(err.span.is_some());
+    }
+}

@@ -1,0 +1,93 @@
+//! Source spans and compile-error reporting for the GTScript-RS frontend.
+
+use std::fmt;
+
+/// A half-open byte range into the original source, plus line/column of the
+/// start for human-readable diagnostics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Span {
+    pub start: usize,
+    pub end: usize,
+    pub line: u32,
+    pub col: u32,
+}
+
+impl Span {
+    pub fn new(start: usize, end: usize, line: u32, col: u32) -> Self {
+        Span { start, end, line, col }
+    }
+
+    /// Span covering both `self` and `other`.
+    pub fn merge(self, other: Span) -> Span {
+        Span {
+            start: self.start.min(other.start),
+            end: self.end.max(other.end),
+            line: if self.start <= other.start { self.line } else { other.line },
+            col: if self.start <= other.start { self.col } else { other.col },
+        }
+    }
+}
+
+impl fmt::Display for Span {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}", self.line, self.col)
+    }
+}
+
+/// A compile-time error produced anywhere in the toolchain
+/// (lexer, parser, semantic checks, analysis pipeline, backend codegen).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompileError {
+    pub message: String,
+    pub span: Option<Span>,
+    /// Which toolchain phase raised the error (e.g. "parse", "extents").
+    pub phase: &'static str,
+}
+
+impl CompileError {
+    pub fn new(phase: &'static str, message: impl Into<String>) -> Self {
+        CompileError { message: message.into(), span: None, phase }
+    }
+
+    pub fn with_span(phase: &'static str, message: impl Into<String>, span: Span) -> Self {
+        CompileError { message: message.into(), span: Some(span), phase }
+    }
+}
+
+impl fmt::Display for CompileError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.span {
+            Some(s) => write!(f, "[{}] {} (at {})", self.phase, self.message, s),
+            None => write!(f, "[{}] {}", self.phase, self.message),
+        }
+    }
+}
+
+impl std::error::Error for CompileError {}
+
+pub type CResult<T> = Result<T, CompileError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_merge_orders() {
+        let a = Span::new(0, 4, 1, 1);
+        let b = Span::new(10, 14, 2, 3);
+        let m = a.merge(b);
+        assert_eq!(m.start, 0);
+        assert_eq!(m.end, 14);
+        assert_eq!(m.line, 1);
+        let m2 = b.merge(a);
+        assert_eq!(m2, m);
+    }
+
+    #[test]
+    fn error_display() {
+        let e = CompileError::with_span("parse", "unexpected token", Span::new(3, 4, 2, 7));
+        assert_eq!(format!("{e}"), "[parse] unexpected token (at 2:7)");
+        let e2 = CompileError::new("extents", "boom");
+        assert_eq!(format!("{e2}"), "[extents] boom");
+    }
+}

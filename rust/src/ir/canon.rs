@@ -1,0 +1,159 @@
+//! Canonical serialization of IR trees.
+//!
+//! The paper's caching mechanism fingerprints stencil definitions "in such a
+//! way that code reformatting would not trigger a new compilation". Our
+//! canonical form serializes the *resolved* IR (spans dropped, formatting
+//! long gone, externals folded), so two sources differing only in layout,
+//! comments, or function factoring that inline to the same computation map
+//! to the same canonical string.
+
+use crate::dsl::ast::{Expr, Stmt, UnOp};
+
+/// Serialize an expression to a canonical, unambiguous prefix form.
+pub fn canon_expr(e: &Expr, out: &mut String) {
+    use std::fmt::Write as _;
+    match e {
+        Expr::Float(v) => {
+            // Bit-exact float identity (avoids 0.1 display surprises).
+            let _ = write!(out, "f{:016x}", v.to_bits());
+        }
+        Expr::Bool(b) => {
+            let _ = write!(out, "b{}", if *b { 1 } else { 0 });
+        }
+        Expr::Name(n, _) => {
+            let _ = write!(out, "n({n})");
+        }
+        Expr::Field { name, offset, .. } => {
+            let _ = write!(out, "F({name},{},{},{})", offset[0], offset[1], offset[2]);
+        }
+        Expr::Scalar(n) => {
+            let _ = write!(out, "s({n})");
+        }
+        Expr::External(n, _) => {
+            let _ = write!(out, "x({n})");
+        }
+        Expr::Unary { op, operand } => {
+            let _ = write!(out, "u{}(", match op {
+                UnOp::Neg => "-",
+                UnOp::Not => "!",
+            });
+            canon_expr(operand, out);
+            out.push(')');
+        }
+        Expr::Binary { op, lhs, rhs } => {
+            let _ = write!(out, "o{}(", op.symbol());
+            canon_expr(lhs, out);
+            out.push(',');
+            canon_expr(rhs, out);
+            out.push(')');
+        }
+        Expr::Ternary { cond, then_e, else_e } => {
+            out.push_str("t(");
+            canon_expr(cond, out);
+            out.push(',');
+            canon_expr(then_e, out);
+            out.push(',');
+            canon_expr(else_e, out);
+            out.push(')');
+        }
+        Expr::Call { name, args, .. } => {
+            let _ = write!(out, "c({name}");
+            for a in args {
+                out.push(',');
+                canon_expr(a, out);
+            }
+            out.push(')');
+        }
+        Expr::Builtin { func, args } => {
+            let _ = write!(out, "B({}", func.name());
+            for a in args {
+                out.push(',');
+                canon_expr(a, out);
+            }
+            out.push(')');
+        }
+    }
+}
+
+/// Canonical form of a statement list.
+pub fn canon_stmts(stmts: &[Stmt], out: &mut String) {
+    for s in stmts {
+        match s {
+            Stmt::Assign { target, value, .. } => {
+                out.push_str("A(");
+                out.push_str(target);
+                out.push(',');
+                canon_expr(value, out);
+                out.push_str(");");
+            }
+            Stmt::If { cond, then_body, else_body, .. } => {
+                out.push_str("I(");
+                canon_expr(cond, out);
+                out.push_str("){");
+                canon_stmts(then_body, out);
+                out.push_str("}{");
+                canon_stmts(else_body, out);
+                out.push_str("};");
+            }
+        }
+    }
+}
+
+/// 64-bit FNV-1a — stable across platforms and runs, unlike `DefaultHasher`.
+pub fn fnv1a64(data: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::parser::parse_expr;
+
+    #[test]
+    fn canon_is_formatting_insensitive() {
+        let a = parse_expr("a  +  b * ( c )").unwrap();
+        let b = parse_expr("a+b*c").unwrap();
+        let (mut ca, mut cb) = (String::new(), String::new());
+        canon_expr(&a, &mut ca);
+        canon_expr(&b, &mut cb);
+        assert_eq!(ca, cb);
+    }
+
+    #[test]
+    fn canon_distinguishes_structure() {
+        let a = parse_expr("(a + b) * c").unwrap();
+        let b = parse_expr("a + b * c").unwrap();
+        let (mut ca, mut cb) = (String::new(), String::new());
+        canon_expr(&a, &mut ca);
+        canon_expr(&b, &mut cb);
+        assert_ne!(ca, cb);
+    }
+
+    #[test]
+    fn canon_distinguishes_offsets_and_floats() {
+        let a = parse_expr("phi[1,0,0] * 0.5").unwrap();
+        let b = parse_expr("phi[0,1,0] * 0.5").unwrap();
+        let c = parse_expr("phi[1,0,0] * 0.25").unwrap();
+        let mut sa = String::new();
+        let mut sb = String::new();
+        let mut sc = String::new();
+        canon_expr(&a, &mut sa);
+        canon_expr(&b, &mut sb);
+        canon_expr(&c, &mut sc);
+        assert_ne!(sa, sb);
+        assert_ne!(sa, sc);
+    }
+
+    #[test]
+    fn fnv_known_values() {
+        // FNV-1a 64 test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+}

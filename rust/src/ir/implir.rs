@@ -1,0 +1,267 @@
+//! Implementation IR — the low-level representation the analysis pipeline
+//! produces and all backends consume (paper Fig. 2: definition IR →
+//! analysis → implementation IR → backend codegen).
+//!
+//! A stencil is a sequence of *multistages*, each with a vertical iteration
+//! policy; a multistage is a sequence of *stages*, each a single point-wise
+//! assignment over a vertical interval with a horizontal compute extent.
+//! All if/else control flow has been lowered to point-wise selects, function
+//! calls inlined, and externals folded to literals.
+
+use crate::dsl::ast::{DType, Expr, Interval, IterationPolicy, Offset, ScalarDecl};
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Inclusive per-axis halo extent: `lo <= 0 <= hi`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Extent {
+    pub i: (i32, i32),
+    pub j: (i32, i32),
+    pub k: (i32, i32),
+}
+
+impl Extent {
+    pub fn zero() -> Extent {
+        Extent { i: (0, 0), j: (0, 0), k: (0, 0) }
+    }
+
+    /// Extent covering a single access offset.
+    pub fn from_offset(off: Offset) -> Extent {
+        Extent {
+            i: (off[0].min(0), off[0].max(0)),
+            j: (off[1].min(0), off[1].max(0)),
+            k: (off[2].min(0), off[2].max(0)),
+        }
+    }
+
+    /// Hull of two extents.
+    pub fn union(self, other: Extent) -> Extent {
+        Extent {
+            i: (self.i.0.min(other.i.0), self.i.1.max(other.i.1)),
+            j: (self.j.0.min(other.j.0), self.j.1.max(other.j.1)),
+            k: (self.k.0.min(other.k.0), self.k.1.max(other.k.1)),
+        }
+    }
+
+    /// Minkowski sum: extent required from a field read at `off` by a stage
+    /// computing over `self`.
+    pub fn translate(self, off: Offset) -> Extent {
+        Extent {
+            i: (self.i.0 + off[0].min(0).min(off[0]), self.i.1 + off[0].max(0).max(off[0])),
+            j: (self.j.0 + off[1].min(0).min(off[1]), self.j.1 + off[1].max(0).max(off[1])),
+            k: (self.k.0 + off[2].min(0).min(off[2]), self.k.1 + off[2].max(0).max(off[2])),
+        }
+    }
+
+    /// Whether this extent is contained in `outer`.
+    pub fn within(&self, outer: &Extent) -> bool {
+        self.i.0 >= outer.i.0
+            && self.i.1 <= outer.i.1
+            && self.j.0 >= outer.j.0
+            && self.j.1 <= outer.j.1
+            && self.k.0 >= outer.k.0
+            && self.k.1 <= outer.k.1
+    }
+
+    /// Max halo width on any horizontal axis (used for storage allocation).
+    pub fn horizontal_halo(&self) -> usize {
+        let m = (-self.i.0).max(self.i.1).max(-self.j.0).max(self.j.1);
+        m.max(0) as usize
+    }
+}
+
+impl fmt::Display for Extent {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "[{},{}]x[{},{}]x[{},{}]",
+            self.i.0, self.i.1, self.j.0, self.j.1, self.k.0, self.k.1
+        )
+    }
+}
+
+/// Access intent of a field parameter, inferred by the analysis pipeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Intent {
+    In,
+    Out,
+    InOut,
+}
+
+impl fmt::Display for Intent {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Intent::In => write!(f, "in"),
+            Intent::Out => write!(f, "out"),
+            Intent::InOut => write!(f, "inout"),
+        }
+    }
+}
+
+/// A field parameter with everything the backends/coordinator need.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FieldInfo {
+    pub name: String,
+    pub dtype: DType,
+    pub intent: Intent,
+    /// Halo this stencil reads around the compute domain for this field.
+    pub extent: Extent,
+}
+
+/// A temporary (local) field, never observable outside the stencil.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TempField {
+    pub name: String,
+    pub dtype: DType,
+    /// Halo around the compute domain over which the temporary is computed.
+    pub extent: Extent,
+}
+
+/// A lowered assignment: `target[0,0,0] = value` with `value` free of
+/// `Call`/`Name`/`External` nodes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Assign {
+    pub target: String,
+    pub value: Expr,
+}
+
+/// One stage: a single assignment applied point-wise over `interval`
+/// (vertically) and the compute domain extended by `extent` (horizontally).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Stage {
+    pub stmt: Assign,
+    pub interval: Interval,
+    pub extent: Extent,
+    /// `(field, offset)` pairs read by this stage (deduplicated).
+    pub reads: Vec<(String, Offset)>,
+}
+
+impl Stage {
+    pub fn collect_reads(stmt: &Assign) -> Vec<(String, Offset)> {
+        let mut reads = Vec::new();
+        stmt.value.visit_fields(&mut |name, off| {
+            let key = (name.to_string(), off);
+            if !reads.contains(&key) {
+                reads.push(key);
+            }
+        });
+        reads
+    }
+}
+
+/// Stages sharing one vertical iteration policy, executed as a unit.
+/// PARALLEL multistages iterate stage-outermost (each stage is applied over
+/// its whole 3-D region before the next starts); FORWARD/BACKWARD iterate
+/// k-outermost with the stages applied in order on each level.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Multistage {
+    pub policy: IterationPolicy,
+    pub stages: Vec<Stage>,
+}
+
+/// The complete implementation IR for one stencil.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StencilIr {
+    pub name: String,
+    pub fields: Vec<FieldInfo>,
+    pub scalars: Vec<ScalarDecl>,
+    pub temporaries: Vec<TempField>,
+    pub multistages: Vec<Multistage>,
+    /// External values this stencil was specialized with (part of identity).
+    pub externals: BTreeMap<String, f64>,
+    /// Formatting-insensitive identity of this IR (see `cache::fingerprint`).
+    pub fingerprint: u64,
+}
+
+impl StencilIr {
+    pub fn field(&self, name: &str) -> Option<&FieldInfo> {
+        self.fields.iter().find(|f| f.name == name)
+    }
+
+    pub fn temporary(&self, name: &str) -> Option<&TempField> {
+        self.temporaries.iter().find(|t| t.name == name)
+    }
+
+    pub fn is_temporary(&self, name: &str) -> bool {
+        self.temporary(name).is_some()
+    }
+
+    pub fn num_stages(&self) -> usize {
+        self.multistages.iter().map(|m| m.stages.len()).sum()
+    }
+
+    /// Hull of all field halo extents — the minimum storage halo the caller
+    /// must provide around the compute domain.
+    pub fn max_field_extent(&self) -> Extent {
+        self.fields.iter().fold(Extent::zero(), |acc, f| acc.union(f.extent))
+    }
+
+    /// Pretty multi-line dump, used by `repro inspect`.
+    pub fn dump(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(s, "stencil {} (fingerprint {:016x})", self.name, self.fingerprint);
+        for f in &self.fields {
+            let _ = writeln!(s, "  field {}: {} {} extent {}", f.name, f.dtype, f.intent, f.extent);
+        }
+        for sc in &self.scalars {
+            let _ = writeln!(s, "  scalar {}: {}", sc.name, sc.dtype);
+        }
+        for t in &self.temporaries {
+            let _ = writeln!(s, "  temp {}: {} extent {}", t.name, t.dtype, t.extent);
+        }
+        for (mi, ms) in self.multistages.iter().enumerate() {
+            let _ = writeln!(s, "  multistage {} {}", mi, ms.policy);
+            for (si, st) in ms.stages.iter().enumerate() {
+                let _ = writeln!(
+                    s,
+                    "    stage {} {} extent {} -> {}",
+                    si, st.interval, st.extent, st.stmt.target
+                );
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn extent_union_and_translate() {
+        let a = Extent { i: (-1, 1), j: (0, 0), k: (0, 0) };
+        let b = Extent { i: (0, 2), j: (-1, 0), k: (0, 1) };
+        let u = a.union(b);
+        assert_eq!(u, Extent { i: (-1, 2), j: (-1, 0), k: (0, 1) });
+
+        // A stage computing over extent a that reads f at offset (1, -1, 0)
+        // requires f over a wider extent.
+        let t = a.translate([1, -1, 0]);
+        assert_eq!(t, Extent { i: (-1, 2), j: (-1, 0), k: (0, 0) });
+    }
+
+    #[test]
+    fn extent_from_offset() {
+        assert_eq!(
+            Extent::from_offset([-2, 3, 0]),
+            Extent { i: (-2, 0), j: (0, 3), k: (0, 0) }
+        );
+        assert_eq!(Extent::from_offset([0, 0, 0]), Extent::zero());
+    }
+
+    #[test]
+    fn within_and_halo() {
+        let inner = Extent { i: (-1, 1), j: (-1, 1), k: (0, 0) };
+        let outer = Extent { i: (-2, 2), j: (-1, 1), k: (0, 0) };
+        assert!(inner.within(&outer));
+        assert!(!outer.within(&inner));
+        assert_eq!(outer.horizontal_halo(), 2);
+    }
+
+    #[test]
+    fn translate_zero_is_identity() {
+        let a = Extent { i: (-3, 2), j: (-1, 4), k: (0, 0) };
+        assert_eq!(a.translate([0, 0, 0]), a);
+    }
+}

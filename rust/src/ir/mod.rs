@@ -1,0 +1,15 @@
+//! Intermediate representations.
+//!
+//! * The *definition IR* is the AST itself ([`crate::dsl::ast`]), produced
+//!   by either frontend.
+//! * The *implementation IR* ([`implir`]) is the scheduled, lowered form the
+//!   backends consume.
+//! * [`canon`] provides the canonical serialization both the fingerprint
+//!   cache and the IR tests rely on.
+
+pub mod canon;
+pub mod implir;
+
+pub use implir::{
+    Assign, Extent, FieldInfo, Intent, Multistage, Stage, StencilIr, TempField,
+};

@@ -1,0 +1,37 @@
+//! # gt4rs — GT4Py reproduced as a Rust + JAX/Pallas stencil framework
+//!
+//! A reproduction of *"GT4Py: High Performance Stencils for Weather and
+//! Climate Applications using Python"* (Paredes et al., CSCS/ETH, 2023) as
+//! a three-layer Rust + JAX + Pallas system:
+//!
+//! * **Frontend** ([`dsl`]) — GTScript-RS: a textual DSL plus a builder API
+//!   producing the definition IR;
+//! * **Analysis** ([`analysis`]) — inlining, name resolution, external
+//!   folding, control-flow lowering, semantic checks, and halo/extent
+//!   analysis, producing the implementation IR ([`ir`]);
+//! * **Backends** ([`backend`]) — `debug` (scalar interpreter), `vector`
+//!   (plane-vectorized evaluator), `xla` (XlaBuilder codegen JIT-compiled on
+//!   PJRT), and `pjrt-aot` (prebuilt JAX/Pallas HLO artifacts);
+//! * **Storage** ([`storage`]) — NumPy-like 3-D containers with
+//!   backend-specific layout, alignment and halo padding;
+//! * **Coordinator** ([`coordinator`]) — stencil registry, run-time storage
+//!   checks, dispatch, metrics;
+//! * **Cache** ([`cache`]) — fingerprint-based compilation caching;
+//! * **Runtime** ([`runtime`]) — PJRT client / executable management;
+//! * **Model** ([`model`]) — an "isentropic-like" advection–diffusion model
+//!   (the paper's Tasmania analog) composed from framework stencils.
+
+pub mod analysis;
+pub mod backend;
+pub mod baseline;
+pub mod cache;
+pub mod coordinator;
+pub mod dsl;
+pub mod ir;
+pub mod model;
+pub mod runtime;
+pub mod stdlib;
+pub mod storage;
+
+pub use dsl::span::{CResult, CompileError};
+pub use ir::implir::StencilIr;

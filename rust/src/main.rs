@@ -1,0 +1,345 @@
+//! `repro` — the gt4rs command-line driver.
+//!
+//! Subcommands:
+//!   inspect   dump the IRs the toolchain produces for a stencil
+//!   run       execute a stencil on synthetic data and report timing
+//!   validate  run a stencil on every backend and compare the results
+//!   bench     Figure-3 style backend sweep over domain sizes
+//!   model     run the isentropic-like demonstration model
+//!
+//! (The CLI is hand-rolled: the offline vendored crate set has no clap.)
+
+use anyhow::{anyhow, bail, Result};
+use gt4rs::backend::BACKEND_NAMES;
+use gt4rs::coordinator::Coordinator;
+use gt4rs::model::{IsentropicModel, ModelConfig};
+use gt4rs::stdlib;
+use gt4rs::storage::Storage;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Minimal flag parser: `--key value` pairs after the subcommand.
+struct Flags {
+    map: BTreeMap<String, String>,
+}
+
+impl Flags {
+    fn parse(args: &[String]) -> Result<Flags> {
+        let mut map = BTreeMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let k = &args[i];
+            if !k.starts_with("--") {
+                bail!("unexpected argument `{k}` (flags are --key value)");
+            }
+            let key = k.trim_start_matches("--").to_string();
+            if i + 1 >= args.len() {
+                bail!("flag --{key} needs a value");
+            }
+            map.insert(key, args[i + 1].clone());
+            i += 2;
+        }
+        Ok(Flags { map })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(|s| s.as_str())
+    }
+
+    fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+}
+
+fn parse_domain(s: &str) -> Result<[usize; 3]> {
+    let parts: Vec<usize> = s
+        .split('x')
+        .map(|p| p.parse::<usize>())
+        .collect::<Result<_, _>>()
+        .map_err(|_| anyhow!("domain must look like 64x64x32, got `{s}`"))?;
+    if parts.len() != 3 {
+        bail!("domain must have three components, got `{s}`");
+    }
+    Ok([parts[0], parts[1], parts[2]])
+}
+
+fn parse_externals(s: Option<&str>) -> Result<BTreeMap<String, f64>> {
+    let mut out = BTreeMap::new();
+    if let Some(s) = s {
+        for pair in s.split(',') {
+            let (k, v) = pair
+                .split_once('=')
+                .ok_or_else(|| anyhow!("externals must be k=v pairs, got `{pair}`"))?;
+            out.insert(k.to_string(), v.parse::<f64>()?);
+        }
+    }
+    Ok(out)
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_help();
+        return Ok(());
+    };
+    let flags = Flags::parse(&args[1..])?;
+    match cmd.as_str() {
+        "inspect" => cmd_inspect(&flags),
+        "run" => cmd_run(&flags),
+        "validate" => cmd_validate(&flags),
+        "bench" => cmd_bench(&flags),
+        "model" => cmd_model(&flags),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown subcommand `{other}` (try `repro help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "repro — GT4Py-reproduction stencil framework (gt4rs)
+
+USAGE: repro <subcommand> [--flag value]...
+
+SUBCOMMANDS
+  inspect  --stencil NAME [--file F.gts] [--externals K=V,..]
+           dump the implementation IR (stages, extents, fingerprint)
+  run      --stencil NAME [--backend B] [--domain IxJxK] [--iters N]
+           run on synthetic data, print checksum + timing
+  validate --stencil NAME [--domain IxJxK] [--backends a,b,..]
+           cross-check every backend against `debug`
+  bench    [--stencil hdiff|vadv] [--domains 32x32x16,..] [--iters N]
+           [--backends a,b,..] Figure-3 style sweep (see also cargo bench)
+  model    [--backend B] [--domain IxJxK] [--steps N]
+           run the isentropic-like demo model, log diagnostics
+
+Backends: {}  (library stencils: {})",
+        BACKEND_NAMES.join(", "),
+        stdlib::names().join(", ")
+    );
+}
+
+/// Load a stencil from --file or the standard library.
+fn load_ir(coord: &mut Coordinator, flags: &Flags) -> Result<(u64, gt4rs::StencilIr)> {
+    let name = flags
+        .get("stencil")
+        .ok_or_else(|| anyhow!("--stencil NAME is required"))?;
+    let externals = parse_externals(flags.get("externals"))?;
+    let fp = if let Some(path) = flags.get("file") {
+        let src = std::fs::read_to_string(path)?;
+        coord.compile_source(&src, name, &externals)?
+    } else if stdlib::source(name).is_some() {
+        let src = stdlib::source(name).unwrap();
+        coord.compile_source(src, name, &externals)?
+    } else {
+        bail!("`{name}` is not a library stencil; pass --file F.gts");
+    };
+    let ir = coord.ir(fp)?;
+    Ok((fp, ir))
+}
+
+fn cmd_inspect(flags: &Flags) -> Result<()> {
+    let mut coord = Coordinator::new();
+    let (_, ir) = load_ir(&mut coord, flags)?;
+    print!("{}", ir.dump());
+    Ok(())
+}
+
+/// Synthetic storages for a stencil at a domain: smooth deterministic data.
+fn synthetic_fields(
+    coord: &mut Coordinator,
+    fp: u64,
+    ir: &gt4rs::StencilIr,
+    domain: [usize; 3],
+) -> Result<Vec<(String, Storage)>> {
+    let mut out = Vec::new();
+    for (idx, f) in ir.fields.iter().enumerate() {
+        let mut s = coord.alloc_field(fp, &f.name, domain)?;
+        let phase = idx as f64;
+        let [ni, nj, nk] = domain;
+        let h = s.info.halo;
+        for i in -(h[0].0 as i64)..(ni + h[0].1) as i64 {
+            for j in -(h[1].0 as i64)..(nj + h[1].1) as i64 {
+                for k in -(h[2].0 as i64)..(nk + h[2].1) as i64 {
+                    let v = (0.1 * (i as f64) + phase).sin()
+                        * (0.13 * (j as f64) - phase).cos()
+                        + 0.01 * k as f64;
+                    s.set(i, j, k, v);
+                }
+            }
+        }
+        out.push((f.name.clone(), s));
+    }
+    Ok(out)
+}
+
+fn default_scalars(ir: &gt4rs::StencilIr) -> Vec<(String, f64)> {
+    ir.scalars.iter().map(|s| (s.name.clone(), 0.1)).collect()
+}
+
+fn cmd_run(flags: &Flags) -> Result<()> {
+    let mut coord = Coordinator::new();
+    let (fp, ir) = load_ir(&mut coord, flags)?;
+    let backend = flags.get_or("backend", "vector");
+    let domain = parse_domain(flags.get_or("domain", "64x64x32"))?;
+    let iters: usize = flags.get_or("iters", "3").parse()?;
+
+    let mut fields = synthetic_fields(&mut coord, fp, &ir, domain)?;
+    let scalars = default_scalars(&ir);
+    for it in 0..iters {
+        let mut refs: Vec<(&str, &mut Storage)> =
+            fields.iter_mut().map(|(n, s)| (n.as_str(), s)).collect();
+        let srefs: Vec<(&str, f64)> =
+            scalars.iter().map(|(n, v)| (n.as_str(), *v)).collect();
+        let stats = coord.run(fp, backend, &mut refs, &srefs, domain)?;
+        println!("iter {it}: checks {:?}  execute {:?}", stats.checks, stats.execute);
+    }
+    for (n, s) in &fields {
+        println!("  {:<12} domain sum = {:+.9e}", n, s.domain_sum());
+    }
+    Ok(())
+}
+
+fn cmd_validate(flags: &Flags) -> Result<()> {
+    let mut coord = Coordinator::new();
+    let (fp, ir) = load_ir(&mut coord, flags)?;
+    let domain = parse_domain(flags.get_or("domain", "24x20x12"))?;
+    let backends: Vec<&str> =
+        flags.get_or("backends", "debug,vector,xla").split(',').collect();
+
+    // Reference: debug backend.
+    let mut reference = synthetic_fields(&mut coord, fp, &ir, domain)?;
+    let scalars = default_scalars(&ir);
+    {
+        let mut refs: Vec<(&str, &mut Storage)> =
+            reference.iter_mut().map(|(n, s)| (n.as_str(), s)).collect();
+        let srefs: Vec<(&str, f64)> =
+            scalars.iter().map(|(n, v)| (n.as_str(), *v)).collect();
+        coord.run(fp, "debug", &mut refs, &srefs, domain)?;
+    }
+
+    let mut ok = true;
+    for be in backends {
+        if be == "debug" {
+            continue;
+        }
+        let mut fields = synthetic_fields(&mut coord, fp, &ir, domain)?;
+        {
+            let mut refs: Vec<(&str, &mut Storage)> =
+                fields.iter_mut().map(|(n, s)| (n.as_str(), s)).collect();
+            let srefs: Vec<(&str, f64)> =
+                scalars.iter().map(|(n, v)| (n.as_str(), *v)).collect();
+            coord.run(fp, be, &mut refs, &srefs, domain)?;
+        }
+        for ((n, r), (_, v)) in reference.iter().zip(&fields) {
+            let diff = r.max_abs_diff(v);
+            let pass = diff < 1e-11;
+            ok &= pass;
+            println!(
+                "{be:<10} {n:<12} max|Δ| = {diff:.3e}  {}",
+                if pass { "OK" } else { "MISMATCH" }
+            );
+        }
+    }
+    if !ok {
+        bail!("backend mismatch detected");
+    }
+    Ok(())
+}
+
+fn cmd_bench(flags: &Flags) -> Result<()> {
+    let stencil = flags.get_or("stencil", "hdiff");
+    let domains: Vec<[usize; 3]> = flags
+        .get_or("domains", "16x16x8,32x32x16,48x48x24,64x64x32")
+        .split(',')
+        .map(parse_domain)
+        .collect::<Result<_>>()?;
+    let backends: Vec<String> = flags
+        .get_or("backends", "debug,vector,xla,pjrt-aot")
+        .split(',')
+        .map(str::to_string)
+        .collect();
+    let iters: usize = flags.get_or("iters", "5").parse()?;
+
+    let mut coord = Coordinator::new();
+    let fp = coord.compile_library(stencil)?;
+    let ir = coord.ir(fp)?;
+    println!(
+        "# {stencil}: mean wall time per call over {iters} iters (first call = compile, excluded)"
+    );
+    println!("{:<12} {:>14} {:>14}", "domain", "backend", "mean");
+    for domain in &domains {
+        for be in &backends {
+            let mut fields = synthetic_fields(&mut coord, fp, &ir, *domain)?;
+            let scalars = default_scalars(&ir);
+            // warm-up (compile) run
+            let warm = {
+                let mut refs: Vec<(&str, &mut Storage)> =
+                    fields.iter_mut().map(|(n, s)| (n.as_str(), s)).collect();
+                let srefs: Vec<(&str, f64)> =
+                    scalars.iter().map(|(n, v)| (n.as_str(), *v)).collect();
+                coord.run(fp, be, &mut refs, &srefs, *domain)
+            };
+            if let Err(e) = warm {
+                println!(
+                    "{:<12} {:>14} {:>14}",
+                    format!("{}x{}x{}", domain[0], domain[1], domain[2]),
+                    be,
+                    format!("n/a ({})", first_line(&format!("{e:#}")))
+                );
+                continue;
+            }
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                let mut refs: Vec<(&str, &mut Storage)> =
+                    fields.iter_mut().map(|(n, s)| (n.as_str(), s)).collect();
+                let srefs: Vec<(&str, f64)> =
+                    scalars.iter().map(|(n, v)| (n.as_str(), *v)).collect();
+                coord.run(fp, be, &mut refs, &srefs, *domain)?;
+            }
+            let mean = t0.elapsed() / iters as u32;
+            println!(
+                "{:<12} {:>14} {:>14?}",
+                format!("{}x{}x{}", domain[0], domain[1], domain[2]),
+                be,
+                mean
+            );
+        }
+    }
+    Ok(())
+}
+
+fn first_line(s: &str) -> String {
+    s.lines().next().unwrap_or("").chars().take(60).collect()
+}
+
+fn cmd_model(flags: &Flags) -> Result<()> {
+    let domain = parse_domain(flags.get_or("domain", "48x48x16"))?;
+    let steps: usize = flags.get_or("steps", "100").parse()?;
+    let backend = flags.get_or("backend", "vector").to_string();
+    let config = ModelConfig { domain, backend: backend.clone(), ..ModelConfig::default() };
+    let mut model = IsentropicModel::new(config)?;
+    println!("# isentropic-like model: domain {domain:?} backend {backend} steps {steps}");
+    println!("{:>6} {:>16} {:>12} {:>12} {:>12}", "step", "mass", "min", "max", "wall");
+    let t0 = Instant::now();
+    for s in 0..steps {
+        let d = model.step()?;
+        if s % 10.max(steps / 20) == 0 || s + 1 == steps {
+            println!(
+                "{:>6} {:>16.9e} {:>12.5e} {:>12.5e} {:>12?}",
+                d.step, d.mass, d.min, d.max, d.wall
+            );
+        }
+    }
+    println!("total wall: {:?}", t0.elapsed());
+    Ok(())
+}

@@ -1,0 +1,271 @@
+//! The model driver: time stepping, halo management, diagnostics.
+
+use super::grid::{gaussian_blob, periodic_halo_update};
+use crate::coordinator::Coordinator;
+use crate::storage::{Storage, StorageInfo};
+use anyhow::Result;
+use std::time::{Duration, Instant};
+
+/// Model configuration.
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub domain: [usize; 3],
+    /// Constant horizontal winds (grid cells per unit time).
+    pub u: f64,
+    pub v: f64,
+    /// Vertical velocity amplitude.
+    pub w_amp: f64,
+    /// Horizontal diffusion coefficient (flux-limited hdiff weight).
+    pub diffusion_coeff: f64,
+    pub dt: f64,
+    pub dx: f64,
+    pub dy: f64,
+    pub dz: f64,
+    /// Backend every stencil runs on.
+    pub backend: String,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        ModelConfig {
+            domain: [32, 32, 8],
+            u: 1.0,
+            v: 0.5,
+            w_amp: 0.2,
+            diffusion_coeff: 0.05,
+            dt: 0.2,
+            dx: 1.0,
+            dy: 1.0,
+            dz: 1.0,
+            backend: "vector".to_string(),
+        }
+    }
+}
+
+/// Per-step diagnostics.
+#[derive(Debug, Clone, Copy)]
+pub struct StepDiagnostics {
+    pub step: usize,
+    /// Total tracer mass over the domain (should be ~conserved).
+    pub mass: f64,
+    pub min: f64,
+    pub max: f64,
+    pub wall: Duration,
+}
+
+/// The composed model.
+pub struct IsentropicModel {
+    pub config: ModelConfig,
+    coord: Coordinator,
+    fp_advect: u64,
+    fp_hdiff: u64,
+    fp_vadv: u64,
+    /// Tracer field (with hdiff halo).
+    pub phi: Storage,
+    /// Scratch for stencil outputs.
+    out: Storage,
+    /// hdiff coefficient field.
+    coeff: Storage,
+    /// Vertical wind field.
+    w: Storage,
+    step_count: usize,
+}
+
+impl IsentropicModel {
+    pub fn new(config: ModelConfig) -> Result<IsentropicModel> {
+        let mut coord = Coordinator::new();
+        let fp_advect = coord.compile_library("upwind_advect")?;
+        let fp_hdiff = coord.compile_library("hdiff")?;
+        let fp_vadv = coord.compile_library("vadv")?;
+        let domain = config.domain;
+        // A single halo-3 allocation satisfies every stencil in the suite
+        // (hdiff needs 2, upwind needs 1).
+        let halo = 3;
+        let ci = domain[0] as f64 / 2.0;
+        let cj = domain[1] as f64 / 2.0;
+        let sigma = domain[0] as f64 / 8.0;
+        let phi = gaussian_blob(domain, halo, ci, cj, sigma);
+        let out = Storage::with_horizontal_halo(domain, halo);
+        let mut coeff = Storage::with_horizontal_halo(domain, halo);
+        coeff.fill(config.diffusion_coeff);
+        // Gentle vertically-sheared updraft.
+        let w = Storage::from_fn(domain, 0, |_, _, k| {
+            config.w_amp * (k as f64 / domain[2].max(1) as f64 - 0.5)
+        });
+        Ok(IsentropicModel {
+            config,
+            coord,
+            fp_advect,
+            fp_hdiff,
+            fp_vadv,
+            phi,
+            out,
+            coeff,
+            w,
+            step_count: 0,
+        })
+    }
+
+    /// Advance one time step; returns diagnostics.
+    pub fn step(&mut self) -> Result<StepDiagnostics> {
+        let t0 = Instant::now();
+        let cfg = self.config.clone();
+        let domain = cfg.domain;
+        let backend = cfg.backend.as_str();
+
+        // (1) horizontal upwind advection: phi -> out
+        periodic_halo_update(&mut self.phi);
+        {
+            let mut refs: Vec<(&str, &mut Storage)> =
+                vec![("phi", &mut self.phi), ("out", &mut self.out)];
+            self.coord.run(
+                self.fp_advect,
+                backend,
+                &mut refs,
+                &[
+                    ("u", cfg.u),
+                    ("v", cfg.v),
+                    ("dtdx", cfg.dt / cfg.dx),
+                    ("dtdy", cfg.dt / cfg.dy),
+                ],
+                domain,
+            )?;
+        }
+        std::mem::swap(&mut self.phi, &mut self.out);
+
+        // (2) flux-limited horizontal diffusion: phi -> out
+        periodic_halo_update(&mut self.phi);
+        {
+            let mut refs: Vec<(&str, &mut Storage)> = vec![
+                ("in_phi", &mut self.phi),
+                ("coeff", &mut self.coeff),
+                ("out_phi", &mut self.out),
+            ];
+            self.coord
+                .run(self.fp_hdiff, backend, &mut refs, &[], domain)?;
+        }
+        std::mem::swap(&mut self.phi, &mut self.out);
+
+        // (3) implicit vertical advection: phi in place
+        {
+            // vadv needs no horizontal halo; reuse phi directly.
+            let mut refs: Vec<(&str, &mut Storage)> =
+                vec![("phi", &mut self.phi), ("w", &mut self.w)];
+            self.coord.run(
+                self.fp_vadv,
+                backend,
+                &mut refs,
+                &[("dtdz", cfg.dt / cfg.dz)],
+                domain,
+            )?;
+        }
+
+        self.step_count += 1;
+        let (mass, min, max) = self.diagnose();
+        Ok(StepDiagnostics {
+            step: self.step_count,
+            mass,
+            min,
+            max,
+            wall: t0.elapsed(),
+        })
+    }
+
+    /// Run `n` steps, returning the last diagnostics.
+    pub fn run(&mut self, n: usize) -> Result<Vec<StepDiagnostics>> {
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.step()?);
+        }
+        Ok(out)
+    }
+
+    fn diagnose(&self) -> (f64, f64, f64) {
+        let [ni, nj, nk] = self.config.domain;
+        let mut mass = 0.0;
+        let mut min = f64::INFINITY;
+        let mut max = f64::NEG_INFINITY;
+        for i in 0..ni as i64 {
+            for j in 0..nj as i64 {
+                for k in 0..nk as i64 {
+                    let v = self.phi.get(i, j, k);
+                    mass += v;
+                    min = min.min(v);
+                    max = max.max(v);
+                }
+            }
+        }
+        (mass, min, max)
+    }
+
+    pub fn coordinator(&self) -> &Coordinator {
+        &self.coord
+    }
+
+    /// Clone the tracer field (for cross-backend comparisons).
+    pub fn phi_snapshot(&self) -> Storage {
+        let mut s = Storage::zeros(StorageInfo::new(self.config.domain, [(0, 0); 3]));
+        let [ni, nj, nk] = self.config.domain;
+        for i in 0..ni as i64 {
+            for j in 0..nj as i64 {
+                for k in 0..nk as i64 {
+                    s.set(i, j, k, self.phi.get(i, j, k));
+                }
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_config(backend: &str) -> ModelConfig {
+        ModelConfig {
+            domain: [12, 12, 4],
+            backend: backend.to_string(),
+            ..ModelConfig::default()
+        }
+    }
+
+    #[test]
+    fn model_runs_and_stays_stable() {
+        let mut m = IsentropicModel::new(small_config("vector")).unwrap();
+        let diags = m.run(10).unwrap();
+        let last = diags.last().unwrap();
+        assert_eq!(last.step, 10);
+        assert!(last.max.is_finite());
+        assert!(last.max <= 1.5, "blew up: max {}", last.max);
+        assert!(last.min >= -0.5);
+    }
+
+    #[test]
+    fn mass_approximately_conserved_without_diffusion_loss() {
+        // Upwind + periodic BCs conserve mass exactly; limited hdiff and
+        // implicit vadv conserve it approximately.
+        let mut cfg = small_config("vector");
+        cfg.diffusion_coeff = 0.02;
+        // Advective-form vertical advection is not exactly conservative
+        // under shear; keep w small so the check isolates the horizontal
+        // operators (which are conservative in flux form).
+        cfg.w_amp = 0.02;
+        let mut m = IsentropicModel::new(cfg).unwrap();
+        let before = m.phi_snapshot().domain_sum();
+        let diags = m.run(20).unwrap();
+        let after = diags.last().unwrap().mass;
+        let rel = ((after - before) / before).abs();
+        assert!(rel < 0.05, "mass drift {rel}");
+    }
+
+    #[test]
+    fn backends_agree_on_model_trajectory() {
+        let mut md = IsentropicModel::new(small_config("debug")).unwrap();
+        let mut mv = IsentropicModel::new(small_config("vector")).unwrap();
+        md.run(5).unwrap();
+        mv.run(5).unwrap();
+        let d = md.phi_snapshot();
+        let v = mv.phi_snapshot();
+        assert!(d.max_abs_diff(&v) < 1e-12);
+    }
+}

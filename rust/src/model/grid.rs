@@ -1,0 +1,77 @@
+//! Grid utilities: periodic boundary conditions and initial fields.
+
+use crate::storage::Storage;
+
+/// Fill the horizontal halo of `s` periodically from the opposite domain
+/// edges (doubly-periodic channel). The vertical halo, if any, is filled
+/// by clamping to the top/bottom level.
+pub fn periodic_halo_update(s: &mut Storage) {
+    let [ni, nj, nk] = s.info.shape;
+    let (hi0, hi1) = s.info.halo[0];
+    let (hj0, hj1) = s.info.halo[1];
+    let (hk0, hk1) = s.info.halo[2];
+    let (ni, nj, nk) = (ni as i64, nj as i64, nk as i64);
+    let wrap = |x: i64, n: i64| ((x % n) + n) % n;
+    for i in -(hi0 as i64)..ni + hi1 as i64 {
+        for j in -(hj0 as i64)..nj + hj1 as i64 {
+            for k in -(hk0 as i64)..nk + hk1 as i64 {
+                let inside = i >= 0 && i < ni && j >= 0 && j < nj && k >= 0 && k < nk;
+                if inside {
+                    continue;
+                }
+                let src = (wrap(i, ni), wrap(j, nj), k.clamp(0, nk - 1));
+                let v = s.get(src.0, src.1, src.2);
+                s.set(i, j, k, v);
+            }
+        }
+    }
+}
+
+/// A smooth blob: Gaussian bump centered at (ci, cj) with width `sigma`,
+/// constant in k (then modulated by level).
+pub fn gaussian_blob(domain: [usize; 3], halo: usize, ci: f64, cj: f64, sigma: f64) -> Storage {
+    let mut s = Storage::from_fn(domain, halo, |i, j, k| {
+        let di = i as f64 - ci;
+        let dj = j as f64 - cj;
+        let vertical = 1.0 + 0.1 * (k as f64 / domain[2].max(1) as f64);
+        vertical * (-(di * di + dj * dj) / (2.0 * sigma * sigma)).exp()
+    });
+    periodic_halo_update(&mut s);
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn periodic_wrap_values() {
+        let mut s = Storage::from_fn([4, 4, 2], 0, |i, j, k| (100 * i + 10 * j + k) as f64);
+        let mut with_halo = Storage::with_horizontal_halo([4, 4, 2], 2);
+        for i in 0..4 {
+            for j in 0..4 {
+                for k in 0..2 {
+                    with_halo.set(i as i64, j as i64, k as i64, s.get(i as i64, j as i64, k as i64));
+                }
+            }
+        }
+        periodic_halo_update(&mut with_halo);
+        // left halo column = rightmost domain column
+        assert_eq!(with_halo.get(-1, 0, 0), s.get(3, 0, 0));
+        assert_eq!(with_halo.get(-2, 2, 1), s.get(2, 2, 1));
+        assert_eq!(with_halo.get(4, 1, 0), s.get(0, 1, 0));
+        assert_eq!(with_halo.get(5, 1, 0), s.get(1, 1, 0));
+        // corners wrap both axes
+        assert_eq!(with_halo.get(-1, -1, 0), s.get(3, 3, 0));
+        s.set(0, 0, 0, 0.0); // silence unused-mut lint path
+    }
+
+    #[test]
+    fn gaussian_blob_peak_at_center() {
+        let s = gaussian_blob([16, 16, 4], 2, 8.0, 8.0, 3.0);
+        let center = s.get(8, 8, 0);
+        for (i, j) in [(0i64, 0i64), (15, 15), (3, 12)] {
+            assert!(s.get(i, j, 0) < center);
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! PJRT runtime: load/compile XLA computations and execute them from the
+//! Rust hot path (no Python at run time).
+//!
+//! Two entry points, matching the two compiled backends:
+//! * [`Runtime::load_hlo_text`] — load an AOT artifact produced by
+//!   `python/compile/aot.py` (HLO *text*: the image's xla_extension 0.5.1
+//!   rejects jax≥0.5 serialized protos, see DESIGN.md);
+//! * [`Runtime::compile`] — JIT-compile an [`xla::XlaComputation`] built by
+//!   the `xla` codegen backend.
+
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+use std::rc::Rc;
+
+/// Shared PJRT CPU client.
+#[derive(Clone)]
+pub struct Runtime {
+    client: Rc<xla::PjRtClient>,
+}
+
+impl Runtime {
+    /// Create a runtime on the PJRT CPU client.
+    pub fn cpu() -> Result<Runtime> {
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Runtime { client: Rc::new(client) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact.
+    pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.compile(&comp)
+            .with_context(|| format!("compiling artifact {}", path.display()))
+    }
+
+    /// JIT-compile a computation built with `XlaBuilder`.
+    pub fn compile(&self, comp: &xla::XlaComputation) -> Result<Executable> {
+        let exe = self.client.compile(comp).map_err(|e| anyhow!("XLA compile: {e:?}"))?;
+        Ok(Executable { exe, client: self.client.clone() })
+    }
+}
+
+/// An input argument for one execution.
+pub enum Arg<'a> {
+    /// f64 tensor: flat C-order data + dims.
+    F64(&'a [f64], Vec<usize>),
+    /// f64 scalar (rank 0).
+    Scalar(f64),
+}
+
+/// A compiled, loaded executable.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    client: Rc<xla::PjRtClient>,
+}
+
+impl Executable {
+    /// Execute with host arguments, returning each output flattened to f64
+    /// (C-order). Tuple outputs (jax `return_tuple=True`) are decomposed.
+    pub fn run_f64(&self, args: &[Arg]) -> Result<Vec<Vec<f64>>> {
+        // Stage inputs as device buffers (avoids a literal copy).
+        let mut buffers = Vec::with_capacity(args.len());
+        for a in args {
+            let buf = match a {
+                Arg::F64(data, dims) => self
+                    .client
+                    .buffer_from_host_buffer::<f64>(data, dims, None)
+                    .map_err(|e| anyhow!("host->device transfer: {e:?}"))?,
+                Arg::Scalar(v) => self
+                    .client
+                    .buffer_from_host_buffer::<f64>(&[*v], &[], None)
+                    .map_err(|e| anyhow!("host->device transfer: {e:?}"))?,
+            };
+            buffers.push(buf);
+        }
+        let outputs = self
+            .exe
+            .execute_b::<xla::PjRtBuffer>(&buffers)
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        let replica = outputs
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("no output replica"))?;
+        let mut results = Vec::new();
+        for buf in replica {
+            let mut lit =
+                buf.to_literal_sync().map_err(|e| anyhow!("device->host: {e:?}"))?;
+            let ty = lit
+                .primitive_type()
+                .map_err(|e| anyhow!("literal type: {e:?}"))?;
+            if ty == xla::PrimitiveType::Tuple {
+                let parts =
+                    lit.decompose_tuple().map_err(|e| anyhow!("tuple decompose: {e:?}"))?;
+                for p in parts {
+                    results.push(literal_to_f64(&p)?);
+                }
+            } else {
+                results.push(literal_to_f64(&lit)?);
+            }
+        }
+        Ok(results)
+    }
+}
+
+fn literal_to_f64(lit: &xla::Literal) -> Result<Vec<f64>> {
+    let ty = lit.ty().map_err(|e| anyhow!("literal type: {e:?}"))?;
+    match ty {
+        xla::ElementType::F64 => {
+            lit.to_vec::<f64>().map_err(|e| anyhow!("literal read: {e:?}"))
+        }
+        xla::ElementType::F32 => {
+            let conv = lit
+                .convert(xla::PrimitiveType::F64)
+                .map_err(|e| anyhow!("literal convert: {e:?}"))?;
+            conv.to_vec::<f64>().map_err(|e| anyhow!("literal read: {e:?}"))
+        }
+        other => Err(anyhow!("unsupported output element type {other:?}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runtime_builds_and_runs_builder_computation() {
+        let rt = Runtime::cpu().unwrap();
+        assert_eq!(rt.platform(), "cpu");
+        // sqrt(x + x) with x = 12.5 -> 5
+        let builder = xla::XlaBuilder::new("t");
+        let shape = xla::Shape::array::<f64>(vec![]);
+        let p = builder.parameter_s(0, &shape, "x").unwrap();
+        let comp = p.add_(&p).unwrap().sqrt().unwrap().build().unwrap();
+        let exe = rt.compile(&comp).unwrap();
+        let out = exe.run_f64(&[Arg::Scalar(12.5)]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert!((out[0][0] - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn runtime_runs_tensor_computation() {
+        let rt = Runtime::cpu().unwrap();
+        let builder = xla::XlaBuilder::new("t2");
+        let shape = xla::Shape::array::<f64>(vec![2, 3]);
+        let p = builder.parameter_s(0, &shape, "x").unwrap();
+        let two = builder.c0(2.0f64).unwrap();
+        let comp = p.mul_(&two).unwrap().build().unwrap();
+        let exe = rt.compile(&comp).unwrap();
+        let data: Vec<f64> = (0..6).map(|v| v as f64).collect();
+        let out = exe.run_f64(&[Arg::F64(&data, vec![2, 3])]).unwrap();
+        assert_eq!(out[0], vec![0.0, 2.0, 4.0, 6.0, 8.0, 10.0]);
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let rt = Runtime::cpu().unwrap();
+        assert!(rt.load_hlo_text("/nonexistent/file.hlo.txt").is_err());
+    }
+}

@@ -1,0 +1,122 @@
+//! The stencil standard library: the paper's workloads as `.gts` sources,
+//! embedded in the binary and compiled through the regular pipeline.
+//!
+//! * `hdiff` — horizontal diffusion with flux limiting (Fig. 3 left);
+//! * `vadv` — implicit vertical advection / Thomas solver (Fig. 3 right);
+//! * `diffusion` — the paper's Figure 1 listing, verbatim;
+//! * `basic` — copy/laplacian/diffuse/upwind/column-sum/smagorinsky
+//!   building blocks used by the examples and the model.
+
+use crate::analysis;
+use crate::dsl::span::CResult;
+use crate::ir::implir::StencilIr;
+use std::collections::BTreeMap;
+
+pub const HDIFF_SRC: &str = include_str!("gts/hdiff.gts");
+pub const VADV_SRC: &str = include_str!("gts/vadv.gts");
+pub const FIGURE1_SRC: &str = include_str!("gts/figure1.gts");
+pub const BASIC_SRC: &str = include_str!("gts/basic.gts");
+
+/// `(stencil name, module source)` for every library stencil.
+pub const LIBRARY: [(&str, &str); 9] = [
+    ("hdiff", HDIFF_SRC),
+    ("vadv", VADV_SRC),
+    ("diffusion", FIGURE1_SRC),
+    ("copy", BASIC_SRC),
+    ("laplacian", BASIC_SRC),
+    ("diffuse", BASIC_SRC),
+    ("upwind_advect", BASIC_SRC),
+    ("column_sum", BASIC_SRC),
+    ("smagorinsky", BASIC_SRC),
+];
+
+/// Source module containing `name`, if it is a library stencil.
+pub fn source(name: &str) -> Option<&'static str> {
+    LIBRARY.iter().find(|(n, _)| *n == name).map(|(_, s)| *s)
+}
+
+/// Compile a library stencil to implementation IR.
+pub fn compile(name: &str) -> CResult<StencilIr> {
+    compile_with_externals(name, &BTreeMap::new())
+}
+
+/// Compile a library stencil with external overrides.
+pub fn compile_with_externals(
+    name: &str,
+    externals: &BTreeMap<String, f64>,
+) -> CResult<StencilIr> {
+    let src = source(name).ok_or_else(|| {
+        crate::dsl::span::CompileError::new(
+            "stdlib",
+            format!("no library stencil named `{name}`"),
+        )
+    })?;
+    analysis::compile_source(src, name, externals)
+}
+
+/// All library stencil names.
+pub fn names() -> Vec<&'static str> {
+    LIBRARY.iter().map(|(n, _)| *n).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::implir::Intent;
+
+    #[test]
+    fn all_library_stencils_compile() {
+        for (name, _) in LIBRARY {
+            let ir = compile(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(ir.name, name);
+            assert!(ir.num_stages() > 0);
+        }
+    }
+
+    #[test]
+    fn hdiff_has_classic_halo_2() {
+        let ir = compile("hdiff").unwrap();
+        let inp = ir.field("in_phi").unwrap();
+        assert_eq!(inp.extent.i, (-2, 2));
+        assert_eq!(inp.extent.j, (-2, 2));
+        assert_eq!(inp.extent.k, (0, 0));
+        assert_eq!(ir.field("out_phi").unwrap().intent, Intent::Out);
+        // three temporaries: lapf, flx, fly
+        assert_eq!(ir.temporaries.len(), 3);
+    }
+
+    #[test]
+    fn vadv_structure() {
+        let ir = compile("vadv").unwrap();
+        assert_eq!(ir.multistages.len(), 2);
+        assert_eq!(
+            ir.multistages[0].policy,
+            crate::dsl::ast::IterationPolicy::Forward
+        );
+        assert_eq!(
+            ir.multistages[1].policy,
+            crate::dsl::ast::IterationPolicy::Backward
+        );
+        let phi = ir.field("phi").unwrap();
+        assert_eq!(phi.intent, Intent::InOut);
+        // No horizontal halo for a purely vertical solver.
+        assert_eq!(phi.extent.i, (0, 0));
+        assert_eq!(phi.extent.j, (0, 0));
+    }
+
+    #[test]
+    fn figure1_externals_default() {
+        let ir = compile("diffusion").unwrap();
+        assert_eq!(ir.externals.get("LIM"), Some(&0.01));
+        let mut ov = BTreeMap::new();
+        ov.insert("LIM".to_string(), 0.5);
+        let ir2 = compile_with_externals("diffusion", &ov).unwrap();
+        assert_ne!(ir.fingerprint, ir2.fingerprint);
+    }
+
+    #[test]
+    fn unknown_stencil_is_error() {
+        assert!(compile("nope").is_err());
+        assert!(source("nope").is_none());
+    }
+}

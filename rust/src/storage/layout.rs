@@ -1,0 +1,138 @@
+//! Memory layouts for 3-D storages.
+//!
+//! The paper's `storage` containers customize "address space, layout,
+//! alignment and padding" per backend. We implement the layout/alignment/
+//! padding triple for host memory: the dimension order determines which
+//! axis is stride-1, and the innermost dimension may be padded so rows
+//! start at an alignment boundary (the GridTools trick enabling aligned
+//! vector loads).
+
+use std::fmt;
+
+/// Order of dimensions from outermost to innermost (stride-1 last).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Layout {
+    /// C-order for (I, J, K): K is stride-1 — the natural layout for
+    /// vertical (column) algorithms.
+    IJK,
+    /// K outermost, I stride-1 — the natural layout for horizontal-plane
+    /// vectorization (used by the `vector` backend).
+    KJI,
+    /// J outermost (I stride-1) — exercised in tests for generality.
+    JKI,
+}
+
+impl Layout {
+    /// Default layout for a backend name (mirrors GT4Py's per-backend
+    /// storage defaults).
+    pub fn for_backend(backend: &str) -> Layout {
+        match backend {
+            "debug" => Layout::IJK,
+            "vector" => Layout::KJI,
+            // XLA literals are row-major C-order over (I, J, K).
+            "xla" | "pjrt-aot" => Layout::IJK,
+            _ => Layout::IJK,
+        }
+    }
+
+    /// Permutation mapping (i, j, k) to (outer, mid, inner).
+    pub fn axes(&self) -> [usize; 3] {
+        match self {
+            Layout::IJK => [0, 1, 2],
+            Layout::KJI => [2, 1, 0],
+            Layout::JKI => [1, 2, 0],
+        }
+    }
+
+    /// Strides (in elements) for the given *padded* per-axis sizes.
+    /// `padded[axis]` is the allocated size along `axis` (i=0, j=1, k=2).
+    pub fn strides(&self, padded: [usize; 3]) -> [usize; 3] {
+        let order = self.axes();
+        let mut strides = [0usize; 3];
+        let mut s = 1usize;
+        for &ax in order.iter().rev() {
+            strides[ax] = s;
+            s *= padded[ax];
+        }
+        strides
+    }
+
+    /// The innermost (stride-1) axis index.
+    pub fn inner_axis(&self) -> usize {
+        self.axes()[2]
+    }
+}
+
+impl fmt::Display for Layout {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Layout::IJK => write!(f, "IJK"),
+            Layout::KJI => write!(f, "KJI"),
+            Layout::JKI => write!(f, "JKI"),
+        }
+    }
+}
+
+/// Alignment (in elements) applied to the innermost padded dimension.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Alignment(pub usize);
+
+impl Default for Alignment {
+    fn default() -> Self {
+        // 64 bytes / 8-byte elements: one cache line of f64.
+        Alignment(8)
+    }
+}
+
+impl Alignment {
+    /// Round `n` up to the alignment.
+    pub fn pad(&self, n: usize) -> usize {
+        if self.0 <= 1 {
+            return n;
+        }
+        n.div_ceil(self.0) * self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strides_ijk() {
+        // (I,J,K) C-order over padded sizes (4, 5, 6): k stride 1,
+        // j stride 6, i stride 30.
+        let s = Layout::IJK.strides([4, 5, 6]);
+        assert_eq!(s, [30, 6, 1]);
+    }
+
+    #[test]
+    fn strides_kji() {
+        // K outermost, I innermost over (4, 5, 6): i stride 1, j stride 4,
+        // k stride 20.
+        let s = Layout::KJI.strides([4, 5, 6]);
+        assert_eq!(s, [1, 4, 20]);
+    }
+
+    #[test]
+    fn strides_jki() {
+        let s = Layout::JKI.strides([4, 5, 6]);
+        // order (j, k, i): i stride 1, k stride 4, j stride 24.
+        assert_eq!(s, [1, 24, 4]);
+    }
+
+    #[test]
+    fn alignment_pads_up() {
+        let a = Alignment(8);
+        assert_eq!(a.pad(1), 8);
+        assert_eq!(a.pad(8), 8);
+        assert_eq!(a.pad(9), 16);
+        assert_eq!(Alignment(1).pad(7), 7);
+    }
+
+    #[test]
+    fn backend_defaults() {
+        assert_eq!(Layout::for_backend("vector"), Layout::KJI);
+        assert_eq!(Layout::for_backend("xla"), Layout::IJK);
+    }
+}

@@ -1,0 +1,8 @@
+//! Backend-aware 3-D field storages (paper §2.2 "storage" containers).
+
+pub mod layout;
+#[allow(clippy::module_inception)]
+pub mod storage;
+
+pub use layout::{Alignment, Layout};
+pub use storage::{Storage, StorageInfo};

@@ -1,0 +1,468 @@
+//! 3-D field storages — the NumPy-like containers of the paper (§2.2).
+//!
+//! A [`Storage`] owns a flat buffer holding a (ni, nj, nk) *compute domain*
+//! surrounded by a halo, with a backend-specific [`Layout`] and innermost
+//! padding to an [`Alignment`] boundary. Index (0, 0, 0) addresses the
+//! first point of the compute domain; negative indices address the halo
+//! (mirroring GT4Py's `origin` convention). Exports/imports to C-order
+//! buffers provide the zero-copy-in-spirit Buffer-Protocol interop with the
+//! PJRT runtime.
+
+use super::layout::{Alignment, Layout};
+use crate::dsl::ast::DType;
+use std::fmt;
+
+/// Descriptor of a storage's geometry (everything except the data).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StorageInfo {
+    /// Compute-domain shape (ni, nj, nk).
+    pub shape: [usize; 3],
+    /// Halo width on each side of each axis: `[(ilo, ihi), (jlo, jhi), (klo, khi)]`.
+    pub halo: [(usize, usize); 3],
+    pub layout: Layout,
+    pub alignment: Alignment,
+    pub dtype: DType,
+}
+
+impl StorageInfo {
+    pub fn new(shape: [usize; 3], halo: [(usize, usize); 3]) -> Self {
+        StorageInfo {
+            shape,
+            halo,
+            layout: Layout::IJK,
+            alignment: Alignment::default(),
+            dtype: DType::F64,
+        }
+    }
+
+    /// Total (unpadded) size along each axis including halos.
+    pub fn full_shape(&self) -> [usize; 3] {
+        [
+            self.shape[0] + self.halo[0].0 + self.halo[0].1,
+            self.shape[1] + self.halo[1].0 + self.halo[1].1,
+            self.shape[2] + self.halo[2].0 + self.halo[2].1,
+        ]
+    }
+
+    /// Allocated size per axis: the innermost axis is padded to alignment.
+    pub fn padded_shape(&self) -> [usize; 3] {
+        let mut p = self.full_shape();
+        let inner = self.layout.inner_axis();
+        p[inner] = self.alignment.pad(p[inner]);
+        p
+    }
+
+    pub fn strides(&self) -> [usize; 3] {
+        self.layout.strides(self.padded_shape())
+    }
+
+    pub fn len(&self) -> usize {
+        let p = self.padded_shape();
+        p[0] * p[1] * p[2]
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// An owned 3-D field.
+#[derive(Clone)]
+pub struct Storage {
+    pub info: StorageInfo,
+    /// Flat buffer in `info.layout` order with padding; f64 host
+    /// representation regardless of `dtype` (converted at PJRT boundaries).
+    data: Vec<f64>,
+    strides: [usize; 3],
+    /// Flat offset of compute-domain origin (0,0,0).
+    origin: usize,
+}
+
+impl Storage {
+    /// Allocate a zero-filled storage.
+    pub fn zeros(info: StorageInfo) -> Storage {
+        let strides = info.strides();
+        let origin = info.halo[0].0 * strides[0]
+            + info.halo[1].0 * strides[1]
+            + info.halo[2].0 * strides[2];
+        Storage { data: vec![0.0; info.len()], strides, origin, info }
+    }
+
+    /// Shorthand: domain shape with a symmetric halo, default layout.
+    pub fn with_halo(shape: [usize; 3], halo: usize) -> Storage {
+        Storage::zeros(StorageInfo::new(
+            shape,
+            [(halo, halo), (halo, halo), (halo, halo)],
+        ))
+    }
+
+    /// Shorthand: symmetric horizontal halo, no vertical halo.
+    pub fn with_horizontal_halo(shape: [usize; 3], halo: usize) -> Storage {
+        Storage::zeros(StorageInfo::new(shape, [(halo, halo), (halo, halo), (0, 0)]))
+    }
+
+    /// Build from a function of the *domain* index (halo stays zero).
+    pub fn from_fn(
+        shape: [usize; 3],
+        halo: usize,
+        mut f: impl FnMut(usize, usize, usize) -> f64,
+    ) -> Storage {
+        let mut s = Storage::with_halo(shape, halo);
+        for i in 0..shape[0] {
+            for j in 0..shape[1] {
+                for k in 0..shape[2] {
+                    s.set(i as i64, j as i64, k as i64, f(i, j, k));
+                }
+            }
+        }
+        s
+    }
+
+    /// Build from a function over the full extended (halo-inclusive) index
+    /// space; `f` receives signed domain coordinates (negative = halo).
+    pub fn from_fn_extended(
+        shape: [usize; 3],
+        halo: usize,
+        mut f: impl FnMut(i64, i64, i64) -> f64,
+    ) -> Storage {
+        let mut s = Storage::with_halo(shape, halo);
+        let h = halo as i64;
+        for i in -h..shape[0] as i64 + h {
+            for j in -h..shape[1] as i64 + h {
+                for k in -h..shape[2] as i64 + h {
+                    s.set(i, j, k, f(i, j, k));
+                }
+            }
+        }
+        s
+    }
+
+    #[inline(always)]
+    fn flat(&self, i: i64, j: i64, k: i64) -> usize {
+        (self.origin as i64
+            + i * self.strides[0] as i64
+            + j * self.strides[1] as i64
+            + k * self.strides[2] as i64) as usize
+    }
+
+    /// Read at signed domain coordinates (negative = halo). Panics on
+    /// out-of-allocation access in debug builds.
+    #[inline(always)]
+    pub fn get(&self, i: i64, j: i64, k: i64) -> f64 {
+        debug_assert!(self.in_bounds(i, j, k), "storage OOB read ({i},{j},{k})");
+        self.data[self.flat(i, j, k)]
+    }
+
+    #[inline(always)]
+    pub fn set(&mut self, i: i64, j: i64, k: i64, v: f64) {
+        debug_assert!(self.in_bounds(i, j, k), "storage OOB write ({i},{j},{k})");
+        let idx = self.flat(i, j, k);
+        self.data[idx] = v;
+    }
+
+    /// Whether signed coordinates fall inside the allocated halo+domain box.
+    pub fn in_bounds(&self, i: i64, j: i64, k: i64) -> bool {
+        let h = self.info.halo;
+        let s = self.info.shape;
+        i >= -(h[0].0 as i64)
+            && i < s[0] as i64 + h[0].1 as i64
+            && j >= -(h[1].0 as i64)
+            && j < s[1] as i64 + h[1].1 as i64
+            && k >= -(h[2].0 as i64)
+            && k < s[2] as i64 + h[2].1 as i64
+    }
+
+    pub fn shape(&self) -> [usize; 3] {
+        self.info.shape
+    }
+
+    pub fn fill(&mut self, v: f64) {
+        self.data.fill(v);
+    }
+
+    /// Raw flat access for the vector backend's inner loops.
+    #[inline(always)]
+    pub fn raw(&self) -> &[f64] {
+        &self.data
+    }
+
+    #[inline(always)]
+    pub fn raw_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    #[inline(always)]
+    pub fn raw_origin(&self) -> usize {
+        self.origin
+    }
+
+    #[inline(always)]
+    pub fn raw_strides(&self) -> [usize; 3] {
+        self.strides
+    }
+
+    /// Export the full halo-inclusive box to a C-order (I,J,K) f64 buffer —
+    /// the PJRT interchange format (the Buffer-Protocol analog).
+    pub fn to_c_order(&self) -> Vec<f64> {
+        let fs = self.info.full_shape();
+        let h = self.info.halo;
+        let mut out = Vec::with_capacity(fs[0] * fs[1] * fs[2]);
+        for i in 0..fs[0] {
+            for j in 0..fs[1] {
+                for k in 0..fs[2] {
+                    out.push(self.get(
+                        i as i64 - h[0].0 as i64,
+                        j as i64 - h[1].0 as i64,
+                        k as i64 - h[2].0 as i64,
+                    ));
+                }
+            }
+        }
+        out
+    }
+
+    /// Import a C-order (I,J,K) halo-inclusive buffer (inverse of
+    /// [`Storage::to_c_order`]).
+    pub fn from_c_order(&mut self, buf: &[f64]) {
+        let fs = self.info.full_shape();
+        assert_eq!(buf.len(), fs[0] * fs[1] * fs[2], "c-order buffer size mismatch");
+        let h = self.info.halo;
+        let mut idx = 0;
+        for i in 0..fs[0] {
+            for j in 0..fs[1] {
+                for k in 0..fs[2] {
+                    self.set(
+                        i as i64 - h[0].0 as i64,
+                        j as i64 - h[1].0 as i64,
+                        k as i64 - h[2].0 as i64,
+                        buf[idx],
+                    );
+                    idx += 1;
+                }
+            }
+        }
+    }
+
+    /// Export an arbitrary signed box `[lo, lo+dims)` (domain coordinates,
+    /// negative = halo) to a C-order buffer — used by the compiled backends
+    /// to stage exactly the sub-box a stencil requires.
+    pub fn box_to_c_order(&self, lo: [i64; 3], dims: [usize; 3]) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.box_write_c_order(lo, dims, &mut out);
+        out
+    }
+
+    /// Like [`Storage::box_to_c_order`], but reuses `out`'s allocation
+    /// (hot-path staging for the compiled backends) and bulk-copies
+    /// contiguous K rows when the layout allows.
+    pub fn box_write_c_order(&self, lo: [i64; 3], dims: [usize; 3], out: &mut Vec<f64>) {
+        out.clear();
+        out.resize(dims[0] * dims[1] * dims[2], 0.0);
+        let st = self.strides;
+        let (s0, s1, s2) = (st[0] as i64, st[1] as i64, st[2] as i64);
+        let org = self.origin as i64;
+        let wk = dims[2];
+        let mut idx = 0;
+        if s2 == 1 {
+            for i in 0..dims[0] as i64 {
+                let ibase = org + (lo[0] + i) * s0;
+                for j in 0..dims[1] as i64 {
+                    let base = (ibase + (lo[1] + j) * s1 + lo[2]) as usize;
+                    out[idx..idx + wk].copy_from_slice(&self.data[base..base + wk]);
+                    idx += wk;
+                }
+            }
+        } else {
+            for i in 0..dims[0] as i64 {
+                for j in 0..dims[1] as i64 {
+                    for k in 0..dims[2] as i64 {
+                        out[idx] = self.get(lo[0] + i, lo[1] + j, lo[2] + k);
+                        idx += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Export only the compute domain to a C-order buffer.
+    pub fn domain_to_c_order(&self) -> Vec<f64> {
+        let s = self.info.shape;
+        let mut out = Vec::with_capacity(s[0] * s[1] * s[2]);
+        for i in 0..s[0] {
+            for j in 0..s[1] {
+                for k in 0..s[2] {
+                    out.push(self.get(i as i64, j as i64, k as i64));
+                }
+            }
+        }
+        out
+    }
+
+    /// Write back a C-order compute-domain buffer, leaving the halo alone.
+    /// Bulk-copies contiguous K rows when the layout allows.
+    pub fn domain_from_c_order(&mut self, buf: &[f64]) {
+        let s = self.info.shape;
+        assert_eq!(buf.len(), s[0] * s[1] * s[2], "domain buffer size mismatch");
+        let st = self.strides;
+        if st[2] == 1 {
+            let (s0, s1) = (st[0], st[1]);
+            let org = self.origin;
+            let wk = s[2];
+            let mut idx = 0;
+            for i in 0..s[0] {
+                let ibase = org + i * s0;
+                for j in 0..s[1] {
+                    let base = ibase + j * s1;
+                    self.data[base..base + wk].copy_from_slice(&buf[idx..idx + wk]);
+                    idx += wk;
+                }
+            }
+            return;
+        }
+        let mut idx = 0;
+        for i in 0..s[0] {
+            for j in 0..s[1] {
+                for k in 0..s[2] {
+                    self.set(i as i64, j as i64, k as i64, buf[idx]);
+                    idx += 1;
+                }
+            }
+        }
+    }
+
+    /// Max |a - b| over the compute domain.
+    pub fn max_abs_diff(&self, other: &Storage) -> f64 {
+        assert_eq!(self.info.shape, other.info.shape);
+        let s = self.info.shape;
+        let mut m: f64 = 0.0;
+        for i in 0..s[0] as i64 {
+            for j in 0..s[1] as i64 {
+                for k in 0..s[2] as i64 {
+                    m = m.max((self.get(i, j, k) - other.get(i, j, k)).abs());
+                }
+            }
+        }
+        m
+    }
+
+    /// Sum over the compute domain (conservation diagnostics).
+    pub fn domain_sum(&self) -> f64 {
+        let s = self.info.shape;
+        let mut acc = 0.0;
+        for i in 0..s[0] as i64 {
+            for j in 0..s[1] as i64 {
+                for k in 0..s[2] as i64 {
+                    acc += self.get(i, j, k);
+                }
+            }
+        }
+        acc
+    }
+}
+
+impl fmt::Debug for Storage {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "Storage({:?} halo {:?} layout {} dtype {})",
+            self.info.shape, self.info.halo, self.info.layout, self.info.dtype
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_set_get_all_layouts() {
+        for layout in [Layout::IJK, Layout::KJI, Layout::JKI] {
+            let mut info = StorageInfo::new([3, 4, 5], [(1, 1), (1, 1), (0, 0)]);
+            info.layout = layout;
+            let mut s = Storage::zeros(info);
+            s.set(2, 3, 4, 7.5);
+            s.set(-1, 0, 0, 1.25);
+            assert_eq!(s.get(2, 3, 4), 7.5, "layout {layout}");
+            assert_eq!(s.get(-1, 0, 0), 1.25, "layout {layout}");
+            assert_eq!(s.get(0, 0, 0), 0.0);
+        }
+    }
+
+    #[test]
+    fn distinct_cells_distinct_slots() {
+        // Exhaustively check the index map is injective for an asymmetric
+        // halo and each layout.
+        for layout in [Layout::IJK, Layout::KJI, Layout::JKI] {
+            let mut info = StorageInfo::new([3, 2, 4], [(2, 1), (0, 1), (1, 0)]);
+            info.layout = layout;
+            let mut s = Storage::zeros(info);
+            let mut count = 0.0;
+            for i in -2..4i64 {
+                for j in 0..3i64 {
+                    for k in -1..4i64 {
+                        count += 1.0;
+                        s.set(i, j, k, count);
+                    }
+                }
+            }
+            let mut expect = 0.0;
+            for i in -2..4i64 {
+                for j in 0..3i64 {
+                    for k in -1..4i64 {
+                        expect += 1.0;
+                        assert_eq!(s.get(i, j, k), expect, "layout {layout}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn padding_respects_alignment() {
+        let mut info = StorageInfo::new([3, 3, 3], [(0, 0), (0, 0), (0, 0)]);
+        info.alignment = Alignment(8);
+        assert_eq!(info.padded_shape()[info.layout.inner_axis()], 8);
+        assert_eq!(info.len(), 3 * 3 * 8);
+    }
+
+    #[test]
+    fn c_order_roundtrip() {
+        let src = Storage::from_fn_extended([2, 3, 2], 1, |i, j, k| {
+            (i * 100 + j * 10 + k) as f64
+        });
+        let buf = src.to_c_order();
+        let mut dst = Storage::with_halo([2, 3, 2], 1);
+        dst.from_c_order(&buf);
+        assert_eq!(dst.get(-1, -1, -1), src.get(-1, -1, -1));
+        assert_eq!(dst.get(1, 2, 1), src.get(1, 2, 1));
+        assert_eq!(dst.max_abs_diff(&src), 0.0);
+    }
+
+    #[test]
+    fn domain_c_order_leaves_halo() {
+        let mut s = Storage::with_halo([2, 2, 1], 1);
+        s.set(-1, 0, 0, 42.0);
+        let buf = vec![1.0, 2.0, 3.0, 4.0];
+        s.domain_from_c_order(&buf);
+        assert_eq!(s.get(0, 0, 0), 1.0);
+        assert_eq!(s.get(1, 1, 0), 4.0);
+        assert_eq!(s.get(-1, 0, 0), 42.0); // halo untouched
+        assert_eq!(s.domain_to_c_order(), buf);
+    }
+
+    #[test]
+    fn from_fn_and_sum() {
+        let s = Storage::from_fn([2, 2, 2], 0, |i, j, k| (i + j + k) as f64);
+        assert_eq!(s.domain_sum(), 12.0);
+    }
+
+    #[test]
+    fn in_bounds_logic() {
+        let s = Storage::with_horizontal_halo([4, 4, 4], 2);
+        assert!(s.in_bounds(-2, 0, 0));
+        assert!(!s.in_bounds(-3, 0, 0));
+        assert!(s.in_bounds(5, 5, 3));
+        assert!(!s.in_bounds(0, 0, -1));
+        assert!(!s.in_bounds(0, 0, 4));
+    }
+}

@@ -1,0 +1,151 @@
+//! AOT-pipeline integration: the full L1→L2→L3 path. Requires
+//! `make artifacts`; each test skips loudly when artifacts are absent.
+
+use gt4rs::runtime::{Arg, Runtime};
+use gt4rs::storage::Storage;
+use std::path::PathBuf;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have(name: &str) -> bool {
+    artifacts_dir().join(name).is_file()
+}
+
+#[test]
+fn model_step_artifact_composes_hdiff_and_vadv() {
+    // The L2 `model_step` artifact fuses the Pallas hdiff + vadv kernels in
+    // one XLA program; its output must equal running the two library
+    // stencils back-to-back on the debug backend.
+    let name = "model_step_12x10x6.hlo.txt";
+    if !have(name) {
+        eprintln!("SKIP: {name} missing — run `make artifacts`");
+        return;
+    }
+    let domain = [12usize, 10, 6];
+    let [ni, nj, nk] = domain;
+    let dtdz = 0.25;
+
+    // inputs
+    let mut phi_box = Storage::with_horizontal_halo(domain, 2);
+    let mut coeff = Storage::with_halo(domain, 0);
+    let mut w = Storage::with_halo(domain, 0);
+    let mut seed = 3u64;
+    let mut rnd = move || {
+        seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        ((seed >> 33) as f64) / (u32::MAX as f64) - 0.5
+    };
+    let h = phi_box.info.halo;
+    for i in -(h[0].0 as i64)..(ni + h[0].1) as i64 {
+        for j in -(h[1].0 as i64)..(nj + h[1].1) as i64 {
+            for k in 0..nk as i64 {
+                phi_box.set(i, j, k, rnd());
+            }
+        }
+    }
+    for i in 0..ni as i64 {
+        for j in 0..nj as i64 {
+            for k in 0..nk as i64 {
+                coeff.set(i, j, k, 0.02 + 0.01 * rnd());
+                w.set(i, j, k, rnd());
+            }
+        }
+    }
+
+    // Path A: the fused L2 artifact via the raw runtime.
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load_hlo_text(artifacts_dir().join(name)).unwrap();
+    let phi_data = phi_box.to_c_order();
+    let coeff_data = coeff.domain_to_c_order();
+    let w_data = w.domain_to_c_order();
+    let outputs = exe
+        .run_f64(&[
+            Arg::F64(&phi_data, vec![ni + 4, nj + 4, nk]),
+            Arg::F64(&coeff_data, vec![ni, nj, nk]),
+            Arg::F64(&w_data, vec![ni, nj, nk]),
+            Arg::Scalar(dtdz),
+        ])
+        .unwrap();
+    assert_eq!(outputs.len(), 1);
+
+    // Path B: library hdiff then vadv on the debug backend.
+    let mut coord = gt4rs::coordinator::Coordinator::new();
+    let fp_h = coord.compile_library("hdiff").unwrap();
+    let fp_v = coord.compile_library("vadv").unwrap();
+    let mut out = Storage::with_halo(domain, 0);
+    {
+        let mut refs: Vec<(&str, &mut Storage)> = vec![
+            ("in_phi", &mut phi_box),
+            ("coeff", &mut coeff),
+            ("out_phi", &mut out),
+        ];
+        coord.run(fp_h, "debug", &mut refs, &[], domain).unwrap();
+    }
+    {
+        let mut refs: Vec<(&str, &mut Storage)> =
+            vec![("phi", &mut out), ("w", &mut w)];
+        coord
+            .run(fp_v, "debug", &mut refs, &[("dtdz", dtdz)], domain)
+            .unwrap();
+    }
+
+    let expected = out.domain_to_c_order();
+    let mut max_d: f64 = 0.0;
+    for (a, b) in outputs[0].iter().zip(&expected) {
+        max_d = max_d.max((a - b).abs());
+    }
+    assert!(max_d < 1e-12, "fused L2 artifact differs from L3 composition by {max_d}");
+}
+
+#[test]
+fn model_runs_on_pjrt_aot_backend() {
+    if !have("hdiff_32x32x8.hlo.txt") {
+        eprintln!("SKIP: model artifacts missing — run `make artifacts`");
+        return;
+    }
+    use gt4rs::model::{IsentropicModel, ModelConfig};
+    let cfg = ModelConfig {
+        domain: [32, 32, 8],
+        backend: "pjrt-aot".to_string(),
+        ..ModelConfig::default()
+    };
+    let mut m_aot = IsentropicModel::new(cfg.clone()).unwrap();
+    let mut m_ref = IsentropicModel::new(ModelConfig {
+        backend: "debug".to_string(),
+        ..cfg
+    })
+    .unwrap();
+    m_aot.run(3).unwrap();
+    m_ref.run(3).unwrap();
+    let d = m_aot.phi_snapshot().max_abs_diff(&m_ref.phi_snapshot());
+    assert!(d < 1e-11, "pjrt-aot model trajectory differs by {d}");
+}
+
+#[test]
+fn artifact_roundtrip_hdiff_all_test_domains() {
+    let rt = Runtime::cpu().unwrap();
+    for domain in [[8usize, 8, 4], [12, 10, 6]] {
+        let name = format!("hdiff_{}x{}x{}.hlo.txt", domain[0], domain[1], domain[2]);
+        if !have(&name) {
+            eprintln!("SKIP: {name} missing");
+            continue;
+        }
+        let exe = rt.load_hlo_text(artifacts_dir().join(&name)).unwrap();
+        let [ni, nj, nk] = domain;
+        let in_data = vec![1.5f64; (ni + 4) * (nj + 4) * nk];
+        let coeff = vec![0.1f64; ni * nj * nk];
+        let out_in = vec![0.0f64; ni * nj * nk];
+        let outputs = exe
+            .run_f64(&[
+                Arg::F64(&in_data, vec![ni + 4, nj + 4, nk]),
+                Arg::F64(&coeff, vec![ni, nj, nk]),
+                Arg::F64(&out_in, vec![ni, nj, nk]),
+            ])
+            .unwrap();
+        // constant field: diffusion is identity
+        for v in &outputs[0] {
+            assert!((v - 1.5).abs() < 1e-14);
+        }
+    }
+}

@@ -1,0 +1,223 @@
+//! Cross-backend integration: every library stencil must produce the same
+//! fields on every backend tier, including the JAX/Pallas AOT artifacts
+//! (which require `make artifacts` — tests degrade to the available set
+//! with a loud skip message if the artifact is missing).
+
+use gt4rs::backend::pjrt_aot::PjrtAotBackend;
+use gt4rs::coordinator::Coordinator;
+use gt4rs::storage::Storage;
+
+/// Domain for which `aot.py` always exports artifacts (TEST_DOMAINS).
+const AOT_DOMAIN: [usize; 3] = [12, 10, 6];
+
+fn fill(s: &mut Storage, seed: f64) {
+    let [ni, nj, nk] = s.info.shape;
+    let h = s.info.halo;
+    for i in -(h[0].0 as i64)..(ni + h[0].1) as i64 {
+        for j in -(h[1].0 as i64)..(nj + h[1].1) as i64 {
+            for k in -(h[2].0 as i64)..(nk + h[2].1) as i64 {
+                s.set(
+                    i,
+                    j,
+                    k,
+                    ((i as f64) * 0.31 + seed).sin() * ((j as f64) * 0.23 - seed).cos()
+                        + 0.02 * k as f64,
+                );
+            }
+        }
+    }
+}
+
+/// Run `stencil` on `backend`, returning the post-run fields.
+fn run_on(
+    coord: &mut Coordinator,
+    stencil: &str,
+    backend: &str,
+    domain: [usize; 3],
+    scalars: &[(&str, f64)],
+) -> anyhow::Result<Vec<(String, Storage)>> {
+    let fp = coord.compile_library(stencil)?;
+    let ir = coord.ir(fp)?;
+    let mut fields: Vec<(String, Storage)> = ir
+        .fields
+        .iter()
+        .enumerate()
+        .map(|(idx, f)| {
+            let mut s = coord.alloc_field(fp, &f.name, domain).unwrap();
+            fill(&mut s, idx as f64);
+            (f.name.clone(), s)
+        })
+        .collect();
+    {
+        let mut refs: Vec<(&str, &mut Storage)> =
+            fields.iter_mut().map(|(n, s)| (n.as_str(), s)).collect();
+        coord.run(fp, backend, &mut refs, scalars, domain)?;
+    }
+    Ok(fields)
+}
+
+fn assert_all_backends_agree(stencil: &str, scalars: &[(&str, f64)], tol: f64) {
+    let mut coord = Coordinator::new();
+    let reference = run_on(&mut coord, stencil, "debug", AOT_DOMAIN, scalars).unwrap();
+    for be in ["vector", "xla", "pjrt-aot"] {
+        match run_on(&mut coord, stencil, be, AOT_DOMAIN, scalars) {
+            Ok(fields) => {
+                for ((n, r), (_, v)) in reference.iter().zip(&fields) {
+                    let d = r.max_abs_diff(v);
+                    assert!(
+                        d <= tol,
+                        "stencil `{stencil}` field `{n}`: {be} differs from debug by {d}"
+                    );
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                assert!(
+                    msg.contains("make artifacts"),
+                    "backend {be} failed for a non-artifact reason: {msg}"
+                );
+                eprintln!("SKIP {stencil} on {be}: artifact missing — run `make artifacts`");
+            }
+        }
+    }
+}
+
+#[test]
+fn hdiff_agrees_across_all_backends() {
+    assert_all_backends_agree("hdiff", &[], 1e-12);
+}
+
+#[test]
+fn vadv_agrees_across_all_backends() {
+    assert_all_backends_agree("vadv", &[("dtdz", 0.3)], 1e-12);
+}
+
+#[test]
+fn upwind_agrees_across_all_backends() {
+    assert_all_backends_agree(
+        "upwind_advect",
+        &[("u", 0.8), ("v", -0.4), ("dtdx", 0.2), ("dtdy", 0.2)],
+        1e-12,
+    );
+}
+
+#[test]
+fn figure1_diffusion_agrees_on_rust_backends() {
+    // No AOT artifact for the Figure-1 stencil: debug/vector/xla only.
+    let mut coord = Coordinator::new();
+    let fp = coord
+        .compile_source(gt4rs::stdlib::FIGURE1_SRC, "diffusion", &Default::default())
+        .unwrap();
+    let ir = coord.ir(fp).unwrap();
+    let domain = AOT_DOMAIN;
+    let mut outs: Vec<Storage> = Vec::new();
+    for be in ["debug", "vector", "xla"] {
+        let mut fields: Vec<(String, Storage)> = ir
+            .fields
+            .iter()
+            .enumerate()
+            .map(|(idx, f)| {
+                let mut s = coord.alloc_field(fp, &f.name, domain).unwrap();
+                fill(&mut s, idx as f64);
+                (f.name.clone(), s)
+            })
+            .collect();
+        {
+            let mut refs: Vec<(&str, &mut Storage)> =
+                fields.iter_mut().map(|(n, s)| (n.as_str(), s)).collect();
+            coord
+                .run(fp, be, &mut refs, &[("alpha", 0.05)], domain)
+                .unwrap();
+        }
+        outs.push(fields.pop().unwrap().1);
+    }
+    assert!(outs[0].max_abs_diff(&outs[1]) == 0.0);
+    assert!(outs[0].max_abs_diff(&outs[2]) < 1e-12);
+}
+
+#[test]
+fn pallas_and_jnp_artifact_variants_agree() {
+    let rt = gt4rs::runtime::Runtime::cpu().unwrap();
+    let ir = gt4rs::stdlib::compile("hdiff").unwrap();
+    let domain = AOT_DOMAIN;
+    let mut results = Vec::new();
+    for variant in ["pallas", "jnp"] {
+        let mut be = PjrtAotBackend::with_runtime(rt.clone()).with_variant(variant);
+        if !be.available(&format!("hdiff__{variant}"), domain) && !be.available("hdiff", domain)
+        {
+            eprintln!("SKIP pallas/jnp comparison: artifacts missing");
+            return;
+        }
+        let mut fields: Vec<(String, Storage)> = ir
+            .fields
+            .iter()
+            .enumerate()
+            .map(|(idx, f)| {
+                let e = f.extent;
+                let mut s = Storage::zeros(gt4rs::storage::StorageInfo::new(
+                    domain,
+                    [
+                        ((-e.i.0) as usize, e.i.1 as usize),
+                        ((-e.j.0) as usize, e.j.1 as usize),
+                        ((-e.k.0) as usize, e.k.1 as usize),
+                    ],
+                ));
+                fill(&mut s, idx as f64);
+                (f.name.clone(), s)
+            })
+            .collect();
+        {
+            let mut refs: Vec<(&str, &mut Storage)> =
+                fields.iter_mut().map(|(n, s)| (n.as_str(), s)).collect();
+            use gt4rs::backend::Backend;
+            be.run(&ir, &mut gt4rs::backend::StencilArgs {
+                fields: &mut refs,
+                scalars: &[],
+                domain,
+            })
+            .unwrap();
+        }
+        results.push(fields.pop().unwrap().1);
+    }
+    let d = results[0].max_abs_diff(&results[1]);
+    assert!(d < 1e-12, "pallas vs jnp artifacts differ by {d}");
+}
+
+#[test]
+fn chained_steps_accumulate_identically_across_backends() {
+    // Multi-step integration: apply hdiff 5 times, feeding outputs back in.
+    let mut coord = Coordinator::new();
+    let fp = coord.compile_library("hdiff").unwrap();
+    let domain = [16, 16, 8];
+    let mut sums = Vec::new();
+    for be in ["debug", "vector", "xla"] {
+        let mut inp = coord.alloc_field(fp, "in_phi", domain).unwrap();
+        let mut coeff = coord.alloc_field(fp, "coeff", domain).unwrap();
+        let mut out = coord.alloc_field(fp, "out_phi", domain).unwrap();
+        fill(&mut inp, 0.0);
+        coeff.fill(0.05);
+        for _ in 0..5 {
+            {
+                let mut refs: Vec<(&str, &mut Storage)> = vec![
+                    ("in_phi", &mut inp),
+                    ("coeff", &mut coeff),
+                    ("out_phi", &mut out),
+                ];
+                coord.run(fp, be, &mut refs, &[], domain).unwrap();
+            }
+            // copy result back into the (halo'd) input, halo refreshed by
+            // periodic wrap
+            for i in 0..domain[0] as i64 {
+                for j in 0..domain[1] as i64 {
+                    for k in 0..domain[2] as i64 {
+                        inp.set(i, j, k, out.get(i, j, k));
+                    }
+                }
+            }
+            gt4rs::model::periodic_halo_update(&mut inp);
+        }
+        sums.push(out.domain_sum());
+    }
+    assert!((sums[0] - sums[1]).abs() < 1e-9, "debug vs vector: {sums:?}");
+    assert!((sums[0] - sums[2]).abs() < 1e-9, "debug vs xla: {sums:?}");
+}

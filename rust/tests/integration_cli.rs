@@ -1,0 +1,122 @@
+//! CLI integration: drive the `repro` binary end-to-end, the way a user
+//! (or the paper's Fig. 4 Jupyter workflow analog) would.
+
+use std::process::Command;
+
+fn repro(args: &[&str]) -> (bool, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("spawn repro");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.success(), text)
+}
+
+#[test]
+fn help_lists_subcommands_and_backends() {
+    let (ok, text) = repro(&["help"]);
+    assert!(ok);
+    for needle in ["inspect", "run", "validate", "bench", "model", "pjrt-aot", "hdiff"] {
+        assert!(text.contains(needle), "help missing `{needle}`:\n{text}");
+    }
+}
+
+#[test]
+fn inspect_dumps_ir() {
+    let (ok, text) = repro(&["inspect", "--stencil", "hdiff"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("stencil hdiff"));
+    assert!(text.contains("fingerprint"));
+    assert!(text.contains("multistage 0 PARALLEL"));
+    assert!(text.contains("extent"));
+}
+
+#[test]
+fn inspect_honors_externals() {
+    let (ok, a) = repro(&["inspect", "--stencil", "diffusion"]);
+    assert!(ok, "{a}");
+    let (ok, b) = repro(&["inspect", "--stencil", "diffusion", "--externals", "LIM=0.5"]);
+    assert!(ok, "{b}");
+    let fp = |t: &str| {
+        t.lines()
+            .next()
+            .unwrap()
+            .split("fingerprint ")
+            .nth(1)
+            .unwrap()
+            .trim_end_matches(')')
+            .to_string()
+    };
+    assert_ne!(fp(&a), fp(&b), "externals must change the fingerprint");
+}
+
+#[test]
+fn run_reports_timing_and_checksum() {
+    let (ok, text) = repro(&[
+        "run", "--stencil", "laplacian", "--backend", "vector", "--domain", "16x16x4",
+        "--iters", "2",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("iter 0"));
+    assert!(text.contains("domain sum"));
+}
+
+#[test]
+fn validate_cross_checks_backends() {
+    let (ok, text) = repro(&[
+        "validate", "--stencil", "vadv", "--domain", "8x8x10",
+        "--backends", "debug,vector,xla",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("OK"));
+    assert!(!text.contains("MISMATCH"), "{text}");
+}
+
+#[test]
+fn model_runs_and_reports_mass() {
+    let (ok, text) = repro(&[
+        "model", "--steps", "5", "--domain", "12x12x4", "--backend", "vector",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("mass"));
+    assert!(text.contains("total wall"));
+}
+
+#[test]
+fn unknown_flags_and_commands_fail_cleanly() {
+    let (ok, text) = repro(&["warp"]);
+    assert!(!ok);
+    assert!(text.contains("unknown subcommand"));
+    let (ok2, text2) = repro(&["run", "--stencil"]);
+    assert!(!ok2);
+    assert!(text2.contains("needs a value"));
+    let (ok3, text3) = repro(&["run", "--stencil", "hdiff", "--domain", "3x3"]);
+    assert!(!ok3);
+    assert!(text3.contains("three components"));
+}
+
+#[test]
+fn run_from_gts_file() {
+    let dir = std::env::temp_dir().join(format!("gt4rs_cli_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("user.gts");
+    std::fs::write(
+        &path,
+        "stencil double(a: Field<f64>, b: Field<f64>) {\n\
+           with computation(PARALLEL), interval(...) { b = a * 2.0; }\n\
+         }",
+    )
+    .unwrap();
+    let (ok, text) = repro(&[
+        "run", "--stencil", "double", "--file", path.to_str().unwrap(),
+        "--backend", "debug", "--domain", "8x8x2", "--iters", "1",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("domain sum"));
+    let _ = std::fs::remove_dir_all(&dir);
+}

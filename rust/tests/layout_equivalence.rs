@@ -1,0 +1,127 @@
+//! Storage-layout equivalence: results must be identical whatever the
+//! memory layout/alignment of the storages (the paper's backend-specific
+//! storage customization must never change semantics, only speed).
+
+use gt4rs::backend::{create, StencilArgs};
+use gt4rs::storage::{Alignment, Layout, Storage, StorageInfo};
+use gt4rs::stdlib;
+
+fn make(layout: Layout, alignment: usize, domain: [usize; 3], halo: usize, seed: u64) -> Storage {
+    let mut info = StorageInfo::new(domain, [(halo, halo), (halo, halo), (0, 0)]);
+    info.layout = layout;
+    info.alignment = Alignment(alignment);
+    let mut s = Storage::zeros(info);
+    let mut x = seed;
+    let [ni, nj, nk] = domain;
+    for i in -(halo as i64)..(ni + halo) as i64 {
+        for j in -(halo as i64)..(nj + halo) as i64 {
+            for k in 0..nk as i64 {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                s.set(i, j, k, ((x >> 33) as f64) / (u32::MAX as f64) - 0.5);
+            }
+        }
+    }
+    s
+}
+
+fn run_hdiff(layout: Layout, alignment: usize, backend: &str) -> Storage {
+    let domain = [10, 9, 5];
+    let ir = stdlib::compile("hdiff").unwrap();
+    let mut in_phi = make(layout, alignment, domain, 2, 1);
+    let mut coeff = make(layout, alignment, domain, 2, 2);
+    let mut out = make(layout, alignment, domain, 2, 3);
+    let mut be = create(backend).unwrap();
+    let mut refs: Vec<(&str, &mut Storage)> = vec![
+        ("in_phi", &mut in_phi),
+        ("coeff", &mut coeff),
+        ("out_phi", &mut out),
+    ];
+    be.run(&ir, &mut StencilArgs { fields: &mut refs, scalars: &[], domain })
+        .unwrap();
+    out
+}
+
+#[test]
+fn hdiff_identical_across_layouts_and_alignments() {
+    for backend in ["debug", "vector"] {
+        let reference = run_hdiff(Layout::IJK, 1, backend);
+        for layout in [Layout::IJK, Layout::KJI, Layout::JKI] {
+            for alignment in [1usize, 4, 8, 16] {
+                let got = run_hdiff(layout, alignment, backend);
+                assert_eq!(
+                    reference.max_abs_diff(&got),
+                    0.0,
+                    "{backend} differs for layout {layout} alignment {alignment}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sequential_stencil_identical_across_layouts() {
+    let domain = [6, 5, 8];
+    let ir = stdlib::compile("vadv").unwrap();
+    let mut outs = Vec::new();
+    for layout in [Layout::IJK, Layout::KJI, Layout::JKI] {
+        let mut info = StorageInfo::new(domain, [(0, 0); 3]);
+        info.layout = layout;
+        let mut phi = Storage::zeros(info);
+        let mut w = Storage::zeros(info);
+        let [ni, nj, nk] = domain;
+        for i in 0..ni as i64 {
+            for j in 0..nj as i64 {
+                for k in 0..nk as i64 {
+                    phi.set(i, j, k, (i + 2 * j) as f64 * 0.1 + k as f64 * 0.01);
+                    w.set(i, j, k, ((i * j) % 3) as f64 * 0.2 - 0.1);
+                }
+            }
+        }
+        let mut be = create("vector").unwrap();
+        let mut refs: Vec<(&str, &mut Storage)> = vec![("phi", &mut phi), ("w", &mut w)];
+        be.run(&ir, &mut StencilArgs {
+            fields: &mut refs,
+            scalars: &[("dtdz", 0.3)],
+            domain,
+        })
+        .unwrap();
+        outs.push(phi);
+    }
+    assert_eq!(outs[0].max_abs_diff(&outs[1]), 0.0);
+    assert_eq!(outs[0].max_abs_diff(&outs[2]), 0.0);
+}
+
+#[test]
+fn cross_layout_arguments_mix_freely() {
+    // Different fields of one call may use different layouts — a real
+    // interop scenario (e.g. a KJI-optimized wind field feeding an IJK
+    // tracer).
+    let domain = [8, 8, 4];
+    let ir = stdlib::compile("hdiff").unwrap();
+    let mut in_phi = make(Layout::KJI, 8, domain, 2, 1);
+    let mut coeff = make(Layout::JKI, 4, domain, 2, 2);
+    let mut out = make(Layout::IJK, 1, domain, 2, 3);
+    let mut be = create("vector").unwrap();
+    {
+        let mut refs: Vec<(&str, &mut Storage)> = vec![
+            ("in_phi", &mut in_phi),
+            ("coeff", &mut coeff),
+            ("out_phi", &mut out),
+        ];
+        be.run(&ir, &mut StencilArgs { fields: &mut refs, scalars: &[], domain })
+            .unwrap();
+    }
+    // vs all-IJK reference with identical values
+    let reference = {
+        let mut ip = make(Layout::IJK, 1, domain, 2, 1);
+        let mut cf = make(Layout::IJK, 1, domain, 2, 2);
+        let mut o = make(Layout::IJK, 1, domain, 2, 3);
+        let mut be = create("debug").unwrap();
+        let mut refs: Vec<(&str, &mut Storage)> =
+            vec![("in_phi", &mut ip), ("coeff", &mut cf), ("out_phi", &mut o)];
+        be.run(&ir, &mut StencilArgs { fields: &mut refs, scalars: &[], domain })
+            .unwrap();
+        o
+    };
+    assert_eq!(reference.max_abs_diff(&out), 0.0);
+}

@@ -1,0 +1,206 @@
+//! Property-based backend equivalence (in-repo generator: the offline
+//! crate set has no proptest, so this uses a deterministic LCG over seeds
+//! — same idea: many generated programs, one invariant).
+//!
+//! Invariant: for any well-formed stencil program, `debug` (reference
+//! interpreter), `vector` and `xla` produce identical fields (up to
+//! reassociation noise for `xla`).
+
+use gt4rs::coordinator::Coordinator;
+use gt4rs::dsl::parser::parse_module;
+use gt4rs::storage::Storage;
+
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        self.0 >> 33
+    }
+    fn below(&mut self, n: u64) -> u64 {
+        self.next() % n
+    }
+    fn f64(&mut self) -> f64 {
+        (self.next() as f64) / (u32::MAX as f64) - 0.5
+    }
+    fn offset(&mut self, max: i64) -> i64 {
+        self.below(2 * max as u64 + 1) as i64 - max
+    }
+}
+
+/// Generate a random point-wise expression over `vars` (field names) and
+/// `scalars`, with offsets bounded by ±2 and numerically-safe builtins.
+fn gen_expr(rng: &mut Rng, vars: &[String], scalars: &[&str], depth: usize) -> String {
+    if depth == 0 || rng.below(4) == 0 {
+        return match rng.below(4) {
+            0 => format!("{:.3}", rng.f64() * 2.0),
+            1 => scalars[rng.below(scalars.len() as u64) as usize].to_string(),
+            _ => {
+                let v = &vars[rng.below(vars.len() as u64) as usize];
+                let (i, j, k) = (rng.offset(2), rng.offset(2), 0);
+                format!("{v}[{i},{j},{k}]")
+            }
+        };
+    }
+    let a = gen_expr(rng, vars, scalars, depth - 1);
+    let b = gen_expr(rng, vars, scalars, depth - 1);
+    match rng.below(8) {
+        0 => format!("({a} + {b})"),
+        1 => format!("({a} - {b})"),
+        2 => format!("({a} * {b})"),
+        // division guarded away from zero
+        3 => format!("({a} / (2.0 + abs({b})))"),
+        4 => format!("min({a}, {b})"),
+        5 => format!("max({a}, {b})"),
+        6 => format!("sqrt(abs({a}))"),
+        _ => format!("({a} > {b} ? {a} : {b})"),
+    }
+}
+
+/// Generate a random PARALLEL stencil: a chain of temporaries feeding an
+/// output field, exercising extents, temporaries, builtins and ternaries.
+fn gen_stencil(seed: u64) -> String {
+    let mut rng = Rng(seed);
+    let n_temps = 1 + rng.below(3) as usize;
+    let mut vars = vec!["a".to_string(), "b".to_string()];
+    let scalars = ["s1", "s2"];
+    let mut body = String::new();
+    for t in 0..n_temps {
+        let name = format!("t{t}");
+        let expr = gen_expr(&mut rng, &vars, &scalars, 3);
+        body.push_str(&format!("        {name} = {expr};\n"));
+        vars.push(name);
+    }
+    let out_expr = gen_expr(&mut rng, &vars, &scalars, 3);
+    // Guarantee both inputs participate (the pipeline rejects unused
+    // field parameters, by design).
+    body.push_str(&format!(
+        "        out = {out_expr} + 0.125 * (a[0,0,0] - b[0,0,0]);\n"
+    ));
+    format!(
+        "stencil prop(a: Field<f64>, b: Field<f64>, out: Field<f64>; s1: f64, s2: f64) {{\n\
+            with computation(PARALLEL), interval(...) {{\n{body}    }}\n}}"
+    )
+}
+
+fn run_backend(
+    coord: &mut Coordinator,
+    fp: u64,
+    be: &str,
+    domain: [usize; 3],
+    seed: u64,
+) -> Vec<(String, Storage)> {
+    let ir = coord.ir(fp).unwrap();
+    let mut rng = Rng(seed ^ 0xabcdef);
+    let mut fields: Vec<(String, Storage)> = ir
+        .fields
+        .iter()
+        .map(|f| {
+            let mut s = coord.alloc_field(fp, &f.name, domain).unwrap();
+            let [ni, nj, nk] = domain;
+            let h = s.info.halo;
+            for i in -(h[0].0 as i64)..(ni + h[0].1) as i64 {
+                for j in -(h[1].0 as i64)..(nj + h[1].1) as i64 {
+                    for k in -(h[2].0 as i64)..(nk + h[2].1) as i64 {
+                        s.set(i, j, k, rng.f64());
+                    }
+                }
+            }
+            (f.name.clone(), s)
+        })
+        .collect();
+    {
+        let mut refs: Vec<(&str, &mut Storage)> =
+            fields.iter_mut().map(|(n, s)| (n.as_str(), s)).collect();
+        coord
+            .run(fp, be, &mut refs, &[("s1", 0.4), ("s2", -0.7)], domain)
+            .unwrap_or_else(|e| panic!("seed {seed} backend {be}: {e:#}"));
+    }
+    fields
+}
+
+#[test]
+fn random_parallel_stencils_agree_across_backends() {
+    let domain = [7, 6, 3];
+    for seed in 0..40u64 {
+        let src = gen_stencil(seed);
+        // The generated program must parse and analyze.
+        parse_module(&src).unwrap_or_else(|e| panic!("seed {seed}: {e}\n{src}"));
+        let mut coord = Coordinator::new();
+        let fp = coord
+            .compile_source(&src, "prop", &Default::default())
+            .unwrap_or_else(|e| panic!("seed {seed}: {e:#}\n{src}"));
+
+        let reference = run_backend(&mut coord, fp, "debug", domain, seed);
+        for be in ["vector", "xla"] {
+            let got = run_backend(&mut coord, fp, be, domain, seed);
+            for ((n, r), (_, v)) in reference.iter().zip(&got) {
+                let d = r.max_abs_diff(v);
+                let tol = if be == "xla" { 1e-12 } else { 0.0 };
+                assert!(
+                    d <= tol,
+                    "seed {seed} field `{n}`: {be} differs from debug by {d}\n{src}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn random_sequential_accumulators_agree_across_backends() {
+    // FORWARD/BACKWARD family with randomized coefficients: cumulative
+    // recurrences x_k = alpha * x_(k-1) + expr(a).
+    let domain = [5, 5, 9];
+    for seed in 0..20u64 {
+        let mut rng = Rng(seed.wrapping_mul(77).wrapping_add(13));
+        let alpha = 0.1 + 0.8 * (rng.f64() + 0.5);
+        let beta = rng.f64();
+        let src = format!(
+            "stencil seqprop(a: Field<f64>, x: Field<f64>) {{\n\
+               with computation(FORWARD) {{\n\
+                 interval(0, 1) {{ x = a * {beta:.4}; }}\n\
+                 interval(1, None) {{ x = x[0,0,-1] * {alpha:.4} + a; }}\n\
+               }}\n\
+               with computation(BACKWARD) {{\n\
+                 interval(-1, None) {{ x = x * 0.5; }}\n\
+                 interval(0, -1) {{ x = (x[0,0,1] + x) * {alpha:.4}; }}\n\
+               }}\n\
+             }}"
+        );
+        let mut coord = Coordinator::new();
+        let fp = coord
+            .compile_source(&src, "seqprop", &Default::default())
+            .unwrap_or_else(|e| panic!("seed {seed}: {e:#}"));
+        let reference = run_backend(&mut coord, fp, "debug", domain, seed);
+        for be in ["vector", "xla"] {
+            let got = run_backend(&mut coord, fp, be, domain, seed);
+            for ((n, r), (_, v)) in reference.iter().zip(&got) {
+                let d = r.max_abs_diff(v);
+                assert!(
+                    d <= 1e-12,
+                    "seed {seed} field `{n}`: {be} differs from debug by {d}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fingerprints_are_stable_and_distinct() {
+    // Distinct generated programs (almost surely) have distinct
+    // fingerprints; identical sources always collide.
+    use std::collections::HashSet;
+    let mut fps = HashSet::new();
+    for seed in 0..40u64 {
+        let src = gen_stencil(seed);
+        let mut coord = Coordinator::new();
+        let fp = coord.compile_source(&src, "prop", &Default::default()).unwrap();
+        let fp2 = {
+            let mut c2 = Coordinator::new();
+            c2.compile_source(&src, "prop", &Default::default()).unwrap()
+        };
+        assert_eq!(fp, fp2, "fingerprint not deterministic for seed {seed}");
+        fps.insert(fp);
+    }
+    assert!(fps.len() >= 38, "suspicious fingerprint collisions: {}", fps.len());
+}
