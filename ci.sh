@@ -1,0 +1,33 @@
+#!/usr/bin/env bash
+# Local CI gate: formatting, lints, release build, tests.
+#
+#   ./ci.sh          run everything
+#   ./ci.sh quick    skip the release build (fmt + clippy + tests)
+#
+# PJRT-dependent tests skip themselves when no PJRT runtime is present, so
+# this script is expected to pass on machines without one.
+
+set -euo pipefail
+cd "$(dirname "$0")/rust"
+
+step() {
+    echo
+    echo "=== $* ==="
+}
+
+step cargo fmt --check
+cargo fmt --check
+
+step cargo clippy --all-targets -- -D warnings
+cargo clippy --all-targets -- -D warnings
+
+if [[ "${1:-}" != "quick" ]]; then
+    step cargo build --release
+    cargo build --release
+fi
+
+step cargo test -q
+cargo test -q
+
+echo
+echo "ci.sh: all checks passed"

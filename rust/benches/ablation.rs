@@ -6,6 +6,9 @@
 //!      first call = build+compile, later calls = cache hit)
 //!  A3  definition-fingerprint cache: re-compiling a reformatted source
 //!      must be a pure hash lookup
+//!  A4  optimizer pass ablation: vector-backend hdiff/vadv time at each
+//!      pass-manager configuration (the Fig. 3 workload, per-pass rows —
+//!      temporary demotion is the headline)
 //!
 //!     cargo bench --bench ablation
 
@@ -13,9 +16,11 @@
 mod harness;
 
 use gt4rs::backend::pjrt_aot::PjrtAotBackend;
+use gt4rs::backend::vector::VectorBackend;
 use gt4rs::backend::xlagen;
 use gt4rs::backend::{Backend, StencilArgs};
 use gt4rs::coordinator::{def_fingerprint, Coordinator};
+use gt4rs::opt::{OptConfig, PassManager};
 use gt4rs::runtime::Runtime;
 use gt4rs::stdlib;
 use gt4rs::storage::Storage;
@@ -23,9 +28,95 @@ use harness::*;
 use std::time::Instant;
 
 fn main() {
-    a1_pallas_vs_jnp();
-    a2_jit_compile_cost();
+    a4_opt_pass_ablation();
+    if gt4rs::runtime::pjrt_available() {
+        a1_pallas_vs_jnp();
+        a2_jit_compile_cost();
+    } else {
+        println!("# A1/A2 skipped: PJRT runtime unavailable\n");
+    }
     a3_fingerprint_cache();
+}
+
+/// A4: per-pass optimizer ablation on the vector backend.
+///
+/// Configurations build up the pass pipeline one pass at a time; the
+/// `+demote` row is the headline — demoted temporaries skip the per-call
+/// whole-field zero allocation, the post-stage scatter and the per-
+/// consumer strided gather.
+fn a4_opt_pass_ablation() {
+    println!("# A4: optimizer pass ablation — vector backend, median wall time per call");
+    let configs: [(&str, OptConfig); 4] = [
+        ("O0 (none)", OptConfig::none()),
+        (
+            "+fold-cse",
+            OptConfig { fold_cse: true, dce: false, fuse: false, demote: false },
+        ),
+        (
+            "+dce+fuse",
+            OptConfig { fold_cse: true, dce: true, fuse: true, demote: false },
+        ),
+        (
+            "+demote (O2)",
+            OptConfig { fold_cse: true, dce: true, fuse: true, demote: true },
+        ),
+    ];
+    println!("{:<12} {:>8} {:>14} {:>12}", "domain", "stencil", "config", "median");
+    for domain in [[64, 64, 32], [128, 128, 64]] {
+        let dstr = format!("{}x{}x{}", domain[0], domain[1], domain[2]);
+        for (name, scalars) in [("hdiff", vec![]), ("vadv", vec![("dtdz", 0.3)])] {
+            let mut baseline = None;
+            for (cname, config) in &configs {
+                let mut ir = stdlib::compile(name).unwrap();
+                PassManager::new(config).run(&mut ir);
+                let mut be = VectorBackend::new();
+                let mut fields: Vec<(String, Storage)> = ir
+                    .fields
+                    .iter()
+                    .map(|f| {
+                        let e = f.extent;
+                        let mut s = Storage::zeros(gt4rs::storage::StorageInfo::new(
+                            domain,
+                            [
+                                ((-e.i.0) as usize, e.i.1 as usize),
+                                ((-e.j.0) as usize, e.j.1 as usize),
+                                ((-e.k.0) as usize, e.k.1 as usize),
+                            ],
+                        ));
+                        fill_storage(&mut s, 1.0);
+                        (f.name.clone(), s)
+                    })
+                    .collect();
+                let sample = bench(9, || {
+                    let mut refs: Vec<(&str, &mut Storage)> = fields
+                        .iter_mut()
+                        .map(|(n, s)| (n.as_str(), s))
+                        .collect();
+                    be.run(&ir, &mut StencilArgs {
+                        fields: &mut refs,
+                        scalars: &scalars,
+                        domain,
+                    })
+                    .unwrap();
+                });
+                let speedup = match baseline {
+                    None => {
+                        baseline = Some(sample.median);
+                        "1.00x".to_string()
+                    }
+                    Some(base) => format!(
+                        "{:.2}x",
+                        base.as_secs_f64() / sample.median.as_secs_f64().max(1e-12)
+                    ),
+                };
+                println!(
+                    "{dstr:<12} {name:>8} {cname:>14} {:>12} ({speedup} vs O0)",
+                    fmt_duration(sample.median)
+                );
+            }
+        }
+    }
+    println!();
 }
 
 fn a1_pallas_vs_jnp() {

@@ -7,4 +7,7 @@ pub mod lowering;
 pub mod pipeline;
 pub mod resolve;
 
-pub use pipeline::{analyze, compile_source, fingerprint_ir};
+pub use pipeline::{
+    analyze, analyze_opt, compile_source, compile_source_opt, fingerprint_ir,
+    fingerprint_ir_with,
+};

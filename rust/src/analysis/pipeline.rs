@@ -12,6 +12,11 @@
 //! 6. **extents** — backward halo analysis, stamping per-stage compute
 //!    extents and per-field storage requirements;
 //! 7. **fingerprint** — canonical-IR identity for the compilation cache.
+//!
+//! The pipeline emits *pre-optimization* IR: every stage in its own fusion
+//! group, every temporary a full 3-D field. [`analyze_opt`] additionally
+//! runs the [`crate::opt`] pass manager over that IR (stage fusion,
+//! temporary demotion, DCE, folding/CSE) before any backend sees it.
 
 use crate::dsl::ast::{DType, Module, StencilDef};
 use crate::dsl::span::{CResult, CompileError};
@@ -87,6 +92,8 @@ pub fn analyze(
                 interval: *interval,
                 extent: info.stage_extents[flat_idx],
                 reads,
+                // Pre-opt: one group per stage (no fusion).
+                fusion_group: flat_idx,
             });
             flat_idx += 1;
         }
@@ -136,6 +143,7 @@ pub fn analyze(
                 .copied()
                 .unwrap_or_else(Extent::zero)
                 .union(Extent::zero()),
+            storage: StorageClass::Field3D,
         })
         .collect();
 
@@ -155,27 +163,29 @@ pub fn analyze(
 /// Formatting-insensitive fingerprint over the canonical IR (paper §2.3:
 /// "code reformatting would not trigger a new compilation").
 pub fn fingerprint_ir(ir: &StencilIr) -> u64 {
-    use std::fmt::Write as _;
-    let mut s = String::with_capacity(1024);
-    let _ = write!(s, "stencil {};", ir.name);
-    for f in &ir.fields {
-        let _ = write!(s, "f {}:{};", f.name, f.dtype);
-    }
-    for sc in &ir.scalars {
-        let _ = write!(s, "s {}:{};", sc.name, sc.dtype);
-    }
-    for (k, v) in &ir.externals {
-        let _ = write!(s, "x {}={:016x};", k, v.to_bits());
-    }
-    for ms in &ir.multistages {
-        let _ = write!(s, "ms {};", ms.policy);
-        for st in &ms.stages {
-            let _ = write!(s, "st {} {}=", st.interval, st.stmt.target);
-            canon::canon_expr(&st.stmt.value, &mut s);
-            s.push(';');
-        }
-    }
-    canon::fnv1a64(s.as_bytes())
+    fingerprint_ir_with(ir, "")
+}
+
+/// Fingerprint including an optimization tag: the pass configuration's
+/// canonical string is mixed into the canonical IR so artifacts compiled at
+/// different opt levels never share a cache slot, even when the passes
+/// happen to leave the IR unchanged.
+pub fn fingerprint_ir_with(ir: &StencilIr, opt_tag: &str) -> u64 {
+    canon::fnv1a64(canon::canon_ir(ir, opt_tag).as_bytes())
+}
+
+/// Analyze and then optimize: run the [`crate::opt`] pass manager over the
+/// pipeline's pre-opt IR. The returned IR's fingerprint incorporates the
+/// pass configuration.
+pub fn analyze_opt(
+    def: &StencilDef,
+    module: &Module,
+    extern_overrides: &BTreeMap<String, f64>,
+    config: &crate::opt::OptConfig,
+) -> CResult<StencilIr> {
+    let mut ir = analyze(def, module, extern_overrides)?;
+    crate::opt::PassManager::new(config).run(&mut ir);
+    Ok(ir)
 }
 
 /// Convenience: parse + analyze a single-stencil module source.
@@ -189,6 +199,18 @@ pub fn compile_source(
         .stencil(stencil_name)
         .ok_or_else(|| CompileError::new("pipeline", format!("no stencil `{stencil_name}` in module")))?;
     analyze(def, &module, extern_overrides)
+}
+
+/// Convenience: parse + analyze + optimize a single-stencil module source.
+pub fn compile_source_opt(
+    src: &str,
+    stencil_name: &str,
+    extern_overrides: &BTreeMap<String, f64>,
+    config: &crate::opt::OptConfig,
+) -> CResult<StencilIr> {
+    let mut ir = compile_source(src, stencil_name, extern_overrides)?;
+    crate::opt::PassManager::new(config).run(&mut ir);
+    Ok(ir)
 }
 
 #[cfg(test)]

@@ -5,6 +5,14 @@
 //! dynamic dispatch. Deliberately unoptimized — it exists to define the
 //! reference semantics, to be steppable, and to be the slow baseline of the
 //! Fig. 3 reproduction. Do not optimize this backend.
+//!
+//! That rule extends to the optimizer's IR metadata: fusion groups are
+//! ignored (stage-outermost order *is* the IR's semantics) and demoted
+//! temporaries are still materialized as full zero-initialized fields
+//! ([`Env::build`] with `materialize_demoted = true`). Because every
+//! optimizer pass is semantics-preserving under this execution model, the
+//! debug backend produces bit-identical results at every opt level — which
+//! is exactly what makes it the arbiter in the equivalence suites.
 
 use super::cexpr::{apply_bin, apply_builtin1, apply_builtin2, CExpr};
 use super::program::{Env, Program};
@@ -323,6 +331,42 @@ mod tests {
         assert_eq!(b.get(0, 0, 1), 20.0);
         assert_eq!(b.get(0, 0, 2), 20.0);
         assert_eq!(b.get(0, 0, 3), 30.0);
+    }
+
+    #[test]
+    fn optimized_ir_is_reference_equal() {
+        // The debug backend must execute a fully optimized IR (fused
+        // groups, demoted temporaries) with unchanged reference semantics.
+        let src = "stencil s(a: Field<f64>, out: Field<f64>) {\n\
+                     with computation(PARALLEL), interval(...) {\n\
+                       t = a[-1,0,0] + a[1,0,0];\n\
+                       out = t[0,-1,0] + t[0,1,0];\n\
+                     }\n\
+                   }";
+        let ir0 = compile_source(src, "s", &BTreeMap::new()).unwrap();
+        let ir2 = crate::analysis::compile_source_opt(
+            src,
+            "s",
+            &BTreeMap::new(),
+            &crate::opt::OptConfig::default(),
+        )
+        .unwrap();
+        let mk = || Storage::from_fn_extended([4, 4, 2], 2, |i, j, k| {
+            (i * 7 + j * 3 + k) as f64 * 0.25
+        });
+        let mut run_one = |ir: &crate::ir::implir::StencilIr| {
+            let mut a = mk();
+            let mut out = Storage::with_horizontal_halo([4, 4, 2], 0);
+            let mut refs: Vec<(&str, &mut Storage)> =
+                vec![("a", &mut a), ("out", &mut out)];
+            DebugBackend::new()
+                .run(ir, &mut StencilArgs { fields: &mut refs, scalars: &[], domain: [4, 4, 2] })
+                .unwrap();
+            out
+        };
+        let o0 = run_one(&ir0);
+        let o2 = run_one(&ir2);
+        assert_eq!(o0.max_abs_diff(&o2), 0.0);
     }
 
     #[test]

@@ -49,17 +49,80 @@ pub trait Backend {
 /// Names of all built-in backends, in the tier order of Fig. 3.
 pub const BACKEND_NAMES: [&str; 4] = ["debug", "vector", "xla", "pjrt-aot"];
 
+/// Structured backend-instantiation failure: lets callers (coordinator,
+/// CLI, tests) distinguish *misconfiguration* (a name that doesn't exist)
+/// from *missing hardware/runtime* (a real backend this process cannot
+/// host, e.g. no PJRT plugin).
+#[derive(Debug)]
+pub enum CreateError {
+    /// No backend goes by this name.
+    UnknownBackend(String),
+    /// The backend exists but cannot run in this environment.
+    Unavailable {
+        backend: &'static str,
+        reason: String,
+    },
+}
+
+impl std::fmt::Display for CreateError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CreateError::UnknownBackend(name) => write!(
+                f,
+                "unknown backend `{name}` (available: {})",
+                BACKEND_NAMES.join(", ")
+            ),
+            CreateError::Unavailable { backend, reason } => {
+                write!(f, "backend `{backend}` unavailable: {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CreateError {}
+
+/// Whether an error chain bottoms out in [`CreateError::Unavailable`] —
+/// used to degrade gracefully (skip a backend) instead of failing hard.
+pub fn is_unavailable(err: &anyhow::Error) -> bool {
+    err.chain().any(|e| {
+        matches!(
+            e.downcast_ref::<CreateError>(),
+            Some(CreateError::Unavailable { .. })
+        )
+    })
+}
+
 /// Instantiate a backend by name.
-pub fn create(name: &str) -> Result<Box<dyn Backend>> {
+pub fn create(name: &str) -> Result<Box<dyn Backend>, CreateError> {
+    // The compiled backends need a PJRT client; probe once so the failure
+    // is a structured `Unavailable`, not an opaque constructor error.
+    let pjrt = |backend: &'static str| -> Result<(), CreateError> {
+        if crate::runtime::pjrt_available() {
+            Ok(())
+        } else {
+            Err(CreateError::Unavailable {
+                backend,
+                reason: "no PJRT CPU client can be created in this process".to_string(),
+            })
+        }
+    };
     Ok(match name {
         "debug" => Box::new(debug::DebugBackend::new()),
         "vector" => Box::new(vector::VectorBackend::new()),
-        "xla" => Box::new(xlagen::XlaBackend::new()?),
-        "pjrt-aot" => Box::new(pjrt_aot::PjrtAotBackend::new()?),
-        other => anyhow::bail!(
-            "unknown backend `{other}` (available: {})",
-            BACKEND_NAMES.join(", ")
-        ),
+        "xla" => {
+            pjrt("xla")?;
+            Box::new(xlagen::XlaBackend::new().map_err(|e| CreateError::Unavailable {
+                backend: "xla",
+                reason: format!("{e:#}"),
+            })?)
+        }
+        "pjrt-aot" => {
+            pjrt("pjrt-aot")?;
+            Box::new(pjrt_aot::PjrtAotBackend::new().map_err(|e| {
+                CreateError::Unavailable { backend: "pjrt-aot", reason: format!("{e:#}") }
+            })?)
+        }
+        other => return Err(CreateError::UnknownBackend(other.to_string())),
     })
 }
 
@@ -71,6 +134,38 @@ mod tests {
     fn create_interpreting_backends() {
         assert_eq!(create("debug").unwrap().name(), "debug");
         assert_eq!(create("vector").unwrap().name(), "vector");
-        assert!(create("nope").is_err());
+    }
+
+    #[test]
+    fn unknown_and_unavailable_are_distinct() {
+        match create("nope") {
+            Err(CreateError::UnknownBackend(n)) => assert_eq!(n, "nope"),
+            other => panic!("expected UnknownBackend, got {other:?}"),
+        }
+        // The compiled backends either come up or report Unavailable —
+        // never UnknownBackend.
+        for be in ["xla", "pjrt-aot"] {
+            match create(be) {
+                Ok(b) => assert_eq!(b.name(), be),
+                Err(CreateError::Unavailable { backend, .. }) => assert_eq!(backend, be),
+                Err(e @ CreateError::UnknownBackend(_)) => {
+                    panic!("`{be}` misreported as {e}")
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unavailable_detection_through_anyhow() {
+        let err = anyhow::Error::new(CreateError::Unavailable {
+            backend: "xla",
+            reason: "probe".into(),
+        })
+        .context("creating backend");
+        assert!(is_unavailable(&err));
+        let other = anyhow::anyhow!("something else");
+        assert!(!is_unavailable(&other));
+        let unknown = anyhow::Error::new(CreateError::UnknownBackend("warp".into()));
+        assert!(!is_unavailable(&unknown));
     }
 }

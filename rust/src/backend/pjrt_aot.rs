@@ -201,6 +201,9 @@ mod tests {
 
     #[test]
     fn artifact_paths() {
+        if crate::runtime::skip_test_without_pjrt("artifact_paths") {
+            return;
+        }
         let be = PjrtAotBackend::new().unwrap();
         let p = be.artifact_path("hdiff", [64, 64, 16]);
         assert!(p.to_string_lossy().ends_with("hdiff_64x64x16.hlo.txt"));
@@ -211,6 +214,9 @@ mod tests {
 
     #[test]
     fn missing_artifact_reports_make_hint() {
+        if crate::runtime::skip_test_without_pjrt("missing_artifact_reports_make_hint") {
+            return;
+        }
         let ir = crate::analysis::compile_source(
             "stencil ghost_stencil(a: Field<f64>, b: Field<f64>) {\n\
                with computation(PARALLEL), interval(...) { b = a; }\n\

@@ -3,7 +3,7 @@
 
 use super::cexpr::CExpr;
 use crate::dsl::ast::{Interval, IterationPolicy};
-use crate::ir::implir::{Extent, StencilIr};
+use crate::ir::implir::{Extent, StencilIr, StorageClass};
 use crate::storage::{Storage, StorageInfo};
 use anyhow::{bail, Result};
 use std::collections::HashMap;
@@ -14,6 +14,10 @@ use std::collections::HashMap;
 pub struct SlotInfo {
     pub name: String,
     pub is_temp: bool,
+    /// Demoted temporary ([`StorageClass::Register`]): optimizing backends
+    /// keep it in a transient group-local buffer; the `debug` reference
+    /// interpreter still materializes it as a field.
+    pub demoted: bool,
     /// Allocation extent for temporaries; halo requirement for params.
     pub extent: Extent,
 }
@@ -25,6 +29,8 @@ pub struct CStage {
     pub expr: CExpr,
     pub interval: Interval,
     pub extent: Extent,
+    /// Fusion-group id from the optimizer (scopes demoted-buffer lifetime).
+    pub fusion_group: usize,
 }
 
 #[derive(Debug, Clone)]
@@ -48,12 +54,22 @@ impl Program {
         let mut slot_index = HashMap::new();
         for f in &ir.fields {
             slot_index.insert(f.name.clone(), slots.len());
-            slots.push(SlotInfo { name: f.name.clone(), is_temp: false, extent: f.extent });
+            slots.push(SlotInfo {
+                name: f.name.clone(),
+                is_temp: false,
+                demoted: false,
+                extent: f.extent,
+            });
         }
         let num_params = slots.len();
         for t in &ir.temporaries {
             slot_index.insert(t.name.clone(), slots.len());
-            slots.push(SlotInfo { name: t.name.clone(), is_temp: true, extent: t.extent });
+            slots.push(SlotInfo {
+                name: t.name.clone(),
+                is_temp: true,
+                demoted: t.storage == StorageClass::Register,
+                extent: t.extent,
+            });
         }
         let scalar_names: Vec<String> = ir.scalars.iter().map(|s| s.name.clone()).collect();
         let scalar_index: HashMap<String, usize> = scalar_names
@@ -70,7 +86,13 @@ impl Program {
                     .get(&st.stmt.target)
                     .ok_or_else(|| anyhow::anyhow!("unbound target `{}`", st.stmt.target))?;
                 let expr = CExpr::compile(&st.stmt.value, &slot_index, &scalar_index)?;
-                stages.push(CStage { target, expr, interval: st.interval, extent: st.extent });
+                stages.push(CStage {
+                    target,
+                    expr,
+                    interval: st.interval,
+                    extent: st.extent,
+                    fusion_group: st.fusion_group,
+                });
             }
             multistages.push(CMultistage { policy: ms.policy, stages });
         }
@@ -90,11 +112,26 @@ pub struct Env {
 impl Env {
     /// Build an environment: takes the caller's parameter storages (swapped
     /// out of the slice) and allocates temporaries sized for `domain`.
+    /// Demoted temporaries are materialized too — the reference-semantics
+    /// path used by the `debug` backend.
     pub fn build(
         program: &Program,
         fields: &mut [(&str, &mut Storage)],
         scalars: &[(&str, f64)],
         domain: [usize; 3],
+    ) -> Result<Env> {
+        Env::build_with(program, fields, scalars, domain, true)
+    }
+
+    /// Like [`Env::build`], but with `materialize_demoted = false` demoted
+    /// temporaries get a zero-size placeholder storage: the backend promises
+    /// to serve every access to them from its own group-local buffers.
+    pub fn build_with(
+        program: &Program,
+        fields: &mut [(&str, &mut Storage)],
+        scalars: &[(&str, f64)],
+        domain: [usize; 3],
+        materialize_demoted: bool,
     ) -> Result<Env> {
         let mut storages = Vec::with_capacity(program.slots.len());
         for (idx, slot) in program.slots.iter().enumerate() {
@@ -108,6 +145,8 @@ impl Env {
                     Storage::zeros(StorageInfo::new([0, 0, 0], [(0, 0); 3])),
                 );
                 storages.push(taken);
+            } else if slot.demoted && !materialize_demoted {
+                storages.push(Storage::zeros(StorageInfo::new([0, 0, 0], [(0, 0); 3])));
             } else {
                 // Temporary: allocate with its analysis extent as halo.
                 let e = slot.extent;

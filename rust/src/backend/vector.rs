@@ -12,13 +12,24 @@
 //! layout) innermost, so gathers/scatters of zero-k-offset rows degenerate
 //! to `copy_from_slice`. Sequential (FORWARD/BACKWARD) stages evaluate one
 //! plane per level — the vertical dependence forbids more.
+//!
+//! Optimizer integration: temporaries the pass manager demoted to
+//! [`StorageClass::Register`](crate::ir::implir::StorageClass) never touch
+//! a `Storage` here. Their values live in *group-local* region buffers
+//! (one whole region per PARALLEL group, one plane per level in sequential
+//! groups) that are written by the producing stage and windowed directly
+//! by consuming stages — skipping the whole-field zero allocation, the
+//! scatter after the producer, and the strided gather in every consumer
+//! that an undemoted temporary pays. Reads before the first in-group write
+//! see zeros, exactly like the zero-initialized field they replace.
 
 use super::cexpr::{apply_bin, apply_builtin1, apply_builtin2, CExpr};
-use super::program::{Env, Program};
+use super::program::{CStage, Env, Program};
 use super::{Backend, StencilArgs};
 use crate::dsl::ast::{BinOp, IterationPolicy};
 use crate::ir::implir::StencilIr;
 use anyhow::Result;
+use std::collections::HashMap;
 
 #[derive(Default)]
 pub struct VectorBackend {
@@ -83,6 +94,59 @@ impl Region {
 enum Val {
     S(f64),
     B(Vec<f64>),
+}
+
+/// Group-local buffers of demoted temporaries: slot → (region, values).
+/// Flushed at every fusion-group boundary (and every level, for
+/// sequential multistages).
+#[derive(Default)]
+struct Locals {
+    bufs: HashMap<usize, (Region, Vec<f64>)>,
+}
+
+impl Locals {
+    fn flush(&mut self, pool: &mut Pool) {
+        for (_, (_, b)) in self.bufs.drain() {
+            pool.put(b);
+        }
+    }
+}
+
+/// Shared read-only state for one stage evaluation.
+struct EvalCtx<'a> {
+    env: &'a Env,
+    /// Per-slot demotion flags (`program.slots[i].demoted`).
+    demoted: &'a [bool],
+    locals: &'a Locals,
+}
+
+/// Window a demoted temporary's region buffer: copy `r` shifted by `off`
+/// out of `(src_region, src)`. The fusion pass guarantees containment
+/// (extent-checked horizontal offsets, zero vertical offset), so the
+/// window never leaves the buffer.
+fn gather_local(
+    src_region: Region,
+    src: &[f64],
+    off: [i32; 3],
+    r: Region,
+    pool: &mut Pool,
+) -> Vec<f64> {
+    let sdj = (src_region.j1 - src_region.j0) as usize;
+    let sdk = src_region.wk();
+    let wk = r.wk();
+    let mut buf = pool.take(r.len());
+    let mut idx = 0;
+    for i in r.i0..r.i1 {
+        let si = (i + off[0] as i64 - src_region.i0) as usize;
+        for j in r.j0..r.j1 {
+            let sj = (j + off[1] as i64 - src_region.j0) as usize;
+            let base =
+                si * sdj * sdk + sj * sdk + (r.k0 + off[2] as i64 - src_region.k0) as usize;
+            buf[idx..idx + wk].copy_from_slice(&src[base..base + wk]);
+            idx += wk;
+        }
+    }
+    buf
 }
 
 fn gather(env: &Env, slot: usize, off: [i32; 3], r: Region, pool: &mut Pool) -> Vec<f64> {
@@ -184,12 +248,23 @@ fn bin_bb(op: BinOp, mut a: Vec<f64>, b: &[f64]) -> Vec<f64> {
     a
 }
 
-fn eval_region(env: &Env, e: &CExpr, r: Region, pool: &mut Pool) -> Val {
+fn eval_region(ctx: &EvalCtx, e: &CExpr, r: Region, pool: &mut Pool) -> Val {
     match e {
         CExpr::Const(v) => Val::S(*v),
-        CExpr::Scalar(ix) => Val::S(env.scalars[*ix]),
-        CExpr::Field { slot, off } => Val::B(gather(env, *slot, *off, r, pool)),
-        CExpr::Neg(a) => match eval_region(env, a, r, pool) {
+        CExpr::Scalar(ix) => Val::S(ctx.env.scalars[*ix]),
+        CExpr::Field { slot, off } => {
+            if ctx.demoted[*slot] {
+                match ctx.locals.bufs.get(slot) {
+                    Some((sr, sbuf)) => Val::B(gather_local(*sr, sbuf, *off, r, pool)),
+                    // Demoted temporary read before its first in-group
+                    // write: zeros, like the field it replaces.
+                    None => Val::S(0.0),
+                }
+            } else {
+                Val::B(gather(ctx.env, *slot, *off, r, pool))
+            }
+        }
+        CExpr::Neg(a) => match eval_region(ctx, a, r, pool) {
             Val::S(v) => Val::S(-v),
             Val::B(mut b) => {
                 for x in &mut b {
@@ -198,7 +273,7 @@ fn eval_region(env: &Env, e: &CExpr, r: Region, pool: &mut Pool) -> Val {
                 Val::B(b)
             }
         },
-        CExpr::Not(a) => match eval_region(env, a, r, pool) {
+        CExpr::Not(a) => match eval_region(ctx, a, r, pool) {
             Val::S(v) => Val::S(if v != 0.0 { 0.0 } else { 1.0 }),
             Val::B(mut b) => {
                 for x in &mut b {
@@ -208,8 +283,8 @@ fn eval_region(env: &Env, e: &CExpr, r: Region, pool: &mut Pool) -> Val {
             }
         },
         CExpr::Bin(op, a, b) => {
-            let va = eval_region(env, a, r, pool);
-            let vb = eval_region(env, b, r, pool);
+            let va = eval_region(ctx, a, r, pool);
+            let vb = eval_region(ctx, b, r, pool);
             match (va, vb) {
                 (Val::S(x), Val::S(y)) => Val::S(apply_bin(*op, x, y)),
                 (Val::S(x), Val::B(mut by)) => {
@@ -237,9 +312,9 @@ fn eval_region(env: &Env, e: &CExpr, r: Region, pool: &mut Pool) -> Val {
         }
         CExpr::Select(c, t, f) => {
             // NumPy `where` semantics: both branches evaluated everywhere.
-            let vc = eval_region(env, c, r, pool);
-            let vt = eval_region(env, t, r, pool);
-            let vf = eval_region(env, f, r, pool);
+            let vc = eval_region(ctx, c, r, pool);
+            let vt = eval_region(ctx, t, r, pool);
+            let vf = eval_region(ctx, f, r, pool);
             match vc {
                 Val::S(cv) => {
                     let keep = cv != 0.0;
@@ -285,7 +360,7 @@ fn eval_region(env: &Env, e: &CExpr, r: Region, pool: &mut Pool) -> Val {
                 }
             }
         }
-        CExpr::Call1(f, a) => match eval_region(env, a, r, pool) {
+        CExpr::Call1(f, a) => match eval_region(ctx, a, r, pool) {
             Val::S(v) => Val::S(apply_builtin1(*f, v)),
             Val::B(mut b) => {
                 for x in &mut b {
@@ -295,8 +370,8 @@ fn eval_region(env: &Env, e: &CExpr, r: Region, pool: &mut Pool) -> Val {
             }
         },
         CExpr::Call2(f, a, b) => {
-            let va = eval_region(env, a, r, pool);
-            let vb = eval_region(env, b, r, pool);
+            let va = eval_region(ctx, a, r, pool);
+            let vb = eval_region(ctx, b, r, pool);
             match (va, vb) {
                 (Val::S(x), Val::S(y)) => Val::S(apply_builtin2(*f, x, y)),
                 (Val::S(x), Val::B(mut by)) => {
@@ -325,7 +400,9 @@ fn eval_region(env: &Env, e: &CExpr, r: Region, pool: &mut Pool) -> Val {
 
 fn run_stage_region(
     env: &mut Env,
-    stage: &super::program::CStage,
+    demoted: &[bool],
+    locals: &mut Locals,
+    stage: &CStage,
     k0: i64,
     k1: i64,
     pool: &mut Pool,
@@ -339,7 +416,26 @@ fn run_stage_region(
         k0,
         k1,
     };
-    let v = eval_region(env, &stage.expr, r, pool);
+    let v = {
+        let ctx = EvalCtx { env: &*env, demoted, locals: &*locals };
+        eval_region(&ctx, &stage.expr, r, pool)
+    };
+    if demoted[stage.target] {
+        // Demoted target: the result stays a group-local buffer; no field
+        // is allocated and nothing is scattered.
+        let buf = match v {
+            Val::S(s) => {
+                let mut b = pool.take(r.len());
+                b.fill(s);
+                b
+            }
+            Val::B(b) => b,
+        };
+        if let Some((_, old)) = locals.bufs.insert(stage.target, (r, buf)) {
+            pool.put(old);
+        }
+        return;
+    }
     match v {
         Val::S(s) => {
             let mut buf = pool.take(r.len());
@@ -355,16 +451,26 @@ fn run_stage_region(
 }
 
 fn run_program(program: &Program, env: &mut Env, pool: &mut Pool) {
+    let demoted: Vec<bool> = program.slots.iter().map(|s| s.demoted).collect();
+    let mut locals = Locals::default();
     for ms in &program.multistages {
         match ms.policy {
             IterationPolicy::Parallel => {
                 // Whole 3-D region per stage: one gather/op/scatter pass.
+                // Demoted buffers live for the duration of their fusion
+                // group.
+                let mut group = None;
                 for st in &ms.stages {
+                    if group != Some(st.fusion_group) {
+                        locals.flush(pool);
+                        group = Some(st.fusion_group);
+                    }
                     let (k0, k1) = env.krange(&st.interval);
                     if k0 < k1 {
-                        run_stage_region(env, st, k0, k1, pool);
+                        run_stage_region(env, &demoted, &mut locals, st, k0, k1, pool);
                     }
                 }
+                locals.flush(pool);
             }
             IterationPolicy::Forward | IterationPolicy::Backward => {
                 let ranges: Vec<(i64, i64)> =
@@ -377,11 +483,19 @@ fn run_program(program: &Program, env: &mut Env, pool: &mut Pool) {
                     (kmin..kmax).rev().collect()
                 };
                 for k in ks {
+                    // Demoted buffers are per-level planes: group scope
+                    // restarts on every level.
+                    let mut group = None;
                     for (st, (k0, k1)) in ms.stages.iter().zip(&ranges) {
                         if k >= *k0 && k < *k1 {
-                            run_stage_region(env, st, k, k + 1, pool);
+                            if group != Some(st.fusion_group) {
+                                locals.flush(pool);
+                                group = Some(st.fusion_group);
+                            }
+                            run_stage_region(env, &demoted, &mut locals, st, k, k + 1, pool);
                         }
                     }
+                    locals.flush(pool);
                 }
             }
         }
@@ -403,7 +517,10 @@ impl Backend for VectorBackend {
     fn run(&mut self, ir: &StencilIr, args: &mut StencilArgs) -> Result<()> {
         self.prepare(ir)?;
         let program = &self.programs[&ir.fingerprint];
-        let mut env = Env::build(program, args.fields, args.scalars, args.domain)?;
+        // Demoted temporaries are never materialized as storages here —
+        // every access is served from group-local buffers.
+        let mut env =
+            Env::build_with(program, args.fields, args.scalars, args.domain, false)?;
         run_program(program, &mut env, &mut self.pool);
         env.restore(program, args.fields);
         Ok(())
@@ -418,10 +535,19 @@ mod tests {
     use crate::storage::Storage;
     use std::collections::BTreeMap;
 
-    /// Run the same stencil through `debug` and `vector` on identical
-    /// pseudo-random inputs and require bitwise-equal outputs.
+    /// Run the same stencil through `debug` (pre-opt IR), `vector`
+    /// (pre-opt IR) and `vector` (fully optimized IR, with demoted
+    /// temporaries) on identical pseudo-random inputs and require
+    /// bitwise-equal outputs from all three.
     fn assert_backends_agree(src: &str, name: &str, out_names: &[&str], domain: [usize; 3]) {
         let ir = compile_source(src, name, &BTreeMap::new()).unwrap();
+        let ir_opt = crate::analysis::compile_source_opt(
+            src,
+            name,
+            &BTreeMap::new(),
+            &crate::opt::OptConfig::default(),
+        )
+        .unwrap();
         let halo = 3usize;
         // deterministic LCG inputs
         let mut seed = 42u64;
@@ -433,6 +559,7 @@ mod tests {
         let names: Vec<String> = ir.fields.iter().map(|f| f.name.clone()).collect();
         let mut d_fields: Vec<Storage> = names.iter().map(|n| make(n)).collect();
         let mut v_fields: Vec<Storage> = d_fields.clone();
+        let mut o_fields: Vec<Storage> = d_fields.clone();
         let scalars: Vec<(&str, f64)> =
             ir.scalars.iter().map(|s| (s.name.as_str(), 0.37)).collect();
 
@@ -456,9 +583,23 @@ mod tests {
             be.run(&ir, &mut StencilArgs { fields: &mut refs, scalars: &scalars, domain })
                 .unwrap();
         }
-        for (n, (d, v)) in names.iter().zip(d_fields.iter().zip(&v_fields)) {
+        {
+            let mut refs: Vec<(&str, &mut Storage)> = names
+                .iter()
+                .map(|n| n.as_str())
+                .zip(o_fields.iter_mut())
+                .collect();
+            let mut be = VectorBackend::new();
+            be.run(&ir_opt, &mut StencilArgs { fields: &mut refs, scalars: &scalars, domain })
+                .unwrap();
+        }
+        for (n, ((d, v), o)) in names
+            .iter()
+            .zip(d_fields.iter().zip(&v_fields).zip(&o_fields))
+        {
             if out_names.contains(&n.as_str()) {
-                assert_eq!(d.max_abs_diff(v), 0.0, "field `{n}` differs");
+                assert_eq!(d.max_abs_diff(v), 0.0, "field `{n}` differs (pre-opt)");
+                assert_eq!(d.max_abs_diff(o), 0.0, "field `{n}` differs (optimized)");
             }
         }
     }
@@ -552,6 +693,41 @@ mod tests {
             "s",
             &["out"],
             [6, 5, 4],
+        );
+    }
+
+    #[test]
+    fn demoted_hdiff_runs_without_temp_storages() {
+        // The headline demotion case: all three hdiff temporaries become
+        // register buffers, and the result stays bitwise equal to debug.
+        let ir_opt = crate::analysis::compile_source_opt(
+            crate::stdlib::HDIFF_SRC,
+            "hdiff",
+            &BTreeMap::new(),
+            &crate::opt::OptConfig::default(),
+        )
+        .unwrap();
+        assert!(ir_opt
+            .temporaries
+            .iter()
+            .all(|t| t.storage == crate::ir::implir::StorageClass::Register));
+        assert_backends_agree(
+            crate::stdlib::HDIFF_SRC,
+            "hdiff",
+            &["out_phi"],
+            [9, 8, 4],
+        );
+    }
+
+    #[test]
+    fn demoted_sequential_group_matches_reference() {
+        // av/denom demote inside the interval(1,None) FORWARD group of a
+        // Thomas solve; cp/dp carry across levels and must stay fields.
+        assert_backends_agree(
+            crate::stdlib::VADV_SRC,
+            "vadv",
+            &["phi"],
+            [5, 4, 7],
         );
     }
 

@@ -16,10 +16,10 @@
 
 use super::{Backend, StencilArgs};
 use crate::dsl::ast::{BinOp, Builtin, Expr, IterationPolicy, UnOp};
-use crate::ir::implir::{Extent, Intent, StencilIr};
+use crate::ir::implir::{Extent, Intent, StencilIr, StorageClass};
 use crate::runtime::{Arg, Executable, Runtime};
 use anyhow::{anyhow, bail, Result};
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::rc::Rc;
 
 /// Geometry of a field's value tensor: `lo` is the signed offset of the
@@ -67,6 +67,10 @@ struct GraphCtx<'a> {
     geoms: HashMap<String, BoxGeom>,
     values: HashMap<String, FieldVal>,
     scalar_ops: HashMap<String, xla::XlaOp>,
+    /// Demoted temporaries: no zero-initialized box is materialized for
+    /// them — the graph carries fewer intermediate buffers, and reads
+    /// before the first write lower to a zero broadcast.
+    demoted: HashSet<String>,
 }
 
 impl GraphCtx<'_> {
@@ -215,7 +219,21 @@ impl GraphCtx<'_> {
                 }
                 Ok(v)
             }
-            None => bail!("field `{name}` has no value yet"),
+            None => {
+                if self.demoted.contains(name) {
+                    // Unwritten demoted temporary: zeros, like the
+                    // zero-initialized field it replaces.
+                    let zero = self.builder.c0(0.0f64).map_err(xerr)?;
+                    let dims = [
+                        region.dims[0] as i64,
+                        region.dims[1] as i64,
+                        region.dims[2] as i64,
+                    ];
+                    Ok(zero.broadcast(&dims).map_err(xerr)?)
+                } else {
+                    bail!("field `{name}` has no value yet")
+                }
+            }
         }
     }
 
@@ -253,8 +271,17 @@ impl GraphCtx<'_> {
         let new_val = if covers_box {
             value
         } else {
-            let cur = current
-                .ok_or_else(|| anyhow!("partial write to uninitialized `{target}`"))?;
+            let cur = match current {
+                Some(op) => op,
+                // Partial first write to a demoted temporary: splice into
+                // a zero box created on demand (parameters and undemoted
+                // temporaries always have a value by construction).
+                None if self.demoted.contains(target) => {
+                    let zero = self.builder.c0(0.0f64).map_err(xerr)?;
+                    zero.broadcast(&geom.idims()).map_err(xerr)?
+                }
+                None => bail!("partial write to uninitialized `{target}`"),
+            };
             insert_box(&cur, &value, start, region.dims, geom.dims)?
         };
         self.values.insert(target.to_string(), FieldVal::Whole(new_val));
@@ -368,6 +395,12 @@ pub fn build_computation(ir: &StencilIr, domain: [usize; 3]) -> Result<xla::XlaC
         geoms: HashMap::new(),
         values: HashMap::new(),
         scalar_ops: HashMap::new(),
+        demoted: ir
+            .temporaries
+            .iter()
+            .filter(|t| t.storage == StorageClass::Register)
+            .map(|t| t.name.clone())
+            .collect(),
     };
 
     // Parameters: fields first (box-shaped), then scalars (rank 0).
@@ -388,12 +421,17 @@ pub fn build_computation(ir: &StencilIr, domain: [usize; 3]) -> Result<xla::XlaC
         pnum += 1;
         ctx.scalar_ops.insert(s.name.clone(), op);
     }
-    // Temporaries: zero-initialized boxes.
+    // Temporaries: zero-initialized boxes — except demoted ones, whose
+    // first write provides their value (fewer intermediate buffers in the
+    // emitted graph).
     for t in &ir.temporaries {
         let geom = BoxGeom::for_extent(t.extent, domain);
+        ctx.geoms.insert(t.name.clone(), geom);
+        if t.storage == StorageClass::Register {
+            continue;
+        }
         let zero = builder.c0(0.0f64).map_err(xerr)?;
         let op = zero.broadcast(&geom.idims()).map_err(xerr)?;
-        ctx.geoms.insert(t.name.clone(), geom);
         ctx.values.insert(t.name.clone(), FieldVal::Whole(op));
     }
 
@@ -435,6 +473,17 @@ pub fn build_computation(ir: &StencilIr, domain: [usize; 3]) -> Result<xla::XlaC
                         for kk in 0..geom.dims[2] as i64 {
                             planes.push(op.slice_in_dim(kk, kk + 1, 1, 2).map_err(xerr)?);
                         }
+                        ctx.values.insert(w.clone(), FieldVal::Planes(planes));
+                    } else if !ctx.values.contains_key(w.as_str()) {
+                        // Demoted temporary first written inside this
+                        // sequential multistage: start from zero planes
+                        // (unwritten levels read as zeros; XLA dead-code-
+                        // eliminates the ones every level overwrites).
+                        let zero = ctx.builder.c0(0.0f64).map_err(xerr)?;
+                        let plane = zero
+                            .broadcast(&[geom.dims[0] as i64, geom.dims[1] as i64, 1])
+                            .map_err(xerr)?;
+                        let planes = vec![plane; geom.dims[2]];
                         ctx.values.insert(w.clone(), FieldVal::Planes(planes));
                     }
                 }
@@ -619,6 +668,18 @@ mod tests {
 
     /// debug vs xla equivalence on pseudo-random inputs.
     fn assert_xla_matches_debug(src: &str, name: &str, domain: [usize; 3], tol: f64) {
+        assert_xla_matches_debug_ir(src, name, domain, tol, None);
+    }
+
+    /// Like [`assert_xla_matches_debug`], optionally running the xla
+    /// backend on a different (e.g. optimized) IR of the same stencil.
+    fn assert_xla_matches_debug_ir(
+        src: &str,
+        name: &str,
+        domain: [usize; 3],
+        tol: f64,
+        xla_ir: Option<&crate::ir::implir::StencilIr>,
+    ) {
         let ir = compile_source(src, name, &BTreeMap::new()).unwrap();
         let halo = 3usize;
         let mut seed = 7u64;
@@ -654,7 +715,10 @@ mod tests {
                 .collect();
             XlaBackend::new()
                 .unwrap()
-                .run(&ir, &mut StencilArgs { fields: &mut refs, scalars: &scalars, domain })
+                .run(
+                    xla_ir.unwrap_or(&ir),
+                    &mut StencilArgs { fields: &mut refs, scalars: &scalars, domain },
+                )
                 .unwrap();
         }
         for (n, (d, x)) in names.iter().zip(d_fields.iter().zip(&x_fields)) {
@@ -665,6 +729,9 @@ mod tests {
 
     #[test]
     fn xla_matches_debug_parallel() {
+        if crate::runtime::skip_test_without_pjrt("xla_matches_debug_parallel") {
+            return;
+        }
         assert_xla_matches_debug(
             "function lap(p) {\n\
                return -4.0*p[0,0,0] + p[-1,0,0] + p[1,0,0] + p[0,-1,0] + p[0,1,0];\n\
@@ -683,6 +750,9 @@ mod tests {
 
     #[test]
     fn xla_matches_debug_sequential() {
+        if crate::runtime::skip_test_without_pjrt("xla_matches_debug_sequential") {
+            return;
+        }
         assert_xla_matches_debug(
             "stencil cum(a: Field<f64>, b: Field<f64>) {\n\
                with computation(FORWARD) {\n\
@@ -702,6 +772,9 @@ mod tests {
 
     #[test]
     fn xla_matches_debug_conditionals() {
+        if crate::runtime::skip_test_without_pjrt("xla_matches_debug_conditionals") {
+            return;
+        }
         assert_xla_matches_debug(
             "stencil s(a: Field<f64>, out: Field<f64>; lim: f64) {\n\
                with computation(PARALLEL), interval(...) {\n\
@@ -718,6 +791,9 @@ mod tests {
 
     #[test]
     fn xla_matches_debug_interval_split() {
+        if crate::runtime::skip_test_without_pjrt("xla_matches_debug_interval_split") {
+            return;
+        }
         assert_xla_matches_debug(
             "stencil s(a: Field<f64>, b: Field<f64>) {\n\
                with computation(PARALLEL) {\n\
@@ -733,7 +809,38 @@ mod tests {
     }
 
     #[test]
+    fn xla_optimized_ir_matches_debug() {
+        if crate::runtime::skip_test_without_pjrt("xla_optimized_ir_matches_debug") {
+            return;
+        }
+        // Run xla on the fully optimized hdiff IR (fused groups, demoted
+        // temporaries — no zero boxes emitted) against the pre-opt debug
+        // reference.
+        let ir_opt = crate::analysis::compile_source_opt(
+            crate::stdlib::HDIFF_SRC,
+            "hdiff",
+            &BTreeMap::new(),
+            &crate::opt::OptConfig::default(),
+        )
+        .unwrap();
+        assert!(ir_opt
+            .temporaries
+            .iter()
+            .all(|t| t.storage == StorageClass::Register));
+        assert_xla_matches_debug_ir(
+            crate::stdlib::HDIFF_SRC,
+            "hdiff",
+            [9, 8, 3],
+            1e-13,
+            Some(&ir_opt),
+        );
+    }
+
+    #[test]
     fn executable_cache_hits() {
+        if crate::runtime::skip_test_without_pjrt("executable_cache_hits") {
+            return;
+        }
         let ir = compile_source(
             "stencil c(a: Field<f64>, b: Field<f64>) {\n\
                with computation(PARALLEL), interval(...) { b = a; }\n\

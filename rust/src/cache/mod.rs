@@ -7,7 +7,9 @@
 //! gt4rs splits this into:
 //! * the fingerprint itself — [`crate::analysis::fingerprint_ir`], a FNV-1a
 //!   over the canonical (formatting-free) implementation IR including the
-//!   folded external values;
+//!   folded external values, the optimizer's stage metadata (fusion
+//!   groups, temporary storage classes) and the pass configuration tag —
+//!   so artifacts compiled at different opt levels never share a slot;
 //! * an in-memory stencil cache ([`StencilCache`]) used by the coordinator
 //!   so re-compiling an unchanged source is a hash lookup;
 //! * an on-disk artifact store ([`DiskCache`]) keyed by fingerprint, used

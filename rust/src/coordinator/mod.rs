@@ -3,8 +3,10 @@
 //! generated stencil objects play in GT4Py).
 //!
 //! Responsibilities:
-//! * compile sources (or library stencils) through the pipeline, memoized
-//!   by a formatting-insensitive definition fingerprint;
+//! * compile sources (or library stencils) through the pipeline *and the
+//!   optimizing pass manager* ([`crate::opt`]), memoized by a formatting-
+//!   insensitive definition fingerprint salted with the pass
+//!   configuration (different opt levels never share cache entries);
 //! * dispatch runs to any registered backend, reusing backend instances so
 //!   their executable caches stay warm;
 //! * perform the run-time storage checks (layout/halo/dtype) the paper
@@ -20,6 +22,7 @@ use crate::cache::StencilCache;
 use crate::dsl::parser::parse_module;
 use crate::ir::canon;
 use crate::ir::implir::StencilIr;
+use crate::opt::{OptConfig, OptLevel};
 use crate::stdlib;
 use crate::storage::{Storage, StorageInfo};
 use anyhow::{anyhow, Result};
@@ -99,6 +102,10 @@ pub struct Coordinator {
     by_name: HashMap<String, u64>,
     /// Run-time storage validation (the paper's per-call checks).
     pub checks_enabled: bool,
+    /// Pass-manager configuration applied after analysis. Defaults to the
+    /// full opt-level 2 set; part of every compilation cache key, so one
+    /// coordinator can serve multiple opt levels without collisions.
+    opt: OptConfig,
     pub metrics: Metrics,
 }
 
@@ -115,21 +122,46 @@ impl Coordinator {
             stencils: StencilCache::new(),
             by_name: HashMap::new(),
             checks_enabled: true,
+            opt: OptConfig::default(),
             metrics: Metrics::new(),
         }
     }
 
-    /// Compile (or fetch from cache) a stencil from module source.
-    /// Returns the analyzed stencil's fingerprint.
+    /// A coordinator pinned to an optimization level.
+    pub fn with_opt_level(level: OptLevel) -> Coordinator {
+        let mut c = Coordinator::new();
+        c.set_opt_level(level);
+        c
+    }
+
+    pub fn set_opt_level(&mut self, level: OptLevel) {
+        self.opt = OptConfig::level(level);
+    }
+
+    pub fn set_opt_config(&mut self, config: OptConfig) {
+        self.opt = config;
+    }
+
+    pub fn opt_config(&self) -> &OptConfig {
+        &self.opt
+    }
+
+    /// Compile (or fetch from cache) a stencil from module source, running
+    /// the optimizing pass manager over the pipeline output. Returns the
+    /// stencil's cache key (definition fingerprint salted with the pass
+    /// configuration — recompiling the same source at a different opt
+    /// level is a distinct cache entry).
     pub fn compile_source(
         &mut self,
         src: &str,
         stencil: &str,
         externals: &BTreeMap<String, f64>,
     ) -> Result<u64> {
-        let def_fp = def_fingerprint(src, stencil, externals)?;
+        let def_fp = def_fingerprint(src, stencil, externals)? ^ self.opt.salt();
+        let opt = self.opt;
         let ir = self.stencils.get_or_insert(def_fp, || {
-            analysis::compile_source(src, stencil, externals).map_err(|e| anyhow!("{e}"))
+            analysis::compile_source_opt(src, stencil, externals, &opt)
+                .map_err(|e| anyhow!("{e}"))
         })?;
         let name = ir.name.clone();
         self.by_name.insert(name, def_fp);
@@ -326,6 +358,62 @@ mod tests {
         c.run(fp, "debug", &mut refs, &[("alpha", 0.1)], domain).unwrap();
         // constant field: laplacian zero, out == phi
         assert_eq!(out.get(2, 2, 0), 1.0);
+    }
+
+    #[test]
+    fn opt_levels_get_distinct_cache_entries() {
+        use crate::opt::OptLevel;
+        let src = "stencil s(a: Field<f64>, b: Field<f64>) {\n\
+                     with computation(PARALLEL), interval(...) { t = a * 2.0; b = t; }\n\
+                   }";
+        let mut c = Coordinator::new();
+        c.set_opt_level(OptLevel::O0);
+        let k0 = c.compile_source(src, "s", &BTreeMap::new()).unwrap();
+        c.set_opt_level(OptLevel::O2);
+        let k2 = c.compile_source(src, "s", &BTreeMap::new()).unwrap();
+        assert_ne!(k0, k2, "opt levels must not collide in the cache");
+        assert_eq!(c.cache_stats(), (0, 2));
+        // Same source at the same level is still a pure cache hit.
+        let k2b = c.compile_source(src, "s", &BTreeMap::new()).unwrap();
+        assert_eq!(k2, k2b);
+        assert_eq!(c.cache_stats(), (1, 2));
+        // The cached IRs really differ: O2 demotes the temporary.
+        // (Each `ir()` lookup below is itself a cache hit.)
+        use crate::ir::implir::StorageClass;
+        assert_eq!(c.ir(k0).unwrap().temporary("t").unwrap().storage, StorageClass::Field3D);
+        assert_eq!(c.ir(k2).unwrap().temporary("t").unwrap().storage, StorageClass::Register);
+        assert_ne!(c.ir(k0).unwrap().fingerprint, c.ir(k2).unwrap().fingerprint);
+    }
+
+    #[test]
+    fn optimized_and_unoptimized_runs_agree() {
+        let domain = [8, 7, 4];
+        let mut sums = Vec::new();
+        for level in [crate::opt::OptLevel::O0, crate::opt::OptLevel::O2] {
+            let mut c = Coordinator::with_opt_level(level);
+            let fp = c.compile_library("hdiff").unwrap();
+            let mut inp = c.alloc_field(fp, "in_phi", domain).unwrap();
+            let mut coeff = c.alloc_field(fp, "coeff", domain).unwrap();
+            let mut out = c.alloc_field(fp, "out_phi", domain).unwrap();
+            let h = inp.info.halo;
+            let [ni, nj, nk] = domain;
+            for i in -(h[0].0 as i64)..(ni + h[0].1) as i64 {
+                for j in -(h[1].0 as i64)..(nj + h[1].1) as i64 {
+                    for k in 0..nk as i64 {
+                        inp.set(i, j, k, ((i * 3 + j * 5 + k * 7) as f64).sin());
+                    }
+                }
+            }
+            coeff.fill(0.05);
+            let mut refs: Vec<(&str, &mut Storage)> = vec![
+                ("in_phi", &mut inp),
+                ("coeff", &mut coeff),
+                ("out_phi", &mut out),
+            ];
+            c.run(fp, "vector", &mut refs, &[], domain).unwrap();
+            sums.push(out.domain_sum());
+        }
+        assert_eq!(sums[0].to_bits(), sums[1].to_bits(), "opt level changed results");
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //! to the same canonical string.
 
 use crate::dsl::ast::{Expr, Stmt, UnOp};
+use crate::ir::implir::StencilIr;
 
 /// Serialize an expression to a canonical, unambiguous prefix form.
 pub fn canon_expr(e: &Expr, out: &mut String) {
@@ -97,6 +98,42 @@ pub fn canon_stmts(stmts: &[Stmt], out: &mut String) {
             }
         }
     }
+}
+
+/// Canonical serialization of a whole implementation IR, including the
+/// optimizer-facing stage metadata (fusion groups, temporary storage
+/// classes): two IRs that differ only in optimization decisions map to
+/// *different* canonical strings, so cached artifacts from different opt
+/// levels never collide. `opt_tag` is the pass configuration's canonical
+/// string (empty for the unoptimized pipeline output).
+pub fn canon_ir(ir: &StencilIr, opt_tag: &str) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::with_capacity(1024);
+    let _ = write!(s, "stencil {};", ir.name);
+    if !opt_tag.is_empty() {
+        let _ = write!(s, "opt[{opt_tag}];");
+    }
+    for f in &ir.fields {
+        let _ = write!(s, "f {}:{};", f.name, f.dtype);
+    }
+    for sc in &ir.scalars {
+        let _ = write!(s, "s {}:{};", sc.name, sc.dtype);
+    }
+    for (k, v) in &ir.externals {
+        let _ = write!(s, "x {}={:016x};", k, v.to_bits());
+    }
+    for t in &ir.temporaries {
+        let _ = write!(s, "t {}:{};", t.name, t.storage);
+    }
+    for ms in &ir.multistages {
+        let _ = write!(s, "ms {};", ms.policy);
+        for st in &ms.stages {
+            let _ = write!(s, "st g{} {} {}=", st.fusion_group, st.interval, st.stmt.target);
+            canon_expr(&st.stmt.value, &mut s);
+            s.push(';');
+        }
+    }
+    s
 }
 
 /// 64-bit FNV-1a — stable across platforms and runs, unlike `DefaultHasher`.

@@ -108,6 +108,29 @@ pub struct FieldInfo {
     pub extent: Extent,
 }
 
+/// Where a temporary's values live at run time — decided by the optimizer
+/// (`crate::opt::demote`), consumed by the backends.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StorageClass {
+    /// A full 3-D field storage covering the temporary's extent — the
+    /// unoptimized default, and the only class the `debug` reference
+    /// interpreter ever materializes.
+    Field3D,
+    /// Demoted: every access happens inside a single fused stage group, so
+    /// backends may keep the values in a transient region/plane buffer (or
+    /// inline them entirely) instead of allocating a field.
+    Register,
+}
+
+impl fmt::Display for StorageClass {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StorageClass::Field3D => write!(f, "field3d"),
+            StorageClass::Register => write!(f, "register"),
+        }
+    }
+}
+
 /// A temporary (local) field, never observable outside the stencil.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TempField {
@@ -115,6 +138,8 @@ pub struct TempField {
     pub dtype: DType,
     /// Halo around the compute domain over which the temporary is computed.
     pub extent: Extent,
+    /// Run-time storage class (see [`StorageClass`]).
+    pub storage: StorageClass,
 }
 
 /// A lowered assignment: `target[0,0,0] = value` with `value` free of
@@ -134,6 +159,11 @@ pub struct Stage {
     pub extent: Extent,
     /// `(field, offset)` pairs read by this stage (deduplicated).
     pub reads: Vec<(String, Offset)>,
+    /// Fusion-group id: stages of one multistage sharing a group id execute
+    /// as a unit (consecutively, same interval), which scopes the lifetime
+    /// of [`StorageClass::Register`] temporaries. The analysis pipeline
+    /// assigns every stage its own group; `crate::opt::fusion` merges them.
+    pub fusion_group: usize,
 }
 
 impl Stage {
@@ -208,15 +238,19 @@ impl StencilIr {
             let _ = writeln!(s, "  scalar {}: {}", sc.name, sc.dtype);
         }
         for t in &self.temporaries {
-            let _ = writeln!(s, "  temp {}: {} extent {}", t.name, t.dtype, t.extent);
+            let _ = writeln!(
+                s,
+                "  temp {}: {} extent {} [{}]",
+                t.name, t.dtype, t.extent, t.storage
+            );
         }
         for (mi, ms) in self.multistages.iter().enumerate() {
             let _ = writeln!(s, "  multistage {} {}", mi, ms.policy);
             for (si, st) in ms.stages.iter().enumerate() {
                 let _ = writeln!(
                     s,
-                    "    stage {} {} extent {} -> {}",
-                    si, st.interval, st.extent, st.stmt.target
+                    "    stage {} {} extent {} group {} -> {}",
+                    si, st.interval, st.extent, st.fusion_group, st.stmt.target
                 );
             }
         }

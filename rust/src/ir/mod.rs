@@ -11,5 +11,6 @@ pub mod canon;
 pub mod implir;
 
 pub use implir::{
-    Assign, Extent, FieldInfo, Intent, Multistage, Stage, StencilIr, TempField,
+    Assign, Extent, FieldInfo, Intent, Multistage, Stage, StencilIr, StorageClass,
+    TempField,
 };

@@ -1,23 +1,46 @@
 //! # gt4rs — GT4Py reproduced as a Rust + JAX/Pallas stencil framework
 //!
 //! A reproduction of *"GT4Py: High Performance Stencils for Weather and
-//! Climate Applications using Python"* (Paredes et al., CSCS/ETH, 2023) as
-//! a three-layer Rust + JAX + Pallas system:
+//! Climate Applications using Python"* (Paredes et al., CSCS/ETH, 2023).
+//! The compile flow has five layers — the paper's separation of the
+//! mathematical definition from the implementation, with an explicit
+//! optimizer in between (where the paper's "transformations to obtain the
+//! performance of state-of-the-art C++ and CUDA implementations" live):
+//!
+//! ```text
+//! dsl ──► analysis ──► opt ──► ir ──► backends
+//! ```
 //!
 //! * **Frontend** ([`dsl`]) — GTScript-RS: a textual DSL plus a builder API
 //!   producing the definition IR;
 //! * **Analysis** ([`analysis`]) — inlining, name resolution, external
 //!   folding, control-flow lowering, semantic checks, and halo/extent
-//!   analysis, producing the implementation IR ([`ir`]);
-//! * **Backends** ([`backend`]) — `debug` (scalar interpreter), `vector`
-//!   (plane-vectorized evaluator), `xla` (XlaBuilder codegen JIT-compiled on
-//!   PJRT), and `pjrt-aot` (prebuilt JAX/Pallas HLO artifacts);
+//!   analysis, producing the *pre-optimization* implementation IR;
+//! * **Optimizer** ([`opt`]) — a pass manager with named, ordered,
+//!   individually-toggleable passes rewriting the IR before any backend
+//!   sees it: constant folding + CSE (`fold-cse`), dead-stage/temporary
+//!   elimination (`dce`), extent-checked stage fusion (`fuse`), and
+//!   temporary demotion to register/plane buffers (`demote`). The CLI's
+//!   `--opt-level {0,1,2}` selects the configuration; every configuration
+//!   produces bit-identical results on the interpreting backends;
+//! * **Implementation IR** ([`ir`]) — the scheduled, lowered, optimized
+//!   form all backends consume, with fusion groups and storage classes as
+//!   first-class metadata included in the canonical form/fingerprint;
+//! * **Backends** ([`backend`]) — `debug` (scalar reference interpreter,
+//!   ignores optimization metadata by design), `vector` (plane-vectorized
+//!   evaluator; demoted temporaries live in group-local buffers instead of
+//!   fields), `xla` (XlaBuilder codegen JIT-compiled on PJRT; demoted
+//!   temporaries emit no intermediate zero boxes), and `pjrt-aot`
+//!   (prebuilt JAX/**Pallas** HLO artifacts);
 //! * **Storage** ([`storage`]) — NumPy-like 3-D containers with
 //!   backend-specific layout, alignment and halo padding;
 //! * **Coordinator** ([`coordinator`]) — stencil registry, run-time storage
-//!   checks, dispatch, metrics;
+//!   checks, dispatch, metrics; compilation cache keys incorporate the
+//!   pass configuration so opt levels never collide;
 //! * **Cache** ([`cache`]) — fingerprint-based compilation caching;
-//! * **Runtime** ([`runtime`]) — PJRT client / executable management;
+//! * **Runtime** ([`runtime`]) — PJRT client / executable management plus
+//!   the [`runtime::pjrt_available`] probe backing structured
+//!   backend-unavailable errors;
 //! * **Model** ([`model`]) — an "isentropic-like" advection–diffusion model
 //!   (the paper's Tasmania analog) composed from framework stencils.
 
@@ -29,9 +52,11 @@ pub mod coordinator;
 pub mod dsl;
 pub mod ir;
 pub mod model;
+pub mod opt;
 pub mod runtime;
 pub mod stdlib;
 pub mod storage;
 
 pub use dsl::span::{CResult, CompileError};
 pub use ir::implir::StencilIr;
+pub use opt::{OptConfig, OptLevel, PassManager};

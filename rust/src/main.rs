@@ -2,10 +2,15 @@
 //!
 //! Subcommands:
 //!   inspect   dump the IRs the toolchain produces for a stencil
+//!   ir        dump the IR before/after each optimizer pass
 //!   run       execute a stencil on synthetic data and report timing
 //!   validate  run a stencil on every backend and compare the results
 //!   bench     Figure-3 style backend sweep over domain sizes
 //!   model     run the isentropic-like demonstration model
+//!
+//! Every compiling subcommand accepts `--opt-level {0,1,2}` (default 2),
+//! selecting how much of the pass manager (`gt4rs::opt`) runs between
+//! analysis and the backends.
 //!
 //! (The CLI is hand-rolled: the offline vendored crate set has no clap.)
 
@@ -13,6 +18,7 @@ use anyhow::{anyhow, bail, Result};
 use gt4rs::backend::BACKEND_NAMES;
 use gt4rs::coordinator::Coordinator;
 use gt4rs::model::{IsentropicModel, ModelConfig};
+use gt4rs::opt::{OptConfig, OptLevel, PassManager};
 use gt4rs::stdlib;
 use gt4rs::storage::Storage;
 use std::collections::BTreeMap;
@@ -71,6 +77,11 @@ fn parse_domain(s: &str) -> Result<[usize; 3]> {
     Ok([parts[0], parts[1], parts[2]])
 }
 
+fn parse_opt_level(flags: &Flags) -> Result<OptLevel> {
+    let s = flags.get_or("opt-level", "2");
+    OptLevel::parse(s).ok_or_else(|| anyhow!("--opt-level must be 0, 1 or 2, got `{s}`"))
+}
+
 fn parse_externals(s: Option<&str>) -> Result<BTreeMap<String, f64>> {
     let mut out = BTreeMap::new();
     if let Some(s) = s {
@@ -92,6 +103,7 @@ fn dispatch(args: &[String]) -> Result<()> {
     let flags = Flags::parse(&args[1..])?;
     match cmd.as_str() {
         "inspect" => cmd_inspect(&flags),
+        "ir" => cmd_ir(&flags),
         "run" => cmd_run(&flags),
         "validate" => cmd_validate(&flags),
         "bench" => cmd_bench(&flags),
@@ -113,14 +125,20 @@ USAGE: repro <subcommand> [--flag value]...
 SUBCOMMANDS
   inspect  --stencil NAME [--file F.gts] [--externals K=V,..]
            dump the implementation IR (stages, extents, fingerprint)
+  ir       --stencil NAME [--file F.gts] [--externals K=V,..]
+           dump the IR before and after each optimizer pass
   run      --stencil NAME [--backend B] [--domain IxJxK] [--iters N]
            run on synthetic data, print checksum + timing
   validate --stencil NAME [--domain IxJxK] [--backends a,b,..]
-           cross-check every backend against `debug`
+           cross-check every backend against `debug` (unavailable
+           backends are skipped)
   bench    [--stencil hdiff|vadv] [--domains 32x32x16,..] [--iters N]
            [--backends a,b,..] Figure-3 style sweep (see also cargo bench)
   model    [--backend B] [--domain IxJxK] [--steps N]
            run the isentropic-like demo model, log diagnostics
+
+All compiling subcommands take --opt-level 0|1|2 (default 2): 0 disables
+the optimizer, 1 enables fold-cse/dce/fuse, 2 adds temporary demotion.
 
 Backends: {}  (library stencils: {})",
         BACKEND_NAMES.join(", "),
@@ -128,21 +146,28 @@ Backends: {}  (library stencils: {})",
     );
 }
 
-/// Load a stencil from --file or the standard library.
-fn load_ir(coord: &mut Coordinator, flags: &Flags) -> Result<(u64, gt4rs::StencilIr)> {
+/// Resolve the stencil source from --file or the standard library.
+fn load_source(flags: &Flags) -> Result<(String, String)> {
     let name = flags
         .get("stencil")
         .ok_or_else(|| anyhow!("--stencil NAME is required"))?;
-    let externals = parse_externals(flags.get("externals"))?;
-    let fp = if let Some(path) = flags.get("file") {
-        let src = std::fs::read_to_string(path)?;
-        coord.compile_source(&src, name, &externals)?
-    } else if stdlib::source(name).is_some() {
-        let src = stdlib::source(name).unwrap();
-        coord.compile_source(src, name, &externals)?
+    let src = if let Some(path) = flags.get("file") {
+        std::fs::read_to_string(path)?
+    } else if let Some(src) = stdlib::source(name) {
+        src.to_string()
     } else {
         bail!("`{name}` is not a library stencil; pass --file F.gts");
     };
+    Ok((name.to_string(), src))
+}
+
+/// Load a stencil from --file or the standard library, honoring
+/// `--opt-level`.
+fn load_ir(coord: &mut Coordinator, flags: &Flags) -> Result<(u64, gt4rs::StencilIr)> {
+    coord.set_opt_level(parse_opt_level(flags)?);
+    let (name, src) = load_source(flags)?;
+    let externals = parse_externals(flags.get("externals"))?;
+    let fp = coord.compile_source(&src, &name, &externals)?;
     let ir = coord.ir(fp)?;
     Ok((fp, ir))
 }
@@ -151,6 +176,27 @@ fn cmd_inspect(flags: &Flags) -> Result<()> {
     let mut coord = Coordinator::new();
     let (_, ir) = load_ir(&mut coord, flags)?;
     print!("{}", ir.dump());
+    Ok(())
+}
+
+/// Dump the implementation IR before and after each optimizer pass.
+fn cmd_ir(flags: &Flags) -> Result<()> {
+    let (name, src) = load_source(flags)?;
+    let externals = parse_externals(flags.get("externals"))?;
+    let level = parse_opt_level(flags)?;
+    let mut ir = gt4rs::analysis::compile_source(&src, &name, &externals)
+        .map_err(|e| anyhow!("{e}"))?;
+    println!("=== pre-opt (pipeline output) ===");
+    print!("{}", ir.dump());
+    let pm = PassManager::new(&OptConfig::level(level));
+    for (pass, enabled, dump) in pm.run_traced(&mut ir) {
+        if enabled {
+            println!("=== after pass `{pass}` ===");
+            print!("{dump}");
+        } else {
+            println!("=== pass `{pass}` disabled at --opt-level {level} ===");
+        }
+    }
     Ok(())
 }
 
@@ -238,7 +284,14 @@ fn cmd_validate(flags: &Flags) -> Result<()> {
                 fields.iter_mut().map(|(n, s)| (n.as_str(), s)).collect();
             let srefs: Vec<(&str, f64)> =
                 scalars.iter().map(|(n, v)| (n.as_str(), *v)).collect();
-            coord.run(fp, be, &mut refs, &srefs, domain)?;
+            match coord.run(fp, be, &mut refs, &srefs, domain) {
+                Ok(_) => {}
+                Err(e) if gt4rs::backend::is_unavailable(&e) => {
+                    println!("{be:<10} SKIP (unavailable: {})", first_line(&format!("{e:#}")));
+                    continue;
+                }
+                Err(e) => return Err(e),
+            }
         }
         for ((n, r), (_, v)) in reference.iter().zip(&fields) {
             let diff = r.max_abs_diff(v);
@@ -271,6 +324,7 @@ fn cmd_bench(flags: &Flags) -> Result<()> {
     let iters: usize = flags.get_or("iters", "5").parse()?;
 
     let mut coord = Coordinator::new();
+    coord.set_opt_level(parse_opt_level(flags)?);
     let fp = coord.compile_library(stencil)?;
     let ir = coord.ir(fp)?;
     println!(
@@ -326,7 +380,12 @@ fn cmd_model(flags: &Flags) -> Result<()> {
     let domain = parse_domain(flags.get_or("domain", "48x48x16"))?;
     let steps: usize = flags.get_or("steps", "100").parse()?;
     let backend = flags.get_or("backend", "vector").to_string();
-    let config = ModelConfig { domain, backend: backend.clone(), ..ModelConfig::default() };
+    let config = ModelConfig {
+        domain,
+        backend: backend.clone(),
+        opt_level: parse_opt_level(flags)?,
+        ..ModelConfig::default()
+    };
     let mut model = IsentropicModel::new(config)?;
     println!("# isentropic-like model: domain {domain:?} backend {backend} steps {steps}");
     println!("{:>6} {:>16} {:>12} {:>12} {:>12}", "step", "mass", "min", "max", "wall");

@@ -23,6 +23,8 @@ pub struct ModelConfig {
     pub dz: f64,
     /// Backend every stencil runs on.
     pub backend: String,
+    /// Optimization level for every compiled stencil.
+    pub opt_level: crate::opt::OptLevel,
 }
 
 impl Default for ModelConfig {
@@ -38,6 +40,7 @@ impl Default for ModelConfig {
             dy: 1.0,
             dz: 1.0,
             backend: "vector".to_string(),
+            opt_level: crate::opt::OptLevel::O2,
         }
     }
 }
@@ -73,7 +76,7 @@ pub struct IsentropicModel {
 
 impl IsentropicModel {
     pub fn new(config: ModelConfig) -> Result<IsentropicModel> {
-        let mut coord = Coordinator::new();
+        let mut coord = Coordinator::with_opt_level(config.opt_level);
         let fp_advect = coord.compile_library("upwind_advect")?;
         let fp_hdiff = coord.compile_library("hdiff")?;
         let fp_vadv = coord.compile_library("vadv")?;

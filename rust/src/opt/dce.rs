@@ -1,0 +1,159 @@
+//! Dead-stage and dead-temporary elimination.
+//!
+//! A stage is *live* when it writes an API field, or when it writes a
+//! temporary that some live stage reads. Everything else — including whole
+//! chains of temporaries feeding only each other — is removed, along with
+//! temporaries left without any remaining access and multistages left
+//! without stages. Liveness is a simple grow-only fixpoint seeded at the
+//! API writes, so a guarded self-read (`t = mask ? v : t`) does not keep
+//! its own stage alive.
+//!
+//! Field/scalar parameter lists are never touched: they are the stencil's
+//! call signature, and the run-time argument checks must keep validating
+//! the full declared interface.
+
+use crate::ir::implir::StencilIr;
+use std::collections::HashSet;
+
+pub fn run(ir: &mut StencilIr) {
+    let temps: HashSet<String> =
+        ir.temporaries.iter().map(|t| t.name.clone()).collect();
+
+    // Flatten stage order for the fixpoint.
+    let flat: Vec<(usize, usize)> = ir
+        .multistages
+        .iter()
+        .enumerate()
+        .flat_map(|(mi, ms)| (0..ms.stages.len()).map(move |si| (mi, si)))
+        .collect();
+    let mut live: Vec<bool> = flat
+        .iter()
+        .map(|&(mi, si)| !temps.contains(&ir.multistages[mi].stages[si].stmt.target))
+        .collect();
+
+    loop {
+        // Temporaries read by any currently-live stage.
+        let mut read_by_live: HashSet<&str> = HashSet::new();
+        for (idx, &(mi, si)) in flat.iter().enumerate() {
+            if live[idx] {
+                for (f, _) in &ir.multistages[mi].stages[si].reads {
+                    read_by_live.insert(f.as_str());
+                }
+            }
+        }
+        let mut changed = false;
+        for (idx, &(mi, si)) in flat.iter().enumerate() {
+            if !live[idx]
+                && read_by_live.contains(ir.multistages[mi].stages[si].stmt.target.as_str())
+            {
+                live[idx] = true;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    // Drop dead stages (walk flat order alongside the nested structure).
+    let mut idx = 0;
+    for ms in &mut ir.multistages {
+        ms.stages.retain(|_| {
+            let keep = live[idx];
+            idx += 1;
+            keep
+        });
+    }
+    ir.multistages.retain(|ms| !ms.stages.is_empty());
+
+    // Drop temporaries with no remaining access.
+    let mut used: HashSet<&str> = HashSet::new();
+    for ms in &ir.multistages {
+        for st in &ms.stages {
+            used.insert(st.stmt.target.as_str());
+            for (f, _) in &st.reads {
+                used.insert(f.as_str());
+            }
+        }
+    }
+    let used: HashSet<String> = used.iter().map(|s| s.to_string()).collect();
+    ir.temporaries.retain(|t| used.contains(&t.name));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::compile_source;
+    use std::collections::BTreeMap;
+
+    #[test]
+    fn removes_dead_temporary_chain() {
+        const SRC: &str = "
+            stencil s(a: Field<f64>, out: Field<f64>) {
+                with computation(PARALLEL), interval(...) {
+                    t1 = a * 2.0;
+                    t2 = t1 + 1.0;
+                    out = a;
+                }
+            }";
+        let mut ir = compile_source(SRC, "s", &BTreeMap::new()).unwrap();
+        assert_eq!(ir.num_stages(), 3);
+        run(&mut ir);
+        assert_eq!(ir.num_stages(), 1);
+        assert!(ir.temporaries.is_empty());
+        assert_eq!(ir.multistages[0].stages[0].stmt.target, "out");
+    }
+
+    #[test]
+    fn keeps_live_chain_through_temporaries() {
+        const SRC: &str = "
+            stencil s(a: Field<f64>, out: Field<f64>) {
+                with computation(PARALLEL), interval(...) {
+                    t1 = a * 2.0;
+                    t2 = t1 + 1.0;
+                    out = t2;
+                }
+            }";
+        let mut ir = compile_source(SRC, "s", &BTreeMap::new()).unwrap();
+        run(&mut ir);
+        assert_eq!(ir.num_stages(), 3);
+        assert_eq!(ir.temporaries.len(), 2);
+    }
+
+    #[test]
+    fn self_sustaining_dead_cycle_removed() {
+        // `if a > 0 { t = t_prev }` style: t's guarded rewrite reads t
+        // itself, but nothing live reads t — the whole thing must go.
+        const SRC: &str = "
+            stencil s(a: Field<f64>, out: Field<f64>) {
+                with computation(PARALLEL), interval(...) {
+                    t = a;
+                    if a > 0.0 { t = a * 3.0; }
+                    out = a + 1.0;
+                }
+            }";
+        let mut ir = compile_source(SRC, "s", &BTreeMap::new()).unwrap();
+        run(&mut ir);
+        assert_eq!(ir.num_stages(), 1);
+        assert!(ir.temporaries.is_empty());
+    }
+
+    #[test]
+    fn drops_empty_multistages() {
+        const SRC: &str = "
+            stencil s(a: Field<f64>, out: Field<f64>) {
+                with computation(FORWARD) {
+                    interval(0, 1) { t = a; }
+                    interval(1, None) { t = t[0,0,-1] + a; }
+                }
+                with computation(PARALLEL), interval(...) {
+                    out = a * 0.5;
+                }
+            }";
+        let mut ir = compile_source(SRC, "s", &BTreeMap::new()).unwrap();
+        assert_eq!(ir.multistages.len(), 2);
+        run(&mut ir);
+        assert_eq!(ir.multistages.len(), 1);
+        assert_eq!(ir.num_stages(), 1);
+    }
+}

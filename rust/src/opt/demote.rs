@@ -1,0 +1,148 @@
+//! Temporary demotion: temporaries produced and consumed inside a single
+//! fusion group become [`StorageClass::Register`] values — backends may
+//! hold them in transient region/plane buffers for the lifetime of the
+//! group instead of allocating, scattering into and gathering from a full
+//! 3-D field.
+//!
+//! Legality (on top of what `fusion` already guarantees for in-group
+//! reads):
+//!
+//! * every write *and* every read of the temporary happens in one fusion
+//!   group (one multistage, consecutive stages, one interval);
+//! * every read has a zero vertical offset — a register buffer holds only
+//!   the group's current k-slab (one plane per level in sequential
+//!   multistages), so a `t[0,0,-1]`-style sweep carry must stay a field.
+//!
+//! Reads *before* the first in-group write (a guarded `t = m ? v : t`
+//! rewrite) are fine: register buffers read as zeros until written,
+//! exactly like the zero-initialized field the temporary would otherwise
+//! be.
+
+use crate::ir::implir::{StencilIr, StorageClass};
+use std::collections::HashMap;
+
+/// Per-temporary access summary.
+struct Access {
+    groups: Vec<usize>,
+    written: bool,
+    reads_k_zero: bool,
+}
+
+pub fn run(ir: &mut StencilIr) {
+    let mut access: HashMap<String, Access> = ir
+        .temporaries
+        .iter()
+        .map(|t| {
+            (t.name.clone(), Access { groups: Vec::new(), written: false, reads_k_zero: true })
+        })
+        .collect();
+
+    for ms in &ir.multistages {
+        for st in &ms.stages {
+            if let Some(a) = access.get_mut(st.stmt.target.as_str()) {
+                a.groups.push(st.fusion_group);
+                a.written = true;
+            }
+            for (f, off) in &st.reads {
+                if let Some(a) = access.get_mut(f.as_str()) {
+                    a.groups.push(st.fusion_group);
+                    if off[2] != 0 {
+                        a.reads_k_zero = false;
+                    }
+                }
+            }
+        }
+    }
+
+    for t in &mut ir.temporaries {
+        let a = &access[&t.name];
+        let single_group = !a.groups.is_empty() && a.groups.iter().all(|&g| g == a.groups[0]);
+        t.storage = if a.written && single_group && a.reads_k_zero {
+            StorageClass::Register
+        } else {
+            StorageClass::Field3D
+        };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::compile_source;
+    use crate::opt::fusion;
+    use std::collections::BTreeMap;
+
+    fn opt(src: &str, name: &str) -> StencilIr {
+        let mut ir = compile_source(src, name, &BTreeMap::new()).unwrap();
+        fusion::run(&mut ir);
+        run(&mut ir);
+        ir
+    }
+
+    fn class(ir: &StencilIr, name: &str) -> StorageClass {
+        ir.temporary(name).unwrap().storage
+    }
+
+    #[test]
+    fn hdiff_temporaries_all_demote() {
+        let ir = opt(crate::stdlib::HDIFF_SRC, "hdiff");
+        for t in ["lapf", "flx", "fly"] {
+            assert_eq!(class(&ir, t), StorageClass::Register, "temp `{t}`");
+        }
+    }
+
+    #[test]
+    fn vadv_sweep_carries_stay_fields() {
+        let ir = opt(crate::stdlib::VADV_SRC, "vadv");
+        // cp/dp cross groups (and cp is read at k-1): must stay fields.
+        assert_eq!(class(&ir, "cp"), StorageClass::Field3D);
+        assert_eq!(class(&ir, "dp"), StorageClass::Field3D);
+        // av/denom live entirely inside the interval(1,None) group.
+        assert_eq!(class(&ir, "av"), StorageClass::Register);
+        assert_eq!(class(&ir, "denom"), StorageClass::Register);
+    }
+
+    #[test]
+    fn cross_multistage_temp_stays_field() {
+        const SRC: &str = "
+            stencil s(a: Field<f64>, out: Field<f64>) {
+                with computation(PARALLEL), interval(...) {
+                    t = a * 2.0;
+                }
+                with computation(PARALLEL), interval(...) {
+                    out = t;
+                }
+            }";
+        let ir = opt(SRC, "s");
+        assert_eq!(class(&ir, "t"), StorageClass::Field3D);
+    }
+
+    #[test]
+    fn parallel_k_offset_read_stays_field() {
+        const SRC: &str = "
+            stencil s(a: Field<f64>, out: Field<f64>) {
+                with computation(PARALLEL), interval(...) {
+                    t = a * 2.0;
+                    out = t[0,0,1] + a;
+                }
+            }";
+        let ir = opt(SRC, "s");
+        assert_eq!(class(&ir, "t"), StorageClass::Field3D);
+    }
+
+    #[test]
+    fn guarded_rewrite_still_demotes() {
+        // Lowering turns the `if` into `t = cond ? v : t` (a zero-offset
+        // self-read) — all accesses stay inside one group.
+        const SRC: &str = "
+            stencil s(a: Field<f64>, out: Field<f64>) {
+                with computation(PARALLEL), interval(...) {
+                    t = a;
+                    if a > 0.0 { t = a * 3.0; }
+                    out = t[1,0,0] + t[-1,0,0];
+                }
+            }";
+        let ir = opt(SRC, "s");
+        assert_eq!(class(&ir, "t"), StorageClass::Register);
+    }
+}

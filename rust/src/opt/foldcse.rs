@@ -1,0 +1,411 @@
+//! Constant folding + common-subexpression elimination over stage
+//! expressions.
+//!
+//! Folding only performs rewrites that are *bit-exact* on every backend:
+//! constant-constant arithmetic uses the same `apply_bin`/`apply_builtin`
+//! semantics the interpreting backends use at run time, comparisons fold to
+//! boolean literals (preserving the predicate type the XLA backend needs
+//! for `select`), and the only algebraic identities applied are the IEEE-
+//! exact `x * 1.0`, `1.0 * x` and `x / 1.0`. Transcendental builtins
+//! (`exp`, `log`, `sin`, ...) are deliberately *not* folded: libm and XLA
+//! may differ in the last ulp, and folding would perturb the cross-backend
+//! equivalence the test suite asserts.
+//!
+//! CSE hoists repeated value-typed subtrees of a stage expression into a
+//! fresh `__cse_N` temporary stage inserted immediately before it (same
+//! interval, same extent). Consumers read the new temporary at offset
+//! `[0,0,0]`, so the hoisted stage fuses into the same group and — at
+//! opt-level 2 — demotes to a register buffer. Hoisting out of a ternary
+//! branch is value-safe: f64 arithmetic is total (no traps), and the value
+//! is only *read* where the original expression would have evaluated it.
+
+use crate::backend::cexpr::{apply_bin, apply_builtin1, apply_builtin2};
+use crate::dsl::ast::{BinOp, Builtin, Expr, UnOp};
+use crate::ir::canon;
+use crate::ir::implir::{Assign, Stage, StencilIr, StorageClass, TempField};
+use std::collections::BTreeMap;
+
+/// Minimum node count for a subtree to be worth hoisting.
+const CSE_MIN_SIZE: usize = 4;
+/// Upper bound on hoists per stage (defensive; real stages hit fixpoint
+/// long before).
+const CSE_MAX_ROUNDS: usize = 8;
+
+/// Run folding, then CSE, over every stage.
+pub fn run(ir: &mut StencilIr) {
+    for ms in &mut ir.multistages {
+        for st in &mut ms.stages {
+            st.stmt.value = fold_expr(&st.stmt.value);
+            st.reads = Stage::collect_reads(&st.stmt);
+        }
+    }
+    cse(ir);
+    // Re-establish the pre-fusion invariant: one distinct group per stage
+    // (CSE inserts stages; group merging happens later, in `fusion`).
+    let mut next = 0usize;
+    for ms in &mut ir.multistages {
+        for st in &mut ms.stages {
+            st.fusion_group = next;
+            next += 1;
+        }
+    }
+}
+
+/// Bottom-up constant folding. Value-typed results fold to `Expr::Float`,
+/// boolean-typed results to `Expr::Bool`.
+pub fn fold_expr(e: &Expr) -> Expr {
+    match e {
+        Expr::Unary { op, operand } => {
+            let o = fold_expr(operand);
+            match (op, &o) {
+                (UnOp::Neg, Expr::Float(v)) => Expr::Float(-*v),
+                (UnOp::Not, Expr::Bool(b)) => Expr::Bool(!*b),
+                _ => Expr::Unary { op: *op, operand: Box::new(o) },
+            }
+        }
+        Expr::Binary { op, lhs, rhs } => {
+            let l = fold_expr(lhs);
+            let r = fold_expr(rhs);
+            match (&l, &r) {
+                (Expr::Float(a), Expr::Float(b)) => {
+                    if op.is_comparison() {
+                        return Expr::Bool(apply_bin(*op, *a, *b) != 0.0);
+                    }
+                    if !op.is_logical() {
+                        return Expr::Float(apply_bin(*op, *a, *b));
+                    }
+                }
+                (Expr::Bool(a), Expr::Bool(b)) if op.is_logical() => {
+                    return Expr::Bool(match op {
+                        BinOp::And => *a && *b,
+                        BinOp::Or => *a || *b,
+                        _ => unreachable!(),
+                    });
+                }
+                _ => {}
+            }
+            // IEEE-exact identities only (preserve NaN, signed zero).
+            match op {
+                BinOp::Mul => {
+                    if matches!(r, Expr::Float(v) if v.to_bits() == 1.0f64.to_bits()) {
+                        return l;
+                    }
+                    if matches!(l, Expr::Float(v) if v.to_bits() == 1.0f64.to_bits()) {
+                        return r;
+                    }
+                }
+                BinOp::Div => {
+                    if matches!(r, Expr::Float(v) if v.to_bits() == 1.0f64.to_bits()) {
+                        return l;
+                    }
+                }
+                _ => {}
+            }
+            Expr::Binary { op: *op, lhs: Box::new(l), rhs: Box::new(r) }
+        }
+        Expr::Ternary { cond, then_e, else_e } => {
+            let c = fold_expr(cond);
+            if let Expr::Bool(b) = &c {
+                return if *b { fold_expr(then_e) } else { fold_expr(else_e) };
+            }
+            Expr::Ternary {
+                cond: Box::new(c),
+                then_e: Box::new(fold_expr(then_e)),
+                else_e: Box::new(fold_expr(else_e)),
+            }
+        }
+        Expr::Builtin { func, args } => {
+            let folded: Vec<Expr> = args.iter().map(fold_expr).collect();
+            let all_const = folded.iter().all(|a| matches!(a, Expr::Float(_)));
+            if all_const && foldable_builtin(*func) {
+                let vals: Vec<f64> = folded
+                    .iter()
+                    .map(|a| match a {
+                        Expr::Float(v) => *v,
+                        _ => unreachable!(),
+                    })
+                    .collect();
+                return Expr::Float(if vals.len() == 1 {
+                    apply_builtin1(*func, vals[0])
+                } else {
+                    apply_builtin2(*func, vals[0], vals[1])
+                });
+            }
+            Expr::Builtin { func: *func, args: folded }
+        }
+        other => other.clone(),
+    }
+}
+
+/// Builtins whose host-side evaluation is bit-identical to every backend
+/// (IEEE-exact operations only).
+fn foldable_builtin(f: Builtin) -> bool {
+    matches!(
+        f,
+        Builtin::Abs | Builtin::Sqrt | Builtin::Floor | Builtin::Ceil | Builtin::Min | Builtin::Max
+    )
+}
+
+/// Whether a subtree produces a boolean (predicate-typed) value — such
+/// trees cannot be stored in an f64 temporary without changing the type
+/// the XLA backend sees at its use sites.
+fn is_boolean(e: &Expr) -> bool {
+    match e {
+        Expr::Bool(_) => true,
+        Expr::Unary { op: UnOp::Not, .. } => true,
+        Expr::Binary { op, .. } => op.is_comparison() || op.is_logical(),
+        _ => false,
+    }
+}
+
+fn canon_of(e: &Expr) -> String {
+    let mut s = String::new();
+    canon::canon_expr(e, &mut s);
+    s
+}
+
+/// Hoist repeated subtrees stage-by-stage.
+fn cse(ir: &mut StencilIr) {
+    let temp_dtype = ir
+        .fields
+        .first()
+        .map(|f| f.dtype)
+        .unwrap_or(crate::dsl::ast::DType::F64);
+    let mut counter = 0usize;
+    let mut new_temps: Vec<TempField> = Vec::new();
+
+    for ms in &mut ir.multistages {
+        let mut si = 0;
+        while si < ms.stages.len() {
+            for _ in 0..CSE_MAX_ROUNDS {
+                let Some((key, subtree)) = best_candidate(&ms.stages[si].stmt.value) else {
+                    break;
+                };
+                // Fresh, collision-free name (user code cannot produce
+                // `__cse_*`: the lexer has no leading-underscore keywords
+                // but be defensive anyway).
+                let mut name = format!("__cse_{counter}");
+                counter += 1;
+                while ir.fields.iter().any(|f| f.name == name)
+                    || ir.temporaries.iter().any(|t| t.name == name)
+                    || new_temps.iter().any(|t| t.name == name)
+                {
+                    name = format!("__cse_{counter}");
+                    counter += 1;
+                }
+                let host = &mut ms.stages[si];
+                host.stmt.value =
+                    replace_subtree(&host.stmt.value, &key, &name);
+                host.reads = Stage::collect_reads(&host.stmt);
+                let (interval, extent) = (host.interval, host.extent);
+                let stmt = Assign { target: name.clone(), value: subtree };
+                let reads = Stage::collect_reads(&stmt);
+                ms.stages.insert(
+                    si,
+                    Stage { stmt, interval, extent, reads, fusion_group: 0 },
+                );
+                si += 1; // host moved one slot down
+                new_temps.push(TempField {
+                    name,
+                    dtype: temp_dtype,
+                    extent,
+                    storage: StorageClass::Field3D,
+                });
+            }
+            si += 1;
+        }
+    }
+    ir.temporaries.extend(new_temps);
+}
+
+/// The most beneficial repeated value-typed subtree of `e`, as
+/// `(canonical key, subtree clone)`; `None` when nothing qualifies.
+fn best_candidate(e: &Expr) -> Option<(String, Expr)> {
+    // BTreeMap keeps candidate selection deterministic.
+    let mut counts: BTreeMap<String, (usize, usize, Expr)> = BTreeMap::new();
+    collect_subtrees(e, &mut counts);
+    let mut best: Option<(usize, String, Expr)> = None;
+    for (key, (count, size, tree)) in counts {
+        if count < 2 {
+            continue;
+        }
+        let score = size * (count - 1);
+        match &best {
+            Some((bscore, _, _)) if *bscore >= score => {}
+            _ => best = Some((score, key, tree)),
+        }
+    }
+    best.map(|(_, key, tree)| (key, tree))
+}
+
+fn collect_subtrees(e: &Expr, counts: &mut BTreeMap<String, (usize, usize, Expr)>) {
+    let size = e.size();
+    if size >= CSE_MIN_SIZE && !is_boolean(e) {
+        let key = canon_of(e);
+        counts
+            .entry(key)
+            .and_modify(|(c, _, _)| *c += 1)
+            .or_insert_with(|| (1, size, e.clone()));
+    }
+    match e {
+        Expr::Unary { operand, .. } => collect_subtrees(operand, counts),
+        Expr::Binary { lhs, rhs, .. } => {
+            collect_subtrees(lhs, counts);
+            collect_subtrees(rhs, counts);
+        }
+        Expr::Ternary { cond, then_e, else_e } => {
+            collect_subtrees(cond, counts);
+            collect_subtrees(then_e, counts);
+            collect_subtrees(else_e, counts);
+        }
+        Expr::Call { args, .. } | Expr::Builtin { args, .. } => {
+            for a in args {
+                collect_subtrees(a, counts);
+            }
+        }
+        _ => {}
+    }
+}
+
+/// Replace every occurrence of the subtree with canonical form `key` by a
+/// zero-offset read of `temp`. Identical trees cannot overlap partially,
+/// so top-down replacement is complete and unambiguous.
+fn replace_subtree(e: &Expr, key: &str, temp: &str) -> Expr {
+    if !is_boolean(e) && e.size() >= CSE_MIN_SIZE && canon_of(e) == key {
+        return Expr::field(temp, [0, 0, 0]);
+    }
+    match e {
+        Expr::Unary { op, operand } => Expr::Unary {
+            op: *op,
+            operand: Box::new(replace_subtree(operand, key, temp)),
+        },
+        Expr::Binary { op, lhs, rhs } => Expr::Binary {
+            op: *op,
+            lhs: Box::new(replace_subtree(lhs, key, temp)),
+            rhs: Box::new(replace_subtree(rhs, key, temp)),
+        },
+        Expr::Ternary { cond, then_e, else_e } => Expr::Ternary {
+            cond: Box::new(replace_subtree(cond, key, temp)),
+            then_e: Box::new(replace_subtree(then_e, key, temp)),
+            else_e: Box::new(replace_subtree(else_e, key, temp)),
+        },
+        Expr::Call { name, args, span } => Expr::Call {
+            name: name.clone(),
+            args: args.iter().map(|a| replace_subtree(a, key, temp)).collect(),
+            span: *span,
+        },
+        Expr::Builtin { func, args } => Expr::Builtin {
+            func: *func,
+            args: args.iter().map(|a| replace_subtree(a, key, temp)).collect(),
+        },
+        other => other.clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::compile_source;
+    use crate::dsl::parser::parse_expr;
+    use std::collections::BTreeMap as Map;
+
+    fn fold_src(src: &str) -> Expr {
+        fold_expr(&parse_expr(src).unwrap())
+    }
+
+    #[test]
+    fn folds_constant_arithmetic_exactly() {
+        assert_eq!(fold_src("1.5 + 2.25"), Expr::Float(3.75));
+        assert_eq!(fold_src("2.0 * 3.0 - 1.0"), Expr::Float(5.0));
+        assert_eq!(fold_src("7.0 % 3.0"), Expr::Float(1.0));
+        assert_eq!(fold_src("-(2.0)"), Expr::Float(-2.0));
+    }
+
+    #[test]
+    fn comparisons_fold_to_bools_and_select_branches() {
+        assert_eq!(fold_src("2.0 > 1.0"), Expr::Bool(true));
+        assert_eq!(fold_src("2.0 > 1.0 ? 5.0 : 7.0"), Expr::Float(5.0));
+        assert_eq!(fold_src("1.0 >= 2.0 ? 5.0 : 7.0"), Expr::Float(7.0));
+    }
+
+    #[test]
+    fn exact_identities_only() {
+        // x * 1.0 and x / 1.0 are exact; x + 0.0 is NOT (signed zero).
+        let x = fold_src("ghost * 1.0");
+        assert!(matches!(x, Expr::Name(..)));
+        let y = fold_src("ghost / 1.0");
+        assert!(matches!(y, Expr::Name(..)));
+        let z = fold_src("ghost + 0.0");
+        assert!(matches!(z, Expr::Binary { .. }));
+    }
+
+    #[test]
+    fn exact_builtins_fold_transcendentals_do_not() {
+        assert_eq!(fold_src("sqrt(9.0)"), Expr::Float(3.0));
+        assert_eq!(fold_src("min(3.0, max(1.0, 2.0))"), Expr::Float(2.0));
+        assert_eq!(fold_src("abs(-4.5)"), Expr::Float(4.5));
+        assert!(matches!(fold_src("exp(1.0)"), Expr::Builtin { .. }));
+        assert!(matches!(fold_src("sin(0.5)"), Expr::Builtin { .. }));
+    }
+
+    #[test]
+    fn cse_hoists_repeated_laplacian() {
+        const SRC: &str = "
+            function lap(p) {
+                return 4.0 * p[0,0,0] - (p[-1,0,0] + p[1,0,0] + p[0,-1,0] + p[0,1,0]);
+            }
+            stencil s(a: Field<f64>, out: Field<f64>) {
+                with computation(PARALLEL), interval(...) {
+                    out = lap(a) * lap(a) + sqrt(abs(lap(a)));
+                }
+            }";
+        let mut ir = compile_source(SRC, "s", &Map::new()).unwrap();
+        let before = ir.num_stages();
+        run(&mut ir);
+        assert_eq!(before, 1);
+        assert_eq!(ir.num_stages(), 2, "{}", ir.dump());
+        assert!(ir.temporaries.iter().any(|t| t.name.starts_with("__cse_")));
+        // The hoisted stage precedes the consumer and shares its extent.
+        let stages = &ir.multistages[0].stages;
+        assert!(stages[0].stmt.target.starts_with("__cse_"));
+        assert_eq!(stages[0].extent, stages[1].extent);
+        // Consumer reads the new temp at zero offset.
+        assert!(stages[1]
+            .reads
+            .iter()
+            .any(|(n, off)| n.starts_with("__cse_") && *off == [0, 0, 0]));
+    }
+
+    #[test]
+    fn cse_skips_boolean_subtrees() {
+        const SRC: &str = "
+            stencil s(a: Field<f64>, out: Field<f64>) {
+                with computation(PARALLEL), interval(...) {
+                    out = (a[1,0,0] + a[-1,0,0] > 1.0 ? a : 0.5)
+                        + (a[1,0,0] + a[-1,0,0] > 1.0 ? 0.25 : a);
+                }
+            }";
+        let mut ir = compile_source(SRC, "s", &Map::new()).unwrap();
+        run(&mut ir);
+        // The repeated subtree is the *comparison* (boolean) — but its
+        // value-typed operand `a[1,0,0] + a[-1,0,0]` is too small (size 3)
+        // to hoist, so nothing happens.
+        assert_eq!(ir.num_stages(), 1, "{}", ir.dump());
+    }
+
+    #[test]
+    fn folding_is_applied_inside_stages() {
+        const SRC: &str = "
+            stencil s(a: Field<f64>, out: Field<f64>) {
+                with computation(PARALLEL), interval(...) {
+                    out = a * (2.0 * 0.5) + (3.0 - 3.0);
+                }
+            }";
+        let mut ir = compile_source(SRC, "s", &Map::new()).unwrap();
+        run(&mut ir);
+        let mut s = String::new();
+        canon::canon_expr(&ir.multistages[0].stages[0].stmt.value, &mut s);
+        // a * 1.0 folds to a; + 0.0 must remain (signed-zero exactness).
+        assert_eq!(s, format!("o+(F(a,0,0,0),f{:016x})", 0.0f64.to_bits()));
+    }
+}

@@ -1,0 +1,159 @@
+//! Stage fusion: partition each multistage's stages into *fusion groups* —
+//! maximal runs of consecutive stages that execute as one unit.
+//!
+//! Grouping never reorders execution (the IR keeps stage-outermost
+//! semantics), so its purpose is to scope data flow: a temporary whose
+//! every access lives inside one group can be demoted to a transient
+//! register/plane buffer (`crate::opt::demote`), and backends may stream a
+//! group's stages without materializing intermediates between them.
+//!
+//! A stage joins the current group when (using the halo data the extent
+//! analysis stamped on the IR):
+//!
+//! * it shares the group's vertical interval (sequential multistages apply
+//!   a group's stages level-by-level; a mismatched interval would
+//!   interleave differently), and
+//! * every read of a *temporary* written earlier in the group stays inside
+//!   the producer's computed extent — `reader.extent.translate(offset) ⊆
+//!   writer.extent` — with a zero vertical offset (a register buffer holds
+//!   only the group's current k-slab), and
+//! * every read of an *API field* written earlier in the group is at
+//!   offset `[0,0,0]` (point-local flow; anything wider must observe the
+//!   caller-visible storage).
+
+use crate::ir::implir::{Extent, StencilIr};
+use std::collections::{HashMap, HashSet};
+
+pub fn run(ir: &mut StencilIr) {
+    let temps: HashSet<String> =
+        ir.temporaries.iter().map(|t| t.name.clone()).collect();
+
+    let mut next_group = 0usize;
+    for ms in &mut ir.multistages {
+        // Writer extents of fields written by the current group.
+        let mut group_written: HashMap<String, Extent> = HashMap::new();
+        let mut group_start: Option<usize> = None;
+        for idx in 0..ms.stages.len() {
+            let joins = match group_start {
+                None => true,
+                Some(start) => {
+                    let st = &ms.stages[idx];
+                    st.interval == ms.stages[start].interval
+                        && st.reads.iter().all(|(f, off)| match group_written.get(f) {
+                            None => true,
+                            Some(wext) => {
+                                if temps.contains(f) {
+                                    off[2] == 0
+                                        && st.extent.translate(*off).within(wext)
+                                } else {
+                                    *off == [0, 0, 0]
+                                }
+                            }
+                        })
+                }
+            };
+            if !joins {
+                next_group += 1;
+                group_written.clear();
+            }
+            if group_start.is_none() || !joins {
+                group_start = Some(idx);
+            }
+            let st = &mut ms.stages[idx];
+            st.fusion_group = next_group;
+            group_written.insert(st.stmt.target.clone(), st.extent);
+        }
+        // Groups never span multistages.
+        next_group += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::compile_source;
+    use std::collections::BTreeMap;
+
+    fn groups(ir: &StencilIr) -> Vec<Vec<usize>> {
+        ir.multistages
+            .iter()
+            .map(|ms| ms.stages.iter().map(|s| s.fusion_group).collect())
+            .collect()
+    }
+
+    #[test]
+    fn hdiff_fuses_into_one_group() {
+        let mut ir =
+            compile_source(crate::stdlib::HDIFF_SRC, "hdiff", &BTreeMap::new()).unwrap();
+        run(&mut ir);
+        let g = groups(&ir);
+        assert_eq!(g.len(), 1);
+        assert!(
+            g[0].iter().all(|&gid| gid == g[0][0]),
+            "hdiff stages must share one fusion group: {g:?}"
+        );
+    }
+
+    #[test]
+    fn interval_mismatch_splits_groups() {
+        let mut ir =
+            compile_source(crate::stdlib::VADV_SRC, "vadv", &BTreeMap::new()).unwrap();
+        run(&mut ir);
+        let g = groups(&ir);
+        assert_eq!(g.len(), 2);
+        // FORWARD: interval(0,1) stages vs interval(1,None) stages.
+        assert_eq!(g[0][0], g[0][1]);
+        assert_ne!(g[0][1], g[0][2]);
+        assert!(g[0][2..].iter().all(|&x| x == g[0][2]));
+        // Groups never span multistages.
+        assert!(g[1].iter().all(|&x| !g[0].contains(&x)));
+    }
+
+    #[test]
+    fn vertical_offset_read_of_temp_splits_group() {
+        const SRC: &str = "
+            stencil s(a: Field<f64>, out: Field<f64>) {
+                with computation(PARALLEL), interval(...) {
+                    t = a[0,0,1] - a[0,0,-1];
+                    out = t[0,0,1] + a;
+                }
+            }";
+        let mut ir = compile_source(SRC, "s", &BTreeMap::new()).unwrap();
+        run(&mut ir);
+        let g = groups(&ir);
+        assert_ne!(g[0][0], g[0][1], "k-offset temp read must not fuse");
+    }
+
+    #[test]
+    fn horizontal_offset_within_extent_fuses() {
+        const SRC: &str = "
+            stencil s(a: Field<f64>, out: Field<f64>) {
+                with computation(PARALLEL), interval(...) {
+                    t = a * 2.0;
+                    out = t[1,0,0] - t[-1,0,0];
+                }
+            }";
+        let mut ir = compile_source(SRC, "s", &BTreeMap::new()).unwrap();
+        run(&mut ir);
+        let g = groups(&ir);
+        assert_eq!(g[0][0], g[0][1], "extent-covered reads must fuse");
+    }
+
+    #[test]
+    fn api_field_offset_read_splits_group() {
+        const SRC: &str = "
+            stencil s(a: Field<f64>, mid: Field<f64>, out: Field<f64>) {
+                with computation(PARALLEL), interval(...) {
+                    mid = a * 2.0;
+                    out = mid[1,0,0];
+                }
+            }";
+        let mut ir = compile_source(SRC, "s", &BTreeMap::new()).unwrap();
+        run(&mut ir);
+        let g = groups(&ir);
+        assert_ne!(
+            g[0][0], g[0][1],
+            "offset read of a group-written API field must not fuse"
+        );
+    }
+}

@@ -1,0 +1,168 @@
+//! Cache-layer coverage: `DiskCache` persistence, `StencilCache`
+//! hit/miss accounting through the coordinator, and the fingerprint
+//! properties the caching design rests on — *invariant under source
+//! reformatting, distinct across optimization levels*.
+
+use gt4rs::analysis;
+use gt4rs::cache::{DiskCache, StencilCache};
+use gt4rs::coordinator::Coordinator;
+use gt4rs::opt::{OptConfig, OptLevel};
+use std::collections::BTreeMap;
+
+/// Deterministic reformatting: inject whitespace/newlines around
+/// punctuation without changing token structure.
+fn reformat(src: &str, variant: u64) -> String {
+    let mut out = String::with_capacity(src.len() * 2);
+    let mut n = variant;
+    for ch in src.chars() {
+        out.push(ch);
+        if matches!(ch, ';' | '{' | '}' | ',' | '(' | ')') {
+            n = n.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            match (n >> 33) % 4 {
+                0 => out.push(' '),
+                1 => out.push('\n'),
+                2 => out.push_str("  \n\t"),
+                _ => {}
+            }
+        }
+    }
+    out
+}
+
+fn gen_source(seed: u64) -> String {
+    // A small family of stencils exercising temporaries, builtins,
+    // ternaries and offsets.
+    let coef = 0.25 + (seed as f64) * 0.125;
+    let off = 1 + (seed % 2) as i32;
+    format!(
+        "stencil fam(a: Field<f64>, out: Field<f64>; w: f64) {{\n\
+           with computation(PARALLEL), interval(...) {{\n\
+             t = a[{off},0,0] + a[-{off},0,0];\n\
+             u = max(t * {coef:.3}, a) + sqrt(abs(t));\n\
+             out = u > w ? u : w + t * {coef:.3};\n\
+           }}\n\
+         }}"
+    )
+}
+
+#[test]
+fn disk_cache_roundtrip_and_isolation() {
+    let dir = std::env::temp_dir().join(format!("gt4rs_dc_it_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cache = DiskCache::new(&dir).unwrap();
+    assert!(!cache.contains("hlo", 7));
+    cache.put("hlo", 7, "HloModule a").unwrap();
+    cache.put("hlo", 8, "HloModule b").unwrap();
+    cache.put("cpp", 7, "int main() {}").unwrap();
+    assert_eq!(cache.get("hlo", 7).unwrap(), "HloModule a");
+    assert_eq!(cache.get("hlo", 8).unwrap(), "HloModule b");
+    assert_eq!(cache.get("cpp", 7).unwrap(), "int main() {}");
+    assert!(cache.get("hlo", 9).is_none());
+    // Overwrite is atomic-replace, last write wins.
+    cache.put("hlo", 7, "HloModule a2").unwrap();
+    assert_eq!(cache.get("hlo", 7).unwrap(), "HloModule a2");
+    // A second handle over the same directory sees everything.
+    let reopened = DiskCache::new(&dir).unwrap();
+    assert!(reopened.contains("hlo", 8));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn stencil_cache_counts_hits_and_misses() {
+    let src = gen_source(0);
+    let ir = analysis::compile_source(&src, "fam", &BTreeMap::new()).unwrap();
+    let mut cache = StencilCache::new();
+    assert!(cache.is_empty());
+    cache.get_or_insert(ir.fingerprint, || Ok(ir.clone())).unwrap();
+    for _ in 0..3 {
+        cache
+            .get_or_insert(ir.fingerprint, || panic!("must not recompile"))
+            .unwrap();
+    }
+    assert_eq!((cache.hits, cache.misses, cache.len()), (3, 1, 1));
+    // A failing compile is not memoized.
+    let err = cache.get_or_insert(42, || Err(anyhow::anyhow!("boom")));
+    assert!(err.is_err());
+    assert_eq!(cache.len(), 1);
+}
+
+#[test]
+fn coordinator_cache_hits_across_reformatting() {
+    let mut coord = Coordinator::new();
+    let src = gen_source(1);
+    let fp = coord.compile_source(&src, "fam", &BTreeMap::new()).unwrap();
+    for variant in 0..5 {
+        let fp2 = coord
+            .compile_source(&reformat(&src, variant), "fam", &BTreeMap::new())
+            .unwrap();
+        assert_eq!(fp, fp2, "variant {variant} missed the cache");
+    }
+    assert_eq!(coord.cache_stats(), (5, 1));
+}
+
+#[test]
+fn fingerprint_invariant_under_reformatting_across_opt_levels() {
+    for seed in 0..6u64 {
+        let src = gen_source(seed);
+        for level in [OptLevel::O0, OptLevel::O1, OptLevel::O2] {
+            let config = OptConfig::level(level);
+            let base = analysis::compile_source_opt(&src, "fam", &BTreeMap::new(), &config)
+                .unwrap()
+                .fingerprint;
+            for variant in 0..4 {
+                let alt = analysis::compile_source_opt(
+                    &reformat(&src, seed * 31 + variant),
+                    "fam",
+                    &BTreeMap::new(),
+                    &config,
+                )
+                .unwrap()
+                .fingerprint;
+                assert_eq!(
+                    base, alt,
+                    "seed {seed} O{level}: reformatting changed the fingerprint"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fingerprint_changes_with_opt_level() {
+    for seed in 0..6u64 {
+        let src = gen_source(seed);
+        let fp_at = |level: OptLevel| {
+            analysis::compile_source_opt(&src, "fam", &BTreeMap::new(), &OptConfig::level(level))
+                .unwrap()
+                .fingerprint
+        };
+        let (f0, f1, f2) = (fp_at(OptLevel::O0), fp_at(OptLevel::O1), fp_at(OptLevel::O2));
+        assert_ne!(f0, f1, "seed {seed}: O0 vs O1 fingerprints collide");
+        assert_ne!(f1, f2, "seed {seed}: O1 vs O2 fingerprints collide");
+        assert_ne!(f0, f2, "seed {seed}: O0 vs O2 fingerprints collide");
+        // Determinism at every level.
+        assert_eq!(f2, fp_at(OptLevel::O2));
+    }
+}
+
+#[test]
+fn externals_and_structure_still_change_fingerprints() {
+    // Guard against the opt-tag salting masking real identity changes.
+    let src = "extern C = 1.0;\n\
+               stencil s(a: Field<f64>, b: Field<f64>) {\n\
+                 with computation(PARALLEL), interval(...) { b = a * C; }\n\
+               }";
+    let cfg = OptConfig::default();
+    let f1 = analysis::compile_source_opt(src, "s", &BTreeMap::new(), &cfg)
+        .unwrap()
+        .fingerprint;
+    let mut ov = BTreeMap::new();
+    ov.insert("C".to_string(), 2.0);
+    let f2 = analysis::compile_source_opt(src, "s", &ov, &cfg).unwrap().fingerprint;
+    assert_ne!(f1, f2);
+    let src3 = src.replace("a * C", "a + C");
+    let f3 = analysis::compile_source_opt(&src3, "s", &BTreeMap::new(), &cfg)
+        .unwrap()
+        .fingerprint;
+    assert_ne!(f1, f3);
+}

@@ -15,6 +15,9 @@ fn have(name: &str) -> bool {
 
 #[test]
 fn model_step_artifact_composes_hdiff_and_vadv() {
+    if gt4rs::runtime::skip_test_without_pjrt("model_step_artifact_composes_hdiff_and_vadv") {
+        return;
+    }
     // The L2 `model_step` artifact fuses the Pallas hdiff + vadv kernels in
     // one XLA program; its output must equal running the two library
     // stencils back-to-back on the debug backend.
@@ -100,6 +103,9 @@ fn model_step_artifact_composes_hdiff_and_vadv() {
 
 #[test]
 fn model_runs_on_pjrt_aot_backend() {
+    if gt4rs::runtime::skip_test_without_pjrt("model_runs_on_pjrt_aot_backend") {
+        return;
+    }
     if !have("hdiff_32x32x8.hlo.txt") {
         eprintln!("SKIP: model artifacts missing — run `make artifacts`");
         return;
@@ -124,6 +130,9 @@ fn model_runs_on_pjrt_aot_backend() {
 
 #[test]
 fn artifact_roundtrip_hdiff_all_test_domains() {
+    if gt4rs::runtime::skip_test_without_pjrt("artifact_roundtrip_hdiff_all_test_domains") {
+        return;
+    }
     let rt = Runtime::cpu().unwrap();
     for domain in [[8usize, 8, 4], [12, 10, 6]] {
         let name = format!("hdiff_{}x{}x{}.hlo.txt", domain[0], domain[1], domain[2]);

@@ -70,6 +70,9 @@ fn assert_all_backends_agree(stencil: &str, scalars: &[(&str, f64)], tol: f64) {
                     );
                 }
             }
+            Err(e) if gt4rs::backend::is_unavailable(&e) => {
+                eprintln!("SKIP {stencil} on {be}: backend unavailable (no PJRT runtime)");
+            }
             Err(e) => {
                 let msg = format!("{e:#}");
                 assert!(
@@ -110,8 +113,17 @@ fn figure1_diffusion_agrees_on_rust_backends() {
         .unwrap();
     let ir = coord.ir(fp).unwrap();
     let domain = AOT_DOMAIN;
+    let xla_ok = gt4rs::runtime::pjrt_available();
+    if !xla_ok {
+        eprintln!("SKIP figure1 xla leg: PJRT runtime unavailable");
+    }
+    let backends: &[&str] = if xla_ok {
+        &["debug", "vector", "xla"]
+    } else {
+        &["debug", "vector"]
+    };
     let mut outs: Vec<Storage> = Vec::new();
-    for be in ["debug", "vector", "xla"] {
+    for be in backends {
         let mut fields: Vec<(String, Storage)> = ir
             .fields
             .iter()
@@ -132,11 +144,17 @@ fn figure1_diffusion_agrees_on_rust_backends() {
         outs.push(fields.pop().unwrap().1);
     }
     assert!(outs[0].max_abs_diff(&outs[1]) == 0.0);
-    assert!(outs[0].max_abs_diff(&outs[2]) < 1e-12);
+    if outs.len() > 2 {
+        assert!(outs[0].max_abs_diff(&outs[2]) < 1e-12);
+    }
 }
 
 #[test]
 fn pallas_and_jnp_artifact_variants_agree() {
+    if !gt4rs::runtime::pjrt_available() {
+        eprintln!("SKIP pallas/jnp comparison: PJRT runtime unavailable");
+        return;
+    }
     let rt = gt4rs::runtime::Runtime::cpu().unwrap();
     let ir = gt4rs::stdlib::compile("hdiff").unwrap();
     let domain = AOT_DOMAIN;
@@ -190,7 +208,14 @@ fn chained_steps_accumulate_identically_across_backends() {
     let fp = coord.compile_library("hdiff").unwrap();
     let domain = [16, 16, 8];
     let mut sums = Vec::new();
-    for be in ["debug", "vector", "xla"] {
+    let xla_ok = gt4rs::runtime::pjrt_available();
+    let backends: &[&str] = if xla_ok {
+        &["debug", "vector", "xla"]
+    } else {
+        eprintln!("SKIP chained xla leg: PJRT runtime unavailable");
+        &["debug", "vector"]
+    };
+    for be in backends {
         let mut inp = coord.alloc_field(fp, "in_phi", domain).unwrap();
         let mut coeff = coord.alloc_field(fp, "coeff", domain).unwrap();
         let mut out = coord.alloc_field(fp, "out_phi", domain).unwrap();
@@ -219,5 +244,7 @@ fn chained_steps_accumulate_identically_across_backends() {
         sums.push(out.domain_sum());
     }
     assert!((sums[0] - sums[1]).abs() < 1e-9, "debug vs vector: {sums:?}");
-    assert!((sums[0] - sums[2]).abs() < 1e-9, "debug vs xla: {sums:?}");
+    if sums.len() > 2 {
+        assert!((sums[0] - sums[2]).abs() < 1e-9, "debug vs xla: {sums:?}");
+    }
 }

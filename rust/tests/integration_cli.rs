@@ -88,6 +88,44 @@ fn model_runs_and_reports_mass() {
 }
 
 #[test]
+fn ir_dump_shows_passes() {
+    let (ok, text) = repro(&["ir", "--stencil", "hdiff"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("pre-opt"));
+    for pass in ["fold-cse", "dce", "fuse", "demote"] {
+        assert!(text.contains(&format!("after pass `{pass}`")), "missing `{pass}`:\n{text}");
+    }
+    // Demotion must actually fire on hdiff.
+    assert!(text.contains("[register]"), "no demoted temporaries:\n{text}");
+    // At --opt-level 0 every pass is disabled.
+    let (ok0, text0) = repro(&["ir", "--stencil", "hdiff", "--opt-level", "0"]);
+    assert!(ok0, "{text0}");
+    assert!(text0.contains("disabled at --opt-level 0"));
+    assert!(!text0.contains("[register]"));
+}
+
+#[test]
+fn opt_levels_produce_identical_checksums() {
+    // `run` prints per-field domain sums; they must be bit-identical
+    // across opt levels on the vector backend.
+    let sums = |level: &str| {
+        let (ok, text) = repro(&[
+            "run", "--stencil", "hdiff", "--backend", "vector", "--domain", "18x14x6",
+            "--iters", "1", "--opt-level", level,
+        ]);
+        assert!(ok, "{text}");
+        let lines: Vec<String> = text
+            .lines()
+            .filter(|l| l.contains("domain sum"))
+            .map(str::to_string)
+            .collect();
+        assert!(!lines.is_empty(), "{text}");
+        lines
+    };
+    assert_eq!(sums("0"), sums("2"));
+}
+
+#[test]
 fn unknown_flags_and_commands_fail_cleanly() {
     let (ok, text) = repro(&["warp"]);
     assert!(!ok);

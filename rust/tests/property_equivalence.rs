@@ -2,13 +2,22 @@
 //! crate set has no proptest, so this uses a deterministic LCG over seeds
 //! — same idea: many generated programs, one invariant).
 //!
-//! Invariant: for any well-formed stencil program, `debug` (reference
-//! interpreter), `vector` and `xla` produce identical fields (up to
-//! reassociation noise for `xla`).
+//! Invariants:
+//! * for any well-formed stencil program, `debug` (reference interpreter),
+//!   `vector` and `xla` produce identical fields (up to reassociation
+//!   noise for `xla`);
+//! * **every optimization level produces identical results**: the pass
+//!   manager (fold-cse, dce, fuse, demote) is semantics-preserving, so
+//!   `--opt-level 1` and `--opt-level 2` outputs are *bitwise* equal to
+//!   the unoptimized `--opt-level 0` reference on the interpreting
+//!   backends.
 
 use gt4rs::coordinator::Coordinator;
 use gt4rs::dsl::parser::parse_module;
+use gt4rs::opt::OptLevel;
 use gt4rs::storage::Storage;
+
+const LEVELS: [OptLevel; 3] = [OptLevel::O0, OptLevel::O1, OptLevel::O2];
 
 struct Rng(u64);
 
@@ -58,7 +67,8 @@ fn gen_expr(rng: &mut Rng, vars: &[String], scalars: &[&str], depth: usize) -> S
 }
 
 /// Generate a random PARALLEL stencil: a chain of temporaries feeding an
-/// output field, exercising extents, temporaries, builtins and ternaries.
+/// output field, exercising extents, temporaries, builtins and ternaries
+/// (and, at higher opt levels, fusion/demotion/CSE over all of them).
 fn gen_stencil(seed: u64) -> String {
     let mut rng = Rng(seed);
     let n_temps = 1 + rng.below(3) as usize;
@@ -89,6 +99,7 @@ fn run_backend(
     be: &str,
     domain: [usize; 3],
     seed: u64,
+    scalars: &[(&str, f64)],
 ) -> Vec<(String, Storage)> {
     let ir = coord.ir(fp).unwrap();
     let mut rng = Rng(seed ^ 0xabcdef);
@@ -113,33 +124,63 @@ fn run_backend(
         let mut refs: Vec<(&str, &mut Storage)> =
             fields.iter_mut().map(|(n, s)| (n.as_str(), s)).collect();
         coord
-            .run(fp, be, &mut refs, &[("s1", 0.4), ("s2", -0.7)], domain)
+            .run(fp, be, &mut refs, scalars, domain)
             .unwrap_or_else(|e| panic!("seed {seed} backend {be}: {e:#}"));
     }
     fields
 }
 
+fn assert_fields_match(
+    reference: &[(String, Storage)],
+    got: &[(String, Storage)],
+    tol: f64,
+    context: &str,
+) {
+    for ((n, r), (_, v)) in reference.iter().zip(got) {
+        let d = r.max_abs_diff(v);
+        assert!(d <= tol, "{context} field `{n}`: differs from reference by {d}");
+    }
+}
+
 #[test]
-fn random_parallel_stencils_agree_across_backends() {
+fn random_parallel_stencils_agree_across_backends_and_opt_levels() {
     let domain = [7, 6, 3];
+    let scalars = [("s1", 0.4), ("s2", -0.7)];
+    let xla_ok = gt4rs::runtime::pjrt_available();
+    if !xla_ok {
+        eprintln!("SKIP xla legs: PJRT runtime unavailable");
+    }
     for seed in 0..40u64 {
         let src = gen_stencil(seed);
         // The generated program must parse and analyze.
         parse_module(&src).unwrap_or_else(|e| panic!("seed {seed}: {e}\n{src}"));
-        let mut coord = Coordinator::new();
-        let fp = coord
+        let mut coord0 = Coordinator::with_opt_level(OptLevel::O0);
+        let fp0 = coord0
             .compile_source(&src, "prop", &Default::default())
             .unwrap_or_else(|e| panic!("seed {seed}: {e:#}\n{src}"));
+        let reference = run_backend(&mut coord0, fp0, "debug", domain, seed, &scalars);
 
-        let reference = run_backend(&mut coord, fp, "debug", domain, seed);
-        for be in ["vector", "xla"] {
-            let got = run_backend(&mut coord, fp, be, domain, seed);
-            for ((n, r), (_, v)) in reference.iter().zip(&got) {
-                let d = r.max_abs_diff(v);
-                let tol = if be == "xla" { 1e-12 } else { 0.0 };
-                assert!(
-                    d <= tol,
-                    "seed {seed} field `{n}`: {be} differs from debug by {d}\n{src}"
+        for level in LEVELS {
+            let mut coord = Coordinator::with_opt_level(level);
+            let fp = coord.compile_source(&src, "prop", &Default::default()).unwrap();
+            for be in ["debug", "vector"] {
+                let got = run_backend(&mut coord, fp, be, domain, seed, &scalars);
+                assert_fields_match(
+                    &reference,
+                    &got,
+                    0.0,
+                    &format!("seed {seed} O{level} {be}\n{src}\n"),
+                );
+            }
+            // xla is the expensive leg: sweep a prefix of the seeds at the
+            // extreme levels only.
+            if xla_ok && seed < 12 && level != OptLevel::O1 {
+                let got = run_backend(&mut coord, fp, "xla", domain, seed, &scalars);
+                assert_fields_match(
+                    &reference,
+                    &got,
+                    1e-12,
+                    &format!("seed {seed} O{level} xla\n{src}\n"),
                 );
             }
         }
@@ -147,10 +188,11 @@ fn random_parallel_stencils_agree_across_backends() {
 }
 
 #[test]
-fn random_sequential_accumulators_agree_across_backends() {
+fn random_sequential_accumulators_agree_across_backends_and_opt_levels() {
     // FORWARD/BACKWARD family with randomized coefficients: cumulative
     // recurrences x_k = alpha * x_(k-1) + expr(a).
     let domain = [5, 5, 9];
+    let xla_ok = gt4rs::runtime::pjrt_available();
     for seed in 0..20u64 {
         let mut rng = Rng(seed.wrapping_mul(77).wrapping_add(13));
         let alpha = 0.1 + 0.8 * (rng.f64() + 0.5);
@@ -167,18 +209,58 @@ fn random_sequential_accumulators_agree_across_backends() {
                }}\n\
              }}"
         );
-        let mut coord = Coordinator::new();
-        let fp = coord
+        let mut coord0 = Coordinator::with_opt_level(OptLevel::O0);
+        let fp0 = coord0
             .compile_source(&src, "seqprop", &Default::default())
             .unwrap_or_else(|e| panic!("seed {seed}: {e:#}"));
-        let reference = run_backend(&mut coord, fp, "debug", domain, seed);
-        for be in ["vector", "xla"] {
-            let got = run_backend(&mut coord, fp, be, domain, seed);
-            for ((n, r), (_, v)) in reference.iter().zip(&got) {
-                let d = r.max_abs_diff(v);
-                assert!(
-                    d <= 1e-12,
-                    "seed {seed} field `{n}`: {be} differs from debug by {d}"
+        let reference = run_backend(&mut coord0, fp0, "debug", domain, seed, &[]);
+        for level in LEVELS {
+            let mut coord = Coordinator::with_opt_level(level);
+            let fp = coord.compile_source(&src, "seqprop", &Default::default()).unwrap();
+            for be in ["debug", "vector"] {
+                let got = run_backend(&mut coord, fp, be, domain, seed, &[]);
+                assert_fields_match(
+                    &reference,
+                    &got,
+                    0.0,
+                    &format!("seed {seed} O{level} {be}"),
+                );
+            }
+            if xla_ok && seed < 8 && level != OptLevel::O1 {
+                let got = run_backend(&mut coord, fp, "xla", domain, seed, &[]);
+                assert_fields_match(
+                    &reference,
+                    &got,
+                    1e-12,
+                    &format!("seed {seed} O{level} xla"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn library_stencils_opt_levels_bitwise_equal() {
+    // The acceptance workloads: hdiff and vadv at --opt-level 2 must be
+    // bitwise identical to --opt-level 0 on both interpreting backends.
+    let cases: [(&str, [usize; 3], &[(&str, f64)]); 2] = [
+        ("hdiff", [12, 10, 6], &[]),
+        ("vadv", [8, 8, 12], &[("dtdz", 0.3)]),
+    ];
+    for (stencil, domain, scalars) in cases {
+        let mut coord0 = Coordinator::with_opt_level(OptLevel::O0);
+        let fp0 = coord0.compile_library(stencil).unwrap();
+        let reference = run_backend(&mut coord0, fp0, "debug", domain, 99, scalars);
+        for level in LEVELS {
+            let mut coord = Coordinator::with_opt_level(level);
+            let fp = coord.compile_library(stencil).unwrap();
+            for be in ["debug", "vector"] {
+                let got = run_backend(&mut coord, fp, be, domain, 99, scalars);
+                assert_fields_match(
+                    &reference,
+                    &got,
+                    0.0,
+                    &format!("{stencil} O{level} {be}"),
                 );
             }
         }
