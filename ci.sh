@@ -1,33 +1,45 @@
 #!/usr/bin/env bash
-# Local CI gate: formatting, lints, release build, tests.
+# Local CI gate: formatting, lints, release build, tests, bench/doc rot
+# checks. Mirrored by .github/workflows/ci.yml.
 #
 #   ./ci.sh          run everything
-#   ./ci.sh quick    skip the release build (fmt + clippy + tests)
+#   ./ci.sh quick    fast feedback: fmt + clippy + tests (skips the release
+#                    build, bench compile-check and doc build)
 #
 # PJRT-dependent tests skip themselves when no PJRT runtime is present, so
 # this script is expected to pass on machines without one.
 
 set -euo pipefail
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "ci.sh: error: \`cargo\` not found on PATH." >&2
+    echo "ci.sh: install a Rust toolchain (https://rustup.rs) and retry." >&2
+    exit 1
+fi
+
 cd "$(dirname "$0")/rust"
 
+# Print the step header once, then run exactly that command.
 step() {
     echo
     echo "=== $* ==="
+    "$@"
 }
 
 step cargo fmt --check
-cargo fmt --check
 
 step cargo clippy --all-targets -- -D warnings
-cargo clippy --all-targets -- -D warnings
 
 if [[ "${1:-}" != "quick" ]]; then
     step cargo build --release
-    cargo build --release
+
+    # Benches and docs must not rot silently: compile-check every bench
+    # target and build the docs with warnings denied.
+    step cargo bench --no-run
+    step env RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 fi
 
 step cargo test -q
-cargo test -q
 
 echo
 echo "ci.sh: all checks passed"

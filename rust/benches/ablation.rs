@@ -8,9 +8,16 @@
 //!      must be a pure hash lookup
 //!  A4  optimizer pass ablation: vector-backend hdiff/vadv time at each
 //!      pass-manager configuration (the Fig. 3 workload, per-pass rows —
-//!      temporary demotion is the headline)
+//!      temporary demotion and the fused evaluator are the headlines)
+//!  A5  fused loop-nest evaluator vs materializing vector path: wall time
+//!      *and* region-buffer traffic (the fused path must allocate zero
+//!      per-expression-node buffers)
 //!
-//!     cargo bench --bench ablation
+//!     cargo bench --bench ablation [-- --tiny] [-- --json PATH]
+//!
+//! `--tiny` shrinks domains/iterations for CI smoke runs; `--json PATH`
+//! additionally writes every measured row as a JSON array (the CI
+//! perf-trajectory artifact, `BENCH_ablation.json`).
 
 #[path = "harness.rs"]
 mod harness;
@@ -20,49 +27,131 @@ use gt4rs::backend::vector::VectorBackend;
 use gt4rs::backend::xlagen;
 use gt4rs::backend::{Backend, StencilArgs};
 use gt4rs::coordinator::{def_fingerprint, Coordinator};
-use gt4rs::opt::{OptConfig, PassManager};
+use gt4rs::opt::{OptConfig, OptLevel, PassManager};
 use gt4rs::runtime::Runtime;
 use gt4rs::stdlib;
 use gt4rs::storage::Storage;
 use harness::*;
 use std::time::Instant;
 
-fn main() {
-    a4_opt_pass_ablation();
-    if gt4rs::runtime::pjrt_available() {
-        a1_pallas_vs_jnp();
-        a2_jit_compile_cost();
-    } else {
-        println!("# A1/A2 skipped: PJRT runtime unavailable\n");
+/// One measured row, serialized into the JSON artifact. Buffer counters
+/// are normalized per call so rows compare across iteration counts
+/// (`--tiny` vs full runs) and across benches.
+struct Row {
+    bench: &'static str,
+    stencil: String,
+    domain: String,
+    config: String,
+    median_ns: u128,
+    pool_taken: u64,
+    pool_allocated: u64,
+}
+
+impl Row {
+    fn json(&self) -> String {
+        format!(
+            "{{\"bench\":\"{}\",\"stencil\":\"{}\",\"domain\":\"{}\",\"config\":\"{}\",\
+             \"median_ns\":{},\"pool_taken\":{},\"pool_allocated\":{}}}",
+            self.bench,
+            self.stencil,
+            self.domain,
+            self.config,
+            self.median_ns,
+            self.pool_taken,
+            self.pool_allocated
+        )
     }
-    a3_fingerprint_cache();
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let tiny = args.iter().any(|a| a == "--tiny");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|p| args.get(p + 1))
+        .cloned();
+
+    let (a4_domains, a5_domains, iters): (Vec<[usize; 3]>, Vec<[usize; 3]>, usize) = if tiny
+    {
+        (vec![[16, 16, 8]], vec![[16, 16, 8]], 3)
+    } else {
+        (
+            vec![[64, 64, 32], [128, 128, 64]],
+            vec![[64, 64, 32], [128, 128, 64]],
+            9,
+        )
+    };
+
+    let mut rows: Vec<Row> = Vec::new();
+    a4_opt_pass_ablation(&a4_domains, iters, &mut rows);
+    a5_fused_vs_materialized(&a5_domains, iters, &mut rows);
+    if !tiny {
+        if gt4rs::runtime::pjrt_available() {
+            a1_pallas_vs_jnp();
+            a2_jit_compile_cost();
+        } else {
+            println!("# A1/A2 skipped: PJRT runtime unavailable\n");
+        }
+        a3_fingerprint_cache();
+    }
+
+    if let Some(path) = json_path {
+        let body: Vec<String> = rows.iter().map(Row::json).collect();
+        let doc = format!("[\n  {}\n]\n", body.join(",\n  "));
+        std::fs::write(&path, doc).expect("write bench JSON artifact");
+        println!("# wrote {} rows to {path}", rows.len());
+    }
+}
+
+/// Storages for a library stencil's fields over `domain`, deterministically
+/// filled.
+fn stencil_fields(ir: &gt4rs::StencilIr, domain: [usize; 3]) -> Vec<(String, Storage)> {
+    ir.fields
+        .iter()
+        .map(|f| {
+            let e = f.extent;
+            let mut s = Storage::zeros(gt4rs::storage::StorageInfo::new(
+                domain,
+                [
+                    ((-e.i.0) as usize, e.i.1 as usize),
+                    ((-e.j.0) as usize, e.j.1 as usize),
+                    ((-e.k.0) as usize, e.k.1 as usize),
+                ],
+            ));
+            fill_storage(&mut s, 1.0);
+            (f.name.clone(), s)
+        })
+        .collect()
 }
 
 /// A4: per-pass optimizer ablation on the vector backend.
 ///
-/// Configurations build up the pass pipeline one pass at a time; the
-/// `+demote` row is the headline — demoted temporaries skip the per-call
-/// whole-field zero allocation, the post-stage scatter and the per-
-/// consumer strided gather.
-fn a4_opt_pass_ablation() {
+/// Configurations build up the pass pipeline one pass at a time: `+demote`
+/// removes the whole-field temporary traffic, and `O3 fused` additionally
+/// replaces the per-expression-node materialization with the tape-based
+/// fused loop nests.
+fn a4_opt_pass_ablation(domains: &[[usize; 3]], iters: usize, rows: &mut Vec<Row>) {
     println!("# A4: optimizer pass ablation — vector backend, median wall time per call");
-    let configs: [(&str, OptConfig); 4] = [
+    let configs: [(&str, OptConfig); 5] = [
         ("O0 (none)", OptConfig::none()),
         (
             "+fold-cse",
-            OptConfig { fold_cse: true, dce: false, fuse: false, demote: false },
+            OptConfig { fold_cse: true, dce: false, fuse: false, demote: false, fused: false },
         ),
         (
             "+dce+fuse",
-            OptConfig { fold_cse: true, dce: true, fuse: true, demote: false },
+            OptConfig { fold_cse: true, dce: true, fuse: true, demote: false, fused: false },
         ),
         (
             "+demote (O2)",
-            OptConfig { fold_cse: true, dce: true, fuse: true, demote: true },
+            OptConfig { fold_cse: true, dce: true, fuse: true, demote: true, fused: false },
         ),
+        ("O3 fused", OptConfig::level(OptLevel::O3)),
     ];
     println!("{:<12} {:>8} {:>14} {:>12}", "domain", "stencil", "config", "median");
-    for domain in [[64, 64, 32], [128, 128, 64]] {
+    for domain in domains {
+        let domain = *domain;
         let dstr = format!("{}x{}x{}", domain[0], domain[1], domain[2]);
         for (name, scalars) in [("hdiff", vec![]), ("vadv", vec![("dtdz", 0.3)])] {
             let mut baseline = None;
@@ -70,24 +159,10 @@ fn a4_opt_pass_ablation() {
                 let mut ir = stdlib::compile(name).unwrap();
                 PassManager::new(config).run(&mut ir);
                 let mut be = VectorBackend::new();
-                let mut fields: Vec<(String, Storage)> = ir
-                    .fields
-                    .iter()
-                    .map(|f| {
-                        let e = f.extent;
-                        let mut s = Storage::zeros(gt4rs::storage::StorageInfo::new(
-                            domain,
-                            [
-                                ((-e.i.0) as usize, e.i.1 as usize),
-                                ((-e.j.0) as usize, e.j.1 as usize),
-                                ((-e.k.0) as usize, e.k.1 as usize),
-                            ],
-                        ));
-                        fill_storage(&mut s, 1.0);
-                        (f.name.clone(), s)
-                    })
-                    .collect();
-                let sample = bench(9, || {
+                let mut fields = stencil_fields(&ir, domain);
+                let mut calls = 0u64;
+                let sample = bench(iters, || {
+                    calls += 1;
                     let mut refs: Vec<(&str, &mut Storage)> = fields
                         .iter_mut()
                         .map(|(n, s)| (n.as_str(), s))
@@ -99,6 +174,7 @@ fn a4_opt_pass_ablation() {
                     })
                     .unwrap();
                 });
+                let stats = be.take_pool_stats();
                 let speedup = match baseline {
                     None => {
                         baseline = Some(sample.median);
@@ -113,7 +189,79 @@ fn a4_opt_pass_ablation() {
                     "{dstr:<12} {name:>8} {cname:>14} {:>12} ({speedup} vs O0)",
                     fmt_duration(sample.median)
                 );
+                rows.push(Row {
+                    bench: "A4",
+                    stencil: name.to_string(),
+                    domain: dstr.clone(),
+                    config: cname.to_string(),
+                    median_ns: sample.median.as_nanos(),
+                    pool_taken: stats.taken / calls.max(1),
+                    pool_allocated: stats.allocated / calls.max(1),
+                });
             }
+        }
+    }
+    println!();
+}
+
+/// A5: the tentpole comparison — fused loop-nest evaluation vs the
+/// materializing vector path, wall time and region-buffer traffic per
+/// call. The fused path's buffer count is bounded by (demoted locals +
+/// tier strips), not by the expression-node count.
+fn a5_fused_vs_materialized(domains: &[[usize; 3]], iters: usize, rows: &mut Vec<Row>) {
+    println!("# A5: fused loop nests vs materializing evaluation — vector backend");
+    println!(
+        "{:<12} {:>8} {:>12} {:>12} {:>10} {:>14} {:>14}",
+        "domain", "stencil", "O2 median", "O3 median", "speedup", "O2 bufs/call", "O3 bufs/call"
+    );
+    for domain in domains {
+        let domain = *domain;
+        let dstr = format!("{}x{}x{}", domain[0], domain[1], domain[2]);
+        for (name, scalars) in [("hdiff", vec![]), ("vadv", vec![("dtdz", 0.3)])] {
+            let mut medians = Vec::new();
+            let mut bufs = Vec::new();
+            for (cname, level) in [("O2 materializing", OptLevel::O2), ("O3 fused", OptLevel::O3)]
+            {
+                let mut ir = stdlib::compile(name).unwrap();
+                PassManager::new(&OptConfig::level(level)).run(&mut ir);
+                let mut be = VectorBackend::new();
+                let mut fields = stencil_fields(&ir, domain);
+                let mut calls = 0u64;
+                let sample = bench(iters, || {
+                    calls += 1;
+                    let mut refs: Vec<(&str, &mut Storage)> = fields
+                        .iter_mut()
+                        .map(|(n, s)| (n.as_str(), s))
+                        .collect();
+                    be.run(&ir, &mut StencilArgs {
+                        fields: &mut refs,
+                        scalars: &scalars,
+                        domain,
+                    })
+                    .unwrap();
+                });
+                let stats = be.take_pool_stats();
+                let per_call = stats.taken / calls.max(1);
+                medians.push(sample.median);
+                bufs.push(per_call);
+                rows.push(Row {
+                    bench: "A5",
+                    stencil: name.to_string(),
+                    domain: dstr.clone(),
+                    config: cname.to_string(),
+                    median_ns: sample.median.as_nanos(),
+                    pool_taken: per_call,
+                    pool_allocated: stats.allocated / calls.max(1),
+                });
+            }
+            println!(
+                "{dstr:<12} {name:>8} {:>12} {:>12} {:>9.2}x {:>14} {:>14}",
+                fmt_duration(medians[0]),
+                fmt_duration(medians[1]),
+                medians[0].as_secs_f64() / medians[1].as_secs_f64().max(1e-12),
+                bufs[0],
+                bufs[1]
+            );
         }
     }
     println!();
@@ -135,23 +283,7 @@ fn a1_pallas_vs_jnp() {
             for variant in ["pallas", "jnp"] {
                 let mut be =
                     PjrtAotBackend::with_runtime(rt.clone()).with_variant(variant);
-                let mut fields: Vec<(String, Storage)> = ir
-                    .fields
-                    .iter()
-                    .map(|f| {
-                        let e = f.extent;
-                        let mut s = Storage::zeros(gt4rs::storage::StorageInfo::new(
-                            domain,
-                            [
-                                ((-e.i.0) as usize, e.i.1 as usize),
-                                ((-e.j.0) as usize, e.j.1 as usize),
-                                ((-e.k.0) as usize, e.k.1 as usize),
-                            ],
-                        ));
-                        fill_storage(&mut s, 1.0);
-                        (f.name.clone(), s)
-                    })
-                    .collect();
+                let mut fields = stencil_fields(ir, domain);
                 let sample = bench(9, || {
                     let mut refs: Vec<(&str, &mut Storage)> = fields
                         .iter_mut()
@@ -184,23 +316,7 @@ fn a2_jit_compile_cost() {
         for name in ["hdiff", "vadv"] {
             let ir = stdlib::compile(name).unwrap();
             let mut be = xlagen::XlaBackend::new().unwrap();
-            let mut fields: Vec<(String, Storage)> = ir
-                .fields
-                .iter()
-                .map(|f| {
-                    let e = f.extent;
-                    let mut s = Storage::zeros(gt4rs::storage::StorageInfo::new(
-                        domain,
-                        [
-                            ((-e.i.0) as usize, e.i.1 as usize),
-                            ((-e.j.0) as usize, e.j.1 as usize),
-                            ((-e.k.0) as usize, e.k.1 as usize),
-                        ],
-                    ));
-                    fill_storage(&mut s, 1.0);
-                    (f.name.clone(), s)
-                })
-                .collect();
+            let mut fields = stencil_fields(&ir, domain);
             let scalars: Vec<(&str, f64)> =
                 ir.scalars.iter().map(|s| (s.name.as_str(), 0.3)).collect();
             let mut run = |be: &mut xlagen::XlaBackend| {

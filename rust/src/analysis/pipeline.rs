@@ -144,6 +144,7 @@ pub fn analyze(
                 .unwrap_or_else(Extent::zero)
                 .union(Extent::zero()),
             storage: StorageClass::Field3D,
+            ring_depth: 0,
         })
         .collect();
 
@@ -155,6 +156,7 @@ pub fn analyze(
         multistages,
         externals: sym.externals.clone(),
         fingerprint: 0,
+        fused: false,
     };
     ir.fingerprint = fingerprint_ir(&ir);
     Ok(ir)

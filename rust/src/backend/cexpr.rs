@@ -4,8 +4,9 @@
 //! Booleans are represented as 1.0 / 0.0 (selects compare against 0.5).
 
 use crate::dsl::ast::{BinOp, Builtin, Expr, Offset, UnOp};
+use crate::ir::implir::{Extent, StorageClass};
 use anyhow::{bail, Result};
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
 /// A compiled point-wise expression.
 #[derive(Debug, Clone)]
@@ -78,6 +79,262 @@ impl CExpr {
                 bail!("unresolved call `{name}` reached a backend (analysis bug)")
             }
         })
+    }
+}
+
+impl CExpr {
+    /// Visit every field access `(slot, offset)` in this expression.
+    pub fn visit_reads(&self, f: &mut impl FnMut(usize, Offset)) {
+        match self {
+            CExpr::Const(_) | CExpr::Scalar(_) => {}
+            CExpr::Field { slot, off } => f(*slot, *off),
+            CExpr::Neg(a) | CExpr::Not(a) | CExpr::Call1(_, a) => a.visit_reads(f),
+            CExpr::Bin(_, a, b) | CExpr::Call2(_, a, b) => {
+                a.visit_reads(f);
+                b.visit_reads(f);
+            }
+            CExpr::Select(c, t, e) => {
+                c.visit_reads(f);
+                t.visit_reads(f);
+                e.visit_reads(f);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CTape: the flat SSA form of one fused stage-group tier.
+//
+// A tape is a topologically ordered list of instructions over *value slots*
+// (an instruction's id is its index; operands always refer to earlier
+// instructions). The fused evaluator (`crate::backend::fused`) materializes
+// one short strip of values per instruction and sweeps the tape point by
+// point — no per-expression-node region buffers. Building the tape
+// value-numbers every instruction, so identical subtrees are computed once
+// even when they originate in *different stages* of the group: the
+// within-stage CSE of `crate::opt::foldcse` extends across stages here.
+// ---------------------------------------------------------------------------
+
+/// One tape instruction with its evaluation region.
+///
+/// `region` is the union of the compute extents of every stage that
+/// (transitively) consumes the value: the instruction only runs where some
+/// consumer needs it, and — because regions are widened bottom-up — every
+/// operand's region contains it, so memory accesses stay inside the halos
+/// the extent analysis guaranteed.
+#[derive(Debug, Clone)]
+pub struct TapeInst {
+    pub op: TapeOp,
+    pub region: Extent,
+}
+
+/// Tape operations. `u32` operands are instruction indices.
+#[derive(Debug, Clone)]
+pub enum TapeOp {
+    Const(f64),
+    Scalar(usize),
+    /// Read an undemoted storage slot at a relative offset.
+    Load { slot: usize, off: Offset },
+    /// Read a demoted local: register/plane locals from the group scratch
+    /// buffer, ring locals from the level-plane ring.
+    LoadLocal { slot: usize, off: Offset },
+    Neg(u32),
+    Not(u32),
+    Bin(BinOp, u32, u32),
+    Select(u32, u32, u32),
+    Call1(Builtin, u32),
+    Call2(Builtin, u32, u32),
+    /// Write value `v` into an undemoted storage slot (stage extent region).
+    StoreField { slot: usize, v: u32 },
+    /// Write value `v` into a demoted local's scratch buffer or ring plane.
+    StoreLocal { slot: usize, v: u32 },
+}
+
+impl TapeOp {
+    /// Value operands of this op (region widening, invariant checks).
+    pub(crate) fn operands(&self) -> [Option<u32>; 3] {
+        match self {
+            TapeOp::Const(_)
+            | TapeOp::Scalar(_)
+            | TapeOp::Load { .. }
+            | TapeOp::LoadLocal { .. } => [None, None, None],
+            TapeOp::Neg(a) | TapeOp::Not(a) | TapeOp::Call1(_, a) => {
+                [Some(*a), None, None]
+            }
+            TapeOp::Bin(_, a, b) | TapeOp::Call2(_, a, b) => [Some(*a), Some(*b), None],
+            TapeOp::Select(c, t, f) => [Some(*c), Some(*t), Some(*f)],
+            TapeOp::StoreField { v, .. } | TapeOp::StoreLocal { v, .. } => {
+                [Some(*v), None, None]
+            }
+        }
+    }
+}
+
+/// A compiled tier: the fused evaluator runs the whole instruction list at
+/// every point of the tier's loop nest.
+#[derive(Debug, Clone)]
+pub struct CTape {
+    pub ops: Vec<TapeInst>,
+}
+
+/// Value-numbering key: float identity by bits, loads versioned by the
+/// number of preceding stores to the same slot (a store invalidates sharing
+/// across it).
+#[derive(Hash, PartialEq, Eq)]
+enum OpKey {
+    Const(u64),
+    Scalar(usize),
+    Load(usize, [i32; 3], u32),
+    LoadLocal(usize, [i32; 3], u32),
+    Neg(u32),
+    Not(u32),
+    Bin(u8, u32, u32),
+    Select(u32, u32, u32),
+    Call1(u8, u32),
+    Call2(u8, u32, u32),
+}
+
+/// Immutable context for tape construction.
+pub struct TapeCtx<'a> {
+    /// Per-slot storage class (`program.slots[i].storage`).
+    pub classes: &'a [StorageClass],
+    /// Register/plane locals backed by a group scratch buffer (offset reads
+    /// or cross-tier flow); everything else demoted lives in SSA values.
+    pub scratch: &'a [bool],
+    /// Demoted locals already stored by an earlier tier of this group
+    /// (zero-offset reads of them must hit the scratch buffer, not fold to
+    /// the unwritten-reads-as-zero constant).
+    pub written: &'a HashSet<usize>,
+}
+
+/// Builds one tier's tape, one stage at a time, with cross-stage value
+/// numbering.
+#[derive(Default)]
+pub struct TapeBuilder {
+    ops: Vec<TapeInst>,
+    cse: HashMap<OpKey, u32>,
+    /// Demoted local -> SSA value of its latest in-tier definition.
+    local_def: HashMap<usize, u32>,
+    /// Store count per slot, versioning load keys.
+    version: HashMap<usize, u32>,
+}
+
+impl TapeBuilder {
+    pub fn new() -> TapeBuilder {
+        TapeBuilder::default()
+    }
+
+    /// Append one stage: value-number its expression, then its store.
+    pub fn push_stage(&mut self, expr: &CExpr, extent: Extent, target: usize, ctx: &TapeCtx) {
+        let v = self.emit_expr(expr, extent, ctx);
+        if ctx.classes[target] == StorageClass::Field3D {
+            self.ops.push(TapeInst { op: TapeOp::StoreField { slot: target, v }, region: extent });
+        } else {
+            self.local_def.insert(target, v);
+            if ctx.classes[target] == StorageClass::Ring || ctx.scratch[target] {
+                self.ops
+                    .push(TapeInst { op: TapeOp::StoreLocal { slot: target, v }, region: extent });
+            }
+        }
+        *self.version.entry(target).or_insert(0) += 1;
+    }
+
+    pub fn finish(self) -> CTape {
+        CTape { ops: self.ops }
+    }
+
+    fn emit_expr(&mut self, e: &CExpr, ext: Extent, ctx: &TapeCtx) -> u32 {
+        match e {
+            CExpr::Const(v) => self.emit(OpKey::Const(v.to_bits()), TapeOp::Const(*v), ext),
+            CExpr::Scalar(ix) => self.emit(OpKey::Scalar(*ix), TapeOp::Scalar(*ix), ext),
+            CExpr::Field { slot, off } => self.emit_read(*slot, *off, ext, ctx),
+            CExpr::Neg(a) => {
+                let ra = self.emit_expr(a, ext, ctx);
+                self.emit(OpKey::Neg(ra), TapeOp::Neg(ra), ext)
+            }
+            CExpr::Not(a) => {
+                let ra = self.emit_expr(a, ext, ctx);
+                self.emit(OpKey::Not(ra), TapeOp::Not(ra), ext)
+            }
+            CExpr::Bin(op, a, b) => {
+                let ra = self.emit_expr(a, ext, ctx);
+                let rb = self.emit_expr(b, ext, ctx);
+                self.emit(OpKey::Bin(*op as u8, ra, rb), TapeOp::Bin(*op, ra, rb), ext)
+            }
+            CExpr::Select(c, t, f) => {
+                let rc = self.emit_expr(c, ext, ctx);
+                let rt = self.emit_expr(t, ext, ctx);
+                let rf = self.emit_expr(f, ext, ctx);
+                self.emit(OpKey::Select(rc, rt, rf), TapeOp::Select(rc, rt, rf), ext)
+            }
+            CExpr::Call1(f, a) => {
+                let ra = self.emit_expr(a, ext, ctx);
+                self.emit(OpKey::Call1(*f as u8, ra), TapeOp::Call1(*f, ra), ext)
+            }
+            CExpr::Call2(f, a, b) => {
+                let ra = self.emit_expr(a, ext, ctx);
+                let rb = self.emit_expr(b, ext, ctx);
+                self.emit(OpKey::Call2(*f as u8, ra, rb), TapeOp::Call2(*f, ra, rb), ext)
+            }
+        }
+    }
+
+    fn emit_read(&mut self, slot: usize, off: Offset, ext: Extent, ctx: &TapeCtx) -> u32 {
+        let ver = self.version.get(&slot).copied().unwrap_or(0);
+        if ctx.classes[slot] == StorageClass::Field3D {
+            // Undemoted: always a real memory load. Zero-offset loads after
+            // an in-tier store read the just-written value at the same
+            // point, which is exactly the reference semantics.
+            return self.emit(
+                OpKey::Load(slot, off, ver),
+                TapeOp::Load { slot, off },
+                ext,
+            );
+        }
+        if off == [0, 0, 0] {
+            if let Some(&v) = self.local_def.get(&slot) {
+                // Same-tier SSA reuse; fusion guaranteed containment.
+                self.widen(v, ext);
+                return v;
+            }
+            if ctx.classes[slot] != StorageClass::Ring && !ctx.written.contains(&slot) {
+                // Demoted local read before any write in the group: zeros,
+                // like the zero-initialized field it replaces. (Ring locals
+                // may carry state from earlier groups of the multistage, so
+                // they always go through the ring lookup.)
+                return self.emit(OpKey::Const(0f64.to_bits()), TapeOp::Const(0.0), ext);
+            }
+        }
+        self.emit(
+            OpKey::LoadLocal(slot, off, ver),
+            TapeOp::LoadLocal { slot, off },
+            ext,
+        )
+    }
+
+    fn emit(&mut self, key: OpKey, op: TapeOp, ext: Extent) -> u32 {
+        if let Some(&v) = self.cse.get(&key) {
+            self.widen(v, ext);
+            return v;
+        }
+        let id = self.ops.len() as u32;
+        self.ops.push(TapeInst { op, region: ext });
+        self.cse.insert(key, id);
+        id
+    }
+
+    /// Grow an instruction's region to cover a new consumer, propagating to
+    /// its operands so inputs are always computed wherever outputs are.
+    fn widen(&mut self, v: u32, ext: Extent) {
+        let cur = self.ops[v as usize].region;
+        if ext.within(&cur) {
+            return;
+        }
+        let merged = cur.union(ext);
+        self.ops[v as usize].region = merged;
+        for opnd in self.ops[v as usize].op.operands().into_iter().flatten() {
+            self.widen(opnd, merged);
+        }
     }
 }
 

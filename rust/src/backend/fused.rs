@@ -1,0 +1,733 @@
+//! The fused loop-nest evaluator — loop fusion proper for the `vector`
+//! backend (`--opt-level 3`).
+//!
+//! The materializing vector path (the NumPy analog) pays one whole-region
+//! memory round trip per expression node. This module instead compiles each
+//! fusion group's stages into flat SSA tapes ([`CTape`]) and evaluates
+//! every output and demoted temporary of the group in one loop nest per
+//! interval: intermediate values live in a short strip buffer (one strip
+//! per tape value, along the storage's stride-1 axis) that stays cache
+//! resident, and demoted temporaries live in registers (pure SSA values), a
+//! group-scoped plane/region scratch, or a ring of recent level planes (a
+//! k-cache) — depending on their [`StorageClass`] and vertical offsets.
+//! *No per-expression-node region buffer is ever allocated.*
+//!
+//! Tape construction value-numbers across all stages of a tier, extending
+//! the within-stage CSE of `opt/foldcse` across stages of one group.
+//!
+//! ## Tiers
+//!
+//! A group's stages are split into *tiers*, full passes over the loop nest
+//! in stage order. A new tier starts exactly where per-point evaluation
+//! would observe a neighbor value that the same pass has not produced yet
+//! (a read at a horizontal offset of something defined earlier in the
+//! group), or would overwrite values a neighbor read still needs (a write
+//! to something the current tier read at a horizontal offset). Everything
+//! else — zero-offset flow, vertical offsets along the strip, ring reads of
+//! finalized levels — fuses into a single pass. hdiff, for example, runs as
+//! three passes (lapf; the fluxes; the output) instead of six materializing
+//! stages with ~30 region-buffer round trips.
+//!
+//! ## Loop structure
+//!
+//! PARALLEL groups iterate `i`/`j` with the tape evaluated over the whole
+//! `k` interval per point (contiguous strips for the IJK layout), so
+//! gathers degenerate to `copy_from_slice` and the arithmetic loops
+//! auto-vectorize. Sequential (FORWARD/BACKWARD) multistages iterate
+//! level-outermost as their semantics demand, evaluating the tape over
+//! `j`-strips per (`i`, level).
+//!
+//! Bitwise equivalence to the `debug` reference interpreter at every opt
+//! level is enforced by `tests/property_equivalence.rs`.
+
+use super::cexpr::{
+    apply_bin, apply_builtin1, apply_builtin2, CTape, TapeBuilder, TapeCtx, TapeInst, TapeOp,
+};
+use super::program::{CStage, Env, Program};
+use super::vector::{prune_rings, Pool, Region, Rings};
+use crate::dsl::ast::{BinOp, Interval, IterationPolicy, Offset};
+use crate::ir::implir::{Extent, StorageClass};
+use std::collections::{HashMap, HashSet};
+
+/// Group-scoped scratch buffers for plane/register locals:
+/// slot → (region, values).
+type Scratch = HashMap<usize, (Region, Vec<f64>)>;
+
+/// A fused group: consecutive stages of one multistage sharing a fusion
+/// group id (and therefore a vertical interval).
+#[derive(Debug, Clone)]
+pub struct FusedGroup {
+    pub interval: Interval,
+    /// Register/plane locals that need a group-scoped scratch buffer
+    /// (offset reads or cross-tier flow), with their allocation extents.
+    pub scratch: Vec<(usize, Extent)>,
+    pub tiers: Vec<Tier>,
+}
+
+/// One full pass over the group's loop nest.
+#[derive(Debug, Clone)]
+pub struct Tier {
+    /// Loop bounds: union of the member stages' compute extents.
+    pub extent: Extent,
+    pub tape: CTape,
+}
+
+#[derive(Debug, Clone)]
+pub struct FusedMultistage {
+    pub policy: IterationPolicy,
+    pub groups: Vec<FusedGroup>,
+}
+
+/// The fused form of a whole stencil program.
+#[derive(Debug, Clone)]
+pub struct FusedProgram {
+    pub multistages: Vec<FusedMultistage>,
+    /// Allocation extent per demoted slot (slot analysis extent unioned
+    /// with every writer's compute extent) — sizes scratch buffers and
+    /// ring planes.
+    alloc: HashMap<usize, Extent>,
+}
+
+impl FusedProgram {
+    pub fn compile(program: &Program) -> FusedProgram {
+        let classes: Vec<StorageClass> =
+            program.slots.iter().map(|s| s.storage).collect();
+        let mut alloc: HashMap<usize, Extent> = HashMap::new();
+        for ms in &program.multistages {
+            for st in &ms.stages {
+                if classes[st.target] != StorageClass::Field3D {
+                    let e = alloc
+                        .entry(st.target)
+                        .or_insert(program.slots[st.target].extent);
+                    *e = e.union(st.extent);
+                }
+            }
+        }
+        let mut multistages = Vec::new();
+        for ms in &program.multistages {
+            let mut groups = Vec::new();
+            let mut start = 0;
+            while start < ms.stages.len() {
+                let gid = ms.stages[start].fusion_group;
+                let mut end = start + 1;
+                while end < ms.stages.len() && ms.stages[end].fusion_group == gid {
+                    end += 1;
+                }
+                groups.push(compile_group(&ms.stages[start..end], &classes, &alloc));
+                start = end;
+            }
+            multistages.push(FusedMultistage { policy: ms.policy, groups });
+        }
+        FusedProgram { multistages, alloc }
+    }
+
+    /// Total tier count — the number of loop-nest passes per call (the
+    /// fused analog of "number of materialized stages").
+    pub fn num_tiers(&self) -> usize {
+        self.multistages
+            .iter()
+            .flat_map(|m| &m.groups)
+            .map(|g| g.tiers.len())
+            .sum()
+    }
+}
+
+fn compile_group(
+    stages: &[CStage],
+    classes: &[StorageClass],
+    alloc: &HashMap<usize, Extent>,
+) -> FusedGroup {
+    let reads: Vec<Vec<(usize, Offset)>> = stages
+        .iter()
+        .map(|st| {
+            let mut v = Vec::new();
+            st.expr.visit_reads(&mut |slot, off| v.push((slot, off)));
+            v
+        })
+        .collect();
+
+    // Tier assignment. A horizontal-offset read observes *neighbor* points
+    // of the current pass, so it must run a full pass after the producer;
+    // a write into something this pass offset-read would corrupt neighbor
+    // reads at already-visited points. Zero-offset and pure-vertical flow
+    // is per-point/per-column and fuses freely.
+    let mut tier = vec![0usize; stages.len()];
+    let mut cur = 0usize;
+    let mut tier_of_def: HashMap<usize, usize> = HashMap::new();
+    let mut offset_read: HashSet<usize> = HashSet::new();
+    for (si, st) in stages.iter().enumerate() {
+        let mut req = cur;
+        for (slot, off) in &reads[si] {
+            if off[0] != 0 || off[1] != 0 {
+                if let Some(&t) = tier_of_def.get(slot) {
+                    req = req.max(t + 1);
+                }
+            }
+        }
+        if req == cur && offset_read.contains(&st.target) {
+            req = cur + 1;
+        }
+        if req > cur {
+            cur = req;
+            offset_read.clear();
+        }
+        tier[si] = cur;
+        for (slot, off) in &reads[si] {
+            if off[0] != 0 || off[1] != 0 {
+                offset_read.insert(*slot);
+            }
+        }
+        tier_of_def.insert(st.target, cur);
+    }
+
+    // Which register/plane locals need a scratch buffer: any horizontal-
+    // offset read, or zero-offset flow that crosses a tier boundary
+    // (same-tier zero-offset flow rides the SSA value instead).
+    let mut scratch_flags = vec![false; classes.len()];
+    {
+        let mut last_write_tier: HashMap<usize, usize> = HashMap::new();
+        for (si, st) in stages.iter().enumerate() {
+            for (slot, off) in &reads[si] {
+                if matches!(classes[*slot], StorageClass::Register | StorageClass::Plane) {
+                    if off[0] != 0 || off[1] != 0 {
+                        scratch_flags[*slot] = true;
+                    } else if let Some(&t) = last_write_tier.get(slot) {
+                        if t != tier[si] {
+                            scratch_flags[*slot] = true;
+                        }
+                    }
+                }
+            }
+            if matches!(classes[st.target], StorageClass::Register | StorageClass::Plane) {
+                last_write_tier.insert(st.target, tier[si]);
+            }
+        }
+    }
+
+    // Build one tape per tier, value-numbering across its stages.
+    let ntiers = tier.iter().copied().max().unwrap_or(0) + 1;
+    let mut tiers = Vec::with_capacity(ntiers);
+    let mut written: HashSet<usize> = HashSet::new();
+    for t in 0..ntiers {
+        let mut b = TapeBuilder::new();
+        let mut text: Option<Extent> = None;
+        {
+            let ctx =
+                TapeCtx { classes, scratch: &scratch_flags, written: &written };
+            for (si, st) in stages.iter().enumerate() {
+                if tier[si] != t {
+                    continue;
+                }
+                b.push_stage(&st.expr, st.extent, st.target, &ctx);
+                text = Some(match text {
+                    None => st.extent,
+                    Some(e) => e.union(st.extent),
+                });
+            }
+        }
+        for (si, st) in stages.iter().enumerate() {
+            if tier[si] == t && classes[st.target] != StorageClass::Field3D {
+                written.insert(st.target);
+            }
+        }
+        tiers.push(Tier { extent: text.unwrap_or_else(Extent::zero), tape: b.finish() });
+    }
+
+    let scratch: Vec<(usize, Extent)> = scratch_flags
+        .iter()
+        .enumerate()
+        .filter(|(_, &need)| need)
+        .map(|(slot, _)| (slot, alloc[&slot]))
+        .collect();
+
+    FusedGroup { interval: stages[0].interval, scratch, tiers }
+}
+
+/// Execute a fused program (called from the vector backend's dispatch).
+pub(crate) fn run_program(
+    fp: &FusedProgram,
+    program: &Program,
+    env: &mut Env,
+    pool: &mut Pool,
+) {
+    let classes: Vec<StorageClass> = program.slots.iter().map(|s| s.storage).collect();
+    let depths: Vec<i32> = program.slots.iter().map(|s| s.ring_depth).collect();
+    let mut rings = Rings::default();
+    // One strip buffer for the whole run, grown to the largest tier.
+    let mut vals: Vec<f64> = Vec::new();
+    for ms in &fp.multistages {
+        // Per-op loop bounds depend only on (tier, domain): resolve them
+        // once per call, not once per sweep level.
+        let bounds: Vec<Vec<Vec<[i64; 4]>>> =
+            ms.groups.iter().map(|g| resolve_bounds(g, env.domain)).collect();
+        match ms.policy {
+            IterationPolicy::Parallel => {
+                for (g, gb) in ms.groups.iter().zip(&bounds) {
+                    let (k0, k1) = env.krange(&g.interval);
+                    if k0 < k1 {
+                        run_group(
+                            env, g, gb, &classes, &fp.alloc, k0, k1, 2, &mut rings,
+                            pool, &mut vals,
+                        );
+                    }
+                }
+            }
+            IterationPolicy::Forward | IterationPolicy::Backward => {
+                let ranges: Vec<(i64, i64)> =
+                    ms.groups.iter().map(|g| env.krange(&g.interval)).collect();
+                let kmin = ranges.iter().map(|r| r.0).min().unwrap_or(0);
+                let kmax = ranges.iter().map(|r| r.1).max().unwrap_or(0);
+                let ks: Vec<i64> = if ms.policy == IterationPolicy::Forward {
+                    (kmin..kmax).collect()
+                } else {
+                    (kmin..kmax).rev().collect()
+                };
+                for k in ks {
+                    for ((g, gb), (gk0, gk1)) in
+                        ms.groups.iter().zip(&bounds).zip(&ranges)
+                    {
+                        if k >= *gk0 && k < *gk1 {
+                            run_group(
+                                env, g, gb, &classes, &fp.alloc, k, k + 1, 1,
+                                &mut rings, pool, &mut vals,
+                            );
+                        }
+                    }
+                    prune_rings(&mut rings, k, &depths, pool);
+                }
+                for (_, (_, b)) in rings.drain() {
+                    pool.put(b);
+                }
+            }
+        }
+    }
+}
+
+/// Resolve every op's `[i0,i1,j0,j1]` loop bounds against the domain, per
+/// tier of one group.
+fn resolve_bounds(g: &FusedGroup, domain: [usize; 3]) -> Vec<Vec<[i64; 4]>> {
+    let (ni, nj) = (domain[0] as i64, domain[1] as i64);
+    g.tiers
+        .iter()
+        .map(|t| {
+            t.tape
+                .ops
+                .iter()
+                .map(|inst| {
+                    [
+                        inst.region.i.0 as i64,
+                        ni + inst.region.i.1 as i64,
+                        inst.region.j.0 as i64,
+                        nj + inst.region.j.1 as i64,
+                    ]
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Run one group over `[k0,k1)`: `axis` selects the strip direction
+/// (2 = contiguous k strips for PARALLEL, 1 = j strips per level for
+/// sequential multistages).
+#[allow(clippy::too_many_arguments)]
+fn run_group(
+    env: &mut Env,
+    g: &FusedGroup,
+    gbounds: &[Vec<[i64; 4]>],
+    classes: &[StorageClass],
+    alloc: &HashMap<usize, Extent>,
+    k0: i64,
+    k1: i64,
+    axis: usize,
+    rings: &mut Rings,
+    pool: &mut Pool,
+    vals: &mut Vec<f64>,
+) {
+    let [ni, nj, _] = env.domain;
+    let (ni, nj) = (ni as i64, nj as i64);
+    // Group-scoped scratch, zero-initialized (reads before the first write
+    // see zeros, like the zero-initialized field a demoted temp replaces).
+    let mut scratch = Scratch::new();
+    for (slot, e) in &g.scratch {
+        let r = Region {
+            i0: e.i.0 as i64,
+            i1: ni + e.i.1 as i64,
+            j0: e.j.0 as i64,
+            j1: nj + e.j.1 as i64,
+            k0,
+            k1,
+        };
+        let buf = pool.take(r.len());
+        scratch.insert(*slot, (r, buf));
+    }
+    for (t, bounds) in g.tiers.iter().zip(gbounds) {
+        let (ti0, ti1) = (t.extent.i.0 as i64, ni + t.extent.i.1 as i64);
+        let (tj0, tj1) = (t.extent.j.0 as i64, nj + t.extent.j.1 as i64);
+        if ti0 >= ti1 || tj0 >= tj1 || t.tape.ops.is_empty() {
+            continue;
+        }
+        let wl = if axis == 2 { (k1 - k0) as usize } else { (tj1 - tj0) as usize };
+        if wl == 0 {
+            continue;
+        }
+        let need = t.tape.ops.len() * wl;
+        if vals.len() < need {
+            vals.resize(need, 0.0);
+        }
+        if axis == 2 {
+            for i in ti0..ti1 {
+                for j in tj0..tj1 {
+                    eval_strip(
+                        env, &t.tape.ops, bounds, vals, wl, i, j, k0, 2, classes,
+                        alloc, &mut scratch, rings, pool,
+                    );
+                }
+            }
+        } else {
+            for i in ti0..ti1 {
+                eval_strip(
+                    env, &t.tape.ops, bounds, vals, wl, i, tj0, k0, 1, classes,
+                    alloc, &mut scratch, rings, pool,
+                );
+            }
+        }
+    }
+    for (_, (_, b)) in scratch.drain() {
+        pool.put(b);
+    }
+}
+
+/// Copy `dst.len()` lanes out of `src`, starting at flat index
+/// `base + lane0 * stride`.
+#[inline]
+fn copy_lanes_in(src: &[f64], base: i64, stride: i64, dst: &mut [f64], lane0: usize) {
+    if stride == 1 {
+        let a0 = (base + lane0 as i64) as usize;
+        dst.copy_from_slice(&src[a0..a0 + dst.len()]);
+    } else {
+        let mut idx = base + lane0 as i64 * stride;
+        for d in dst.iter_mut() {
+            *d = src[idx as usize];
+            idx += stride;
+        }
+    }
+}
+
+/// Copy `src.len()` lanes into `dst`, starting at flat index
+/// `base + lane0 * stride`.
+#[inline]
+fn copy_lanes_out(src: &[f64], dst: &mut [f64], base: i64, stride: i64, lane0: usize) {
+    if stride == 1 {
+        let a0 = (base + lane0 as i64) as usize;
+        dst[a0..a0 + src.len()].copy_from_slice(src);
+    } else {
+        let mut idx = base + lane0 as i64 * stride;
+        for s in src {
+            dst[idx as usize] = *s;
+            idx += stride;
+        }
+    }
+}
+
+/// Evaluate one tape over one strip: the point `(i, jbase, k0)` extended
+/// along `axis` by `wl` lanes. `vals` holds one strip per tape value;
+/// stores write straight into storages / scratch / ring planes.
+#[allow(clippy::too_many_arguments)]
+fn eval_strip(
+    env: &mut Env,
+    ops: &[TapeInst],
+    bounds: &[[i64; 4]],
+    vals: &mut [f64],
+    wl: usize,
+    i: i64,
+    jbase: i64,
+    k0: i64,
+    axis: usize,
+    classes: &[StorageClass],
+    alloc: &HashMap<usize, Extent>,
+    scratch: &mut Scratch,
+    rings: &mut Rings,
+    pool: &mut Pool,
+) {
+    for (x, inst) in ops.iter().enumerate() {
+        let b = bounds[x];
+        if i < b[0] || i >= b[1] {
+            continue;
+        }
+        // Active lane range of this op.
+        let (lo, hi): (usize, usize) = if axis == 2 {
+            if jbase < b[2] || jbase >= b[3] {
+                continue;
+            }
+            (0, wl)
+        } else {
+            let lo = (b[2] - jbase).max(0) as usize;
+            let hi = ((b[3] - jbase).max(0) as usize).min(wl);
+            if lo >= hi {
+                continue;
+            }
+            (lo, hi)
+        };
+        let base = x * wl;
+        match &inst.op {
+            TapeOp::Const(c) => vals[base + lo..base + hi].fill(*c),
+            TapeOp::Scalar(ix) => {
+                let v = env.scalars[*ix];
+                vals[base + lo..base + hi].fill(v);
+            }
+            TapeOp::Load { slot, off } => {
+                let s = &env.storages[*slot];
+                let st = s.raw_strides();
+                let sbase = s.raw_origin() as i64
+                    + (i + off[0] as i64) * st[0] as i64
+                    + (jbase + off[1] as i64) * st[1] as i64
+                    + (k0 + off[2] as i64) * st[2] as i64;
+                copy_lanes_in(
+                    s.raw(),
+                    sbase,
+                    st[axis] as i64,
+                    &mut vals[base + lo..base + hi],
+                    lo,
+                );
+            }
+            TapeOp::LoadLocal { slot, off } => {
+                let entry = if classes[*slot] == StorageClass::Ring {
+                    rings.get(&(*slot, k0 + off[2] as i64))
+                } else {
+                    scratch.get(slot)
+                };
+                match entry {
+                    // Never written (this group / that level): zeros.
+                    None => vals[base + lo..base + hi].fill(0.0),
+                    Some((sr, sbuf)) => {
+                        let sdj = sr.j1 - sr.j0;
+                        let swk = sr.wk() as i64;
+                        let sbase = ((i + off[0] as i64 - sr.i0) * sdj
+                            + (jbase + off[1] as i64 - sr.j0))
+                            * swk
+                            + (k0 + off[2] as i64 - sr.k0);
+                        let ls = if axis == 2 { 1 } else { swk };
+                        copy_lanes_in(sbuf, sbase, ls, &mut vals[base + lo..base + hi], lo);
+                    }
+                }
+            }
+            TapeOp::Neg(a) => {
+                let (src, dst) = vals.split_at_mut(base);
+                let sa = &src[*a as usize * wl + lo..*a as usize * wl + hi];
+                let d = &mut dst[lo..hi];
+                for n in 0..d.len() {
+                    d[n] = -sa[n];
+                }
+            }
+            TapeOp::Not(a) => {
+                let (src, dst) = vals.split_at_mut(base);
+                let sa = &src[*a as usize * wl + lo..*a as usize * wl + hi];
+                let d = &mut dst[lo..hi];
+                for n in 0..d.len() {
+                    d[n] = if sa[n] != 0.0 { 0.0 } else { 1.0 };
+                }
+            }
+            TapeOp::Bin(op, a, b2) => {
+                let (src, dst) = vals.split_at_mut(base);
+                let sa = &src[*a as usize * wl + lo..*a as usize * wl + hi];
+                let sb = &src[*b2 as usize * wl + lo..*b2 as usize * wl + hi];
+                let d = &mut dst[lo..hi];
+                match op {
+                    BinOp::Add => {
+                        for n in 0..d.len() {
+                            d[n] = sa[n] + sb[n];
+                        }
+                    }
+                    BinOp::Sub => {
+                        for n in 0..d.len() {
+                            d[n] = sa[n] - sb[n];
+                        }
+                    }
+                    BinOp::Mul => {
+                        for n in 0..d.len() {
+                            d[n] = sa[n] * sb[n];
+                        }
+                    }
+                    BinOp::Div => {
+                        for n in 0..d.len() {
+                            d[n] = sa[n] / sb[n];
+                        }
+                    }
+                    _ => {
+                        for n in 0..d.len() {
+                            d[n] = apply_bin(*op, sa[n], sb[n]);
+                        }
+                    }
+                }
+            }
+            TapeOp::Select(c, t, f) => {
+                let (src, dst) = vals.split_at_mut(base);
+                let sc = &src[*c as usize * wl + lo..*c as usize * wl + hi];
+                let st_ = &src[*t as usize * wl + lo..*t as usize * wl + hi];
+                let sf = &src[*f as usize * wl + lo..*f as usize * wl + hi];
+                let d = &mut dst[lo..hi];
+                for n in 0..d.len() {
+                    d[n] = if sc[n] != 0.0 { st_[n] } else { sf[n] };
+                }
+            }
+            TapeOp::Call1(fun, a) => {
+                let (src, dst) = vals.split_at_mut(base);
+                let sa = &src[*a as usize * wl + lo..*a as usize * wl + hi];
+                let d = &mut dst[lo..hi];
+                for n in 0..d.len() {
+                    d[n] = apply_builtin1(*fun, sa[n]);
+                }
+            }
+            TapeOp::Call2(fun, a, b2) => {
+                let (src, dst) = vals.split_at_mut(base);
+                let sa = &src[*a as usize * wl + lo..*a as usize * wl + hi];
+                let sb = &src[*b2 as usize * wl + lo..*b2 as usize * wl + hi];
+                let d = &mut dst[lo..hi];
+                for n in 0..d.len() {
+                    d[n] = apply_builtin2(*fun, sa[n], sb[n]);
+                }
+            }
+            TapeOp::StoreField { slot, v } => {
+                let src = &vals[*v as usize * wl + lo..*v as usize * wl + hi];
+                let s = &mut env.storages[*slot];
+                let st = s.raw_strides();
+                let dbase = s.raw_origin() as i64
+                    + i * st[0] as i64
+                    + jbase * st[1] as i64
+                    + k0 * st[2] as i64;
+                copy_lanes_out(src, s.raw_mut(), dbase, st[axis] as i64, lo);
+            }
+            TapeOp::StoreLocal { slot, v } => {
+                if classes[*slot] == StorageClass::Ring && !rings.contains_key(&(*slot, k0))
+                {
+                    // First write to this level's plane: allocate it zeroed
+                    // over the slot's allocation extent.
+                    let e = alloc[slot];
+                    let [dni, dnj, _] = env.domain;
+                    let r = Region {
+                        i0: e.i.0 as i64,
+                        i1: dni as i64 + e.i.1 as i64,
+                        j0: e.j.0 as i64,
+                        j1: dnj as i64 + e.j.1 as i64,
+                        k0,
+                        k1: k0 + 1,
+                    };
+                    let buf = pool.take(r.len());
+                    rings.insert((*slot, k0), (r, buf));
+                }
+                let (sr, sbuf) = if classes[*slot] == StorageClass::Ring {
+                    let ent = rings.get_mut(&(*slot, k0)).expect("ring plane just inserted");
+                    (ent.0, &mut ent.1)
+                } else {
+                    let ent = scratch.get_mut(slot).expect("scratch local without buffer");
+                    (ent.0, &mut ent.1)
+                };
+                let sdj = sr.j1 - sr.j0;
+                let swk = sr.wk() as i64;
+                let dbase =
+                    ((i - sr.i0) * sdj + (jbase - sr.j0)) * swk + (k0 - sr.k0);
+                let ls = if axis == 2 { 1 } else { swk };
+                copy_lanes_out(
+                    &vals[*v as usize * wl + lo..*v as usize * wl + hi],
+                    sbuf,
+                    dbase,
+                    ls,
+                    lo,
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::compile_source_opt;
+    use crate::opt::{OptConfig, OptLevel};
+    use std::collections::BTreeMap;
+
+    fn fused_program(src: &str, name: &str) -> (Program, FusedProgram) {
+        let ir = compile_source_opt(
+            src,
+            name,
+            &BTreeMap::new(),
+            &OptConfig::level(OptLevel::O3),
+        )
+        .unwrap();
+        assert!(ir.fused);
+        let p = Program::compile(&ir).unwrap();
+        let fp = FusedProgram::compile(&p);
+        (p, fp)
+    }
+
+    #[test]
+    fn hdiff_compiles_to_three_tiers() {
+        let (_, fp) = fused_program(crate::stdlib::HDIFF_SRC, "hdiff");
+        assert_eq!(fp.multistages.len(), 1);
+        assert_eq!(fp.multistages[0].groups.len(), 1);
+        // lapf | flx+fly (with their limiter rewrites) | out_phi.
+        assert_eq!(fp.num_tiers(), 3);
+        assert_eq!(fp.multistages[0].groups[0].tiers.len(), 3);
+        // All three temporaries are offset-read: all scratch-backed.
+        assert_eq!(fp.multistages[0].groups[0].scratch.len(), 3);
+    }
+
+    #[test]
+    fn cross_stage_cse_shares_subtrees() {
+        // Both fluxes read lapf at [0,0,0]: in the materializing path that
+        // is two gathers; in the shared tier tape it must be ONE LoadLocal.
+        let (_, fp) = fused_program(crate::stdlib::HDIFF_SRC, "hdiff");
+        let flux_tier = &fp.multistages[0].groups[0].tiers[1];
+        let zero_loads = flux_tier
+            .tape
+            .ops
+            .iter()
+            .filter(|inst| {
+                matches!(inst.op, TapeOp::LoadLocal { off: [0, 0, 0], .. })
+            })
+            .count();
+        assert_eq!(zero_loads, 1, "lapf[0,0,0] must be value-numbered once");
+    }
+
+    #[test]
+    fn register_locals_have_no_stores() {
+        // A temp only read at [0,0,0] in its own tier is pure SSA: the tape
+        // must contain no StoreLocal for it and the group no scratch.
+        const SRC: &str = "
+            stencil s(a: Field<f64>, out: Field<f64>) {
+                with computation(PARALLEL), interval(...) {
+                    t = a * 2.0 + 1.5;
+                    out = t * t + a;
+                }
+            }";
+        let (_, fp) = fused_program(SRC, "s");
+        let g = &fp.multistages[0].groups[0];
+        assert!(g.scratch.is_empty(), "register local must not get scratch");
+        assert_eq!(g.tiers.len(), 1);
+        assert!(g.tiers[0]
+            .tape
+            .ops
+            .iter()
+            .all(|inst| !matches!(inst.op, TapeOp::StoreLocal { .. })));
+    }
+
+    #[test]
+    fn tape_regions_cover_consumers() {
+        // Every operand's region must contain its consumer's region.
+        let (_, fp) = fused_program(crate::stdlib::HDIFF_SRC, "hdiff");
+        for ms in &fp.multistages {
+            for g in &ms.groups {
+                for t in &g.tiers {
+                    for inst in &t.tape.ops {
+                        for opnd in inst.op.operands().into_iter().flatten() {
+                            assert!(
+                                inst.region.within(&t.tape.ops[opnd as usize].region),
+                                "operand region must cover consumer"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

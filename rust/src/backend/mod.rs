@@ -13,6 +13,7 @@
 
 pub mod cexpr;
 pub mod debug;
+pub mod fused;
 pub mod pjrt_aot;
 pub mod program;
 pub mod vector;

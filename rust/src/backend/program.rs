@@ -14,12 +14,24 @@ use std::collections::HashMap;
 pub struct SlotInfo {
     pub name: String,
     pub is_temp: bool,
-    /// Demoted temporary ([`StorageClass::Register`]): optimizing backends
-    /// keep it in a transient group-local buffer; the `debug` reference
-    /// interpreter still materializes it as a field.
-    pub demoted: bool,
+    /// Run-time storage class: parameters and undemoted temporaries are
+    /// [`StorageClass::Field3D`]; demoted temporaries are served from
+    /// backend-local buffers (register/plane/ring) instead of storages.
+    /// The `debug` reference interpreter materializes everything.
+    pub storage: StorageClass,
     /// Allocation extent for temporaries; halo requirement for params.
     pub extent: Extent,
+    /// For [`StorageClass::Ring`] slots: how many past level planes the
+    /// ring must retain (max absolute vertical read offset, at least 1).
+    pub ring_depth: i32,
+}
+
+impl SlotInfo {
+    /// Whether optimizing backends may serve this slot from local buffers.
+    #[inline]
+    pub fn demoted(&self) -> bool {
+        self.storage != StorageClass::Field3D
+    }
 }
 
 /// A stage with its expression compiled to slots.
@@ -57,8 +69,9 @@ impl Program {
             slots.push(SlotInfo {
                 name: f.name.clone(),
                 is_temp: false,
-                demoted: false,
+                storage: StorageClass::Field3D,
                 extent: f.extent,
+                ring_depth: 0,
             });
         }
         let num_params = slots.len();
@@ -67,8 +80,9 @@ impl Program {
             slots.push(SlotInfo {
                 name: t.name.clone(),
                 is_temp: true,
-                demoted: t.storage == StorageClass::Register,
+                storage: t.storage,
                 extent: t.extent,
+                ring_depth: t.ring_depth,
             });
         }
         let scalar_names: Vec<String> = ir.scalars.iter().map(|s| s.name.clone()).collect();
@@ -124,8 +138,9 @@ impl Env {
     }
 
     /// Like [`Env::build`], but with `materialize_demoted = false` demoted
-    /// temporaries get a zero-size placeholder storage: the backend promises
-    /// to serve every access to them from its own group-local buffers.
+    /// temporaries (any non-[`StorageClass::Field3D`] class) get a
+    /// zero-size placeholder storage: the backend promises to serve every
+    /// access to them from its own local buffers.
     pub fn build_with(
         program: &Program,
         fields: &mut [(&str, &mut Storage)],
@@ -145,7 +160,7 @@ impl Env {
                     Storage::zeros(StorageInfo::new([0, 0, 0], [(0, 0); 3])),
                 );
                 storages.push(taken);
-            } else if slot.demoted && !materialize_demoted {
+            } else if slot.demoted() && !materialize_demoted {
                 storages.push(Storage::zeros(StorageInfo::new([0, 0, 0], [(0, 0); 3])));
             } else {
                 // Temporary: allocate with its analysis extent as halo.

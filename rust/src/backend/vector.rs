@@ -13,21 +13,31 @@
 //! to `copy_from_slice`. Sequential (FORWARD/BACKWARD) stages evaluate one
 //! plane per level — the vertical dependence forbids more.
 //!
-//! Optimizer integration: temporaries the pass manager demoted to
-//! [`StorageClass::Register`](crate::ir::implir::StorageClass) never touch
-//! a `Storage` here. Their values live in *group-local* region buffers
-//! (one whole region per PARALLEL group, one plane per level in sequential
-//! groups) that are written by the producing stage and windowed directly
-//! by consuming stages — skipping the whole-field zero allocation, the
-//! scatter after the producer, and the strided gather in every consumer
-//! that an undemoted temporary pays. Reads before the first in-group write
-//! see zeros, exactly like the zero-initialized field they replace.
+//! Optimizer integration: temporaries the pass manager demoted (any
+//! non-[`StorageClass::Field3D`] class) never touch a `Storage` here.
+//! Register/plane locals live in *group-local* region buffers (one whole
+//! region per PARALLEL group, one plane per level in sequential groups)
+//! that are written by the producing stage and windowed directly by
+//! consuming stages; [`StorageClass::Ring`] sweep carries live in a
+//! multistage-scoped ring of recent level planes (a k-cache). Either way
+//! the whole-field zero allocation, the scatter after the producer, and
+//! the strided gather in every consumer that an undemoted temporary pays
+//! are skipped. Reads before the first write see zeros, exactly like the
+//! zero-initialized field they replace.
+//!
+//! Fused execution (`--opt-level 3`): when the IR carries the
+//! [`fused`](crate::ir::implir::StencilIr::fused) strategy bit, dispatch
+//! leaves this materializing path entirely and runs the tape-based fused
+//! loop-nest evaluator in [`crate::backend::fused`], which evaluates every
+//! output and demoted temporary of a fusion group in one loop nest per
+//! interval with *no per-expression-node region buffers*.
 
 use super::cexpr::{apply_bin, apply_builtin1, apply_builtin2, CExpr};
+use super::fused::FusedProgram;
 use super::program::{CStage, Env, Program};
 use super::{Backend, StencilArgs};
 use crate::dsl::ast::{BinOp, IterationPolicy};
-use crate::ir::implir::StencilIr;
+use crate::ir::implir::{StencilIr, StorageClass};
 use anyhow::Result;
 use std::collections::HashMap;
 
@@ -36,6 +46,8 @@ pub struct VectorBackend {
     /// Programs keyed by stencil fingerprint (backend instances are shared
     /// across stencils by the coordinator).
     programs: std::collections::HashMap<u64, Program>,
+    /// Fused loop-nest programs, compiled on demand for `fused` IRs.
+    fused: std::collections::HashMap<u64, FusedProgram>,
     pool: Pool,
 }
 
@@ -43,49 +55,72 @@ impl VectorBackend {
     pub fn new() -> Self {
         Self::default()
     }
+
+    /// Buffer-pool traffic since the last call (and reset): how many region
+    /// buffers were requested and how many required a fresh allocation.
+    /// The ablation bench uses this to show the fused path allocating no
+    /// per-expression-node buffers.
+    pub fn take_pool_stats(&mut self) -> PoolStats {
+        std::mem::take(&mut self.pool.stats)
+    }
+}
+
+/// Buffer-pool counters (see [`VectorBackend::take_pool_stats`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PoolStats {
+    /// Buffers handed out (pool hits + fresh allocations).
+    pub taken: u64,
+    /// Buffers that had to be freshly allocated.
+    pub allocated: u64,
 }
 
 /// Recycles region buffers between expression nodes and stages.
 #[derive(Default)]
-struct Pool {
+pub(crate) struct Pool {
     free: Vec<Vec<f64>>,
+    stats: PoolStats,
 }
 
 impl Pool {
-    fn take(&mut self, n: usize) -> Vec<f64> {
+    pub(crate) fn take(&mut self, n: usize) -> Vec<f64> {
+        self.stats.taken += 1;
         match self.free.pop() {
             Some(mut b) => {
                 b.clear();
                 b.resize(n, 0.0);
                 b
             }
-            None => vec![0.0; n],
+            None => {
+                self.stats.allocated += 1;
+                vec![0.0; n]
+            }
         }
     }
-    fn put(&mut self, b: Vec<f64>) {
+    pub(crate) fn put(&mut self, b: Vec<f64>) {
         if self.free.len() < 48 {
             self.free.push(b);
         }
     }
 }
 
-/// A 3-D evaluation region `[i0,i1) x [j0,j1) x [k0,k1)`.
-#[derive(Clone, Copy)]
-struct Region {
-    i0: i64,
-    i1: i64,
-    j0: i64,
-    j1: i64,
-    k0: i64,
-    k1: i64,
+/// A 3-D evaluation region `[i0,i1) x [j0,j1) x [k0,k1)`. Buffers over a
+/// region are laid out i-major, then j, then k (k contiguous).
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct Region {
+    pub(crate) i0: i64,
+    pub(crate) i1: i64,
+    pub(crate) j0: i64,
+    pub(crate) j1: i64,
+    pub(crate) k0: i64,
+    pub(crate) k1: i64,
 }
 
 impl Region {
     #[inline]
-    fn wk(&self) -> usize {
+    pub(crate) fn wk(&self) -> usize {
         (self.k1 - self.k0) as usize
     }
-    fn len(&self) -> usize {
+    pub(crate) fn len(&self) -> usize {
         ((self.i1 - self.i0) * (self.j1 - self.j0)) as usize * self.wk()
     }
 }
@@ -112,19 +147,26 @@ impl Locals {
     }
 }
 
+/// Ring of recent level planes for [`StorageClass::Ring`] sweep carries:
+/// `(slot, level) -> (plane region, values)`, scoped to one sequential
+/// multistage and pruned to each slot's ring depth as the sweep advances.
+pub(crate) type Rings = HashMap<(usize, i64), (Region, Vec<f64>)>;
+
 /// Shared read-only state for one stage evaluation.
 struct EvalCtx<'a> {
     env: &'a Env,
-    /// Per-slot demotion flags (`program.slots[i].demoted`).
-    demoted: &'a [bool],
+    /// Per-slot storage class (`program.slots[i].storage`).
+    classes: &'a [StorageClass],
     locals: &'a Locals,
+    rings: &'a Rings,
 }
 
 /// Window a demoted temporary's region buffer: copy `r` shifted by `off`
-/// out of `(src_region, src)`. The fusion pass guarantees containment
-/// (extent-checked horizontal offsets, zero vertical offset), so the
-/// window never leaves the buffer.
-fn gather_local(
+/// out of `(src_region, src)`. The fusion/demotion passes guarantee
+/// containment (extent-checked offsets; for ring planes the vertical
+/// offset selects the source plane), so the window never leaves the
+/// buffer.
+pub(crate) fn gather_local(
     src_region: Region,
     src: &[f64],
     off: [i32; 3],
@@ -252,18 +294,28 @@ fn eval_region(ctx: &EvalCtx, e: &CExpr, r: Region, pool: &mut Pool) -> Val {
     match e {
         CExpr::Const(v) => Val::S(*v),
         CExpr::Scalar(ix) => Val::S(ctx.env.scalars[*ix]),
-        CExpr::Field { slot, off } => {
-            if ctx.demoted[*slot] {
+        CExpr::Field { slot, off } => match ctx.classes[*slot] {
+            StorageClass::Field3D => Val::B(gather(ctx.env, *slot, *off, r, pool)),
+            StorageClass::Register | StorageClass::Plane => {
                 match ctx.locals.bufs.get(slot) {
                     Some((sr, sbuf)) => Val::B(gather_local(*sr, sbuf, *off, r, pool)),
                     // Demoted temporary read before its first in-group
                     // write: zeros, like the field it replaces.
                     None => Val::S(0.0),
                 }
-            } else {
-                Val::B(gather(ctx.env, *slot, *off, r, pool))
             }
-        }
+            StorageClass::Ring => {
+                // Sweep carry: the vertical offset selects a level plane of
+                // the ring (sequential multistages evaluate one level at a
+                // time, so `r` spans a single level). Never-written levels
+                // read as zeros.
+                let level = r.k0 + off[2] as i64;
+                match ctx.rings.get(&(*slot, level)) {
+                    Some((sr, sbuf)) => Val::B(gather_local(*sr, sbuf, *off, r, pool)),
+                    None => Val::S(0.0),
+                }
+            }
+        },
         CExpr::Neg(a) => match eval_region(ctx, a, r, pool) {
             Val::S(v) => Val::S(-v),
             Val::B(mut b) => {
@@ -398,10 +450,12 @@ fn eval_region(ctx: &EvalCtx, e: &CExpr, r: Region, pool: &mut Pool) -> Val {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_stage_region(
     env: &mut Env,
-    demoted: &[bool],
+    classes: &[StorageClass],
     locals: &mut Locals,
+    rings: &mut Rings,
     stage: &CStage,
     k0: i64,
     k1: i64,
@@ -417,12 +471,12 @@ fn run_stage_region(
         k1,
     };
     let v = {
-        let ctx = EvalCtx { env: &*env, demoted, locals: &*locals };
+        let ctx = EvalCtx { env: &*env, classes, locals: &*locals, rings: &*rings };
         eval_region(&ctx, &stage.expr, r, pool)
     };
-    if demoted[stage.target] {
-        // Demoted target: the result stays a group-local buffer; no field
-        // is allocated and nothing is scattered.
+    if classes[stage.target] != StorageClass::Field3D {
+        // Demoted target: the result stays a backend-local buffer; no
+        // field is allocated and nothing is scattered.
         let buf = match v {
             Val::S(s) => {
                 let mut b = pool.take(r.len());
@@ -431,7 +485,14 @@ fn run_stage_region(
             }
             Val::B(b) => b,
         };
-        if let Some((_, old)) = locals.bufs.insert(stage.target, (r, buf)) {
+        let old = if classes[stage.target] == StorageClass::Ring {
+            // One plane per level; a same-level rewrite replaces it (reads
+            // of the replaced fringe are excluded by the demotion checks).
+            rings.insert((stage.target, r.k0), (r, buf))
+        } else {
+            locals.bufs.insert(stage.target, (r, buf))
+        };
+        if let Some((_, old)) = old {
             pool.put(old);
         }
         return;
@@ -450,15 +511,31 @@ fn run_stage_region(
     }
 }
 
+/// Drop ring planes further than each slot's depth from the current level.
+pub(crate) fn prune_rings(rings: &mut Rings, level: i64, depths: &[i32], pool: &mut Pool) {
+    let stale: Vec<(usize, i64)> = rings
+        .keys()
+        .copied()
+        .filter(|&(slot, lvl)| (level - lvl).abs() > depths[slot] as i64)
+        .collect();
+    for key in stale {
+        if let Some((_, b)) = rings.remove(&key) {
+            pool.put(b);
+        }
+    }
+}
+
 fn run_program(program: &Program, env: &mut Env, pool: &mut Pool) {
-    let demoted: Vec<bool> = program.slots.iter().map(|s| s.demoted).collect();
+    let classes: Vec<StorageClass> = program.slots.iter().map(|s| s.storage).collect();
+    let depths: Vec<i32> = program.slots.iter().map(|s| s.ring_depth).collect();
     let mut locals = Locals::default();
+    let mut rings: Rings = Rings::default();
     for ms in &program.multistages {
         match ms.policy {
             IterationPolicy::Parallel => {
                 // Whole 3-D region per stage: one gather/op/scatter pass.
                 // Demoted buffers live for the duration of their fusion
-                // group.
+                // group. (Ring slots never occur in PARALLEL multistages.)
                 let mut group = None;
                 for st in &ms.stages {
                     if group != Some(st.fusion_group) {
@@ -467,7 +544,9 @@ fn run_program(program: &Program, env: &mut Env, pool: &mut Pool) {
                     }
                     let (k0, k1) = env.krange(&st.interval);
                     if k0 < k1 {
-                        run_stage_region(env, &demoted, &mut locals, st, k0, k1, pool);
+                        run_stage_region(
+                            env, &classes, &mut locals, &mut rings, st, k0, k1, pool,
+                        );
                     }
                 }
                 locals.flush(pool);
@@ -484,7 +563,8 @@ fn run_program(program: &Program, env: &mut Env, pool: &mut Pool) {
                 };
                 for k in ks {
                     // Demoted buffers are per-level planes: group scope
-                    // restarts on every level.
+                    // restarts on every level. Ring planes persist across
+                    // levels and groups of this multistage.
                     let mut group = None;
                     for (st, (k0, k1)) in ms.stages.iter().zip(&ranges) {
                         if k >= *k0 && k < *k1 {
@@ -492,10 +572,17 @@ fn run_program(program: &Program, env: &mut Env, pool: &mut Pool) {
                                 locals.flush(pool);
                                 group = Some(st.fusion_group);
                             }
-                            run_stage_region(env, &demoted, &mut locals, st, k, k + 1, pool);
+                            run_stage_region(
+                                env, &classes, &mut locals, &mut rings, st, k, k + 1, pool,
+                            );
                         }
                     }
                     locals.flush(pool);
+                    prune_rings(&mut rings, k, &depths, pool);
+                }
+                // Ring state never crosses multistages.
+                for (_, (_, b)) in rings.drain() {
+                    pool.put(b);
                 }
             }
         }
@@ -511,6 +598,10 @@ impl Backend for VectorBackend {
         if !self.programs.contains_key(&ir.fingerprint) {
             self.programs.insert(ir.fingerprint, Program::compile(ir)?);
         }
+        if ir.fused && !self.fused.contains_key(&ir.fingerprint) {
+            let fp = FusedProgram::compile(&self.programs[&ir.fingerprint]);
+            self.fused.insert(ir.fingerprint, fp);
+        }
         Ok(())
     }
 
@@ -518,10 +609,14 @@ impl Backend for VectorBackend {
         self.prepare(ir)?;
         let program = &self.programs[&ir.fingerprint];
         // Demoted temporaries are never materialized as storages here —
-        // every access is served from group-local buffers.
+        // every access is served from backend-local buffers.
         let mut env =
             Env::build_with(program, args.fields, args.scalars, args.domain, false)?;
-        run_program(program, &mut env, &mut self.pool);
+        if let Some(fp) = self.fused.get(&ir.fingerprint) {
+            super::fused::run_program(fp, program, &mut env, &mut self.pool);
+        } else {
+            run_program(program, &mut env, &mut self.pool);
+        }
         env.restore(program, args.fields);
         Ok(())
     }
@@ -536,9 +631,10 @@ mod tests {
     use std::collections::BTreeMap;
 
     /// Run the same stencil through `debug` (pre-opt IR), `vector`
-    /// (pre-opt IR) and `vector` (fully optimized IR, with demoted
-    /// temporaries) on identical pseudo-random inputs and require
-    /// bitwise-equal outputs from all three.
+    /// (pre-opt IR), `vector` (fully optimized IR, with demoted
+    /// temporaries) and `vector` (fused loop-nest evaluator, opt-level 3)
+    /// on identical pseudo-random inputs and require bitwise-equal outputs
+    /// from all four.
     fn assert_backends_agree(src: &str, name: &str, out_names: &[&str], domain: [usize; 3]) {
         let ir = compile_source(src, name, &BTreeMap::new()).unwrap();
         let ir_opt = crate::analysis::compile_source_opt(
@@ -548,6 +644,14 @@ mod tests {
             &crate::opt::OptConfig::default(),
         )
         .unwrap();
+        let ir_fused = crate::analysis::compile_source_opt(
+            src,
+            name,
+            &BTreeMap::new(),
+            &crate::opt::OptConfig::level(crate::opt::OptLevel::O3),
+        )
+        .unwrap();
+        assert!(ir_fused.fused);
         let halo = 3usize;
         // deterministic LCG inputs
         let mut seed = 42u64;
@@ -560,6 +664,7 @@ mod tests {
         let mut d_fields: Vec<Storage> = names.iter().map(|n| make(n)).collect();
         let mut v_fields: Vec<Storage> = d_fields.clone();
         let mut o_fields: Vec<Storage> = d_fields.clone();
+        let mut f_fields: Vec<Storage> = d_fields.clone();
         let scalars: Vec<(&str, f64)> =
             ir.scalars.iter().map(|s| (s.name.as_str(), 0.37)).collect();
 
@@ -593,13 +698,24 @@ mod tests {
             be.run(&ir_opt, &mut StencilArgs { fields: &mut refs, scalars: &scalars, domain })
                 .unwrap();
         }
-        for (n, ((d, v), o)) in names
+        {
+            let mut refs: Vec<(&str, &mut Storage)> = names
+                .iter()
+                .map(|n| n.as_str())
+                .zip(f_fields.iter_mut())
+                .collect();
+            let mut be = VectorBackend::new();
+            be.run(&ir_fused, &mut StencilArgs { fields: &mut refs, scalars: &scalars, domain })
+                .unwrap();
+        }
+        for (n, (((d, v), o), f)) in names
             .iter()
-            .zip(d_fields.iter().zip(&v_fields).zip(&o_fields))
+            .zip(d_fields.iter().zip(&v_fields).zip(&o_fields).zip(&f_fields))
         {
             if out_names.contains(&n.as_str()) {
                 assert_eq!(d.max_abs_diff(v), 0.0, "field `{n}` differs (pre-opt)");
                 assert_eq!(d.max_abs_diff(o), 0.0, "field `{n}` differs (optimized)");
+                assert_eq!(d.max_abs_diff(f), 0.0, "field `{n}` differs (fused)");
             }
         }
     }
@@ -698,8 +814,9 @@ mod tests {
 
     #[test]
     fn demoted_hdiff_runs_without_temp_storages() {
-        // The headline demotion case: all three hdiff temporaries become
-        // register buffers, and the result stays bitwise equal to debug.
+        // The headline demotion case: all three hdiff temporaries demote
+        // (to plane scratch — they are offset-read), and the result stays
+        // bitwise equal to debug.
         let ir_opt = crate::analysis::compile_source_opt(
             crate::stdlib::HDIFF_SRC,
             "hdiff",
@@ -710,12 +827,107 @@ mod tests {
         assert!(ir_opt
             .temporaries
             .iter()
-            .all(|t| t.storage == crate::ir::implir::StorageClass::Register));
+            .all(|t| t.storage == crate::ir::implir::StorageClass::Plane));
         assert_backends_agree(
             crate::stdlib::HDIFF_SRC,
             "hdiff",
             &["out_phi"],
             [9, 8, 4],
+        );
+    }
+
+    #[test]
+    fn ring_carry_matches_reference() {
+        // A FORWARD sweep carry demoted to the plane ring (k-cache): both
+        // vector paths must stay bitwise equal to debug.
+        const SRC: &str = "
+            stencil ringy(a: Field<f64>, x: Field<f64>) {
+                with computation(FORWARD) {
+                    interval(0, 1) { t = a * 0.5; x = t; }
+                    interval(1, None) { t = a + t[0,0,-1] * 0.9; x = t - t[0,0,-1]; }
+                }
+            }";
+        let ir = crate::analysis::compile_source_opt(
+            SRC,
+            "ringy",
+            &BTreeMap::new(),
+            &crate::opt::OptConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(
+            ir.temporary("t").unwrap().storage,
+            crate::ir::implir::StorageClass::Ring
+        );
+        assert_backends_agree(SRC, "ringy", &["x"], [5, 4, 9]);
+    }
+
+    #[test]
+    fn ring_with_horizontal_offsets_matches_reference() {
+        const SRC: &str = "
+            stencil ringh(a: Field<f64>, x: Field<f64>) {
+                with computation(FORWARD) {
+                    interval(0, 1) { t = a; u = t; x = u; }
+                    interval(1, None) {
+                        t = a + t[0,0,-1] * 0.5;
+                        u = t[1,0,-1] + t[-1,0,-1];
+                        x = u * 0.5;
+                    }
+                }
+            }";
+        let ir = crate::analysis::compile_source_opt(
+            SRC,
+            "ringh",
+            &BTreeMap::new(),
+            &crate::opt::OptConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(
+            ir.temporary("t").unwrap().storage,
+            crate::ir::implir::StorageClass::Ring
+        );
+        assert_backends_agree(SRC, "ringh", &["x"], [6, 5, 8]);
+    }
+
+    #[test]
+    fn fused_path_allocates_no_per_node_buffers() {
+        // The fused evaluator's pool traffic per call is bounded by
+        // (scratch locals + one strip buffer per tier), not by the
+        // expression-node count the materializing path pays.
+        let domain = [16, 14, 8];
+        let run_at = |level: crate::opt::OptLevel| {
+            let ir = crate::analysis::compile_source_opt(
+                crate::stdlib::HDIFF_SRC,
+                "hdiff",
+                &BTreeMap::new(),
+                &crate::opt::OptConfig::level(level),
+            )
+            .unwrap();
+            let names: Vec<String> = ir.fields.iter().map(|f| f.name.clone()).collect();
+            let mut fields: Vec<Storage> = names
+                .iter()
+                .map(|_| Storage::from_fn_extended(domain, 3, |i, j, k| {
+                    (i * 3 + j * 5 + k * 7) as f64 * 0.125
+                }))
+                .collect();
+            let mut be = VectorBackend::new();
+            {
+                let mut refs: Vec<(&str, &mut Storage)> = names
+                    .iter()
+                    .map(|n| n.as_str())
+                    .zip(fields.iter_mut())
+                    .collect();
+                be.run(&ir, &mut StencilArgs { fields: &mut refs, scalars: &[], domain })
+                    .unwrap();
+            }
+            be.take_pool_stats().taken
+        };
+        let materializing = run_at(crate::opt::OptLevel::O2);
+        let fused = run_at(crate::opt::OptLevel::O3);
+        // hdiff fused: exactly the 3 plane-scratch buffers (lapf/flx/fly).
+        assert!(fused <= 4, "fused path took {fused} buffers");
+        assert!(
+            fused < materializing / 3,
+            "fused {fused} vs materializing {materializing}"
         );
     }
 

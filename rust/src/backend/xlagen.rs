@@ -398,7 +398,7 @@ pub fn build_computation(ir: &StencilIr, domain: [usize; 3]) -> Result<xla::XlaC
         demoted: ir
             .temporaries
             .iter()
-            .filter(|t| t.storage == StorageClass::Register)
+            .filter(|t| t.storage != StorageClass::Field3D)
             .map(|t| t.name.clone())
             .collect(),
     };
@@ -427,7 +427,7 @@ pub fn build_computation(ir: &StencilIr, domain: [usize; 3]) -> Result<xla::XlaC
     for t in &ir.temporaries {
         let geom = BoxGeom::for_extent(t.extent, domain);
         ctx.geoms.insert(t.name.clone(), geom);
-        if t.storage == StorageClass::Register {
+        if t.storage != StorageClass::Field3D {
             continue;
         }
         let zero = builder.c0(0.0f64).map_err(xerr)?;
@@ -826,7 +826,7 @@ mod tests {
         assert!(ir_opt
             .temporaries
             .iter()
-            .all(|t| t.storage == StorageClass::Register));
+            .all(|t| t.storage != StorageClass::Field3D));
         assert_xla_matches_debug_ir(
             crate::stdlib::HDIFF_SRC,
             "hdiff",

@@ -116,10 +116,24 @@ pub enum StorageClass {
     /// unoptimized default, and the only class the `debug` reference
     /// interpreter ever materializes.
     Field3D,
-    /// Demoted: every access happens inside a single fused stage group, so
-    /// backends may keep the values in a transient region/plane buffer (or
-    /// inline them entirely) instead of allocating a field.
+    /// Demoted, every access inside a single fused stage group and every
+    /// read at offset `[0,0,0]`: the value is a pure per-point SSA register
+    /// in the fused evaluator (no buffer at all); interpreting backends may
+    /// still use a transient group-local buffer.
     Register,
+    /// Demoted, every access inside a single fused stage group, reads have
+    /// zero vertical offset but nonzero horizontal offsets: backends keep
+    /// the values in a group-scoped scratch buffer (one plane per level in
+    /// sequential multistages, the group region in PARALLEL ones) instead
+    /// of allocating a field.
+    Plane,
+    /// Demoted sweep state (a k-cache): every access lives in one
+    /// FORWARD/BACKWARD multistage, vertical offsets only ever look at
+    /// already-computed levels (enforced by `analysis::checks`), so
+    /// backends serve the values from a ring of recent level planes.
+    /// Levels never written read as zeros, exactly like the
+    /// zero-initialized field the temporary replaces.
+    Ring,
 }
 
 impl fmt::Display for StorageClass {
@@ -127,6 +141,8 @@ impl fmt::Display for StorageClass {
         match self {
             StorageClass::Field3D => write!(f, "field3d"),
             StorageClass::Register => write!(f, "register"),
+            StorageClass::Plane => write!(f, "plane"),
+            StorageClass::Ring => write!(f, "ring"),
         }
     }
 }
@@ -140,6 +156,12 @@ pub struct TempField {
     pub extent: Extent,
     /// Run-time storage class (see [`StorageClass`]).
     pub storage: StorageClass,
+    /// For [`StorageClass::Ring`]: how many past level planes backends must
+    /// retain (max absolute vertical read offset, at least 1). Stamped by
+    /// `opt::demote` together with the class; 0 otherwise. Derived metadata
+    /// — a pure function of the stage reads, so not part of the canonical
+    /// form.
+    pub ring_depth: i32,
 }
 
 /// A lowered assignment: `target[0,0,0] = value` with `value` free of
@@ -201,6 +223,12 @@ pub struct StencilIr {
     pub externals: BTreeMap<String, f64>,
     /// Formatting-insensitive identity of this IR (see `cache::fingerprint`).
     pub fingerprint: u64,
+    /// Execution-strategy request from the optimizer configuration
+    /// (`--opt-level 3`): backends that support it evaluate fusion groups
+    /// with the fused loop-nest evaluator instead of materializing
+    /// per-expression-node buffers. Semantics-neutral — backends without a
+    /// fused path ignore it. Reflected in the fingerprint via the opt tag.
+    pub fused: bool,
 }
 
 impl StencilIr {

@@ -20,18 +20,27 @@
 //!   individually-toggleable passes rewriting the IR before any backend
 //!   sees it: constant folding + CSE (`fold-cse`), dead-stage/temporary
 //!   elimination (`dce`), extent-checked stage fusion (`fuse`), and
-//!   temporary demotion to register/plane buffers (`demote`). The CLI's
-//!   `--opt-level {0,1,2}` selects the configuration; every configuration
-//!   produces bit-identical results on the interpreting backends;
+//!   temporary demotion (`demote`) to one of three locality classes —
+//!   `register` (pure SSA values), `plane` (group-scoped scratch for
+//!   horizontally-offset reads) or `ring` (a k-cache of recent level
+//!   planes for sweep carries with vertical offsets). The CLI's
+//!   `--opt-level {0,1,2,3}` selects the configuration; every
+//!   configuration produces bit-identical results on the interpreting
+//!   backends. Level 3 runs the same passes as level 2 and additionally
+//!   requests the *fused execution strategy* (`StencilIr::fused`);
 //! * **Implementation IR** ([`ir`]) — the scheduled, lowered, optimized
 //!   form all backends consume, with fusion groups and storage classes as
 //!   first-class metadata included in the canonical form/fingerprint;
 //! * **Backends** ([`backend`]) — `debug` (scalar reference interpreter,
 //!   ignores optimization metadata by design), `vector` (plane-vectorized
-//!   evaluator; demoted temporaries live in group-local buffers instead of
-//!   fields), `xla` (XlaBuilder codegen JIT-compiled on PJRT; demoted
-//!   temporaries emit no intermediate zero boxes), and `pjrt-aot`
-//!   (prebuilt JAX/**Pallas** HLO artifacts);
+//!   evaluator; demoted temporaries live in backend-local buffers instead
+//!   of fields; at `--opt-level 3` it compiles each fusion group's stages
+//!   into flat SSA tapes ([`backend::cexpr::CTape`], with cross-stage CSE
+//!   via value numbering) and evaluates every output and demoted temporary
+//!   of a group in one loop nest per interval ([`backend::fused`]) — no
+//!   per-expression-node region buffers), `xla` (XlaBuilder codegen
+//!   JIT-compiled on PJRT; demoted temporaries emit no intermediate zero
+//!   boxes), and `pjrt-aot` (prebuilt JAX/**Pallas** HLO artifacts);
 //! * **Storage** ([`storage`]) — NumPy-like 3-D containers with
 //!   backend-specific layout, alignment and halo padding;
 //! * **Coordinator** ([`coordinator`]) — stencil registry, run-time storage

@@ -8,9 +8,10 @@
 //!   bench     Figure-3 style backend sweep over domain sizes
 //!   model     run the isentropic-like demonstration model
 //!
-//! Every compiling subcommand accepts `--opt-level {0,1,2}` (default 2),
+//! Every compiling subcommand accepts `--opt-level {0,1,2,3}` (default 2),
 //! selecting how much of the pass manager (`gt4rs::opt`) runs between
-//! analysis and the backends.
+//! analysis and the backends; level 3 additionally selects the fused
+//! loop-nest evaluator on the vector backend.
 //!
 //! (The CLI is hand-rolled: the offline vendored crate set has no clap.)
 
@@ -79,7 +80,7 @@ fn parse_domain(s: &str) -> Result<[usize; 3]> {
 
 fn parse_opt_level(flags: &Flags) -> Result<OptLevel> {
     let s = flags.get_or("opt-level", "2");
-    OptLevel::parse(s).ok_or_else(|| anyhow!("--opt-level must be 0, 1 or 2, got `{s}`"))
+    OptLevel::parse(s).ok_or_else(|| anyhow!("--opt-level must be 0, 1, 2 or 3, got `{s}`"))
 }
 
 fn parse_externals(s: Option<&str>) -> Result<BTreeMap<String, f64>> {
@@ -137,8 +138,10 @@ SUBCOMMANDS
   model    [--backend B] [--domain IxJxK] [--steps N]
            run the isentropic-like demo model, log diagnostics
 
-All compiling subcommands take --opt-level 0|1|2 (default 2): 0 disables
-the optimizer, 1 enables fold-cse/dce/fuse, 2 adds temporary demotion.
+All compiling subcommands take --opt-level 0|1|2|3 (default 2): 0 disables
+the optimizer, 1 enables fold-cse/dce/fuse, 2 adds temporary demotion, 3
+additionally runs the vector backend's fused loop-nest evaluator (stage
+tapes, no per-expression-node buffers).
 
 Backends: {}  (library stencils: {})",
         BACKEND_NAMES.join(", "),

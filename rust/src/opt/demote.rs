@@ -1,68 +1,126 @@
-//! Temporary demotion: temporaries produced and consumed inside a single
-//! fusion group become [`StorageClass::Register`] values — backends may
-//! hold them in transient region/plane buffers for the lifetime of the
-//! group instead of allocating, scattering into and gathering from a full
-//! 3-D field.
+//! Temporary demotion: temporaries whose data flow is provably local get a
+//! cheaper [`StorageClass`] than the default full 3-D field, so backends
+//! can keep their values in transient buffers (or nothing at all) instead
+//! of allocating, scattering into and gathering from a whole field.
 //!
-//! Legality (on top of what `fusion` already guarantees for in-group
-//! reads):
+//! Three demoted classes, from cheapest to widest:
 //!
-//! * every write *and* every read of the temporary happens in one fusion
-//!   group (one multistage, consecutive stages, one interval);
-//! * every read has a zero vertical offset — a register buffer holds only
-//!   the group's current k-slab (one plane per level in sequential
-//!   multistages), so a `t[0,0,-1]`-style sweep carry must stay a field.
+//! * [`StorageClass::Register`] — every write *and* read happens in one
+//!   fusion group (one multistage, consecutive stages, one interval) and
+//!   every read is at offset `[0,0,0]`. In the fused evaluator the value is
+//!   a pure SSA register; interpreting backends may use a group-local
+//!   buffer.
+//! * [`StorageClass::Plane`] — same single-group locality, reads have zero
+//!   vertical offset but nonzero horizontal offsets: the group keeps a
+//!   scratch buffer (one plane per level in sequential multistages, the
+//!   group region in PARALLEL ones).
+//! * [`StorageClass::Ring`] — sweep state: every access lives in a single
+//!   FORWARD/BACKWARD multistage (groups may differ — a carry crosses the
+//!   `interval(0,1)` / `interval(1,None)` split), and every read's window
+//!   is contained in every writer's computed extent. `analysis::checks`
+//!   guarantees vertical offsets only ever look at already-computed levels
+//!   and that current-level reads are exact, so a ring of the most recent
+//!   level planes (depth = max vertical offset) serves every access.
 //!
-//! Reads *before* the first in-group write (a guarded `t = m ? v : t`
-//! rewrite) are fine: register buffers read as zeros until written,
-//! exactly like the zero-initialized field the temporary would otherwise
-//! be.
+//! Reads *before* the first write (a guarded `t = m ? v : t` rewrite, or a
+//! carry read at a never-written level) are fine for every class: demoted
+//! buffers read as zeros until written, exactly like the zero-initialized
+//! field they replace.
 
-use crate::ir::implir::{StencilIr, StorageClass};
+use crate::dsl::ast::IterationPolicy;
+use crate::ir::implir::{Extent, StencilIr, StorageClass};
 use std::collections::HashMap;
 
 /// Per-temporary access summary.
+#[derive(Default)]
 struct Access {
-    groups: Vec<usize>,
     written: bool,
-    reads_k_zero: bool,
+    /// Fusion groups of every write and read.
+    groups: Vec<usize>,
+    /// Multistage index of every write and read.
+    multistages: Vec<usize>,
+    /// `(offset, reader stage extent)` for every read.
+    reads: Vec<([i32; 3], Extent)>,
+    /// Compute extent of every writing stage.
+    writer_extents: Vec<Extent>,
 }
 
 pub fn run(ir: &mut StencilIr) {
     let mut access: HashMap<String, Access> = ir
         .temporaries
         .iter()
-        .map(|t| {
-            (t.name.clone(), Access { groups: Vec::new(), written: false, reads_k_zero: true })
-        })
+        .map(|t| (t.name.clone(), Access::default()))
         .collect();
 
-    for ms in &ir.multistages {
+    for (mi, ms) in ir.multistages.iter().enumerate() {
         for st in &ms.stages {
             if let Some(a) = access.get_mut(st.stmt.target.as_str()) {
-                a.groups.push(st.fusion_group);
                 a.written = true;
+                a.groups.push(st.fusion_group);
+                a.multistages.push(mi);
+                a.writer_extents.push(st.extent);
             }
             for (f, off) in &st.reads {
                 if let Some(a) = access.get_mut(f.as_str()) {
                     a.groups.push(st.fusion_group);
-                    if off[2] != 0 {
-                        a.reads_k_zero = false;
-                    }
+                    a.multistages.push(mi);
+                    a.reads.push((*off, st.extent));
                 }
             }
         }
     }
 
+    let sequential: Vec<bool> = ir
+        .multistages
+        .iter()
+        .map(|m| m.policy != IterationPolicy::Parallel)
+        .collect();
+
     for t in &mut ir.temporaries {
         let a = &access[&t.name];
-        let single_group = !a.groups.is_empty() && a.groups.iter().all(|&g| g == a.groups[0]);
-        t.storage = if a.written && single_group && a.reads_k_zero {
-            StorageClass::Register
+        t.storage = classify(a, &sequential);
+        t.ring_depth = if t.storage == StorageClass::Ring {
+            a.reads
+                .iter()
+                .map(|(off, _)| off[2].abs())
+                .max()
+                .unwrap_or(0)
+                .max(1)
         } else {
-            StorageClass::Field3D
+            0
         };
     }
+}
+
+fn classify(a: &Access, sequential: &[bool]) -> StorageClass {
+    if !a.written {
+        return StorageClass::Field3D;
+    }
+    let single_group = a.groups.iter().all(|&g| g == a.groups[0]);
+    if single_group && a.reads.iter().all(|(off, _)| off[2] == 0) {
+        // The fusion pass already verified containment for every in-group
+        // read, so the split is purely on offset shape.
+        return if a.reads.iter().all(|(off, _)| *off == [0, 0, 0]) {
+            StorageClass::Register
+        } else {
+            StorageClass::Plane
+        };
+    }
+    // Ring (k-cache) candidate: all accesses inside one sequential
+    // multistage, every read window contained in every writer's extent (a
+    // plane only holds what its writer computed; windows outside it would
+    // observe the zero fringe a real field provides).
+    let single_ms = a.multistages.iter().all(|&m| m == a.multistages[0]);
+    if single_ms && sequential[a.multistages[0]] {
+        let contained = a.reads.iter().all(|(off, rext)| {
+            let window = rext.translate([off[0], off[1], 0]);
+            a.writer_extents.iter().all(|wext| window.within(wext))
+        });
+        if contained {
+            return StorageClass::Ring;
+        }
+    }
+    StorageClass::Field3D
 }
 
 #[cfg(test)]
@@ -84,20 +142,23 @@ mod tests {
     }
 
     #[test]
-    fn hdiff_temporaries_all_demote() {
+    fn hdiff_temporaries_all_demote_to_planes() {
+        // lapf/flx/fly are all read at horizontal offsets inside the one
+        // fused group: plane scratch, not pure registers.
         let ir = opt(crate::stdlib::HDIFF_SRC, "hdiff");
         for t in ["lapf", "flx", "fly"] {
-            assert_eq!(class(&ir, t), StorageClass::Register, "temp `{t}`");
+            assert_eq!(class(&ir, t), StorageClass::Plane, "temp `{t}`");
         }
     }
 
     #[test]
     fn vadv_sweep_carries_stay_fields() {
         let ir = opt(crate::stdlib::VADV_SRC, "vadv");
-        // cp/dp cross groups (and cp is read at k-1): must stay fields.
+        // cp/dp are read again by the BACKWARD multistage: no class fits.
         assert_eq!(class(&ir, "cp"), StorageClass::Field3D);
         assert_eq!(class(&ir, "dp"), StorageClass::Field3D);
-        // av/denom live entirely inside the interval(1,None) group.
+        // av/denom live entirely inside the interval(1,None) group and are
+        // only read at [0,0,0]: pure registers.
         assert_eq!(class(&ir, "av"), StorageClass::Register);
         assert_eq!(class(&ir, "denom"), StorageClass::Register);
     }
@@ -131,9 +192,10 @@ mod tests {
     }
 
     #[test]
-    fn guarded_rewrite_still_demotes() {
+    fn guarded_rewrite_demotes_to_plane() {
         // Lowering turns the `if` into `t = cond ? v : t` (a zero-offset
-        // self-read) — all accesses stay inside one group.
+        // self-read) — all accesses stay inside one group; the consumer's
+        // horizontal offsets make it a plane, not a register.
         const SRC: &str = "
             stencil s(a: Field<f64>, out: Field<f64>) {
                 with computation(PARALLEL), interval(...) {
@@ -143,6 +205,88 @@ mod tests {
                 }
             }";
         let ir = opt(SRC, "s");
+        assert_eq!(class(&ir, "t"), StorageClass::Plane);
+    }
+
+    #[test]
+    fn zero_offset_only_temp_is_register() {
+        const SRC: &str = "
+            stencil s(a: Field<f64>, out: Field<f64>) {
+                with computation(PARALLEL), interval(...) {
+                    t = a * 2.0;
+                    out = t + a;
+                }
+            }";
+        let ir = opt(SRC, "s");
         assert_eq!(class(&ir, "t"), StorageClass::Register);
+    }
+
+    #[test]
+    fn forward_carry_demotes_to_ring() {
+        // The column-sum shape: a carry written in both interval groups of
+        // one FORWARD multistage, read at k-1 — a classic k-cache.
+        const SRC: &str = "
+            stencil s(a: Field<f64>, x: Field<f64>) {
+                with computation(FORWARD) {
+                    interval(0, 1) { t = a * 0.5; x = t; }
+                    interval(1, None) { t = a + t[0,0,-1] * 0.9; x = t - t[0,0,-1]; }
+                }
+            }";
+        let ir = opt(SRC, "s");
+        assert_eq!(class(&ir, "t"), StorageClass::Ring);
+        assert_eq!(ir.temporary("t").unwrap().ring_depth, 1);
+    }
+
+    #[test]
+    fn ring_requires_read_windows_inside_writer_extents() {
+        // x reads the previous level's t at a horizontal offset, but the
+        // interval(1,None) writer (textually after the read, so nothing
+        // widens its extent) only computes t over the unextended domain:
+        // the plane a ring would serve never holds the window x needs, so
+        // t must stay a field (whose zero halo provides the fringe).
+        const SRC: &str = "
+            stencil s(a: Field<f64>, x: Field<f64>) {
+                with computation(FORWARD) {
+                    interval(0, 1) { t = a; x = t; }
+                    interval(1, None) { x = t[1,0,-1]; t = a; }
+                }
+            }";
+        let ir = opt(SRC, "s");
+        assert_eq!(class(&ir, "t"), StorageClass::Field3D);
+    }
+
+    #[test]
+    fn ring_allows_horizontal_offsets_covered_by_writers() {
+        // Here the temp chain widens t's compute extent to ±1, so the
+        // ring planes do hold u's windows.
+        const SRC: &str = "
+            stencil s(a: Field<f64>, x: Field<f64>) {
+                with computation(FORWARD) {
+                    interval(0, 1) { t = a; u = t; x = u; }
+                    interval(1, None) {
+                        t = a + t[0,0,-1];
+                        u = t[1,0,-1] + t[-1,0,-1];
+                        x = u * 0.5;
+                    }
+                }
+            }";
+        let ir = opt(SRC, "s");
+        assert_eq!(class(&ir, "t"), StorageClass::Ring);
+        // u is written in two groups of the multistage but only read at
+        // [0,0,0]: the ring class covers it too (depth 1).
+        assert_eq!(class(&ir, "u"), StorageClass::Ring);
+    }
+
+    #[test]
+    fn backward_carry_demotes_to_ring() {
+        const SRC: &str = "
+            stencil s(a: Field<f64>, x: Field<f64>) {
+                with computation(BACKWARD) {
+                    interval(-1, None) { t = a; x = t; }
+                    interval(0, -1) { t = a + t[0,0,1] * 0.5; x = t; }
+                }
+            }";
+        let ir = opt(SRC, "s");
+        assert_eq!(class(&ir, "t"), StorageClass::Ring);
     }
 }

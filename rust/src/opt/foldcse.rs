@@ -210,6 +210,7 @@ fn cse(ir: &mut StencilIr) {
                     dtype: temp_dtype,
                     extent,
                     storage: StorageClass::Field3D,
+                    ring_depth: 0,
                 });
             }
             si += 1;

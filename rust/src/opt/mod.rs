@@ -22,6 +22,14 @@
 //! and still produces bit-identical results. The optimized IR's fingerprint
 //! incorporates the pass configuration ([`OptConfig::canon`]) so cached
 //! artifacts from different opt levels never collide.
+//!
+//! `--opt-level 3` runs the same pass list as level 2 and additionally
+//! requests the *fused execution strategy* ([`StencilIr::fused`]): backends
+//! with a fused path (currently `vector`) compile each fusion group to a
+//! flat SSA tape ([`crate::backend::cexpr::CTape`]) and evaluate the whole
+//! group in one loop nest per interval (`crate::backend::fused`). This is
+//! an execution-strategy bit, not an IR rewrite — results stay bitwise
+//! identical to every other level.
 
 pub mod dce;
 pub mod demote;
@@ -30,7 +38,7 @@ pub mod fusion;
 
 use crate::ir::implir::{Stage, StencilIr};
 
-/// Coarse optimization levels, the CLI's `--opt-level {0,1,2}`.
+/// Coarse optimization levels, the CLI's `--opt-level {0,1,2,3}`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum OptLevel {
     /// No optimization: the pipeline's pre-opt IR verbatim.
@@ -39,6 +47,12 @@ pub enum OptLevel {
     O1,
     /// Everything, including temporary demotion.
     O2,
+    /// O2 plus the fused loop-nest execution strategy: backends that
+    /// support it (currently `vector`) compile each fusion group to a flat
+    /// SSA tape and evaluate every output and demoted temporary of the
+    /// group in one loop nest per interval — no per-expression-node region
+    /// buffers.
+    O3,
 }
 
 impl OptLevel {
@@ -47,6 +61,7 @@ impl OptLevel {
             "0" => Some(OptLevel::O0),
             "1" => Some(OptLevel::O1),
             "2" => Some(OptLevel::O2),
+            "3" => Some(OptLevel::O3),
             _ => None,
         }
     }
@@ -58,6 +73,7 @@ impl std::fmt::Display for OptLevel {
             OptLevel::O0 => write!(f, "0"),
             OptLevel::O1 => write!(f, "1"),
             OptLevel::O2 => write!(f, "2"),
+            OptLevel::O3 => write!(f, "3"),
         }
     }
 }
@@ -69,6 +85,9 @@ pub struct OptConfig {
     pub dce: bool,
     pub fuse: bool,
     pub demote: bool,
+    /// Not a pass: requests the fused loop-nest execution strategy from
+    /// backends that support it (stamped on the IR as [`StencilIr::fused`]).
+    pub fused: bool,
 }
 
 impl Default for OptConfig {
@@ -80,24 +99,41 @@ impl Default for OptConfig {
 impl OptConfig {
     /// All passes disabled (opt-level 0).
     pub fn none() -> OptConfig {
-        OptConfig { fold_cse: false, dce: false, fuse: false, demote: false }
+        OptConfig { fold_cse: false, dce: false, fuse: false, demote: false, fused: false }
     }
 
     pub fn level(level: OptLevel) -> OptConfig {
         match level {
             OptLevel::O0 => OptConfig::none(),
-            OptLevel::O1 => {
-                OptConfig { fold_cse: true, dce: true, fuse: true, demote: false }
-            }
-            OptLevel::O2 => {
-                OptConfig { fold_cse: true, dce: true, fuse: true, demote: true }
-            }
+            OptLevel::O1 => OptConfig {
+                fold_cse: true,
+                dce: true,
+                fuse: true,
+                demote: false,
+                fused: false,
+            },
+            OptLevel::O2 => OptConfig {
+                fold_cse: true,
+                dce: true,
+                fuse: true,
+                demote: true,
+                fused: false,
+            },
+            OptLevel::O3 => OptConfig {
+                fold_cse: true,
+                dce: true,
+                fuse: true,
+                demote: true,
+                fused: true,
+            },
         }
     }
 
     /// Canonical string of the enabled passes, mixed into IR fingerprints.
     /// Empty exactly when no pass is enabled, so opt-level 0 keeps the
-    /// pipeline's pre-opt fingerprint unchanged.
+    /// pipeline's pre-opt fingerprint unchanged. The `fused` execution
+    /// strategy participates too: O2 and O3 artifacts never share a cache
+    /// slot even though they run the same pass list.
     pub fn canon(&self) -> String {
         let mut names = Vec::new();
         if self.fold_cse {
@@ -111,6 +147,9 @@ impl OptConfig {
         }
         if self.demote {
             names.push("demote");
+        }
+        if self.fused {
+            names.push("fused");
         }
         names.join(",")
     }
@@ -175,6 +214,7 @@ impl PassManager {
 
     fn finish(&self, ir: &mut StencilIr) {
         refresh_reads(ir);
+        ir.fused = self.config.fused;
         ir.fingerprint = crate::analysis::fingerprint_ir_with(ir, &self.config.canon());
     }
 }
@@ -219,7 +259,22 @@ mod tests {
         assert_eq!(o0.canon(), "");
         let o2 = OptConfig::level(OptLevel::O2);
         assert_eq!(o2.canon(), "fold-cse,dce,fuse,demote");
+        let o3 = OptConfig::level(OptLevel::O3);
+        assert_eq!(o3.canon(), "fold-cse,dce,fuse,demote,fused");
         assert_ne!(o0.salt(), o2.salt());
+        assert_ne!(o2.salt(), o3.salt());
+    }
+
+    #[test]
+    fn o3_marks_ir_fused_with_distinct_fingerprint() {
+        let i2 = ir_at(OptConfig::level(OptLevel::O2));
+        let i3 = ir_at(OptConfig::level(OptLevel::O3));
+        assert!(!i2.fused);
+        assert!(i3.fused);
+        assert_ne!(i2.fingerprint, i3.fingerprint);
+        // The pass list is identical: only the execution strategy differs.
+        assert_eq!(i2.num_stages(), i3.num_stages());
+        assert_eq!(i2.temporaries, i3.temporaries);
     }
 
     #[test]
@@ -241,7 +296,8 @@ mod tests {
         // `dead` eliminated, `t` survives.
         assert!(ir.temporary("dead").is_none());
         let t = ir.temporary("t").unwrap();
-        assert_eq!(t.storage, crate::ir::implir::StorageClass::Register);
+        // `t` is read at horizontal offsets: demoted to a plane scratch.
+        assert_eq!(t.storage, crate::ir::implir::StorageClass::Plane);
         assert_eq!(ir.num_stages(), 2);
         // `1.0 * a` folded away.
         let out_stage = &ir.multistages[0].stages[1];

@@ -104,7 +104,7 @@ fn coordinator_cache_hits_across_reformatting() {
 fn fingerprint_invariant_under_reformatting_across_opt_levels() {
     for seed in 0..6u64 {
         let src = gen_source(seed);
-        for level in [OptLevel::O0, OptLevel::O1, OptLevel::O2] {
+        for level in [OptLevel::O0, OptLevel::O1, OptLevel::O2, OptLevel::O3] {
             let config = OptConfig::level(level);
             let base = analysis::compile_source_opt(&src, "fam", &BTreeMap::new(), &config)
                 .unwrap()
@@ -136,12 +136,21 @@ fn fingerprint_changes_with_opt_level() {
                 .unwrap()
                 .fingerprint
         };
-        let (f0, f1, f2) = (fp_at(OptLevel::O0), fp_at(OptLevel::O1), fp_at(OptLevel::O2));
+        let (f0, f1, f2, f3) = (
+            fp_at(OptLevel::O0),
+            fp_at(OptLevel::O1),
+            fp_at(OptLevel::O2),
+            fp_at(OptLevel::O3),
+        );
         assert_ne!(f0, f1, "seed {seed}: O0 vs O1 fingerprints collide");
         assert_ne!(f1, f2, "seed {seed}: O1 vs O2 fingerprints collide");
         assert_ne!(f0, f2, "seed {seed}: O0 vs O2 fingerprints collide");
+        // O3 runs the same passes as O2; only the fused execution strategy
+        // differs — the opt tag must still separate the cache slots.
+        assert_ne!(f2, f3, "seed {seed}: O2 vs O3 fingerprints collide");
         // Determinism at every level.
         assert_eq!(f2, fp_at(OptLevel::O2));
+        assert_eq!(f3, fp_at(OptLevel::O3));
     }
 }
 

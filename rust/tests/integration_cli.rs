@@ -95,12 +95,14 @@ fn ir_dump_shows_passes() {
     for pass in ["fold-cse", "dce", "fuse", "demote"] {
         assert!(text.contains(&format!("after pass `{pass}`")), "missing `{pass}`:\n{text}");
     }
-    // Demotion must actually fire on hdiff.
-    assert!(text.contains("[register]"), "no demoted temporaries:\n{text}");
+    // Demotion must actually fire on hdiff (its temporaries are read at
+    // horizontal offsets: plane scratch).
+    assert!(text.contains("[plane]"), "no demoted temporaries:\n{text}");
     // At --opt-level 0 every pass is disabled.
     let (ok0, text0) = repro(&["ir", "--stencil", "hdiff", "--opt-level", "0"]);
     assert!(ok0, "{text0}");
     assert!(text0.contains("disabled at --opt-level 0"));
+    assert!(!text0.contains("[plane]"));
     assert!(!text0.contains("[register]"));
 }
 
@@ -123,6 +125,8 @@ fn opt_levels_produce_identical_checksums() {
         lines
     };
     assert_eq!(sums("0"), sums("2"));
+    // Opt-level 3 (fused loop-nest evaluator) is bit-identical too.
+    assert_eq!(sums("0"), sums("3"));
 }
 
 #[test]

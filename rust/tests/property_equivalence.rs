@@ -10,14 +10,20 @@
 //!   manager (fold-cse, dce, fuse, demote) is semantics-preserving, so
 //!   `--opt-level 1` and `--opt-level 2` outputs are *bitwise* equal to
 //!   the unoptimized `--opt-level 0` reference on the interpreting
-//!   backends.
+//!   backends;
+//! * `--opt-level 3` — the vector backend's **fused loop-nest evaluator**
+//!   (group tapes, cross-stage CSE, register/plane/ring locals) — is
+//!   bitwise identical to both the `debug` reference and the materializing
+//!   vector path, including sweep carries demoted to the plane ring
+//!   (vertical offsets on demoted temporaries).
 
 use gt4rs::coordinator::Coordinator;
 use gt4rs::dsl::parser::parse_module;
 use gt4rs::opt::OptLevel;
 use gt4rs::storage::Storage;
 
-const LEVELS: [OptLevel; 3] = [OptLevel::O0, OptLevel::O1, OptLevel::O2];
+const LEVELS: [OptLevel; 4] =
+    [OptLevel::O0, OptLevel::O1, OptLevel::O2, OptLevel::O3];
 
 struct Rng(u64);
 
@@ -173,8 +179,9 @@ fn random_parallel_stencils_agree_across_backends_and_opt_levels() {
                 );
             }
             // xla is the expensive leg: sweep a prefix of the seeds at the
-            // extreme levels only.
-            if xla_ok && seed < 12 && level != OptLevel::O1 {
+            // extreme pass configurations only (O3 emits the same graph as
+            // O2 — the fused bit only affects the vector backend).
+            if xla_ok && seed < 12 && matches!(level, OptLevel::O0 | OptLevel::O2) {
                 let got = run_backend(&mut coord, fp, "xla", domain, seed, &scalars);
                 assert_fields_match(
                     &reference,
@@ -226,7 +233,7 @@ fn random_sequential_accumulators_agree_across_backends_and_opt_levels() {
                     &format!("seed {seed} O{level} {be}"),
                 );
             }
-            if xla_ok && seed < 8 && level != OptLevel::O1 {
+            if xla_ok && seed < 8 && matches!(level, OptLevel::O0 | OptLevel::O2) {
                 let got = run_backend(&mut coord, fp, "xla", domain, seed, &[]);
                 assert_fields_match(
                     &reference,
@@ -234,6 +241,89 @@ fn random_sequential_accumulators_agree_across_backends_and_opt_levels() {
                     1e-12,
                     &format!("seed {seed} O{level} xla"),
                 );
+            }
+        }
+    }
+}
+
+#[test]
+fn random_ring_carries_agree_across_backends_and_opt_levels() {
+    // Sweep carries demoted to the plane ring (k-cache): temporaries
+    // written and read (at vertical, and optionally horizontal, offsets)
+    // inside one FORWARD/BACKWARD multistage. The fused evaluator must
+    // stay bitwise equal to debug at every level.
+    let domain = [6, 5, 8];
+    for seed in 0..20u64 {
+        let mut rng = Rng(seed.wrapping_mul(9173).wrapping_add(7));
+        let alpha = 0.2 + 0.6 * (rng.f64() + 0.5);
+        let beta = rng.f64();
+        let horizontal = seed % 2 == 0;
+        let (policy, first, rest, dk) = if seed % 3 == 0 {
+            ("BACKWARD", "interval(-1, None)", "interval(0, -1)", 1)
+        } else {
+            ("FORWARD", "interval(0, 1)", "interval(1, None)", -1)
+        };
+        // Horizontal variant reads the carry plane at ±1: the temp chain
+        // widens the writers' extents so the ring windows are covered.
+        let consumer = if horizontal {
+            format!("u = t[1,0,{dk}] + t[-1,0,{dk}]; x = u * 0.25;")
+        } else {
+            format!("x = t - t[0,0,{dk}] * {beta:.3};")
+        };
+        let consumer_first = if horizontal { "u = t; x = u;" } else { "x = t;" };
+        let src = format!(
+            "stencil rprop(a: Field<f64>, x: Field<f64>) {{\n\
+               with computation({policy}) {{\n\
+                 {first} {{ t = a * {beta:.3}; {consumer_first} }}\n\
+                 {rest} {{ t = a + t[0,0,{dk}] * {alpha:.3}; {consumer} }}\n\
+               }}\n\
+             }}"
+        );
+        let mut coord0 = Coordinator::with_opt_level(OptLevel::O0);
+        let fp0 = coord0
+            .compile_source(&src, "rprop", &Default::default())
+            .unwrap_or_else(|e| panic!("seed {seed}: {e:#}\n{src}"));
+        let reference = run_backend(&mut coord0, fp0, "debug", domain, seed, &[]);
+        for level in LEVELS {
+            let mut coord = Coordinator::with_opt_level(level);
+            let fp = coord.compile_source(&src, "rprop", &Default::default()).unwrap();
+            for be in ["debug", "vector"] {
+                let got = run_backend(&mut coord, fp, be, domain, seed, &[]);
+                assert_fields_match(
+                    &reference,
+                    &got,
+                    0.0,
+                    &format!("seed {seed} O{level} {be}\n{src}\n"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn stdlib_stencils_all_levels_bitwise_equal_on_vector() {
+    // Every library stencil, every opt level, both interpreting backends:
+    // bitwise equal to the unoptimized debug reference.
+    let domain = [9, 8, 6];
+    for name in gt4rs::stdlib::names() {
+        let mut coord0 = Coordinator::with_opt_level(OptLevel::O0);
+        let fp0 = coord0.compile_library(name).unwrap();
+        let scalars: Vec<(String, f64)> = coord0
+            .ir(fp0)
+            .unwrap()
+            .scalars
+            .iter()
+            .map(|s| (s.name.clone(), 0.21))
+            .collect();
+        let srefs: Vec<(&str, f64)> =
+            scalars.iter().map(|(n, v)| (n.as_str(), *v)).collect();
+        let reference = run_backend(&mut coord0, fp0, "debug", domain, 7, &srefs);
+        for level in LEVELS {
+            let mut coord = Coordinator::with_opt_level(level);
+            let fp = coord.compile_library(name).unwrap();
+            for be in ["debug", "vector"] {
+                let got = run_backend(&mut coord, fp, be, domain, 7, &srefs);
+                assert_fields_match(&reference, &got, 0.0, &format!("{name} O{level} {be}"));
             }
         }
     }
