@@ -33,10 +33,30 @@ step cargo clippy --all-targets -- -D warnings
 if [[ "${1:-}" != "quick" ]]; then
     step cargo build --release
 
+    # Examples are part of the contract: compile-check all of them and
+    # actually execute the quickstart (bind-once/run-many + concurrent
+    # dispatch of one stencil handle, end to end).
+    step cargo build --release --examples
+    step cargo run --release --example quickstart
+
     # Benches and docs must not rot silently: compile-check every bench
     # target and build the docs with warnings denied.
     step cargo bench --no-run
     step env RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+    # `repro run --json` must emit parseable JSON (the machine-readable
+    # output feeding the perf-trajectory tooling).
+    echo
+    echo "=== repro run --json smoke ==="
+    ./target/release/repro run --stencil laplacian --backend vector \
+        --domain 8x8x4 --iters 2 --json > /tmp/gt4rs_run.json
+    if command -v python3 >/dev/null 2>&1; then
+        python3 -m json.tool /tmp/gt4rs_run.json >/dev/null
+        echo "repro run --json: parseable JSON"
+    else
+        grep -q '"execute_ns"' /tmp/gt4rs_run.json
+        echo "repro run --json: python3 missing, structural grep passed"
+    fi
 fi
 
 step cargo test -q

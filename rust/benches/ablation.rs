@@ -158,7 +158,7 @@ fn a4_opt_pass_ablation(domains: &[[usize; 3]], iters: usize, rows: &mut Vec<Row
             for (cname, config) in &configs {
                 let mut ir = stdlib::compile(name).unwrap();
                 PassManager::new(config).run(&mut ir);
-                let mut be = VectorBackend::new();
+                let be = VectorBackend::new();
                 let mut fields = stencil_fields(&ir, domain);
                 let mut calls = 0u64;
                 let sample = bench(iters, || {
@@ -224,7 +224,7 @@ fn a5_fused_vs_materialized(domains: &[[usize; 3]], iters: usize, rows: &mut Vec
             {
                 let mut ir = stdlib::compile(name).unwrap();
                 PassManager::new(&OptConfig::level(level)).run(&mut ir);
-                let mut be = VectorBackend::new();
+                let be = VectorBackend::new();
                 let mut fields = stencil_fields(&ir, domain);
                 let mut calls = 0u64;
                 let sample = bench(iters, || {
@@ -281,7 +281,7 @@ fn a1_pallas_vs_jnp() {
         ] {
             let mut medians = Vec::new();
             for variant in ["pallas", "jnp"] {
-                let mut be =
+                let be =
                     PjrtAotBackend::with_runtime(rt.clone()).with_variant(variant);
                 let mut fields = stencil_fields(ir, domain);
                 let sample = bench(9, || {
@@ -315,11 +315,11 @@ fn a2_jit_compile_cost() {
         let dstr = format!("{}x{}x{}", domain[0], domain[1], domain[2]);
         for name in ["hdiff", "vadv"] {
             let ir = stdlib::compile(name).unwrap();
-            let mut be = xlagen::XlaBackend::new().unwrap();
+            let be = xlagen::XlaBackend::new().unwrap();
             let mut fields = stencil_fields(&ir, domain);
             let scalars: Vec<(&str, f64)> =
                 ir.scalars.iter().map(|s| (s.name.as_str(), 0.3)).collect();
-            let mut run = |be: &mut xlagen::XlaBackend| {
+            let mut run = |be: &xlagen::XlaBackend| {
                 let t0 = Instant::now();
                 let mut refs: Vec<(&str, &mut Storage)> = fields
                     .iter_mut()
@@ -333,8 +333,8 @@ fn a2_jit_compile_cost() {
                 .unwrap();
                 t0.elapsed()
             };
-            let first = run(&mut be);
-            let cached = run(&mut be);
+            let first = run(&be);
+            let cached = run(&be);
             println!(
                 "{dstr:<12} {name:>8} {:>14} {:>14}",
                 fmt_duration(first),

@@ -3,7 +3,9 @@
 //!
 //! Solid lines in the paper = total call time including run-time storage
 //! checks; dashed lines = raw execution. Both are reported here (`total`
-//! vs `exec`); the `overhead` bench isolates the gap.
+//! vs `exec`). With the stencil handle API the full validation runs once
+//! at bind time; the per-call `checks` is the shape re-check — the
+//! `overhead` bench isolates both.
 //!
 //!     cargo bench --bench fig3_hdiff
 
@@ -12,7 +14,6 @@ mod harness;
 
 use gt4rs::baseline;
 use gt4rs::coordinator::Coordinator;
-use gt4rs::storage::Storage;
 use harness::*;
 
 fn main() {
@@ -28,21 +29,30 @@ fn main() {
     for domain in FIG3_DOMAINS {
         let dstr = format!("{}x{}x{}", domain[0], domain[1], domain[2]);
         for be in ["debug", "vector", "xla", "pjrt-aot"] {
-            let mut in_phi = coord.alloc_field(fp, "in_phi", domain).unwrap();
-            let mut coeff = coord.alloc_field(fp, "coeff", domain).unwrap();
-            let mut out = coord.alloc_field(fp, "out_phi", domain).unwrap();
+            let stencil = match coord.stencil_for(fp, be) {
+                Ok(s) => s,
+                Err(_) => {
+                    println!("{dstr:<12} {be:>10} {:>12} {:>12} {:>10}", "n/a", "n/a", 0);
+                    continue;
+                }
+            };
+            let mut in_phi = stencil.alloc_field("in_phi", domain).unwrap();
+            let mut coeff = stencil.alloc_field("coeff", domain).unwrap();
+            let mut out = stencil.alloc_field("out_phi", domain).unwrap();
             fill_storage(&mut in_phi, 1.0);
             coeff.fill(0.025);
 
-            // availability probe (also the JIT warmup)
-            let probe = {
-                let mut refs: Vec<(&str, &mut Storage)> = vec![
-                    ("in_phi", &mut in_phi),
-                    ("coeff", &mut coeff),
-                    ("out_phi", &mut out),
-                ];
-                coord.run(fp, be, &mut refs, &[], domain)
-            };
+            // Bind once (full validation), then an availability probe that
+            // doubles as the JIT warmup.
+            let mut inv = stencil
+                .bind()
+                .field("in_phi", &in_phi)
+                .field("coeff", &coeff)
+                .field("out_phi", &out)
+                .domain(domain)
+                .finish()
+                .unwrap();
+            let probe = inv.run(&mut [&mut in_phi, &mut coeff, &mut out]);
             if probe.is_err() {
                 println!("{dstr:<12} {be:>10} {:>12} {:>12} {:>10}", "n/a", "n/a", 0);
                 continue;
@@ -51,12 +61,7 @@ fn main() {
             let iters = if be == "debug" && domain[0] >= 96 { 3 } else { 9 };
             let mut last_checks = std::time::Duration::ZERO;
             let sample = bench(iters, || {
-                let mut refs: Vec<(&str, &mut Storage)> = vec![
-                    ("in_phi", &mut in_phi),
-                    ("coeff", &mut coeff),
-                    ("out_phi", &mut out),
-                ];
-                let stats = coord.run(fp, be, &mut refs, &[], domain).unwrap();
+                let stats = inv.run(&mut [&mut in_phi, &mut coeff, &mut out]).unwrap();
                 last_checks = stats.checks;
             });
             println!(

@@ -8,7 +8,6 @@ mod harness;
 
 use gt4rs::baseline;
 use gt4rs::coordinator::Coordinator;
-use gt4rs::storage::Storage;
 use harness::*;
 
 fn main() {
@@ -35,16 +34,27 @@ fn main() {
                 );
                 continue;
             }
-            let mut phi = coord.alloc_field(fp, "phi", domain).unwrap();
-            let mut w = coord.alloc_field(fp, "w", domain).unwrap();
+            let stencil = match coord.stencil_for(fp, be) {
+                Ok(s) => s,
+                Err(_) => {
+                    println!("{dstr:<12} {be:>10} {:>12} {:>12} {:>10}", "n/a", "n/a", 0);
+                    continue;
+                }
+            };
+            let mut phi = stencil.alloc_field("phi", domain).unwrap();
+            let mut w = stencil.alloc_field("w", domain).unwrap();
             fill_storage(&mut phi, 2.0);
             fill_storage(&mut w, 3.0);
 
-            let probe = {
-                let mut refs: Vec<(&str, &mut Storage)> =
-                    vec![("phi", &mut phi), ("w", &mut w)];
-                coord.run(fp, be, &mut refs, &[("dtdz", dtdz)], domain)
-            };
+            let mut inv = stencil
+                .bind()
+                .field("phi", &phi)
+                .field("w", &w)
+                .scalar("dtdz", dtdz)
+                .domain(domain)
+                .finish()
+                .unwrap();
+            let probe = inv.run(&mut [&mut phi, &mut w]);
             if probe.is_err() {
                 println!("{dstr:<12} {be:>10} {:>12} {:>12} {:>10}", "n/a", "n/a", 0);
                 continue;
@@ -53,10 +63,7 @@ fn main() {
             let iters = if be == "debug" && domain[0] >= 96 { 3 } else { 9 };
             let mut last_checks = std::time::Duration::ZERO;
             let sample = bench(iters, || {
-                let mut refs: Vec<(&str, &mut Storage)> =
-                    vec![("phi", &mut phi), ("w", &mut w)];
-                let stats =
-                    coord.run(fp, be, &mut refs, &[("dtdz", dtdz)], domain).unwrap();
+                let stats = inv.run(&mut [&mut phi, &mut w]).unwrap();
                 last_checks = stats.checks;
             });
             println!(

@@ -4,25 +4,31 @@
 //! performed at run-time on the memory layout and data type of the
 //! storage arguments").
 //!
+//! Two configurations per (domain, backend) cell:
+//! * `per-call` — the deprecated pre-handle path: every call pays the full
+//!   layout/halo/dtype validation (the paper's solid line);
+//! * `bound` — the stencil handle API: validation happened once at bind
+//!   time, each call only re-checks shapes (the dashed line *without*
+//!   disabling checks).
+//!
 //!     cargo bench --bench overhead
 
 #[path = "harness.rs"]
 mod harness;
 
 use gt4rs::coordinator::Coordinator;
-use gt4rs::storage::Storage;
 use harness::*;
 
 fn main() {
     println!("# FIG3-OVH run-time checks overhead (solid vs dashed, small domains)");
-    println!("# `checks` is the coordinator's directly-measured validation time");
-    println!("# (the paper's is ~1 ms because its checks run in the Python");
-    println!("# interpreter; ours are compiled — the *shape* to verify is that");
-    println!("# the cost is constant in domain size and only matters where the");
-    println!("# execute time is comparably small).");
+    println!("# `per-call checks` = full validation on every call (legacy path);");
+    println!("# `bound checks`    = the BoundInvocation shape re-check. The paper's");
+    println!("# overhead is ~1 ms because its checks run in the Python interpreter;");
+    println!("# ours are compiled — the *shape* to verify is that the cost is");
+    println!("# constant in domain size, and that binding once removes most of it.");
     println!(
-        "{:<12} {:>10} {:>12} {:>12} {:>10}",
-        "domain", "backend", "execute", "checks", "ratio"
+        "{:<12} {:>10} {:>12} {:>16} {:>14} {:>10}",
+        "domain", "backend", "execute", "per-call checks", "bound checks", "ratio"
     );
 
     for domain in [[8, 8, 4], [16, 16, 8], [32, 32, 16], [64, 64, 32]] {
@@ -30,31 +36,72 @@ fn main() {
         for be in ["vector", "xla"] {
             let mut coord = Coordinator::new();
             let fp = coord.compile_library("hdiff").unwrap();
-            let mut in_phi = coord.alloc_field(fp, "in_phi", domain).unwrap();
-            let mut coeff = coord.alloc_field(fp, "coeff", domain).unwrap();
-            let mut out = coord.alloc_field(fp, "out_phi", domain).unwrap();
+            let stencil = match coord.stencil_for(fp, be) {
+                Ok(s) => s,
+                Err(_) => {
+                    println!(
+                        "{dstr:<12} {be:>10} {:>12} {:>16} {:>14} {:>10}",
+                        "n/a", "n/a", "n/a", "n/a"
+                    );
+                    continue;
+                }
+            };
+            let mut in_phi = stencil.alloc_field("in_phi", domain).unwrap();
+            let mut coeff = stencil.alloc_field("coeff", domain).unwrap();
+            let mut out = stencil.alloc_field("out_phi", domain).unwrap();
             fill_storage(&mut in_phi, 1.0);
             coeff.fill(0.025);
 
+            // Legacy per-call path: full validation every call.
+            #[allow(deprecated)]
+            {
+                bench(50, || {
+                    let mut refs: Vec<(&str, &mut gt4rs::storage::Storage)> = vec![
+                        ("in_phi", &mut in_phi),
+                        ("coeff", &mut coeff),
+                        ("out_phi", &mut out),
+                    ];
+                    coord.run(fp, be, &mut refs, &[], domain).unwrap();
+                });
+            }
+            let legacy = coord.metrics.get("hdiff", be).unwrap();
+
+            // Handle path: bind once, run many (fresh coordinator so the
+            // metrics split cleanly). The first call absorbs the one-time
+            // bind validation into its stats; measure from the snapshot
+            // after it so the column is the pure per-call shape re-check.
+            let mut coord2 = Coordinator::new();
+            let fp2 = coord2.compile_library("hdiff").unwrap();
+            let stencil2 = coord2.stencil_for(fp2, be).unwrap();
+            let mut inv = stencil2
+                .bind()
+                .field("in_phi", &in_phi)
+                .field("coeff", &coeff)
+                .field("out_phi", &out)
+                .domain(domain)
+                .finish()
+                .unwrap();
+            inv.run(&mut [&mut in_phi, &mut coeff, &mut out]).unwrap();
+            let bound0 = coord2.metrics.get("hdiff", be).unwrap();
             bench(50, || {
-                let mut refs: Vec<(&str, &mut Storage)> = vec![
-                    ("in_phi", &mut in_phi),
-                    ("coeff", &mut coeff),
-                    ("out_phi", &mut out),
-                ];
-                coord.run(fp, be, &mut refs, &[], domain).unwrap();
+                inv.run(&mut [&mut in_phi, &mut coeff, &mut out]).unwrap();
             });
-            let t = coord.metrics.get("hdiff", be).unwrap();
-            let calls = t.calls as u32;
-            let (exec, checks) = (t.execute / calls, t.checks / calls);
+            let bound = coord2.metrics.get("hdiff", be).unwrap();
+
+            let calls = legacy.calls as u32;
+            let (exec, checks) = (legacy.execute / calls, legacy.checks / calls);
+            let bound_checks =
+                (bound.checks - bound0.checks) / (bound.calls - bound0.calls) as u32;
             println!(
-                "{dstr:<12} {be:>10} {:>12} {:>12} {:>9.4}%",
+                "{dstr:<12} {be:>10} {:>12} {:>16} {:>14} {:>9.4}%",
                 fmt_duration(exec),
                 fmt_duration(checks),
+                fmt_duration(bound_checks),
                 100.0 * checks.as_secs_f64() / exec.as_secs_f64().max(1e-12),
             );
         }
     }
-    println!("# shape check: `checks` column constant across domains; the ratio");
-    println!("# column decays as the domain grows (paper Fig. 3 solid vs dashed).");
+    println!("# shape check: `per-call checks` constant across domains; `bound");
+    println!("# checks` at least an order of magnitude below it; the ratio column");
+    println!("# decays as the domain grows (paper Fig. 3 solid vs dashed).");
 }

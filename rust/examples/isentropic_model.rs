@@ -2,7 +2,9 @@
 //! paper's Tasmania analog — run on a real small workload, proving all
 //! layers compose: GTScript-RS sources → analysis pipeline → backends
 //! (including the JAX/Pallas AOT tier) inside a multi-stencil time loop
-//! with boundary conditions and conservation diagnostics.
+//! with boundary conditions and conservation diagnostics. The driver
+//! binds its three stencil invocations once at construction and reuses
+//! them every step (bind-once/run-many).
 //!
 //!     cargo run --release --example isentropic_model [steps] [backend]
 //!

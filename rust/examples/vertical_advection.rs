@@ -2,14 +2,14 @@
 //!
 //! Demonstrates the sequential `computation(FORWARD/BACKWARD)` machinery:
 //! a Thomas solve per column, validated against the hand-written native
-//! solver and across backends, plus a physical sanity check (advection of
-//! a vertical profile by a constant updraft).
+//! solver and across backends (via `Stencil` handles), plus a physical
+//! sanity check (advection of a vertical profile by a constant updraft).
 //!
 //!     cargo run --release --example vertical_advection
 
 use anyhow::Result;
 use gt4rs::baseline;
-use gt4rs::coordinator::Coordinator;
+use gt4rs::coordinator::{Coordinator, Stencil};
 use gt4rs::storage::Storage;
 
 fn main() -> Result<()> {
@@ -18,9 +18,9 @@ fn main() -> Result<()> {
     let fp = coord.compile_library("vadv")?;
     let dtdz = 0.3;
 
-    let make_fields = |coord: &mut Coordinator| -> Result<(Storage, Storage)> {
-        let mut phi = coord.alloc_field(fp, "phi", domain)?;
-        let mut w = coord.alloc_field(fp, "w", domain)?;
+    let make_fields = |stencil: &Stencil| -> Result<(Storage, Storage)> {
+        let mut phi = stencil.alloc_field("phi", domain)?;
+        let mut w = stencil.alloc_field("w", domain)?;
         let [ni, nj, nk] = domain;
         for i in 0..ni as i64 {
             for j in 0..nj as i64 {
@@ -36,16 +36,30 @@ fn main() -> Result<()> {
     };
 
     // Native reference.
-    let (mut phi_ref, w) = make_fields(&mut coord)?;
+    let reference_stencil = coord.stencil_for(fp, "debug")?;
+    let (mut phi_ref, w) = make_fields(&reference_stencil)?;
     baseline::vadv_native(&mut phi_ref, &w, dtdz, domain);
 
     for be in ["debug", "vector", "xla", "pjrt-aot"] {
-        let (mut phi, mut wf) = make_fields(&mut coord)?;
-        let result = {
-            let mut refs: Vec<(&str, &mut Storage)> =
-                vec![("phi", &mut phi), ("w", &mut wf)];
-            coord.run(fp, be, &mut refs, &[("dtdz", dtdz)], domain)
+        let stencil = match coord.stencil_for(fp, be) {
+            Ok(s) => s,
+            Err(e) => {
+                println!(
+                    "vadv {be:<10} unavailable: {}",
+                    format!("{e:#}").lines().next().unwrap_or("")
+                );
+                continue;
+            }
         };
+        let (mut phi, mut wf) = make_fields(&stencil)?;
+        let result = stencil
+            .bind()
+            .field("phi", &phi)
+            .field("w", &wf)
+            .scalar("dtdz", dtdz)
+            .domain(domain)
+            .finish()?
+            .run(&mut [&mut phi, &mut wf]);
         match result {
             Ok(stats) => {
                 let d = phi_ref.max_abs_diff(&phi);
@@ -75,7 +89,7 @@ fn main() -> Result<()> {
         }
         num / den
     };
-    let (phi0, _) = make_fields(&mut coord)?;
+    let (phi0, _) = make_fields(&reference_stencil)?;
     let before = center_of_mass(&phi0);
     let after = center_of_mass(&phi_ref);
     println!("pulse center of mass: {before:.3} -> {after:.3} (w > 0, must rise)");

@@ -20,17 +20,28 @@ use super::{Backend, StencilArgs};
 use crate::dsl::ast::IterationPolicy;
 use crate::ir::implir::StencilIr;
 use anyhow::Result;
+use std::sync::{Arc, RwLock};
 
 #[derive(Default)]
 pub struct DebugBackend {
-    /// Programs keyed by stencil fingerprint (backend instances are shared
-    /// across stencils by the coordinator).
-    programs: std::collections::HashMap<u64, Program>,
+    /// Slot-resolved programs keyed by stencil fingerprint (one backend
+    /// instance is shared across stencils and across threads; the lock is
+    /// only held for cache lookup/insert, never during execution).
+    programs: RwLock<std::collections::HashMap<u64, Arc<Program>>>,
 }
 
 impl DebugBackend {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    fn program(&self, ir: &StencilIr) -> Result<Arc<Program>> {
+        if let Some(p) = self.programs.read().unwrap().get(&ir.fingerprint) {
+            return Ok(p.clone());
+        }
+        let compiled = Arc::new(Program::compile(ir)?);
+        let mut programs = self.programs.write().unwrap();
+        Ok(programs.entry(ir.fingerprint).or_insert(compiled).clone())
     }
 }
 
@@ -126,19 +137,16 @@ impl Backend for DebugBackend {
         "debug"
     }
 
-    fn prepare(&mut self, ir: &StencilIr) -> Result<()> {
-        if !self.programs.contains_key(&ir.fingerprint) {
-            self.programs.insert(ir.fingerprint, Program::compile(ir)?);
-        }
+    fn prepare(&self, ir: &StencilIr) -> Result<()> {
+        self.program(ir)?;
         Ok(())
     }
 
-    fn run(&mut self, ir: &StencilIr, args: &mut StencilArgs) -> Result<()> {
-        self.prepare(ir)?;
-        let program = &self.programs[&ir.fingerprint];
-        let mut env = Env::build(program, args.fields, args.scalars, args.domain)?;
-        run_program(program, &mut env);
-        env.restore(program, args.fields);
+    fn run(&self, ir: &StencilIr, args: &mut StencilArgs) -> Result<()> {
+        let program = self.program(ir)?;
+        let mut env = Env::build(&program, args.fields, args.scalars, args.domain)?;
+        run_program(&program, &mut env);
+        env.restore(&program, args.fields);
         Ok(())
     }
 }
@@ -158,7 +166,7 @@ mod tests {
         domain: [usize; 3],
     ) {
         let ir = compile_source(src, name, &BTreeMap::new()).unwrap();
-        let mut be = DebugBackend::new();
+        let be = DebugBackend::new();
         let mut args = StencilArgs { fields, scalars, domain };
         be.run(&ir, &mut args).unwrap();
     }
@@ -354,7 +362,7 @@ mod tests {
         let mk = || Storage::from_fn_extended([4, 4, 2], 2, |i, j, k| {
             (i * 7 + j * 3 + k) as f64 * 0.25
         });
-        let mut run_one = |ir: &crate::ir::implir::StencilIr| {
+        let run_one = |ir: &crate::ir::implir::StencilIr| {
             let mut a = mk();
             let mut out = Storage::with_horizontal_halo([4, 4, 2], 0);
             let mut refs: Vec<(&str, &mut Storage)> =

@@ -34,17 +34,27 @@ pub struct StencilArgs<'a, 'b> {
 }
 
 /// A stencil execution backend.
-pub trait Backend {
+///
+/// Backends execute through `&self` and are `Send + Sync`: one instance is
+/// shared by every [`crate::coordinator::Stencil`] handle bound to it, and
+/// handles dispatch concurrently from many threads. Mutable state — the
+/// per-fingerprint program/executable caches, buffer pools, staging
+/// buffers — lives behind interior mutability (`RwLock`/`Mutex`) inside
+/// each backend. The interpreting backends (`debug`, `vector`) run fully
+/// in parallel; the PJRT-backed backends (`xla`, `pjrt-aot`) serialize
+/// calls on an internal lock around their client.
+pub trait Backend: Send + Sync {
     fn name(&self) -> &'static str;
 
-    /// One-time compilation/codegen for a stencil (cached by the
-    /// coordinator); optional — `run` must self-prepare when skipped.
-    fn prepare(&mut self, _ir: &StencilIr) -> Result<()> {
+    /// One-time compilation/codegen for a stencil (memoized per
+    /// fingerprint inside the backend); optional — `run` must self-prepare
+    /// when skipped.
+    fn prepare(&self, _ir: &StencilIr) -> Result<()> {
         Ok(())
     }
 
     /// Execute the stencil over `args.domain`.
-    fn run(&mut self, ir: &StencilIr, args: &mut StencilArgs) -> Result<()>;
+    fn run(&self, ir: &StencilIr, args: &mut StencilArgs) -> Result<()>;
 }
 
 /// Names of all built-in backends, in the tier order of Fig. 3.

@@ -24,8 +24,8 @@ use crate::ir::implir::{Intent, StencilIr};
 use crate::runtime::{Arg, Executable, Runtime};
 use anyhow::{anyhow, Context, Result};
 use std::collections::HashMap;
-use std::path::PathBuf;
-use std::rc::Rc;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
 
 /// Environment variable overriding the artifact directory.
 pub const ARTIFACTS_ENV: &str = "GT4RS_ARTIFACTS";
@@ -48,35 +48,47 @@ fn default_artifacts_dir() -> PathBuf {
     }
 }
 
+/// The artifact directory and variant are fixed at construction; all
+/// mutable state (PJRT runtime, executable cache, staging buffers) lives
+/// behind one `Mutex`, so calls through a shared instance serialize on
+/// the client.
 pub struct PjrtAotBackend {
-    runtime: Runtime,
     dir: PathBuf,
-    /// `(artifact key, domain)` → executable.
-    cache: HashMap<(String, [usize; 3]), Rc<Executable>>,
-    /// Reused host staging buffers (see EXPERIMENTS.md §Perf).
-    staging: Vec<Vec<f64>>,
     /// Optional variant suffix (e.g. "pallas" vs "jnp" lowering).
     pub variant: Option<String>,
+    inner: Mutex<AotInner>,
+}
+
+// SAFETY: the backend's own state (cache, staging) is serialized behind
+// `self.inner.lock()`, and every PJRT FFI call additionally funnels
+// through the process-wide `runtime::pjrt_lock`, so instances sharing
+// one `Runtime` clone can never touch the client concurrently. See the
+// full argument on `xlagen::XlaBackend`.
+unsafe impl Send for PjrtAotBackend {}
+unsafe impl Sync for PjrtAotBackend {}
+
+struct AotInner {
+    runtime: Runtime,
+    /// `(artifact key, domain)` → executable.
+    cache: HashMap<(String, [usize; 3]), Arc<Executable>>,
+    /// Reused host staging buffers (see EXPERIMENTS.md §Perf).
+    staging: Vec<Vec<f64>>,
 }
 
 impl PjrtAotBackend {
     pub fn new() -> Result<PjrtAotBackend> {
-        Ok(PjrtAotBackend {
-            runtime: Runtime::cpu()?,
-            dir: default_artifacts_dir(),
-            cache: HashMap::new(),
-            staging: Vec::new(),
-            variant: None,
-        })
+        Ok(PjrtAotBackend::with_runtime(Runtime::cpu()?))
     }
 
     pub fn with_runtime(runtime: Runtime) -> PjrtAotBackend {
         PjrtAotBackend {
-            runtime,
             dir: default_artifacts_dir(),
-            cache: HashMap::new(),
-            staging: Vec::new(),
             variant: None,
+            inner: Mutex::new(AotInner {
+                runtime,
+                cache: HashMap::new(),
+                staging: Vec::new(),
+            }),
         }
     }
 
@@ -104,14 +116,23 @@ impl PjrtAotBackend {
     pub fn available(&self, stencil: &str, domain: [usize; 3]) -> bool {
         self.artifact_path(stencil, domain).is_file()
     }
+}
 
-    fn executable(&mut self, stencil: &str, domain: [usize; 3]) -> Result<Rc<Executable>> {
+impl AotInner {
+    // Executables are Arc'd for cheap cache hand-out; they never leave
+    // the mutex (see the Send/Sync safety notes above).
+    #[allow(clippy::arc_with_non_send_sync)]
+    fn executable(
+        &mut self,
+        stencil: &str,
+        domain: [usize; 3],
+        path: &Path,
+    ) -> Result<Arc<Executable>> {
         let key = (stencil.to_string(), domain);
         if let Some(e) = self.cache.get(&key) {
             return Ok(e.clone());
         }
-        let path = self.artifact_path(stencil, domain);
-        let exe = Rc::new(self.runtime.load_hlo_text(&path).with_context(|| {
+        let exe = Arc::new(self.runtime.load_hlo_text(path).with_context(|| {
             format!(
                 "no AOT artifact for stencil `{stencil}` at domain {domain:?} — run `make artifacts` (looked at {})",
                 path.display()
@@ -120,16 +141,10 @@ impl PjrtAotBackend {
         self.cache.insert(key, exe.clone());
         Ok(exe)
     }
-}
 
-impl Backend for PjrtAotBackend {
-    fn name(&self) -> &'static str {
-        "pjrt-aot"
-    }
-
-    fn run(&mut self, ir: &StencilIr, args: &mut StencilArgs) -> Result<()> {
+    fn run(&mut self, ir: &StencilIr, args: &mut StencilArgs, path: &Path) -> Result<()> {
         let domain = args.domain;
-        let exe = self.executable(&ir.name, domain)?;
+        let exe = self.executable(&ir.name, domain, path)?;
 
         // Stage inputs with exactly the xla-backend geometry; staging
         // buffers are reused across calls.
@@ -195,6 +210,17 @@ impl Backend for PjrtAotBackend {
     }
 }
 
+impl Backend for PjrtAotBackend {
+    fn name(&self) -> &'static str {
+        "pjrt-aot"
+    }
+
+    fn run(&self, ir: &StencilIr, args: &mut StencilArgs) -> Result<()> {
+        let path = self.artifact_path(&ir.name, args.domain);
+        self.inner.lock().unwrap().run(ir, args, &path)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -225,7 +251,7 @@ mod tests {
             &std::collections::BTreeMap::new(),
         )
         .unwrap();
-        let mut be = PjrtAotBackend::new().unwrap();
+        let be = PjrtAotBackend::new().unwrap();
         let mut a = crate::storage::Storage::with_halo([2, 2, 2], 0);
         let mut b = crate::storage::Storage::with_halo([2, 2, 2], 0);
         let mut refs: Vec<(&str, &mut crate::storage::Storage)> =

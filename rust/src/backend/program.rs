@@ -211,6 +211,60 @@ impl Env {
     }
 }
 
+/// Validate one parameter storage's *geometry* (shape covers the domain,
+/// halo covers the required extent, dtype matches) against its declaration.
+/// Works from a [`StorageInfo`] alone so the bind-time validation of
+/// [`crate::coordinator::BoundInvocation`] shares this exact code path.
+pub fn validate_field(
+    f: &crate::ir::implir::FieldInfo,
+    info: &StorageInfo,
+    domain: [usize; 3],
+) -> Result<()> {
+    let shape = info.shape;
+    for ax in 0..3 {
+        if shape[ax] < domain[ax] {
+            bail!(
+                "field `{}` shape {:?} smaller than domain {:?}",
+                f.name,
+                shape,
+                domain
+            );
+        }
+    }
+    let halo = info.halo;
+    let need = f.extent;
+    let have = [
+        (halo[0].0 as i32, halo[0].1 as i32),
+        (halo[1].0 as i32, halo[1].1 as i32),
+        (halo[2].0 as i32, halo[2].1 as i32),
+    ];
+    let needs = [
+        ((-need.i.0), need.i.1),
+        ((-need.j.0), need.j.1),
+        ((-need.k.0), need.k.1),
+    ];
+    for ax in 0..3 {
+        if have[ax].0 < needs[ax].0 || have[ax].1 < needs[ax].1 {
+            bail!(
+                "field `{}` halo {:?} insufficient for required extent {} (axis {})",
+                f.name,
+                halo,
+                need,
+                ax
+            );
+        }
+    }
+    if info.dtype != f.dtype {
+        bail!(
+            "field `{}` dtype {} does not match declared {}",
+            f.name,
+            info.dtype,
+            f.dtype
+        );
+    }
+    Ok(())
+}
+
 /// Validate that each parameter storage provides the halo the IR requires
 /// and covers the domain — the run-time checks responsible for the paper's
 /// Fig. 3 constant per-call overhead (solid vs dashed lines).
@@ -225,48 +279,7 @@ pub fn validate_args(
             .iter()
             .find(|(n, _)| *n == f.name)
             .ok_or_else(|| anyhow::anyhow!("missing field argument `{}`", f.name))?;
-        let shape = storage.info.shape;
-        for ax in 0..3 {
-            if shape[ax] < domain[ax] {
-                bail!(
-                    "field `{}` shape {:?} smaller than domain {:?}",
-                    f.name,
-                    shape,
-                    domain
-                );
-            }
-        }
-        let halo = storage.info.halo;
-        let need = f.extent;
-        let have = [
-            (halo[0].0 as i32, halo[0].1 as i32),
-            (halo[1].0 as i32, halo[1].1 as i32),
-            (halo[2].0 as i32, halo[2].1 as i32),
-        ];
-        let needs = [
-            ((-need.i.0), need.i.1),
-            ((-need.j.0), need.j.1),
-            ((-need.k.0), need.k.1),
-        ];
-        for ax in 0..3 {
-            if have[ax].0 < needs[ax].0 || have[ax].1 < needs[ax].1 {
-                bail!(
-                    "field `{}` halo {:?} insufficient for required extent {} (axis {})",
-                    f.name,
-                    halo,
-                    need,
-                    ax
-                );
-            }
-        }
-        if storage.info.dtype != f.dtype {
-            bail!(
-                "field `{}` dtype {} does not match declared {}",
-                f.name,
-                storage.info.dtype,
-                f.dtype
-            );
-        }
+        validate_field(f, &storage.info, domain)?;
     }
     for s in &ir.scalars {
         if !scalars.iter().any(|(n, _)| *n == s.name) {

@@ -40,15 +40,21 @@ use crate::dsl::ast::{BinOp, IterationPolicy};
 use crate::ir::implir::{StencilIr, StorageClass};
 use anyhow::Result;
 use std::collections::HashMap;
+use std::sync::{Arc, Mutex, RwLock};
 
 #[derive(Default)]
 pub struct VectorBackend {
-    /// Programs keyed by stencil fingerprint (backend instances are shared
-    /// across stencils by the coordinator).
-    programs: std::collections::HashMap<u64, Program>,
+    /// Programs keyed by stencil fingerprint (one backend instance is
+    /// shared across stencils and across concurrently-dispatching threads;
+    /// the locks are held only for cache lookup/insert).
+    programs: RwLock<std::collections::HashMap<u64, Arc<Program>>>,
     /// Fused loop-nest programs, compiled on demand for `fused` IRs.
-    fused: std::collections::HashMap<u64, FusedProgram>,
-    pool: Pool,
+    fused: RwLock<std::collections::HashMap<u64, Arc<FusedProgram>>>,
+    /// Shared buffer-pool slot. A run *checks the pool out* (swapping an
+    /// empty one in) and merges it back afterwards, so concurrent runs
+    /// never contend while executing — a second thread simply starts from
+    /// an empty pool and contributes its buffers on the way out.
+    pool: Mutex<Pool>,
 }
 
 impl VectorBackend {
@@ -59,9 +65,41 @@ impl VectorBackend {
     /// Buffer-pool traffic since the last call (and reset): how many region
     /// buffers were requested and how many required a fresh allocation.
     /// The ablation bench uses this to show the fused path allocating no
-    /// per-expression-node buffers.
-    pub fn take_pool_stats(&mut self) -> PoolStats {
-        std::mem::take(&mut self.pool.stats)
+    /// per-expression-node buffers. Counts cover completed runs; pools
+    /// checked out by in-flight concurrent runs merge in when they finish.
+    pub fn take_pool_stats(&self) -> PoolStats {
+        std::mem::take(&mut self.pool.lock().unwrap().stats)
+    }
+
+    fn programs_for(
+        &self,
+        ir: &StencilIr,
+    ) -> Result<(Arc<Program>, Option<Arc<FusedProgram>>)> {
+        let program = {
+            let cached = self.programs.read().unwrap().get(&ir.fingerprint).cloned();
+            match cached {
+                Some(p) => p,
+                None => {
+                    let compiled = Arc::new(Program::compile(ir)?);
+                    let mut programs = self.programs.write().unwrap();
+                    programs.entry(ir.fingerprint).or_insert(compiled).clone()
+                }
+            }
+        };
+        let fused = if ir.fused {
+            let cached = self.fused.read().unwrap().get(&ir.fingerprint).cloned();
+            Some(match cached {
+                Some(f) => f,
+                None => {
+                    let compiled = Arc::new(FusedProgram::compile(&program));
+                    let mut fused = self.fused.write().unwrap();
+                    fused.entry(ir.fingerprint).or_insert(compiled).clone()
+                }
+            })
+        } else {
+            None
+        };
+        Ok((program, fused))
     }
 }
 
@@ -81,6 +119,9 @@ pub(crate) struct Pool {
     stats: PoolStats,
 }
 
+/// Max free buffers retained by a pool (shared by `put` and `absorb`).
+const POOL_FREE_CAP: usize = 48;
+
 impl Pool {
     pub(crate) fn take(&mut self, n: usize) -> Vec<f64> {
         self.stats.taken += 1;
@@ -97,8 +138,21 @@ impl Pool {
         }
     }
     pub(crate) fn put(&mut self, b: Vec<f64>) {
-        if self.free.len() < 48 {
+        if self.free.len() < POOL_FREE_CAP {
             self.free.push(b);
+        }
+    }
+
+    /// Merge a checked-out pool back into the shared slot: stats are
+    /// summed, free buffers are kept up to the shared cap.
+    fn absorb(&mut self, mut other: Pool) {
+        self.stats.taken += other.stats.taken;
+        self.stats.allocated += other.stats.allocated;
+        while self.free.len() < POOL_FREE_CAP {
+            match other.free.pop() {
+                Some(b) => self.free.push(b),
+                None => break,
+            }
         }
     }
 }
@@ -594,30 +648,27 @@ impl Backend for VectorBackend {
         "vector"
     }
 
-    fn prepare(&mut self, ir: &StencilIr) -> Result<()> {
-        if !self.programs.contains_key(&ir.fingerprint) {
-            self.programs.insert(ir.fingerprint, Program::compile(ir)?);
-        }
-        if ir.fused && !self.fused.contains_key(&ir.fingerprint) {
-            let fp = FusedProgram::compile(&self.programs[&ir.fingerprint]);
-            self.fused.insert(ir.fingerprint, fp);
-        }
+    fn prepare(&self, ir: &StencilIr) -> Result<()> {
+        self.programs_for(ir)?;
         Ok(())
     }
 
-    fn run(&mut self, ir: &StencilIr, args: &mut StencilArgs) -> Result<()> {
-        self.prepare(ir)?;
-        let program = &self.programs[&ir.fingerprint];
+    fn run(&self, ir: &StencilIr, args: &mut StencilArgs) -> Result<()> {
+        let (program, fused) = self.programs_for(ir)?;
         // Demoted temporaries are never materialized as storages here —
         // every access is served from backend-local buffers.
         let mut env =
-            Env::build_with(program, args.fields, args.scalars, args.domain, false)?;
-        if let Some(fp) = self.fused.get(&ir.fingerprint) {
-            super::fused::run_program(fp, program, &mut env, &mut self.pool);
+            Env::build_with(&program, args.fields, args.scalars, args.domain, false)?;
+        // Check the shared pool out for the duration of the run (no lock
+        // held while executing; concurrent runs get an empty pool).
+        let mut pool = std::mem::take(&mut *self.pool.lock().unwrap());
+        if let Some(fp) = &fused {
+            super::fused::run_program(fp, &program, &mut env, &mut pool);
         } else {
-            run_program(program, &mut env, &mut self.pool);
+            run_program(&program, &mut env, &mut pool);
         }
-        env.restore(program, args.fields);
+        self.pool.lock().unwrap().absorb(pool);
+        env.restore(&program, args.fields);
         Ok(())
     }
 }
@@ -674,7 +725,7 @@ mod tests {
                 .map(|n| n.as_str())
                 .zip(d_fields.iter_mut())
                 .collect();
-            let mut be = DebugBackend::new();
+            let be = DebugBackend::new();
             be.run(&ir, &mut StencilArgs { fields: &mut refs, scalars: &scalars, domain })
                 .unwrap();
         }
@@ -684,7 +735,7 @@ mod tests {
                 .map(|n| n.as_str())
                 .zip(v_fields.iter_mut())
                 .collect();
-            let mut be = VectorBackend::new();
+            let be = VectorBackend::new();
             be.run(&ir, &mut StencilArgs { fields: &mut refs, scalars: &scalars, domain })
                 .unwrap();
         }
@@ -694,7 +745,7 @@ mod tests {
                 .map(|n| n.as_str())
                 .zip(o_fields.iter_mut())
                 .collect();
-            let mut be = VectorBackend::new();
+            let be = VectorBackend::new();
             be.run(&ir_opt, &mut StencilArgs { fields: &mut refs, scalars: &scalars, domain })
                 .unwrap();
         }
@@ -704,7 +755,7 @@ mod tests {
                 .map(|n| n.as_str())
                 .zip(f_fields.iter_mut())
                 .collect();
-            let mut be = VectorBackend::new();
+            let be = VectorBackend::new();
             be.run(&ir_fused, &mut StencilArgs { fields: &mut refs, scalars: &scalars, domain })
                 .unwrap();
         }
@@ -909,7 +960,7 @@ mod tests {
                     (i * 3 + j * 5 + k * 7) as f64 * 0.125
                 }))
                 .collect();
-            let mut be = VectorBackend::new();
+            let be = VectorBackend::new();
             {
                 let mut refs: Vec<(&str, &mut Storage)> = names
                     .iter()

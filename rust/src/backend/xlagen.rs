@@ -20,7 +20,7 @@ use crate::ir::implir::{Extent, Intent, StencilIr, StorageClass};
 use crate::runtime::{Arg, Executable, Runtime};
 use anyhow::{anyhow, bail, Result};
 use std::collections::{HashMap, HashSet};
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 /// Geometry of a field's value tensor: `lo` is the signed offset of the
 /// tensor's first element in domain coordinates, `dims` its shape.
@@ -563,47 +563,75 @@ pub fn build_computation(ir: &StencilIr, domain: [usize; 3]) -> Result<xla::XlaC
 }
 
 /// The backend: JIT codegen + per-(fingerprint, domain) executable cache.
+///
+/// All mutable state — the PJRT runtime, the executable cache and the
+/// reused staging buffers — lives behind one `Mutex`, so calls through a
+/// shared instance serialize on the client (the paper's JIT backends are
+/// single-queue too; concurrent *dispatch* scalability is the interpreting
+/// backends' job).
 pub struct XlaBackend {
+    inner: Mutex<XlaInner>,
+}
+
+// SAFETY: the backend's own state (cache, staging) is serialized behind
+// `self.inner.lock()`, and every PJRT FFI call — client creation,
+// compilation, execution — additionally funnels through the
+// *process-wide* lock in `runtime::pjrt_lock`, so even two backend
+// instances sharing one `Runtime` clone (e.g. via `with_runtime`) can
+// never touch the client concurrently. The client handle is an `Arc`
+// (atomic refcounts), no reference to the inner state escapes the
+// locks, and the Rust `xla` bindings are only conservatively
+// `!Send`/`!Sync` at the FFI boundary.
+unsafe impl Send for XlaBackend {}
+unsafe impl Sync for XlaBackend {}
+
+struct XlaInner {
     runtime: Runtime,
-    cache: HashMap<(u64, [usize; 3]), Rc<Executable>>,
+    cache: HashMap<(u64, [usize; 3]), Arc<Executable>>,
     /// Reused host staging buffers (perf: avoids ~MBs of fresh allocation
     /// per call at large domains — EXPERIMENTS.md §Perf).
     staging: Vec<Vec<f64>>,
     /// Count of compilations actually performed (cache instrumentation).
-    pub compilations: usize,
+    compilations: usize,
 }
 
 impl XlaBackend {
     pub fn new() -> Result<XlaBackend> {
-        Ok(XlaBackend {
-            runtime: Runtime::cpu()?,
-            cache: HashMap::new(),
-            staging: Vec::new(),
-            compilations: 0,
-        })
+        Ok(XlaBackend::with_runtime(Runtime::cpu()?))
     }
 
     /// Create sharing an existing PJRT runtime.
     pub fn with_runtime(runtime: Runtime) -> XlaBackend {
-        XlaBackend { runtime, cache: HashMap::new(), staging: Vec::new(), compilations: 0 }
+        XlaBackend {
+            inner: Mutex::new(XlaInner {
+                runtime,
+                cache: HashMap::new(),
+                staging: Vec::new(),
+                compilations: 0,
+            }),
+        }
     }
 
-    fn executable(&mut self, ir: &StencilIr, domain: [usize; 3]) -> Result<Rc<Executable>> {
+    /// Count of compilations actually performed (cache instrumentation).
+    pub fn compilations(&self) -> usize {
+        self.inner.lock().unwrap().compilations
+    }
+}
+
+impl XlaInner {
+    // Executables are Arc'd for cheap cache hand-out; they never leave
+    // the mutex (see the Send/Sync safety notes above).
+    #[allow(clippy::arc_with_non_send_sync)]
+    fn executable(&mut self, ir: &StencilIr, domain: [usize; 3]) -> Result<Arc<Executable>> {
         let key = (ir.fingerprint, domain);
         if let Some(e) = self.cache.get(&key) {
             return Ok(e.clone());
         }
         let comp = build_computation(ir, domain)?;
-        let exe = Rc::new(self.runtime.compile(&comp)?);
+        let exe = Arc::new(self.runtime.compile(&comp)?);
         self.compilations += 1;
         self.cache.insert(key, exe.clone());
         Ok(exe)
-    }
-}
-
-impl Backend for XlaBackend {
-    fn name(&self) -> &'static str {
-        "xla"
     }
 
     fn run(&mut self, ir: &StencilIr, args: &mut StencilArgs) -> Result<()> {
@@ -655,6 +683,16 @@ impl Backend for XlaBackend {
             oi += 1;
         }
         Ok(())
+    }
+}
+
+impl Backend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn run(&self, ir: &StencilIr, args: &mut StencilArgs) -> Result<()> {
+        self.inner.lock().unwrap().run(ir, args)
     }
 }
 
@@ -849,7 +887,7 @@ mod tests {
             &BTreeMap::new(),
         )
         .unwrap();
-        let mut be = XlaBackend::new().unwrap();
+        let be = XlaBackend::new().unwrap();
         let domain = [4, 4, 2];
         for _ in 0..3 {
             let mut a = Storage::with_halo(domain, 0);
@@ -858,7 +896,7 @@ mod tests {
             be.run(&ir, &mut StencilArgs { fields: &mut refs, scalars: &[], domain })
                 .unwrap();
         }
-        assert_eq!(be.compilations, 1);
+        assert_eq!(be.compilations(), 1);
         // new domain -> one more compilation
         let domain2 = [5, 4, 2];
         let mut a = Storage::with_halo(domain2, 0);
@@ -866,6 +904,6 @@ mod tests {
         let mut refs: Vec<(&str, &mut Storage)> = vec![("a", &mut a), ("b", &mut b)];
         be.run(&ir, &mut StencilArgs { fields: &mut refs, scalars: &[], domain: domain2 })
             .unwrap();
-        assert_eq!(be.compilations, 2);
+        assert_eq!(be.compilations(), 2);
     }
 }

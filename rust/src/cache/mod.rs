@@ -20,11 +20,16 @@ use crate::ir::implir::StencilIr;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 /// In-memory cache of analyzed stencils keyed by fingerprint.
+///
+/// Entries are handed out as `Arc<StencilIr>`: a cache hit is a refcount
+/// bump, never a deep copy of the IR, and every [`crate::coordinator::Stencil`]
+/// handle compiled from the same definition shares one analyzed artifact.
 #[derive(Default)]
 pub struct StencilCache {
-    by_fingerprint: HashMap<u64, StencilIr>,
+    by_fingerprint: HashMap<u64, Arc<StencilIr>>,
     pub hits: usize,
     pub misses: usize,
 }
@@ -39,15 +44,15 @@ impl StencilCache {
         &mut self,
         fingerprint: u64,
         f: impl FnOnce() -> Result<StencilIr>,
-    ) -> Result<&StencilIr> {
+    ) -> Result<Arc<StencilIr>> {
         if self.by_fingerprint.contains_key(&fingerprint) {
             self.hits += 1;
         } else {
             self.misses += 1;
             let ir = f()?;
-            self.by_fingerprint.insert(fingerprint, ir);
+            self.by_fingerprint.insert(fingerprint, Arc::new(ir));
         }
-        Ok(&self.by_fingerprint[&fingerprint])
+        Ok(self.by_fingerprint[&fingerprint].clone())
     }
 
     pub fn len(&self) -> usize {
@@ -125,6 +130,16 @@ mod tests {
         assert_eq!(cache.hits, 1);
         assert_eq!(cache.misses, 1);
         assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn hits_share_one_arc_no_deep_clone() {
+        let ir = compile_source(SRC, "c", &BTreeMap::new()).unwrap();
+        let fp = ir.fingerprint;
+        let mut cache = StencilCache::new();
+        let a = cache.get_or_insert(fp, || Ok(ir)).unwrap();
+        let b = cache.get_or_insert(fp, || panic!("recompile")).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "cache hit must not copy the IR");
     }
 
     #[test]

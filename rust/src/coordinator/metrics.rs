@@ -4,8 +4,13 @@
 //! run-time storage validation responsible for the paper's constant
 //! per-call overhead, Fig. 3 solid-vs-dashed) and *execute* time, so the
 //! overhead experiment is a first-class query.
+//!
+//! [`SharedMetrics`] is the thread-safe handle to one registry: every
+//! [`crate::coordinator::Stencil`] cloned off a coordinator records into
+//! the same registry, from any thread.
 
 use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 #[derive(Debug, Default, Clone, Copy)]
@@ -90,6 +95,45 @@ impl Metrics {
     }
 }
 
+/// Thread-safe, clonable handle to one [`Metrics`] registry. The
+/// coordinator owns one and stamps a clone into every [`Stencil`] handle
+/// it hands out, so timings recorded by concurrent dispatches all land in
+/// the same place.
+///
+/// [`Stencil`]: crate::coordinator::Stencil
+#[derive(Debug, Default, Clone)]
+pub struct SharedMetrics(Arc<Mutex<Metrics>>);
+
+impl SharedMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, stencil: &str, backend: &str, checks: Duration, execute: Duration) {
+        self.0.lock().unwrap().record(stencil, backend, checks, execute);
+    }
+
+    /// Timing for a `(stencil, backend)` pair ([`Timing`] is `Copy`).
+    pub fn get(&self, stencil: &str, backend: &str) -> Option<Timing> {
+        self.0.lock().unwrap().get(stencil, backend).copied()
+    }
+
+    /// Human-readable report table.
+    pub fn report(&self) -> String {
+        self.0.lock().unwrap().report()
+    }
+
+    /// Snapshot of every `((stencil, backend), timing)` entry.
+    pub fn entries(&self) -> Vec<((String, String), Timing)> {
+        self.0
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, t)| (k.clone(), *t))
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -110,5 +154,27 @@ mod tests {
     fn missing_entry_is_none() {
         let m = Metrics::new();
         assert!(m.get("x", "y").is_none());
+    }
+
+    #[test]
+    fn shared_metrics_aggregate_across_clones_and_threads() {
+        let shared = SharedMetrics::new();
+        let clones: Vec<SharedMetrics> = (0..4).map(|_| shared.clone()).collect();
+        std::thread::scope(|s| {
+            for m in &clones {
+                s.spawn(move || {
+                    m.record(
+                        "hdiff",
+                        "vector",
+                        Duration::from_micros(1),
+                        Duration::from_micros(10),
+                    );
+                });
+            }
+        });
+        let t = shared.get("hdiff", "vector").unwrap();
+        assert_eq!(t.calls, 4);
+        assert_eq!(t.execute, Duration::from_micros(40));
+        assert_eq!(shared.entries().len(), 1);
     }
 }

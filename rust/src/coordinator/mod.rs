@@ -1,34 +1,47 @@
-//! The coordinator: the user-facing engine tying frontend, cache, backends
-//! and run-time checks together (the role `gtscript.stencil(...)` +
-//! generated stencil objects play in GT4Py).
+//! The coordinator: the compilation front door tying frontend, cache,
+//! optimizer and backends together — and the factory for [`Stencil`]
+//! handles, the user-facing artifact (the object `gtscript.stencil(...)`
+//! returns in GT4Py).
 //!
 //! Responsibilities:
 //! * compile sources (or library stencils) through the pipeline *and the
 //!   optimizing pass manager* ([`crate::opt`]), memoized by a formatting-
 //!   insensitive definition fingerprint salted with the pass
-//!   configuration (different opt levels never share cache entries);
-//! * dispatch runs to any registered backend, reusing backend instances so
-//!   their executable caches stay warm;
-//! * perform the run-time storage checks (layout/halo/dtype) the paper
-//!   attributes its small-domain constant overhead to — and allow turning
-//!   them off (`checks_enabled`), reproducing the Fig. 3 dashed lines;
-//! * collect per-(stencil, backend) metrics.
+//!   configuration (different opt levels never share cache entries); the
+//!   cache hands out `Arc<StencilIr>`, so a hit is a refcount bump, never
+//!   a deep copy;
+//! * mint [`Stencil`] handles — cheap-to-clone, `Send + Sync` pairings of
+//!   one compiled IR with one backend instance. Handles dispatch through
+//!   an invocation builder ([`Stencil::bind`]) that validates storages
+//!   once and then only re-checks shapes per call; cloned handles
+//!   dispatch the same compiled stencil concurrently from many threads;
+//! * reuse backend instances across stencils and handles so their
+//!   executable caches stay warm;
+//! * collect per-(stencil, backend) metrics ([`metrics::SharedMetrics`]).
+//!
+//! The pre-handle entry point — [`Coordinator::run`] with hand-built
+//! `(&str, &mut Storage)` slices — survives as a deprecated shim on top
+//! of the same machinery.
 
 pub mod metrics;
+pub mod stencil;
+
+pub use stencil::{BoundInvocation, InvocationBuilder, Stencil};
 
 use crate::analysis;
-use crate::backend::{self, Backend, StencilArgs};
+use crate::backend::{self, Backend};
 use crate::cache::StencilCache;
 use crate::dsl::parser::parse_module;
 use crate::ir::canon;
 use crate::ir::implir::StencilIr;
 use crate::opt::{OptConfig, OptLevel};
 use crate::stdlib;
-use crate::storage::{Storage, StorageInfo};
+use crate::storage::Storage;
 use anyhow::{anyhow, Result};
-use metrics::Metrics;
+use metrics::SharedMetrics;
 use std::collections::{BTreeMap, HashMap};
-use std::time::{Duration, Instant};
+use std::sync::Arc;
+use std::time::Duration;
 
 /// Formatting-insensitive fingerprint of a stencil *definition* plus its
 /// externals — computable before analysis, used to memoize the pipeline.
@@ -81,7 +94,7 @@ pub fn def_fingerprint(
     Ok(canon::fnv1a64(s.as_bytes()))
 }
 
-/// Statistics of one `run` call.
+/// Statistics of one run call.
 #[derive(Debug, Clone, Copy)]
 pub struct RunStats {
     pub checks: Duration,
@@ -94,19 +107,22 @@ impl RunStats {
     }
 }
 
-/// The engine. One instance per thread (PJRT clients are not `Sync`).
+/// The engine. Compilation (`&mut self`) is single-threaded; the
+/// [`Stencil`] handles it mints are `Send + Sync` and dispatch from any
+/// number of threads.
 pub struct Coordinator {
-    backends: HashMap<String, Box<dyn Backend>>,
+    backends: HashMap<String, Arc<dyn Backend>>,
     stencils: StencilCache,
     /// Fingerprints by registered stencil name, for name-based dispatch.
     by_name: HashMap<String, u64>,
-    /// Run-time storage validation (the paper's per-call checks).
+    /// Run-time storage validation (the paper's per-call checks); stamped
+    /// into every handle minted afterwards.
     pub checks_enabled: bool,
     /// Pass-manager configuration applied after analysis. Defaults to the
     /// full opt-level 2 set; part of every compilation cache key, so one
     /// coordinator can serve multiple opt levels without collisions.
     opt: OptConfig,
-    pub metrics: Metrics,
+    pub metrics: SharedMetrics,
 }
 
 impl Default for Coordinator {
@@ -123,7 +139,7 @@ impl Coordinator {
             by_name: HashMap::new(),
             checks_enabled: true,
             opt: OptConfig::default(),
-            metrics: Metrics::new(),
+            metrics: SharedMetrics::new(),
         }
     }
 
@@ -163,8 +179,7 @@ impl Coordinator {
             analysis::compile_source_opt(src, stencil, externals, &opt)
                 .map_err(|e| anyhow!("{e}"))
         })?;
-        let name = ir.name.clone();
-        self.by_name.insert(name, def_fp);
+        self.by_name.insert(ir.name.clone(), def_fp);
         Ok(def_fp)
     }
 
@@ -175,14 +190,12 @@ impl Coordinator {
         self.compile_source(src, name, &BTreeMap::new())
     }
 
-    /// The analyzed IR for a previously compiled stencil.
-    pub fn ir(&mut self, fingerprint: u64) -> Result<StencilIr> {
-        Ok(self
-            .stencils
-            .get_or_insert(fingerprint, || {
-                Err(anyhow!("fingerprint {fingerprint:016x} not compiled"))
-            })?
-            .clone())
+    /// The analyzed IR for a previously compiled stencil (shared — a
+    /// refcount bump, not a copy).
+    pub fn ir(&mut self, fingerprint: u64) -> Result<Arc<StencilIr>> {
+        self.stencils.get_or_insert(fingerprint, || {
+            Err(anyhow!("fingerprint {fingerprint:016x} not compiled"))
+        })
     }
 
     /// Fingerprint registered for a stencil name.
@@ -195,23 +208,51 @@ impl Coordinator {
         (self.stencils.hits, self.stencils.misses)
     }
 
-    fn backend(&mut self, name: &str) -> Result<&mut Box<dyn Backend>> {
+    fn backend(&mut self, name: &str) -> Result<Arc<dyn Backend>> {
         if !self.backends.contains_key(name) {
             let be = backend::create(name)?;
-            self.backends.insert(name.to_string(), be);
+            self.backends.insert(name.to_string(), Arc::from(be));
         }
-        Ok(self.backends.get_mut(name).unwrap())
+        Ok(self.backends[name].clone())
     }
 
     /// Register a custom backend instance under its name (e.g. a
     /// pre-warmed `XlaBackend` sharing a runtime).
     pub fn register_backend(&mut self, be: Box<dyn Backend>) {
-        self.backends.insert(be.name().to_string(), be);
+        self.backends.insert(be.name().to_string(), Arc::from(be));
+    }
+
+    /// Compile `stencil` from `src` and return a [`Stencil`] handle bound
+    /// to `backend` — the `gtscript.stencil(backend=...)` analog. The
+    /// handle shares the cached IR and the backend instance; clone it
+    /// freely (including across threads).
+    pub fn stencil(
+        &mut self,
+        src: &str,
+        stencil: &str,
+        backend: &str,
+        externals: &BTreeMap<String, f64>,
+    ) -> Result<Stencil> {
+        let fp = self.compile_source(src, stencil, externals)?;
+        self.stencil_for(fp, backend)
+    }
+
+    /// [`Coordinator::stencil`] for a standard-library stencil.
+    pub fn stencil_library(&mut self, name: &str, backend: &str) -> Result<Stencil> {
+        let fp = self.compile_library(name)?;
+        self.stencil_for(fp, backend)
+    }
+
+    /// A [`Stencil`] handle for an already-compiled fingerprint.
+    pub fn stencil_for(&mut self, fingerprint: u64, backend: &str) -> Result<Stencil> {
+        let ir = self.ir(fingerprint)?;
+        let be = self.backend(backend)?;
+        Ok(Stencil::new(ir, be, self.checks_enabled, self.metrics.clone()))
     }
 
     /// Allocate a zeroed storage with exactly the halo a stencil's field
     /// requires for `domain` (the `gt4py.storage.zeros(backend=...)`
-    /// analog).
+    /// analog; also available as [`Stencil::alloc_field`]).
     pub fn alloc_field(
         &mut self,
         fingerprint: u64,
@@ -219,21 +260,15 @@ impl Coordinator {
         domain: [usize; 3],
     ) -> Result<Storage> {
         let ir = self.ir(fingerprint)?;
-        let f = ir
-            .field(field)
-            .ok_or_else(|| anyhow!("stencil `{}` has no field `{field}`", ir.name))?;
-        let e = f.extent;
-        Ok(Storage::zeros(StorageInfo::new(
-            domain,
-            [
-                ((-e.i.0) as usize, e.i.1 as usize),
-                ((-e.j.0) as usize, e.j.1 as usize),
-                ((-e.k.0) as usize, e.k.1 as usize),
-            ],
-        )))
+        stencil::alloc_field_for(&ir, field, domain)
     }
 
-    /// Run a compiled stencil on a backend.
+    /// Run a compiled stencil on a backend from hand-built argument
+    /// slices.
+    #[deprecated(
+        note = "use the Stencil handle API: `Coordinator::stencil_for(..).bind()` \
+                validates once and re-checks only shapes on repeat calls"
+    )]
     pub fn run<'b>(
         &mut self,
         fingerprint: u64,
@@ -242,26 +277,15 @@ impl Coordinator {
         scalars: &[(&'b str, f64)],
         domain: [usize; 3],
     ) -> Result<RunStats> {
-        let ir = self.ir(fingerprint)?;
-
-        let checks = if self.checks_enabled {
-            let t0 = Instant::now();
-            crate::backend::program::validate_args(&ir, fields, scalars, domain)?;
-            t0.elapsed()
-        } else {
-            Duration::ZERO
-        };
-
-        let be = self.backend(backend_name)?;
-        let t1 = Instant::now();
-        be.run(&ir, &mut StencilArgs { fields, scalars, domain })?;
-        let execute = t1.elapsed();
-
-        self.metrics.record(&ir.name, backend_name, checks, execute);
-        Ok(RunStats { checks, execute })
+        let handle = self.stencil_for(fingerprint, backend_name)?;
+        handle.run_slices(fields, scalars, domain)
     }
 
-    /// Run a stencil by registered name.
+    /// Run a stencil by registered name (slice-based, like
+    /// [`Coordinator::run`]).
+    #[deprecated(
+        note = "use the Stencil handle API: `Coordinator::stencil_library(..).bind()`"
+    )]
     pub fn run_by_name<'b>(
         &mut self,
         stencil: &str,
@@ -273,7 +297,8 @@ impl Coordinator {
         let fp = self
             .fingerprint_of(stencil)
             .ok_or_else(|| anyhow!("stencil `{stencil}` not compiled"))?;
-        self.run(fp, backend_name, fields, scalars, domain)
+        let handle = self.stencil_for(fp, backend_name)?;
+        handle.run_slices(fields, scalars, domain)
     }
 }
 
@@ -282,24 +307,44 @@ mod tests {
     use super::*;
 
     #[test]
-    fn compile_run_roundtrip_with_cache() {
+    fn compile_stencil_roundtrip_with_cache() {
         let mut c = Coordinator::new();
         let fp = c.compile_library("copy").unwrap();
-        // Recompiling is a cache hit.
+        // Recompiling is a cache hit, and the handle shares the cached IR.
         let fp2 = c.compile_library("copy").unwrap();
         assert_eq!(fp, fp2);
         assert_eq!(c.cache_stats(), (1, 1));
+        let s = c.stencil_for(fp, "debug").unwrap();
+        assert!(Arc::ptr_eq(&c.ir(fp).unwrap(), &c.ir(fp).unwrap()));
 
         let domain = [4, 3, 2];
-        let mut src = c.alloc_field(fp, "src", domain).unwrap();
-        let mut dst = c.alloc_field(fp, "dst", domain).unwrap();
+        let mut src = s.alloc_field("src", domain).unwrap();
+        let mut dst = s.alloc_field("dst", domain).unwrap();
         src.set(1, 2, 1, 7.0);
-        let mut refs: Vec<(&str, &mut Storage)> =
-            vec![("src", &mut src), ("dst", &mut dst)];
-        let stats = c.run(fp, "debug", &mut refs, &[], domain).unwrap();
+        let mut inv = s
+            .bind()
+            .field("src", &src)
+            .field("dst", &dst)
+            .domain(domain)
+            .finish()
+            .unwrap();
+        let stats = inv.run(&mut [&mut src, &mut dst]).unwrap();
         assert!(stats.execute > Duration::ZERO);
         assert_eq!(dst.get(1, 2, 1), 7.0);
         assert!(c.metrics.get("copy", "debug").is_some());
+    }
+
+    #[test]
+    fn backend_instances_are_shared_across_handles() {
+        let mut c = Coordinator::new();
+        let a = c.stencil_library("copy", "vector").unwrap();
+        let b = c.stencil_library("laplacian", "vector").unwrap();
+        // Same backend instance behind both handles: executable caches
+        // stay warm across stencils (asserted via Arc identity).
+        let be_a = c.backend("vector").unwrap();
+        let be_b = c.backend("vector").unwrap();
+        assert!(Arc::ptr_eq(&be_a, &be_b));
+        assert_eq!(a.backend_name(), b.backend_name());
     }
 
     #[test]
@@ -323,39 +368,53 @@ mod tests {
     #[test]
     fn checks_catch_bad_halo_and_can_be_disabled() {
         let mut c = Coordinator::new();
-        let fp = c.compile_library("laplacian").unwrap();
+        let s = c.stencil_library("laplacian", "debug").unwrap();
         let domain = [4, 4, 2];
-        // Deliberately halo-less storages: checks must reject them.
-        let mut phi = Storage::with_halo(domain, 0);
-        let mut out = Storage::with_halo(domain, 0);
-        {
-            let mut refs: Vec<(&str, &mut Storage)> =
-                vec![("phi", &mut phi), ("out", &mut out)];
-            assert!(c.run(fp, "debug", &mut refs, &[], domain).is_err());
-        }
+        // Deliberately halo-less storages: bind-time checks reject them.
+        let phi = Storage::with_halo(domain, 0);
+        let out = Storage::with_halo(domain, 0);
+        assert!(s
+            .bind()
+            .field("phi", &phi)
+            .field("out", &out)
+            .domain(domain)
+            .finish()
+            .is_err());
         // Disabling the checks reproduces the unvalidated (dashed-line)
         // path; with an OOB halo this would be UB-ish, so use valid
-        // storages and just assert the checks time is zero-ish.
+        // storages and just assert the checks time is zero.
         c.checks_enabled = false;
-        let mut phi = c.alloc_field(fp, "phi", domain).unwrap();
-        let mut out = c.alloc_field(fp, "out", domain).unwrap();
-        let mut refs: Vec<(&str, &mut Storage)> =
-            vec![("phi", &mut phi), ("out", &mut out)];
-        let stats = c.run(fp, "debug", &mut refs, &[], domain).unwrap();
+        let s = c.stencil_library("laplacian", "debug").unwrap();
+        let mut phi = s.alloc_field("phi", domain).unwrap();
+        let mut out = s.alloc_field("out", domain).unwrap();
+        let mut inv = s
+            .bind()
+            .field("phi", &phi)
+            .field("out", &out)
+            .domain(domain)
+            .finish()
+            .unwrap();
+        let stats = inv.run(&mut [&mut phi, &mut out]).unwrap();
         assert_eq!(stats.checks, Duration::ZERO);
     }
 
     #[test]
     fn scalar_args_flow_through() {
         let mut c = Coordinator::new();
-        let fp = c.compile_library("diffuse").unwrap();
+        let s = c.stencil_library("diffuse", "debug").unwrap();
         let domain = [4, 4, 1];
-        let mut phi = c.alloc_field(fp, "phi", domain).unwrap();
+        let mut phi = s.alloc_field("phi", domain).unwrap();
         phi.fill(1.0);
-        let mut out = c.alloc_field(fp, "out", domain).unwrap();
-        let mut refs: Vec<(&str, &mut Storage)> =
-            vec![("phi", &mut phi), ("out", &mut out)];
-        c.run(fp, "debug", &mut refs, &[("alpha", 0.1)], domain).unwrap();
+        let mut out = s.alloc_field("out", domain).unwrap();
+        let mut inv = s
+            .bind()
+            .field("phi", &phi)
+            .field("out", &out)
+            .scalar("alpha", 0.1)
+            .domain(domain)
+            .finish()
+            .unwrap();
+        inv.run(&mut [&mut phi, &mut out]).unwrap();
         // constant field: laplacian zero, out == phi
         assert_eq!(out.get(2, 2, 0), 1.0);
     }
@@ -391,10 +450,10 @@ mod tests {
         let mut sums = Vec::new();
         for level in [crate::opt::OptLevel::O0, crate::opt::OptLevel::O2] {
             let mut c = Coordinator::with_opt_level(level);
-            let fp = c.compile_library("hdiff").unwrap();
-            let mut inp = c.alloc_field(fp, "in_phi", domain).unwrap();
-            let mut coeff = c.alloc_field(fp, "coeff", domain).unwrap();
-            let mut out = c.alloc_field(fp, "out_phi", domain).unwrap();
+            let s = c.stencil_library("hdiff", "vector").unwrap();
+            let mut inp = s.alloc_field("in_phi", domain).unwrap();
+            let mut coeff = s.alloc_field("coeff", domain).unwrap();
+            let mut out = s.alloc_field("out_phi", domain).unwrap();
             let h = inp.info.halo;
             let [ni, nj, nk] = domain;
             for i in -(h[0].0 as i64)..(ni + h[0].1) as i64 {
@@ -405,12 +464,15 @@ mod tests {
                 }
             }
             coeff.fill(0.05);
-            let mut refs: Vec<(&str, &mut Storage)> = vec![
-                ("in_phi", &mut inp),
-                ("coeff", &mut coeff),
-                ("out_phi", &mut out),
-            ];
-            c.run(fp, "vector", &mut refs, &[], domain).unwrap();
+            let mut inv = s
+                .bind()
+                .field("in_phi", &inp)
+                .field("coeff", &coeff)
+                .field("out_phi", &out)
+                .domain(domain)
+                .finish()
+                .unwrap();
+            inv.run(&mut [&mut inp, &mut coeff, &mut out]).unwrap();
             sums.push(out.domain_sum());
         }
         assert_eq!(sums[0].to_bits(), sums[1].to_bits(), "opt level changed results");
@@ -420,11 +482,30 @@ mod tests {
     fn unknown_backend_or_name_errors() {
         let mut c = Coordinator::new();
         let fp = c.compile_library("copy").unwrap();
-        let domain = [2, 2, 1];
-        let mut a = c.alloc_field(fp, "src", domain).unwrap();
-        let mut b = c.alloc_field(fp, "dst", domain).unwrap();
-        let mut refs: Vec<(&str, &mut Storage)> = vec![("src", &mut a), ("dst", &mut b)];
-        assert!(c.run(fp, "warp-drive", &mut refs, &[], domain).is_err());
+        assert!(c.stencil_for(fp, "warp-drive").is_err());
+        assert!(c.stencil_for(0xdead_beef, "debug").is_err());
+        assert!(c.fingerprint_of("never_compiled").is_none());
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_slice_shim_still_works() {
+        // The pre-handle API: hand-built `(&str, &mut Storage)` slices.
+        let mut c = Coordinator::new();
+        let fp = c.compile_library("diffuse").unwrap();
+        let domain = [4, 4, 1];
+        let mut phi = c.alloc_field(fp, "phi", domain).unwrap();
+        phi.fill(1.0);
+        let mut out = c.alloc_field(fp, "out", domain).unwrap();
+        let mut refs: Vec<(&str, &mut Storage)> =
+            vec![("phi", &mut phi), ("out", &mut out)];
+        c.run(fp, "debug", &mut refs, &[("alpha", 0.1)], domain).unwrap();
+        assert_eq!(out.get(2, 2, 0), 1.0);
+        // ...and by name, including the not-compiled error path.
+        let mut refs: Vec<(&str, &mut Storage)> =
+            vec![("phi", &mut phi), ("out", &mut out)];
+        c.run_by_name("diffuse", "debug", &mut refs, &[("alpha", 0.1)], domain)
+            .unwrap();
         assert!(c
             .run_by_name("never_compiled", "debug", &mut [], &[], domain)
             .is_err());

@@ -1,0 +1,635 @@
+//! First-class stencil handles — the `StencilObject` analog of GT4Py's
+//! `gtscript.stencil(backend=...)` return value.
+//!
+//! A [`Stencil`] is a cheap-to-clone, `Send + Sync` handle pairing one
+//! compiled implementation IR (`Arc<StencilIr>`, shared with the
+//! coordinator's cache — no per-call deep copies) with one backend
+//! instance (`Arc<dyn Backend>`, whose executable caches stay warm across
+//! every handle bound to it). Clone a handle into as many threads as you
+//! like: the same compiled artifact dispatches concurrently.
+//!
+//! Calling goes through an invocation builder:
+//!
+//! ```no_run
+//! # use gt4rs::coordinator::Coordinator;
+//! # fn main() -> anyhow::Result<()> {
+//! let mut coord = Coordinator::new();
+//! let stencil = coord.stencil_library("diffuse", "vector")?;
+//! let domain = [64, 64, 32];
+//! let mut phi = stencil.alloc_field("phi", domain)?;
+//! let mut out = stencil.alloc_field("out", domain)?;
+//!
+//! // Bind once: the full layout/halo/dtype validation — the paper's
+//! // Fig. 3 constant per-call overhead — happens here, exactly once.
+//! let mut step = stencil
+//!     .bind()
+//!     .field("phi", &phi)
+//!     .field("out", &out)
+//!     .scalar("alpha", 0.1)
+//!     .domain(domain)
+//!     .finish()?;
+//!
+//! // Run many: repeat calls only re-check that the storages still have
+//! // the validated geometry (a handful of integer compares) —
+//! // reproducing the dashed-line overhead elimination without globally
+//! // disabling checks.
+//! for _ in 0..100 {
+//!     step.run(&mut [&mut phi, &mut out])?;
+//! }
+//! # Ok(()) }
+//! ```
+//!
+//! Storages are **not** borrowed between calls: `run` takes them fresh
+//! each time, in the stencil's field declaration order. If a storage was
+//! reallocated with a different geometry since binding, the shape
+//! re-check rejects the call with a "re-bind" error instead of computing
+//! on a stale layout.
+
+use crate::backend::program::{validate_args, validate_field};
+use crate::backend::{Backend, StencilArgs};
+use crate::coordinator::metrics::SharedMetrics;
+use crate::coordinator::RunStats;
+use crate::ir::implir::StencilIr;
+use crate::storage::{Storage, StorageInfo};
+use anyhow::{anyhow, bail, Result};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A compiled stencil bound to a backend — see the module docs.
+#[derive(Clone)]
+pub struct Stencil {
+    ir: Arc<StencilIr>,
+    backend: Arc<dyn Backend>,
+    checks_enabled: bool,
+    metrics: SharedMetrics,
+}
+
+impl Stencil {
+    pub(super) fn new(
+        ir: Arc<StencilIr>,
+        backend: Arc<dyn Backend>,
+        checks_enabled: bool,
+        metrics: SharedMetrics,
+    ) -> Stencil {
+        Stencil { ir, backend, checks_enabled, metrics }
+    }
+
+    /// The analyzed implementation IR (shared, never copied).
+    pub fn ir(&self) -> &StencilIr {
+        &self.ir
+    }
+
+    pub fn name(&self) -> &str {
+        &self.ir.name
+    }
+
+    pub fn fingerprint(&self) -> u64 {
+        self.ir.fingerprint
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    pub fn checks_enabled(&self) -> bool {
+        self.checks_enabled
+    }
+
+    /// Toggle the run-time storage checks for this handle (and invocations
+    /// bound from it afterwards) — the Fig. 3 solid/dashed switch, scoped
+    /// to one handle instead of a whole engine.
+    pub fn set_checks_enabled(&mut self, enabled: bool) {
+        self.checks_enabled = enabled;
+    }
+
+    /// Allocate a zeroed storage with exactly the halo this stencil's
+    /// field requires for `domain` (the `gt4py.storage.zeros(backend=...)`
+    /// analog).
+    pub fn alloc_field(&self, field: &str, domain: [usize; 3]) -> Result<Storage> {
+        alloc_field_for(&self.ir, field, domain)
+    }
+
+    /// Start binding an invocation. Field/scalar order does not matter;
+    /// the finished [`BoundInvocation`] expects storages in declaration
+    /// order.
+    pub fn bind(&self) -> InvocationBuilder<'_> {
+        InvocationBuilder {
+            stencil: self,
+            fields: Vec::with_capacity(self.ir.fields.len()),
+            scalars: Vec::with_capacity(self.ir.scalars.len()),
+            domain: None,
+        }
+    }
+
+    /// One-shot convenience: validate and run in a single call (the
+    /// deprecated slice-based `Coordinator::run` shim is built on this).
+    pub(super) fn run_slices<'b>(
+        &self,
+        fields: &mut [(&'b str, &'b mut Storage)],
+        scalars: &[(&'b str, f64)],
+        domain: [usize; 3],
+    ) -> Result<RunStats> {
+        let checks = if self.checks_enabled {
+            let t0 = Instant::now();
+            validate_args(&self.ir, fields, scalars, domain)?;
+            t0.elapsed()
+        } else {
+            Duration::ZERO
+        };
+        let t1 = Instant::now();
+        self.backend
+            .run(&self.ir, &mut StencilArgs { fields, scalars, domain })?;
+        let execute = t1.elapsed();
+        self.metrics
+            .record(&self.ir.name, self.backend.name(), checks, execute);
+        Ok(RunStats { checks, execute })
+    }
+}
+
+/// Builder collecting the arguments of one invocation; created by
+/// [`Stencil::bind`], consumed by [`InvocationBuilder::finish`].
+pub struct InvocationBuilder<'s> {
+    stencil: &'s Stencil,
+    /// `(name, geometry snapshot)` per bound field, in bind order.
+    fields: Vec<(String, StorageInfo)>,
+    scalars: Vec<(String, f64)>,
+    domain: Option<[usize; 3]>,
+}
+
+impl InvocationBuilder<'_> {
+    /// Bind a field argument. Only the storage's geometry is captured —
+    /// the storage itself is handed to every [`BoundInvocation::run`]
+    /// call, so it stays free between calls.
+    pub fn field(mut self, name: &str, storage: &Storage) -> Self {
+        self.fields.push((name.to_string(), storage.info));
+        self
+    }
+
+    /// Bind a scalar argument.
+    pub fn scalar(mut self, name: &str, value: f64) -> Self {
+        self.scalars.push((name.to_string(), value));
+        self
+    }
+
+    /// Bind every `(name, storage)` pair — convenience over repeated
+    /// [`InvocationBuilder::field`] for callers holding a collection.
+    pub fn fields<N: AsRef<str>>(mut self, pairs: &[(N, Storage)]) -> Self {
+        for (n, s) in pairs {
+            self = self.field(n.as_ref(), s);
+        }
+        self
+    }
+
+    /// Bind every `(name, value)` scalar pair.
+    pub fn scalars<N: AsRef<str>>(mut self, pairs: &[(N, f64)]) -> Self {
+        for (n, v) in pairs {
+            self = self.scalar(n.as_ref(), *v);
+        }
+        self
+    }
+
+    /// Set the compute-domain shape (required).
+    pub fn domain(mut self, domain: [usize; 3]) -> Self {
+        self.domain = Some(domain);
+        self
+    }
+
+    /// Resolve and fully validate the invocation *once*. The layout /
+    /// halo / dtype checks run here (when the handle's checks are
+    /// enabled); the returned [`BoundInvocation`] only re-checks shapes
+    /// on each call.
+    pub fn finish(self) -> Result<BoundInvocation> {
+        let stencil = self.stencil;
+        let ir = &*stencil.ir;
+        let domain = self
+            .domain
+            .ok_or_else(|| anyhow!("bind: no domain set (call .domain([ni, nj, nk]))"))?;
+        let t0 = Instant::now();
+
+        // Resolve bound fields against the declaration, in declaration
+        // order — the order `run` expects its storages in.
+        let mut field_names = Vec::with_capacity(ir.fields.len());
+        let mut expected = Vec::with_capacity(ir.fields.len());
+        for f in &ir.fields {
+            let mut found = None;
+            for (n, info) in &self.fields {
+                if n == &f.name {
+                    if found.is_some() {
+                        bail!("bind: field `{}` bound twice", f.name);
+                    }
+                    found = Some(*info);
+                }
+            }
+            let info =
+                found.ok_or_else(|| anyhow!("bind: missing field argument `{}`", f.name))?;
+            if stencil.checks_enabled {
+                validate_field(f, &info, domain)?;
+            }
+            field_names.push(f.name.clone());
+            expected.push(info);
+        }
+        for (n, _) in &self.fields {
+            if ir.field(n).is_none() {
+                bail!("bind: stencil `{}` has no field `{n}`", ir.name);
+            }
+        }
+
+        // Resolve scalars, declaration order. Like fields, binding one
+        // twice is an error (use `BoundInvocation::set_scalar` to change
+        // a value between calls).
+        for (i, (n, _)) in self.scalars.iter().enumerate() {
+            if self.scalars[..i].iter().any(|(m, _)| m == n) {
+                bail!("bind: scalar `{n}` bound twice");
+            }
+        }
+        let mut scalars = Vec::with_capacity(ir.scalars.len());
+        for s in &ir.scalars {
+            let v = self
+                .scalars
+                .iter()
+                .find(|(n, _)| n == &s.name)
+                .map(|(_, v)| *v)
+                .ok_or_else(|| anyhow!("bind: missing scalar argument `{}`", s.name))?;
+            scalars.push((s.name.clone(), v));
+        }
+        for (n, _) in &self.scalars {
+            if !ir.scalars.iter().any(|s| &s.name == n) {
+                bail!("bind: stencil `{}` has no scalar `{n}`", ir.name);
+            }
+        }
+
+        let bind_checks = if stencil.checks_enabled { t0.elapsed() } else { Duration::ZERO };
+        Ok(BoundInvocation {
+            stencil: stencil.clone(),
+            domain,
+            field_names,
+            expected,
+            scalars,
+            bind_checks,
+            first_reported: false,
+        })
+    }
+}
+
+/// A validated, reusable invocation of one [`Stencil`]. Owns no storages
+/// and borrows nothing: it can be kept for the lifetime of a model run
+/// and is `Send` (each thread drives its own invocation; the underlying
+/// stencil handle and backend are shared).
+pub struct BoundInvocation {
+    stencil: Stencil,
+    domain: [usize; 3],
+    /// Field names in declaration order (the order `run` expects).
+    field_names: Vec<String>,
+    /// Geometry validated at bind time, per field.
+    expected: Vec<StorageInfo>,
+    /// `(name, value)` in declaration order.
+    scalars: Vec<(String, f64)>,
+    /// Wall time of the bind-time full validation; reported as the first
+    /// call's `RunStats::checks` so per-call accounting stays complete.
+    bind_checks: Duration,
+    first_reported: bool,
+}
+
+impl BoundInvocation {
+    pub fn domain(&self) -> [usize; 3] {
+        self.domain
+    }
+
+    /// Field names in the order [`BoundInvocation::run`] expects.
+    pub fn field_order(&self) -> &[String] {
+        &self.field_names
+    }
+
+    /// Wall time the bind-time full validation took (zero when the
+    /// handle's checks are disabled).
+    pub fn bind_validation_time(&self) -> Duration {
+        self.bind_checks
+    }
+
+    /// Update a bound scalar without re-validating storages (e.g. a time
+    /// step that changes between model steps).
+    pub fn set_scalar(&mut self, name: &str, value: f64) -> Result<()> {
+        for (n, v) in &mut self.scalars {
+            if n == name {
+                *v = value;
+                return Ok(());
+            }
+        }
+        bail!("no scalar `{name}` bound on stencil `{}`", self.stencil.ir.name)
+    }
+
+    /// Execute once. `fields` must hold the storages in declaration order
+    /// ([`BoundInvocation::field_order`]); only their geometry is
+    /// re-checked against the bind-time snapshot — a reallocated storage
+    /// with a different shape/halo/layout is rejected with a re-bind
+    /// error, anything else is a cheap pass-through to the backend.
+    ///
+    /// The pairing is positional, like function arguments: two fields
+    /// with *identical* geometry passed in the wrong order cannot be
+    /// detected (deliberately — double-buffer patterns swap same-shape
+    /// storages between calls). Consult [`field_order`] when in doubt.
+    ///
+    /// [`field_order`]: BoundInvocation::field_order
+    pub fn run(&mut self, fields: &mut [&mut Storage]) -> Result<RunStats> {
+        let t0 = Instant::now();
+        if fields.len() != self.field_names.len() {
+            bail!(
+                "stencil `{}` takes {} field(s) ({}), got {}",
+                self.stencil.ir.name,
+                self.field_names.len(),
+                self.field_names.join(", "),
+                fields.len()
+            );
+        }
+        let recheck = if self.stencil.checks_enabled {
+            for ((storage, expected), name) in
+                fields.iter().zip(&self.expected).zip(&self.field_names)
+            {
+                if storage.info != *expected {
+                    bail!(
+                        "field `{name}` geometry changed since bind \
+                         (bound {expected:?}, got {:?}); re-bind the invocation",
+                        storage.info
+                    );
+                }
+            }
+            t0.elapsed()
+        } else {
+            Duration::ZERO
+        };
+
+        let mut refs: Vec<(&str, &mut Storage)> = self
+            .field_names
+            .iter()
+            .map(String::as_str)
+            .zip(fields.iter_mut().map(|s| &mut **s))
+            .collect();
+        let srefs: Vec<(&str, f64)> =
+            self.scalars.iter().map(|(n, v)| (n.as_str(), *v)).collect();
+        let t1 = Instant::now();
+        self.stencil.backend.run(
+            &self.stencil.ir,
+            &mut StencilArgs { fields: &mut refs, scalars: &srefs, domain: self.domain },
+        )?;
+        let execute = t1.elapsed();
+
+        // The first call carries the bind-time validation cost so summed
+        // RunStats over a bind+run-many sequence account for every check.
+        let checks = if self.first_reported {
+            recheck
+        } else {
+            self.first_reported = true;
+            self.bind_checks + recheck
+        };
+        self.stencil.metrics.record(
+            &self.stencil.ir.name,
+            self.stencil.backend.name(),
+            checks,
+            execute,
+        );
+        Ok(RunStats { checks, execute })
+    }
+}
+
+/// Allocate a zeroed storage with exactly the halo `ir`'s `field` requires
+/// for `domain`.
+pub(super) fn alloc_field_for(
+    ir: &StencilIr,
+    field: &str,
+    domain: [usize; 3],
+) -> Result<Storage> {
+    let f = ir
+        .field(field)
+        .ok_or_else(|| anyhow!("stencil `{}` has no field `{field}`", ir.name))?;
+    let e = f.extent;
+    Ok(Storage::zeros(StorageInfo::new(
+        domain,
+        [
+            ((-e.i.0) as usize, e.i.1 as usize),
+            ((-e.j.0) as usize, e.j.1 as usize),
+            ((-e.k.0) as usize, e.k.1 as usize),
+        ],
+    )))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Coordinator;
+
+    fn handle(backend: &str) -> Stencil {
+        let mut c = Coordinator::new();
+        c.stencil_library("diffuse", backend).unwrap()
+    }
+
+    #[test]
+    fn handle_is_cheap_to_clone_and_shares_ir() {
+        let s = handle("debug");
+        let s2 = s.clone();
+        assert!(Arc::ptr_eq(&s.ir, &s2.ir), "clones must share the IR");
+        assert_eq!(s2.name(), "diffuse");
+        assert_eq!(s2.backend_name(), "debug");
+    }
+
+    #[test]
+    fn handles_are_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Stencil>();
+        assert_send_sync::<BoundInvocation>();
+    }
+
+    #[test]
+    fn bind_once_run_many() {
+        let s = handle("debug");
+        let domain = [6, 5, 2];
+        let mut phi = s.alloc_field("phi", domain).unwrap();
+        let mut out = s.alloc_field("out", domain).unwrap();
+        phi.fill(1.0);
+        let mut inv = s
+            .bind()
+            .field("out", &out) // bind order is free...
+            .field("phi", &phi)
+            .scalar("alpha", 0.1)
+            .domain(domain)
+            .finish()
+            .unwrap();
+        // ...but run order is declaration order.
+        assert_eq!(inv.field_order(), &["phi".to_string(), "out".to_string()]);
+        for _ in 0..3 {
+            inv.run(&mut [&mut phi, &mut out]).unwrap();
+        }
+        assert_eq!(out.get(2, 2, 0), 1.0); // constant field: identity
+    }
+
+    #[test]
+    fn bind_rejects_bad_arguments() {
+        let s = handle("debug");
+        let domain = [4, 4, 2];
+        let phi = s.alloc_field("phi", domain).unwrap();
+        let out = s.alloc_field("out", domain).unwrap();
+        // missing domain
+        assert!(s.bind().field("phi", &phi).field("out", &out).finish().is_err());
+        // missing field
+        assert!(s
+            .bind()
+            .field("phi", &phi)
+            .scalar("alpha", 0.1)
+            .domain(domain)
+            .finish()
+            .is_err());
+        // unknown field
+        assert!(s
+            .bind()
+            .field("phi", &phi)
+            .field("out", &out)
+            .field("ghost", &phi)
+            .scalar("alpha", 0.1)
+            .domain(domain)
+            .finish()
+            .is_err());
+        // duplicate field
+        assert!(s
+            .bind()
+            .field("phi", &phi)
+            .field("phi", &phi)
+            .field("out", &out)
+            .scalar("alpha", 0.1)
+            .domain(domain)
+            .finish()
+            .is_err());
+        // missing / unknown / duplicate scalar
+        assert!(s.bind().field("phi", &phi).field("out", &out).domain(domain).finish().is_err());
+        assert!(s
+            .bind()
+            .field("phi", &phi)
+            .field("out", &out)
+            .scalar("alpha", 0.1)
+            .scalar("beta", 1.0)
+            .domain(domain)
+            .finish()
+            .is_err());
+        assert!(s
+            .bind()
+            .field("phi", &phi)
+            .field("out", &out)
+            .scalar("alpha", 0.1)
+            .scalar("alpha", 0.9)
+            .domain(domain)
+            .finish()
+            .is_err());
+        // insufficient halo caught at bind time
+        let s2 = {
+            let mut c = Coordinator::new();
+            c.stencil_library("laplacian", "debug").unwrap()
+        };
+        let bad = Storage::with_halo(domain, 0);
+        let o = s2.alloc_field("out", domain).unwrap();
+        assert!(s2
+            .bind()
+            .field("phi", &bad)
+            .field("out", &o)
+            .domain(domain)
+            .finish()
+            .is_err());
+    }
+
+    #[test]
+    fn stale_shape_rejected_until_rebind() {
+        let s = handle("debug");
+        let domain = [4, 4, 2];
+        let mut phi = s.alloc_field("phi", domain).unwrap();
+        let mut out = s.alloc_field("out", domain).unwrap();
+        let mut inv = s
+            .bind()
+            .field("phi", &phi)
+            .field("out", &out)
+            .scalar("alpha", 0.2)
+            .domain(domain)
+            .finish()
+            .unwrap();
+        inv.run(&mut [&mut phi, &mut out]).unwrap();
+
+        // Reallocate phi with a different geometry: the next call must be
+        // rejected with a re-bind hint, not silently recomputed.
+        let bigger = [8, 8, 2];
+        let mut phi = s.alloc_field("phi", bigger).unwrap();
+        let err = inv.run(&mut [&mut phi, &mut out]).unwrap_err();
+        assert!(format!("{err:#}").contains("re-bind"), "{err:#}");
+
+        // Re-binding against the new storages works.
+        let mut out = s.alloc_field("out", bigger).unwrap();
+        let mut inv = s
+            .bind()
+            .field("phi", &phi)
+            .field("out", &out)
+            .scalar("alpha", 0.2)
+            .domain(bigger)
+            .finish()
+            .unwrap();
+        inv.run(&mut [&mut phi, &mut out]).unwrap();
+    }
+
+    #[test]
+    fn disabled_checks_report_zero_durations() {
+        let mut s = handle("debug");
+        s.set_checks_enabled(false);
+        let domain = [4, 4, 2];
+        let mut phi = s.alloc_field("phi", domain).unwrap();
+        let mut out = s.alloc_field("out", domain).unwrap();
+        let mut inv = s
+            .bind()
+            .field("phi", &phi)
+            .field("out", &out)
+            .scalar("alpha", 0.1)
+            .domain(domain)
+            .finish()
+            .unwrap();
+        assert_eq!(inv.bind_validation_time(), Duration::ZERO);
+        let stats = inv.run(&mut [&mut phi, &mut out]).unwrap();
+        assert_eq!(stats.checks, Duration::ZERO);
+    }
+
+    #[test]
+    fn set_scalar_updates_between_calls() {
+        let s = handle("vector");
+        let domain = [4, 4, 1];
+        let mut phi = s.alloc_field("phi", domain).unwrap();
+        phi.fill(2.0);
+        let mut out = s.alloc_field("out", domain).unwrap();
+        let mut inv = s
+            .bind()
+            .field("phi", &phi)
+            .field("out", &out)
+            .scalar("alpha", 0.0)
+            .domain(domain)
+            .finish()
+            .unwrap();
+        inv.run(&mut [&mut phi, &mut out]).unwrap();
+        assert_eq!(out.get(1, 1, 0), 2.0);
+        inv.set_scalar("alpha", 0.5).unwrap();
+        assert!(inv.set_scalar("nope", 1.0).is_err());
+        inv.run(&mut [&mut phi, &mut out]).unwrap();
+        // constant field: laplacian term zero, diffuse stays identity
+        assert_eq!(out.get(1, 1, 0), 2.0);
+    }
+
+    #[test]
+    fn metrics_recorded_through_handles() {
+        let mut c = Coordinator::new();
+        let s = c.stencil_library("copy", "debug").unwrap();
+        let domain = [3, 3, 1];
+        let mut src = s.alloc_field("src", domain).unwrap();
+        let mut dst = s.alloc_field("dst", domain).unwrap();
+        let mut inv = s
+            .bind()
+            .field("src", &src)
+            .field("dst", &dst)
+            .domain(domain)
+            .finish()
+            .unwrap();
+        inv.run(&mut [&mut src, &mut dst]).unwrap();
+        inv.run(&mut [&mut src, &mut dst]).unwrap();
+        let t = c.metrics.get("copy", "debug").unwrap();
+        assert_eq!(t.calls, 2);
+    }
+}

@@ -40,13 +40,28 @@
 //!   of a group in one loop nest per interval ([`backend::fused`]) — no
 //!   per-expression-node region buffers), `xla` (XlaBuilder codegen
 //!   JIT-compiled on PJRT; demoted temporaries emit no intermediate zero
-//!   boxes), and `pjrt-aot` (prebuilt JAX/**Pallas** HLO artifacts);
+//!   boxes), and `pjrt-aot` (prebuilt JAX/**Pallas** HLO artifacts). All
+//!   backends execute through `&self` and are `Send + Sync`: program and
+//!   executable caches live behind interior mutability, so one shared
+//!   instance serves concurrent dispatch from many threads (the
+//!   interpreting backends run fully in parallel; the PJRT-backed ones
+//!   serialize on their client);
 //! * **Storage** ([`storage`]) — NumPy-like 3-D containers with
 //!   backend-specific layout, alignment and halo padding;
-//! * **Coordinator** ([`coordinator`]) — stencil registry, run-time storage
-//!   checks, dispatch, metrics; compilation cache keys incorporate the
-//!   pass configuration so opt levels never collide;
-//! * **Cache** ([`cache`]) — fingerprint-based compilation caching;
+//! * **Coordinator** ([`coordinator`]) — compiles definitions (memoized,
+//!   opt-config-salted cache keys so opt levels never collide) and mints
+//!   first-class [`Stencil`] handles, the `gtscript.stencil(backend=...)`
+//!   analog: a cheap-to-clone, `Send + Sync` pairing of one cached
+//!   `Arc<StencilIr>` with one backend instance. Handles dispatch through
+//!   an invocation builder — [`Stencil::bind`] performs the layout/halo/
+//!   dtype validation *once* and yields a reusable
+//!   [`BoundInvocation`] whose repeat calls only re-check shapes
+//!   (reproducing the paper's Fig. 3 dashed-line overhead elimination
+//!   without disabling checks), and cloned handles run the same compiled
+//!   stencil concurrently from many threads;
+//! * **Cache** ([`cache`]) — fingerprint-based compilation caching,
+//!   handing out shared `Arc<StencilIr>` artifacts (a hit is a refcount
+//!   bump, never a deep copy);
 //! * **Runtime** ([`runtime`]) — PJRT client / executable management plus
 //!   the [`runtime::pjrt_available`] probe backing structured
 //!   backend-unavailable errors;
@@ -66,6 +81,7 @@ pub mod runtime;
 pub mod stdlib;
 pub mod storage;
 
+pub use coordinator::{BoundInvocation, Coordinator, Stencil};
 pub use dsl::span::{CResult, CompileError};
 pub use ir::implir::StencilIr;
 pub use opt::{OptConfig, OptLevel, PassManager};

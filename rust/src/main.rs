@@ -13,16 +13,22 @@
 //! analysis and the backends; level 3 additionally selects the fused
 //! loop-nest evaluator on the vector backend.
 //!
+//! Executing subcommands go through the `Stencil` handle API: arguments
+//! are bound and validated once, and repeat calls only re-check shapes.
+//! `--no-checks` disables the run-time storage validation entirely
+//! (the paper's dashed-line configuration); `--json` switches `run` and
+//! `bench` to machine-readable output for the perf-trajectory tooling.
+//!
 //! (The CLI is hand-rolled: the offline vendored crate set has no clap.)
 
 use anyhow::{anyhow, bail, Result};
 use gt4rs::backend::BACKEND_NAMES;
-use gt4rs::coordinator::Coordinator;
+use gt4rs::coordinator::{Coordinator, Stencil};
 use gt4rs::model::{IsentropicModel, ModelConfig};
 use gt4rs::opt::{OptConfig, OptLevel, PassManager};
 use gt4rs::stdlib;
 use gt4rs::storage::Storage;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::time::Instant;
 
 fn main() {
@@ -33,28 +39,39 @@ fn main() {
     }
 }
 
-/// Minimal flag parser: `--key value` pairs after the subcommand.
+/// Presence-only flags (no value follows them on the command line).
+const BOOL_FLAGS: [&str; 2] = ["json", "no-checks"];
+
+/// Minimal flag parser: `--key value` pairs plus presence-only booleans
+/// (`--json`, `--no-checks`) after the subcommand.
 struct Flags {
     map: BTreeMap<String, String>,
+    bools: BTreeSet<String>,
 }
 
 impl Flags {
     fn parse(args: &[String]) -> Result<Flags> {
         let mut map = BTreeMap::new();
+        let mut bools = BTreeSet::new();
         let mut i = 0;
         while i < args.len() {
             let k = &args[i];
             if !k.starts_with("--") {
-                bail!("unexpected argument `{k}` (flags are --key value)");
+                bail!("unexpected argument `{k}` (flags are --key value or --switch)");
             }
             let key = k.trim_start_matches("--").to_string();
+            if BOOL_FLAGS.contains(&key.as_str()) {
+                bools.insert(key);
+                i += 1;
+                continue;
+            }
             if i + 1 >= args.len() {
                 bail!("flag --{key} needs a value");
             }
             map.insert(key, args[i + 1].clone());
             i += 2;
         }
-        Ok(Flags { map })
+        Ok(Flags { map, bools })
     }
 
     fn get(&self, key: &str) -> Option<&str> {
@@ -63,6 +80,11 @@ impl Flags {
 
     fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).unwrap_or(default)
+    }
+
+    /// Whether a presence-only flag was given.
+    fn flag(&self, key: &str) -> bool {
+        self.bools.contains(key)
     }
 }
 
@@ -121,7 +143,7 @@ fn print_help() {
     println!(
         "repro — GT4Py-reproduction stencil framework (gt4rs)
 
-USAGE: repro <subcommand> [--flag value]...
+USAGE: repro <subcommand> [--flag value]... [--json] [--no-checks]
 
 SUBCOMMANDS
   inspect  --stencil NAME [--file F.gts] [--externals K=V,..]
@@ -129,12 +151,15 @@ SUBCOMMANDS
   ir       --stencil NAME [--file F.gts] [--externals K=V,..]
            dump the IR before and after each optimizer pass
   run      --stencil NAME [--backend B] [--domain IxJxK] [--iters N]
-           run on synthetic data, print checksum + timing
+           compile to a stencil handle, bind the arguments once, run N
+           times; prints checksum + per-call timing (--json for
+           machine-readable output)
   validate --stencil NAME [--domain IxJxK] [--backends a,b,..]
            cross-check every backend against `debug` (unavailable
            backends are skipped)
   bench    [--stencil hdiff|vadv] [--domains 32x32x16,..] [--iters N]
-           [--backends a,b,..] Figure-3 style sweep (see also cargo bench)
+           [--backends a,b,..] Figure-3 style sweep (see also cargo
+           bench); --json emits one row per (domain, backend)
   model    [--backend B] [--domain IxJxK] [--steps N]
            run the isentropic-like demo model, log diagnostics
 
@@ -142,6 +167,12 @@ All compiling subcommands take --opt-level 0|1|2|3 (default 2): 0 disables
 the optimizer, 1 enables fold-cse/dce/fuse, 2 adds temporary demotion, 3
 additionally runs the vector backend's fused loop-nest evaluator (stage
 tapes, no per-expression-node buffers).
+
+Executing subcommands use the first-class stencil handle API
+(`Coordinator::stencil` -> `Stencil::bind` -> `BoundInvocation::run`):
+storage layout/halo/dtype validation happens once at bind time, repeat
+calls only re-check shapes. --no-checks disables validation entirely
+(the paper's Fig. 3 dashed lines).
 
 Backends: {}  (library stencils: {})",
         BACKEND_NAMES.join(", "),
@@ -164,21 +195,20 @@ fn load_source(flags: &Flags) -> Result<(String, String)> {
     Ok((name.to_string(), src))
 }
 
-/// Load a stencil from --file or the standard library, honoring
-/// `--opt-level`.
-fn load_ir(coord: &mut Coordinator, flags: &Flags) -> Result<(u64, gt4rs::StencilIr)> {
+/// Compile a stencil from --file or the standard library, honoring
+/// `--opt-level`; returns its cache fingerprint.
+fn load_fp(coord: &mut Coordinator, flags: &Flags) -> Result<u64> {
     coord.set_opt_level(parse_opt_level(flags)?);
+    coord.checks_enabled = !flags.flag("no-checks");
     let (name, src) = load_source(flags)?;
     let externals = parse_externals(flags.get("externals"))?;
-    let fp = coord.compile_source(&src, &name, &externals)?;
-    let ir = coord.ir(fp)?;
-    Ok((fp, ir))
+    coord.compile_source(&src, &name, &externals)
 }
 
 fn cmd_inspect(flags: &Flags) -> Result<()> {
     let mut coord = Coordinator::new();
-    let (_, ir) = load_ir(&mut coord, flags)?;
-    print!("{}", ir.dump());
+    let fp = load_fp(&mut coord, flags)?;
+    print!("{}", coord.ir(fp)?.dump());
     Ok(())
 }
 
@@ -203,16 +233,12 @@ fn cmd_ir(flags: &Flags) -> Result<()> {
     Ok(())
 }
 
-/// Synthetic storages for a stencil at a domain: smooth deterministic data.
-fn synthetic_fields(
-    coord: &mut Coordinator,
-    fp: u64,
-    ir: &gt4rs::StencilIr,
-    domain: [usize; 3],
-) -> Result<Vec<(String, Storage)>> {
+/// Synthetic storages for every field of a stencil at a domain: smooth
+/// deterministic data, in declaration order.
+fn synthetic_fields(stencil: &Stencil, domain: [usize; 3]) -> Result<Vec<(String, Storage)>> {
     let mut out = Vec::new();
-    for (idx, f) in ir.fields.iter().enumerate() {
-        let mut s = coord.alloc_field(fp, &f.name, domain)?;
+    for (idx, f) in stencil.ir().fields.iter().enumerate() {
+        let mut s = stencil.alloc_field(&f.name, domain)?;
         let phase = idx as f64;
         let [ni, nj, nk] = domain;
         let h = s.info.halo;
@@ -231,63 +257,115 @@ fn synthetic_fields(
     Ok(out)
 }
 
-fn default_scalars(ir: &gt4rs::StencilIr) -> Vec<(String, f64)> {
-    ir.scalars.iter().map(|s| (s.name.clone(), 0.1)).collect()
+fn default_scalars(stencil: &Stencil) -> Vec<(String, f64)> {
+    stencil.ir().scalars.iter().map(|s| (s.name.clone(), 0.1)).collect()
+}
+
+/// Bind a full set of named fields/scalars on a handle (declaration-order
+/// storages come back out of `synthetic_fields`, so `run` call sites pass
+/// them positionally).
+fn bind_all(
+    stencil: &Stencil,
+    fields: &[(String, Storage)],
+    scalars: &[(String, f64)],
+    domain: [usize; 3],
+) -> Result<gt4rs::coordinator::BoundInvocation> {
+    stencil.bind().domain(domain).fields(fields).scalars(scalars).finish()
 }
 
 fn cmd_run(flags: &Flags) -> Result<()> {
     let mut coord = Coordinator::new();
-    let (fp, ir) = load_ir(&mut coord, flags)?;
+    let fp = load_fp(&mut coord, flags)?;
     let backend = flags.get_or("backend", "vector");
     let domain = parse_domain(flags.get_or("domain", "64x64x32"))?;
     let iters: usize = flags.get_or("iters", "3").parse()?;
+    let json = flags.flag("json");
 
-    let mut fields = synthetic_fields(&mut coord, fp, &ir, domain)?;
-    let scalars = default_scalars(&ir);
+    let stencil = coord.stencil_for(fp, backend)?;
+    let mut fields = synthetic_fields(&stencil, domain)?;
+    let scalars = default_scalars(&stencil);
+    // Bind once (full validation), run N times (shape re-checks only).
+    let mut inv = bind_all(&stencil, &fields, &scalars, domain)?;
+
+    let mut iter_rows: Vec<String> = Vec::new();
     for it in 0..iters {
-        let mut refs: Vec<(&str, &mut Storage)> =
-            fields.iter_mut().map(|(n, s)| (n.as_str(), s)).collect();
-        let srefs: Vec<(&str, f64)> =
-            scalars.iter().map(|(n, v)| (n.as_str(), *v)).collect();
-        let stats = coord.run(fp, backend, &mut refs, &srefs, domain)?;
-        println!("iter {it}: checks {:?}  execute {:?}", stats.checks, stats.execute);
+        let mut refs: Vec<&mut Storage> = fields.iter_mut().map(|(_, s)| s).collect();
+        let stats = inv.run(&mut refs)?;
+        if json {
+            iter_rows.push(format!(
+                "{{\"iter\":{it},\"checks_ns\":{},\"execute_ns\":{}}}",
+                stats.checks.as_nanos(),
+                stats.execute.as_nanos()
+            ));
+        } else {
+            println!("iter {it}: checks {:?}  execute {:?}", stats.checks, stats.execute);
+        }
     }
-    for (n, s) in &fields {
-        println!("  {:<12} domain sum = {:+.9e}", n, s.domain_sum());
+    if json {
+        let field_rows: Vec<String> = fields
+            .iter()
+            .map(|(n, s)| {
+                format!("{{\"name\":\"{n}\",\"domain_sum\":{}}}", json_f64(s.domain_sum()))
+            })
+            .collect();
+        println!(
+            "{{\"stencil\":\"{}\",\"backend\":\"{backend}\",\"domain\":[{},{},{}],\
+             \"opt_level\":\"{}\",\"checks_enabled\":{},\"iters\":[{}],\"fields\":[{}]}}",
+            stencil.name(),
+            domain[0],
+            domain[1],
+            domain[2],
+            parse_opt_level(flags)?,
+            !flags.flag("no-checks"),
+            iter_rows.join(","),
+            field_rows.join(",")
+        );
+    } else {
+        for (n, s) in &fields {
+            println!("  {:<12} domain sum = {:+.9e}", n, s.domain_sum());
+        }
     }
     Ok(())
 }
 
 fn cmd_validate(flags: &Flags) -> Result<()> {
     let mut coord = Coordinator::new();
-    let (fp, ir) = load_ir(&mut coord, flags)?;
+    let fp = load_fp(&mut coord, flags)?;
     let domain = parse_domain(flags.get_or("domain", "24x20x12"))?;
-    let backends: Vec<&str> =
-        flags.get_or("backends", "debug,vector,xla").split(',').collect();
+    let backends: Vec<String> = flags
+        .get_or("backends", "debug,vector,xla")
+        .split(',')
+        .map(str::to_string)
+        .collect();
 
     // Reference: debug backend.
-    let mut reference = synthetic_fields(&mut coord, fp, &ir, domain)?;
-    let scalars = default_scalars(&ir);
+    let reference_stencil = coord.stencil_for(fp, "debug")?;
+    let mut reference = synthetic_fields(&reference_stencil, domain)?;
+    let scalars = default_scalars(&reference_stencil);
     {
-        let mut refs: Vec<(&str, &mut Storage)> =
-            reference.iter_mut().map(|(n, s)| (n.as_str(), s)).collect();
-        let srefs: Vec<(&str, f64)> =
-            scalars.iter().map(|(n, v)| (n.as_str(), *v)).collect();
-        coord.run(fp, "debug", &mut refs, &srefs, domain)?;
+        let mut inv = bind_all(&reference_stencil, &reference, &scalars, domain)?;
+        let mut refs: Vec<&mut Storage> = reference.iter_mut().map(|(_, s)| s).collect();
+        inv.run(&mut refs)?;
     }
 
     let mut ok = true;
-    for be in backends {
+    for be in &backends {
         if be == "debug" {
             continue;
         }
-        let mut fields = synthetic_fields(&mut coord, fp, &ir, domain)?;
+        let stencil = match coord.stencil_for(fp, be) {
+            Ok(s) => s,
+            Err(e) if gt4rs::backend::is_unavailable(&e) => {
+                println!("{be:<10} SKIP (unavailable: {})", first_line(&format!("{e:#}")));
+                continue;
+            }
+            Err(e) => return Err(e),
+        };
+        let mut fields = synthetic_fields(&stencil, domain)?;
         {
-            let mut refs: Vec<(&str, &mut Storage)> =
-                fields.iter_mut().map(|(n, s)| (n.as_str(), s)).collect();
-            let srefs: Vec<(&str, f64)> =
-                scalars.iter().map(|(n, v)| (n.as_str(), *v)).collect();
-            match coord.run(fp, be, &mut refs, &srefs, domain) {
+            let mut inv = bind_all(&stencil, &fields, &scalars, domain)?;
+            let mut refs: Vec<&mut Storage> = fields.iter_mut().map(|(_, s)| s).collect();
+            match inv.run(&mut refs) {
                 Ok(_) => {}
                 Err(e) if gt4rs::backend::is_unavailable(&e) => {
                     println!("{be:<10} SKIP (unavailable: {})", first_line(&format!("{e:#}")));
@@ -313,7 +391,7 @@ fn cmd_validate(flags: &Flags) -> Result<()> {
 }
 
 fn cmd_bench(flags: &Flags) -> Result<()> {
-    let stencil = flags.get_or("stencil", "hdiff");
+    let stencil_name = flags.get_or("stencil", "hdiff");
     let domains: Vec<[usize; 3]> = flags
         .get_or("domains", "16x16x8,32x32x16,48x48x24,64x64x32")
         .split(',')
@@ -325,58 +403,93 @@ fn cmd_bench(flags: &Flags) -> Result<()> {
         .map(str::to_string)
         .collect();
     let iters: usize = flags.get_or("iters", "5").parse()?;
+    let json = flags.flag("json");
 
     let mut coord = Coordinator::new();
     coord.set_opt_level(parse_opt_level(flags)?);
-    let fp = coord.compile_library(stencil)?;
-    let ir = coord.ir(fp)?;
-    println!(
-        "# {stencil}: mean wall time per call over {iters} iters (first call = compile, excluded)"
-    );
-    println!("{:<12} {:>14} {:>14}", "domain", "backend", "mean");
+    coord.checks_enabled = !flags.flag("no-checks");
+    let fp = coord.compile_library(stencil_name)?;
+    let mut rows: Vec<String> = Vec::new();
+    if !json {
+        println!(
+            "# {stencil_name}: mean wall time per call over {iters} iters (first call = compile, excluded)"
+        );
+        println!("{:<12} {:>14} {:>14}", "domain", "backend", "mean");
+    }
     for domain in &domains {
+        let dstr = format!("{}x{}x{}", domain[0], domain[1], domain[2]);
         for be in &backends {
-            let mut fields = synthetic_fields(&mut coord, fp, &ir, *domain)?;
-            let scalars = default_scalars(&ir);
+            // A backend that cannot be created or run still gets a row in
+            // JSON mode — consumers must be able to tell "skipped" from
+            // "silently missing".
+            let unavailable = |e: &anyhow::Error, rows: &mut Vec<String>| {
+                let reason = first_line(&format!("{e:#}"));
+                if json {
+                    rows.push(format!(
+                        "{{\"stencil\":\"{stencil_name}\",\"domain\":\"{dstr}\",\
+                         \"backend\":\"{be}\",\"error\":\"{}\"}}",
+                        reason.replace('"', "'")
+                    ));
+                } else {
+                    println!("{dstr:<12} {be:>14} {:>14}", format!("n/a ({reason})"));
+                }
+            };
+            let stencil = match coord.stencil_for(fp, be) {
+                Ok(s) => s,
+                Err(e) => {
+                    unavailable(&e, &mut rows);
+                    continue;
+                }
+            };
+            let mut fields = synthetic_fields(&stencil, *domain)?;
+            let scalars = default_scalars(&stencil);
+            let mut inv = bind_all(&stencil, &fields, &scalars, *domain)?;
             // warm-up (compile) run
             let warm = {
-                let mut refs: Vec<(&str, &mut Storage)> =
-                    fields.iter_mut().map(|(n, s)| (n.as_str(), s)).collect();
-                let srefs: Vec<(&str, f64)> =
-                    scalars.iter().map(|(n, v)| (n.as_str(), *v)).collect();
-                coord.run(fp, be, &mut refs, &srefs, *domain)
+                let mut refs: Vec<&mut Storage> =
+                    fields.iter_mut().map(|(_, s)| s).collect();
+                inv.run(&mut refs)
             };
             if let Err(e) = warm {
-                println!(
-                    "{:<12} {:>14} {:>14}",
-                    format!("{}x{}x{}", domain[0], domain[1], domain[2]),
-                    be,
-                    format!("n/a ({})", first_line(&format!("{e:#}")))
-                );
+                unavailable(&e, &mut rows);
                 continue;
             }
             let t0 = Instant::now();
             for _ in 0..iters {
-                let mut refs: Vec<(&str, &mut Storage)> =
-                    fields.iter_mut().map(|(n, s)| (n.as_str(), s)).collect();
-                let srefs: Vec<(&str, f64)> =
-                    scalars.iter().map(|(n, v)| (n.as_str(), *v)).collect();
-                coord.run(fp, be, &mut refs, &srefs, *domain)?;
+                let mut refs: Vec<&mut Storage> =
+                    fields.iter_mut().map(|(_, s)| s).collect();
+                inv.run(&mut refs)?;
             }
             let mean = t0.elapsed() / iters as u32;
-            println!(
-                "{:<12} {:>14} {:>14?}",
-                format!("{}x{}x{}", domain[0], domain[1], domain[2]),
-                be,
-                mean
-            );
+            if json {
+                rows.push(format!(
+                    "{{\"stencil\":\"{stencil_name}\",\"domain\":\"{dstr}\",\
+                     \"backend\":\"{be}\",\"mean_ns\":{},\"iters\":{iters}}}",
+                    mean.as_nanos()
+                ));
+            } else {
+                println!("{dstr:<12} {be:>14} {mean:>14?}");
+            }
         }
+    }
+    if json {
+        println!("[{}]", rows.join(","));
     }
     Ok(())
 }
 
 fn first_line(s: &str) -> String {
     s.lines().next().unwrap_or("").chars().take(60).collect()
+}
+
+/// A f64 as a JSON value: exponent form for finite numbers, a quoted
+/// string for NaN/inf (which are not valid JSON numbers).
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:e}")
+    } else {
+        format!("\"{v}\"")
+    }
 }
 
 fn cmd_model(flags: &Flags) -> Result<()> {
@@ -387,6 +500,7 @@ fn cmd_model(flags: &Flags) -> Result<()> {
         domain,
         backend: backend.clone(),
         opt_level: parse_opt_level(flags)?,
+        checks: !flags.flag("no-checks"),
         ..ModelConfig::default()
     };
     let mut model = IsentropicModel::new(config)?;

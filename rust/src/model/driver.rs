@@ -1,7 +1,16 @@
 //! The model driver: time stepping, halo management, diagnostics.
+//!
+//! The three physics stencils are bound **once** at model construction
+//! ([`crate::coordinator::BoundInvocation`]): the full storage validation
+//! runs a single time, and every `step()` afterwards is the cheap
+//! re-check-shapes path — the driver-composition style compiled stencil
+//! objects exist for. The phi/out double buffer swap is safe under
+//! bind-once semantics because both storages share one geometry; a
+//! reallocation with a different shape would be rejected with a re-bind
+//! error.
 
 use super::grid::{gaussian_blob, periodic_halo_update};
-use crate::coordinator::Coordinator;
+use crate::coordinator::{BoundInvocation, Coordinator, Stencil};
 use crate::storage::{Storage, StorageInfo};
 use anyhow::Result;
 use std::time::{Duration, Instant};
@@ -25,6 +34,9 @@ pub struct ModelConfig {
     pub backend: String,
     /// Optimization level for every compiled stencil.
     pub opt_level: crate::opt::OptLevel,
+    /// Run-time storage checks (bind-time validation; per-step shape
+    /// re-checks). Disable for the Fig. 3 dashed-line configuration.
+    pub checks: bool,
 }
 
 impl Default for ModelConfig {
@@ -41,6 +53,7 @@ impl Default for ModelConfig {
             dz: 1.0,
             backend: "vector".to_string(),
             opt_level: crate::opt::OptLevel::O2,
+            checks: true,
         }
     }
 }
@@ -60,9 +73,10 @@ pub struct StepDiagnostics {
 pub struct IsentropicModel {
     pub config: ModelConfig,
     coord: Coordinator,
-    fp_advect: u64,
-    fp_hdiff: u64,
-    fp_vadv: u64,
+    /// Invocations bound once at construction, reused every step.
+    advect: BoundInvocation,
+    hdiff: BoundInvocation,
+    vadv: BoundInvocation,
     /// Tracer field (with hdiff halo).
     pub phi: Storage,
     /// Scratch for stencil outputs.
@@ -77,9 +91,10 @@ pub struct IsentropicModel {
 impl IsentropicModel {
     pub fn new(config: ModelConfig) -> Result<IsentropicModel> {
         let mut coord = Coordinator::with_opt_level(config.opt_level);
-        let fp_advect = coord.compile_library("upwind_advect")?;
-        let fp_hdiff = coord.compile_library("hdiff")?;
-        let fp_vadv = coord.compile_library("vadv")?;
+        coord.checks_enabled = config.checks;
+        let advect: Stencil = coord.stencil_library("upwind_advect", &config.backend)?;
+        let hdiff: Stencil = coord.stencil_library("hdiff", &config.backend)?;
+        let vadv: Stencil = coord.stencil_library("vadv", &config.backend)?;
         let domain = config.domain;
         // A single halo-3 allocation satisfies every stencil in the suite
         // (hdiff needs 2, upwind needs 1).
@@ -95,12 +110,41 @@ impl IsentropicModel {
         let w = Storage::from_fn(domain, 0, |_, _, k| {
             config.w_amp * (k as f64 / domain[2].max(1) as f64 - 0.5)
         });
+
+        // Bind once: full validation here; step() only re-checks shapes.
+        // phi and out share a geometry, so the per-step double-buffer swap
+        // is compatible with the bound snapshots.
+        let advect = advect
+            .bind()
+            .field("phi", &phi)
+            .field("out", &out)
+            .scalar("u", config.u)
+            .scalar("v", config.v)
+            .scalar("dtdx", config.dt / config.dx)
+            .scalar("dtdy", config.dt / config.dy)
+            .domain(domain)
+            .finish()?;
+        let hdiff = hdiff
+            .bind()
+            .field("in_phi", &phi)
+            .field("coeff", &coeff)
+            .field("out_phi", &out)
+            .domain(domain)
+            .finish()?;
+        let vadv = vadv
+            .bind()
+            .field("phi", &phi)
+            .field("w", &w)
+            .scalar("dtdz", config.dt / config.dz)
+            .domain(domain)
+            .finish()?;
+
         Ok(IsentropicModel {
             config,
             coord,
-            fp_advect,
-            fp_hdiff,
-            fp_vadv,
+            advect,
+            hdiff,
+            vadv,
             phi,
             out,
             coeff,
@@ -112,56 +156,31 @@ impl IsentropicModel {
     /// Advance one time step; returns diagnostics.
     pub fn step(&mut self) -> Result<StepDiagnostics> {
         let t0 = Instant::now();
+
+        // `config` is public and was historically re-read every step
+        // (adaptive time-stepping mutates it between steps): refresh the
+        // bound scalars — a few name lookups, no storage re-validation.
         let cfg = self.config.clone();
-        let domain = cfg.domain;
-        let backend = cfg.backend.as_str();
+        self.advect.set_scalar("u", cfg.u)?;
+        self.advect.set_scalar("v", cfg.v)?;
+        self.advect.set_scalar("dtdx", cfg.dt / cfg.dx)?;
+        self.advect.set_scalar("dtdy", cfg.dt / cfg.dy)?;
+        self.vadv.set_scalar("dtdz", cfg.dt / cfg.dz)?;
 
         // (1) horizontal upwind advection: phi -> out
         periodic_halo_update(&mut self.phi);
-        {
-            let mut refs: Vec<(&str, &mut Storage)> =
-                vec![("phi", &mut self.phi), ("out", &mut self.out)];
-            self.coord.run(
-                self.fp_advect,
-                backend,
-                &mut refs,
-                &[
-                    ("u", cfg.u),
-                    ("v", cfg.v),
-                    ("dtdx", cfg.dt / cfg.dx),
-                    ("dtdy", cfg.dt / cfg.dy),
-                ],
-                domain,
-            )?;
-        }
+        self.advect.run(&mut [&mut self.phi, &mut self.out])?;
         std::mem::swap(&mut self.phi, &mut self.out);
 
         // (2) flux-limited horizontal diffusion: phi -> out
         periodic_halo_update(&mut self.phi);
-        {
-            let mut refs: Vec<(&str, &mut Storage)> = vec![
-                ("in_phi", &mut self.phi),
-                ("coeff", &mut self.coeff),
-                ("out_phi", &mut self.out),
-            ];
-            self.coord
-                .run(self.fp_hdiff, backend, &mut refs, &[], domain)?;
-        }
+        self.hdiff
+            .run(&mut [&mut self.phi, &mut self.coeff, &mut self.out])?;
         std::mem::swap(&mut self.phi, &mut self.out);
 
         // (3) implicit vertical advection: phi in place
-        {
-            // vadv needs no horizontal halo; reuse phi directly.
-            let mut refs: Vec<(&str, &mut Storage)> =
-                vec![("phi", &mut self.phi), ("w", &mut self.w)];
-            self.coord.run(
-                self.fp_vadv,
-                backend,
-                &mut refs,
-                &[("dtdz", cfg.dt / cfg.dz)],
-                domain,
-            )?;
-        }
+        // (vadv needs no horizontal halo; phi is reused directly.)
+        self.vadv.run(&mut [&mut self.phi, &mut self.w])?;
 
         self.step_count += 1;
         let (mass, min, max) = self.diagnose();
@@ -270,5 +289,43 @@ mod tests {
         let d = md.phi_snapshot();
         let v = mv.phi_snapshot();
         assert!(d.max_abs_diff(&v) < 1e-12);
+    }
+
+    #[test]
+    fn config_mutations_apply_between_steps() {
+        // `config` is public; scalar changes after construction must keep
+        // taking effect (the invocations refresh their scalars per step).
+        let mut a = IsentropicModel::new(small_config("vector")).unwrap();
+        let mut b = IsentropicModel::new(ModelConfig {
+            dt: 0.05,
+            ..small_config("vector")
+        })
+        .unwrap();
+        b.config.dt = a.config.dt;
+        a.run(4).unwrap();
+        b.run(4).unwrap();
+        assert_eq!(a.phi_snapshot().max_abs_diff(&b.phi_snapshot()), 0.0);
+    }
+
+    #[test]
+    fn bind_once_amortizes_validation() {
+        // After construction (which pays the one full validation per
+        // stencil), per-step check time is the shape re-check only —
+        // the metrics' first-call attribution makes this visible.
+        let mut m = IsentropicModel::new(small_config("vector")).unwrap();
+        m.run(8).unwrap();
+        let t = m.coordinator().metrics.get("hdiff", "vector").unwrap();
+        assert_eq!(t.calls, 8);
+    }
+
+    #[test]
+    fn disabled_checks_model_still_runs() {
+        let mut cfg = small_config("vector");
+        cfg.checks = false;
+        let mut m = IsentropicModel::new(cfg).unwrap();
+        let d = m.run(3).unwrap();
+        assert_eq!(d.last().unwrap().step, 3);
+        let t = m.coordinator().metrics.get("hdiff", "vector").unwrap();
+        assert_eq!(t.checks, Duration::ZERO);
     }
 }

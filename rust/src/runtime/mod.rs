@@ -9,10 +9,23 @@
 //!   the `xla` codegen backend.
 
 use anyhow::{anyhow, Context, Result};
+use std::mem::ManuallyDrop;
 use std::path::Path;
-use std::rc::Rc;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Once;
+use std::sync::{Arc, Mutex, Once, OnceLock};
+
+/// One process-wide lock serializing every PJRT FFI call made through
+/// this module (client creation, compilation, execution, *and* the FFI
+/// destructors — [`Runtime`] and [`Executable`] drop their handles under
+/// it). The backends' `Send`/`Sync` assertions rest on it: even when
+/// several backend instances share one [`Runtime`] clone, all use of the
+/// underlying client funnels through these entry points and is therefore
+/// mutually exclusive — each backend's own mutex alone could not
+/// guarantee that.
+fn pjrt_lock() -> &'static Mutex<()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+}
 
 /// Whether a PJRT CPU client can be created in this process. Probed once
 /// and cached; used by the compiled backends to report a structured
@@ -22,6 +35,7 @@ pub fn pjrt_available() -> bool {
     static PROBE: Once = Once::new();
     static AVAILABLE: AtomicBool = AtomicBool::new(false);
     PROBE.call_once(|| {
+        let _serial = pjrt_lock().lock().unwrap();
         if xla::PjRtClient::cpu().is_ok() {
             AVAILABLE.store(true, Ordering::SeqCst);
         }
@@ -40,38 +54,69 @@ pub fn skip_test_without_pjrt(test: &str) -> bool {
     true
 }
 
-/// Shared PJRT CPU client.
+/// Shared PJRT CPU client. The handle is reference-counted with an `Arc`
+/// (atomic refcounts) so clones may be parked inside backends that assert
+/// `Send`/`Sync` and serialize all client *use* behind a lock — see the
+/// safety notes on [`crate::backend::xlagen::XlaBackend`]. The client is
+/// held in `ManuallyDrop` so the FFI destructor (which runs when the last
+/// `Arc` clone goes away, on whatever thread that happens) also executes
+/// under [`pjrt_lock`].
 #[derive(Clone)]
 pub struct Runtime {
-    client: Rc<xla::PjRtClient>,
+    client: ManuallyDrop<Arc<xla::PjRtClient>>,
+}
+
+impl Drop for Runtime {
+    fn drop(&mut self) {
+        // Tolerate poisoning: panicking inside drop would abort.
+        let _serial = pjrt_lock().lock().unwrap_or_else(|p| p.into_inner());
+        // SAFETY: dropped exactly once, here, under the FFI lock.
+        unsafe { ManuallyDrop::drop(&mut self.client) }
+    }
 }
 
 impl Runtime {
     /// Create a runtime on the PJRT CPU client.
+    // The client is deliberately Arc'd despite being `!Send`/`!Sync` at
+    // the binding level: all cross-thread use is serialized by the
+    // backends (see `backend::xlagen::XlaBackend`'s safety notes).
+    #[allow(clippy::arc_with_non_send_sync)]
     pub fn cpu() -> Result<Runtime> {
+        let _serial = pjrt_lock().lock().unwrap();
         let client =
             xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
-        Ok(Runtime { client: Rc::new(client) })
+        Ok(Runtime { client: ManuallyDrop::new(Arc::new(client)) })
     }
 
     pub fn platform(&self) -> String {
+        let _serial = pjrt_lock().lock().unwrap();
         self.client.platform_name()
     }
 
     /// Load + compile an HLO text artifact.
     pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<Executable> {
+        let _serial = pjrt_lock().lock().unwrap();
         let path = path.as_ref();
         let proto = xla::HloModuleProto::from_text_file(path)
             .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        self.compile(&comp)
+        self.compile_locked(&comp)
             .with_context(|| format!("compiling artifact {}", path.display()))
     }
 
     /// JIT-compile a computation built with `XlaBuilder`.
     pub fn compile(&self, comp: &xla::XlaComputation) -> Result<Executable> {
+        let _serial = pjrt_lock().lock().unwrap();
+        self.compile_locked(comp)
+    }
+
+    /// Compilation body; caller holds [`pjrt_lock`].
+    fn compile_locked(&self, comp: &xla::XlaComputation) -> Result<Executable> {
         let exe = self.client.compile(comp).map_err(|e| anyhow!("XLA compile: {e:?}"))?;
-        Ok(Executable { exe, client: self.client.clone() })
+        Ok(Executable {
+            exe: ManuallyDrop::new(exe),
+            client: self.client.clone(),
+        })
     }
 }
 
@@ -83,16 +128,30 @@ pub enum Arg<'a> {
     Scalar(f64),
 }
 
-/// A compiled, loaded executable.
+/// A compiled, loaded executable. Both FFI handles are dropped under
+/// [`pjrt_lock`] (see [`Runtime`]).
 pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    client: Rc<xla::PjRtClient>,
+    exe: ManuallyDrop<xla::PjRtLoadedExecutable>,
+    client: ManuallyDrop<Arc<xla::PjRtClient>>,
+}
+
+impl Drop for Executable {
+    fn drop(&mut self) {
+        // Tolerate poisoning: panicking inside drop would abort.
+        let _serial = pjrt_lock().lock().unwrap_or_else(|p| p.into_inner());
+        // SAFETY: dropped exactly once, here, under the FFI lock.
+        unsafe {
+            ManuallyDrop::drop(&mut self.exe);
+            ManuallyDrop::drop(&mut self.client);
+        }
+    }
 }
 
 impl Executable {
     /// Execute with host arguments, returning each output flattened to f64
     /// (C-order). Tuple outputs (jax `return_tuple=True`) are decomposed.
     pub fn run_f64(&self, args: &[Arg]) -> Result<Vec<Vec<f64>>> {
+        let _serial = pjrt_lock().lock().unwrap();
         // Stage inputs as device buffers (avoids a literal copy).
         let mut buffers = Vec::with_capacity(args.len());
         for a in args {

@@ -72,26 +72,30 @@ fn model_step_artifact_composes_hdiff_and_vadv() {
         .unwrap();
     assert_eq!(outputs.len(), 1);
 
-    // Path B: library hdiff then vadv on the debug backend.
+    // Path B: library hdiff then vadv on the debug backend, via handles.
     let mut coord = gt4rs::coordinator::Coordinator::new();
-    let fp_h = coord.compile_library("hdiff").unwrap();
-    let fp_v = coord.compile_library("vadv").unwrap();
+    let hdiff = coord.stencil_library("hdiff", "debug").unwrap();
+    let vadv = coord.stencil_library("vadv", "debug").unwrap();
     let mut out = Storage::with_halo(domain, 0);
-    {
-        let mut refs: Vec<(&str, &mut Storage)> = vec![
-            ("in_phi", &mut phi_box),
-            ("coeff", &mut coeff),
-            ("out_phi", &mut out),
-        ];
-        coord.run(fp_h, "debug", &mut refs, &[], domain).unwrap();
-    }
-    {
-        let mut refs: Vec<(&str, &mut Storage)> =
-            vec![("phi", &mut out), ("w", &mut w)];
-        coord
-            .run(fp_v, "debug", &mut refs, &[("dtdz", dtdz)], domain)
-            .unwrap();
-    }
+    hdiff
+        .bind()
+        .field("in_phi", &phi_box)
+        .field("coeff", &coeff)
+        .field("out_phi", &out)
+        .domain(domain)
+        .finish()
+        .unwrap()
+        .run(&mut [&mut phi_box, &mut coeff, &mut out])
+        .unwrap();
+    vadv.bind()
+        .field("phi", &out)
+        .field("w", &w)
+        .scalar("dtdz", dtdz)
+        .domain(domain)
+        .finish()
+        .unwrap()
+        .run(&mut [&mut out, &mut w])
+        .unwrap();
 
     let expected = out.domain_to_c_order();
     let mut max_d: f64 = 0.0;

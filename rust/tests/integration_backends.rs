@@ -28,7 +28,8 @@ fn fill(s: &mut Storage, seed: f64) {
     }
 }
 
-/// Run `stencil` on `backend`, returning the post-run fields.
+/// Run `stencil` on `backend` via the handle API, returning the post-run
+/// fields.
 fn run_on(
     coord: &mut Coordinator,
     stencil: &str,
@@ -36,23 +37,21 @@ fn run_on(
     domain: [usize; 3],
     scalars: &[(&str, f64)],
 ) -> anyhow::Result<Vec<(String, Storage)>> {
-    let fp = coord.compile_library(stencil)?;
-    let ir = coord.ir(fp)?;
-    let mut fields: Vec<(String, Storage)> = ir
+    let handle = coord.stencil_library(stencil, backend)?;
+    let mut fields: Vec<(String, Storage)> = handle
+        .ir()
         .fields
         .iter()
         .enumerate()
         .map(|(idx, f)| {
-            let mut s = coord.alloc_field(fp, &f.name, domain).unwrap();
+            let mut s = handle.alloc_field(&f.name, domain).unwrap();
             fill(&mut s, idx as f64);
             (f.name.clone(), s)
         })
         .collect();
-    {
-        let mut refs: Vec<(&str, &mut Storage)> =
-            fields.iter_mut().map(|(n, s)| (n.as_str(), s)).collect();
-        coord.run(fp, backend, &mut refs, scalars, domain)?;
-    }
+    let mut inv = handle.bind().domain(domain).fields(&fields).scalars(scalars).finish()?;
+    let mut refs: Vec<&mut Storage> = fields.iter_mut().map(|(_, s)| s).collect();
+    inv.run(&mut refs)?;
     Ok(fields)
 }
 
@@ -111,7 +110,6 @@ fn figure1_diffusion_agrees_on_rust_backends() {
     let fp = coord
         .compile_source(gt4rs::stdlib::FIGURE1_SRC, "diffusion", &Default::default())
         .unwrap();
-    let ir = coord.ir(fp).unwrap();
     let domain = AOT_DOMAIN;
     let xla_ok = gt4rs::runtime::pjrt_available();
     if !xla_ok {
@@ -124,22 +122,29 @@ fn figure1_diffusion_agrees_on_rust_backends() {
     };
     let mut outs: Vec<Storage> = Vec::new();
     for be in backends {
-        let mut fields: Vec<(String, Storage)> = ir
+        let handle = coord.stencil_for(fp, be).unwrap();
+        let mut fields: Vec<(String, Storage)> = handle
+            .ir()
             .fields
             .iter()
             .enumerate()
             .map(|(idx, f)| {
-                let mut s = coord.alloc_field(fp, &f.name, domain).unwrap();
+                let mut s = handle.alloc_field(&f.name, domain).unwrap();
                 fill(&mut s, idx as f64);
                 (f.name.clone(), s)
             })
             .collect();
         {
-            let mut refs: Vec<(&str, &mut Storage)> =
-                fields.iter_mut().map(|(n, s)| (n.as_str(), s)).collect();
-            coord
-                .run(fp, be, &mut refs, &[("alpha", 0.05)], domain)
+            let mut inv = handle
+                .bind()
+                .domain(domain)
+                .scalar("alpha", 0.05)
+                .fields(&fields)
+                .finish()
                 .unwrap();
+            let mut refs: Vec<&mut Storage> =
+                fields.iter_mut().map(|(_, s)| s).collect();
+            inv.run(&mut refs).unwrap();
         }
         outs.push(fields.pop().unwrap().1);
     }
@@ -160,7 +165,7 @@ fn pallas_and_jnp_artifact_variants_agree() {
     let domain = AOT_DOMAIN;
     let mut results = Vec::new();
     for variant in ["pallas", "jnp"] {
-        let mut be = PjrtAotBackend::with_runtime(rt.clone()).with_variant(variant);
+        let be = PjrtAotBackend::with_runtime(rt.clone()).with_variant(variant);
         if !be.available(&format!("hdiff__{variant}"), domain) && !be.available("hdiff", domain)
         {
             eprintln!("SKIP pallas/jnp comparison: artifacts missing");
@@ -216,20 +221,23 @@ fn chained_steps_accumulate_identically_across_backends() {
         &["debug", "vector"]
     };
     for be in backends {
-        let mut inp = coord.alloc_field(fp, "in_phi", domain).unwrap();
-        let mut coeff = coord.alloc_field(fp, "coeff", domain).unwrap();
-        let mut out = coord.alloc_field(fp, "out_phi", domain).unwrap();
+        let handle = coord.stencil_for(fp, be).unwrap();
+        let mut inp = handle.alloc_field("in_phi", domain).unwrap();
+        let mut coeff = handle.alloc_field("coeff", domain).unwrap();
+        let mut out = handle.alloc_field("out_phi", domain).unwrap();
         fill(&mut inp, 0.0);
         coeff.fill(0.05);
+        // Bind once; the five chained steps below are the run-many path.
+        let mut inv = handle
+            .bind()
+            .field("in_phi", &inp)
+            .field("coeff", &coeff)
+            .field("out_phi", &out)
+            .domain(domain)
+            .finish()
+            .unwrap();
         for _ in 0..5 {
-            {
-                let mut refs: Vec<(&str, &mut Storage)> = vec![
-                    ("in_phi", &mut inp),
-                    ("coeff", &mut coeff),
-                    ("out_phi", &mut out),
-                ];
-                coord.run(fp, be, &mut refs, &[], domain).unwrap();
-            }
+            inv.run(&mut [&mut inp, &mut coeff, &mut out]).unwrap();
             // copy result back into the (halo'd) input, halo refreshed by
             // periodic wrap
             for i in 0..domain[0] as i64 {

@@ -129,6 +129,180 @@ fn opt_levels_produce_identical_checksums() {
     assert_eq!(sums("0"), sums("3"));
 }
 
+/// Minimal structural JSON validator (no serde in the offline crate set):
+/// checks the value grammar — objects, arrays, strings with escapes,
+/// numbers (incl. exponents), booleans, null — and full input consumption.
+fn assert_valid_json(text: &str) {
+    fn skip_ws(b: &[u8], mut i: usize) -> usize {
+        while i < b.len() && (b[i] as char).is_ascii_whitespace() {
+            i += 1;
+        }
+        i
+    }
+    fn value(b: &[u8], i: usize) -> Result<usize, String> {
+        let i = skip_ws(b, i);
+        let Some(&c) = b.get(i) else { return Err("eof".into()) };
+        match c {
+            b'{' => {
+                let mut i = skip_ws(b, i + 1);
+                if b.get(i) == Some(&b'}') {
+                    return Ok(i + 1);
+                }
+                loop {
+                    i = string(b, skip_ws(b, i))?;
+                    i = skip_ws(b, i);
+                    if b.get(i) != Some(&b':') {
+                        return Err(format!("expected ':' at {i}"));
+                    }
+                    i = value(b, i + 1)?;
+                    i = skip_ws(b, i);
+                    match b.get(i) {
+                        Some(&b',') => i += 1,
+                        Some(&b'}') => return Ok(i + 1),
+                        _ => return Err(format!("expected ',' or '}}' at {i}")),
+                    }
+                }
+            }
+            b'[' => {
+                let mut i = skip_ws(b, i + 1);
+                if b.get(i) == Some(&b']') {
+                    return Ok(i + 1);
+                }
+                loop {
+                    i = value(b, i)?;
+                    i = skip_ws(b, i);
+                    match b.get(i) {
+                        Some(&b',') => i += 1,
+                        Some(&b']') => return Ok(i + 1),
+                        _ => return Err(format!("expected ',' or ']' at {i}")),
+                    }
+                }
+            }
+            b'"' => string(b, i),
+            b't' => lit(b, i, "true"),
+            b'f' => lit(b, i, "false"),
+            b'n' => lit(b, i, "null"),
+            _ => number(b, i),
+        }
+    }
+    fn lit(b: &[u8], i: usize, s: &str) -> Result<usize, String> {
+        if b[i..].starts_with(s.as_bytes()) {
+            Ok(i + s.len())
+        } else {
+            Err(format!("bad literal at {i}"))
+        }
+    }
+    fn string(b: &[u8], i: usize) -> Result<usize, String> {
+        if b.get(i) != Some(&b'"') {
+            return Err(format!("expected string at {i}"));
+        }
+        let mut i = i + 1;
+        while let Some(&c) = b.get(i) {
+            match c {
+                b'"' => return Ok(i + 1),
+                b'\\' => i += 2,
+                _ => i += 1,
+            }
+        }
+        Err("unterminated string".into())
+    }
+    fn number(b: &[u8], mut i: usize) -> Result<usize, String> {
+        let start = i;
+        if b.get(i) == Some(&b'-') {
+            i += 1;
+        }
+        let digits = |b: &[u8], mut i: usize| {
+            let s = i;
+            while i < b.len() && b[i].is_ascii_digit() {
+                i += 1;
+            }
+            (i, i > s)
+        };
+        let (ni, ok) = digits(b, i);
+        if !ok {
+            return Err(format!("expected number at {start}"));
+        }
+        i = ni;
+        if b.get(i) == Some(&b'.') {
+            let (ni, ok) = digits(b, i + 1);
+            if !ok {
+                return Err(format!("bad fraction at {i}"));
+            }
+            i = ni;
+        }
+        if matches!(b.get(i), Some(&b'e') | Some(&b'E')) {
+            i += 1;
+            if matches!(b.get(i), Some(&b'+') | Some(&b'-')) {
+                i += 1;
+            }
+            let (ni, ok) = digits(b, i);
+            if !ok {
+                return Err(format!("bad exponent at {i}"));
+            }
+            i = ni;
+        }
+        Ok(i)
+    }
+    let b = text.as_bytes();
+    match value(b, 0) {
+        Ok(end) => {
+            let end = skip_ws(b, end);
+            assert_eq!(end, b.len(), "trailing garbage after JSON:\n{text}");
+        }
+        Err(e) => panic!("invalid JSON ({e}):\n{text}"),
+    }
+}
+
+#[test]
+fn run_json_emits_parseable_json() {
+    let (ok, text) = repro(&[
+        "run", "--stencil", "laplacian", "--backend", "vector", "--domain", "8x8x4",
+        "--iters", "2", "--json",
+    ]);
+    assert!(ok, "{text}");
+    let line = text
+        .lines()
+        .find(|l| l.trim_start().starts_with('{'))
+        .unwrap_or_else(|| panic!("no JSON object in output:\n{text}"));
+    assert_valid_json(line.trim());
+    for needle in [
+        "\"stencil\":\"laplacian\"",
+        "\"backend\":\"vector\"",
+        "\"execute_ns\"",
+        "\"checks_ns\"",
+        "\"domain_sum\"",
+        "\"checks_enabled\":true",
+    ] {
+        assert!(line.contains(needle), "missing `{needle}` in:\n{line}");
+    }
+}
+
+#[test]
+fn bench_json_emits_parseable_rows() {
+    let (ok, text) = repro(&[
+        "bench", "--stencil", "hdiff", "--domains", "8x8x4", "--iters", "1",
+        "--backends", "vector", "--json",
+    ]);
+    assert!(ok, "{text}");
+    let line = text
+        .lines()
+        .find(|l| l.trim_start().starts_with('['))
+        .unwrap_or_else(|| panic!("no JSON array in output:\n{text}"));
+    assert_valid_json(line.trim());
+    assert!(line.contains("\"mean_ns\""), "{line}");
+}
+
+#[test]
+fn no_checks_flag_disables_validation() {
+    let (ok, text) = repro(&[
+        "run", "--stencil", "laplacian", "--backend", "vector", "--domain", "8x8x4",
+        "--iters", "1", "--no-checks", "--json",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("\"checks_enabled\":false"), "{text}");
+    assert!(text.contains("\"checks_ns\":0"), "{text}");
+}
+
 #[test]
 fn unknown_flags_and_commands_fail_cleanly() {
     let (ok, text) = repro(&["warp"]);

@@ -30,7 +30,7 @@ fn run_hdiff(layout: Layout, alignment: usize, backend: &str) -> Storage {
     let mut in_phi = make(layout, alignment, domain, 2, 1);
     let mut coeff = make(layout, alignment, domain, 2, 2);
     let mut out = make(layout, alignment, domain, 2, 3);
-    let mut be = create(backend).unwrap();
+    let be = create(backend).unwrap();
     let mut refs: Vec<(&str, &mut Storage)> = vec![
         ("in_phi", &mut in_phi),
         ("coeff", &mut coeff),
@@ -77,7 +77,7 @@ fn sequential_stencil_identical_across_layouts() {
                 }
             }
         }
-        let mut be = create("vector").unwrap();
+        let be = create("vector").unwrap();
         let mut refs: Vec<(&str, &mut Storage)> = vec![("phi", &mut phi), ("w", &mut w)];
         be.run(&ir, &mut StencilArgs {
             fields: &mut refs,
@@ -101,7 +101,7 @@ fn cross_layout_arguments_mix_freely() {
     let mut in_phi = make(Layout::KJI, 8, domain, 2, 1);
     let mut coeff = make(Layout::JKI, 4, domain, 2, 2);
     let mut out = make(Layout::IJK, 1, domain, 2, 3);
-    let mut be = create("vector").unwrap();
+    let be = create("vector").unwrap();
     {
         let mut refs: Vec<(&str, &mut Storage)> = vec![
             ("in_phi", &mut in_phi),
@@ -116,7 +116,7 @@ fn cross_layout_arguments_mix_freely() {
         let mut ip = make(Layout::IJK, 1, domain, 2, 1);
         let mut cf = make(Layout::IJK, 1, domain, 2, 2);
         let mut o = make(Layout::IJK, 1, domain, 2, 3);
-        let mut be = create("debug").unwrap();
+        let be = create("debug").unwrap();
         let mut refs: Vec<(&str, &mut Storage)> =
             vec![("in_phi", &mut ip), ("coeff", &mut cf), ("out_phi", &mut o)];
         be.run(&ir, &mut StencilArgs { fields: &mut refs, scalars: &[], domain })

@@ -107,13 +107,16 @@ fn run_backend(
     seed: u64,
     scalars: &[(&str, f64)],
 ) -> Vec<(String, Storage)> {
-    let ir = coord.ir(fp).unwrap();
+    let handle = coord
+        .stencil_for(fp, be)
+        .unwrap_or_else(|e| panic!("seed {seed} backend {be}: {e:#}"));
     let mut rng = Rng(seed ^ 0xabcdef);
-    let mut fields: Vec<(String, Storage)> = ir
+    let mut fields: Vec<(String, Storage)> = handle
+        .ir()
         .fields
         .iter()
         .map(|f| {
-            let mut s = coord.alloc_field(fp, &f.name, domain).unwrap();
+            let mut s = handle.alloc_field(&f.name, domain).unwrap();
             let [ni, nj, nk] = domain;
             let h = s.info.halo;
             for i in -(h[0].0 as i64)..(ni + h[0].1) as i64 {
@@ -126,13 +129,16 @@ fn run_backend(
             (f.name.clone(), s)
         })
         .collect();
-    {
-        let mut refs: Vec<(&str, &mut Storage)> =
-            fields.iter_mut().map(|(n, s)| (n.as_str(), s)).collect();
-        coord
-            .run(fp, be, &mut refs, scalars, domain)
-            .unwrap_or_else(|e| panic!("seed {seed} backend {be}: {e:#}"));
-    }
+    let mut inv = handle
+        .bind()
+        .domain(domain)
+        .fields(&fields)
+        .scalars(scalars)
+        .finish()
+        .unwrap_or_else(|e| panic!("seed {seed} backend {be}: {e:#}"));
+    let mut refs: Vec<&mut Storage> = fields.iter_mut().map(|(_, s)| s).collect();
+    inv.run(&mut refs)
+        .unwrap_or_else(|e| panic!("seed {seed} backend {be}: {e:#}"));
     fields
 }
 

@@ -1,0 +1,296 @@
+//! Property tests for the first-class stencil handle API (the
+//! `StencilObject` analog): concurrent dispatch of one shared handle must
+//! be bitwise identical to serial execution on the interpreting backends
+//! at every opt level, bind-once/run-many semantics must catch stale
+//! storages, and a bound invocation's repeat calls must pay at least an
+//! order of magnitude less validation time than the first (full) one.
+
+use gt4rs::coordinator::{BoundInvocation, Coordinator, Stencil};
+use gt4rs::opt::OptLevel;
+use gt4rs::storage::Storage;
+
+const LEVELS: [OptLevel; 4] = [OptLevel::O0, OptLevel::O1, OptLevel::O2, OptLevel::O3];
+
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        self.0 >> 33
+    }
+    fn f64(&mut self) -> f64 {
+        (self.next() as f64) / (u32::MAX as f64) - 0.5
+    }
+}
+
+/// Deterministic per-seed storages for every field of `handle`, halos
+/// included.
+fn seeded_fields(
+    handle: &Stencil,
+    domain: [usize; 3],
+    seed: u64,
+) -> Vec<(String, Storage)> {
+    let mut rng = Rng(seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(1));
+    handle
+        .ir()
+        .fields
+        .iter()
+        .map(|f| {
+            let mut s = handle.alloc_field(&f.name, domain).unwrap();
+            let [ni, nj, nk] = domain;
+            let h = s.info.halo;
+            for i in -(h[0].0 as i64)..(ni + h[0].1) as i64 {
+                for j in -(h[1].0 as i64)..(nj + h[1].1) as i64 {
+                    for k in -(h[2].0 as i64)..(nk + h[2].1) as i64 {
+                        s.set(i, j, k, rng.f64());
+                    }
+                }
+            }
+            (f.name.clone(), s)
+        })
+        .collect()
+}
+
+fn bind(
+    handle: &Stencil,
+    fields: &[(String, Storage)],
+    scalars: &[(&str, f64)],
+    domain: [usize; 3],
+) -> BoundInvocation {
+    handle.bind().domain(domain).fields(fields).scalars(scalars).finish().unwrap()
+}
+
+/// Bind seed-dependent inputs to `handle` and run `iters` times, feeding
+/// the output back into the input so every iteration depends on the last
+/// (the result is sensitive to any cross-thread interference in the
+/// backend's shared state).
+fn run_workload(
+    handle: &Stencil,
+    domain: [usize; 3],
+    seed: u64,
+    iters: usize,
+) -> Vec<(String, Storage)> {
+    let scalars: Vec<(&str, f64)> = handle
+        .ir()
+        .scalars
+        .iter()
+        .map(|s| (s.name.as_str(), 0.3))
+        .collect();
+    let mut fields = seeded_fields(handle, domain, seed);
+    let mut inv = bind(handle, &fields, &scalars, domain);
+    for it in 0..iters {
+        {
+            let mut refs: Vec<&mut Storage> =
+                fields.iter_mut().map(|(_, s)| s).collect();
+            inv.run(&mut refs).unwrap();
+        }
+        // Copy the last field's domain into the first input so successive
+        // iterations are data-dependent (any cross-thread corruption of
+        // the backend's shared state would compound and show up).
+        if it + 1 < iters {
+            let last_vals = fields.last().unwrap().1.clone();
+            let (_, inp) = fields.first_mut().unwrap();
+            for i in 0..domain[0] as i64 {
+                for j in 0..domain[1] as i64 {
+                    for k in 0..domain[2] as i64 {
+                        inp.set(i, j, k, last_vals.get(i, j, k));
+                    }
+                }
+            }
+        }
+    }
+    fields
+}
+
+fn assert_bitwise_equal(
+    a: &[(String, Storage)],
+    b: &[(String, Storage)],
+    context: &str,
+) {
+    for ((n, x), (_, y)) in a.iter().zip(b) {
+        assert_eq!(
+            x.max_abs_diff(y),
+            0.0,
+            "{context}: field `{n}` differs between serial and concurrent runs"
+        );
+    }
+}
+
+/// (a) of the acceptance criteria: N threads hammering one cloned handle
+/// produce results bitwise identical to running the same workloads
+/// serially — on debug and vector, at every opt level (the vector legs at
+/// O2/O3 exercise the materializing and fused evaluators' shared caches
+/// and buffer pools).
+#[test]
+fn concurrent_dispatch_bitwise_equals_serial() {
+    const THREADS: u64 = 4;
+    let domain = [9, 8, 5];
+    for level in LEVELS {
+        for be in ["debug", "vector"] {
+            for stencil_name in ["hdiff", "vadv"] {
+                let mut coord = Coordinator::with_opt_level(level);
+                let handle = coord.stencil_library(stencil_name, be).unwrap();
+
+                let serial: Vec<_> = (0..THREADS)
+                    .map(|t| run_workload(&handle, domain, t, 3))
+                    .collect();
+
+                let concurrent: Vec<_> = std::thread::scope(|s| {
+                    let joins: Vec<_> = (0..THREADS)
+                        .map(|t| {
+                            let h = handle.clone();
+                            s.spawn(move || run_workload(&h, domain, t, 3))
+                        })
+                        .collect();
+                    joins.into_iter().map(|j| j.join().unwrap()).collect()
+                });
+
+                for (t, (a, b)) in serial.iter().zip(&concurrent).enumerate() {
+                    assert_bitwise_equal(
+                        a,
+                        b,
+                        &format!("{stencil_name} O{level} {be} thread {t}"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The ROADMAP's sharding prerequisite, demonstrated directly: one
+/// *shared* compiled artifact (same fingerprint, same backend instance)
+/// dispatching from many threads with distinct domains concurrently.
+#[test]
+fn concurrent_distinct_domains_on_one_handle() {
+    let mut coord = Coordinator::with_opt_level(OptLevel::O3);
+    let handle = coord.stencil_library("hdiff", "vector").unwrap();
+    let domains = [[6, 6, 3], [9, 7, 4], [12, 10, 6], [7, 11, 2]];
+    let serial: Vec<_> = domains
+        .iter()
+        .map(|d| run_workload(&handle, *d, 17, 2))
+        .collect();
+    let concurrent: Vec<_> = std::thread::scope(|s| {
+        let joins: Vec<_> = domains
+            .iter()
+            .map(|d| {
+                let h = handle.clone();
+                s.spawn(move || run_workload(&h, *d, 17, 2))
+            })
+            .collect();
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
+    });
+    for (d, (a, b)) in domains.iter().zip(serial.iter().zip(&concurrent)) {
+        assert_bitwise_equal(a, b, &format!("hdiff O3 vector domain {d:?}"));
+    }
+}
+
+/// (b) of the acceptance criteria, timing half: a `BoundInvocation`'s
+/// repeat call reports validation time at least an order of magnitude
+/// below the first call's full validation. A wide stencil (many fields)
+/// makes the full validation measurably heavy; timing noise is absorbed
+/// by retrying on fresh binds.
+#[test]
+fn repeat_call_validation_is_an_order_of_magnitude_cheaper() {
+    // Generate a stencil with many field parameters.
+    const NFIELDS: usize = 24;
+    let params: Vec<String> =
+        (0..NFIELDS).map(|i| format!("f{i}: Field<f64>")).collect();
+    // Every parameter participates (the pipeline rejects unused fields).
+    let sum: Vec<String> = (0..NFIELDS).map(|i| format!("f{i}")).collect();
+    let src = format!(
+        "stencil wide({}, out: Field<f64>) {{\n\
+           with computation(PARALLEL), interval(...) {{ out = {}; }}\n\
+         }}",
+        params.join(", "),
+        sum.join(" + ")
+    );
+    let mut coord = Coordinator::new();
+    let handle = coord.stencil(&src, "wide", "vector", &Default::default()).unwrap();
+    let domain = [6, 6, 2];
+    let mut fields = seeded_fields(&handle, domain, 3);
+
+    let mut best_ratio = f64::INFINITY;
+    for _attempt in 0..8 {
+        let mut inv = bind(&handle, &fields, &[], domain);
+        let first = {
+            let mut refs: Vec<&mut Storage> =
+                fields.iter_mut().map(|(_, s)| s).collect();
+            inv.run(&mut refs).unwrap()
+        };
+        let second = {
+            let mut refs: Vec<&mut Storage> =
+                fields.iter_mut().map(|(_, s)| s).collect();
+            inv.run(&mut refs).unwrap()
+        };
+        assert!(first.checks >= inv.bind_validation_time());
+        let ratio = second.checks.as_secs_f64() / first.checks.as_secs_f64().max(1e-12);
+        best_ratio = best_ratio.min(ratio);
+        if second.checks.as_secs_f64() * 10.0 <= first.checks.as_secs_f64() {
+            return; // order-of-magnitude gap demonstrated
+        }
+    }
+    panic!(
+        "repeat-call validation never reached 10x below full validation \
+         (best ratio {best_ratio:.4})"
+    );
+}
+
+/// (b) of the acceptance criteria, semantics half: after a storage is
+/// reallocated with a different geometry the bound invocation refuses to
+/// run until re-bound; with the original geometry restored it keeps
+/// working.
+#[test]
+fn bind_once_semantics_catch_stale_storages() {
+    let mut coord = Coordinator::new();
+    let handle = coord.stencil_library("hdiff", "vector").unwrap();
+    let domain = [8, 7, 4];
+    let mut fields = seeded_fields(&handle, domain, 5);
+    let mut inv = bind(&handle, &fields, &[], domain);
+    {
+        let mut refs: Vec<&mut Storage> = fields.iter_mut().map(|(_, s)| s).collect();
+        inv.run(&mut refs).unwrap();
+    }
+
+    // Reallocate in_phi with a halo the bind never saw.
+    let stale = std::mem::replace(
+        &mut fields[0].1,
+        Storage::with_halo(domain, 3), // hdiff binds halo-2 storages
+    );
+    {
+        let mut refs: Vec<&mut Storage> = fields.iter_mut().map(|(_, s)| s).collect();
+        let err = inv.run(&mut refs).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("re-bind"),
+            "stale geometry must demand a re-bind: {err:#}"
+        );
+    }
+
+    // Restoring the original storage satisfies the bound snapshot again.
+    fields[0].1 = stale;
+    {
+        let mut refs: Vec<&mut Storage> = fields.iter_mut().map(|(_, s)| s).collect();
+        inv.run(&mut refs).unwrap();
+    }
+
+    // Wrong arity is caught before dispatch, too.
+    let (_, first) = fields.first_mut().unwrap();
+    assert!(inv.run(&mut [first]).is_err());
+}
+
+/// Handles record into the coordinator's shared metrics from any thread.
+#[test]
+fn concurrent_runs_share_metrics() {
+    let mut coord = Coordinator::new();
+    let handle = coord.stencil_library("laplacian", "vector").unwrap();
+    let domain = [6, 6, 2];
+    std::thread::scope(|s| {
+        for t in 0..4u64 {
+            let h = handle.clone();
+            s.spawn(move || {
+                run_workload(&h, domain, t, 2);
+            });
+        }
+    });
+    let timing = coord.metrics.get("laplacian", "vector").unwrap();
+    assert_eq!(timing.calls, 8, "4 threads x 2 calls must all be recorded");
+}
