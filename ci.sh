@@ -1,10 +1,12 @@
 #!/usr/bin/env bash
 # Local CI gate: formatting, lints, release build, tests, bench/doc rot
-# checks. Mirrored by .github/workflows/ci.yml.
+# checks. Mirrored by .github/workflows/ci.yml (which additionally runs
+# the test suites under a REPRO_THREADS matrix on multi-core runners).
 #
 #   ./ci.sh          run everything
-#   ./ci.sh quick    fast feedback: fmt + clippy + tests (skips the release
-#                    build, bench compile-check and doc build)
+#   ./ci.sh quick    fast feedback: fmt + clippy + bench compile-check +
+#                    tests (skips the release build, examples, doc build
+#                    and the JSON smoke runs)
 #
 # PJRT-dependent tests skip themselves when no PJRT runtime is present, so
 # this script is expected to pass on machines without one.
@@ -30,18 +32,20 @@ step cargo fmt --check
 
 step cargo clippy --all-targets -- -D warnings
 
+# Benches rot silently when only the hosted full job compiles them:
+# compile-check every bench target in quick mode too.
+step cargo bench --no-run
+
 if [[ "${1:-}" != "quick" ]]; then
     step cargo build --release
 
     # Examples are part of the contract: compile-check all of them and
     # actually execute the quickstart (bind-once/run-many + concurrent
-    # dispatch of one stencil handle, end to end).
+    # dispatch + intra-call sharding of one stencil handle, end to end).
     step cargo build --release --examples
     step cargo run --release --example quickstart
 
-    # Benches and docs must not rot silently: compile-check every bench
-    # target and build the docs with warnings denied.
-    step cargo bench --no-run
+    # Docs must not rot silently: build with warnings denied.
     step env RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
     # `repro run --json` must emit parseable JSON (the machine-readable
@@ -49,13 +53,27 @@ if [[ "${1:-}" != "quick" ]]; then
     echo
     echo "=== repro run --json smoke ==="
     ./target/release/repro run --stencil laplacian --backend vector \
-        --domain 8x8x4 --iters 2 --json > /tmp/gt4rs_run.json
+        --domain 8x8x4 --iters 2 --threads 2 --json > /tmp/gt4rs_run.json
     if command -v python3 >/dev/null 2>&1; then
         python3 -m json.tool /tmp/gt4rs_run.json >/dev/null
         echo "repro run --json: parseable JSON"
     else
         grep -q '"execute_ns"' /tmp/gt4rs_run.json
         echo "repro run --json: python3 missing, structural grep passed"
+    fi
+
+    # The A6 scaling bench (tiny mode) runs its bitwise honesty gate and
+    # the Auto-degrade assertion, and its JSON artifact must parse under
+    # the same contract as `repro run --json`.
+    step cargo bench --bench scaling -- --tiny --json /tmp/gt4rs_scaling.json
+    echo
+    echo "=== BENCH_scaling.json parse smoke ==="
+    if command -v python3 >/dev/null 2>&1; then
+        python3 -m json.tool /tmp/gt4rs_scaling.json >/dev/null
+        echo "scaling bench --json: parseable JSON"
+    else
+        grep -q '"threads_used"' /tmp/gt4rs_scaling.json
+        echo "scaling bench --json: python3 missing, structural grep passed"
     fi
 fi
 

@@ -12,6 +12,10 @@
 //!  A5  fused loop-nest evaluator vs materializing vector path: wall time
 //!      *and* region-buffer traffic (the fused path must allocate zero
 //!      per-expression-node buffers)
+//!  A6  intra-call domain-sharding scaling (1/2/4/8 threads, effective
+//!      thread counts, bitwise honesty gate) — lives in its own target,
+//!      `benches/scaling.rs`, publishing `BENCH_scaling.json` next to
+//!      this bench's `BENCH_ablation.json`
 //!
 //!     cargo bench --bench ablation [-- --tiny] [-- --json PATH]
 //!
@@ -135,17 +139,20 @@ fn a4_opt_pass_ablation(domains: &[[usize; 3]], iters: usize, rows: &mut Vec<Row
     println!("# A4: optimizer pass ablation — vector backend, median wall time per call");
     let configs: [(&str, OptConfig); 5] = [
         ("O0 (none)", OptConfig::none()),
-        (
-            "+fold-cse",
-            OptConfig { fold_cse: true, dce: false, fuse: false, demote: false, fused: false },
-        ),
+        ("+fold-cse", OptConfig { fold_cse: true, ..OptConfig::none() }),
         (
             "+dce+fuse",
-            OptConfig { fold_cse: true, dce: true, fuse: true, demote: false, fused: false },
+            OptConfig { fold_cse: true, dce: true, fuse: true, ..OptConfig::none() },
         ),
         (
             "+demote (O2)",
-            OptConfig { fold_cse: true, dce: true, fuse: true, demote: true, fused: false },
+            OptConfig {
+                fold_cse: true,
+                dce: true,
+                fuse: true,
+                demote: true,
+                ..OptConfig::none()
+            },
         ),
         ("O3 fused", OptConfig::level(OptLevel::O3)),
     ];

@@ -1,0 +1,226 @@
+//! A6: intra-call domain-sharding scaling curve — the multi-core half of
+//! the paper's Fig. 3 CPU story (`gt:cpu_kfirst`/`gt:cpu_ifirst` scale
+//! with OpenMP threads; here one `vector`-backend call scales with
+//! i-slabs on std threads).
+//!
+//! For the fused O3 evaluator (and the O2 materializing path as a
+//! contrast row) this sweeps `Threads(1/2/4/8)` plus `Auto`, measuring
+//! median wall time per call, the *effective* thread count the schedule
+//! used, and buffer-pool traffic. Before any timing, every sharded
+//! configuration is checked **bitwise** against `Sharding::Off` on fresh
+//! inputs — a scaling curve for a parallel schedule that changed the
+//! answer would be worthless.
+//!
+//!     cargo bench --bench scaling [-- --tiny] [-- --json PATH]
+//!
+//! `--tiny` shrinks the domain/iterations for CI smoke runs (where
+//! `Auto` must degrade to serial — that degradation is itself asserted);
+//! `--json PATH` writes every measured row as a JSON array, the
+//! `BENCH_scaling.json` CI artifact published next to
+//! `BENCH_ablation.json`.
+
+#[path = "harness.rs"]
+mod harness;
+
+use gt4rs::backend::shard::Sharding;
+use gt4rs::backend::vector::VectorBackend;
+use gt4rs::backend::{Backend, RunConfig, StencilArgs};
+use gt4rs::opt::{OptConfig, OptLevel, PassManager};
+use gt4rs::stdlib;
+use gt4rs::storage::Storage;
+use gt4rs::StencilIr;
+use harness::*;
+
+struct Row {
+    stencil: String,
+    domain: String,
+    opt: &'static str,
+    config: String,
+    threads_used: u32,
+    median_ns: u128,
+    speedup_vs_t1: f64,
+    pool_taken: u64,
+    pool_allocated: u64,
+}
+
+impl Row {
+    fn json(&self) -> String {
+        format!(
+            "{{\"bench\":\"A6\",\"stencil\":\"{}\",\"domain\":\"{}\",\"opt\":\"{}\",\
+             \"config\":\"{}\",\"threads_used\":{},\"median_ns\":{},\
+             \"speedup_vs_t1\":{:.4},\"pool_taken\":{},\"pool_allocated\":{}}}",
+            self.stencil,
+            self.domain,
+            self.opt,
+            self.config,
+            self.threads_used,
+            self.median_ns,
+            self.speedup_vs_t1,
+            self.pool_taken,
+            self.pool_allocated
+        )
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let tiny = args.iter().any(|a| a == "--tiny");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|p| args.get(p + 1))
+        .cloned();
+
+    // The tiny domain is deliberately narrower than one profitable Auto
+    // slab (MIN_AUTO_SLAB_WIDTH): the smoke run asserts the degrade.
+    let (domain, iters): ([usize; 3], usize) =
+        if tiny { ([16, 16, 8], 3) } else { ([128, 128, 64], 9) };
+
+    let mut rows: Vec<Row> = Vec::new();
+    a6_scaling(domain, iters, tiny, &mut rows);
+
+    if let Some(path) = json_path {
+        let body: Vec<String> = rows.iter().map(Row::json).collect();
+        let doc = format!("[\n  {}\n]\n", body.join(",\n  "));
+        std::fs::write(&path, doc).expect("write scaling JSON artifact");
+        println!("# wrote {} rows to {path}", rows.len());
+    }
+}
+
+fn compiled(name: &str, level: OptLevel) -> StencilIr {
+    let mut ir = stdlib::compile(name).unwrap();
+    PassManager::new(&OptConfig::level(level)).run(&mut ir);
+    ir
+}
+
+/// Fresh deterministically-filled storages for `ir` over `domain`.
+fn fresh_fields(ir: &StencilIr, domain: [usize; 3]) -> Vec<(String, Storage)> {
+    ir.fields
+        .iter()
+        .enumerate()
+        .map(|(ix, f)| {
+            let e = f.extent;
+            let mut s = Storage::zeros(gt4rs::storage::StorageInfo::new(
+                domain,
+                [
+                    ((-e.i.0) as usize, e.i.1 as usize),
+                    ((-e.j.0) as usize, e.j.1 as usize),
+                    ((-e.k.0) as usize, e.k.1 as usize),
+                ],
+            ));
+            fill_storage(&mut s, 1.0 + ix as f64 * 0.5);
+            (f.name.clone(), s)
+        })
+        .collect()
+}
+
+/// Run once on fresh inputs, returning every field's domain-sum bits —
+/// the honesty fingerprint a sharded configuration must reproduce.
+fn run_once_sums(
+    be: &VectorBackend,
+    ir: &StencilIr,
+    domain: [usize; 3],
+    scalars: &[(&str, f64)],
+    sharding: Sharding,
+) -> (Vec<u64>, u32) {
+    let mut fields = fresh_fields(ir, domain);
+    let report = {
+        let mut refs: Vec<(&str, &mut Storage)> =
+            fields.iter_mut().map(|(n, s)| (n.as_str(), s)).collect();
+        be.run_sharded(
+            ir,
+            &mut StencilArgs { fields: &mut refs, scalars, domain },
+            &RunConfig { sharding },
+        )
+        .unwrap()
+    };
+    let sums = fields.iter().map(|(_, s)| s.domain_sum().to_bits()).collect();
+    (sums, report.threads)
+}
+
+fn a6_scaling(domain: [usize; 3], iters: usize, tiny: bool, rows: &mut Vec<Row>) {
+    let dstr = format!("{}x{}x{}", domain[0], domain[1], domain[2]);
+    println!("# A6: intra-call domain sharding — vector backend, median wall per call");
+    println!(
+        "{:<12} {:>8} {:>4} {:>12} {:>8} {:>12} {:>10}",
+        "domain", "stencil", "opt", "config", "used", "median", "vs t=1"
+    );
+    // threads=1 is measured first so every later row's speedup_vs_t1 is
+    // computed against a real baseline (never fabricated).
+    let plans: [(String, Sharding); 6] = [
+        ("threads=1".to_string(), Sharding::Threads(1)),
+        ("off".to_string(), Sharding::Off),
+        ("threads=2".to_string(), Sharding::Threads(2)),
+        ("threads=4".to_string(), Sharding::Threads(4)),
+        ("threads=8".to_string(), Sharding::Threads(8)),
+        ("auto".to_string(), Sharding::Auto),
+    ];
+    for (name, scalars) in [("hdiff", vec![]), ("vadv", vec![("dtdz", 0.3)])] {
+        for (opt_name, level) in [("O3", OptLevel::O3), ("O2", OptLevel::O2)] {
+            let ir = compiled(name, level);
+            let be = VectorBackend::new();
+            // Honesty gate: every plan bitwise-equal to Off on fresh
+            // inputs before a single timed iteration.
+            let (reference, _) = run_once_sums(&be, &ir, domain, &scalars, Sharding::Off);
+            for (_, plan) in &plans {
+                let (sums, used) = run_once_sums(&be, &ir, domain, &scalars, *plan);
+                assert_eq!(
+                    sums, reference,
+                    "{name} {opt_name} {plan}: sharded result diverged from serial"
+                );
+                if tiny && *plan == Sharding::Auto {
+                    assert_eq!(
+                        used, 1,
+                        "Auto must degrade to serial on tiny domains (got {used})"
+                    );
+                }
+            }
+            let _ = be.take_pool_stats();
+            let mut t1_median: Option<f64> = None;
+            for (label, plan) in &plans {
+                let mut fields = fresh_fields(&ir, domain);
+                let mut calls = 0u64;
+                let mut used = 1u32;
+                let sample = bench(iters, || {
+                    calls += 1;
+                    let mut refs: Vec<(&str, &mut Storage)> =
+                        fields.iter_mut().map(|(n, s)| (n.as_str(), s)).collect();
+                    let report = be
+                        .run_sharded(
+                            &ir,
+                            &mut StencilArgs {
+                                fields: &mut refs,
+                                scalars: &scalars,
+                                domain,
+                            },
+                            &RunConfig { sharding: *plan },
+                        )
+                        .unwrap();
+                    used = used.max(report.threads);
+                });
+                let stats = be.take_pool_stats();
+                if *label == "threads=1" {
+                    t1_median = Some(sample.median.as_secs_f64());
+                }
+                let speedup = t1_median.expect("threads=1 measured first")
+                    / sample.median.as_secs_f64().max(1e-12);
+                println!(
+                    "{dstr:<12} {name:>8} {opt_name:>4} {label:>12} {used:>8} {:>12} {speedup:>9.2}x",
+                    fmt_duration(sample.median)
+                );
+                rows.push(Row {
+                    stencil: name.to_string(),
+                    domain: dstr.clone(),
+                    opt: opt_name,
+                    config: label.clone(),
+                    threads_used: used,
+                    median_ns: sample.median.as_nanos(),
+                    speedup_vs_t1: speedup,
+                    pool_taken: stats.taken / calls.max(1),
+                    pool_allocated: stats.allocated / calls.max(1),
+                });
+            }
+        }
+    }
+    println!();
+}

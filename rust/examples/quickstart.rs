@@ -1,13 +1,18 @@
 //! Quickstart: define a stencil in GTScript-RS, compile it to a
 //! first-class `Stencil` handle, bind its arguments **once**, run it
-//! many times, and fan the same compiled handle out across threads —
+//! many times, fan the same compiled handle out across threads, and
+//! split a *single call* across cores with intra-call domain sharding —
 //! the 60-second tour of the framework.
 //!
 //!     cargo run --release --example quickstart
+//!
+//! (On the CLI the sharding knob is `repro run ... --threads N|auto|off`,
+//! or the `REPRO_THREADS` environment variable.)
 
 use anyhow::Result;
 use gt4rs::coordinator::Coordinator;
 use gt4rs::storage::Storage;
+use gt4rs::Sharding;
 
 const SRC: &str = "
     # A smoothing stencil: out = (1-w)*phi + w/4 * neighbor-average
@@ -116,7 +121,37 @@ fn main() -> Result<()> {
     }
     println!("4 concurrent clones agree bitwise: checksum {sum_vector:.12e}");
 
-    // 7. The XLA JIT backend, when a PJRT runtime is present.
+    // 7. Intra-call domain sharding: one invocation's compute domain
+    //    split into halo-correct i-slabs on a persistent worker pool.
+    //    Purely a scheduling knob — the result is bitwise identical to
+    //    the serial run, and RunStats reports the thread count actually
+    //    used (an `Auto` plan degrades to serial on tiny domains).
+    let mut sphi = stencil.alloc_field("phi", domain)?;
+    let mut sout = stencil.alloc_field("out", domain)?;
+    fill(&mut sphi);
+    let mut sharded = stencil
+        .bind()
+        .field("phi", &sphi)
+        .field("out", &sout)
+        .scalar("w", 0.5)
+        .domain(domain)
+        .sharding(Sharding::Threads(2))
+        .finish()?;
+    for round in 0..3 {
+        let stats = sharded.run(&mut [&mut sphi, &mut sout])?;
+        println!(
+            "sharded run {round}: execute {:?}  threads used {}",
+            stats.execute,
+            stats.threads_used()
+        );
+    }
+    assert_eq!(
+        sout.domain_sum().to_bits(),
+        sum_vector.to_bits(),
+        "sharded run must be bitwise identical to serial"
+    );
+
+    // 8. The XLA JIT backend, when a PJRT runtime is present.
     match coord.stencil(SRC, "smooth", "xla", &Default::default()) {
         Ok(xla) => {
             let mut xphi = xla.alloc_field("phi", domain)?;

@@ -122,6 +122,16 @@ impl CExpr {
 /// consumer needs it, and — because regions are widened bottom-up — every
 /// operand's region contains it, so memory accesses stay inside the halos
 /// the extent analysis guaranteed.
+///
+/// Under intra-call domain sharding the same containment argument holds
+/// per i-slab: compute ops resolve to the slab's extent-*expanded* range
+/// `[a + i.0, b + i.1)` (recomputing the halo overlap into slab-local
+/// buffers), while [`TapeOp::StoreField`] resolves to the slab's *owned*
+/// partition — see `shard::owned_store_range` and
+/// `fused::resolve_bounds`. The region also feeds the fused shardability
+/// analysis: a `Load` of a field stored in the same multistage is only
+/// slab-safe when column-local (zero i-offset *and* zero region
+/// i-extent).
 #[derive(Debug, Clone)]
 pub struct TapeInst {
     pub op: TapeOp,
@@ -144,9 +154,13 @@ pub enum TapeOp {
     Select(u32, u32, u32),
     Call1(Builtin, u32),
     Call2(Builtin, u32, u32),
-    /// Write value `v` into an undemoted storage slot (stage extent region).
+    /// Write value `v` into an undemoted storage slot (stage extent
+    /// region serially; clamped to the slab's owned i-columns under
+    /// sharding so two slabs never store the same element).
     StoreField { slot: usize, v: u32 },
-    /// Write value `v` into a demoted local's scratch buffer or ring plane.
+    /// Write value `v` into a demoted local's scratch buffer or ring
+    /// plane (always slab-local under sharding — never clamped, the halo
+    /// overlap is recomputed instead).
     StoreLocal { slot: usize, v: u32 },
 }
 

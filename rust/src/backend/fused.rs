@@ -44,10 +44,12 @@ use super::cexpr::{
     apply_bin, apply_builtin1, apply_builtin2, CTape, TapeBuilder, TapeCtx, TapeInst, TapeOp,
 };
 use super::program::{CStage, Env, Program};
-use super::vector::{prune_rings, Pool, Region, Rings};
+use super::shard::SyncCell;
+use super::vector::{prune_rings, Pool, Region, Rings, ShardExec};
 use crate::dsl::ast::{BinOp, Interval, IterationPolicy, Offset};
 use crate::ir::implir::{Extent, StorageClass};
 use std::collections::{HashMap, HashSet};
+use std::sync::Barrier;
 
 /// Group-scoped scratch buffers for plane/register locals:
 /// slot → (region, values).
@@ -76,6 +78,10 @@ pub struct Tier {
 pub struct FusedMultistage {
     pub policy: IterationPolicy,
     pub groups: Vec<FusedGroup>,
+    /// Whether this multistage may fan out over i-slabs (see
+    /// [`ms_shardable_fused`]); `false` entries run serially inside an
+    /// otherwise sharded call.
+    pub shardable: bool,
 }
 
 /// The fused form of a whole stencil program.
@@ -116,7 +122,8 @@ impl FusedProgram {
                 groups.push(compile_group(&ms.stages[start..end], &classes, &alloc));
                 start = end;
             }
-            multistages.push(FusedMultistage { policy: ms.policy, groups });
+            let shardable = ms_shardable_fused(&groups, ms.policy);
+            multistages.push(FusedMultistage { policy: ms.policy, groups, shardable });
         }
         FusedProgram { multistages, alloc }
     }
@@ -243,7 +250,64 @@ fn compile_group(
     FusedGroup { interval: stages[0].interval, scratch, tiers }
 }
 
-/// Execute a fused program (called from the vector backend's dispatch).
+/// The fused analog of `vector::ms_shardable`, computed from the tapes.
+/// Demoted locals (scratch, rings) are slab-local under sharding, so only
+/// `Field3D` flow can cross a slab boundary:
+///
+/// * In `PARALLEL` multistages, tiers are barriers — cross-*tier* field
+///   flow is safe at any offset. The hazard is a tier that both stores a
+///   field slot and loads it with a non-column-local access (nonzero
+///   i-offset — which tier splitting already rules out for earlier-stage
+///   defs — or a load region whose i-extent leaves the slab): per-point
+///   store/load ordering would then observe a neighbor slab's concurrent
+///   writes.
+/// * In sequential multistages, each slab sweeps all levels without
+///   synchronizing, so *every* load of a field stored anywhere in the
+///   multistage must be column-local (zero i-offset, zero i-extent).
+fn ms_shardable_fused(groups: &[FusedGroup], policy: IterationPolicy) -> bool {
+    let mut written: HashSet<usize> = HashSet::new();
+    for g in groups {
+        for t in &g.tiers {
+            for inst in &t.tape.ops {
+                if let TapeOp::StoreField { slot, .. } = inst.op {
+                    written.insert(slot);
+                }
+            }
+        }
+    }
+    for g in groups {
+        for t in &g.tiers {
+            let tier_stores: HashSet<usize> = t
+                .tape
+                .ops
+                .iter()
+                .filter_map(|inst| match inst.op {
+                    TapeOp::StoreField { slot, .. } => Some(slot),
+                    _ => None,
+                })
+                .collect();
+            for inst in &t.tape.ops {
+                if let TapeOp::Load { slot, off } = &inst.op {
+                    let wide = off[0] != 0 || inst.region.i != (0, 0);
+                    let hazard = match policy {
+                        IterationPolicy::Parallel => tier_stores.contains(slot) && wide,
+                        IterationPolicy::Forward | IterationPolicy::Backward => {
+                            written.contains(slot) && wide
+                        }
+                    };
+                    if hazard {
+                        return false;
+                    }
+                }
+            }
+        }
+    }
+    true
+}
+
+/// Execute a fused program serially (called from the vector backend's
+/// dispatch; the full slab `(0, ni)` makes every region identical to the
+/// pre-sharding evaluator).
 pub(crate) fn run_program(
     fp: &FusedProgram,
     program: &Program,
@@ -252,61 +316,148 @@ pub(crate) fn run_program(
 ) {
     let classes: Vec<StorageClass> = program.slots.iter().map(|s| s.storage).collect();
     let depths: Vec<i32> = program.slots.iter().map(|s| s.ring_depth).collect();
-    let mut rings = Rings::default();
+    let ni = env.domain[0] as i64;
     // One strip buffer for the whole run, grown to the largest tier.
     let mut vals: Vec<f64> = Vec::new();
     for ms in &fp.multistages {
-        // Per-op loop bounds depend only on (tier, domain): resolve them
-        // once per call, not once per sweep level.
-        let bounds: Vec<Vec<Vec<[i64; 4]>>> =
-            ms.groups.iter().map(|g| resolve_bounds(g, env.domain)).collect();
-        match ms.policy {
-            IterationPolicy::Parallel => {
-                for (g, gb) in ms.groups.iter().zip(&bounds) {
-                    let (k0, k1) = env.krange(&g.interval);
-                    if k0 < k1 {
+        run_multistage(ms, fp, &classes, &depths, env, pool, &mut vals, (0, ni));
+    }
+}
+
+/// Run one fused multistage for one i-slab (the serial path passes the
+/// full slab; sharded sequential multistages pass each slab — the
+/// slab-local vertical sweep with its slab-local ring k-cache). Sharded
+/// `PARALLEL` multistages need per-tier barriers and go through
+/// [`run_program_sharded`]'s group fan-out instead.
+#[allow(clippy::too_many_arguments)]
+fn run_multistage(
+    ms: &FusedMultistage,
+    fp: &FusedProgram,
+    classes: &[StorageClass],
+    depths: &[i32],
+    env: &mut Env,
+    pool: &mut Pool,
+    vals: &mut Vec<f64>,
+    slab: (i64, i64),
+) {
+    // Per-op loop bounds depend only on (tier, domain, slab): resolve
+    // them once per multistage, not once per sweep level.
+    let bounds: Vec<Vec<Vec<[i64; 4]>>> =
+        ms.groups.iter().map(|g| resolve_bounds(g, env.domain, slab)).collect();
+    let mut rings = Rings::default();
+    match ms.policy {
+        IterationPolicy::Parallel => {
+            for (g, gb) in ms.groups.iter().zip(&bounds) {
+                let (k0, k1) = env.krange(&g.interval);
+                if k0 < k1 {
+                    run_group(
+                        env, g, gb, classes, &fp.alloc, k0, k1, 2, &mut rings, pool,
+                        vals, slab, None,
+                    );
+                }
+            }
+        }
+        IterationPolicy::Forward | IterationPolicy::Backward => {
+            let ranges: Vec<(i64, i64)> =
+                ms.groups.iter().map(|g| env.krange(&g.interval)).collect();
+            let kmin = ranges.iter().map(|r| r.0).min().unwrap_or(0);
+            let kmax = ranges.iter().map(|r| r.1).max().unwrap_or(0);
+            let ks: Vec<i64> = if ms.policy == IterationPolicy::Forward {
+                (kmin..kmax).collect()
+            } else {
+                (kmin..kmax).rev().collect()
+            };
+            for k in ks {
+                for ((g, gb), (gk0, gk1)) in ms.groups.iter().zip(&bounds).zip(&ranges)
+                {
+                    if k >= *gk0 && k < *gk1 {
                         run_group(
-                            env, g, gb, &classes, &fp.alloc, k0, k1, 2, &mut rings,
-                            pool, &mut vals,
+                            env, g, gb, classes, &fp.alloc, k, k + 1, 1, &mut rings,
+                            pool, vals, slab, None,
                         );
                     }
                 }
+                prune_rings(&mut rings, k, depths, pool);
             }
-            IterationPolicy::Forward | IterationPolicy::Backward => {
-                let ranges: Vec<(i64, i64)> =
-                    ms.groups.iter().map(|g| env.krange(&g.interval)).collect();
-                let kmin = ranges.iter().map(|r| r.0).min().unwrap_or(0);
-                let kmax = ranges.iter().map(|r| r.1).max().unwrap_or(0);
-                let ks: Vec<i64> = if ms.policy == IterationPolicy::Forward {
-                    (kmin..kmax).collect()
-                } else {
-                    (kmin..kmax).rev().collect()
-                };
-                for k in ks {
-                    for ((g, gb), (gk0, gk1)) in
-                        ms.groups.iter().zip(&bounds).zip(&ranges)
-                    {
-                        if k >= *gk0 && k < *gk1 {
-                            run_group(
-                                env, g, gb, &classes, &fp.alloc, k, k + 1, 1,
-                                &mut rings, pool, &mut vals,
-                            );
-                        }
-                    }
-                    prune_rings(&mut rings, k, &depths, pool);
-                }
-                for (_, (_, b)) in rings.drain() {
-                    pool.put(b);
-                }
+            for (_, (_, b)) in rings.drain() {
+                pool.put(b);
             }
         }
     }
 }
 
-/// Resolve every op's `[i0,i1,j0,j1]` loop bounds against the domain, per
-/// tier of one group.
-fn resolve_bounds(g: &FusedGroup, domain: [usize; 3]) -> Vec<Vec<[i64; 4]>> {
+/// The sharded fused path: shardable `PARALLEL` multistages fan every
+/// fusion group out over the slab partition with a barrier between tiers;
+/// shardable sequential multistages run one slab-local sweep per thread;
+/// anything else degrades to the serial evaluator on the calling thread.
+pub(crate) fn run_program_sharded(
+    fp: &FusedProgram,
+    program: &Program,
+    env: &mut Env,
+    exec: &ShardExec,
+) {
+    let classes: Vec<StorageClass> = program.slots.iter().map(|s| s.storage).collect();
+    let depths: Vec<i32> = program.slots.iter().map(|s| s.ring_depth).collect();
+    let ni = env.domain[0] as i64;
+    let cell = SyncCell::new(env);
+    for ms in &fp.multistages {
+        if !ms.shardable {
+            let env = unsafe { cell.get() };
+            let mut pool = exec.serial_pool();
+            let mut vals: Vec<f64> = Vec::new();
+            run_multistage(
+                ms, fp, &classes, &depths, env, &mut pool, &mut vals, (0, ni),
+            );
+            continue;
+        }
+        match ms.policy {
+            IterationPolicy::Parallel => {
+                for g in &ms.groups {
+                    let barrier = Barrier::new(exec.slabs.len());
+                    exec.run(&cell, &|s, env, pool| {
+                        let slab = exec.slabs[s];
+                        let (k0, k1) = env.krange(&g.interval);
+                        // k-bounds are slab-independent: either every slab
+                        // runs the group's tiers (waiting on the same
+                        // barriers) or none does.
+                        if k0 < k1 {
+                            let gb = resolve_bounds(g, env.domain, slab);
+                            let mut rings = Rings::default();
+                            let mut vals: Vec<f64> = Vec::new();
+                            run_group(
+                                env, g, &gb, &classes, &fp.alloc, k0, k1, 2,
+                                &mut rings, pool, &mut vals, slab, Some(&barrier),
+                            );
+                        }
+                    });
+                }
+            }
+            IterationPolicy::Forward | IterationPolicy::Backward => {
+                exec.run(&cell, &|s, env, pool| {
+                    let mut vals: Vec<f64> = Vec::new();
+                    run_multistage(
+                        ms, fp, &classes, &depths, env, pool, &mut vals,
+                        exec.slabs[s],
+                    );
+                });
+            }
+        }
+    }
+}
+
+/// Resolve every op's `[i0,i1,j0,j1]` loop bounds against the domain for
+/// one i-slab, per tier of one group. Compute ops run over the slab's
+/// extent-expanded range (recomputing the halo overlap into slab-local
+/// buffers); `StoreField` ops are clamped to the slab's owned partition
+/// so field writes never overlap between slabs. The full slab `(0, ni)`
+/// yields the serial bounds for both kinds.
+fn resolve_bounds(
+    g: &FusedGroup,
+    domain: [usize; 3],
+    slab: (i64, i64),
+) -> Vec<Vec<[i64; 4]>> {
     let (ni, nj) = (domain[0] as i64, domain[1] as i64);
+    let (a, b) = slab;
     g.tiers
         .iter()
         .map(|t| {
@@ -314,9 +465,16 @@ fn resolve_bounds(g: &FusedGroup, domain: [usize; 3]) -> Vec<Vec<[i64; 4]>> {
                 .ops
                 .iter()
                 .map(|inst| {
+                    let (ri0, ri1) =
+                        (inst.region.i.0 as i64, inst.region.i.1 as i64);
+                    let (i0, i1) = if matches!(inst.op, TapeOp::StoreField { .. }) {
+                        super::shard::owned_store_range(slab, ni, ri0, ri1)
+                    } else {
+                        (a + ri0, b + ri1)
+                    };
                     [
-                        inst.region.i.0 as i64,
-                        ni + inst.region.i.1 as i64,
+                        i0,
+                        i1,
                         inst.region.j.0 as i64,
                         nj + inst.region.j.1 as i64,
                     ]
@@ -326,9 +484,14 @@ fn resolve_bounds(g: &FusedGroup, domain: [usize; 3]) -> Vec<Vec<[i64; 4]>> {
         .collect()
 }
 
-/// Run one group over `[k0,k1)`: `axis` selects the strip direction
-/// (2 = contiguous k strips for PARALLEL, 1 = j strips per level for
-/// sequential multistages).
+/// Run one group over `[k0,k1)` for one i-slab: `axis` selects the strip
+/// direction (2 = contiguous k strips for PARALLEL, 1 = j strips per
+/// level for sequential multistages). Scratch buffers cover the slab's
+/// extent-expanded range, so offset reads of demoted locals never leave
+/// the slab. When `barrier` is set (sharded PARALLEL groups), every slab
+/// synchronizes before each tier after the first — tiers are globally
+/// ordered barriers, which is what makes cross-slab reads of fields
+/// written by an earlier tier race-free.
 #[allow(clippy::too_many_arguments)]
 fn run_group(
     env: &mut Env,
@@ -342,16 +505,18 @@ fn run_group(
     rings: &mut Rings,
     pool: &mut Pool,
     vals: &mut Vec<f64>,
+    slab: (i64, i64),
+    barrier: Option<&Barrier>,
 ) {
-    let [ni, nj, _] = env.domain;
-    let (ni, nj) = (ni as i64, nj as i64);
+    let nj = env.domain[1] as i64;
+    let (a, b) = slab;
     // Group-scoped scratch, zero-initialized (reads before the first write
     // see zeros, like the zero-initialized field a demoted temp replaces).
     let mut scratch = Scratch::new();
     for (slot, e) in &g.scratch {
         let r = Region {
-            i0: e.i.0 as i64,
-            i1: ni + e.i.1 as i64,
+            i0: a + e.i.0 as i64,
+            i1: b + e.i.1 as i64,
             j0: e.j.0 as i64,
             j1: nj + e.j.1 as i64,
             k0,
@@ -360,8 +525,16 @@ fn run_group(
         let buf = pool.take(r.len());
         scratch.insert(*slot, (r, buf));
     }
-    for (t, bounds) in g.tiers.iter().zip(gbounds) {
-        let (ti0, ti1) = (t.extent.i.0 as i64, ni + t.extent.i.1 as i64);
+    for (tix, (t, bounds)) in g.tiers.iter().zip(gbounds).enumerate() {
+        if tix > 0 {
+            // Before the skip checks: every slab of the fan-out must make
+            // the same number of `wait` calls (the checks below are
+            // slab-independent, but this keeps the invariant local).
+            if let Some(bar) = barrier {
+                bar.wait();
+            }
+        }
+        let (ti0, ti1) = (a + t.extent.i.0 as i64, b + t.extent.i.1 as i64);
         let (tj0, tj1) = (t.extent.j.0 as i64, nj + t.extent.j.1 as i64);
         if ti0 >= ti1 || tj0 >= tj1 || t.tape.ops.is_empty() {
             continue;
@@ -379,7 +552,7 @@ fn run_group(
                 for j in tj0..tj1 {
                     eval_strip(
                         env, &t.tape.ops, bounds, vals, wl, i, j, k0, 2, classes,
-                        alloc, &mut scratch, rings, pool,
+                        alloc, &mut scratch, rings, pool, slab,
                     );
                 }
             }
@@ -387,7 +560,7 @@ fn run_group(
             for i in ti0..ti1 {
                 eval_strip(
                     env, &t.tape.ops, bounds, vals, wl, i, tj0, k0, 1, classes,
-                    alloc, &mut scratch, rings, pool,
+                    alloc, &mut scratch, rings, pool, slab,
                 );
             }
         }
@@ -431,7 +604,9 @@ fn copy_lanes_out(src: &[f64], dst: &mut [f64], base: i64, stride: i64, lane0: u
 
 /// Evaluate one tape over one strip: the point `(i, jbase, k0)` extended
 /// along `axis` by `wl` lanes. `vals` holds one strip per tape value;
-/// stores write straight into storages / scratch / ring planes.
+/// stores write straight into storages / scratch / ring planes. `slab`
+/// sizes lazily-allocated ring planes (slab-local under sharding; the
+/// full slab for serial runs).
 #[allow(clippy::too_many_arguments)]
 fn eval_strip(
     env: &mut Env,
@@ -448,6 +623,7 @@ fn eval_strip(
     scratch: &mut Scratch,
     rings: &mut Rings,
     pool: &mut Pool,
+    slab: (i64, i64),
 ) {
     for (x, inst) in ops.iter().enumerate() {
         let b = bounds[x];
@@ -601,14 +777,14 @@ fn eval_strip(
                 if classes[*slot] == StorageClass::Ring && !rings.contains_key(&(*slot, k0))
                 {
                     // First write to this level's plane: allocate it zeroed
-                    // over the slot's allocation extent.
+                    // over the slot's allocation extent (slab-local in i).
                     let e = alloc[slot];
-                    let [dni, dnj, _] = env.domain;
+                    let dnj = env.domain[1] as i64;
                     let r = Region {
-                        i0: e.i.0 as i64,
-                        i1: dni as i64 + e.i.1 as i64,
+                        i0: slab.0 + e.i.0 as i64,
+                        i1: slab.1 + e.i.1 as i64,
                         j0: e.j.0 as i64,
-                        j1: dnj as i64 + e.j.1 as i64,
+                        j1: dnj + e.j.1 as i64,
                         k0,
                         k1: k0 + 1,
                     };
@@ -709,6 +885,32 @@ mod tests {
             .ops
             .iter()
             .all(|inst| !matches!(inst.op, TapeOp::StoreLocal { .. })));
+    }
+
+    #[test]
+    fn shardability_flags_match_execution_model() {
+        // hdiff (PARALLEL, all temporaries demoted to slab-local scratch)
+        // and vadv (sequential, but every in-sweep field read is
+        // column-local) both shard.
+        let (_, fp) = fused_program(crate::stdlib::HDIFF_SRC, "hdiff");
+        assert!(fp.multistages.iter().all(|ms| ms.shardable), "hdiff must shard");
+        let (_, fp) = fused_program(crate::stdlib::VADV_SRC, "vadv");
+        assert!(fp.multistages.iter().all(|ms| ms.shardable), "vadv must shard");
+        // A sweep whose carry lives in a *field* read at a horizontal
+        // offset cannot run slab-local sweeps: the multistage must be
+        // flagged for the serial fallback.
+        const SRC: &str = "
+            stencil s(a: Field<f64>, x: Field<f64>) {
+                with computation(FORWARD) {
+                    interval(0, 1) { x = a; }
+                    interval(1, None) { x = a + x[1,0,-1] * 0.5; }
+                }
+            }";
+        let (_, fp) = fused_program(SRC, "s");
+        assert!(
+            fp.multistages.iter().any(|ms| !ms.shardable),
+            "field carry with horizontal offset must degrade to serial"
+        );
     }
 
     #[test]

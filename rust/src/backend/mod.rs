@@ -16,12 +16,14 @@ pub mod debug;
 pub mod fused;
 pub mod pjrt_aot;
 pub mod program;
+pub mod shard;
 pub mod vector;
 pub mod xlagen;
 
 use crate::ir::implir::StencilIr;
 use crate::storage::Storage;
 use anyhow::Result;
+use shard::{ShardReport, Sharding};
 
 /// Arguments for one stencil invocation.
 pub struct StencilArgs<'a, 'b> {
@@ -33,16 +35,26 @@ pub struct StencilArgs<'a, 'b> {
     pub domain: [usize; 3],
 }
 
+/// Per-call execution parameters that are *not* part of the compiled
+/// artifact: they change how a run is scheduled, never what it computes,
+/// so they stay out of IR fingerprints and cache keys (contrast
+/// [`crate::opt::OptConfig`]'s pass toggles).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RunConfig {
+    /// Intra-call domain sharding plan (see [`shard::Sharding`]).
+    pub sharding: Sharding,
+}
+
 /// A stencil execution backend.
 ///
 /// Backends execute through `&self` and are `Send + Sync`: one instance is
 /// shared by every [`crate::coordinator::Stencil`] handle bound to it, and
 /// handles dispatch concurrently from many threads. Mutable state — the
-/// per-fingerprint program/executable caches, buffer pools, staging
-/// buffers — lives behind interior mutability (`RwLock`/`Mutex`) inside
-/// each backend. The interpreting backends (`debug`, `vector`) run fully
-/// in parallel; the PJRT-backed backends (`xla`, `pjrt-aot`) serialize
-/// calls on an internal lock around their client.
+/// per-fingerprint program/executable caches, buffer pools, worker pools,
+/// staging buffers — lives behind interior mutability (`RwLock`/`Mutex`)
+/// inside each backend. The interpreting backends (`debug`, `vector`) run
+/// fully in parallel; the PJRT-backed backends (`xla`, `pjrt-aot`)
+/// serialize calls on an internal lock around their client.
 pub trait Backend: Send + Sync {
     fn name(&self) -> &'static str;
 
@@ -55,6 +67,22 @@ pub trait Backend: Send + Sync {
 
     /// Execute the stencil over `args.domain`.
     fn run(&self, ir: &StencilIr, args: &mut StencilArgs) -> Result<()>;
+
+    /// Execute with per-call scheduling parameters, reporting what the
+    /// schedule actually did. Backends without an intra-call parallel
+    /// path (everything except `vector` today) ignore the plan and run
+    /// serially — results are identical by the sharding contract, so
+    /// degrading is always safe.
+    fn run_sharded(
+        &self,
+        ir: &StencilIr,
+        args: &mut StencilArgs,
+        cfg: &RunConfig,
+    ) -> Result<ShardReport> {
+        let _ = cfg;
+        self.run(ir, args)?;
+        Ok(ShardReport::serial())
+    }
 }
 
 /// Names of all built-in backends, in the tier order of Fig. 3.

@@ -1,0 +1,547 @@
+//! Intra-call horizontal domain sharding: the schedule half of the
+//! paper's multi-core CPU backends (`gt:cpu_kfirst`/`gt:cpu_ifirst`,
+//! Fig. 3), kept strictly separate from the algorithm as in Devito and
+//! Halide — a [`Sharding`] plan says *how* one invocation's compute
+//! domain is split across threads, and nothing about *what* is computed.
+//!
+//! ## Execution model
+//!
+//! The compute domain `[0, ni)` is partitioned into contiguous,
+//! halo-correct **i-slabs**, one per thread:
+//!
+//! * **Slabs are the parallel units.** Each slab evaluates demoted
+//!   temporaries (register/plane scratch, ring k-caches) over its own
+//!   extent-expanded i-range, recomputing the halo overlap instead of
+//!   communicating — temporaries never cross a slab boundary.
+//! * **Writes to real storages are owned.** `Field3D` stores are clamped
+//!   to the slab's owned partition (edge slabs absorb the write halo), so
+//!   two slabs never write the same element.
+//! * **Tiers (and materializing stages) are globally ordered barriers.**
+//!   Inside a `PARALLEL` multistage, every slab finishes loop-nest pass
+//!   *t* before any slab starts pass *t+1*, which gives cross-slab
+//!   readers of just-written fields a happens-before edge.
+//! * **Vertical sweeps are slab-local.** A sequential (FORWARD/BACKWARD)
+//!   multistage runs each slab's whole k-sweep independently, ring
+//!   k-cache included; the shardability analysis in the vector backend
+//!   proves all in-sweep field flow is column-local first (and falls back
+//!   to serial execution for the rare multistage where it is not).
+//!
+//! Every plan is bitwise-identical to [`Sharding::Off`]: values are
+//! computed by the same floating-point expressions over the same inputs,
+//! only the loop partitioning changes. `tests/property_equivalence.rs`
+//! sweeps random programs across thread counts to enforce this, and the
+//! hosted CI thread-matrix re-runs those suites on real multi-core
+//! runners with `REPRO_THREADS` exported.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// How one stencil invocation's compute domain is split across threads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Sharding {
+    /// Single-threaded execution (the default): the bitwise reference.
+    #[default]
+    Off,
+    /// Exactly `n` i-slabs on `n` threads, clamped to the domain's
+    /// i-extent (a 3-column domain can host at most 3 one-column slabs).
+    Threads(usize),
+    /// One slab per available core, degraded toward `Off` whenever the
+    /// domain is too narrow to give every slab at least
+    /// [`MIN_AUTO_SLAB_WIDTH`] columns (tiny domains, CI smoke sizes).
+    Auto,
+}
+
+/// Narrowest i-slab `Auto` considers profitable: below this the per-call
+/// fork/join and halo-recompute overhead swamps the parallel win.
+pub const MIN_AUTO_SLAB_WIDTH: usize = 16;
+
+impl Sharding {
+    /// Parse a CLI/env spelling: `off`, `auto`, or a thread count.
+    pub fn parse(s: &str) -> Option<Sharding> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "off" | "0" => Some(Sharding::Off),
+            "auto" => Some(Sharding::Auto),
+            n => n.parse::<usize>().ok().map(Sharding::Threads),
+        }
+    }
+
+    /// The plan named by the `REPRO_THREADS` environment variable (how
+    /// the CI thread-matrix reaches the test suites); unset or
+    /// unparsable means `Off`.
+    pub fn from_env() -> Sharding {
+        std::env::var("REPRO_THREADS")
+            .ok()
+            .and_then(|s| Sharding::parse(&s))
+            .unwrap_or(Sharding::Off)
+    }
+
+    /// Effective thread count for a domain with i-extent `ni` (1 means
+    /// serial execution). `Auto` degrades to serial when slabs would be
+    /// narrower than [`MIN_AUTO_SLAB_WIDTH`]; explicit `Threads(n)` only
+    /// clamps to the number of nonempty slabs.
+    pub fn resolve(&self, ni: usize) -> usize {
+        let want = match self {
+            Sharding::Off => 1,
+            Sharding::Threads(n) => (*n).max(1),
+            Sharding::Auto => {
+                let avail = std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1);
+                avail.min(ni / MIN_AUTO_SLAB_WIDTH)
+            }
+        };
+        want.min(ni.max(1)).max(1)
+    }
+}
+
+impl std::fmt::Display for Sharding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Sharding::Off => write!(f, "off"),
+            Sharding::Threads(n) => write!(f, "{n}"),
+            Sharding::Auto => write!(f, "auto"),
+        }
+    }
+}
+
+/// What a sharded run actually did — surfaced through
+/// [`crate::coordinator::RunStats`] so `--json` consumers see the
+/// *effective* thread count, never the requested plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardReport {
+    /// Largest thread count any parallel region of the run fanned out to
+    /// (1 = the whole call ran serially, whatever the plan asked for).
+    pub threads: u32,
+    /// Number of i-slabs the domain was split into.
+    pub slabs: u32,
+    /// Shortest per-slab wall time inside parallel regions, summed over
+    /// the run's regions. Note: this is *occupancy*, not pure compute —
+    /// a slab stalled in a tier/stage barrier keeps accruing, so inside
+    /// barriered `PARALLEL` groups the per-slab spread understates load
+    /// imbalance (between-region skew still shows).
+    pub busy_min: Duration,
+    /// Longest per-slab wall time (the critical path of the fan-out);
+    /// same occupancy caveat as [`ShardReport::busy_min`].
+    pub busy_max: Duration,
+    /// Total per-slab wall time across all slabs; same occupancy caveat
+    /// as [`ShardReport::busy_min`].
+    pub busy_total: Duration,
+}
+
+impl ShardReport {
+    /// The report of an unsharded run.
+    pub fn serial() -> ShardReport {
+        ShardReport {
+            threads: 1,
+            slabs: 1,
+            busy_min: Duration::ZERO,
+            busy_max: Duration::ZERO,
+            busy_total: Duration::ZERO,
+        }
+    }
+}
+
+impl Default for ShardReport {
+    fn default() -> Self {
+        ShardReport::serial()
+    }
+}
+
+/// Contiguous i-slabs partitioning `[0, ni)` as evenly as possible
+/// (widths differ by at most one column); empty slabs never occur because
+/// the count is clamped to `ni`.
+pub fn split_slabs(ni: usize, threads: usize) -> Vec<(i64, i64)> {
+    let t = threads.min(ni).max(1);
+    (0..t)
+        .map(|s| (((ni * s) / t) as i64, ((ni * (s + 1)) / t) as i64))
+        .collect()
+}
+
+/// The i-range of `Field3D` *stores* owned by slab `(a, b)` for a write
+/// whose serial range is `[e0, ni + e1)` (stage/op i-extent `(e0, e1)`,
+/// `e0 <= 0 <= e1`): interior boundaries partition exactly at the slab
+/// edges, and the edge slabs absorb the write halo. The full slab
+/// `(0, ni)` reproduces the serial range. Shared by the materializing
+/// path's `stage_region` and the fused path's `resolve_bounds` so the
+/// ownership rule can never diverge between the two evaluators.
+pub(crate) fn owned_store_range(
+    slab: (i64, i64),
+    ni: i64,
+    e0: i64,
+    e1: i64,
+) -> (i64, i64) {
+    let (a, b) = slab;
+    (
+        if a == 0 { e0 } else { a },
+        if b == ni { ni + e1 } else { b },
+    )
+}
+
+/// Shared-mutable cell handing each slab job a view of one value (the
+/// run's `Env`) during sharded execution.
+///
+/// # Safety contract
+///
+/// Callers must uphold the sharding execution model documented at module
+/// level: slabs write disjoint owned i-ranges of every storage, and only
+/// read data that is read-only for the whole run, produced by the same
+/// slab, or produced before the last barrier/join (the worker pool's
+/// fork/join and the per-tier `Barrier`s provide the happens-before
+/// edges). The multistage shardability analysis serializes anything that
+/// cannot be proven to satisfy this.
+///
+/// Known soundness debt (documented, like the PJRT `Send`/`Sync`
+/// impls): each slab materializes its own `&mut Env` from this cell, so
+/// several `&mut` aliases to one `Env` are live at once. The writes are
+/// provably disjoint and the reads barriered, but Rust's aliasing model
+/// does not admit overlapping `&mut` at all — a fully sound version
+/// would route storage access through `UnsafeCell`/raw-slice views.
+/// Tracked as a ROADMAP open item; until then the sharded evaluators
+/// must keep every storage access inside the discipline above.
+pub(crate) struct SyncCell<T>(*mut T);
+
+unsafe impl<T> Send for SyncCell<T> {}
+unsafe impl<T> Sync for SyncCell<T> {}
+
+impl<T> SyncCell<T> {
+    pub(crate) fn new(v: &mut T) -> SyncCell<T> {
+        SyncCell(v as *mut T)
+    }
+
+    /// # Safety
+    /// See the type-level contract; the returned reference aliases every
+    /// other slab's, so accesses must stay within the disjoint-write /
+    /// barriered-read discipline.
+    #[allow(clippy::mut_from_ref)]
+    pub(crate) unsafe fn get(&self) -> &mut T {
+        &mut *self.0
+    }
+}
+
+/// One queued fan-out: a borrowed slab closure, lifetime-erased. The
+/// pointer is only dereferenced while [`WorkerPool::run_slabs`] blocks
+/// its caller, which keeps the referent alive.
+#[derive(Clone, Copy)]
+struct Job {
+    f: *const (dyn Fn(usize) + Sync),
+    nslabs: usize,
+}
+
+// Safety: see `Job` — the raw pointer never outlives the blocked caller.
+unsafe impl Send for Job {}
+
+struct PoolState {
+    /// Bumped once per job; workers wake when it moves past what they saw.
+    epoch: u64,
+    job: Option<Job>,
+    /// Workers that have not finished (or skipped) the current job yet.
+    remaining: usize,
+    /// A slab of the current job panicked (re-raised on the caller).
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    work: Condvar,
+    done: Condvar,
+}
+
+/// A persistent pool of parked worker threads executing *scoped* slab
+/// jobs: plain `std` threads, spawned once and reused across stencil
+/// calls (the paper's OpenMP-thread-team analog, without the runtime
+/// dependency).
+///
+/// Slab `s` of a job is always executed by participant `s` — the caller
+/// runs slab 0, worker `w` runs slab `w` — so a job over `n` slabs is
+/// guaranteed `n` distinct concurrent threads and may synchronize them
+/// with a `std::sync::Barrier` of `n` participants (the fused evaluator's
+/// tier barriers rely on this).
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Default for WorkerPool {
+    fn default() -> Self {
+        WorkerPool::new()
+    }
+}
+
+impl WorkerPool {
+    /// An empty pool; workers are spawned on demand by
+    /// [`WorkerPool::ensure_workers`].
+    pub fn new() -> WorkerPool {
+        WorkerPool {
+            shared: Arc::new(PoolShared {
+                state: Mutex::new(PoolState {
+                    epoch: 0,
+                    job: None,
+                    remaining: 0,
+                    panicked: false,
+                    shutdown: false,
+                }),
+                work: Condvar::new(),
+                done: Condvar::new(),
+            }),
+            handles: Vec::new(),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Grow the pool until at least `n` workers exist (never shrinks —
+    /// the pool is meant to persist across calls).
+    pub fn ensure_workers(&mut self, n: usize) {
+        while self.handles.len() < n {
+            let idx = self.handles.len() + 1; // participant/slab index
+            let shared = self.shared.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("gt4rs-shard-{idx}"))
+                .spawn(move || worker_loop(&shared, idx))
+                .expect("spawn shard worker");
+            self.handles.push(handle);
+        }
+    }
+
+    /// Execute `f(slab)` for every slab in `0..nslabs` concurrently, one
+    /// slab per participant (caller = slab 0), and block until all slabs
+    /// complete — even when a slab panics (the caller must not unwind
+    /// while workers still hold the borrowed closure; a worker-side panic
+    /// is re-raised here after the join). Requires
+    /// `nslabs - 1 <= self.workers()`.
+    ///
+    /// Caveat: the panic-safe join cannot rescue a job whose *other*
+    /// slabs are blocked in a `std::sync::Barrier` the panicking slab
+    /// never reached (std barriers have no poisoning) — such a bug hangs
+    /// the run instead of panicking it. Slab jobs must therefore keep
+    /// their barrier schedules slab-independent, as the evaluators do.
+    pub fn run_slabs(&self, nslabs: usize, f: &(dyn Fn(usize) + Sync)) {
+        assert!(
+            nslabs >= 1 && nslabs <= self.handles.len() + 1,
+            "run_slabs: {nslabs} slabs exceed pool of {} workers + caller",
+            self.handles.len()
+        );
+        if nslabs == 1 {
+            f(0);
+            return;
+        }
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            debug_assert!(st.job.is_none(), "overlapping run_slabs on one pool");
+            // Safety: lifetime erasure of the borrowed closure (a fat
+            // reference reinterpreted as a fat raw pointer). We block
+            // below until `remaining` reaches zero, so the referent
+            // outlives every dereference.
+            let erased: *const (dyn Fn(usize) + Sync) =
+                unsafe { std::mem::transmute(f) };
+            st.epoch += 1;
+            st.job = Some(Job { f: erased, nslabs });
+            st.remaining = self.handles.len();
+            st.panicked = false;
+            self.shared.work.notify_all();
+        }
+        let caller = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(0)));
+        let panicked = {
+            let mut st = self.shared.state.lock().unwrap();
+            while st.remaining > 0 {
+                st = self.shared.done.wait(st).unwrap();
+            }
+            st.job = None;
+            st.panicked
+        };
+        if let Err(payload) = caller {
+            std::panic::resume_unwind(payload);
+        }
+        if panicked {
+            panic!("a sharded slab job panicked on a worker thread");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &PoolShared, idx: usize) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    break;
+                }
+                st = shared.work.wait(st).unwrap();
+            }
+            seen = st.epoch;
+            st.job.expect("job present at a new epoch")
+        };
+        let mut failed = false;
+        if idx < job.nslabs {
+            // Safety: `run_slabs` blocks its caller until every worker has
+            // decremented `remaining`, keeping the closure alive here. A
+            // panicking slab is caught so the countdown (and with it the
+            // caller's join) always completes; the caller re-raises.
+            let f = unsafe { &*job.f };
+            failed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(idx)))
+                .is_err();
+        }
+        let mut st = shared.state.lock().unwrap();
+        if failed {
+            st.panicked = true;
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Barrier;
+
+    #[test]
+    fn parse_and_display_roundtrip() {
+        assert_eq!(Sharding::parse("off"), Some(Sharding::Off));
+        assert_eq!(Sharding::parse("0"), Some(Sharding::Off));
+        assert_eq!(Sharding::parse("auto"), Some(Sharding::Auto));
+        assert_eq!(Sharding::parse("4"), Some(Sharding::Threads(4)));
+        assert_eq!(Sharding::parse("AUTO"), Some(Sharding::Auto));
+        assert_eq!(Sharding::parse("banana"), None);
+        assert_eq!(Sharding::Off.to_string(), "off");
+        assert_eq!(Sharding::Threads(8).to_string(), "8");
+        assert_eq!(Sharding::Auto.to_string(), "auto");
+    }
+
+    #[test]
+    fn resolve_clamps_to_domain_and_degrades_auto() {
+        // Explicit thread counts clamp to the number of nonempty slabs.
+        assert_eq!(Sharding::Threads(8).resolve(3), 3);
+        assert_eq!(Sharding::Threads(2).resolve(64), 2);
+        assert_eq!(Sharding::Threads(1).resolve(64), 1);
+        assert_eq!(Sharding::Off.resolve(1024), 1);
+        // Auto never shards a domain narrower than one profitable slab
+        // per extra thread (the CI bench-smoke / tiny-domain guarantee).
+        assert_eq!(Sharding::Auto.resolve(MIN_AUTO_SLAB_WIDTH - 1), 1);
+        assert_eq!(Sharding::Auto.resolve(8), 1);
+        // Auto on a wide domain uses at most one thread per core.
+        let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        assert!(Sharding::Auto.resolve(1 << 20) <= avail);
+    }
+
+    #[test]
+    fn split_slabs_partitions_exactly() {
+        for ni in [1usize, 2, 3, 7, 16, 33, 128] {
+            for t in [1usize, 2, 3, 4, 8, 200] {
+                let slabs = split_slabs(ni, t);
+                assert_eq!(slabs.len(), t.min(ni));
+                assert_eq!(slabs[0].0, 0);
+                assert_eq!(slabs.last().unwrap().1, ni as i64);
+                for w in slabs.windows(2) {
+                    assert_eq!(w[0].1, w[1].0, "slabs must tile contiguously");
+                }
+                for (a, b) in &slabs {
+                    assert!(b > a, "empty slab in {slabs:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn owned_store_ranges_tile_the_serial_write_range() {
+        // For any slab partition and write extent, the owned store
+        // ranges must tile [e0, ni + e1) exactly — no overlap, no gap —
+        // and the full slab must reproduce the serial range.
+        let ni = 13usize;
+        for (e0, e1) in [(0i64, 0i64), (-2, 1), (-1, 3)] {
+            assert_eq!(
+                owned_store_range((0, ni as i64), ni as i64, e0, e1),
+                (e0, ni as i64 + e1)
+            );
+            for t in [1usize, 2, 3, 5] {
+                let slabs = split_slabs(ni, t);
+                let ranges: Vec<(i64, i64)> = slabs
+                    .iter()
+                    .map(|&s| owned_store_range(s, ni as i64, e0, e1))
+                    .collect();
+                assert_eq!(ranges[0].0, e0);
+                assert_eq!(ranges.last().unwrap().1, ni as i64 + e1);
+                for w in ranges.windows(2) {
+                    assert_eq!(w[0].1, w[1].0, "store ranges must tile: {ranges:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn worker_pool_runs_every_slab_exactly_once() {
+        let mut pool = WorkerPool::new();
+        pool.ensure_workers(3);
+        assert_eq!(pool.workers(), 3);
+        let hits: Vec<AtomicUsize> = (0..4).map(|_| AtomicUsize::new(0)).collect();
+        // Reuse across jobs, including narrower fan-outs than the pool.
+        for _ in 0..50 {
+            pool.run_slabs(4, &|s| {
+                hits[s].fetch_add(1, Ordering::Relaxed);
+            });
+            pool.run_slabs(2, &|s| {
+                hits[s].fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(hits[0].load(Ordering::Relaxed), 100);
+        assert_eq!(hits[1].load(Ordering::Relaxed), 100);
+        assert_eq!(hits[2].load(Ordering::Relaxed), 50);
+        assert_eq!(hits[3].load(Ordering::Relaxed), 50);
+    }
+
+    #[test]
+    fn worker_pool_guarantees_concurrent_slabs_for_barriers() {
+        // Every slab gets its own thread, so an n-participant barrier
+        // inside the job must not deadlock — the property the fused
+        // evaluator's tier barriers depend on.
+        let mut pool = WorkerPool::new();
+        pool.ensure_workers(3);
+        let barrier = Barrier::new(4);
+        let phase = AtomicUsize::new(0);
+        pool.run_slabs(4, &|_s| {
+            phase.fetch_add(1, Ordering::SeqCst);
+            barrier.wait();
+            assert_eq!(phase.load(Ordering::SeqCst), 4);
+            barrier.wait();
+            phase.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(phase.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn worker_pool_grows_on_demand() {
+        let mut pool = WorkerPool::new();
+        pool.run_slabs(1, &|s| assert_eq!(s, 0));
+        pool.ensure_workers(1);
+        pool.ensure_workers(1); // idempotent
+        assert_eq!(pool.workers(), 1);
+        let sum = AtomicUsize::new(0);
+        pool.run_slabs(2, &|s| {
+            sum.fetch_add(s + 1, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 3);
+    }
+}

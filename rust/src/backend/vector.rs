@@ -34,13 +34,21 @@
 
 use super::cexpr::{apply_bin, apply_builtin1, apply_builtin2, CExpr};
 use super::fused::FusedProgram;
-use super::program::{CStage, Env, Program};
-use super::{Backend, StencilArgs};
+use super::program::{CStage, CMultistage, Env, Program};
+use super::shard::{split_slabs, ShardReport, SyncCell, WorkerPool};
+use super::{Backend, RunConfig, StencilArgs};
 use crate::dsl::ast::{BinOp, IterationPolicy};
 use crate::ir::implir::{StencilIr, StorageClass};
 use anyhow::Result;
-use std::collections::HashMap;
-use std::sync::{Arc, Mutex, RwLock};
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Barrier, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+/// Retained idle worker pools (one per concurrently-sharding caller; a
+/// burst beyond the cap spawns throwaway pools that are dropped — joined
+/// — on return).
+const SHARD_POOL_CAP: usize = 4;
 
 #[derive(Default)]
 pub struct VectorBackend {
@@ -55,11 +63,31 @@ pub struct VectorBackend {
     /// never contend while executing — a second thread simply starts from
     /// an empty pool and contributes its buffers on the way out.
     pool: Mutex<Pool>,
+    /// Persistent worker pools for sharded runs, checked out like the
+    /// buffer pool: a sharded call pops one (growing it to the thread
+    /// count it needs), uses it, and pushes it back — concurrent sharded
+    /// dispatches from many handle threads each get their own pool, so
+    /// outer concurrency and inner sharding compose without contention.
+    shard_pools: Mutex<Vec<WorkerPool>>,
 }
 
 impl VectorBackend {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Check out a worker pool with at least `workers` workers.
+    fn checkout_workers(&self, workers: usize) -> WorkerPool {
+        let mut pool = self.shard_pools.lock().unwrap().pop().unwrap_or_default();
+        pool.ensure_workers(workers);
+        pool
+    }
+
+    fn return_workers(&self, pool: WorkerPool) {
+        let mut pools = self.shard_pools.lock().unwrap();
+        if pools.len() < SHARD_POOL_CAP {
+            pools.push(pool);
+        }
     }
 
     /// Buffer-pool traffic since the last call (and reset): how many region
@@ -504,6 +532,32 @@ fn eval_region(ctx: &EvalCtx, e: &CExpr, r: Region, pool: &mut Pool) -> Val {
     }
 }
 
+/// A stage's evaluation region for one i-slab `[a, b)` of a domain with
+/// i-extent `ni`. Demoted targets are slab-local: they evaluate over the
+/// slab's extent-*expanded* range, recomputing the halo overlap so
+/// consuming stages can window them without crossing a slab boundary.
+/// `Field3D` targets are written exactly once, so their region is clamped
+/// to the slab's *owned* partition (edge slabs absorb the write halo).
+/// The full slab `(0, ni)` reproduces the serial region for both cases.
+fn stage_region(
+    stage: &CStage,
+    classes: &[StorageClass],
+    slab: (i64, i64),
+    ni: i64,
+    nj: i64,
+    k0: i64,
+    k1: i64,
+) -> Region {
+    let e = stage.extent;
+    let (a, b) = slab;
+    let (i0, i1) = if classes[stage.target] == StorageClass::Field3D {
+        super::shard::owned_store_range(slab, ni, e.i.0 as i64, e.i.1 as i64)
+    } else {
+        (a + e.i.0 as i64, b + e.i.1 as i64)
+    };
+    Region { i0, i1, j0: e.j.0 as i64, j1: nj + e.j.1 as i64, k0, k1 }
+}
+
 #[allow(clippy::too_many_arguments)]
 fn run_stage_region(
     env: &mut Env,
@@ -514,16 +568,10 @@ fn run_stage_region(
     k0: i64,
     k1: i64,
     pool: &mut Pool,
+    slab: (i64, i64),
 ) {
     let [ni, nj, _] = env.domain;
-    let r = Region {
-        i0: stage.extent.i.0 as i64,
-        i1: ni as i64 + stage.extent.i.1 as i64,
-        j0: stage.extent.j.0 as i64,
-        j1: nj as i64 + stage.extent.j.1 as i64,
-        k0,
-        k1,
-    };
+    let r = stage_region(stage, classes, slab, ni as i64, nj as i64, k0, k1);
     let v = {
         let ctx = EvalCtx { env: &*env, classes, locals: &*locals, rings: &*rings };
         eval_region(&ctx, &stage.expr, r, pool)
@@ -579,65 +627,288 @@ pub(crate) fn prune_rings(rings: &mut Rings, level: i64, depths: &[i32], pool: &
     }
 }
 
-fn run_program(program: &Program, env: &mut Env, pool: &mut Pool) {
-    let classes: Vec<StorageClass> = program.slots.iter().map(|s| s.storage).collect();
-    let depths: Vec<i32> = program.slots.iter().map(|s| s.ring_depth).collect();
+/// Run one multistage for one i-slab (the full slab `(0, ni)` is the
+/// serial execution). Used by the serial path for every multistage, by
+/// sharded runs for each slab of a shardable *sequential* multistage
+/// (the slab-local vertical sweep: rings and locals never leave the
+/// slab), and as the serial fallback for unshardable multistages.
+/// Sharded `PARALLEL` multistages go through [`run_parallel_group`]
+/// instead, which interleaves the per-stage barriers.
+fn run_multistage(
+    ms: &CMultistage,
+    classes: &[StorageClass],
+    depths: &[i32],
+    env: &mut Env,
+    pool: &mut Pool,
+    slab: (i64, i64),
+) {
     let mut locals = Locals::default();
     let mut rings: Rings = Rings::default();
-    for ms in &program.multistages {
-        match ms.policy {
-            IterationPolicy::Parallel => {
-                // Whole 3-D region per stage: one gather/op/scatter pass.
-                // Demoted buffers live for the duration of their fusion
-                // group. (Ring slots never occur in PARALLEL multistages.)
+    match ms.policy {
+        IterationPolicy::Parallel => {
+            // Whole 3-D region per stage: one gather/op/scatter pass.
+            // Demoted buffers live for the duration of their fusion
+            // group. (Ring slots never occur in PARALLEL multistages.)
+            let mut group = None;
+            for st in &ms.stages {
+                if group != Some(st.fusion_group) {
+                    locals.flush(pool);
+                    group = Some(st.fusion_group);
+                }
+                let (k0, k1) = env.krange(&st.interval);
+                if k0 < k1 {
+                    run_stage_region(
+                        env, classes, &mut locals, &mut rings, st, k0, k1, pool, slab,
+                    );
+                }
+            }
+            locals.flush(pool);
+        }
+        IterationPolicy::Forward | IterationPolicy::Backward => {
+            let ranges: Vec<(i64, i64)> =
+                ms.stages.iter().map(|s| env.krange(&s.interval)).collect();
+            let kmin = ranges.iter().map(|r| r.0).min().unwrap_or(0);
+            let kmax = ranges.iter().map(|r| r.1).max().unwrap_or(0);
+            let ks: Vec<i64> = if ms.policy == IterationPolicy::Forward {
+                (kmin..kmax).collect()
+            } else {
+                (kmin..kmax).rev().collect()
+            };
+            for k in ks {
+                // Demoted buffers are per-level planes: group scope
+                // restarts on every level. Ring planes persist across
+                // levels and groups of this multistage.
                 let mut group = None;
-                for st in &ms.stages {
-                    if group != Some(st.fusion_group) {
-                        locals.flush(pool);
-                        group = Some(st.fusion_group);
-                    }
-                    let (k0, k1) = env.krange(&st.interval);
-                    if k0 < k1 {
+                for (st, (k0, k1)) in ms.stages.iter().zip(&ranges) {
+                    if k >= *k0 && k < *k1 {
+                        if group != Some(st.fusion_group) {
+                            locals.flush(pool);
+                            group = Some(st.fusion_group);
+                        }
                         run_stage_region(
-                            env, &classes, &mut locals, &mut rings, st, k0, k1, pool,
+                            env, classes, &mut locals, &mut rings, st, k, k + 1, pool,
+                            slab,
                         );
                     }
                 }
                 locals.flush(pool);
+                prune_rings(&mut rings, k, depths, pool);
+            }
+            // Ring state never crosses multistages.
+            for (_, (_, b)) in rings.drain() {
+                pool.put(b);
+            }
+        }
+    }
+}
+
+fn run_program(program: &Program, env: &mut Env, pool: &mut Pool) {
+    let classes: Vec<StorageClass> = program.slots.iter().map(|s| s.storage).collect();
+    let depths: Vec<i32> = program.slots.iter().map(|s| s.ring_depth).collect();
+    let ni = env.domain[0] as i64;
+    for ms in &program.multistages {
+        run_multistage(ms, &classes, &depths, env, pool, (0, ni));
+    }
+}
+
+/// Whether a multistage can fan out over i-slabs without cross-slab
+/// races. Demoted temporaries are always slab-local (recomputed in the
+/// halo overlap), so only *undemoted* (`Field3D`) slots written inside
+/// the multistage can carry values across a slab boundary:
+///
+/// * `PARALLEL` multistages get a barrier after every stage, making
+///   cross-stage flow through fields safe; the one remaining hazard is a
+///   stage reading its own `Field3D` target (gather-then-scatter
+///   semantics would observe a neighbor slab's concurrent writes
+///   whenever the stage's compute extent leaves its slab).
+/// * Sequential multistages run each slab's whole vertical sweep with no
+///   per-level synchronization, so every read of a `Field3D` slot
+///   written anywhere in the multistage must be column-local: zero
+///   i-offset *and* a zero i-extent on the reading stage.
+///
+/// Unshardable multistages run serially inside an otherwise sharded
+/// call — degrading is always bitwise-safe.
+pub(crate) fn ms_shardable(ms: &CMultistage, classes: &[StorageClass]) -> bool {
+    let written: HashSet<usize> = ms
+        .stages
+        .iter()
+        .filter(|st| classes[st.target] == StorageClass::Field3D)
+        .map(|st| st.target)
+        .collect();
+    for st in &ms.stages {
+        let wide = st.extent.i != (0, 0);
+        let mut ok = true;
+        st.expr.visit_reads(&mut |slot, off| {
+            if classes[slot] != StorageClass::Field3D {
+                return;
+            }
+            let hazard = match ms.policy {
+                IterationPolicy::Parallel => {
+                    slot == st.target && (off[0] != 0 || wide)
+                }
+                IterationPolicy::Forward | IterationPolicy::Backward => {
+                    written.contains(&slot) && (off[0] != 0 || wide)
+                }
+            };
+            if hazard {
+                ok = false;
+            }
+        });
+        if !ok {
+            return false;
+        }
+    }
+    true
+}
+
+/// Shared state of one sharded run: the slab partition, the checked-out
+/// worker pool, and per-slab buffer pools / busy-time counters that
+/// persist across the run's parallel regions.
+pub(crate) struct ShardExec<'a> {
+    pub(crate) slabs: Vec<(i64, i64)>,
+    workers: &'a WorkerPool,
+    /// Per-slab buffer pools (slab 0 inherits the backend's warm pool).
+    /// Uncontended Mutexes: slab `s` is only ever touched by one thread
+    /// at a time.
+    pools: Vec<Mutex<Pool>>,
+    /// Per-slab busy nanoseconds, accumulated across parallel regions.
+    busy: Vec<AtomicU64>,
+    /// Largest fan-out any region of this run actually used.
+    used: AtomicU64,
+}
+
+impl<'a> ShardExec<'a> {
+    pub(crate) fn new(
+        slabs: Vec<(i64, i64)>,
+        workers: &'a WorkerPool,
+        seed_pool: Pool,
+    ) -> ShardExec<'a> {
+        let n = slabs.len();
+        let mut pools = Vec::with_capacity(n);
+        pools.push(Mutex::new(seed_pool));
+        for _ in 1..n {
+            pools.push(Mutex::new(Pool::default()));
+        }
+        ShardExec {
+            slabs,
+            workers,
+            pools,
+            busy: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            used: AtomicU64::new(1),
+        }
+    }
+
+    /// The buffer pool serial fallbacks borrow (slab 0's).
+    pub(crate) fn serial_pool(&self) -> std::sync::MutexGuard<'_, Pool> {
+        self.pools[0].lock().unwrap()
+    }
+
+    /// Fan `f(slab index, env, pool)` out over every slab and join.
+    ///
+    /// Safety of the `SyncCell` deref: see the sharding execution model —
+    /// slabs write disjoint owned i-ranges, and cross-slab reads are
+    /// separated from the writes they observe by this fork/join or by the
+    /// barriers the caller threads through `f`.
+    pub(crate) fn run(
+        &self,
+        cell: &SyncCell<Env>,
+        f: &(dyn Fn(usize, &mut Env, &mut Pool) + Sync),
+    ) {
+        self.used.fetch_max(self.slabs.len() as u64, Ordering::Relaxed);
+        self.workers.run_slabs(self.slabs.len(), &|s| {
+            let t0 = Instant::now();
+            let env = unsafe { cell.get() };
+            let mut pool = self.pools[s].lock().unwrap();
+            f(s, env, &mut pool);
+            self.busy[s].fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        });
+    }
+
+    /// Merge the per-slab pools back into one and summarize the run.
+    pub(crate) fn finish(self) -> (Pool, ShardReport) {
+        let mut merged = Pool::default();
+        let mut busy: Vec<Duration> = Vec::with_capacity(self.pools.len());
+        for (m, b) in self.pools.into_iter().zip(&self.busy) {
+            merged.absorb(m.into_inner().unwrap());
+            busy.push(Duration::from_nanos(b.load(Ordering::Relaxed)));
+        }
+        let report = ShardReport {
+            threads: self.used.load(Ordering::Relaxed) as u32,
+            slabs: self.slabs.len() as u32,
+            busy_min: busy.iter().copied().min().unwrap_or_default(),
+            busy_max: busy.iter().copied().max().unwrap_or_default(),
+            busy_total: busy.iter().sum(),
+        };
+        (merged, report)
+    }
+}
+
+/// One fusion group of a sharded `PARALLEL` multistage: a single fan-out
+/// whose slabs keep their group-scoped locals alive across stages, with
+/// a barrier after every stage so cross-slab readers of `Field3D`
+/// outputs observe completed writes (the materializing path's analog of
+/// the fused evaluator's tier barriers).
+fn run_parallel_group(
+    stages: &[CStage],
+    classes: &[StorageClass],
+    exec: &ShardExec,
+    cell: &SyncCell<Env>,
+) {
+    let barrier = Barrier::new(exec.slabs.len());
+    exec.run(cell, &|s, env, pool| {
+        let slab = exec.slabs[s];
+        let mut locals = Locals::default();
+        let mut rings: Rings = Rings::default();
+        for (si, st) in stages.iter().enumerate() {
+            let (k0, k1) = env.krange(&st.interval);
+            if k0 < k1 {
+                run_stage_region(
+                    env, classes, &mut locals, &mut rings, st, k0, k1, pool, slab,
+                );
+            }
+            if si + 1 < stages.len() {
+                barrier.wait();
+            }
+        }
+        locals.flush(pool);
+    });
+}
+
+/// The sharded materializing path: each multistage either fans out over
+/// the slab partition or (when the shardability analysis says no) runs
+/// serially on the calling thread.
+fn run_program_sharded(program: &Program, env: &mut Env, exec: &ShardExec) {
+    let classes: Vec<StorageClass> = program.slots.iter().map(|s| s.storage).collect();
+    let depths: Vec<i32> = program.slots.iter().map(|s| s.ring_depth).collect();
+    let ni = env.domain[0] as i64;
+    let cell = SyncCell::new(env);
+    for ms in &program.multistages {
+        if !ms_shardable(ms, &classes) {
+            let env = unsafe { cell.get() };
+            let mut pool = exec.serial_pool();
+            run_multistage(ms, &classes, &depths, env, &mut pool, (0, ni));
+            continue;
+        }
+        match ms.policy {
+            IterationPolicy::Parallel => {
+                // One fan-out per fusion group (locals are group-scoped).
+                let mut start = 0;
+                while start < ms.stages.len() {
+                    let gid = ms.stages[start].fusion_group;
+                    let mut end = start + 1;
+                    while end < ms.stages.len() && ms.stages[end].fusion_group == gid {
+                        end += 1;
+                    }
+                    run_parallel_group(&ms.stages[start..end], &classes, exec, &cell);
+                    start = end;
+                }
             }
             IterationPolicy::Forward | IterationPolicy::Backward => {
-                let ranges: Vec<(i64, i64)> =
-                    ms.stages.iter().map(|s| env.krange(&s.interval)).collect();
-                let kmin = ranges.iter().map(|r| r.0).min().unwrap_or(0);
-                let kmax = ranges.iter().map(|r| r.1).max().unwrap_or(0);
-                let ks: Vec<i64> = if ms.policy == IterationPolicy::Forward {
-                    (kmin..kmax).collect()
-                } else {
-                    (kmin..kmax).rev().collect()
-                };
-                for k in ks {
-                    // Demoted buffers are per-level planes: group scope
-                    // restarts on every level. Ring planes persist across
-                    // levels and groups of this multistage.
-                    let mut group = None;
-                    for (st, (k0, k1)) in ms.stages.iter().zip(&ranges) {
-                        if k >= *k0 && k < *k1 {
-                            if group != Some(st.fusion_group) {
-                                locals.flush(pool);
-                                group = Some(st.fusion_group);
-                            }
-                            run_stage_region(
-                                env, &classes, &mut locals, &mut rings, st, k, k + 1, pool,
-                            );
-                        }
-                    }
-                    locals.flush(pool);
-                    prune_rings(&mut rings, k, &depths, pool);
-                }
-                // Ring state never crosses multistages.
-                for (_, (_, b)) in rings.drain() {
-                    pool.put(b);
-                }
+                // Slab-local vertical sweeps: every slab runs the whole
+                // k-loop with its own locals and ring k-cache.
+                exec.run(&cell, &|s, env, pool| {
+                    run_multistage(ms, &classes, &depths, env, pool, exec.slabs[s]);
+                });
             }
         }
     }
@@ -654,6 +925,15 @@ impl Backend for VectorBackend {
     }
 
     fn run(&self, ir: &StencilIr, args: &mut StencilArgs) -> Result<()> {
+        self.run_sharded(ir, args, &RunConfig::default()).map(|_| ())
+    }
+
+    fn run_sharded(
+        &self,
+        ir: &StencilIr,
+        args: &mut StencilArgs,
+        cfg: &RunConfig,
+    ) -> Result<ShardReport> {
         let (program, fused) = self.programs_for(ir)?;
         // Demoted temporaries are never materialized as storages here —
         // every access is served from backend-local buffers.
@@ -662,14 +942,31 @@ impl Backend for VectorBackend {
         // Check the shared pool out for the duration of the run (no lock
         // held while executing; concurrent runs get an empty pool).
         let mut pool = std::mem::take(&mut *self.pool.lock().unwrap());
-        if let Some(fp) = &fused {
-            super::fused::run_program(fp, &program, &mut env, &mut pool);
+        let threads = cfg.sharding.resolve(args.domain[0]);
+        let report = if threads <= 1 {
+            if let Some(fp) = &fused {
+                super::fused::run_program(fp, &program, &mut env, &mut pool);
+            } else {
+                run_program(&program, &mut env, &mut pool);
+            }
+            ShardReport::serial()
         } else {
-            run_program(&program, &mut env, &mut pool);
-        }
+            let workers = self.checkout_workers(threads - 1);
+            let exec =
+                ShardExec::new(split_slabs(args.domain[0], threads), &workers, pool);
+            if let Some(fp) = &fused {
+                super::fused::run_program_sharded(fp, &program, &mut env, &exec);
+            } else {
+                run_program_sharded(&program, &mut env, &exec);
+            }
+            let (merged, report) = exec.finish();
+            pool = merged;
+            self.return_workers(workers);
+            report
+        };
         self.pool.lock().unwrap().absorb(pool);
         env.restore(&program, args.fields);
-        Ok(())
+        Ok(report)
     }
 }
 
@@ -992,6 +1289,136 @@ mod tests {
             &["phi"],
             [5, 4, 7],
         );
+    }
+
+    #[test]
+    fn sharded_runs_are_bitwise_identical_to_serial() {
+        use crate::backend::shard::Sharding;
+        // Backend-level check (tests/property_equivalence.rs sweeps many
+        // more programs): hdiff (PARALLEL) and vadv (sequential sweep,
+        // Field3D carries) on both the materializing (O2) and fused (O3)
+        // paths, Threads(1..=3) vs Off, bitwise. The odd domain width
+        // exercises uneven slab splits.
+        let domain = [13, 9, 6];
+        for (name, scalars) in
+            [("hdiff", vec![]), ("vadv", vec![("dtdz", 0.3f64)])]
+        {
+            for level in [crate::opt::OptLevel::O2, crate::opt::OptLevel::O3] {
+                let ir = crate::analysis::compile_source_opt(
+                    crate::stdlib::source(name).unwrap(),
+                    name,
+                    &BTreeMap::new(),
+                    &crate::opt::OptConfig::level(level),
+                )
+                .unwrap();
+                let names: Vec<String> =
+                    ir.fields.iter().map(|f| f.name.clone()).collect();
+                let be = VectorBackend::new();
+                let run_with = |sharding: Sharding| -> (Vec<Storage>, ShardReport) {
+                    let mut fields: Vec<Storage> = names
+                        .iter()
+                        .map(|_| {
+                            Storage::from_fn_extended(domain, 3, |i, j, k| {
+                                ((i * 5 + j * 3 + k * 11) as f64 * 0.37).sin()
+                            })
+                        })
+                        .collect();
+                    let report = {
+                        let mut refs: Vec<(&str, &mut Storage)> = names
+                            .iter()
+                            .map(|n| n.as_str())
+                            .zip(fields.iter_mut())
+                            .collect();
+                        be.run_sharded(
+                            &ir,
+                            &mut StencilArgs {
+                                fields: &mut refs,
+                                scalars: &scalars,
+                                domain,
+                            },
+                            &RunConfig { sharding },
+                        )
+                        .unwrap()
+                    };
+                    (fields, report)
+                };
+                let (reference, rep0) = run_with(Sharding::Off);
+                assert_eq!(rep0.threads, 1);
+                for t in 1..=3usize {
+                    let (got, rep) = run_with(Sharding::Threads(t));
+                    assert_eq!(rep.threads, t as u32, "{name} O{level} threads");
+                    for (n, (r, g)) in names.iter().zip(reference.iter().zip(&got)) {
+                        assert_eq!(
+                            r.max_abs_diff(g),
+                            0.0,
+                            "{name} O{level} Threads({t}): field `{n}` diverged"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unshardable_multistage_degrades_to_serial_and_stays_exact() {
+        use crate::backend::shard::Sharding;
+        // A FORWARD sweep carrying state in a *field* read at a horizontal
+        // offset cannot run slab-local sweeps; the shardability analysis
+        // must serialize it (threads reported as 1) and the result must
+        // stay bitwise equal to the serial run.
+        const SRC: &str = "
+            stencil s(a: Field<f64>, x: Field<f64>) {
+                with computation(FORWARD) {
+                    interval(0, 1) { x = a; }
+                    interval(1, None) { x = a + x[1,0,-1] * 0.5; }
+                }
+            }";
+        let domain = [10, 6, 7];
+        for level in [crate::opt::OptLevel::O0, crate::opt::OptLevel::O3] {
+            let ir = crate::analysis::compile_source_opt(
+                SRC,
+                "s",
+                &BTreeMap::new(),
+                &crate::opt::OptConfig::level(level),
+            )
+            .unwrap();
+            let be = VectorBackend::new();
+            let run_with = |sharding: Sharding| -> (Vec<Storage>, ShardReport) {
+                let mut fields: Vec<Storage> = (0..2)
+                    .map(|_| {
+                        Storage::from_fn_extended(domain, 2, |i, j, k| {
+                            (i * 7 + j * 2 + k * 3) as f64 * 0.01
+                        })
+                    })
+                    .collect();
+                let report = {
+                    let mut refs: Vec<(&str, &mut Storage)> = ["a", "x"]
+                        .into_iter()
+                        .zip(fields.iter_mut())
+                        .collect();
+                    be.run_sharded(
+                        &ir,
+                        &mut StencilArgs {
+                            fields: &mut refs,
+                            scalars: &[],
+                            domain,
+                        },
+                        &RunConfig { sharding },
+                    )
+                    .unwrap()
+                };
+                (fields, report)
+            };
+            let (reference, _) = run_with(Sharding::Off);
+            let (got, rep) = run_with(Sharding::Threads(3));
+            assert_eq!(
+                rep.threads, 1,
+                "unshardable program must report serial execution, O{level}"
+            );
+            for (r, g) in reference.iter().zip(&got) {
+                assert_eq!(r.max_abs_diff(g), 0.0, "O{level} diverged");
+            }
+        }
     }
 
     #[test]

@@ -18,6 +18,10 @@ pub struct Timing {
     pub calls: u64,
     pub checks: Duration,
     pub execute: Duration,
+    /// Largest *effective* intra-call thread count any recorded run used
+    /// (1 = every call ran serially; see
+    /// [`crate::backend::shard::ShardReport::threads`]).
+    pub max_threads: u32,
 }
 
 impl Timing {
@@ -53,7 +57,14 @@ impl Metrics {
         Self::default()
     }
 
-    pub fn record(&mut self, stencil: &str, backend: &str, checks: Duration, execute: Duration) {
+    pub fn record(
+        &mut self,
+        stencil: &str,
+        backend: &str,
+        checks: Duration,
+        execute: Duration,
+        threads: u32,
+    ) {
         let e = self
             .entries
             .entry((stencil.to_string(), backend.to_string()))
@@ -61,6 +72,7 @@ impl Metrics {
         e.calls += 1;
         e.checks += checks;
         e.execute += execute;
+        e.max_threads = e.max_threads.max(threads.max(1));
     }
 
     pub fn get(&self, stencil: &str, backend: &str) -> Option<&Timing> {
@@ -77,18 +89,19 @@ impl Metrics {
         let mut s = String::new();
         let _ = writeln!(
             s,
-            "{:<24} {:<10} {:>8} {:>14} {:>14}",
-            "stencil", "backend", "calls", "mean exec", "mean checks"
+            "{:<24} {:<10} {:>8} {:>14} {:>14} {:>8}",
+            "stencil", "backend", "calls", "mean exec", "mean checks", "threads"
         );
         for ((st, be), t) in &self.entries {
             let _ = writeln!(
                 s,
-                "{:<24} {:<10} {:>8} {:>14?} {:>14?}",
+                "{:<24} {:<10} {:>8} {:>14?} {:>14?} {:>8}",
                 st,
                 be,
                 t.calls,
                 t.mean_execute(),
-                if t.calls == 0 { Duration::ZERO } else { t.checks / t.calls as u32 }
+                if t.calls == 0 { Duration::ZERO } else { t.checks / t.calls as u32 },
+                t.max_threads.max(1)
             );
         }
         s
@@ -109,8 +122,15 @@ impl SharedMetrics {
         Self::default()
     }
 
-    pub fn record(&self, stencil: &str, backend: &str, checks: Duration, execute: Duration) {
-        self.0.lock().unwrap().record(stencil, backend, checks, execute);
+    pub fn record(
+        &self,
+        stencil: &str,
+        backend: &str,
+        checks: Duration,
+        execute: Duration,
+        threads: u32,
+    ) {
+        self.0.lock().unwrap().record(stencil, backend, checks, execute, threads);
     }
 
     /// Timing for a `(stencil, backend)` pair ([`Timing`] is `Copy`).
@@ -141,12 +161,13 @@ mod tests {
     #[test]
     fn records_and_averages() {
         let mut m = Metrics::new();
-        m.record("hdiff", "xla", Duration::from_micros(100), Duration::from_micros(900));
-        m.record("hdiff", "xla", Duration::from_micros(100), Duration::from_micros(1100));
+        m.record("hdiff", "xla", Duration::from_micros(100), Duration::from_micros(900), 1);
+        m.record("hdiff", "xla", Duration::from_micros(100), Duration::from_micros(1100), 4);
         let t = m.get("hdiff", "xla").unwrap();
         assert_eq!(t.calls, 2);
         assert_eq!(t.mean_execute(), Duration::from_micros(1000));
         assert_eq!(t.total(), Duration::from_micros(2200));
+        assert_eq!(t.max_threads, 4, "effective thread high-water mark");
         assert!(m.report().contains("hdiff"));
     }
 
@@ -168,6 +189,7 @@ mod tests {
                         "vector",
                         Duration::from_micros(1),
                         Duration::from_micros(10),
+                        1,
                     );
                 });
             }

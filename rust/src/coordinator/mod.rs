@@ -29,6 +29,7 @@ pub mod stencil;
 pub use stencil::{BoundInvocation, InvocationBuilder, Stencil};
 
 use crate::analysis;
+use crate::backend::shard::{ShardReport, Sharding};
 use crate::backend::{self, Backend};
 use crate::cache::StencilCache;
 use crate::dsl::parser::parse_module;
@@ -99,11 +100,22 @@ pub fn def_fingerprint(
 pub struct RunStats {
     pub checks: Duration,
     pub execute: Duration,
+    /// What the intra-call sharding schedule actually did: the
+    /// *effective* thread count (1 when the plan degraded to serial),
+    /// slab count, and per-slab busy-time spread. Always truthful —
+    /// `--json` consumers must never see the requested plan echoed back
+    /// as if it had run.
+    pub shard: ShardReport,
 }
 
 impl RunStats {
     pub fn total(&self) -> Duration {
         self.checks + self.execute
+    }
+
+    /// Effective intra-call thread count of this run.
+    pub fn threads_used(&self) -> u32 {
+        self.shard.threads.max(1)
     }
 }
 
@@ -151,7 +163,21 @@ impl Coordinator {
     }
 
     pub fn set_opt_level(&mut self, level: OptLevel) {
-        self.opt = OptConfig::level(level);
+        // Opt levels select passes; the sharding plan is an orthogonal
+        // scheduling knob and survives level changes.
+        let sharding = self.opt.sharding;
+        self.opt = OptConfig::level(level).with_sharding(sharding);
+    }
+
+    /// Default intra-call sharding plan stamped into every handle minted
+    /// afterwards (never part of compilation cache keys — every plan is
+    /// bitwise-identical by contract).
+    pub fn set_sharding(&mut self, sharding: Sharding) {
+        self.opt.sharding = sharding;
+    }
+
+    pub fn sharding(&self) -> Sharding {
+        self.opt.sharding
     }
 
     pub fn set_opt_config(&mut self, config: OptConfig) {
@@ -247,7 +273,13 @@ impl Coordinator {
     pub fn stencil_for(&mut self, fingerprint: u64, backend: &str) -> Result<Stencil> {
         let ir = self.ir(fingerprint)?;
         let be = self.backend(backend)?;
-        Ok(Stencil::new(ir, be, self.checks_enabled, self.metrics.clone()))
+        Ok(Stencil::new(
+            ir,
+            be,
+            self.checks_enabled,
+            self.opt.sharding,
+            self.metrics.clone(),
+        ))
     }
 
     /// Allocate a zeroed storage with exactly the halo a stencil's field
@@ -476,6 +508,56 @@ mod tests {
             sums.push(out.domain_sum());
         }
         assert_eq!(sums[0].to_bits(), sums[1].to_bits(), "opt level changed results");
+    }
+
+    #[test]
+    fn sharding_plans_share_cache_entries_and_agree_bitwise() {
+        use crate::backend::shard::Sharding;
+        let domain = [16, 12, 6];
+        let mut sums: Vec<u64> = Vec::new();
+        for sharding in [Sharding::Off, Sharding::Threads(3), Sharding::Auto] {
+            let mut c = Coordinator::with_opt_level(crate::opt::OptLevel::O3);
+            c.set_sharding(sharding);
+            let fp = c.compile_library("hdiff").unwrap();
+            let s = c.stencil_for(fp, "vector").unwrap();
+            assert_eq!(s.sharding(), sharding);
+            let mut inp = s.alloc_field("in_phi", domain).unwrap();
+            let mut coeff = s.alloc_field("coeff", domain).unwrap();
+            let mut out = s.alloc_field("out_phi", domain).unwrap();
+            let h = inp.info.halo;
+            for i in -(h[0].0 as i64)..(domain[0] + h[0].1) as i64 {
+                for j in -(h[1].0 as i64)..(domain[1] + h[1].1) as i64 {
+                    for k in 0..domain[2] as i64 {
+                        inp.set(i, j, k, ((i * 3 + j * 5 + k * 7) as f64).sin());
+                    }
+                }
+            }
+            coeff.fill(0.05);
+            let mut inv = s
+                .bind()
+                .field("in_phi", &inp)
+                .field("coeff", &coeff)
+                .field("out_phi", &out)
+                .domain(domain)
+                .finish()
+                .unwrap();
+            let stats = inv.run(&mut [&mut inp, &mut coeff, &mut out]).unwrap();
+            if sharding == Sharding::Threads(3) {
+                assert_eq!(stats.threads_used(), 3);
+            }
+            // The plan must not salt the cache: every coordinator sees the
+            // same fingerprint for the same source + opt level.
+            sums.push(out.domain_sum().to_bits());
+        }
+        assert!(sums.windows(2).all(|w| w[0] == w[1]), "sharding changed results");
+        // Same coordinator, plan changed between compiles: still one entry.
+        let mut c = Coordinator::new();
+        c.set_sharding(Sharding::Off);
+        let a = c.compile_library("copy").unwrap();
+        c.set_sharding(Sharding::Threads(8));
+        let b = c.compile_library("copy").unwrap();
+        assert_eq!(a, b, "sharding must not salt compilation cache keys");
+        assert_eq!(c.cache_stats(), (1, 1));
     }
 
     #[test]

@@ -46,7 +46,8 @@
 //! on a stale layout.
 
 use crate::backend::program::{validate_args, validate_field};
-use crate::backend::{Backend, StencilArgs};
+use crate::backend::shard::Sharding;
+use crate::backend::{Backend, RunConfig, StencilArgs};
 use crate::coordinator::metrics::SharedMetrics;
 use crate::coordinator::RunStats;
 use crate::ir::implir::StencilIr;
@@ -61,6 +62,10 @@ pub struct Stencil {
     ir: Arc<StencilIr>,
     backend: Arc<dyn Backend>,
     checks_enabled: bool,
+    /// Default intra-call sharding plan for invocations bound from this
+    /// handle (overridable per invocation via
+    /// [`InvocationBuilder::sharding`]).
+    sharding: Sharding,
     metrics: SharedMetrics,
 }
 
@@ -69,9 +74,10 @@ impl Stencil {
         ir: Arc<StencilIr>,
         backend: Arc<dyn Backend>,
         checks_enabled: bool,
+        sharding: Sharding,
         metrics: SharedMetrics,
     ) -> Stencil {
-        Stencil { ir, backend, checks_enabled, metrics }
+        Stencil { ir, backend, checks_enabled, sharding, metrics }
     }
 
     /// The analyzed implementation IR (shared, never copied).
@@ -102,6 +108,19 @@ impl Stencil {
         self.checks_enabled = enabled;
     }
 
+    /// This handle's default intra-call sharding plan.
+    pub fn sharding(&self) -> Sharding {
+        self.sharding
+    }
+
+    /// Set the intra-call sharding plan for invocations bound from this
+    /// handle afterwards. Purely a scheduling knob: every plan is bitwise
+    /// identical to [`Sharding::Off`], and backends without a sharded
+    /// path ignore it.
+    pub fn set_sharding(&mut self, sharding: Sharding) {
+        self.sharding = sharding;
+    }
+
     /// Allocate a zeroed storage with exactly the halo this stencil's
     /// field requires for `domain` (the `gt4py.storage.zeros(backend=...)`
     /// analog).
@@ -118,6 +137,7 @@ impl Stencil {
             fields: Vec::with_capacity(self.ir.fields.len()),
             scalars: Vec::with_capacity(self.ir.scalars.len()),
             domain: None,
+            sharding: None,
         }
     }
 
@@ -137,12 +157,15 @@ impl Stencil {
             Duration::ZERO
         };
         let t1 = Instant::now();
-        self.backend
-            .run(&self.ir, &mut StencilArgs { fields, scalars, domain })?;
+        let shard = self.backend.run_sharded(
+            &self.ir,
+            &mut StencilArgs { fields, scalars, domain },
+            &RunConfig { sharding: self.sharding },
+        )?;
         let execute = t1.elapsed();
         self.metrics
-            .record(&self.ir.name, self.backend.name(), checks, execute);
-        Ok(RunStats { checks, execute })
+            .record(&self.ir.name, self.backend.name(), checks, execute, shard.threads);
+        Ok(RunStats { checks, execute, shard })
     }
 }
 
@@ -154,6 +177,8 @@ pub struct InvocationBuilder<'s> {
     fields: Vec<(String, StorageInfo)>,
     scalars: Vec<(String, f64)>,
     domain: Option<[usize; 3]>,
+    /// Per-invocation sharding override (`None` = the handle's plan).
+    sharding: Option<Sharding>,
 }
 
 impl InvocationBuilder<'_> {
@@ -191,6 +216,14 @@ impl InvocationBuilder<'_> {
     /// Set the compute-domain shape (required).
     pub fn domain(mut self, domain: [usize; 3]) -> Self {
         self.domain = Some(domain);
+        self
+    }
+
+    /// Override the intra-call sharding plan for this invocation (the
+    /// handle's plan applies otherwise). Scheduling only — results are
+    /// bitwise identical whatever the plan.
+    pub fn sharding(mut self, sharding: Sharding) -> Self {
+        self.sharding = Some(sharding);
         self
     }
 
@@ -265,6 +298,7 @@ impl InvocationBuilder<'_> {
             field_names,
             expected,
             scalars,
+            sharding: self.sharding.unwrap_or(stencil.sharding),
             bind_checks,
             first_reported: false,
         })
@@ -284,6 +318,8 @@ pub struct BoundInvocation {
     expected: Vec<StorageInfo>,
     /// `(name, value)` in declaration order.
     scalars: Vec<(String, f64)>,
+    /// Resolved intra-call sharding plan for every run of this invocation.
+    sharding: Sharding,
     /// Wall time of the bind-time full validation; reported as the first
     /// call's `RunStats::checks` so per-call accounting stays complete.
     bind_checks: Duration,
@@ -293,6 +329,17 @@ pub struct BoundInvocation {
 impl BoundInvocation {
     pub fn domain(&self) -> [usize; 3] {
         self.domain
+    }
+
+    /// The sharding plan this invocation runs with.
+    pub fn sharding(&self) -> Sharding {
+        self.sharding
+    }
+
+    /// Change the sharding plan between calls (no re-validation needed —
+    /// the plan never affects results, only scheduling).
+    pub fn set_sharding(&mut self, sharding: Sharding) {
+        self.sharding = sharding;
     }
 
     /// Field names in the order [`BoundInvocation::run`] expects.
@@ -367,9 +414,10 @@ impl BoundInvocation {
         let srefs: Vec<(&str, f64)> =
             self.scalars.iter().map(|(n, v)| (n.as_str(), *v)).collect();
         let t1 = Instant::now();
-        self.stencil.backend.run(
+        let shard = self.stencil.backend.run_sharded(
             &self.stencil.ir,
             &mut StencilArgs { fields: &mut refs, scalars: &srefs, domain: self.domain },
+            &RunConfig { sharding: self.sharding },
         )?;
         let execute = t1.elapsed();
 
@@ -386,8 +434,9 @@ impl BoundInvocation {
             self.stencil.backend.name(),
             checks,
             execute,
+            shard.threads,
         );
-        Ok(RunStats { checks, execute })
+        Ok(RunStats { checks, execute, shard })
     }
 }
 

@@ -45,7 +45,16 @@
 //!   executable caches live behind interior mutability, so one shared
 //!   instance serves concurrent dispatch from many threads (the
 //!   interpreting backends run fully in parallel; the PJRT-backed ones
-//!   serialize on their client);
+//!   serialize on their client). The `vector` backend additionally
+//!   shards a *single call* across cores ([`backend::shard`], the
+//!   multi-core `gt:cpu_*` analog): a [`Sharding`] plan splits the
+//!   domain into halo-correct i-slabs run on a persistent worker pool —
+//!   slabs are the parallel units (demoted temporaries and ring k-caches
+//!   stay slab-local, halo overlap is recomputed), tiers/stages are
+//!   globally ordered barriers, sequential k-sweeps run slab-local, and
+//!   `Field3D` writes are clamped to each slab's owned columns. Every
+//!   plan is bitwise-identical to serial execution, enforced by the
+//!   property suites and the hosted CI thread-matrix;
 //! * **Storage** ([`storage`]) — NumPy-like 3-D containers with
 //!   backend-specific layout, alignment and halo padding;
 //! * **Coordinator** ([`coordinator`]) — compiles definitions (memoized,
@@ -81,6 +90,7 @@ pub mod runtime;
 pub mod stdlib;
 pub mod storage;
 
+pub use backend::shard::Sharding;
 pub use coordinator::{BoundInvocation, Coordinator, Stencil};
 pub use dsl::span::{CResult, CompileError};
 pub use ir::implir::StencilIr;

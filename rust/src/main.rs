@@ -22,6 +22,7 @@
 //! (The CLI is hand-rolled: the offline vendored crate set has no clap.)
 
 use anyhow::{anyhow, bail, Result};
+use gt4rs::backend::shard::Sharding;
 use gt4rs::backend::BACKEND_NAMES;
 use gt4rs::coordinator::{Coordinator, Stencil};
 use gt4rs::model::{IsentropicModel, ModelConfig};
@@ -105,6 +106,16 @@ fn parse_opt_level(flags: &Flags) -> Result<OptLevel> {
     OptLevel::parse(s).ok_or_else(|| anyhow!("--opt-level must be 0, 1, 2 or 3, got `{s}`"))
 }
 
+/// Intra-call sharding plan: `--threads N|auto|off` wins, then the
+/// `REPRO_THREADS` environment variable, then `off`.
+fn parse_sharding(flags: &Flags) -> Result<Sharding> {
+    match flags.get("threads") {
+        Some(s) => Sharding::parse(s)
+            .ok_or_else(|| anyhow!("--threads must be a count, `auto` or `off`, got `{s}`")),
+        None => Ok(Sharding::from_env()),
+    }
+}
+
 fn parse_externals(s: Option<&str>) -> Result<BTreeMap<String, f64>> {
     let mut out = BTreeMap::new();
     if let Some(s) = s {
@@ -151,16 +162,16 @@ SUBCOMMANDS
   ir       --stencil NAME [--file F.gts] [--externals K=V,..]
            dump the IR before and after each optimizer pass
   run      --stencil NAME [--backend B] [--domain IxJxK] [--iters N]
-           compile to a stencil handle, bind the arguments once, run N
-           times; prints checksum + per-call timing (--json for
-           machine-readable output)
+           [--threads T] compile to a stencil handle, bind the arguments
+           once, run N times; prints checksum + per-call timing (--json
+           for machine-readable output)
   validate --stencil NAME [--domain IxJxK] [--backends a,b,..]
            cross-check every backend against `debug` (unavailable
            backends are skipped)
   bench    [--stencil hdiff|vadv] [--domains 32x32x16,..] [--iters N]
-           [--backends a,b,..] Figure-3 style sweep (see also cargo
-           bench); --json emits one row per (domain, backend)
-  model    [--backend B] [--domain IxJxK] [--steps N]
+           [--backends a,b,..] [--threads T] Figure-3 style sweep (see
+           also cargo bench); --json emits one row per (domain, backend)
+  model    [--backend B] [--domain IxJxK] [--steps N] [--threads T]
            run the isentropic-like demo model, log diagnostics
 
 All compiling subcommands take --opt-level 0|1|2|3 (default 2): 0 disables
@@ -173,6 +184,14 @@ Executing subcommands use the first-class stencil handle API
 storage layout/halo/dtype validation happens once at bind time, repeat
 calls only re-check shapes. --no-checks disables validation entirely
 (the paper's Fig. 3 dashed lines).
+
+--threads T selects intra-call domain sharding on backends that support
+it (vector): one invocation's compute domain is split into halo-correct
+i-slabs executed on T std threads. T is a count, `auto` (one slab per
+core, off for narrow domains) or `off` (default). The REPRO_THREADS
+environment variable supplies the plan when --threads is absent. Every
+plan is bitwise identical to `off`; timing output reports the thread
+count *actually used*.
 
 Backends: {}  (library stencils: {})",
         BACKEND_NAMES.join(", "),
@@ -199,6 +218,7 @@ fn load_source(flags: &Flags) -> Result<(String, String)> {
 /// `--opt-level`; returns its cache fingerprint.
 fn load_fp(coord: &mut Coordinator, flags: &Flags) -> Result<u64> {
     coord.set_opt_level(parse_opt_level(flags)?);
+    coord.set_sharding(parse_sharding(flags)?);
     coord.checks_enabled = !flags.flag("no-checks");
     let (name, src) = load_source(flags)?;
     let externals = parse_externals(flags.get("externals"))?;
@@ -288,17 +308,25 @@ fn cmd_run(flags: &Flags) -> Result<()> {
     let mut inv = bind_all(&stencil, &fields, &scalars, domain)?;
 
     let mut iter_rows: Vec<String> = Vec::new();
+    let mut threads_used = 1u32;
     for it in 0..iters {
         let mut refs: Vec<&mut Storage> = fields.iter_mut().map(|(_, s)| s).collect();
         let stats = inv.run(&mut refs)?;
+        threads_used = threads_used.max(stats.threads_used());
         if json {
             iter_rows.push(format!(
-                "{{\"iter\":{it},\"checks_ns\":{},\"execute_ns\":{}}}",
+                "{{\"iter\":{it},\"checks_ns\":{},\"execute_ns\":{},\"threads\":{}}}",
                 stats.checks.as_nanos(),
-                stats.execute.as_nanos()
+                stats.execute.as_nanos(),
+                stats.threads_used()
             ));
         } else {
-            println!("iter {it}: checks {:?}  execute {:?}", stats.checks, stats.execute);
+            println!(
+                "iter {it}: checks {:?}  execute {:?}  threads {}",
+                stats.checks,
+                stats.execute,
+                stats.threads_used()
+            );
         }
     }
     if json {
@@ -308,15 +336,19 @@ fn cmd_run(flags: &Flags) -> Result<()> {
                 format!("{{\"name\":\"{n}\",\"domain_sum\":{}}}", json_f64(s.domain_sum()))
             })
             .collect();
+        // `threads_used` is the *effective* count (a degraded Auto plan
+        // reports 1), never an echo of the requested plan.
         println!(
             "{{\"stencil\":\"{}\",\"backend\":\"{backend}\",\"domain\":[{},{},{}],\
-             \"opt_level\":\"{}\",\"checks_enabled\":{},\"iters\":[{}],\"fields\":[{}]}}",
+             \"opt_level\":\"{}\",\"checks_enabled\":{},\"sharding\":\"{}\",\
+             \"threads_used\":{threads_used},\"iters\":[{}],\"fields\":[{}]}}",
             stencil.name(),
             domain[0],
             domain[1],
             domain[2],
             parse_opt_level(flags)?,
             !flags.flag("no-checks"),
+            parse_sharding(flags)?,
             iter_rows.join(","),
             field_rows.join(",")
         );
@@ -407,6 +439,7 @@ fn cmd_bench(flags: &Flags) -> Result<()> {
 
     let mut coord = Coordinator::new();
     coord.set_opt_level(parse_opt_level(flags)?);
+    coord.set_sharding(parse_sharding(flags)?);
     coord.checks_enabled = !flags.flag("no-checks");
     let fp = coord.compile_library(stencil_name)?;
     let mut rows: Vec<String> = Vec::new();
@@ -501,6 +534,7 @@ fn cmd_model(flags: &Flags) -> Result<()> {
         backend: backend.clone(),
         opt_level: parse_opt_level(flags)?,
         checks: !flags.flag("no-checks"),
+        sharding: parse_sharding(flags)?,
         ..ModelConfig::default()
     };
     let mut model = IsentropicModel::new(config)?;

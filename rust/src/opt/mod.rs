@@ -36,6 +36,7 @@ pub mod demote;
 pub mod foldcse;
 pub mod fusion;
 
+use crate::backend::shard::Sharding;
 use crate::ir::implir::{Stage, StencilIr};
 
 /// Coarse optimization levels, the CLI's `--opt-level {0,1,2,3}`.
@@ -88,6 +89,14 @@ pub struct OptConfig {
     /// Not a pass: requests the fused loop-nest execution strategy from
     /// backends that support it (stamped on the IR as [`StencilIr::fused`]).
     pub fused: bool,
+    /// Not a pass either, and — unlike `fused` — **not part of the
+    /// canonical form or any fingerprint**: the intra-call domain-sharding
+    /// plan is a pure scheduling parameter (every plan is bitwise-equal to
+    /// `Off` by contract), so `Threads(2)` and `Threads(8)` must share one
+    /// cached artifact. It rides on `OptConfig` so the coordinator stamps
+    /// it into every [`crate::coordinator::Stencil`] handle it mints; the
+    /// per-call override lives on the invocation builder.
+    pub sharding: Sharding,
 }
 
 impl Default for OptConfig {
@@ -99,7 +108,14 @@ impl Default for OptConfig {
 impl OptConfig {
     /// All passes disabled (opt-level 0).
     pub fn none() -> OptConfig {
-        OptConfig { fold_cse: false, dce: false, fuse: false, demote: false, fused: false }
+        OptConfig {
+            fold_cse: false,
+            dce: false,
+            fuse: false,
+            demote: false,
+            fused: false,
+            sharding: Sharding::Off,
+        }
     }
 
     pub fn level(level: OptLevel) -> OptConfig {
@@ -109,15 +125,14 @@ impl OptConfig {
                 fold_cse: true,
                 dce: true,
                 fuse: true,
-                demote: false,
-                fused: false,
+                ..OptConfig::none()
             },
             OptLevel::O2 => OptConfig {
                 fold_cse: true,
                 dce: true,
                 fuse: true,
                 demote: true,
-                fused: false,
+                ..OptConfig::none()
             },
             OptLevel::O3 => OptConfig {
                 fold_cse: true,
@@ -125,8 +140,16 @@ impl OptConfig {
                 fuse: true,
                 demote: true,
                 fused: true,
+                ..OptConfig::none()
             },
         }
+    }
+
+    /// The same pass configuration with a different sharding plan (which
+    /// never changes fingerprints — see [`OptConfig::sharding`]).
+    pub fn with_sharding(mut self, sharding: Sharding) -> OptConfig {
+        self.sharding = sharding;
+        self
     }
 
     /// Canonical string of the enabled passes, mixed into IR fingerprints.
@@ -263,6 +286,25 @@ mod tests {
         assert_eq!(o3.canon(), "fold-cse,dce,fuse,demote,fused");
         assert_ne!(o0.salt(), o2.salt());
         assert_ne!(o2.salt(), o3.salt());
+    }
+
+    #[test]
+    fn sharding_never_reaches_fingerprints() {
+        use crate::backend::shard::Sharding;
+        // The sharding plan is a scheduling parameter: Threads(2) and
+        // Threads(8) must share one cached artifact, so neither the
+        // canonical pass string nor the cache salt may see it.
+        let base = OptConfig::level(OptLevel::O3);
+        let sharded = base.with_sharding(Sharding::Threads(8));
+        assert_eq!(base.canon(), sharded.canon());
+        assert_eq!(base.salt(), sharded.salt());
+        let auto = base.with_sharding(Sharding::Auto);
+        assert_eq!(base.salt(), auto.salt());
+        let mut ir_a = compile_source(SRC, "s", &BTreeMap::new()).unwrap();
+        PassManager::new(&base).run(&mut ir_a);
+        let mut ir_b = compile_source(SRC, "s", &BTreeMap::new()).unwrap();
+        PassManager::new(&sharded).run(&mut ir_b);
+        assert_eq!(ir_a.fingerprint, ir_b.fingerprint);
     }
 
     #[test]

@@ -293,6 +293,49 @@ fn bench_json_emits_parseable_rows() {
 }
 
 #[test]
+fn threads_flag_shards_without_changing_checksums() {
+    // --threads 2 must report the effective thread count in --json and
+    // produce bit-identical domain sums to --threads off.
+    let sums = |threads: &str| {
+        let (ok, text) = repro(&[
+            "run", "--stencil", "hdiff", "--backend", "vector", "--domain", "20x14x6",
+            "--iters", "1", "--opt-level", "3", "--threads", threads,
+        ]);
+        assert!(ok, "{text}");
+        let lines: Vec<String> = text
+            .lines()
+            .filter(|l| l.contains("domain sum"))
+            .map(str::to_string)
+            .collect();
+        assert!(!lines.is_empty(), "{text}");
+        lines
+    };
+    assert_eq!(sums("off"), sums("2"));
+    assert_eq!(sums("off"), sums("4"));
+
+    let (ok, text) = repro(&[
+        "run", "--stencil", "hdiff", "--backend", "vector", "--domain", "20x14x6",
+        "--iters", "1", "--opt-level", "3", "--threads", "2", "--json",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("\"threads_used\":2"), "{text}");
+    assert!(text.contains("\"sharding\":\"2\""), "{text}");
+
+    // Auto on a tiny domain must degrade — and must say so.
+    let (ok, text) = repro(&[
+        "run", "--stencil", "hdiff", "--backend", "vector", "--domain", "8x8x4",
+        "--iters", "1", "--threads", "auto", "--json",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("\"threads_used\":1"), "degraded Auto must report 1:\n{text}");
+
+    // A bad value fails cleanly.
+    let (ok, text) = repro(&["run", "--stencil", "hdiff", "--threads", "banana"]);
+    assert!(!ok);
+    assert!(text.contains("--threads"), "{text}");
+}
+
+#[test]
 fn no_checks_flag_disables_validation() {
     let (ok, text) = repro(&[
         "run", "--stencil", "laplacian", "--backend", "vector", "--domain", "8x8x4",

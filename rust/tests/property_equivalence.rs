@@ -15,12 +15,18 @@
 //!   (group tapes, cross-stage CSE, register/plane/ring locals) — is
 //!   bitwise identical to both the `debug` reference and the materializing
 //!   vector path, including sweep carries demoted to the plane ring
-//!   (vertical offsets on demoted temporaries).
+//!   (vertical offsets on demoted temporaries);
+//! * **intra-call domain sharding never changes a bit**: every
+//!   `Threads(n)` plan is bitwise identical to `Off` at every opt level
+//!   (swept explicitly below, and the whole suite re-runs under any plan
+//!   named by `REPRO_THREADS` — the hosted CI thread-matrix exports 1/2/8
+//!   on real multi-core runners).
 
 use gt4rs::coordinator::Coordinator;
 use gt4rs::dsl::parser::parse_module;
 use gt4rs::opt::OptLevel;
 use gt4rs::storage::Storage;
+use gt4rs::Sharding;
 
 const LEVELS: [OptLevel; 4] =
     [OptLevel::O0, OptLevel::O1, OptLevel::O2, OptLevel::O3];
@@ -107,6 +113,10 @@ fn run_backend(
     seed: u64,
     scalars: &[(&str, f64)],
 ) -> Vec<(String, Storage)> {
+    // The CI thread-matrix reaches every leg of this suite here: any plan
+    // in REPRO_THREADS applies to all handles (backends without a sharded
+    // path ignore it, by the Backend contract).
+    coord.set_sharding(Sharding::from_env());
     let handle = coord
         .stencil_for(fp, be)
         .unwrap_or_else(|e| panic!("seed {seed} backend {be}: {e:#}"));
@@ -361,6 +371,160 @@ fn library_stencils_opt_levels_bitwise_equal() {
             }
         }
     }
+}
+
+/// Run a compiled stencil on the vector backend with an explicit
+/// per-invocation sharding override (ignoring `REPRO_THREADS`).
+fn run_vector_with_sharding(
+    coord: &mut Coordinator,
+    fp: u64,
+    domain: [usize; 3],
+    seed: u64,
+    scalars: &[(&str, f64)],
+    sharding: Sharding,
+) -> Vec<(String, Storage)> {
+    coord.set_sharding(Sharding::Off);
+    let handle = coord
+        .stencil_for(fp, "vector")
+        .unwrap_or_else(|e| panic!("seed {seed}: {e:#}"));
+    let mut rng = Rng(seed ^ 0xabcdef);
+    let mut fields: Vec<(String, Storage)> = handle
+        .ir()
+        .fields
+        .iter()
+        .map(|f| {
+            let mut s = handle.alloc_field(&f.name, domain).unwrap();
+            let [ni, nj, nk] = domain;
+            let h = s.info.halo;
+            for i in -(h[0].0 as i64)..(ni + h[0].1) as i64 {
+                for j in -(h[1].0 as i64)..(nj + h[1].1) as i64 {
+                    for k in -(h[2].0 as i64)..(nk + h[2].1) as i64 {
+                        s.set(i, j, k, rng.f64());
+                    }
+                }
+            }
+            (f.name.clone(), s)
+        })
+        .collect();
+    let mut inv = handle
+        .bind()
+        .domain(domain)
+        .fields(&fields)
+        .scalars(scalars)
+        .sharding(sharding)
+        .finish()
+        .unwrap();
+    let mut refs: Vec<&mut Storage> = fields.iter_mut().map(|(_, s)| s).collect();
+    inv.run(&mut refs)
+        .unwrap_or_else(|e| panic!("seed {seed} sharding {sharding}: {e:#}"));
+    fields
+}
+
+#[test]
+fn sharding_sweep_is_bitwise_identical_at_every_opt_level() {
+    // The honesty core of the sharding feature: random PARALLEL programs
+    // and random ring-carry sequential sweeps (horizontal and vertical
+    // carry reads, FORWARD and BACKWARD) must be bitwise identical across
+    // Threads(1..=4) vs Off at opt levels 0–3. Domains use awkward odd
+    // widths so slab splits are uneven and narrower than the extents.
+    let scalars = [("s1", 0.4), ("s2", -0.7)];
+    let mut cases: Vec<(String, &str, [usize; 3], Vec<(&str, f64)>)> = Vec::new();
+    for seed in 0..6u64 {
+        cases.push((gen_stencil(seed), "prop", [11, 6, 4], scalars.to_vec()));
+    }
+    for seed in 0..6u64 {
+        let mut rng = Rng(seed.wrapping_mul(9173).wrapping_add(7));
+        let alpha = 0.2 + 0.6 * (rng.f64() + 0.5);
+        let beta = rng.f64();
+        let horizontal = seed % 2 == 0;
+        let (policy, first, rest, dk) = if seed % 3 == 0 {
+            ("BACKWARD", "interval(-1, None)", "interval(0, -1)", 1)
+        } else {
+            ("FORWARD", "interval(0, 1)", "interval(1, None)", -1)
+        };
+        let consumer = if horizontal {
+            format!("u = t[1,0,{dk}] + t[-1,0,{dk}]; x = u * 0.25;")
+        } else {
+            format!("x = t - t[0,0,{dk}] * {beta:.3};")
+        };
+        let consumer_first = if horizontal { "u = t; x = u;" } else { "x = t;" };
+        let src = format!(
+            "stencil rprop(a: Field<f64>, x: Field<f64>) {{\n\
+               with computation({policy}) {{\n\
+                 {first} {{ t = a * {beta:.3}; {consumer_first} }}\n\
+                 {rest} {{ t = a + t[0,0,{dk}] * {alpha:.3}; {consumer} }}\n\
+               }}\n\
+             }}"
+        );
+        cases.push((src, "rprop", [9, 5, 7], vec![]));
+    }
+    for (src, name, domain, scalars) in &cases {
+        for level in LEVELS {
+            let mut coord = Coordinator::with_opt_level(level);
+            let fp = coord
+                .compile_source(src, name, &Default::default())
+                .unwrap_or_else(|e| panic!("{name}: {e:#}\n{src}"));
+            let reference =
+                run_vector_with_sharding(&mut coord, fp, *domain, 3, scalars, Sharding::Off);
+            for threads in 1..=4usize {
+                let got = run_vector_with_sharding(
+                    &mut coord,
+                    fp,
+                    *domain,
+                    3,
+                    scalars,
+                    Sharding::Threads(threads),
+                );
+                assert_fields_match(
+                    &reference,
+                    &got,
+                    0.0,
+                    &format!("{name} O{level} Threads({threads})\n{src}\n"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sharding_reports_effective_thread_count() {
+    // `Auto` on a domain narrower than one profitable slab must degrade
+    // to serial — and `RunStats` must say so (never echo the plan).
+    let mut coord = Coordinator::with_opt_level(OptLevel::O3);
+    coord.set_sharding(Sharding::Auto);
+    let fp = coord.compile_library("hdiff").unwrap();
+    let handle = coord.stencil_for(fp, "vector").unwrap();
+    let tiny = [8, 8, 4];
+    let mut fields: Vec<(String, Storage)> = handle
+        .ir()
+        .fields
+        .iter()
+        .map(|f| (f.name.clone(), handle.alloc_field(&f.name, tiny).unwrap()))
+        .collect();
+    let mut inv = handle.bind().domain(tiny).fields(&fields).finish().unwrap();
+    let mut refs: Vec<&mut Storage> = fields.iter_mut().map(|(_, s)| s).collect();
+    let stats = inv.run(&mut refs).unwrap();
+    assert_eq!(stats.threads_used(), 1, "Auto must degrade to Off on tiny domains");
+    assert_eq!(stats.shard.slabs, 1);
+    // An explicit plan on a wide-enough domain reports what it used.
+    let domain = [24, 8, 4];
+    let mut fields: Vec<(String, Storage)> = handle
+        .ir()
+        .fields
+        .iter()
+        .map(|f| (f.name.clone(), handle.alloc_field(&f.name, domain).unwrap()))
+        .collect();
+    let mut inv = handle
+        .bind()
+        .domain(domain)
+        .fields(&fields)
+        .sharding(Sharding::Threads(3))
+        .finish()
+        .unwrap();
+    let mut refs: Vec<&mut Storage> = fields.iter_mut().map(|(_, s)| s).collect();
+    let stats = inv.run(&mut refs).unwrap();
+    assert_eq!(stats.threads_used(), 3);
+    assert_eq!(stats.shard.slabs, 3);
 }
 
 #[test]

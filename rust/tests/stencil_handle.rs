@@ -8,6 +8,7 @@
 use gt4rs::coordinator::{BoundInvocation, Coordinator, Stencil};
 use gt4rs::opt::OptLevel;
 use gt4rs::storage::Storage;
+use gt4rs::Sharding;
 
 const LEVELS: [OptLevel; 4] = [OptLevel::O0, OptLevel::O1, OptLevel::O2, OptLevel::O3];
 
@@ -129,6 +130,11 @@ fn concurrent_dispatch_bitwise_equals_serial() {
         for be in ["debug", "vector"] {
             for stencil_name in ["hdiff", "vadv"] {
                 let mut coord = Coordinator::with_opt_level(level);
+                // The CI thread-matrix reaches this suite here: any plan
+                // in REPRO_THREADS shards every call of both the serial
+                // and the concurrent legs (the comparison stays valid —
+                // sharding is bitwise-invisible by contract).
+                coord.set_sharding(Sharding::from_env());
                 let handle = coord.stencil_library(stencil_name, be).unwrap();
 
                 let serial: Vec<_> = (0..THREADS)
@@ -157,12 +163,66 @@ fn concurrent_dispatch_bitwise_equals_serial() {
     }
 }
 
+/// Outer concurrent handle dispatch composed with *inner* intra-call
+/// domain sharding: 4 threads hammer one cloned handle whose every call
+/// additionally fans out over 2 i-slabs (threads × slabs), on both the
+/// materializing (O2) and fused (O3) vector paths. Results must be
+/// bitwise identical to the serial, unsharded runs — the two parallel
+/// layers must compose without contention or cross-talk (each sharded
+/// call checks its own worker pool and buffer pools out of the shared
+/// backend).
+#[test]
+fn outer_dispatch_composes_with_inner_sharding() {
+    const THREADS: u64 = 4;
+    let domain = [14, 9, 5];
+    for level in [OptLevel::O2, OptLevel::O3] {
+        for stencil_name in ["hdiff", "vadv"] {
+            let mut coord = Coordinator::with_opt_level(level);
+            let handle = coord.stencil_library(stencil_name, "vector").unwrap();
+
+            // Serial reference: sharding off, one thread at a time.
+            let serial: Vec<_> = (0..THREADS)
+                .map(|t| run_workload(&handle, domain, t, 3))
+                .collect();
+
+            // Concurrent + sharded: every clone's calls split into 2
+            // slabs on the backend's checked-out worker pools.
+            let mut sharded_handle = handle.clone();
+            sharded_handle.set_sharding(Sharding::Threads(2));
+            let concurrent: Vec<_> = std::thread::scope(|s| {
+                let joins: Vec<_> = (0..THREADS)
+                    .map(|t| {
+                        let h = sharded_handle.clone();
+                        s.spawn(move || run_workload(&h, domain, t, 3))
+                    })
+                    .collect();
+                joins.into_iter().map(|j| j.join().unwrap()).collect()
+            });
+
+            for (t, (a, b)) in serial.iter().zip(&concurrent).enumerate() {
+                assert_bitwise_equal(
+                    a,
+                    b,
+                    &format!("{stencil_name} O{level} threads x slabs, thread {t}"),
+                );
+            }
+            // The inner layer really ran sharded.
+            let timing = coord.metrics.get(stencil_name, "vector").unwrap();
+            assert_eq!(
+                timing.max_threads, 2,
+                "{stencil_name} O{level}: inner sharding did not engage"
+            );
+        }
+    }
+}
+
 /// The ROADMAP's sharding prerequisite, demonstrated directly: one
 /// *shared* compiled artifact (same fingerprint, same backend instance)
 /// dispatching from many threads with distinct domains concurrently.
 #[test]
 fn concurrent_distinct_domains_on_one_handle() {
     let mut coord = Coordinator::with_opt_level(OptLevel::O3);
+    coord.set_sharding(Sharding::from_env());
     let handle = coord.stencil_library("hdiff", "vector").unwrap();
     let domains = [[6, 6, 3], [9, 7, 4], [12, 10, 6], [7, 11, 2]];
     let serial: Vec<_> = domains
