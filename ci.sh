@@ -75,6 +75,21 @@ if [[ "${1:-}" != "quick" ]]; then
         grep -q '"threads_used"' /tmp/gt4rs_scaling.json
         echo "scaling bench --json: python3 missing, structural grep passed"
     fi
+
+    # The A7 kernels bench (tiny mode) runs its own honesty gates —
+    # specialized bitwise-equal to interpreted, fast-math within
+    # tolerance — before timing anything; its JSON artifact must parse
+    # under the same contract.
+    step cargo bench --bench kernels -- --tiny --json /tmp/gt4rs_kernels.json
+    echo
+    echo "=== BENCH_kernels.json parse smoke ==="
+    if command -v python3 >/dev/null 2>&1; then
+        python3 -m json.tool /tmp/gt4rs_kernels.json >/dev/null
+        echo "kernels bench --json: parseable JSON"
+    else
+        grep -q '"speedup_vs_interpreted"' /tmp/gt4rs_kernels.json
+        echo "kernels bench --json: python3 missing, structural grep passed"
+    fi
 fi
 
 step cargo test -q

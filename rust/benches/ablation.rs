@@ -26,10 +26,11 @@
 #[path = "harness.rs"]
 mod harness;
 
+use gt4rs::backend::kernels::ExecTier;
 use gt4rs::backend::pjrt_aot::PjrtAotBackend;
 use gt4rs::backend::vector::VectorBackend;
 use gt4rs::backend::xlagen;
-use gt4rs::backend::{Backend, StencilArgs};
+use gt4rs::backend::{Backend, RunConfig, StencilArgs};
 use gt4rs::coordinator::{def_fingerprint, Coordinator};
 use gt4rs::opt::{OptConfig, OptLevel, PassManager};
 use gt4rs::runtime::Runtime;
@@ -49,20 +50,31 @@ struct Row {
     median_ns: u128,
     pool_taken: u64,
     pool_allocated: u64,
+    /// Per-call strip/block mix of the fused path's executors (zero for
+    /// the materializing configurations): interpreted strips, guarded
+    /// specialized strips, and blocked interior tiles — the columns that
+    /// show *why* the specialized tier wins.
+    strips_interpreted: u64,
+    strips_guarded: u64,
+    blocks_interior: u64,
 }
 
 impl Row {
     fn json(&self) -> String {
         format!(
             "{{\"bench\":\"{}\",\"stencil\":\"{}\",\"domain\":\"{}\",\"config\":\"{}\",\
-             \"median_ns\":{},\"pool_taken\":{},\"pool_allocated\":{}}}",
+             \"median_ns\":{},\"pool_taken\":{},\"pool_allocated\":{},\
+             \"strips_interpreted\":{},\"strips_guarded\":{},\"blocks_interior\":{}}}",
             self.bench,
             self.stencil,
             self.domain,
             self.config,
             self.median_ns,
             self.pool_taken,
-            self.pool_allocated
+            self.pool_allocated,
+            self.strips_interpreted,
+            self.strips_guarded,
+            self.blocks_interior
         )
     }
 }
@@ -204,6 +216,9 @@ fn a4_opt_pass_ablation(domains: &[[usize; 3]], iters: usize, rows: &mut Vec<Row
                     median_ns: sample.median.as_nanos(),
                     pool_taken: stats.taken / calls.max(1),
                     pool_allocated: stats.allocated / calls.max(1),
+                    strips_interpreted: stats.strips_interpreted / calls.max(1),
+                    strips_guarded: stats.strips_guarded / calls.max(1),
+                    blocks_interior: stats.blocks_interior / calls.max(1),
                 });
             }
         }
@@ -211,28 +226,35 @@ fn a4_opt_pass_ablation(domains: &[[usize; 3]], iters: usize, rows: &mut Vec<Row
     println!();
 }
 
-/// A5: the tentpole comparison — fused loop-nest evaluation vs the
-/// materializing vector path, wall time and region-buffer traffic per
-/// call. The fused path's buffer count is bounded by (demoted locals +
-/// tier strips), not by the expression-node count.
+/// A5: the tentpole comparison — the fused path's two executor tiers
+/// (interpreted tape walk vs compiled kernel plans) against the
+/// materializing vector path: wall time, region-buffer traffic, and the
+/// strip/block mix per call. The counters tell the *why*: the specialized
+/// tier turns almost all interpreted strips into blocked interior tiles
+/// (per-op dispatch amortized over a whole j-tile), leaving only guarded
+/// fringe strips behind.
 fn a5_fused_vs_materialized(domains: &[[usize; 3]], iters: usize, rows: &mut Vec<Row>) {
-    println!("# A5: fused loop nests vs materializing evaluation — vector backend");
+    println!("# A5: fused tape tiers vs materializing evaluation — vector backend");
     println!(
-        "{:<12} {:>8} {:>12} {:>12} {:>10} {:>14} {:>14}",
-        "domain", "stencil", "O2 median", "O3 median", "speedup", "O2 bufs/call", "O3 bufs/call"
+        "{:<12} {:>8} {:>16} {:>12} {:>8} {:>6} {:>8} {:>8} {:>8}",
+        "domain", "stencil", "config", "median", "vs O2", "bufs", "interp", "guarded", "blocks"
     );
+    let configs: [(&str, OptLevel, ExecTier); 3] = [
+        ("O2 materializing", OptLevel::O2, ExecTier::Interpreted),
+        ("O3 interpreted", OptLevel::O3, ExecTier::Interpreted),
+        ("O3 specialized", OptLevel::O3, ExecTier::Specialized),
+    ];
     for domain in domains {
         let domain = *domain;
         let dstr = format!("{}x{}x{}", domain[0], domain[1], domain[2]);
         for (name, scalars) in [("hdiff", vec![]), ("vadv", vec![("dtdz", 0.3)])] {
-            let mut medians = Vec::new();
-            let mut bufs = Vec::new();
-            for (cname, level) in [("O2 materializing", OptLevel::O2), ("O3 fused", OptLevel::O3)]
-            {
+            let mut base = None;
+            for (cname, level, tier) in &configs {
                 let mut ir = stdlib::compile(name).unwrap();
-                PassManager::new(&OptConfig::level(level)).run(&mut ir);
+                PassManager::new(&OptConfig::level(*level)).run(&mut ir);
                 let be = VectorBackend::new();
                 let mut fields = stencil_fields(&ir, domain);
+                let cfg = RunConfig { tier: *tier, ..RunConfig::default() };
                 let mut calls = 0u64;
                 let sample = bench(iters, || {
                     calls += 1;
@@ -240,35 +262,46 @@ fn a5_fused_vs_materialized(domains: &[[usize; 3]], iters: usize, rows: &mut Vec
                         .iter_mut()
                         .map(|(n, s)| (n.as_str(), s))
                         .collect();
-                    be.run(&ir, &mut StencilArgs {
-                        fields: &mut refs,
-                        scalars: &scalars,
-                        domain,
-                    })
+                    be.run_sharded(
+                        &ir,
+                        &mut StencilArgs { fields: &mut refs, scalars: &scalars, domain },
+                        &cfg,
+                    )
                     .unwrap();
                 });
                 let stats = be.take_pool_stats();
-                let per_call = stats.taken / calls.max(1);
-                medians.push(sample.median);
-                bufs.push(per_call);
+                let calls = calls.max(1);
+                let speedup = match base {
+                    None => {
+                        base = Some(sample.median);
+                        "1.00x".to_string()
+                    }
+                    Some(b) => format!(
+                        "{:.2}x",
+                        b.as_secs_f64() / sample.median.as_secs_f64().max(1e-12)
+                    ),
+                };
+                println!(
+                    "{dstr:<12} {name:>8} {cname:>16} {:>12} {speedup:>8} {:>6} {:>8} {:>8} {:>8}",
+                    fmt_duration(sample.median),
+                    stats.taken / calls,
+                    stats.strips_interpreted / calls,
+                    stats.strips_guarded / calls,
+                    stats.blocks_interior / calls
+                );
                 rows.push(Row {
                     bench: "A5",
                     stencil: name.to_string(),
                     domain: dstr.clone(),
                     config: cname.to_string(),
                     median_ns: sample.median.as_nanos(),
-                    pool_taken: per_call,
-                    pool_allocated: stats.allocated / calls.max(1),
+                    pool_taken: stats.taken / calls,
+                    pool_allocated: stats.allocated / calls,
+                    strips_interpreted: stats.strips_interpreted / calls,
+                    strips_guarded: stats.strips_guarded / calls,
+                    blocks_interior: stats.blocks_interior / calls,
                 });
             }
-            println!(
-                "{dstr:<12} {name:>8} {:>12} {:>12} {:>9.2}x {:>14} {:>14}",
-                fmt_duration(medians[0]),
-                fmt_duration(medians[1]),
-                medians[0].as_secs_f64() / medians[1].as_secs_f64().max(1e-12),
-                bufs[0],
-                bufs[1]
-            );
         }
     }
     println!();

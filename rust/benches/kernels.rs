@@ -1,0 +1,231 @@
+//! A7: executor-tier ablation for the O3 fused evaluator — the
+//! measurement behind the specialized kernel-plan tier. For hdiff and
+//! vadv at `--opt-level 3` this times three configurations per call:
+//!
+//! * `interpreted` — the per-strip CTape walk (`ExecTier::Interpreted`),
+//!   every op bounds-checked per lane row;
+//! * `specialized` — pre-lowered kernel plans (`ExecTier::Specialized`,
+//!   the default): dense slot tables, hoisted guards, monomorphized
+//!   slice kernels over a cache-blocked j-tiled interior;
+//! * `fast-math` — the specialized executor on the separately
+//!   fingerprinted fast-math artifact (FMA contraction). Reported as its
+//!   own column, never merged into the exact ones.
+//!
+//! Honesty gates run before any timing: `specialized` must be **bitwise**
+//! identical to `interpreted` on fresh inputs, and the fast-math column
+//! must agree within a relative tolerance (the property suite pins the
+//! stronger per-point bound). A timing table for an executor that changed
+//! the answer would be worthless.
+//!
+//!     cargo bench --bench kernels [-- --tiny] [-- --json PATH]
+//!
+//! `--tiny` shrinks the domain/iterations for CI smoke runs; `--json
+//! PATH` writes every measured row as a JSON array, the
+//! `BENCH_kernels.json` CI artifact published next to
+//! `BENCH_ablation.json` and `BENCH_scaling.json`.
+
+#[path = "harness.rs"]
+mod harness;
+
+use gt4rs::backend::kernels::ExecTier;
+use gt4rs::backend::vector::VectorBackend;
+use gt4rs::backend::{Backend, RunConfig, StencilArgs};
+use gt4rs::opt::{OptConfig, OptLevel, PassManager};
+use gt4rs::stdlib;
+use gt4rs::storage::Storage;
+use gt4rs::StencilIr;
+use harness::*;
+
+struct Row {
+    stencil: String,
+    domain: String,
+    config: &'static str,
+    fast_math: bool,
+    median_ns: u128,
+    speedup_vs_interpreted: f64,
+    /// Per-call executor counters (see `PoolStats`): which path did the
+    /// work — per-op-guarded interpreter strips, guarded fringe strips,
+    /// or guard-free blocked interiors.
+    strips_interpreted: u64,
+    strips_guarded: u64,
+    blocks_interior: u64,
+}
+
+impl Row {
+    fn json(&self) -> String {
+        format!(
+            "{{\"bench\":\"A7\",\"stencil\":\"{}\",\"domain\":\"{}\",\
+             \"config\":\"{}\",\"fast_math\":{},\"median_ns\":{},\
+             \"speedup_vs_interpreted\":{:.4},\"strips_interpreted\":{},\
+             \"strips_guarded\":{},\"blocks_interior\":{}}}",
+            self.stencil,
+            self.domain,
+            self.config,
+            self.fast_math,
+            self.median_ns,
+            self.speedup_vs_interpreted,
+            self.strips_interpreted,
+            self.strips_guarded,
+            self.blocks_interior
+        )
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let tiny = args.iter().any(|a| a == "--tiny");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|p| args.get(p + 1))
+        .cloned();
+
+    let (domain, iters): ([usize; 3], usize) =
+        if tiny { ([16, 16, 8], 3) } else { ([128, 128, 64], 9) };
+
+    let mut rows: Vec<Row> = Vec::new();
+    a7_tiers(domain, iters, &mut rows);
+
+    if let Some(path) = json_path {
+        let body: Vec<String> = rows.iter().map(Row::json).collect();
+        let doc = format!("[\n  {}\n]\n", body.join(",\n  "));
+        std::fs::write(&path, doc).expect("write kernels JSON artifact");
+        println!("# wrote {} rows to {path}", rows.len());
+    }
+}
+
+/// Compile a library stencil at O3, optionally as the fast-math artifact
+/// (a distinct fingerprint — the exact and relaxed IRs never share a
+/// cache entry).
+fn compiled(name: &str, fast_math: bool) -> StencilIr {
+    let mut ir = stdlib::compile(name).unwrap();
+    let config = OptConfig::level(OptLevel::O3).with_fast_math(fast_math);
+    PassManager::new(&config).run(&mut ir);
+    ir
+}
+
+/// Fresh deterministically-filled storages for `ir` over `domain`.
+fn fresh_fields(ir: &StencilIr, domain: [usize; 3]) -> Vec<(String, Storage)> {
+    ir.fields
+        .iter()
+        .enumerate()
+        .map(|(ix, f)| {
+            let e = f.extent;
+            let mut s = Storage::zeros(gt4rs::storage::StorageInfo::new(
+                domain,
+                [
+                    ((-e.i.0) as usize, e.i.1 as usize),
+                    ((-e.j.0) as usize, e.j.1 as usize),
+                    ((-e.k.0) as usize, e.k.1 as usize),
+                ],
+            ));
+            fill_storage(&mut s, 1.0 + ix as f64 * 0.5);
+            (f.name.clone(), s)
+        })
+        .collect()
+}
+
+/// Run once on fresh inputs under `tier`, returning every field's
+/// domain sum — the honesty fingerprint the other tiers must reproduce
+/// (bitwise for exact tiers, tolerance-bounded for fast-math).
+fn run_once_sums(
+    be: &VectorBackend,
+    ir: &StencilIr,
+    domain: [usize; 3],
+    scalars: &[(&str, f64)],
+    tier: ExecTier,
+) -> Vec<f64> {
+    let mut fields = fresh_fields(ir, domain);
+    {
+        let mut refs: Vec<(&str, &mut Storage)> =
+            fields.iter_mut().map(|(n, s)| (n.as_str(), s)).collect();
+        be.run_sharded(
+            ir,
+            &mut StencilArgs { fields: &mut refs, scalars, domain },
+            &RunConfig { tier, ..RunConfig::default() },
+        )
+        .unwrap();
+    }
+    fields.iter().map(|(_, s)| s.domain_sum()).collect()
+}
+
+fn a7_tiers(domain: [usize; 3], iters: usize, rows: &mut Vec<Row>) {
+    let dstr = format!("{}x{}x{}", domain[0], domain[1], domain[2]);
+    println!("# A7: O3 executor tiers — interpreted tape walk vs specialized kernel plans");
+    println!(
+        "{:<12} {:>8} {:>12} {:>12} {:>10} {:>8} {:>8} {:>8}",
+        "domain", "stencil", "config", "median", "vs interp", "interp", "guarded", "blocks"
+    );
+    for (name, scalars) in [("hdiff", vec![]), ("vadv", vec![("dtdz", 0.3)])] {
+        let exact = compiled(name, false);
+        let relaxed = compiled(name, true);
+        let be = VectorBackend::new();
+        // Honesty gates on fresh inputs before a single timed iteration.
+        let interp = run_once_sums(&be, &exact, domain, &scalars, ExecTier::Interpreted);
+        let spec = run_once_sums(&be, &exact, domain, &scalars, ExecTier::Specialized);
+        for (a, b) in interp.iter().zip(&spec) {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{name}: specialized result diverged from interpreted"
+            );
+        }
+        let fm = run_once_sums(&be, &relaxed, domain, &scalars, ExecTier::Specialized);
+        for (a, b) in interp.iter().zip(&fm) {
+            assert!(
+                (a - b).abs() <= 1e-9 * (1.0 + a.abs()),
+                "{name}: fast-math sum out of tolerance (exact {a}, fast-math {b})"
+            );
+        }
+        let _ = be.take_pool_stats();
+        // interpreted is measured first so every later row's speedup is
+        // computed against a real baseline (never fabricated).
+        let configs: [(&'static str, &StencilIr, ExecTier, bool); 3] = [
+            ("interpreted", &exact, ExecTier::Interpreted, false),
+            ("specialized", &exact, ExecTier::Specialized, false),
+            ("fast-math", &relaxed, ExecTier::Specialized, true),
+        ];
+        let mut interp_median: Option<f64> = None;
+        for (label, ir, tier, fast_math) in configs {
+            let mut fields = fresh_fields(ir, domain);
+            let mut calls = 0u64;
+            let sample = bench(iters, || {
+                calls += 1;
+                let mut refs: Vec<(&str, &mut Storage)> =
+                    fields.iter_mut().map(|(n, s)| (n.as_str(), s)).collect();
+                be.run_sharded(
+                    ir,
+                    &mut StencilArgs { fields: &mut refs, scalars: &scalars, domain },
+                    &RunConfig { tier, ..RunConfig::default() },
+                )
+                .unwrap();
+            });
+            let stats = be.take_pool_stats();
+            let calls = calls.max(1);
+            if label == "interpreted" {
+                interp_median = Some(sample.median.as_secs_f64());
+            }
+            let speedup = interp_median.expect("interpreted measured first")
+                / sample.median.as_secs_f64().max(1e-12);
+            println!(
+                "{dstr:<12} {name:>8} {label:>12} {:>12} {speedup:>9.2}x {:>8} {:>8} {:>8}",
+                fmt_duration(sample.median),
+                stats.strips_interpreted / calls,
+                stats.strips_guarded / calls,
+                stats.blocks_interior / calls,
+            );
+            rows.push(Row {
+                stencil: name.to_string(),
+                domain: dstr.clone(),
+                config: label,
+                fast_math,
+                median_ns: sample.median.as_nanos(),
+                speedup_vs_interpreted: speedup,
+                strips_interpreted: stats.strips_interpreted / calls,
+                strips_guarded: stats.strips_guarded / calls,
+                blocks_interior: stats.blocks_interior / calls,
+            });
+        }
+    }
+    println!();
+}

@@ -130,7 +130,7 @@ fn run_once_sums(
         be.run_sharded(
             ir,
             &mut StencilArgs { fields: &mut refs, scalars, domain },
-            &RunConfig { sharding },
+            &RunConfig { sharding, ..RunConfig::default() },
         )
         .unwrap()
     };
@@ -193,7 +193,7 @@ fn a6_scaling(domain: [usize; 3], iters: usize, tiny: bool, rows: &mut Vec<Row>)
                                 scalars: &scalars,
                                 domain,
                             },
-                            &RunConfig { sharding: *plan },
+                            &RunConfig { sharding: *plan, ..RunConfig::default() },
                         )
                         .unwrap();
                     used = used.max(report.threads);

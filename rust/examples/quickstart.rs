@@ -12,7 +12,7 @@
 use anyhow::Result;
 use gt4rs::coordinator::Coordinator;
 use gt4rs::storage::Storage;
-use gt4rs::Sharding;
+use gt4rs::{ExecTier, OptLevel, Sharding};
 
 const SRC: &str = "
     # A smoothing stencil: out = (1-w)*phi + w/4 * neighbor-average
@@ -151,7 +151,39 @@ fn main() -> Result<()> {
         "sharded run must be bitwise identical to serial"
     );
 
-    // 8. The XLA JIT backend, when a PJRT runtime is present.
+    // 8. Executor tiers: at `--opt-level 3` the fused evaluator lowers
+    //    each fusion group's tape into a specialized kernel plan (dense
+    //    slot tables, hoisted bounds guards, cache-blocked interior) —
+    //    the default executor. `ExecTier::Interpreted` walks the same
+    //    tape op by op. Both are bitwise identical by contract, so the
+    //    tier is a per-invocation scheduling knob exactly like sharding.
+    //    (Opt-in fast-math relaxation is deliberately *not* a scheduling
+    //    knob: it salts the fingerprint and is only tolerance-equal —
+    //    see `repro run --fast-math`.)
+    coord.set_opt_level(OptLevel::O3);
+    let fused = coord.stencil(SRC, "smooth", "vector", &Default::default())?;
+    let mut fphi = fused.alloc_field("phi", domain)?;
+    let mut fout = fused.alloc_field("out", domain)?;
+    fill(&mut fphi);
+    for tier in [ExecTier::Specialized, ExecTier::Interpreted] {
+        let mut inv = fused
+            .bind()
+            .field("phi", &fphi)
+            .field("out", &fout)
+            .scalar("w", 0.5)
+            .domain(domain)
+            .exec_tier(tier)
+            .finish()?;
+        let stats = inv.run(&mut [&mut fphi, &mut fout])?;
+        println!("O3 {tier} run: execute {:?}", stats.execute);
+        assert_eq!(
+            fout.domain_sum().to_bits(),
+            sum_vector.to_bits(),
+            "executor tiers must agree bitwise (and match every opt level)"
+        );
+    }
+
+    // 9. The XLA JIT backend, when a PJRT runtime is present.
     match coord.stencil(SRC, "smooth", "xla", &Default::default()) {
         Ok(xla) => {
             let mut xphi = xla.alloc_field("phi", domain)?;

@@ -157,6 +157,7 @@ pub fn analyze(
         externals: sym.externals.clone(),
         fingerprint: 0,
         fused: false,
+        fast_math: false,
     };
     ir.fingerprint = fingerprint_ir(&ir);
     Ok(ir)

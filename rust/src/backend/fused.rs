@@ -37,12 +37,24 @@
 //! level-outermost as their semantics demand, evaluating the tape over
 //! `j`-strips per (`i`, level).
 //!
+//! ## Execution tiers
+//!
+//! Each compiled tier carries, besides its interpretable tape, a lowered
+//! [`TierPlan`] of monomorphized kernels (see [`crate::backend::kernels`]).
+//! [`ExecTier`] selects the executor at run time: `Interpreted` walks the
+//! tape through [`eval_strip`], `Specialized` (the default) runs the plan
+//! with pre-resolved accesses, hoisted guards and cache-blocked interior
+//! spans. Both are bitwise-identical by contract; the opt-in `fast-math`
+//! relaxation is a *compile*-time property of the plan (it salts the
+//! fingerprint) and only ever engages in the specialized executor.
+//!
 //! Bitwise equivalence to the `debug` reference interpreter at every opt
 //! level is enforced by `tests/property_equivalence.rs`.
 
 use super::cexpr::{
     apply_bin, apply_builtin1, apply_builtin2, CTape, TapeBuilder, TapeCtx, TapeInst, TapeOp,
 };
+use super::kernels::{self, ExecTier, TierPlan};
 use super::program::{CStage, Env, Program};
 use super::shard::SyncCell;
 use super::vector::{prune_rings, Pool, Region, Rings, ShardExec};
@@ -51,9 +63,10 @@ use crate::ir::implir::{Extent, StorageClass};
 use std::collections::{HashMap, HashSet};
 use std::sync::Barrier;
 
-/// Group-scoped scratch buffers for plane/register locals:
-/// slot → (region, values).
-type Scratch = HashMap<usize, (Region, Vec<f64>)>;
+/// Group-scoped scratch buffers for plane/register locals, dense by slot:
+/// `scratch[slot] = Some((region, values))` for the group's scratch-backed
+/// locals, `None` elsewhere — no hashing on the strip path.
+pub(crate) type Scratch = Vec<Option<(Region, Vec<f64>)>>;
 
 /// A fused group: consecutive stages of one multistage sharing a fusion
 /// group id (and therefore a vertical interval).
@@ -72,6 +85,9 @@ pub struct Tier {
     /// Loop bounds: union of the member stages' compute extents.
     pub extent: Extent,
     pub tape: CTape,
+    /// The specialized executor's lowering of `tape` (monomorphized
+    /// kernels + reorder-safety verdict), built once at program compile.
+    pub(crate) plan: TierPlan,
 }
 
 #[derive(Debug, Clone)]
@@ -88,24 +104,25 @@ pub struct FusedMultistage {
 #[derive(Debug, Clone)]
 pub struct FusedProgram {
     pub multistages: Vec<FusedMultistage>,
-    /// Allocation extent per demoted slot (slot analysis extent unioned
-    /// with every writer's compute extent) — sizes scratch buffers and
-    /// ring planes.
-    alloc: HashMap<usize, Extent>,
+    /// Allocation extent per slot, dense by slot index (for demoted slots:
+    /// the analysis extent unioned with every writer's compute extent) —
+    /// sizes scratch buffers and ring planes with no hashing at run time.
+    alloc: Vec<Extent>,
 }
 
 impl FusedProgram {
-    pub fn compile(program: &Program) -> FusedProgram {
+    /// Compile the fused form. `fast_math` must match the IR's
+    /// (fingerprint-salted) flag: it selects whether tier plans contract
+    /// FMAs, and the caller caches fused programs by IR fingerprint.
+    pub fn compile(program: &Program, fast_math: bool) -> FusedProgram {
         let classes: Vec<StorageClass> =
             program.slots.iter().map(|s| s.storage).collect();
-        let mut alloc: HashMap<usize, Extent> = HashMap::new();
+        let mut alloc: Vec<Extent> =
+            program.slots.iter().map(|s| s.extent).collect();
         for ms in &program.multistages {
             for st in &ms.stages {
                 if classes[st.target] != StorageClass::Field3D {
-                    let e = alloc
-                        .entry(st.target)
-                        .or_insert(program.slots[st.target].extent);
-                    *e = e.union(st.extent);
+                    alloc[st.target] = alloc[st.target].union(st.extent);
                 }
             }
         }
@@ -119,7 +136,12 @@ impl FusedProgram {
                 while end < ms.stages.len() && ms.stages[end].fusion_group == gid {
                     end += 1;
                 }
-                groups.push(compile_group(&ms.stages[start..end], &classes, &alloc));
+                groups.push(compile_group(
+                    &ms.stages[start..end],
+                    &classes,
+                    &alloc,
+                    fast_math,
+                ));
                 start = end;
             }
             let shardable = ms_shardable_fused(&groups, ms.policy);
@@ -137,12 +159,98 @@ impl FusedProgram {
             .map(|g| g.tiers.len())
             .sum()
     }
+
+    /// Render the compiled tapes and their kernel plans (`repro ir
+    /// --tapes`): per tier the extent, reorder verdict and guard-free
+    /// interior rectangle for the full-domain slab, then every op with
+    /// its kernel class, region and resolved loop bounds.
+    pub fn dump_tapes(&self, program: &Program, domain: [usize; 3]) -> String {
+        use std::fmt::Write as _;
+        let slot_name = |slot: usize| program.slots[slot].name.as_str();
+        let ni = domain[0] as i64;
+        let mut out = String::new();
+        for (mi, ms) in self.multistages.iter().enumerate() {
+            let _ = writeln!(
+                out,
+                "multistage {mi}: {:?} shardable={}",
+                ms.policy, ms.shardable
+            );
+            for (gi, g) in ms.groups.iter().enumerate() {
+                let scratch: Vec<&str> =
+                    g.scratch.iter().map(|(s, _)| slot_name(*s)).collect();
+                let _ = writeln!(
+                    out,
+                    "  group {gi}: tiers={} scratch=[{}]",
+                    g.tiers.len(),
+                    scratch.join(", ")
+                );
+                let gbounds = resolve_bounds(g, domain, (0, ni));
+                for (ti, (t, bounds)) in g.tiers.iter().zip(&gbounds).enumerate() {
+                    let (mut ii0, mut ii1) = (i64::MIN, i64::MAX);
+                    let (mut ij0, mut ij1) = (i64::MIN, i64::MAX);
+                    for b in bounds {
+                        ii0 = ii0.max(b[0]);
+                        ii1 = ii1.min(b[1]);
+                        ij0 = ij0.max(b[2]);
+                        ij1 = ij1.min(b[3]);
+                    }
+                    let _ = writeln!(
+                        out,
+                        "    tier {ti}: extent {} {} interior i[{ii0},{ii1}) j[{ij0},{ij1})",
+                        t.extent,
+                        if t.plan.reorderable {
+                            "reorderable"
+                        } else {
+                            "strip-ordered"
+                        },
+                    );
+                    for (x, (inst, b)) in t.tape.ops.iter().zip(bounds).enumerate() {
+                        let _ = writeln!(
+                            out,
+                            "      %{x:<3} {:<11} {:<24} region {} bounds i[{},{}) j[{},{})",
+                            t.plan.kernels[x].name(),
+                            fmt_tape_op(&inst.op, program),
+                            inst.region,
+                            b[0],
+                            b[1],
+                            b[2],
+                            b[3],
+                        );
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Compact one-line rendering of a tape op for `dump_tapes`.
+fn fmt_tape_op(op: &TapeOp, program: &Program) -> String {
+    let name = |slot: &usize| program.slots[*slot].name.clone();
+    let off = |o: &Offset| format!("[{},{},{}]", o[0], o[1], o[2]);
+    match op {
+        TapeOp::Const(c) => format!("const {c}"),
+        TapeOp::Scalar(ix) => format!("scalar {}", program.scalar_names[*ix]),
+        TapeOp::Load { slot, off: o } => format!("load {}{}", name(slot), off(o)),
+        TapeOp::LoadLocal { slot, off: o } => {
+            format!("load.local {}{}", name(slot), off(o))
+        }
+        TapeOp::Neg(a) => format!("neg %{a}"),
+        TapeOp::Not(a) => format!("not %{a}"),
+        TapeOp::Bin(op, a, b) => format!("{op:?} %{a} %{b}").to_lowercase(),
+        TapeOp::Select(c, t, f) => format!("select %{c} %{t} %{f}"),
+        TapeOp::Call1(f, a) => format!("{f:?} %{a}").to_lowercase(),
+        TapeOp::Call2(f, a, b) => format!("{f:?} %{a} %{b}").to_lowercase(),
+        TapeOp::StoreField { slot, v } => format!("store {} %{v}", name(slot)),
+        TapeOp::StoreLocal { slot, v } => format!("store.local {} %{v}", name(slot)),
+    }
 }
 
 fn compile_group(
     stages: &[CStage],
     classes: &[StorageClass],
-    alloc: &HashMap<usize, Extent>,
+    alloc: &[Extent],
+    fast_math: bool,
 ) -> FusedGroup {
     let reads: Vec<Vec<(usize, Offset)>> = stages
         .iter()
@@ -237,14 +345,16 @@ fn compile_group(
                 written.insert(st.target);
             }
         }
-        tiers.push(Tier { extent: text.unwrap_or_else(Extent::zero), tape: b.finish() });
+        let tape = b.finish();
+        let plan = TierPlan::lower(&tape, classes, fast_math);
+        tiers.push(Tier { extent: text.unwrap_or_else(Extent::zero), tape, plan });
     }
 
     let scratch: Vec<(usize, Extent)> = scratch_flags
         .iter()
         .enumerate()
         .filter(|(_, &need)| need)
-        .map(|(slot, _)| (slot, alloc[&slot]))
+        .map(|(slot, _)| (slot, alloc[slot]))
         .collect();
 
     FusedGroup { interval: stages[0].interval, scratch, tiers }
@@ -313,6 +423,7 @@ pub(crate) fn run_program(
     program: &Program,
     env: &mut Env,
     pool: &mut Pool,
+    exec: ExecTier,
 ) {
     let classes: Vec<StorageClass> = program.slots.iter().map(|s| s.storage).collect();
     let depths: Vec<i32> = program.slots.iter().map(|s| s.ring_depth).collect();
@@ -320,7 +431,7 @@ pub(crate) fn run_program(
     // One strip buffer for the whole run, grown to the largest tier.
     let mut vals: Vec<f64> = Vec::new();
     for ms in &fp.multistages {
-        run_multistage(ms, fp, &classes, &depths, env, pool, &mut vals, (0, ni));
+        run_multistage(ms, fp, &classes, &depths, env, pool, &mut vals, (0, ni), exec);
     }
 }
 
@@ -339,6 +450,7 @@ fn run_multistage(
     pool: &mut Pool,
     vals: &mut Vec<f64>,
     slab: (i64, i64),
+    exec: ExecTier,
 ) {
     // Per-op loop bounds depend only on (tier, domain, slab): resolve
     // them once per multistage, not once per sweep level.
@@ -352,7 +464,7 @@ fn run_multistage(
                 if k0 < k1 {
                     run_group(
                         env, g, gb, classes, &fp.alloc, k0, k1, 2, &mut rings, pool,
-                        vals, slab, None,
+                        vals, slab, None, exec,
                     );
                 }
             }
@@ -373,7 +485,7 @@ fn run_multistage(
                     if k >= *gk0 && k < *gk1 {
                         run_group(
                             env, g, gb, classes, &fp.alloc, k, k + 1, 1, &mut rings,
-                            pool, vals, slab, None,
+                            pool, vals, slab, None, exec,
                         );
                     }
                 }
@@ -395,6 +507,7 @@ pub(crate) fn run_program_sharded(
     program: &Program,
     env: &mut Env,
     exec: &ShardExec,
+    tier: ExecTier,
 ) {
     let classes: Vec<StorageClass> = program.slots.iter().map(|s| s.storage).collect();
     let depths: Vec<i32> = program.slots.iter().map(|s| s.ring_depth).collect();
@@ -406,7 +519,7 @@ pub(crate) fn run_program_sharded(
             let mut pool = exec.serial_pool();
             let mut vals: Vec<f64> = Vec::new();
             run_multistage(
-                ms, fp, &classes, &depths, env, &mut pool, &mut vals, (0, ni),
+                ms, fp, &classes, &depths, env, &mut pool, &mut vals, (0, ni), tier,
             );
             continue;
         }
@@ -427,6 +540,7 @@ pub(crate) fn run_program_sharded(
                             run_group(
                                 env, g, &gb, &classes, &fp.alloc, k0, k1, 2,
                                 &mut rings, pool, &mut vals, slab, Some(&barrier),
+                                tier,
                             );
                         }
                     });
@@ -437,7 +551,7 @@ pub(crate) fn run_program_sharded(
                     let mut vals: Vec<f64> = Vec::new();
                     run_multistage(
                         ms, fp, &classes, &depths, env, pool, &mut vals,
-                        exec.slabs[s],
+                        exec.slabs[s], tier,
                     );
                 });
             }
@@ -498,7 +612,7 @@ fn run_group(
     g: &FusedGroup,
     gbounds: &[Vec<[i64; 4]>],
     classes: &[StorageClass],
-    alloc: &HashMap<usize, Extent>,
+    alloc: &[Extent],
     k0: i64,
     k1: i64,
     axis: usize,
@@ -507,12 +621,13 @@ fn run_group(
     vals: &mut Vec<f64>,
     slab: (i64, i64),
     barrier: Option<&Barrier>,
+    exec: ExecTier,
 ) {
     let nj = env.domain[1] as i64;
     let (a, b) = slab;
     // Group-scoped scratch, zero-initialized (reads before the first write
     // see zeros, like the zero-initialized field a demoted temp replaces).
-    let mut scratch = Scratch::new();
+    let mut scratch: Scratch = vec![None; classes.len()];
     for (slot, e) in &g.scratch {
         let r = Region {
             i0: a + e.i.0 as i64,
@@ -523,7 +638,7 @@ fn run_group(
             k1,
         };
         let buf = pool.take(r.len());
-        scratch.insert(*slot, (r, buf));
+        scratch[*slot] = Some((r, buf));
     }
     for (tix, (t, bounds)) in g.tiers.iter().zip(gbounds).enumerate() {
         if tix > 0 {
@@ -548,15 +663,63 @@ fn run_group(
             vals.resize(need, 0.0);
         }
         if axis == 2 {
-            for i in ti0..ti1 {
-                for j in tj0..tj1 {
-                    eval_strip(
-                        env, &t.tape.ops, bounds, vals, wl, i, j, k0, 2, classes,
-                        alloc, &mut scratch, rings, pool, slab,
-                    );
+            if exec == ExecTier::Specialized {
+                kernels::run_tier_axis2(
+                    env,
+                    &t.plan,
+                    bounds,
+                    (ti0, ti1, tj0, tj1),
+                    wl,
+                    k0,
+                    alloc,
+                    &mut scratch,
+                    rings,
+                    pool,
+                    vals,
+                    slab,
+                );
+            } else {
+                pool.stats.tiers_interpreted += 1;
+                pool.stats.strips_interpreted += ((ti1 - ti0) * (tj1 - tj0)) as u64;
+                for i in ti0..ti1 {
+                    for j in tj0..tj1 {
+                        eval_strip(
+                            env, &t.tape.ops, bounds, vals, wl, i, j, k0, 2, classes,
+                            alloc, &mut scratch, rings, pool, slab,
+                        );
+                    }
                 }
             }
+        } else if exec == ExecTier::Specialized {
+            // Sequential sweeps: specialized guarded j-strips per (i,
+            // level) — pre-resolved accesses and monomorphized dispatch,
+            // no lane splitting (a level is one pass, tiling buys nothing).
+            let resolved =
+                kernels::resolve_accesses(env, &t.plan.kernels, &scratch, k0, 1);
+            pool.stats.tiers_specialized += 1;
+            pool.stats.strips_guarded += (ti1 - ti0) as u64;
+            for i in ti0..ti1 {
+                kernels::eval_strip_spec(
+                    env,
+                    &t.plan.kernels,
+                    &resolved,
+                    bounds,
+                    vals,
+                    wl,
+                    i,
+                    tj0,
+                    k0,
+                    1,
+                    alloc,
+                    &mut scratch,
+                    rings,
+                    pool,
+                    slab,
+                );
+            }
         } else {
+            pool.stats.tiers_interpreted += 1;
+            pool.stats.strips_interpreted += (ti1 - ti0) as u64;
             for i in ti0..ti1 {
                 eval_strip(
                     env, &t.tape.ops, bounds, vals, wl, i, tj0, k0, 1, classes,
@@ -565,15 +728,23 @@ fn run_group(
             }
         }
     }
-    for (_, (_, b)) in scratch.drain() {
-        pool.put(b);
+    for entry in scratch.iter_mut() {
+        if let Some((_, b)) = entry.take() {
+            pool.put(b);
+        }
     }
 }
 
 /// Copy `dst.len()` lanes out of `src`, starting at flat index
 /// `base + lane0 * stride`.
 #[inline]
-fn copy_lanes_in(src: &[f64], base: i64, stride: i64, dst: &mut [f64], lane0: usize) {
+pub(crate) fn copy_lanes_in(
+    src: &[f64],
+    base: i64,
+    stride: i64,
+    dst: &mut [f64],
+    lane0: usize,
+) {
     if stride == 1 {
         let a0 = (base + lane0 as i64) as usize;
         dst.copy_from_slice(&src[a0..a0 + dst.len()]);
@@ -589,7 +760,13 @@ fn copy_lanes_in(src: &[f64], base: i64, stride: i64, dst: &mut [f64], lane0: us
 /// Copy `src.len()` lanes into `dst`, starting at flat index
 /// `base + lane0 * stride`.
 #[inline]
-fn copy_lanes_out(src: &[f64], dst: &mut [f64], base: i64, stride: i64, lane0: usize) {
+pub(crate) fn copy_lanes_out(
+    src: &[f64],
+    dst: &mut [f64],
+    base: i64,
+    stride: i64,
+    lane0: usize,
+) {
     if stride == 1 {
         let a0 = (base + lane0 as i64) as usize;
         dst[a0..a0 + src.len()].copy_from_slice(src);
@@ -619,7 +796,7 @@ fn eval_strip(
     k0: i64,
     axis: usize,
     classes: &[StorageClass],
-    alloc: &HashMap<usize, Extent>,
+    alloc: &[Extent],
     scratch: &mut Scratch,
     rings: &mut Rings,
     pool: &mut Pool,
@@ -670,7 +847,7 @@ fn eval_strip(
                 let entry = if classes[*slot] == StorageClass::Ring {
                     rings.get(&(*slot, k0 + off[2] as i64))
                 } else {
-                    scratch.get(slot)
+                    scratch[*slot].as_ref()
                 };
                 match entry {
                     // Never written (this group / that level): zeros.
@@ -778,7 +955,7 @@ fn eval_strip(
                 {
                     // First write to this level's plane: allocate it zeroed
                     // over the slot's allocation extent (slab-local in i).
-                    let e = alloc[slot];
+                    let e = alloc[*slot];
                     let dnj = env.domain[1] as i64;
                     let r = Region {
                         i0: slab.0 + e.i.0 as i64,
@@ -795,7 +972,8 @@ fn eval_strip(
                     let ent = rings.get_mut(&(*slot, k0)).expect("ring plane just inserted");
                     (ent.0, &mut ent.1)
                 } else {
-                    let ent = scratch.get_mut(slot).expect("scratch local without buffer");
+                    let ent =
+                        scratch[*slot].as_mut().expect("scratch local without buffer");
                     (ent.0, &mut ent.1)
                 };
                 let sdj = sr.j1 - sr.j0;
@@ -832,8 +1010,22 @@ mod tests {
         .unwrap();
         assert!(ir.fused);
         let p = Program::compile(&ir).unwrap();
-        let fp = FusedProgram::compile(&p);
+        let fp = FusedProgram::compile(&p, false);
         (p, fp)
+    }
+
+    #[test]
+    fn dump_tapes_renders_plans_and_bounds() {
+        let (p, fp) = fused_program(crate::stdlib::HDIFF_SRC, "hdiff");
+        let dump = fp.dump_tapes(&p, [16, 16, 8]);
+        assert!(dump.contains("multistage 0"));
+        assert!(dump.contains("shardable=true"));
+        assert!(dump.contains("reorderable"));
+        // Kernel classes, op rendering and resolved bounds all surface.
+        assert!(dump.contains("store-plane"));
+        assert!(dump.contains("load.local"));
+        assert!(dump.contains("bounds i["));
+        assert!(dump.contains("interior i["));
     }
 
     #[test]

@@ -1,0 +1,1115 @@
+//! The specialized kernel-plan executor for the fused tape evaluator —
+//! "compile the tapes for real" (paper §2.3: the generated loops, not the
+//! interpreter, are where stencil DSLs earn back C++ performance).
+//!
+//! The interpreted fused path (`crate::backend::fused::eval_strip`) walks
+//! CTape SSA one op at a time per element strip, paying a dispatch, a
+//! bounds test and (for demoted locals) a map lookup per op per strip. At
+//! program-compile time this module lowers each tier's tape into a
+//! [`TierPlan`]:
+//!
+//! * **monomorphized kernels** — every [`crate::backend::cexpr::TapeOp`]
+//!   becomes a [`Kernel`] with the hot opcodes (`Add`/`Sub`/`Mul`/`Div`,
+//!   field loads/stores, plane-scratch accesses) split into their own
+//!   variants whose lane loops are flat `&[f64]`-slice walks the
+//!   autovectorizer provably vectorizes;
+//! * **dense access tables** — per tier *invocation* every memory kernel's
+//!   strides and offsets are resolved once into a [`Resolved`] base/stride
+//!   record, so the inner loops never touch a `HashMap` (ring k-cache
+//!   planes are the one exception: they are allocated lazily per level and
+//!   keep the interpreted lookup);
+//! * **interior spans** — the per-op `[i0,i1)×[j0,j1)` guards of the
+//!   interpreted path are hoisted out of the loop nest: the rectangle where
+//!   *every* op's bounds hold runs guard-free, fringe rows/columns run
+//!   guarded prologue/epilogue strips (which use the same specialized
+//!   kernels, so results never depend on the interior/fringe split);
+//! * **cache-blocked tiling** — reorder-safe tiers execute their interior
+//!   as j-tiles inside the i-slab (`jt` outer, `i` inner), amortizing
+//!   per-op dispatch over `tile × wl` contiguous lanes and keeping the
+//!   tile working set L2-resident. Tile bounds derive from the slab
+//!   bounds, so tiling composes with `backend::shard` without touching the
+//!   shardability analysis.
+//!
+//! **Bitwise contract.** Without fast-math the specialized executor is
+//! bitwise-identical to the interpreted tape walker: guarded strips mirror
+//! `eval_strip` op for op, and blocked interiors only run in tiers whose
+//! ops are elementwise-independent across strips ([`TierPlan::reorderable`]
+//! — no op reads memory another op of the same tier writes at a horizontal
+//! offset), so traversal order cannot change any element's dataflow. This
+//! is enforced by the property suite and by the benches' honesty gates.
+//!
+//! **Fast-math.** With [`crate::opt::OptConfig::fast_math`] the lowering
+//! additionally contracts single-use `Mul` feeding `Add`/`Sub` into
+//! [`Kernel::MulAdd`]/[`Kernel::MulSub`], executed as hardware FMA where
+//! the CPU has it (runtime-detected) and as `a * b ± c` otherwise. One
+//! contraction changes a result by at most 1 ulp of the exact double
+//! rounding; errors compound through the tape depth, so results are
+//! validated against relative-error norms (`tests/property_equivalence.rs`
+//! pins the bound), never bitwise — and the bench reports fast-math as a
+//! separate column, never silently substituted for the exact tier.
+
+use super::cexpr::{apply_bin, apply_builtin1, apply_builtin2, CTape, TapeOp};
+use super::fused::{copy_lanes_in, copy_lanes_out, Scratch};
+use super::program::Env;
+use super::vector::{Pool, Region, Rings};
+use crate::dsl::ast::{BinOp, Builtin, Offset};
+use crate::ir::implir::{Extent, StorageClass};
+
+/// Which executor the vector backend's fused (`--opt-level 3`) path uses.
+/// A pure scheduling parameter, like [`crate::backend::shard::Sharding`]:
+/// both tiers are bitwise-identical by contract and share one compiled
+/// artifact (fast-math relaxation is a separate, fingerprint-salting
+/// toggle).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecTier {
+    /// Walk the CTape SSA op by op per strip (`fused::eval_strip`) — the
+    /// reference the specialized executor is validated against.
+    Interpreted,
+    /// Execute the pre-lowered [`TierPlan`]: dense access tables,
+    /// monomorphized kernels, hoisted guards, cache-blocked interiors.
+    #[default]
+    Specialized,
+}
+
+impl ExecTier {
+    pub fn parse(s: &str) -> Option<ExecTier> {
+        match s.trim() {
+            "interpreted" | "interp" => Some(ExecTier::Interpreted),
+            "specialized" | "spec" => Some(ExecTier::Specialized),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for ExecTier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExecTier::Interpreted => write!(f, "interpreted"),
+            ExecTier::Specialized => write!(f, "specialized"),
+        }
+    }
+}
+
+/// One monomorphized tape op. Mirrors [`TapeOp`] index for index (so the
+/// shared `bounds`/`vals` tables keep working), with the hot opcodes given
+/// their own variants and demoted-local accesses split by storage class at
+/// lowering time (no class test in the hot loop).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub(crate) enum Kernel {
+    Const(f64),
+    Scalar(usize),
+    /// Field3D load at a relative offset.
+    Load { slot: usize, off: Offset },
+    /// Plane/register group-scratch load.
+    LoadPlane { slot: usize, off: Offset },
+    /// Ring k-cache load (lazy per-level planes: stays a map lookup).
+    LoadRing { slot: usize, off: Offset },
+    Neg(u32),
+    Not(u32),
+    Add(u32, u32),
+    Sub(u32, u32),
+    Mul(u32, u32),
+    Div(u32, u32),
+    /// Fast-math only: `a * b + c` as one fused multiply-add.
+    MulAdd(u32, u32, u32),
+    /// Fast-math only: `a * b - c` as one fused multiply-add.
+    MulSub(u32, u32, u32),
+    /// Cold binary ops (comparisons, logic, mod).
+    Bin(BinOp, u32, u32),
+    Select(u32, u32, u32),
+    Call1(Builtin, u32),
+    Call2(Builtin, u32, u32),
+    StoreField { slot: usize, v: u32 },
+    StorePlane { slot: usize, v: u32 },
+    StoreRing { slot: usize, v: u32 },
+    /// A `Mul` folded into a consumer [`Kernel::MulAdd`]/[`MulSub`]
+    /// (single use): its value strip is never materialized.
+    Skip,
+}
+
+impl Kernel {
+    /// Short class label for `repro ir --tapes`.
+    pub(crate) fn name(&self) -> &'static str {
+        match self {
+            Kernel::Const(_) => "const",
+            Kernel::Scalar(_) => "scalar",
+            Kernel::Load { .. } => "load",
+            Kernel::LoadPlane { .. } => "load-plane",
+            Kernel::LoadRing { .. } => "load-ring",
+            Kernel::Neg(_) => "neg",
+            Kernel::Not(_) => "not",
+            Kernel::Add(..) => "add",
+            Kernel::Sub(..) => "sub",
+            Kernel::Mul(..) => "mul",
+            Kernel::Div(..) => "div",
+            Kernel::MulAdd(..) => "fma",
+            Kernel::MulSub(..) => "fms",
+            Kernel::Bin(..) => "bin",
+            Kernel::Select(..) => "select",
+            Kernel::Call1(..) => "call1",
+            Kernel::Call2(..) => "call2",
+            Kernel::StoreField { .. } => "store",
+            Kernel::StorePlane { .. } => "store-plane",
+            Kernel::StoreRing { .. } => "store-ring",
+            Kernel::Skip => "skip",
+        }
+    }
+}
+
+/// The compiled plan for one tier's tape: kernels index-aligned with the
+/// tape ops, plus the reorder-safety verdict that gates blocked execution.
+#[derive(Debug, Clone)]
+pub(crate) struct TierPlan {
+    pub kernels: Vec<Kernel>,
+    /// Whether strips of this tier are elementwise-independent: no op
+    /// loads a slot that another op of the *same* tier stores when the
+    /// load has a horizontal offset (k-only offsets stay within one
+    /// strip/column, where per-op ordering is preserved), and no ring ops
+    /// (sequential sweeps keep the interpreted traversal). Reorderable
+    /// tiers may run their interior as j-tiled blocks.
+    pub reorderable: bool,
+}
+
+impl TierPlan {
+    pub(crate) fn lower(tape: &CTape, classes: &[StorageClass], fast_math: bool) -> TierPlan {
+        let n = tape.ops.len();
+        let mut kernels: Vec<Kernel> = tape
+            .ops
+            .iter()
+            .map(|inst| match &inst.op {
+                TapeOp::Const(c) => Kernel::Const(*c),
+                TapeOp::Scalar(ix) => Kernel::Scalar(*ix),
+                TapeOp::Load { slot, off } => Kernel::Load { slot: *slot, off: *off },
+                TapeOp::LoadLocal { slot, off } => {
+                    if classes[*slot] == StorageClass::Ring {
+                        Kernel::LoadRing { slot: *slot, off: *off }
+                    } else {
+                        Kernel::LoadPlane { slot: *slot, off: *off }
+                    }
+                }
+                TapeOp::Neg(a) => Kernel::Neg(*a),
+                TapeOp::Not(a) => Kernel::Not(*a),
+                TapeOp::Bin(op, a, b) => match op {
+                    BinOp::Add => Kernel::Add(*a, *b),
+                    BinOp::Sub => Kernel::Sub(*a, *b),
+                    BinOp::Mul => Kernel::Mul(*a, *b),
+                    BinOp::Div => Kernel::Div(*a, *b),
+                    _ => Kernel::Bin(*op, *a, *b),
+                },
+                TapeOp::Select(c, t, f) => Kernel::Select(*c, *t, *f),
+                TapeOp::Call1(f, a) => Kernel::Call1(*f, *a),
+                TapeOp::Call2(f, a, b) => Kernel::Call2(*f, *a, *b),
+                TapeOp::StoreField { slot, v } => Kernel::StoreField { slot: *slot, v: *v },
+                TapeOp::StoreLocal { slot, v } => {
+                    if classes[*slot] == StorageClass::Ring {
+                        Kernel::StoreRing { slot: *slot, v: *v }
+                    } else {
+                        Kernel::StorePlane { slot: *slot, v: *v }
+                    }
+                }
+            })
+            .collect();
+
+        if fast_math {
+            // Contract single-use Mul feeding Add/Sub into FMA kernels.
+            // Use counts come from the tape (stores included), so a Mul
+            // that is also stored or shared by CSE is never folded.
+            let mut uses = vec![0u32; n];
+            for inst in &tape.ops {
+                for o in inst.op.operands().into_iter().flatten() {
+                    uses[o as usize] += 1;
+                }
+            }
+            for x in 0..n {
+                let fused = match kernels[x] {
+                    Kernel::Add(a, b) => {
+                        if let Kernel::Mul(p, q) = kernels[a as usize] {
+                            if uses[a as usize] == 1 {
+                                Some((Kernel::MulAdd(p, q, b), a))
+                            } else {
+                                None
+                            }
+                        } else if let Kernel::Mul(p, q) = kernels[b as usize] {
+                            // FP addition is commutative: c + m == m + c.
+                            if uses[b as usize] == 1 {
+                                Some((Kernel::MulAdd(p, q, a), b))
+                            } else {
+                                None
+                            }
+                        } else {
+                            None
+                        }
+                    }
+                    // Only m - c contracts; c - m would need a negated
+                    // product, which is not a single FMA.
+                    Kernel::Sub(a, b) => {
+                        if let Kernel::Mul(p, q) = kernels[a as usize] {
+                            if uses[a as usize] == 1 {
+                                Some((Kernel::MulSub(p, q, b), a))
+                            } else {
+                                None
+                            }
+                        } else {
+                            None
+                        }
+                    }
+                    _ => None,
+                };
+                if let Some((k, skipped)) = fused {
+                    kernels[x] = k;
+                    kernels[skipped as usize] = Kernel::Skip;
+                }
+            }
+        }
+
+        // Reorder-safety: a load with a horizontal offset of a slot this
+        // same tier stores would observe neighbor strips' completion
+        // order; ring ops keep the interpreted sequential traversal.
+        let mut stored: Vec<usize> = Vec::new();
+        let mut has_ring = false;
+        for inst in &tape.ops {
+            match inst.op {
+                TapeOp::StoreField { slot, .. } | TapeOp::StoreLocal { slot, .. } => {
+                    stored.push(slot)
+                }
+                TapeOp::LoadLocal { slot, .. } if classes[slot] == StorageClass::Ring => {
+                    has_ring = true
+                }
+                _ => {}
+            }
+        }
+        let mut reorderable = !has_ring;
+        if reorderable {
+            for inst in &tape.ops {
+                if let TapeOp::Load { slot, off } | TapeOp::LoadLocal { slot, off } = &inst.op
+                {
+                    if (off[0] != 0 || off[1] != 0) && stored.contains(slot) {
+                        reorderable = false;
+                        break;
+                    }
+                }
+            }
+        }
+        TierPlan { kernels, reorderable }
+    }
+}
+
+/// A memory kernel's access, resolved once per tier invocation: the flat
+/// base index for the strip at `(i, j) = (0, 0)` plus the `i`/`j`/lane
+/// strides. Strip base = `base + i * si + j * sj`; lanes step by `lane`.
+#[derive(Debug, Clone, Copy, Default)]
+pub(crate) struct Resolved {
+    pub base: i64,
+    pub si: i64,
+    pub sj: i64,
+    pub lane: i64,
+    /// Plane-scratch slot with no buffer this group (never written):
+    /// loads read zeros, exactly like the interpreted path.
+    pub missing: bool,
+}
+
+/// Resolve every memory kernel of a tier against the live environment and
+/// scratch buffers. Ring planes are lazy per level and stay dynamic.
+pub(crate) fn resolve_accesses(
+    env: &Env,
+    kernels: &[Kernel],
+    scratch: &Scratch,
+    k0: i64,
+    axis: usize,
+) -> Vec<Resolved> {
+    let field = |slot: usize, off: Offset| -> Resolved {
+        let s = &env.storages[slot];
+        let st = s.raw_strides();
+        Resolved {
+            base: s.raw_origin() as i64
+                + off[0] as i64 * st[0] as i64
+                + off[1] as i64 * st[1] as i64
+                + (k0 + off[2] as i64) * st[2] as i64,
+            si: st[0] as i64,
+            sj: st[1] as i64,
+            lane: st[axis] as i64,
+            missing: false,
+        }
+    };
+    let plane = |slot: usize, off: Offset| -> Resolved {
+        match &scratch[slot] {
+            None => Resolved { missing: true, ..Resolved::default() },
+            Some((sr, _)) => {
+                let sdj = sr.j1 - sr.j0;
+                let swk = sr.wk() as i64;
+                Resolved {
+                    base: (off[0] as i64 - sr.i0) * sdj * swk
+                        + (off[1] as i64 - sr.j0) * swk
+                        + (k0 + off[2] as i64 - sr.k0),
+                    si: sdj * swk,
+                    sj: swk,
+                    lane: if axis == 2 { 1 } else { swk },
+                    missing: false,
+                }
+            }
+        }
+    };
+    kernels
+        .iter()
+        .map(|k| match *k {
+            Kernel::Load { slot, off } => field(slot, off),
+            Kernel::StoreField { slot, .. } => field(slot, [0, 0, 0]),
+            Kernel::LoadPlane { slot, off } => plane(slot, off),
+            Kernel::StorePlane { slot, .. } => plane(slot, [0, 0, 0]),
+            _ => Resolved::default(),
+        })
+        .collect()
+}
+
+/// Interior-span working-set target per block: `ops × tile × wl` f64
+/// strips should stay L2-resident.
+const BLOCK_BYTES: usize = 256 * 1024;
+/// Upper bound on the j-tile: past this the dispatch amortization is flat
+/// and wider tiles only grow the working set.
+const MAX_TILE_J: usize = 16;
+
+/// Run one PARALLEL (`axis == 2`) tier through the specialized executor:
+/// guarded strips everywhere for order-sensitive tiers, fringe strips plus
+/// j-tiled interior blocks for reorderable ones. Bounds, traversal region
+/// and barrier structure are exactly the interpreted path's — only the
+/// per-strip work is specialized.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_tier_axis2(
+    env: &mut Env,
+    plan: &TierPlan,
+    bounds: &[[i64; 4]],
+    trect: (i64, i64, i64, i64),
+    wl: usize,
+    k0: i64,
+    alloc: &[Extent],
+    scratch: &mut Scratch,
+    rings: &mut Rings,
+    pool: &mut Pool,
+    vals: &mut Vec<f64>,
+    slab: (i64, i64),
+) {
+    let (ti0, ti1, tj0, tj1) = trect;
+    let kernels = &plan.kernels[..];
+    let resolved = resolve_accesses(env, kernels, scratch, k0, 2);
+    pool.stats.tiers_specialized += 1;
+
+    let guarded_rect = |env: &mut Env,
+                        scratch: &mut Scratch,
+                        rings: &mut Rings,
+                        pool: &mut Pool,
+                        vals: &mut [f64],
+                        i0: i64,
+                        i1: i64,
+                        j0: i64,
+                        j1: i64| {
+        for i in i0..i1 {
+            for j in j0..j1 {
+                eval_strip_spec(
+                    env, kernels, &resolved, bounds, vals, wl, i, j, k0, 2, alloc, scratch,
+                    rings, pool, slab,
+                );
+            }
+        }
+        pool.stats.strips_guarded += ((i1 - i0).max(0) * (j1 - j0).max(0)) as u64;
+    };
+
+    if !plan.reorderable {
+        guarded_rect(env, scratch, rings, pool, vals, ti0, ti1, tj0, tj1);
+        return;
+    }
+
+    // The interior rectangle: where every op's bounds hold, so all guards
+    // can be hoisted. Op regions are contained in the tier extent, so the
+    // intersection is already within the tier rect; clamp defensively.
+    let mut ii0 = ti0;
+    let mut ii1 = ti1;
+    let mut ij0 = tj0;
+    let mut ij1 = tj1;
+    for b in bounds {
+        ii0 = ii0.max(b[0]);
+        ii1 = ii1.min(b[1]);
+        ij0 = ij0.max(b[2]);
+        ij1 = ij1.min(b[3]);
+    }
+    ii0 = ii0.clamp(ti0, ti1);
+    ii1 = ii1.clamp(ti0, ti1);
+    ij0 = ij0.clamp(tj0, tj1);
+    ij1 = ij1.clamp(tj0, tj1);
+    if ii0 >= ii1 || ij0 >= ij1 {
+        guarded_rect(env, scratch, rings, pool, vals, ti0, ti1, tj0, tj1);
+        return;
+    }
+
+    // Guarded fringes: full rows above/below the interior, then the j
+    // prologue/epilogue columns of the interior rows.
+    guarded_rect(env, scratch, rings, pool, vals, ti0, ii0, tj0, tj1);
+    guarded_rect(env, scratch, rings, pool, vals, ii1, ti1, tj0, tj1);
+    guarded_rect(env, scratch, rings, pool, vals, ii0, ii1, tj0, ij0);
+    guarded_rect(env, scratch, rings, pool, vals, ii0, ii1, ij1, tj1);
+
+    // Blocked interior: j-tiles outer, i inner, so per-op dispatch is
+    // amortized over `tile × wl` lanes and the i-walk reuses the tile's
+    // field rows while they are still cache-resident.
+    let nops = kernels.len().max(1);
+    let tile = (BLOCK_BYTES / (nops * wl.max(1) * 8)).clamp(1, MAX_TILE_J);
+    let bs = tile * wl;
+    if vals.len() < nops * bs {
+        vals.resize(nops * bs, 0.0);
+    }
+    let mut jt = ij0;
+    while jt < ij1 {
+        let jlen = ((ij1 - jt) as usize).min(tile);
+        for i in ii0..ii1 {
+            eval_block(env, kernels, &resolved, vals, wl, bs, jlen, i, jt, scratch);
+        }
+        pool.stats.blocks_interior += (ii1 - ii0) as u64;
+        jt += jlen as i64;
+    }
+}
+
+/// Evaluate one tape plan over one strip — the specialized mirror of
+/// `fused::eval_strip`: identical guards, identical traversal, identical
+/// per-lane arithmetic (modulo opt-in FMA kernels), with every field and
+/// plane access pre-resolved.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn eval_strip_spec(
+    env: &mut Env,
+    kernels: &[Kernel],
+    resolved: &[Resolved],
+    bounds: &[[i64; 4]],
+    vals: &mut [f64],
+    wl: usize,
+    i: i64,
+    jbase: i64,
+    k0: i64,
+    axis: usize,
+    alloc: &[Extent],
+    scratch: &mut Scratch,
+    rings: &mut Rings,
+    pool: &mut Pool,
+    slab: (i64, i64),
+) {
+    for (x, kern) in kernels.iter().enumerate() {
+        if matches!(kern, Kernel::Skip) {
+            continue;
+        }
+        let b = bounds[x];
+        if i < b[0] || i >= b[1] {
+            continue;
+        }
+        let (lo, hi): (usize, usize) = if axis == 2 {
+            if jbase < b[2] || jbase >= b[3] {
+                continue;
+            }
+            (0, wl)
+        } else {
+            let lo = (b[2] - jbase).max(0) as usize;
+            let hi = ((b[3] - jbase).max(0) as usize).min(wl);
+            if lo >= hi {
+                continue;
+            }
+            (lo, hi)
+        };
+        let base = x * wl;
+        let r = &resolved[x];
+        match kern {
+            Kernel::Const(c) => vals[base + lo..base + hi].fill(*c),
+            Kernel::Scalar(ix) => {
+                let v = env.scalars[*ix];
+                vals[base + lo..base + hi].fill(v);
+            }
+            Kernel::Load { slot, .. } => {
+                let sbase = r.base + i * r.si + jbase * r.sj;
+                copy_lanes_in(
+                    env.storages[*slot].raw(),
+                    sbase,
+                    r.lane,
+                    &mut vals[base + lo..base + hi],
+                    lo,
+                );
+            }
+            Kernel::LoadPlane { slot, .. } => {
+                if r.missing {
+                    vals[base + lo..base + hi].fill(0.0);
+                } else {
+                    let (_, sbuf) = scratch[*slot].as_ref().expect("resolved plane buffer");
+                    let sbase = r.base + i * r.si + jbase * r.sj;
+                    copy_lanes_in(sbuf, sbase, r.lane, &mut vals[base + lo..base + hi], lo);
+                }
+            }
+            Kernel::LoadRing { slot, off } => match rings.get(&(*slot, k0 + off[2] as i64)) {
+                None => vals[base + lo..base + hi].fill(0.0),
+                Some((sr, sbuf)) => {
+                    let sdj = sr.j1 - sr.j0;
+                    let swk = sr.wk() as i64;
+                    let sbase = ((i + off[0] as i64 - sr.i0) * sdj
+                        + (jbase + off[1] as i64 - sr.j0))
+                        * swk
+                        + (k0 + off[2] as i64 - sr.k0);
+                    let ls = if axis == 2 { 1 } else { swk };
+                    copy_lanes_in(sbuf, sbase, ls, &mut vals[base + lo..base + hi], lo);
+                }
+            },
+            Kernel::Neg(a) => {
+                let (src, dst) = vals.split_at_mut(base);
+                let sa = &src[*a as usize * wl + lo..*a as usize * wl + hi];
+                let d = &mut dst[lo..hi];
+                for n in 0..d.len() {
+                    d[n] = -sa[n];
+                }
+            }
+            Kernel::Not(a) => {
+                let (src, dst) = vals.split_at_mut(base);
+                let sa = &src[*a as usize * wl + lo..*a as usize * wl + hi];
+                let d = &mut dst[lo..hi];
+                for n in 0..d.len() {
+                    d[n] = if sa[n] != 0.0 { 0.0 } else { 1.0 };
+                }
+            }
+            Kernel::Add(a, b2) => {
+                let (src, dst) = vals.split_at_mut(base);
+                let sa = &src[*a as usize * wl + lo..*a as usize * wl + hi];
+                let sb = &src[*b2 as usize * wl + lo..*b2 as usize * wl + hi];
+                let d = &mut dst[lo..hi];
+                for n in 0..d.len() {
+                    d[n] = sa[n] + sb[n];
+                }
+            }
+            Kernel::Sub(a, b2) => {
+                let (src, dst) = vals.split_at_mut(base);
+                let sa = &src[*a as usize * wl + lo..*a as usize * wl + hi];
+                let sb = &src[*b2 as usize * wl + lo..*b2 as usize * wl + hi];
+                let d = &mut dst[lo..hi];
+                for n in 0..d.len() {
+                    d[n] = sa[n] - sb[n];
+                }
+            }
+            Kernel::Mul(a, b2) => {
+                let (src, dst) = vals.split_at_mut(base);
+                let sa = &src[*a as usize * wl + lo..*a as usize * wl + hi];
+                let sb = &src[*b2 as usize * wl + lo..*b2 as usize * wl + hi];
+                let d = &mut dst[lo..hi];
+                for n in 0..d.len() {
+                    d[n] = sa[n] * sb[n];
+                }
+            }
+            Kernel::Div(a, b2) => {
+                let (src, dst) = vals.split_at_mut(base);
+                let sa = &src[*a as usize * wl + lo..*a as usize * wl + hi];
+                let sb = &src[*b2 as usize * wl + lo..*b2 as usize * wl + hi];
+                let d = &mut dst[lo..hi];
+                for n in 0..d.len() {
+                    d[n] = sa[n] / sb[n];
+                }
+            }
+            Kernel::MulAdd(a, b2, c) => {
+                let (src, dst) = vals.split_at_mut(base);
+                let sa = &src[*a as usize * wl + lo..*a as usize * wl + hi];
+                let sb = &src[*b2 as usize * wl + lo..*b2 as usize * wl + hi];
+                let sc = &src[*c as usize * wl + lo..*c as usize * wl + hi];
+                mul_add_slices(&mut dst[lo..hi], sa, sb, sc);
+            }
+            Kernel::MulSub(a, b2, c) => {
+                let (src, dst) = vals.split_at_mut(base);
+                let sa = &src[*a as usize * wl + lo..*a as usize * wl + hi];
+                let sb = &src[*b2 as usize * wl + lo..*b2 as usize * wl + hi];
+                let sc = &src[*c as usize * wl + lo..*c as usize * wl + hi];
+                mul_sub_slices(&mut dst[lo..hi], sa, sb, sc);
+            }
+            Kernel::Bin(op, a, b2) => {
+                let (src, dst) = vals.split_at_mut(base);
+                let sa = &src[*a as usize * wl + lo..*a as usize * wl + hi];
+                let sb = &src[*b2 as usize * wl + lo..*b2 as usize * wl + hi];
+                let d = &mut dst[lo..hi];
+                for n in 0..d.len() {
+                    d[n] = apply_bin(*op, sa[n], sb[n]);
+                }
+            }
+            Kernel::Select(c, t, f) => {
+                let (src, dst) = vals.split_at_mut(base);
+                let sc = &src[*c as usize * wl + lo..*c as usize * wl + hi];
+                let st_ = &src[*t as usize * wl + lo..*t as usize * wl + hi];
+                let sf = &src[*f as usize * wl + lo..*f as usize * wl + hi];
+                let d = &mut dst[lo..hi];
+                for n in 0..d.len() {
+                    d[n] = if sc[n] != 0.0 { st_[n] } else { sf[n] };
+                }
+            }
+            Kernel::Call1(fun, a) => {
+                let (src, dst) = vals.split_at_mut(base);
+                let sa = &src[*a as usize * wl + lo..*a as usize * wl + hi];
+                let d = &mut dst[lo..hi];
+                for n in 0..d.len() {
+                    d[n] = apply_builtin1(*fun, sa[n]);
+                }
+            }
+            Kernel::Call2(fun, a, b2) => {
+                let (src, dst) = vals.split_at_mut(base);
+                let sa = &src[*a as usize * wl + lo..*a as usize * wl + hi];
+                let sb = &src[*b2 as usize * wl + lo..*b2 as usize * wl + hi];
+                let d = &mut dst[lo..hi];
+                for n in 0..d.len() {
+                    d[n] = apply_builtin2(*fun, sa[n], sb[n]);
+                }
+            }
+            Kernel::StoreField { slot, v } => {
+                let src = &vals[*v as usize * wl + lo..*v as usize * wl + hi];
+                let dbase = r.base + i * r.si + jbase * r.sj;
+                copy_lanes_out(src, env.storages[*slot].raw_mut(), dbase, r.lane, lo);
+            }
+            Kernel::StorePlane { slot, v } => {
+                let (_, sbuf) = scratch[*slot].as_mut().expect("scratch local without buffer");
+                let dbase = r.base + i * r.si + jbase * r.sj;
+                copy_lanes_out(
+                    &vals[*v as usize * wl + lo..*v as usize * wl + hi],
+                    sbuf,
+                    dbase,
+                    r.lane,
+                    lo,
+                );
+            }
+            Kernel::StoreRing { slot, v } => {
+                if !rings.contains_key(&(*slot, k0)) {
+                    let e = alloc[*slot];
+                    let dnj = env.domain[1] as i64;
+                    let reg = Region {
+                        i0: slab.0 + e.i.0 as i64,
+                        i1: slab.1 + e.i.1 as i64,
+                        j0: e.j.0 as i64,
+                        j1: dnj + e.j.1 as i64,
+                        k0,
+                        k1: k0 + 1,
+                    };
+                    let buf = pool.take(reg.len());
+                    rings.insert((*slot, k0), (reg, buf));
+                }
+                let ent = rings.get_mut(&(*slot, k0)).expect("ring plane just inserted");
+                let (sr, sbuf) = (ent.0, &mut ent.1);
+                let sdj = sr.j1 - sr.j0;
+                let swk = sr.wk() as i64;
+                let dbase = ((i - sr.i0) * sdj + (jbase - sr.j0)) * swk + (k0 - sr.k0);
+                let ls = if axis == 2 { 1 } else { swk };
+                copy_lanes_out(
+                    &vals[*v as usize * wl + lo..*v as usize * wl + hi],
+                    sbuf,
+                    dbase,
+                    ls,
+                    lo,
+                );
+            }
+            Kernel::Skip => unreachable!("skipped above"),
+        }
+    }
+}
+
+/// Evaluate one tape plan over a guard-free interior block: `jlen` strips
+/// of `wl` lanes at `(i, jt..jt+jlen)`. `vals` holds `bs = tile * wl`
+/// lanes per op (strip `jj` at offset `jj * wl`); arithmetic runs one flat
+/// loop over all `jlen * wl` lanes. Only called for reorderable tiers
+/// inside the interior rectangle, so every element's dataflow is identical
+/// to the strip-by-strip traversal.
+#[allow(clippy::too_many_arguments)]
+fn eval_block(
+    env: &mut Env,
+    kernels: &[Kernel],
+    resolved: &[Resolved],
+    vals: &mut [f64],
+    wl: usize,
+    bs: usize,
+    jlen: usize,
+    i: i64,
+    jt: i64,
+    scratch: &mut Scratch,
+) {
+    let n = jlen * wl;
+    for (x, kern) in kernels.iter().enumerate() {
+        let base = x * bs;
+        let r = &resolved[x];
+        match kern {
+            Kernel::Skip => {}
+            Kernel::Const(c) => vals[base..base + n].fill(*c),
+            Kernel::Scalar(ix) => {
+                let v = env.scalars[*ix];
+                vals[base..base + n].fill(v);
+            }
+            Kernel::Load { slot, .. } => {
+                let s = env.storages[*slot].raw();
+                let row = r.base + i * r.si + jt * r.sj;
+                if r.lane == 1 && r.sj == wl as i64 {
+                    // j-adjacent strips are contiguous: one block copy.
+                    let a0 = row as usize;
+                    vals[base..base + n].copy_from_slice(&s[a0..a0 + n]);
+                } else {
+                    for jj in 0..jlen {
+                        copy_lanes_in(
+                            s,
+                            row + jj as i64 * r.sj,
+                            r.lane,
+                            &mut vals[base + jj * wl..base + jj * wl + wl],
+                            0,
+                        );
+                    }
+                }
+            }
+            Kernel::LoadPlane { slot, .. } => {
+                if r.missing {
+                    vals[base..base + n].fill(0.0);
+                } else {
+                    let (_, sbuf) = scratch[*slot].as_ref().expect("resolved plane buffer");
+                    let row = r.base + i * r.si + jt * r.sj;
+                    if r.lane == 1 && r.sj == wl as i64 {
+                        let a0 = row as usize;
+                        vals[base..base + n].copy_from_slice(&sbuf[a0..a0 + n]);
+                    } else {
+                        for jj in 0..jlen {
+                            copy_lanes_in(
+                                sbuf,
+                                row + jj as i64 * r.sj,
+                                r.lane,
+                                &mut vals[base + jj * wl..base + jj * wl + wl],
+                                0,
+                            );
+                        }
+                    }
+                }
+            }
+            Kernel::Neg(a) => {
+                let (src, dst) = vals.split_at_mut(base);
+                let sa = &src[*a as usize * bs..*a as usize * bs + n];
+                let d = &mut dst[..n];
+                for x in 0..n {
+                    d[x] = -sa[x];
+                }
+            }
+            Kernel::Not(a) => {
+                let (src, dst) = vals.split_at_mut(base);
+                let sa = &src[*a as usize * bs..*a as usize * bs + n];
+                let d = &mut dst[..n];
+                for x in 0..n {
+                    d[x] = if sa[x] != 0.0 { 0.0 } else { 1.0 };
+                }
+            }
+            Kernel::Add(a, b2) => {
+                let (src, dst) = vals.split_at_mut(base);
+                let sa = &src[*a as usize * bs..*a as usize * bs + n];
+                let sb = &src[*b2 as usize * bs..*b2 as usize * bs + n];
+                let d = &mut dst[..n];
+                for x in 0..n {
+                    d[x] = sa[x] + sb[x];
+                }
+            }
+            Kernel::Sub(a, b2) => {
+                let (src, dst) = vals.split_at_mut(base);
+                let sa = &src[*a as usize * bs..*a as usize * bs + n];
+                let sb = &src[*b2 as usize * bs..*b2 as usize * bs + n];
+                let d = &mut dst[..n];
+                for x in 0..n {
+                    d[x] = sa[x] - sb[x];
+                }
+            }
+            Kernel::Mul(a, b2) => {
+                let (src, dst) = vals.split_at_mut(base);
+                let sa = &src[*a as usize * bs..*a as usize * bs + n];
+                let sb = &src[*b2 as usize * bs..*b2 as usize * bs + n];
+                let d = &mut dst[..n];
+                for x in 0..n {
+                    d[x] = sa[x] * sb[x];
+                }
+            }
+            Kernel::Div(a, b2) => {
+                let (src, dst) = vals.split_at_mut(base);
+                let sa = &src[*a as usize * bs..*a as usize * bs + n];
+                let sb = &src[*b2 as usize * bs..*b2 as usize * bs + n];
+                let d = &mut dst[..n];
+                for x in 0..n {
+                    d[x] = sa[x] / sb[x];
+                }
+            }
+            Kernel::MulAdd(a, b2, c) => {
+                let (src, dst) = vals.split_at_mut(base);
+                let sa = &src[*a as usize * bs..*a as usize * bs + n];
+                let sb = &src[*b2 as usize * bs..*b2 as usize * bs + n];
+                let sc = &src[*c as usize * bs..*c as usize * bs + n];
+                mul_add_slices(&mut dst[..n], sa, sb, sc);
+            }
+            Kernel::MulSub(a, b2, c) => {
+                let (src, dst) = vals.split_at_mut(base);
+                let sa = &src[*a as usize * bs..*a as usize * bs + n];
+                let sb = &src[*b2 as usize * bs..*b2 as usize * bs + n];
+                let sc = &src[*c as usize * bs..*c as usize * bs + n];
+                mul_sub_slices(&mut dst[..n], sa, sb, sc);
+            }
+            Kernel::Bin(op, a, b2) => {
+                let (src, dst) = vals.split_at_mut(base);
+                let sa = &src[*a as usize * bs..*a as usize * bs + n];
+                let sb = &src[*b2 as usize * bs..*b2 as usize * bs + n];
+                let d = &mut dst[..n];
+                for x in 0..n {
+                    d[x] = apply_bin(*op, sa[x], sb[x]);
+                }
+            }
+            Kernel::Select(c, t, f) => {
+                let (src, dst) = vals.split_at_mut(base);
+                let sc = &src[*c as usize * bs..*c as usize * bs + n];
+                let st_ = &src[*t as usize * bs..*t as usize * bs + n];
+                let sf = &src[*f as usize * bs..*f as usize * bs + n];
+                let d = &mut dst[..n];
+                for x in 0..n {
+                    d[x] = if sc[x] != 0.0 { st_[x] } else { sf[x] };
+                }
+            }
+            Kernel::Call1(fun, a) => {
+                let (src, dst) = vals.split_at_mut(base);
+                let sa = &src[*a as usize * bs..*a as usize * bs + n];
+                let d = &mut dst[..n];
+                for x in 0..n {
+                    d[x] = apply_builtin1(*fun, sa[x]);
+                }
+            }
+            Kernel::Call2(fun, a, b2) => {
+                let (src, dst) = vals.split_at_mut(base);
+                let sa = &src[*a as usize * bs..*a as usize * bs + n];
+                let sb = &src[*b2 as usize * bs..*b2 as usize * bs + n];
+                let d = &mut dst[..n];
+                for x in 0..n {
+                    d[x] = apply_builtin2(*fun, sa[x], sb[x]);
+                }
+            }
+            Kernel::StoreField { slot, v } => {
+                let row = r.base + i * r.si + jt * r.sj;
+                let s = env.storages[*slot].raw_mut();
+                for jj in 0..jlen {
+                    copy_lanes_out(
+                        &vals[*v as usize * bs + jj * wl..*v as usize * bs + jj * wl + wl],
+                        s,
+                        row + jj as i64 * r.sj,
+                        r.lane,
+                        0,
+                    );
+                }
+            }
+            Kernel::StorePlane { slot, v } => {
+                let (_, sbuf) = scratch[*slot].as_mut().expect("scratch local without buffer");
+                let row = r.base + i * r.si + jt * r.sj;
+                if r.lane == 1 && r.sj == wl as i64 {
+                    let a0 = row as usize;
+                    sbuf[a0..a0 + n].copy_from_slice(&vals[*v as usize * bs..*v as usize * bs + n]);
+                } else {
+                    for jj in 0..jlen {
+                        copy_lanes_out(
+                            &vals[*v as usize * bs + jj * wl..*v as usize * bs + jj * wl + wl],
+                            sbuf,
+                            row + jj as i64 * r.sj,
+                            r.lane,
+                            0,
+                        );
+                    }
+                }
+            }
+            Kernel::LoadRing { .. } | Kernel::StoreRing { .. } => {
+                unreachable!("ring tiers are never reorderable")
+            }
+        }
+    }
+}
+
+/// `d[n] = a[n] * b[n] + c[n]` — a single hardware FMA where the CPU has
+/// one (runtime-detected, so default builds still contract), `mul + add`
+/// with separate roundings otherwise. The two differ by at most 1 ulp per
+/// element; fast-math results are tolerance-validated, never bitwise.
+#[inline]
+fn mul_add_slices(d: &mut [f64], a: &[f64], b: &[f64], c: &[f64]) {
+    #[cfg(target_arch = "x86_64")]
+    if hw_fma() {
+        // SAFETY: FMA support was checked at runtime just above.
+        unsafe { mul_add_slices_fma(d, a, b, c) };
+        return;
+    }
+    for n in 0..d.len() {
+        d[n] = a[n] * b[n] + c[n];
+    }
+}
+
+/// `d[n] = a[n] * b[n] - c[n]`, same contraction contract as
+/// [`mul_add_slices`].
+#[inline]
+fn mul_sub_slices(d: &mut [f64], a: &[f64], b: &[f64], c: &[f64]) {
+    #[cfg(target_arch = "x86_64")]
+    if hw_fma() {
+        // SAFETY: FMA support was checked at runtime just above.
+        unsafe { mul_sub_slices_fma(d, a, b, c) };
+        return;
+    }
+    for n in 0..d.len() {
+        d[n] = a[n] * b[n] - c[n];
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn hw_fma() -> bool {
+    static FMA: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *FMA.get_or_init(|| is_x86_feature_detected!("fma"))
+}
+
+/// With the `fma` target feature enabled, `f64::mul_add` lowers to
+/// `vfmadd` and the loop vectorizes — without it the intrinsic would fall
+/// back to a slow libm call in default (non-`target-cpu=native`) builds.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "fma")]
+unsafe fn mul_add_slices_fma(d: &mut [f64], a: &[f64], b: &[f64], c: &[f64]) {
+    for n in 0..d.len() {
+        d[n] = a[n].mul_add(b[n], c[n]);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "fma")]
+unsafe fn mul_sub_slices_fma(d: &mut [f64], a: &[f64], b: &[f64], c: &[f64]) {
+    for n in 0..d.len() {
+        d[n] = a[n].mul_add(b[n], -c[n]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::compile_source_opt;
+    use crate::backend::fused::FusedProgram;
+    use crate::backend::program::Program;
+    use crate::opt::{OptConfig, OptLevel};
+    use std::collections::BTreeMap;
+
+    fn lower_src(src: &str, name: &str, fast_math: bool) -> (Program, FusedProgram) {
+        let ir = compile_source_opt(
+            src,
+            name,
+            &BTreeMap::new(),
+            &OptConfig::level(OptLevel::O3).with_fast_math(fast_math),
+        )
+        .unwrap();
+        let p = Program::compile(&ir).unwrap();
+        let fp = FusedProgram::compile(&p, fast_math);
+        (p, fp)
+    }
+
+    #[test]
+    fn exec_tier_parses_and_displays() {
+        assert_eq!(ExecTier::parse("interpreted"), Some(ExecTier::Interpreted));
+        assert_eq!(ExecTier::parse(" spec "), Some(ExecTier::Specialized));
+        assert_eq!(ExecTier::parse("warp"), None);
+        assert_eq!(ExecTier::default(), ExecTier::Specialized);
+        assert_eq!(ExecTier::Interpreted.to_string(), "interpreted");
+        assert_eq!(ExecTier::Specialized.to_string(), "specialized");
+    }
+
+    #[test]
+    fn lowering_monomorphizes_hot_opcodes() {
+        let (_, fp) = lower_src(crate::stdlib::HDIFF_SRC, "hdiff", false);
+        let g = &fp.multistages[0].groups[0];
+        // Every tier's plan is index-aligned with its tape, hot binary
+        // opcodes get dedicated kernels, demoted locals are split by class
+        // at lowering time, and nothing is Skip without fast-math.
+        for t in &g.tiers {
+            assert_eq!(t.plan.kernels.len(), t.tape.ops.len());
+            assert!(t.plan.kernels.iter().all(|k| *k != Kernel::Skip));
+            assert!(!t
+                .plan
+                .kernels
+                .iter()
+                .any(|k| matches!(k, Kernel::LoadRing { .. } | Kernel::StoreRing { .. })));
+        }
+        let all: Vec<&Kernel> = g.tiers.iter().flat_map(|t| &t.plan.kernels).collect();
+        assert!(all.iter().any(|k| matches!(k, Kernel::Add(..))));
+        assert!(all.iter().any(|k| matches!(k, Kernel::Load { .. })));
+        assert!(all.iter().any(|k| matches!(k, Kernel::LoadPlane { .. })));
+        assert!(all.iter().any(|k| matches!(k, Kernel::StorePlane { .. })));
+        // hdiff's tiers never store what they offset-load: all blocked.
+        assert!(g.tiers.iter().all(|t| t.plan.reorderable));
+    }
+
+    #[test]
+    fn fast_math_contracts_single_use_muls() {
+        const SRC: &str = "
+            stencil s(a: Field<f64>, b: Field<f64>, out: Field<f64>) {
+                with computation(PARALLEL), interval(...) {
+                    out = a * b + a[1,0,0];
+                }
+            }";
+        let (_, exact) = lower_src(SRC, "s", false);
+        let ke = &exact.multistages[0].groups[0].tiers[0].plan.kernels;
+        assert!(!ke.iter().any(|k| matches!(k, Kernel::MulAdd(..) | Kernel::Skip)));
+        let (_, relaxed) = lower_src(SRC, "s", true);
+        let kr = &relaxed.multistages[0].groups[0].tiers[0].plan.kernels;
+        assert_eq!(kr.iter().filter(|k| matches!(k, Kernel::MulAdd(..))).count(), 1);
+        assert_eq!(kr.iter().filter(|k| **k == Kernel::Skip).count(), 1);
+        // The skipped op is the Mul the FMA absorbed.
+        let skipped = kr.iter().position(|k| *k == Kernel::Skip).unwrap();
+        assert!(matches!(
+            exact.multistages[0].groups[0].tiers[0].plan.kernels[skipped],
+            Kernel::Mul(..)
+        ));
+    }
+
+    #[test]
+    fn shared_muls_are_never_contracted() {
+        // The product is used twice (CSE keeps one Mul): contracting it
+        // into one consumer would orphan the other.
+        const SRC: &str = "
+            stencil s(a: Field<f64>, b: Field<f64>, out: Field<f64>) {
+                with computation(PARALLEL), interval(...) {
+                    out = (a * b + 1.0) / (a * b - 1.0);
+                }
+            }";
+        let (_, relaxed) = lower_src(SRC, "s", true);
+        let k = &relaxed.multistages[0].groups[0].tiers[0].plan.kernels;
+        assert!(!k.iter().any(|x| matches!(x, Kernel::MulAdd(..) | Kernel::MulSub(..))));
+        assert!(!k.iter().any(|x| *x == Kernel::Skip));
+    }
+
+    #[test]
+    fn in_tier_store_plus_offset_load_blocks_reordering() {
+        // `x = a + x[1,0,0] * 0.25`: the single stage both stores x and
+        // loads it at a horizontal offset, so strip order is observable
+        // and the tier must stay strip-by-strip.
+        const SRC: &str = "
+            stencil s(a: Field<f64>, x: Field<f64>) {
+                with computation(PARALLEL), interval(...) {
+                    x = a + x[1,0,0] * 0.25;
+                }
+            }";
+        let (_, fp) = lower_src(SRC, "s", false);
+        let g = &fp.multistages[0].groups[0];
+        assert_eq!(g.tiers.len(), 1);
+        assert!(!g.tiers[0].plan.reorderable);
+        // Vertical-only offsets stay within one strip: reorderable.
+        const VSRC: &str = "
+            stencil s(a: Field<f64>, x: Field<f64>) {
+                with computation(PARALLEL), interval(...) {
+                    x = a + x[0,0,1] * 0.25;
+                }
+            }";
+        let (_, fp) = lower_src(VSRC, "s", false);
+        assert!(fp.multistages[0].groups[0].tiers[0].plan.reorderable);
+    }
+
+    #[test]
+    fn fma_slices_match_reference_within_one_ulp() {
+        let a = [1.5, -2.25, 3.0e153, 1.0e-300, 7.0];
+        let b = [2.0, 4.5, 2.0e153, 1.0e-10, -3.0];
+        let c = [0.5, -1.25, 1.0, 5.0e-310, 21.0];
+        let mut add = [0.0; 5];
+        let mut sub = [0.0; 5];
+        mul_add_slices(&mut add, &a, &b, &c);
+        mul_sub_slices(&mut sub, &a, &b, &c);
+        for n in 0..5 {
+            let ra = a[n].mul_add(b[n], c[n]);
+            let rs = a[n].mul_add(b[n], -c[n]);
+            let ea = a[n] * b[n] + c[n];
+            let es = a[n] * b[n] - c[n];
+            // Whichever rounding path the host picked, the result is one
+            // of the two legal contractions.
+            assert!(add[n] == ra || add[n] == ea, "lane {n}: {} vs {ra}/{ea}", add[n]);
+            assert!(sub[n] == rs || sub[n] == es, "lane {n}: {} vs {rs}/{es}", sub[n]);
+        }
+    }
+}

@@ -14,6 +14,7 @@
 pub mod cexpr;
 pub mod debug;
 pub mod fused;
+pub mod kernels;
 pub mod pjrt_aot;
 pub mod program;
 pub mod shard;
@@ -23,6 +24,7 @@ pub mod xlagen;
 use crate::ir::implir::StencilIr;
 use crate::storage::Storage;
 use anyhow::Result;
+use kernels::ExecTier;
 use shard::{ShardReport, Sharding};
 
 /// Arguments for one stencil invocation.
@@ -43,6 +45,10 @@ pub struct StencilArgs<'a, 'b> {
 pub struct RunConfig {
     /// Intra-call domain sharding plan (see [`shard::Sharding`]).
     pub sharding: Sharding,
+    /// Which executor the fused (`--opt-level 3`) path uses (see
+    /// [`kernels::ExecTier`]); bitwise-identical by contract, so a pure
+    /// scheduling choice like `sharding`.
+    pub tier: ExecTier,
 }
 
 /// A stencil execution backend.

@@ -119,7 +119,10 @@ impl VectorBackend {
             Some(match cached {
                 Some(f) => f,
                 None => {
-                    let compiled = Arc::new(FusedProgram::compile(&program));
+                    // `fast_math` is part of the opt tag and therefore of
+                    // `ir.fingerprint`, so exact and relaxed plans never
+                    // share a cache entry.
+                    let compiled = Arc::new(FusedProgram::compile(&program, ir.fast_math));
                     let mut fused = self.fused.write().unwrap();
                     fused.entry(ir.fingerprint).or_insert(compiled).clone()
                 }
@@ -131,20 +134,38 @@ impl VectorBackend {
     }
 }
 
-/// Buffer-pool counters (see [`VectorBackend::take_pool_stats`]).
+/// Buffer-pool and fused-executor counters (see
+/// [`VectorBackend::take_pool_stats`]). The strip/tier/block counters
+/// explain *where* the fused path spent its passes — how many loop-nest
+/// passes ran specialized vs interpreted, and how much of the domain ran
+/// as guarded fringe strips vs guard-free cache-blocked interior.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct PoolStats {
     /// Buffers handed out (pool hits + fresh allocations).
     pub taken: u64,
     /// Buffers that had to be freshly allocated.
     pub allocated: u64,
+    /// Tier passes executed by the interpreted tape walker.
+    pub tiers_interpreted: u64,
+    /// Tier passes executed by the specialized kernel-plan executor.
+    pub tiers_specialized: u64,
+    /// Per-op-guarded strips evaluated by the interpreted walker.
+    pub strips_interpreted: u64,
+    /// Guarded (fringe / order-sensitive / sequential) strips evaluated by
+    /// the specialized executor.
+    pub strips_guarded: u64,
+    /// Guard-free j-tiled interior blocks evaluated by the specialized
+    /// executor (each covers up to `tile × wl` lanes per op).
+    pub blocks_interior: u64,
 }
 
-/// Recycles region buffers between expression nodes and stages.
+/// Recycles region buffers between expression nodes and stages; also
+/// carries the per-run executor counters (checked out and absorbed with
+/// the pool, so concurrent runs never contend).
 #[derive(Default)]
 pub(crate) struct Pool {
     free: Vec<Vec<f64>>,
-    stats: PoolStats,
+    pub(crate) stats: PoolStats,
 }
 
 /// Max free buffers retained by a pool (shared by `put` and `absorb`).
@@ -176,6 +197,11 @@ impl Pool {
     fn absorb(&mut self, mut other: Pool) {
         self.stats.taken += other.stats.taken;
         self.stats.allocated += other.stats.allocated;
+        self.stats.tiers_interpreted += other.stats.tiers_interpreted;
+        self.stats.tiers_specialized += other.stats.tiers_specialized;
+        self.stats.strips_interpreted += other.stats.strips_interpreted;
+        self.stats.strips_guarded += other.stats.strips_guarded;
+        self.stats.blocks_interior += other.stats.blocks_interior;
         while self.free.len() < POOL_FREE_CAP {
             match other.free.pop() {
                 Some(b) => self.free.push(b),
@@ -945,7 +971,7 @@ impl Backend for VectorBackend {
         let threads = cfg.sharding.resolve(args.domain[0]);
         let report = if threads <= 1 {
             if let Some(fp) = &fused {
-                super::fused::run_program(fp, &program, &mut env, &mut pool);
+                super::fused::run_program(fp, &program, &mut env, &mut pool, cfg.tier);
             } else {
                 run_program(&program, &mut env, &mut pool);
             }
@@ -955,7 +981,7 @@ impl Backend for VectorBackend {
             let exec =
                 ShardExec::new(split_slabs(args.domain[0], threads), &workers, pool);
             if let Some(fp) = &fused {
-                super::fused::run_program_sharded(fp, &program, &mut env, &exec);
+                super::fused::run_program_sharded(fp, &program, &mut env, &exec, cfg.tier);
             } else {
                 run_program_sharded(&program, &mut env, &exec);
             }
@@ -1336,7 +1362,7 @@ mod tests {
                                 scalars: &scalars,
                                 domain,
                             },
-                            &RunConfig { sharding },
+                            &RunConfig { sharding, ..RunConfig::default() },
                         )
                         .unwrap()
                     };
@@ -1403,7 +1429,7 @@ mod tests {
                             scalars: &[],
                             domain,
                         },
-                        &RunConfig { sharding },
+                        &RunConfig { sharding, ..RunConfig::default() },
                     )
                     .unwrap()
                 };

@@ -29,6 +29,7 @@ pub mod stencil;
 pub use stencil::{BoundInvocation, InvocationBuilder, Stencil};
 
 use crate::analysis;
+use crate::backend::kernels::ExecTier;
 use crate::backend::shard::{ShardReport, Sharding};
 use crate::backend::{self, Backend};
 use crate::cache::StencilCache;
@@ -163,10 +164,17 @@ impl Coordinator {
     }
 
     pub fn set_opt_level(&mut self, level: OptLevel) {
-        // Opt levels select passes; the sharding plan is an orthogonal
-        // scheduling knob and survives level changes.
+        // Opt levels select passes; the sharding plan and executor tier are
+        // orthogonal scheduling knobs and survive level changes, and the
+        // fast-math opt-in is an explicit numeric-policy choice that a
+        // level switch must not silently revoke.
         let sharding = self.opt.sharding;
-        self.opt = OptConfig::level(level).with_sharding(sharding);
+        let tier = self.opt.tier;
+        let fast_math = self.opt.fast_math;
+        self.opt = OptConfig::level(level)
+            .with_sharding(sharding)
+            .with_tier(tier)
+            .with_fast_math(fast_math);
     }
 
     /// Default intra-call sharding plan stamped into every handle minted
@@ -178,6 +186,29 @@ impl Coordinator {
 
     pub fn sharding(&self) -> Sharding {
         self.opt.sharding
+    }
+
+    /// Default fused-path executor tier stamped into every handle minted
+    /// afterwards. Like sharding, a pure scheduling knob: both tiers are
+    /// bitwise-identical by contract and share one compilation cache entry.
+    pub fn set_exec_tier(&mut self, tier: ExecTier) {
+        self.opt.tier = tier;
+    }
+
+    pub fn exec_tier(&self) -> ExecTier {
+        self.opt.tier
+    }
+
+    /// Opt into (or out of) fast-math numeric relaxation for subsequent
+    /// compilations. Unlike sharding and the executor tier this *does*
+    /// salt the compilation cache key — exact and relaxed artifacts never
+    /// share a slot — because it changes results within a tolerance bound.
+    pub fn set_fast_math(&mut self, fast_math: bool) {
+        self.opt.fast_math = fast_math;
+    }
+
+    pub fn fast_math(&self) -> bool {
+        self.opt.fast_math
     }
 
     pub fn set_opt_config(&mut self, config: OptConfig) {
@@ -278,6 +309,7 @@ impl Coordinator {
             be,
             self.checks_enabled,
             self.opt.sharding,
+            self.opt.tier,
             self.metrics.clone(),
         ))
     }
@@ -558,6 +590,31 @@ mod tests {
         let b = c.compile_library("copy").unwrap();
         assert_eq!(a, b, "sharding must not salt compilation cache keys");
         assert_eq!(c.cache_stats(), (1, 1));
+    }
+
+    #[test]
+    fn tier_and_fast_math_knobs_survive_level_changes() {
+        let mut c = Coordinator::new();
+        c.set_exec_tier(ExecTier::Interpreted);
+        c.set_fast_math(true);
+        c.set_sharding(Sharding::Threads(2));
+        c.set_opt_level(OptLevel::O3);
+        assert_eq!(c.exec_tier(), ExecTier::Interpreted);
+        assert!(c.fast_math());
+        assert_eq!(c.sharding(), Sharding::Threads(2));
+        // The executor tier never salts the cache; fast-math always does.
+        let a = c.compile_library("copy").unwrap();
+        c.set_exec_tier(ExecTier::Specialized);
+        let b = c.compile_library("copy").unwrap();
+        assert_eq!(a, b, "exec tier must not salt compilation cache keys");
+        assert_eq!(c.cache_stats(), (1, 1));
+        c.set_fast_math(false);
+        let d = c.compile_library("copy").unwrap();
+        assert_ne!(a, d, "fast-math must salt compilation cache keys");
+        // Handles minted now carry the coordinator's current tier default
+        // (set to Specialized above).
+        let s = c.stencil_for(d, "vector").unwrap();
+        assert_eq!(s.exec_tier(), ExecTier::Specialized);
     }
 
     #[test]

@@ -45,6 +45,7 @@
 //! re-check rejects the call with a "re-bind" error instead of computing
 //! on a stale layout.
 
+use crate::backend::kernels::ExecTier;
 use crate::backend::program::{validate_args, validate_field};
 use crate::backend::shard::Sharding;
 use crate::backend::{Backend, RunConfig, StencilArgs};
@@ -66,6 +67,11 @@ pub struct Stencil {
     /// handle (overridable per invocation via
     /// [`InvocationBuilder::sharding`]).
     sharding: Sharding,
+    /// Default fused-path executor tier for invocations bound from this
+    /// handle (overridable per invocation via
+    /// [`InvocationBuilder::exec_tier`]). Like `sharding`, a pure
+    /// scheduling knob: both tiers are bitwise-identical by contract.
+    tier: ExecTier,
     metrics: SharedMetrics,
 }
 
@@ -75,9 +81,10 @@ impl Stencil {
         backend: Arc<dyn Backend>,
         checks_enabled: bool,
         sharding: Sharding,
+        tier: ExecTier,
         metrics: SharedMetrics,
     ) -> Stencil {
-        Stencil { ir, backend, checks_enabled, sharding, metrics }
+        Stencil { ir, backend, checks_enabled, sharding, tier, metrics }
     }
 
     /// The analyzed implementation IR (shared, never copied).
@@ -121,6 +128,20 @@ impl Stencil {
         self.sharding = sharding;
     }
 
+    /// This handle's default fused-path executor tier.
+    pub fn exec_tier(&self) -> ExecTier {
+        self.tier
+    }
+
+    /// Set the fused-path executor tier for invocations bound from this
+    /// handle afterwards. Purely a scheduling knob — every tier is
+    /// bitwise-identical by contract (numeric relaxation is the
+    /// coordinator's fast-math opt-in, not this switch), and backends
+    /// without a fused path ignore it.
+    pub fn set_exec_tier(&mut self, tier: ExecTier) {
+        self.tier = tier;
+    }
+
     /// Allocate a zeroed storage with exactly the halo this stencil's
     /// field requires for `domain` (the `gt4py.storage.zeros(backend=...)`
     /// analog).
@@ -138,6 +159,7 @@ impl Stencil {
             scalars: Vec::with_capacity(self.ir.scalars.len()),
             domain: None,
             sharding: None,
+            tier: None,
         }
     }
 
@@ -160,7 +182,7 @@ impl Stencil {
         let shard = self.backend.run_sharded(
             &self.ir,
             &mut StencilArgs { fields, scalars, domain },
-            &RunConfig { sharding: self.sharding },
+            &RunConfig { sharding: self.sharding, tier: self.tier },
         )?;
         let execute = t1.elapsed();
         self.metrics
@@ -179,6 +201,8 @@ pub struct InvocationBuilder<'s> {
     domain: Option<[usize; 3]>,
     /// Per-invocation sharding override (`None` = the handle's plan).
     sharding: Option<Sharding>,
+    /// Per-invocation executor-tier override (`None` = the handle's tier).
+    tier: Option<ExecTier>,
 }
 
 impl InvocationBuilder<'_> {
@@ -224,6 +248,14 @@ impl InvocationBuilder<'_> {
     /// bitwise identical whatever the plan.
     pub fn sharding(mut self, sharding: Sharding) -> Self {
         self.sharding = Some(sharding);
+        self
+    }
+
+    /// Override the fused-path executor tier for this invocation (the
+    /// handle's tier applies otherwise). Scheduling only — every tier is
+    /// bitwise identical by contract.
+    pub fn exec_tier(mut self, tier: ExecTier) -> Self {
+        self.tier = Some(tier);
         self
     }
 
@@ -299,6 +331,7 @@ impl InvocationBuilder<'_> {
             expected,
             scalars,
             sharding: self.sharding.unwrap_or(stencil.sharding),
+            tier: self.tier.unwrap_or(stencil.tier),
             bind_checks,
             first_reported: false,
         })
@@ -320,6 +353,8 @@ pub struct BoundInvocation {
     scalars: Vec<(String, f64)>,
     /// Resolved intra-call sharding plan for every run of this invocation.
     sharding: Sharding,
+    /// Resolved fused-path executor tier for every run of this invocation.
+    tier: ExecTier,
     /// Wall time of the bind-time full validation; reported as the first
     /// call's `RunStats::checks` so per-call accounting stays complete.
     bind_checks: Duration,
@@ -340,6 +375,17 @@ impl BoundInvocation {
     /// the plan never affects results, only scheduling).
     pub fn set_sharding(&mut self, sharding: Sharding) {
         self.sharding = sharding;
+    }
+
+    /// The fused-path executor tier this invocation runs with.
+    pub fn exec_tier(&self) -> ExecTier {
+        self.tier
+    }
+
+    /// Change the executor tier between calls (no re-validation needed —
+    /// the tier never affects results, only how the fused path executes).
+    pub fn set_exec_tier(&mut self, tier: ExecTier) {
+        self.tier = tier;
     }
 
     /// Field names in the order [`BoundInvocation::run`] expects.
@@ -417,7 +463,7 @@ impl BoundInvocation {
         let shard = self.stencil.backend.run_sharded(
             &self.stencil.ir,
             &mut StencilArgs { fields: &mut refs, scalars: &srefs, domain: self.domain },
-            &RunConfig { sharding: self.sharding },
+            &RunConfig { sharding: self.sharding, tier: self.tier },
         )?;
         let execute = t1.elapsed();
 
@@ -660,6 +706,43 @@ mod tests {
         inv.run(&mut [&mut phi, &mut out]).unwrap();
         // constant field: laplacian term zero, diffuse stays identity
         assert_eq!(out.get(1, 1, 0), 2.0);
+    }
+
+    #[test]
+    fn exec_tier_overrides_flow_to_invocations() {
+        let mut s = handle("vector");
+        assert_eq!(s.exec_tier(), ExecTier::Specialized, "specialized is the default");
+        s.set_exec_tier(ExecTier::Interpreted);
+        let domain = [4, 4, 2];
+        let mut phi = s.alloc_field("phi", domain).unwrap();
+        phi.fill(1.0);
+        let mut out = s.alloc_field("out", domain).unwrap();
+        // The builder override beats the handle default...
+        let mut inv = s
+            .bind()
+            .field("phi", &phi)
+            .field("out", &out)
+            .scalar("alpha", 0.1)
+            .domain(domain)
+            .exec_tier(ExecTier::Specialized)
+            .finish()
+            .unwrap();
+        assert_eq!(inv.exec_tier(), ExecTier::Specialized);
+        // ...and can be flipped between calls without re-binding.
+        inv.run(&mut [&mut phi, &mut out]).unwrap();
+        inv.set_exec_tier(ExecTier::Interpreted);
+        inv.run(&mut [&mut phi, &mut out]).unwrap();
+        assert_eq!(out.get(2, 2, 0), 1.0);
+        // Without an override the handle's tier applies.
+        let inv2 = s
+            .bind()
+            .field("phi", &phi)
+            .field("out", &out)
+            .scalar("alpha", 0.1)
+            .domain(domain)
+            .finish()
+            .unwrap();
+        assert_eq!(inv2.exec_tier(), ExecTier::Interpreted);
     }
 
     #[test]

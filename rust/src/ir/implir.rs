@@ -229,6 +229,15 @@ pub struct StencilIr {
     /// per-expression-node buffers. Semantics-neutral — backends without a
     /// fused path ignore it. Reflected in the fingerprint via the opt tag.
     pub fused: bool,
+    /// Opt-in numeric relaxation (`--fast-math`): backends with a
+    /// specialized tape path may contract `a * b ± c` into fused
+    /// multiply-adds and commute the addition. *Not* semantics-neutral —
+    /// results are tolerance-validated instead of bitwise — so, unlike
+    /// scheduling knobs, it participates in the opt tag and therefore the
+    /// fingerprint: exact and fast-math artifacts never share a cache
+    /// slot. Backends without an FMA-specialized path ignore it and stay
+    /// exact.
+    pub fast_math: bool,
 }
 
 impl StencilIr {

@@ -38,7 +38,17 @@
 //!   into flat SSA tapes ([`backend::cexpr::CTape`], with cross-stage CSE
 //!   via value numbering) and evaluates every output and demoted temporary
 //!   of a group in one loop nest per interval ([`backend::fused`]) — no
-//!   per-expression-node region buffers), `xla` (XlaBuilder codegen
+//!   per-expression-node region buffers. Each tape is additionally
+//!   lowered at compile time into a *kernel plan*
+//!   ([`backend::kernels`]): per-op monomorphized kernels with
+//!   pre-resolved strides and offsets in dense slot tables, per-op
+//!   bounds intersected into a guard-free interior rectangle evaluated
+//!   as cache-blocked j-tiles (guarded prologue/epilogue strips cover
+//!   the fringes), dispatched by the default `specialized` executor
+//!   tier ([`backend::kernels::ExecTier`]) — bitwise-identical to the
+//!   interpreted tape walk by contract, with an opt-in, separately
+//!   fingerprinted fast-math mode (FMA contraction) validated by
+//!   tolerance norms), `xla` (XlaBuilder codegen
 //!   JIT-compiled on PJRT; demoted temporaries emit no intermediate zero
 //!   boxes), and `pjrt-aot` (prebuilt JAX/**Pallas** HLO artifacts). All
 //!   backends execute through `&self` and are `Send + Sync`: program and
@@ -90,6 +100,7 @@ pub mod runtime;
 pub mod stdlib;
 pub mod storage;
 
+pub use backend::kernels::ExecTier;
 pub use backend::shard::Sharding;
 pub use coordinator::{BoundInvocation, Coordinator, Stencil};
 pub use dsl::span::{CResult, CompileError};

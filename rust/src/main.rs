@@ -22,6 +22,7 @@
 //! (The CLI is hand-rolled: the offline vendored crate set has no clap.)
 
 use anyhow::{anyhow, bail, Result};
+use gt4rs::backend::kernels::ExecTier;
 use gt4rs::backend::shard::Sharding;
 use gt4rs::backend::BACKEND_NAMES;
 use gt4rs::coordinator::{Coordinator, Stencil};
@@ -41,10 +42,11 @@ fn main() {
 }
 
 /// Presence-only flags (no value follows them on the command line).
-const BOOL_FLAGS: [&str; 2] = ["json", "no-checks"];
+const BOOL_FLAGS: [&str; 4] = ["json", "no-checks", "fast-math", "tapes"];
 
 /// Minimal flag parser: `--key value` pairs plus presence-only booleans
-/// (`--json`, `--no-checks`) after the subcommand.
+/// (`--json`, `--no-checks`, `--fast-math`, `--tapes`) after the
+/// subcommand.
 struct Flags {
     map: BTreeMap<String, String>,
     bools: BTreeSet<String>,
@@ -116,6 +118,15 @@ fn parse_sharding(flags: &Flags) -> Result<Sharding> {
     }
 }
 
+/// Fused-path executor tier: `--tier interpreted|specialized` (default
+/// specialized — the compiled kernel plans; both tiers are bitwise
+/// identical by contract).
+fn parse_tier(flags: &Flags) -> Result<ExecTier> {
+    let s = flags.get_or("tier", "specialized");
+    ExecTier::parse(s)
+        .ok_or_else(|| anyhow!("--tier must be `interpreted` or `specialized`, got `{s}`"))
+}
+
 fn parse_externals(s: Option<&str>) -> Result<BTreeMap<String, f64>> {
     let mut out = BTreeMap::new();
     if let Some(s) = s {
@@ -159,12 +170,16 @@ USAGE: repro <subcommand> [--flag value]... [--json] [--no-checks]
 SUBCOMMANDS
   inspect  --stencil NAME [--file F.gts] [--externals K=V,..]
            dump the implementation IR (stages, extents, fingerprint)
-  ir       --stencil NAME [--file F.gts] [--externals K=V,..]
-           dump the IR before and after each optimizer pass
+  ir       --stencil NAME [--file F.gts] [--externals K=V,..] [--tapes]
+           dump the IR before and after each optimizer pass; --tapes
+           instead dumps the compiled SSA tapes with their kernel plans
+           (per-op kernel class, regions, loop bounds, guard-free
+           interior rectangle)
   run      --stencil NAME [--backend B] [--domain IxJxK] [--iters N]
-           [--threads T] compile to a stencil handle, bind the arguments
-           once, run N times; prints checksum + per-call timing (--json
-           for machine-readable output)
+           [--threads T] [--tier interpreted|specialized] [--fast-math]
+           compile to a stencil handle, bind the arguments once, run N
+           times; prints checksum + per-call timing (--json for
+           machine-readable output)
   validate --stencil NAME [--domain IxJxK] [--backends a,b,..]
            cross-check every backend against `debug` (unavailable
            backends are skipped)
@@ -193,6 +208,14 @@ environment variable supplies the plan when --threads is absent. Every
 plan is bitwise identical to `off`; timing output reports the thread
 count *actually used*.
 
+--tier selects the fused-path executor at --opt-level 3: `specialized`
+(default) pre-compiles each tape into a kernel plan — dense stride
+tables, guard-hoisted interior spans, cache-blocked j-tiles — while
+`interpreted` walks the tape per strip. Both tiers are bitwise
+identical by contract. --fast-math opts into FMA contraction in the
+specialized executor; it changes results within a small tolerance, so
+it salts the compilation cache and is never substituted silently.
+
 Backends: {}  (library stencils: {})",
         BACKEND_NAMES.join(", "),
         stdlib::names().join(", ")
@@ -219,6 +242,8 @@ fn load_source(flags: &Flags) -> Result<(String, String)> {
 fn load_fp(coord: &mut Coordinator, flags: &Flags) -> Result<u64> {
     coord.set_opt_level(parse_opt_level(flags)?);
     coord.set_sharding(parse_sharding(flags)?);
+    coord.set_exec_tier(parse_tier(flags)?);
+    coord.set_fast_math(flags.flag("fast-math"));
     coord.checks_enabled = !flags.flag("no-checks");
     let (name, src) = load_source(flags)?;
     let externals = parse_externals(flags.get("externals"))?;
@@ -239,6 +264,26 @@ fn cmd_ir(flags: &Flags) -> Result<()> {
     let level = parse_opt_level(flags)?;
     let mut ir = gt4rs::analysis::compile_source(&src, &name, &externals)
         .map_err(|e| anyhow!("{e}"))?;
+    if flags.flag("tapes") {
+        // Dump the compiled SSA tapes and their kernel plans instead of
+        // the pass-by-pass IR: run the full pass list, then lower the way
+        // the vector backend's fused path would.
+        let config = OptConfig::level(level).with_fast_math(flags.flag("fast-math"));
+        PassManager::new(&config).run(&mut ir);
+        let domain = parse_domain(flags.get_or("domain", "16x16x8"))?;
+        let program =
+            gt4rs::backend::program::Program::compile(&ir).map_err(|e| anyhow!("{e}"))?;
+        let fused = gt4rs::backend::fused::FusedProgram::compile(&program, ir.fast_math);
+        println!(
+            "=== compiled tapes (opt-level {level}{}, domain {}x{}x{}) ===",
+            if ir.fast_math { ", fast-math" } else { "" },
+            domain[0],
+            domain[1],
+            domain[2]
+        );
+        print!("{}", fused.dump_tapes(&program, domain));
+        return Ok(());
+    }
     println!("=== pre-opt (pipeline output) ===");
     print!("{}", ir.dump());
     let pm = PassManager::new(&OptConfig::level(level));
@@ -341,6 +386,7 @@ fn cmd_run(flags: &Flags) -> Result<()> {
         println!(
             "{{\"stencil\":\"{}\",\"backend\":\"{backend}\",\"domain\":[{},{},{}],\
              \"opt_level\":\"{}\",\"checks_enabled\":{},\"sharding\":\"{}\",\
+             \"tier\":\"{}\",\"fast_math\":{},\
              \"threads_used\":{threads_used},\"iters\":[{}],\"fields\":[{}]}}",
             stencil.name(),
             domain[0],
@@ -349,6 +395,8 @@ fn cmd_run(flags: &Flags) -> Result<()> {
             parse_opt_level(flags)?,
             !flags.flag("no-checks"),
             parse_sharding(flags)?,
+            parse_tier(flags)?,
+            flags.flag("fast-math"),
             iter_rows.join(","),
             field_rows.join(",")
         );
@@ -440,6 +488,8 @@ fn cmd_bench(flags: &Flags) -> Result<()> {
     let mut coord = Coordinator::new();
     coord.set_opt_level(parse_opt_level(flags)?);
     coord.set_sharding(parse_sharding(flags)?);
+    coord.set_exec_tier(parse_tier(flags)?);
+    coord.set_fast_math(flags.flag("fast-math"));
     coord.checks_enabled = !flags.flag("no-checks");
     let fp = coord.compile_library(stencil_name)?;
     let mut rows: Vec<String> = Vec::new();

@@ -36,6 +36,7 @@ pub mod demote;
 pub mod foldcse;
 pub mod fusion;
 
+use crate::backend::kernels::ExecTier;
 use crate::backend::shard::Sharding;
 use crate::ir::implir::{Stage, StencilIr};
 
@@ -89,6 +90,13 @@ pub struct OptConfig {
     /// Not a pass: requests the fused loop-nest execution strategy from
     /// backends that support it (stamped on the IR as [`StencilIr::fused`]).
     pub fused: bool,
+    /// Not a pass either, but — like `fused` — part of the canonical
+    /// form: opt-in numeric relaxation (FMA contraction + limited
+    /// reassociation) for the specialized tape executor, stamped on the IR
+    /// as [`StencilIr::fast_math`]. It changes results (within a
+    /// tolerance bound, see `backend::kernels`), so exact and fast-math
+    /// artifacts must never share a cache slot.
+    pub fast_math: bool,
     /// Not a pass either, and — unlike `fused` — **not part of the
     /// canonical form or any fingerprint**: the intra-call domain-sharding
     /// plan is a pure scheduling parameter (every plan is bitwise-equal to
@@ -97,6 +105,14 @@ pub struct OptConfig {
     /// it into every [`crate::coordinator::Stencil`] handle it mints; the
     /// per-call override lives on the invocation builder.
     pub sharding: Sharding,
+    /// Also a pure scheduling parameter outside every fingerprint: which
+    /// executor the vector backend's fused path uses — the interpreted
+    /// tape walker or the specialized kernel-plan executor
+    /// ([`crate::backend::kernels::ExecTier`]). Every tier is
+    /// bitwise-identical by contract (fast-math relaxation is the
+    /// `fast_math` toggle above, *not* this one), so both tiers share one
+    /// cached artifact, exactly like sharding plans.
+    pub tier: ExecTier,
 }
 
 impl Default for OptConfig {
@@ -114,7 +130,9 @@ impl OptConfig {
             fuse: false,
             demote: false,
             fused: false,
+            fast_math: false,
             sharding: Sharding::Off,
+            tier: ExecTier::default(),
         }
     }
 
@@ -152,6 +170,20 @@ impl OptConfig {
         self
     }
 
+    /// The same pass configuration with a different fused-path executor
+    /// (never part of fingerprints — see [`OptConfig::tier`]).
+    pub fn with_tier(mut self, tier: ExecTier) -> OptConfig {
+        self.tier = tier;
+        self
+    }
+
+    /// The same pass configuration with fast-math toggled (which *does*
+    /// change fingerprints — see [`OptConfig::fast_math`]).
+    pub fn with_fast_math(mut self, fast_math: bool) -> OptConfig {
+        self.fast_math = fast_math;
+        self
+    }
+
     /// Canonical string of the enabled passes, mixed into IR fingerprints.
     /// Empty exactly when no pass is enabled, so opt-level 0 keeps the
     /// pipeline's pre-opt fingerprint unchanged. The `fused` execution
@@ -173,6 +205,9 @@ impl OptConfig {
         }
         if self.fused {
             names.push("fused");
+        }
+        if self.fast_math {
+            names.push("fast-math");
         }
         names.join(",")
     }
@@ -238,6 +273,7 @@ impl PassManager {
     fn finish(&self, ir: &mut StencilIr) {
         refresh_reads(ir);
         ir.fused = self.config.fused;
+        ir.fast_math = self.config.fast_math;
         ir.fingerprint = crate::analysis::fingerprint_ir_with(ir, &self.config.canon());
     }
 }
@@ -305,6 +341,25 @@ mod tests {
         let mut ir_b = compile_source(SRC, "s", &BTreeMap::new()).unwrap();
         PassManager::new(&sharded).run(&mut ir_b);
         assert_eq!(ir_a.fingerprint, ir_b.fingerprint);
+    }
+
+    #[test]
+    fn exec_tier_never_reaches_fingerprints_but_fast_math_does() {
+        use crate::backend::kernels::ExecTier;
+        let base = OptConfig::level(OptLevel::O3);
+        // The executor choice is a scheduling parameter, like sharding.
+        let interp = base.with_tier(ExecTier::Interpreted);
+        assert_eq!(base.canon(), interp.canon());
+        assert_eq!(base.salt(), interp.salt());
+        // fast-math changes numerics: distinct canon, salt, fingerprint.
+        let fm = base.with_fast_math(true);
+        assert_eq!(fm.canon(), "fold-cse,dce,fuse,demote,fused,fast-math");
+        assert_ne!(base.salt(), fm.salt());
+        let exact = ir_at(base);
+        let relaxed = ir_at(fm);
+        assert!(!exact.fast_math);
+        assert!(relaxed.fast_math);
+        assert_ne!(exact.fingerprint, relaxed.fingerprint);
     }
 
     #[test]

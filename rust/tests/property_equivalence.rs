@@ -20,13 +20,18 @@
 //!   `Threads(n)` plan is bitwise identical to `Off` at every opt level
 //!   (swept explicitly below, and the whole suite re-runs under any plan
 //!   named by `REPRO_THREADS` — the hosted CI thread-matrix exports 1/2/8
-//!   on real multi-core runners).
+//!   on real multi-core runners);
+//! * the O3 **specialized kernel-plan executor** (`ExecTier::Specialized`,
+//!   the default) is bitwise identical to the interpreted tape walk and to
+//!   the debug reference under every sharding plan; fast-math relaxation
+//!   is opt-in, separately fingerprinted, tolerance-bounded, and never
+//!   engages outside the specialized tier.
 
 use gt4rs::coordinator::Coordinator;
 use gt4rs::dsl::parser::parse_module;
 use gt4rs::opt::OptLevel;
 use gt4rs::storage::Storage;
-use gt4rs::Sharding;
+use gt4rs::{ExecTier, Sharding};
 
 const LEVELS: [OptLevel; 4] =
     [OptLevel::O0, OptLevel::O1, OptLevel::O2, OptLevel::O3];
@@ -418,6 +423,220 @@ fn run_vector_with_sharding(
     inv.run(&mut refs)
         .unwrap_or_else(|e| panic!("seed {seed} sharding {sharding}: {e:#}"));
     fields
+}
+
+/// Like [`run_vector_with_sharding`], additionally overriding the fused
+/// path's executor tier per invocation.
+fn run_vector_with_tier(
+    coord: &mut Coordinator,
+    fp: u64,
+    domain: [usize; 3],
+    seed: u64,
+    scalars: &[(&str, f64)],
+    sharding: Sharding,
+    tier: ExecTier,
+) -> Vec<(String, Storage)> {
+    coord.set_sharding(Sharding::Off);
+    let handle = coord
+        .stencil_for(fp, "vector")
+        .unwrap_or_else(|e| panic!("seed {seed}: {e:#}"));
+    let mut rng = Rng(seed ^ 0xabcdef);
+    let mut fields: Vec<(String, Storage)> = handle
+        .ir()
+        .fields
+        .iter()
+        .map(|f| {
+            let mut s = handle.alloc_field(&f.name, domain).unwrap();
+            let [ni, nj, nk] = domain;
+            let h = s.info.halo;
+            for i in -(h[0].0 as i64)..(ni + h[0].1) as i64 {
+                for j in -(h[1].0 as i64)..(nj + h[1].1) as i64 {
+                    for k in -(h[2].0 as i64)..(nk + h[2].1) as i64 {
+                        s.set(i, j, k, rng.f64());
+                    }
+                }
+            }
+            (f.name.clone(), s)
+        })
+        .collect();
+    let mut inv = handle
+        .bind()
+        .domain(domain)
+        .fields(&fields)
+        .scalars(scalars)
+        .sharding(sharding)
+        .exec_tier(tier)
+        .finish()
+        .unwrap();
+    let mut refs: Vec<&mut Storage> = fields.iter_mut().map(|(_, s)| s).collect();
+    inv.run(&mut refs)
+        .unwrap_or_else(|e| panic!("seed {seed} {sharding} {tier}: {e:#}"));
+    fields
+}
+
+#[test]
+fn exec_tier_sweep_is_bitwise_identical_across_sharding_plans() {
+    // The specialization honesty gate: at O3 the compiled kernel plans
+    // (guard-hoisted interior blocks, cache-blocked j-tiles, fringe
+    // strips) must be bitwise identical to the interpreted tape walk and
+    // to the debug reference — for random PARALLEL programs and random
+    // ring-carry sequential sweeps (the order-sensitive guarded-only
+    // path), under serial and sharded schedules alike.
+    let scalars = [("s1", 0.4), ("s2", -0.7)];
+    let mut cases: Vec<(String, &str, [usize; 3], Vec<(&str, f64)>)> = Vec::new();
+    for seed in 0..8u64 {
+        cases.push((gen_stencil(seed), "prop", [11, 6, 4], scalars.to_vec()));
+    }
+    for seed in 0..8u64 {
+        let mut rng = Rng(seed.wrapping_mul(9173).wrapping_add(7));
+        let alpha = 0.2 + 0.6 * (rng.f64() + 0.5);
+        let beta = rng.f64();
+        let horizontal = seed % 2 == 0;
+        let (policy, first, rest, dk) = if seed % 3 == 0 {
+            ("BACKWARD", "interval(-1, None)", "interval(0, -1)", 1)
+        } else {
+            ("FORWARD", "interval(0, 1)", "interval(1, None)", -1)
+        };
+        let consumer = if horizontal {
+            format!("u = t[1,0,{dk}] + t[-1,0,{dk}]; x = u * 0.25;")
+        } else {
+            format!("x = t - t[0,0,{dk}] * {beta:.3};")
+        };
+        let consumer_first = if horizontal { "u = t; x = u;" } else { "x = t;" };
+        let src = format!(
+            "stencil rprop(a: Field<f64>, x: Field<f64>) {{\n\
+               with computation({policy}) {{\n\
+                 {first} {{ t = a * {beta:.3}; {consumer_first} }}\n\
+                 {rest} {{ t = a + t[0,0,{dk}] * {alpha:.3}; {consumer} }}\n\
+               }}\n\
+             }}"
+        );
+        cases.push((src, "rprop", [9, 5, 7], vec![]));
+    }
+    for (src, name, domain, scalars) in &cases {
+        let mut coord = Coordinator::with_opt_level(OptLevel::O3);
+        let fp = coord
+            .compile_source(src, name, &Default::default())
+            .unwrap_or_else(|e| panic!("{name}: {e:#}\n{src}"));
+        let reference = run_backend(&mut coord, fp, "debug", *domain, 3, scalars);
+        for sharding in [Sharding::Off, Sharding::Threads(2), Sharding::Threads(3)] {
+            for tier in [ExecTier::Interpreted, ExecTier::Specialized] {
+                let got =
+                    run_vector_with_tier(&mut coord, fp, *domain, 3, scalars, sharding, tier);
+                assert_fields_match(
+                    &reference,
+                    &got,
+                    0.0,
+                    &format!("{name} O3 {sharding} {tier}\n{src}\n"),
+                );
+            }
+        }
+    }
+}
+
+/// Max |value| over the compute domain — scales the fast-math tolerance.
+fn max_abs(s: &Storage) -> f64 {
+    let [ni, nj, nk] = s.info.shape;
+    let mut m = 0.0f64;
+    for i in 0..ni as i64 {
+        for j in 0..nj as i64 {
+            for k in 0..nk as i64 {
+                m = m.max(s.get(i, j, k).abs());
+            }
+        }
+    }
+    m
+}
+
+#[test]
+fn fast_math_is_tolerance_bounded_opt_in_with_distinct_fingerprints() {
+    // The relaxed-numerics contract: fast-math (FMA contraction in the
+    // specialized executor) is opt-in, salts every cache key, engages
+    // *only* in the specialized kernel plans, and stays within a stated
+    // bound — max |Δ| per field <= 1e-12 * (1 + max|reference|), a
+    // generous multiple of the few-ulp error one contraction per value
+    // can introduce on these workloads.
+    let cases: [(&str, [usize; 3], &[(&str, f64)]); 2] = [
+        ("hdiff", [12, 10, 6], &[]),
+        ("vadv", [8, 8, 12], &[("dtdz", 0.3)]),
+    ];
+    for (name, domain, scalars) in cases {
+        let mut exact = Coordinator::with_opt_level(OptLevel::O3);
+        let fp_exact = exact.compile_library(name).unwrap();
+        let mut relaxed = Coordinator::with_opt_level(OptLevel::O3);
+        relaxed.set_fast_math(true);
+        let fp_fm = relaxed.compile_library(name).unwrap();
+        assert_ne!(fp_exact, fp_fm, "{name}: fast-math must salt the cache key");
+        assert_ne!(
+            exact.ir(fp_exact).unwrap().fingerprint,
+            relaxed.ir(fp_fm).unwrap().fingerprint,
+            "{name}: fast-math must change the IR fingerprint"
+        );
+
+        let reference = run_vector_with_tier(
+            &mut exact,
+            fp_exact,
+            domain,
+            11,
+            scalars,
+            Sharding::Off,
+            ExecTier::Specialized,
+        );
+        // The interpreted tier walks the (unchanged) tape even under a
+        // fast-math artifact: contraction lives only in the kernel plans,
+        // so this leg stays bitwise exact — relaxation is never silently
+        // substituted outside the specialized executor.
+        let fm_interp = run_vector_with_tier(
+            &mut relaxed,
+            fp_fm,
+            domain,
+            11,
+            scalars,
+            Sharding::Off,
+            ExecTier::Interpreted,
+        );
+        assert_fields_match(
+            &reference,
+            &fm_interp,
+            0.0,
+            &format!("{name} fast-math interpreted tier"),
+        );
+        // The specialized fast-math leg may contract: tolerance-bounded,
+        // and deterministic under sharding (contraction is uniform across
+        // the domain, so slab boundaries cannot change which ops fuse).
+        let fm_spec = run_vector_with_tier(
+            &mut relaxed,
+            fp_fm,
+            domain,
+            11,
+            scalars,
+            Sharding::Off,
+            ExecTier::Specialized,
+        );
+        for ((n, r), (_, v)) in reference.iter().zip(&fm_spec) {
+            let tol = 1e-12 * (1.0 + max_abs(r));
+            let d = r.max_abs_diff(v);
+            assert!(
+                d <= tol,
+                "{name} fast-math specialized field `{n}`: |Δ| = {d:e} exceeds {tol:e}"
+            );
+        }
+        let fm_sharded = run_vector_with_tier(
+            &mut relaxed,
+            fp_fm,
+            domain,
+            11,
+            scalars,
+            Sharding::Threads(3),
+            ExecTier::Specialized,
+        );
+        assert_fields_match(
+            &fm_spec,
+            &fm_sharded,
+            0.0,
+            &format!("{name} fast-math specialized, sharded"),
+        );
+    }
 }
 
 #[test]
