@@ -90,6 +90,45 @@ if [[ "${1:-}" != "quick" ]]; then
         grep -q '"speedup_vs_interpreted"' /tmp/gt4rs_kernels.json
         echo "kernels bench --json: python3 missing, structural grep passed"
     fi
+
+    # The A8 serve bench (tiny mode) gates on its wire-vs-in-process
+    # bitwise check before timing anything; its JSON artifact must parse
+    # under the same contract.
+    step cargo bench --bench serve -- --tiny --json /tmp/gt4rs_serve.json
+    echo
+    echo "=== BENCH_serve.json parse smoke ==="
+    if command -v python3 >/dev/null 2>&1; then
+        python3 -m json.tool /tmp/gt4rs_serve.json >/dev/null
+        echo "serve bench --json: parseable JSON"
+    else
+        grep -q '"requests_per_sec"' /tmp/gt4rs_serve.json
+        echo "serve bench --json: python3 missing, structural grep passed"
+    fi
+
+    # serve smoke: daemon on an ephemeral port, one bind/run/metrics/
+    # shutdown round-trip through `repro client`, clean exit.
+    echo
+    echo "=== repro serve smoke ==="
+    ./target/release/repro serve --addr 127.0.0.1:0 > /tmp/gt4rs_serve.log 2>&1 &
+    SERVE_PID=$!
+    for _ in $(seq 1 100); do
+        grep -q '^listening on ' /tmp/gt4rs_serve.log 2>/dev/null && break
+        sleep 0.05
+    done
+    ADDR=$(sed -n 's/^listening on //p' /tmp/gt4rs_serve.log | head -n1)
+    test -n "$ADDR"
+    BIND=$(./target/release/repro client --addr "$ADDR" \
+        --request '{"op":"bind","stencil":"hdiff","domain":[16,16,8]}')
+    echo "$BIND" | grep -q '"ok":true'
+    LEASE=$(echo "$BIND" | sed -n 's/.*"lease":\([0-9]*\).*/\1/p')
+    ./target/release/repro client --addr "$ADDR" \
+        --request "{\"op\":\"run\",\"lease\":$LEASE}" | grep -q '"ok":true'
+    ./target/release/repro client --addr "$ADDR" \
+        --request '{"op":"metrics"}' | grep -q 'serve_requests_total'
+    ./target/release/repro client --addr "$ADDR" \
+        --request '{"op":"shutdown"}' | grep -q '"stopping":true'
+    wait "$SERVE_PID"
+    echo "repro serve smoke: bind/run/metrics/shutdown OK"
 fi
 
 step cargo test -q

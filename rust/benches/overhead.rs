@@ -5,7 +5,7 @@
 //! storage arguments").
 //!
 //! Two configurations per (domain, backend) cell:
-//! * `per-call` — the deprecated pre-handle path: every call pays the full
+//! * `per-call` — re-bind on every call, so each run pays the full
 //!   layout/halo/dtype validation (the paper's solid line);
 //! * `bound` — the stencil handle API: validation happened once at bind
 //!   time, each call only re-checks shapes (the dashed line *without*
@@ -21,7 +21,7 @@ use harness::*;
 
 fn main() {
     println!("# FIG3-OVH run-time checks overhead (solid vs dashed, small domains)");
-    println!("# `per-call checks` = full validation on every call (legacy path);");
+    println!("# `per-call checks` = full validation on every call (re-bind per call);");
     println!("# `bound checks`    = the BoundInvocation shape re-check. The paper's");
     println!("# overhead is ~1 ms because its checks run in the Python interpreter;");
     println!("# ours are compiled — the *shape* to verify is that the cost is");
@@ -52,18 +52,20 @@ fn main() {
             fill_storage(&mut in_phi, 1.0);
             coeff.fill(0.025);
 
-            // Legacy per-call path: full validation every call.
-            #[allow(deprecated)]
-            {
-                bench(50, || {
-                    let mut refs: Vec<(&str, &mut gt4rs::storage::Storage)> = vec![
-                        ("in_phi", &mut in_phi),
-                        ("coeff", &mut coeff),
-                        ("out_phi", &mut out),
-                    ];
-                    coord.run(fp, be, &mut refs, &[], domain).unwrap();
-                });
-            }
+            // Per-call path: a fresh bind before every run, so each call
+            // pays the full validation — the cost profile of the old
+            // slice-based entry points, expressed through the handle API.
+            bench(50, || {
+                let mut call = stencil
+                    .bind()
+                    .field("in_phi", &in_phi)
+                    .field("coeff", &coeff)
+                    .field("out_phi", &out)
+                    .domain(domain)
+                    .finish()
+                    .unwrap();
+                call.run(&mut [&mut in_phi, &mut coeff, &mut out]).unwrap();
+            });
             let legacy = coord.metrics.get("hdiff", be).unwrap();
 
             // Handle path: bind once, run many (fresh coordinator so the

@@ -1,0 +1,242 @@
+//! A8: `repro serve` load bench — requests/sec through the daemon for
+//! 1/2/4/8 concurrent clients hammering one small-domain stencil (the
+//! configuration where the coalescer folds same-fingerprint runs into
+//! shared dispatch windows).
+//!
+//! Before any timing, the wire path is checked **bitwise** against
+//! serial in-process execution at O0 and O2 — a throughput number for a
+//! service that changed the answer would be worthless (same honesty gate
+//! discipline as the scaling/ablation benches).
+//!
+//!     cargo bench --bench serve [-- --tiny] [-- --json PATH]
+//!
+//! `--tiny` shrinks the request count for CI smoke runs; `--json PATH`
+//! writes every measured row as a JSON array, the `BENCH_serve.json` CI
+//! artifact.
+
+#[path = "harness.rs"]
+#[allow(dead_code)] // only `fmt_duration` is used here
+mod harness;
+
+use gt4rs::jsonw::{self, Value};
+use gt4rs::serve::protocol::hex64;
+use gt4rs::serve::{ServeConfig, Server};
+use gt4rs::storage::{synthetic_fill, Storage};
+use gt4rs::{Coordinator, ExecOptions, OptLevel};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+const DOMAIN: [usize; 3] = [16, 16, 8];
+const DOMAIN_JSON: &str = "[16,16,8]";
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect to serve daemon");
+        let writer = stream.try_clone().unwrap();
+        Client { reader: BufReader::new(stream), writer }
+    }
+
+    fn request(&mut self, line: &str) -> Value {
+        self.writer.write_all(line.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+        self.writer.flush().unwrap();
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp).unwrap();
+        jsonw::parse(resp.trim()).unwrap_or_else(|e| panic!("bad response `{resp}`: {e}"))
+    }
+}
+
+fn ok(v: &Value) -> bool {
+    v.get("ok").and_then(Value::as_bool) == Some(true)
+}
+
+struct Row {
+    clients: usize,
+    requests: usize,
+    wall_ns: u128,
+    requests_per_sec: f64,
+    coalesced_runs: u64,
+    backpressure: u64,
+}
+
+impl Row {
+    fn json(&self) -> String {
+        format!(
+            "{{\"bench\":\"A8\",\"domain\":\"16x16x8\",\"clients\":{},\"requests\":{},\
+             \"wall_ns\":{},\"requests_per_sec\":{:.1},\"coalesced_runs\":{},\
+             \"backpressure\":{}}}",
+            self.clients,
+            self.requests,
+            self.wall_ns,
+            self.requests_per_sec,
+            self.coalesced_runs,
+            self.backpressure
+        )
+    }
+}
+
+/// Serial in-process digests: same library stencil, same deterministic
+/// fill and default scalars the daemon uses for `bind`.
+fn reference_digests(level: OptLevel) -> Vec<(String, String, String)> {
+    let mut coord = Coordinator::new();
+    coord.set_exec_options(ExecOptions::new().with_opt_level(level));
+    let stencil = coord.stencil_library("hdiff", "vector").unwrap();
+    let mut fields: Vec<(String, Storage)> = Vec::new();
+    for (idx, f) in stencil.ir().fields.iter().enumerate() {
+        let mut s = stencil.alloc_field(&f.name, DOMAIN).unwrap();
+        synthetic_fill(&mut s, idx as f64);
+        fields.push((f.name.clone(), s));
+    }
+    let scalars: Vec<(String, f64)> =
+        stencil.ir().scalars.iter().map(|s| (s.name.clone(), 0.1)).collect();
+    let mut inv = stencil
+        .bind()
+        .domain(DOMAIN)
+        .fields(&fields)
+        .scalars(&scalars)
+        .finish()
+        .unwrap();
+    let mut refs: Vec<&mut Storage> = fields.iter_mut().map(|(_, s)| s).collect();
+    inv.run(&mut refs).unwrap();
+    fields
+        .iter()
+        .map(|(n, s)| {
+            (n.clone(), hex64(s.domain_sum().to_bits()), hex64(s.domain_hash()))
+        })
+        .collect()
+}
+
+/// One wire round-trip (bind + run) at `level`, returning its digests.
+fn wire_digests(addr: SocketAddr, level: OptLevel) -> Vec<(String, String, String)> {
+    let mut client = Client::connect(addr);
+    let bind = client.request(&format!(
+        r#"{{"op":"bind","tenant":"gate","stencil":"hdiff","domain":{DOMAIN_JSON},"options":{{"opt_level":"{level}"}}}}"#
+    ));
+    assert!(ok(&bind), "{bind:?}");
+    let lease = bind.get("lease").unwrap().as_u64().unwrap();
+    let run = client.request(&format!(r#"{{"op":"run","tenant":"gate","lease":{lease}}}"#));
+    assert!(ok(&run), "{run:?}");
+    run.get("fields")
+        .and_then(Value::as_arr)
+        .unwrap()
+        .iter()
+        .map(|f| {
+            (
+                f.get("name").unwrap().as_str().unwrap().to_string(),
+                f.get("sum_bits").unwrap().as_str().unwrap().to_string(),
+                f.get("hash").unwrap().as_str().unwrap().to_string(),
+            )
+        })
+        .collect()
+}
+
+/// A counter value from the `/metrics` text body (0 if absent).
+fn metric(text: &str, name: &str) -> u64 {
+    text.lines()
+        .find_map(|l| l.strip_prefix(name).and_then(|rest| rest.trim().parse().ok()))
+        .unwrap_or(0)
+}
+
+fn metrics_text(addr: SocketAddr) -> String {
+    let mut client = Client::connect(addr);
+    let m = client.request(r#"{"op":"metrics"}"#);
+    m.get("text").unwrap().as_str().unwrap().to_string()
+}
+
+/// Bind one lease per client up front (off the clock), then fire
+/// `requests_per_client` runs from each client concurrently.
+fn measure(addr: SocketAddr, clients: usize, requests_per_client: usize) -> (Duration, usize) {
+    let leases: Vec<u64> = (0..clients)
+        .map(|_| {
+            let mut c = Client::connect(addr);
+            let bind = c.request(&format!(
+                r#"{{"op":"bind","tenant":"bench","stencil":"hdiff","domain":{DOMAIN_JSON}}}"#
+            ));
+            assert!(ok(&bind), "{bind:?}");
+            bind.get("lease").unwrap().as_u64().unwrap()
+        })
+        .collect();
+    let t0 = Instant::now();
+    let handles: Vec<_> = leases
+        .into_iter()
+        .map(|lease| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr);
+                for _ in 0..requests_per_client {
+                    let run = c.request(&format!(
+                        r#"{{"op":"run","tenant":"bench","lease":{lease}}}"#
+                    ));
+                    assert!(ok(&run), "{run:?}");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    (t0.elapsed(), clients * requests_per_client)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let tiny = args.iter().any(|a| a == "--tiny");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|p| args.get(p + 1))
+        .cloned();
+    let requests_per_client = if tiny { 10 } else { 100 };
+
+    let mut server = Server::spawn(ServeConfig::default()).expect("spawn serve daemon");
+    let addr = server.addr();
+
+    // Honesty gate before any timing: wire == serial in-process, bitwise.
+    for level in [OptLevel::O0, OptLevel::O2] {
+        assert_eq!(
+            wire_digests(addr, level),
+            reference_digests(level),
+            "wire run diverged from serial in-process at O{level}"
+        );
+    }
+    println!("# A8: serve throughput — hdiff 16x16x8, bitwise gate passed (O0, O2)");
+    println!("{:<8} {:>10} {:>12} {:>14} {:>12} {:>10}", "clients", "requests", "wall", "req/s", "coalesced", "shed");
+
+    let mut rows: Vec<Row> = Vec::new();
+    for clients in [1usize, 2, 4, 8] {
+        let before = metrics_text(addr);
+        let (wall, requests) = measure(addr, clients, requests_per_client);
+        let after = metrics_text(addr);
+        let coalesced = metric(&after, "serve_coalesced_runs_total")
+            - metric(&before, "serve_coalesced_runs_total");
+        let backpressure = metric(&after, "serve_backpressure_total")
+            - metric(&before, "serve_backpressure_total");
+        let rps = requests as f64 / wall.as_secs_f64().max(1e-9);
+        println!(
+            "{clients:<8} {requests:>10} {:>12} {rps:>14.1} {coalesced:>12} {backpressure:>10}",
+            harness::fmt_duration(wall)
+        );
+        rows.push(Row {
+            clients,
+            requests,
+            wall_ns: wall.as_nanos(),
+            requests_per_sec: rps,
+            coalesced_runs: coalesced,
+            backpressure,
+        });
+    }
+
+    server.shutdown();
+
+    if let Some(path) = json_path {
+        let body: Vec<String> = rows.iter().map(Row::json).collect();
+        let doc = format!("[\n  {}\n]\n", body.join(",\n  "));
+        std::fs::write(&path, doc).expect("write serve JSON artifact");
+        println!("# wrote {} rows to {path}", rows.len());
+    }
+}

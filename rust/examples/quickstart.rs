@@ -12,7 +12,7 @@
 use anyhow::Result;
 use gt4rs::coordinator::Coordinator;
 use gt4rs::storage::Storage;
-use gt4rs::{ExecTier, OptLevel, Sharding};
+use gt4rs::{ExecOptions, ExecTier, OptLevel, Sharding};
 
 const SRC: &str = "
     # A smoothing stencil: out = (1-w)*phi + w/4 * neighbor-average
@@ -159,8 +159,10 @@ fn main() -> Result<()> {
     //    tier is a per-invocation scheduling knob exactly like sharding.
     //    (Opt-in fast-math relaxation is deliberately *not* a scheduling
     //    knob: it salts the fingerprint and is only tolerance-equal —
-    //    see `repro run --fast-math`.)
-    coord.set_opt_level(OptLevel::O3);
+    //    see `repro run --fast-math`.) All four execution knobs travel as
+    //    one `ExecOptions` value — the same surface the CLI flags and the
+    //    serve wire protocol parse into.
+    coord.set_exec_options(ExecOptions::new().with_opt_level(OptLevel::O3));
     let fused = coord.stencil(SRC, "smooth", "vector", &Default::default())?;
     let mut fphi = fused.alloc_field("phi", domain)?;
     let mut fout = fused.alloc_field("out", domain)?;
@@ -210,6 +212,77 @@ fn main() -> Result<()> {
             println!("xla backend unavailable (no PJRT runtime) — skipped");
         }
         Err(e) => return Err(e),
+    }
+
+    // 10. Stencils as a service: spawn the `repro serve` daemon
+    //     in-process, round-trip the same stencil over its
+    //     newline-delimited JSON protocol, and check the wire digest
+    //     against the in-process result — bit-exact, because the daemon
+    //     allocates with the same deterministic `synthetic_fill` and the
+    //     options crossing the wire are the same `ExecOptions` surface.
+    //     (Stand-alone: `repro serve --addr 127.0.0.1:7070`, then
+    //     `repro client --addr 127.0.0.1:7070 --request '{"op":...}'`.)
+    {
+        use gt4rs::jsonw::{self, Obj, Value};
+        use gt4rs::serve::{ServeConfig, Server};
+        use std::io::{BufRead, BufReader, Write};
+
+        let mut server = Server::spawn(ServeConfig::default())?;
+        let stream = std::net::TcpStream::connect(server.addr())?;
+        let mut writer = stream.try_clone()?;
+        let mut reader = BufReader::new(stream);
+        let mut round_trip = |line: String| -> Result<Value> {
+            writer.write_all(line.as_bytes())?;
+            writer.write_all(b"\n")?;
+            writer.flush()?;
+            let mut resp = String::new();
+            reader.read_line(&mut resp)?;
+            jsonw::parse(resp.trim()).map_err(|e| anyhow::anyhow!("bad response: {e}"))
+        };
+
+        let bind = round_trip(
+            Obj::new()
+                .str("op", "bind")
+                .str("stencil", "smooth")
+                .str("src", SRC)
+                .raw("domain", "[16,16,4]")
+                .raw("scalars", "{\"w\":0.5}")
+                .raw("options", "{\"opt_level\":\"2\"}")
+                .finish(),
+        )?;
+        assert_eq!(bind.get("ok").and_then(Value::as_bool), Some(true));
+        let lease = bind.get("lease").and_then(Value::as_u64).unwrap();
+        let run = round_trip(format!("{{\"op\":\"run\",\"lease\":{lease}}}"))?;
+        assert_eq!(run.get("ok").and_then(Value::as_bool), Some(true));
+        let wire_hash = run
+            .get("fields")
+            .and_then(Value::as_arr)
+            .and_then(|fields| {
+                fields.iter().find(|f| {
+                    f.get("name").and_then(Value::as_str) == Some("out")
+                })
+            })
+            .and_then(|f| f.get("hash").and_then(Value::as_str))
+            .unwrap()
+            .to_string();
+
+        // The same single run, in-process, from the same synthetic fill.
+        let mut wphi = stencil.alloc_field("phi", domain)?;
+        let mut wout = stencil.alloc_field("out", domain)?;
+        gt4rs::storage::synthetic_fill(&mut wphi, 0.0);
+        gt4rs::storage::synthetic_fill(&mut wout, 1.0);
+        stencil
+            .bind()
+            .field("phi", &wphi)
+            .field("out", &wout)
+            .scalar("w", 0.5)
+            .domain(domain)
+            .finish()?
+            .run(&mut [&mut wphi, &mut wout])?;
+        let local_hash = format!("{:016x}", wout.domain_hash());
+        assert_eq!(wire_hash, local_hash, "wire run must match in-process bitwise");
+        println!("serve round-trip agrees bitwise: hash {wire_hash}");
+        server.shutdown();
     }
 
     println!("quickstart OK");

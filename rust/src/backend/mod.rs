@@ -89,6 +89,14 @@ pub trait Backend: Send + Sync {
         self.run(ir, args)?;
         Ok(ShardReport::serial())
     }
+
+    /// A snapshot of this backend's buffer-pool/executor counters, if it
+    /// keeps any (`None` for backends without pools). A *peek*: unlike
+    /// the resetting takers some backends expose, this never clears the
+    /// counters — metrics endpoints may call it repeatedly.
+    fn pool_stats(&self) -> Option<vector::PoolStats> {
+        None
+    }
 }
 
 /// Names of all built-in backends, in the tier order of Fig. 3.

@@ -34,7 +34,7 @@
 //! runners with `REPRO_THREADS` exported.
 
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// How one stencil invocation's compute domain is split across threads.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -412,6 +412,136 @@ fn worker_loop(shared: &PoolShared, idx: usize) {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Global core budget — admission control over the worker-pool slots
+// ---------------------------------------------------------------------------
+
+/// Outcome of a [`CoreBudget::acquire`] attempt.
+pub enum Admission {
+    /// Cores granted; release is the permit's `Drop`.
+    Granted(CorePermit),
+    /// The budget is saturated and the request was not allowed to wait
+    /// (no deadline to wait under, or the wait queue is full). The
+    /// serve layer maps this to a structured 429-style response.
+    Overloaded {
+        /// Cores in use at the rejection.
+        in_use: usize,
+        /// Requests already queued at the rejection.
+        waiters: usize,
+    },
+    /// The request waited but its deadline expired before cores freed up.
+    DeadlineExceeded,
+}
+
+struct BudgetState {
+    in_use: usize,
+    waiters: usize,
+}
+
+/// A counting semaphore over CPU cores: the composition point between
+/// *outer* concurrency (many concurrent stencil requests) and *inner*
+/// concurrency (each request's [`Sharding`] fan-out). Every request
+/// acquires as many slots as its resolved shard plan will occupy, so the
+/// server never oversubscribes the machine however clients combine the
+/// two levels; saturation is surfaced as explicit admission outcomes
+/// (shed or timed out), never as an unbounded queue.
+pub struct CoreBudget {
+    state: Mutex<BudgetState>,
+    freed: Condvar,
+    cores: usize,
+    /// Max requests allowed to wait for cores at once; everything past
+    /// this is shed immediately ([`Admission::Overloaded`]).
+    max_waiters: usize,
+}
+
+impl CoreBudget {
+    pub fn new(cores: usize, max_waiters: usize) -> Arc<CoreBudget> {
+        Arc::new(CoreBudget {
+            state: Mutex::new(BudgetState { in_use: 0, waiters: 0 }),
+            freed: Condvar::new(),
+            cores: cores.max(1),
+            max_waiters,
+        })
+    }
+
+    pub fn cores(&self) -> usize {
+        self.cores
+    }
+
+    /// Cores currently granted (a metrics peek).
+    pub fn in_use(&self) -> usize {
+        self.state.lock().unwrap().in_use
+    }
+
+    /// Requests currently waiting for cores (a metrics peek).
+    pub fn waiters(&self) -> usize {
+        self.state.lock().unwrap().waiters
+    }
+
+    /// Try to take `want` cores (clamped to the budget size, min 1).
+    /// Grants immediately when they fit; otherwise waits until `deadline`
+    /// if one is given and the wait queue has room, else sheds. Fairness
+    /// is condvar wake order — good enough for load shedding, not a FIFO
+    /// guarantee.
+    pub fn acquire(self: &Arc<Self>, want: usize, deadline: Option<Instant>) -> Admission {
+        let want = want.clamp(1, self.cores);
+        let mut st = self.state.lock().unwrap();
+        if st.in_use + want <= self.cores {
+            st.in_use += want;
+            return Admission::Granted(CorePermit { budget: self.clone(), n: want });
+        }
+        let Some(deadline) = deadline else {
+            return Admission::Overloaded { in_use: st.in_use, waiters: st.waiters };
+        };
+        if st.waiters >= self.max_waiters {
+            return Admission::Overloaded { in_use: st.in_use, waiters: st.waiters };
+        }
+        st.waiters += 1;
+        loop {
+            let now = Instant::now();
+            if now >= deadline {
+                st.waiters -= 1;
+                return Admission::DeadlineExceeded;
+            }
+            let (guard, timeout) =
+                self.freed.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+            if st.in_use + want <= self.cores {
+                st.waiters -= 1;
+                st.in_use += want;
+                return Admission::Granted(CorePermit { budget: self.clone(), n: want });
+            }
+            if timeout.timed_out() && Instant::now() >= deadline {
+                st.waiters -= 1;
+                return Admission::DeadlineExceeded;
+            }
+        }
+    }
+}
+
+/// RAII grant of `n` cores from a [`CoreBudget`]; dropping it returns
+/// them and wakes the waiters.
+pub struct CorePermit {
+    budget: Arc<CoreBudget>,
+    n: usize,
+}
+
+impl CorePermit {
+    /// How many cores this permit holds.
+    pub fn cores(&self) -> usize {
+        self.n
+    }
+}
+
+impl Drop for CorePermit {
+    fn drop(&mut self) {
+        let mut st = self.budget.state.lock().unwrap();
+        st.in_use -= self.n;
+        drop(st);
+        self.budget.freed.notify_all();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -543,5 +673,88 @@ mod tests {
             sum.fetch_add(s + 1, Ordering::Relaxed);
         });
         assert_eq!(sum.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn core_budget_grants_and_releases() {
+        let budget = CoreBudget::new(4, 8);
+        assert_eq!(budget.cores(), 4);
+        let a = match budget.acquire(3, None) {
+            Admission::Granted(p) => p,
+            _ => panic!("3 of 4 cores must grant immediately"),
+        };
+        assert_eq!(a.cores(), 3);
+        assert_eq!(budget.in_use(), 3);
+        // One more core still fits; a second full request does not.
+        let b = match budget.acquire(1, None) {
+            Admission::Granted(p) => p,
+            _ => panic!("the last core must grant"),
+        };
+        assert!(matches!(
+            budget.acquire(1, None),
+            Admission::Overloaded { in_use: 4, .. }
+        ));
+        drop(b);
+        drop(a);
+        assert_eq!(budget.in_use(), 0);
+        // Requests wider than the budget clamp instead of deadlocking.
+        let wide = match budget.acquire(64, None) {
+            Admission::Granted(p) => p,
+            _ => panic!("oversized requests clamp to the budget"),
+        };
+        assert_eq!(wide.cores(), 4);
+    }
+
+    #[test]
+    fn core_budget_sheds_when_wait_queue_is_full() {
+        let budget = CoreBudget::new(1, 0);
+        let held = match budget.acquire(1, None) {
+            Admission::Granted(p) => p,
+            _ => panic!(),
+        };
+        // max_waiters = 0: even a deadline-carrying request is shed.
+        let deadline = Some(Instant::now() + Duration::from_secs(5));
+        assert!(matches!(
+            budget.acquire(1, deadline),
+            Admission::Overloaded { in_use: 1, waiters: 0 }
+        ));
+        drop(held);
+    }
+
+    #[test]
+    fn core_budget_times_out_waiters_at_their_deadline() {
+        let budget = CoreBudget::new(1, 4);
+        let held = budget.acquire(1, None);
+        assert!(matches!(held, Admission::Granted(_)));
+        let t0 = Instant::now();
+        let adm = budget.acquire(1, Some(Instant::now() + Duration::from_millis(30)));
+        assert!(matches!(adm, Admission::DeadlineExceeded));
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+        assert_eq!(budget.waiters(), 0, "timed-out waiters must deregister");
+    }
+
+    #[test]
+    fn core_budget_hands_freed_cores_to_waiters() {
+        let budget = CoreBudget::new(2, 4);
+        let held = match budget.acquire(2, None) {
+            Admission::Granted(p) => p,
+            _ => panic!(),
+        };
+        let waiter = {
+            let budget = budget.clone();
+            std::thread::spawn(move || {
+                matches!(
+                    budget.acquire(2, Some(Instant::now() + Duration::from_secs(10))),
+                    Admission::Granted(_)
+                )
+            })
+        };
+        // Give the waiter time to enqueue, then free the cores.
+        while budget.waiters() == 0 {
+            std::thread::yield_now();
+        }
+        drop(held);
+        assert!(waiter.join().unwrap(), "freed cores must reach the waiter");
+        assert_eq!(budget.in_use(), 0);
     }
 }

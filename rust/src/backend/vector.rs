@@ -994,6 +994,13 @@ impl Backend for VectorBackend {
         env.restore(&program, args.fields);
         Ok(report)
     }
+
+    /// Non-resetting counter peek (contrast
+    /// [`VectorBackend::take_pool_stats`], which resets what it reports);
+    /// this is what `/metrics` endpoints poll.
+    fn pool_stats(&self) -> Option<PoolStats> {
+        Some(self.pool.lock().unwrap().stats)
+    }
 }
 
 #[cfg(test)]

@@ -19,9 +19,13 @@
 //!   executable caches stay warm;
 //! * collect per-(stencil, backend) metrics ([`metrics::SharedMetrics`]).
 //!
-//! The pre-handle entry point — [`Coordinator::run`] with hand-built
-//! `(&str, &mut Storage)` slices — survives as a deprecated shim on top
-//! of the same machinery.
+//! Execution knobs flow through one [`ExecOptions`] surface
+//! ([`Coordinator::set_exec_options`]): the fingerprint-salting half (opt
+//! level, fast-math) selects what artifact is compiled, the scheduling
+//! half (sharding, tier) is stamped into minted handles and overridable
+//! per invocation. The per-knob setters survive as thin delegates.
+//! (The old slice-based `Coordinator::run` shims are gone: the handle API
+//! is the only entry point.)
 
 pub mod metrics;
 pub mod stencil;
@@ -36,7 +40,7 @@ use crate::cache::StencilCache;
 use crate::dsl::parser::parse_module;
 use crate::ir::canon;
 use crate::ir::implir::StencilIr;
-use crate::opt::{OptConfig, OptLevel};
+use crate::opt::{ExecOptions, OptConfig, OptLevel};
 use crate::stdlib;
 use crate::storage::Storage;
 use anyhow::{anyhow, Result};
@@ -135,6 +139,10 @@ pub struct Coordinator {
     /// full opt-level 2 set; part of every compilation cache key, so one
     /// coordinator can serve multiple opt levels without collisions.
     opt: OptConfig,
+    /// The level that produced `opt` (reported by
+    /// [`Coordinator::exec_options`]; a raw [`Coordinator::set_opt_config`]
+    /// escape-hatch call leaves it at the last level set).
+    level: OptLevel,
     pub metrics: SharedMetrics,
 }
 
@@ -152,6 +160,7 @@ impl Coordinator {
             by_name: HashMap::new(),
             checks_enabled: true,
             opt: OptConfig::default(),
+            level: OptLevel::O2,
             metrics: SharedMetrics::new(),
         }
     }
@@ -163,23 +172,44 @@ impl Coordinator {
         c
     }
 
-    pub fn set_opt_level(&mut self, level: OptLevel) {
-        // Opt levels select passes; the sharding plan and executor tier are
-        // orthogonal scheduling knobs and survive level changes, and the
-        // fast-math opt-in is an explicit numeric-policy choice that a
-        // level switch must not silently revoke.
-        let sharding = self.opt.sharding;
-        let tier = self.opt.tier;
-        let fast_math = self.opt.fast_math;
-        self.opt = OptConfig::level(level)
-            .with_sharding(sharding)
-            .with_tier(tier)
-            .with_fast_math(fast_math);
+    /// A coordinator pinned to a full [`ExecOptions`] configuration.
+    pub fn with_exec_options(exec: ExecOptions) -> Coordinator {
+        let mut c = Coordinator::new();
+        c.set_exec_options(exec);
+        c
     }
 
-    /// Default intra-call sharding plan stamped into every handle minted
-    /// afterwards (never part of compilation cache keys — every plan is
-    /// bitwise-identical by contract).
+    /// Set every execution knob at once — the unified surface. The
+    /// fingerprint-salting half (opt level, fast-math) applies to
+    /// subsequent compilations; the scheduling half (sharding, tier) is
+    /// stamped into every handle minted afterwards.
+    pub fn set_exec_options(&mut self, exec: ExecOptions) {
+        self.level = exec.opt_level;
+        self.opt = exec.opt_config();
+    }
+
+    /// The coordinator's current execution options (reconstructed from
+    /// the active pass configuration; a custom [`Coordinator::set_opt_config`]
+    /// reports the last level set through this surface).
+    pub fn exec_options(&self) -> ExecOptions {
+        ExecOptions {
+            opt_level: self.level,
+            fast_math: self.opt.fast_math,
+            sharding: self.opt.sharding,
+            tier: self.opt.tier,
+        }
+    }
+
+    /// Thin delegate: change only the opt level. The scheduling knobs and
+    /// the fast-math opt-in are orthogonal and survive level changes (a
+    /// level switch must not silently revoke a numeric-policy choice).
+    pub fn set_opt_level(&mut self, level: OptLevel) {
+        self.set_exec_options(self.exec_options().with_opt_level(level));
+    }
+
+    /// Thin delegate: default intra-call sharding plan stamped into every
+    /// handle minted afterwards (never part of compilation cache keys —
+    /// every plan is bitwise-identical by contract).
     pub fn set_sharding(&mut self, sharding: Sharding) {
         self.opt.sharding = sharding;
     }
@@ -188,9 +218,10 @@ impl Coordinator {
         self.opt.sharding
     }
 
-    /// Default fused-path executor tier stamped into every handle minted
-    /// afterwards. Like sharding, a pure scheduling knob: both tiers are
-    /// bitwise-identical by contract and share one compilation cache entry.
+    /// Thin delegate: default fused-path executor tier stamped into every
+    /// handle minted afterwards. Like sharding, a pure scheduling knob:
+    /// both tiers are bitwise-identical by contract and share one
+    /// compilation cache entry.
     pub fn set_exec_tier(&mut self, tier: ExecTier) {
         self.opt.tier = tier;
     }
@@ -199,10 +230,11 @@ impl Coordinator {
         self.opt.tier
     }
 
-    /// Opt into (or out of) fast-math numeric relaxation for subsequent
-    /// compilations. Unlike sharding and the executor tier this *does*
-    /// salt the compilation cache key — exact and relaxed artifacts never
-    /// share a slot — because it changes results within a tolerance bound.
+    /// Thin delegate: opt into (or out of) fast-math numeric relaxation
+    /// for subsequent compilations. Unlike sharding and the executor tier
+    /// this *does* salt the compilation cache key — exact and relaxed
+    /// artifacts never share a slot — because it changes results within a
+    /// tolerance bound.
     pub fn set_fast_math(&mut self, fast_math: bool) {
         self.opt.fast_math = fast_math;
     }
@@ -211,6 +243,8 @@ impl Coordinator {
         self.opt.fast_math
     }
 
+    /// Low-level escape hatch: install an arbitrary pass combination that
+    /// no [`OptLevel`] names. Prefer [`Coordinator::set_exec_options`].
     pub fn set_opt_config(&mut self, config: OptConfig) {
         self.opt = config;
     }
@@ -304,14 +338,21 @@ impl Coordinator {
     pub fn stencil_for(&mut self, fingerprint: u64, backend: &str) -> Result<Stencil> {
         let ir = self.ir(fingerprint)?;
         let be = self.backend(backend)?;
-        Ok(Stencil::new(
-            ir,
-            be,
-            self.checks_enabled,
-            self.opt.sharding,
-            self.opt.tier,
-            self.metrics.clone(),
-        ))
+        Ok(Stencil::new(ir, be, self.checks_enabled, self.exec_options(), self.metrics.clone()))
+    }
+
+    /// Executor/buffer-pool counters of every instantiated backend that
+    /// keeps any (currently `vector`), sorted by backend name — the
+    /// metrics-snapshot API behind the serve layer's `/metrics` pool
+    /// section. A peek: counters keep accumulating.
+    pub fn pool_stats(&self) -> Vec<(String, crate::backend::vector::PoolStats)> {
+        let mut out: Vec<_> = self
+            .backends
+            .iter()
+            .filter_map(|(name, be)| be.pool_stats().map(|s| (name.clone(), s)))
+            .collect();
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
     }
 
     /// Allocate a zeroed storage with exactly the halo a stencil's field
@@ -327,43 +368,6 @@ impl Coordinator {
         stencil::alloc_field_for(&ir, field, domain)
     }
 
-    /// Run a compiled stencil on a backend from hand-built argument
-    /// slices.
-    #[deprecated(
-        note = "use the Stencil handle API: `Coordinator::stencil_for(..).bind()` \
-                validates once and re-checks only shapes on repeat calls"
-    )]
-    pub fn run<'b>(
-        &mut self,
-        fingerprint: u64,
-        backend_name: &str,
-        fields: &mut [(&'b str, &'b mut Storage)],
-        scalars: &[(&'b str, f64)],
-        domain: [usize; 3],
-    ) -> Result<RunStats> {
-        let handle = self.stencil_for(fingerprint, backend_name)?;
-        handle.run_slices(fields, scalars, domain)
-    }
-
-    /// Run a stencil by registered name (slice-based, like
-    /// [`Coordinator::run`]).
-    #[deprecated(
-        note = "use the Stencil handle API: `Coordinator::stencil_library(..).bind()`"
-    )]
-    pub fn run_by_name<'b>(
-        &mut self,
-        stencil: &str,
-        backend_name: &str,
-        fields: &mut [(&'b str, &'b mut Storage)],
-        scalars: &[(&'b str, f64)],
-        domain: [usize; 3],
-    ) -> Result<RunStats> {
-        let fp = self
-            .fingerprint_of(stencil)
-            .ok_or_else(|| anyhow!("stencil `{stencil}` not compiled"))?;
-        let handle = self.stencil_for(fp, backend_name)?;
-        handle.run_slices(fields, scalars, domain)
-    }
 }
 
 #[cfg(test)]
@@ -627,26 +631,33 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_slice_shim_still_works() {
-        // The pre-handle API: hand-built `(&str, &mut Storage)` slices.
+    fn exec_options_roundtrip_and_delegating_setters_agree() {
+        // One source of truth: the unified surface and the thin per-knob
+        // delegates must always observe each other's effects.
         let mut c = Coordinator::new();
-        let fp = c.compile_library("diffuse").unwrap();
-        let domain = [4, 4, 1];
-        let mut phi = c.alloc_field(fp, "phi", domain).unwrap();
-        phi.fill(1.0);
-        let mut out = c.alloc_field(fp, "out", domain).unwrap();
-        let mut refs: Vec<(&str, &mut Storage)> =
-            vec![("phi", &mut phi), ("out", &mut out)];
-        c.run(fp, "debug", &mut refs, &[("alpha", 0.1)], domain).unwrap();
-        assert_eq!(out.get(2, 2, 0), 1.0);
-        // ...and by name, including the not-compiled error path.
-        let mut refs: Vec<(&str, &mut Storage)> =
-            vec![("phi", &mut phi), ("out", &mut out)];
-        c.run_by_name("diffuse", "debug", &mut refs, &[("alpha", 0.1)], domain)
-            .unwrap();
-        assert!(c
-            .run_by_name("never_compiled", "debug", &mut [], &[], domain)
-            .is_err());
+        assert_eq!(c.exec_options(), ExecOptions::default());
+        let exec = ExecOptions::new()
+            .with_opt_level(OptLevel::O3)
+            .with_fast_math(true)
+            .with_sharding(Sharding::Threads(2))
+            .with_tier(ExecTier::Interpreted);
+        c.set_exec_options(exec);
+        assert_eq!(c.exec_options(), exec);
+        assert_eq!(c.sharding(), Sharding::Threads(2));
+        assert_eq!(c.exec_tier(), ExecTier::Interpreted);
+        assert!(c.fast_math());
+        // Delegates mutate the same state the unified getter reports.
+        c.set_sharding(Sharding::Auto);
+        c.set_fast_math(false);
+        assert_eq!(c.exec_options(), exec.with_sharding(Sharding::Auto).with_fast_math(false));
+        // The compile half drives cache keys exactly as before.
+        let a = c.compile_library("copy").unwrap();
+        c.set_exec_options(exec.with_fast_math(false).with_opt_level(OptLevel::O0));
+        let b = c.compile_library("copy").unwrap();
+        assert_ne!(a, b, "opt level through ExecOptions must salt cache keys");
+        // Minted handles carry the full options surface.
+        let s = c.stencil_for(b, "vector").unwrap();
+        assert_eq!(s.exec_options().opt_level, OptLevel::O0);
+        assert_eq!(s.exec_options().sharding, Sharding::Threads(2));
     }
 }

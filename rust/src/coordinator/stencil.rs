@@ -46,12 +46,13 @@
 //! on a stale layout.
 
 use crate::backend::kernels::ExecTier;
-use crate::backend::program::{validate_args, validate_field};
+use crate::backend::program::validate_field;
 use crate::backend::shard::Sharding;
 use crate::backend::{Backend, RunConfig, StencilArgs};
 use crate::coordinator::metrics::SharedMetrics;
 use crate::coordinator::RunStats;
 use crate::ir::implir::StencilIr;
+use crate::opt::ExecOptions;
 use crate::storage::{Storage, StorageInfo};
 use anyhow::{anyhow, bail, Result};
 use std::sync::Arc;
@@ -63,15 +64,13 @@ pub struct Stencil {
     ir: Arc<StencilIr>,
     backend: Arc<dyn Backend>,
     checks_enabled: bool,
-    /// Default intra-call sharding plan for invocations bound from this
-    /// handle (overridable per invocation via
-    /// [`InvocationBuilder::sharding`]).
-    sharding: Sharding,
-    /// Default fused-path executor tier for invocations bound from this
-    /// handle (overridable per invocation via
-    /// [`InvocationBuilder::exec_tier`]). Like `sharding`, a pure
-    /// scheduling knob: both tiers are bitwise-identical by contract.
-    tier: ExecTier,
+    /// The full execution-options surface this handle was minted with.
+    /// The compile half (`opt_level`, `fast_math`) records what the
+    /// artifact behind `ir` was built with; the scheduling half
+    /// (`sharding`, `tier`) is the default for invocations bound from
+    /// this handle (overridable per invocation via
+    /// [`InvocationBuilder::sharding`] / [`InvocationBuilder::exec_tier`]).
+    exec: ExecOptions,
     metrics: SharedMetrics,
 }
 
@@ -80,11 +79,10 @@ impl Stencil {
         ir: Arc<StencilIr>,
         backend: Arc<dyn Backend>,
         checks_enabled: bool,
-        sharding: Sharding,
-        tier: ExecTier,
+        exec: ExecOptions,
         metrics: SharedMetrics,
     ) -> Stencil {
-        Stencil { ir, backend, checks_enabled, sharding, tier, metrics }
+        Stencil { ir, backend, checks_enabled, exec, metrics }
     }
 
     /// The analyzed implementation IR (shared, never copied).
@@ -115,31 +113,48 @@ impl Stencil {
         self.checks_enabled = enabled;
     }
 
-    /// This handle's default intra-call sharding plan.
-    pub fn sharding(&self) -> Sharding {
-        self.sharding
+    /// The full execution-options surface of this handle. The compile
+    /// half (`opt_level`, `fast_math`) reports what the artifact was
+    /// built with; the scheduling half is the current invocation default.
+    pub fn exec_options(&self) -> ExecOptions {
+        self.exec
     }
 
-    /// Set the intra-call sharding plan for invocations bound from this
-    /// handle afterwards. Purely a scheduling knob: every plan is bitwise
-    /// identical to [`Sharding::Off`], and backends without a sharded
-    /// path ignore it.
+    /// Apply the *scheduling half* of `exec` (sharding, tier) to this
+    /// handle. The fingerprint-salting half (`opt_level`, `fast_math`)
+    /// records what this handle's artifact was compiled with and is not
+    /// changed by this setter — recompile through the coordinator to get
+    /// a differently optimized artifact.
+    pub fn set_exec_options(&mut self, exec: ExecOptions) {
+        self.exec.sharding = exec.sharding;
+        self.exec.tier = exec.tier;
+    }
+
+    /// This handle's default intra-call sharding plan.
+    pub fn sharding(&self) -> Sharding {
+        self.exec.sharding
+    }
+
+    /// Thin delegate: set the intra-call sharding plan for invocations
+    /// bound from this handle afterwards. Purely a scheduling knob: every
+    /// plan is bitwise identical to [`Sharding::Off`], and backends
+    /// without a sharded path ignore it.
     pub fn set_sharding(&mut self, sharding: Sharding) {
-        self.sharding = sharding;
+        self.exec.sharding = sharding;
     }
 
     /// This handle's default fused-path executor tier.
     pub fn exec_tier(&self) -> ExecTier {
-        self.tier
+        self.exec.tier
     }
 
-    /// Set the fused-path executor tier for invocations bound from this
-    /// handle afterwards. Purely a scheduling knob — every tier is
-    /// bitwise-identical by contract (numeric relaxation is the
-    /// coordinator's fast-math opt-in, not this switch), and backends
+    /// Thin delegate: set the fused-path executor tier for invocations
+    /// bound from this handle afterwards. Purely a scheduling knob —
+    /// every tier is bitwise-identical by contract (numeric relaxation is
+    /// the coordinator's fast-math opt-in, not this switch), and backends
     /// without a fused path ignore it.
     pub fn set_exec_tier(&mut self, tier: ExecTier) {
-        self.tier = tier;
+        self.exec.tier = tier;
     }
 
     /// Allocate a zeroed storage with exactly the halo this stencil's
@@ -163,32 +178,6 @@ impl Stencil {
         }
     }
 
-    /// One-shot convenience: validate and run in a single call (the
-    /// deprecated slice-based `Coordinator::run` shim is built on this).
-    pub(super) fn run_slices<'b>(
-        &self,
-        fields: &mut [(&'b str, &'b mut Storage)],
-        scalars: &[(&'b str, f64)],
-        domain: [usize; 3],
-    ) -> Result<RunStats> {
-        let checks = if self.checks_enabled {
-            let t0 = Instant::now();
-            validate_args(&self.ir, fields, scalars, domain)?;
-            t0.elapsed()
-        } else {
-            Duration::ZERO
-        };
-        let t1 = Instant::now();
-        let shard = self.backend.run_sharded(
-            &self.ir,
-            &mut StencilArgs { fields, scalars, domain },
-            &RunConfig { sharding: self.sharding, tier: self.tier },
-        )?;
-        let execute = t1.elapsed();
-        self.metrics
-            .record(&self.ir.name, self.backend.name(), checks, execute, shard.threads);
-        Ok(RunStats { checks, execute, shard })
-    }
 }
 
 /// Builder collecting the arguments of one invocation; created by
@@ -256,6 +245,17 @@ impl InvocationBuilder<'_> {
     /// bitwise identical by contract.
     pub fn exec_tier(mut self, tier: ExecTier) -> Self {
         self.tier = Some(tier);
+        self
+    }
+
+    /// Apply the scheduling half of an [`ExecOptions`] as this
+    /// invocation's overrides — equivalent to calling
+    /// [`InvocationBuilder::sharding`] and [`InvocationBuilder::exec_tier`]
+    /// with its fields. The compile half (`opt_level`, `fast_math`) is
+    /// fixed by the handle's artifact and ignored here.
+    pub fn exec_options(mut self, exec: ExecOptions) -> Self {
+        self.sharding = Some(exec.sharding);
+        self.tier = Some(exec.tier);
         self
     }
 
@@ -330,8 +330,8 @@ impl InvocationBuilder<'_> {
             field_names,
             expected,
             scalars,
-            sharding: self.sharding.unwrap_or(stencil.sharding),
-            tier: self.tier.unwrap_or(stencil.tier),
+            sharding: self.sharding.unwrap_or(stencil.exec.sharding),
+            tier: self.tier.unwrap_or(stencil.exec.tier),
             bind_checks,
             first_reported: false,
         })
@@ -364,6 +364,25 @@ pub struct BoundInvocation {
 impl BoundInvocation {
     pub fn domain(&self) -> [usize; 3] {
         self.domain
+    }
+
+    /// The full execution-options surface of this invocation: the compile
+    /// half comes from the handle's artifact, the scheduling half is the
+    /// invocation's own resolved plan/tier.
+    pub fn exec_options(&self) -> ExecOptions {
+        self.stencil
+            .exec_options()
+            .with_sharding(self.sharding)
+            .with_tier(self.tier)
+    }
+
+    /// Apply the scheduling half of `exec` (sharding, tier) to this
+    /// invocation — no re-validation needed, neither knob affects
+    /// results. The compile half is fixed by the bound artifact and
+    /// ignored here.
+    pub fn set_exec_options(&mut self, exec: ExecOptions) {
+        self.sharding = exec.sharding;
+        self.tier = exec.tier;
     }
 
     /// The sharding plan this invocation runs with.
@@ -763,5 +782,52 @@ mod tests {
         inv.run(&mut [&mut src, &mut dst]).unwrap();
         let t = c.metrics.get("copy", "debug").unwrap();
         assert_eq!(t.calls, 2);
+    }
+
+    #[test]
+    fn exec_options_flow_handle_builder_invocation() {
+        use crate::opt::OptLevel;
+        let mut c = Coordinator::new();
+        c.set_exec_options(
+            ExecOptions::new()
+                .with_opt_level(OptLevel::O3)
+                .with_sharding(Sharding::Threads(2)),
+        );
+        let mut s = c.stencil_library("diffuse", "vector").unwrap();
+        // The handle records the full surface it was minted with...
+        assert_eq!(s.exec_options().opt_level, OptLevel::O3);
+        assert_eq!(s.exec_options().sharding, Sharding::Threads(2));
+        // ...and set_exec_options only moves the scheduling half.
+        s.set_exec_options(
+            ExecOptions::new()
+                .with_sharding(Sharding::Off)
+                .with_tier(ExecTier::Interpreted),
+        );
+        assert_eq!(s.exec_options().opt_level, OptLevel::O3, "compile half is baked in");
+        assert_eq!(s.sharding(), Sharding::Off);
+        assert_eq!(s.exec_tier(), ExecTier::Interpreted);
+
+        let domain = [4, 4, 2];
+        let mut phi = s.alloc_field("phi", domain).unwrap();
+        phi.fill(1.0);
+        let mut out = s.alloc_field("out", domain).unwrap();
+        // Builder-level override via the unified surface...
+        let mut inv = s
+            .bind()
+            .field("phi", &phi)
+            .field("out", &out)
+            .scalar("alpha", 0.1)
+            .domain(domain)
+            .exec_options(ExecOptions::new().with_sharding(Sharding::Auto))
+            .finish()
+            .unwrap();
+        assert_eq!(inv.sharding(), Sharding::Auto);
+        assert_eq!(inv.exec_tier(), ExecTier::default());
+        assert_eq!(inv.exec_options().opt_level, OptLevel::O3);
+        // ...and the invocation-level scheduling setter between calls.
+        inv.run(&mut [&mut phi, &mut out]).unwrap();
+        inv.set_exec_options(ExecOptions::new().with_sharding(Sharding::Off));
+        inv.run(&mut [&mut phi, &mut out]).unwrap();
+        assert_eq!(out.get(2, 2, 0), 1.0);
     }
 }

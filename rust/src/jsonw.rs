@@ -1,0 +1,444 @@
+//! Minimal hand-rolled JSON: emission and recursive-descent parsing.
+//!
+//! The offline vendored crate set has no serde, and this repo needs JSON
+//! in exactly two shapes: the CLI's `--json` output (consumed by the
+//! perf-trajectory tooling and re-parsed by the recursive-descent checker
+//! in `tests/integration_cli.rs`) and the `repro serve` newline-delimited
+//! wire protocol. Both go through this one module so there is a single
+//! escaping/number policy to validate.
+//!
+//! Emission is string-building ([`Obj`], [`array`], [`num_f64`]); parsing
+//! ([`parse`] → [`Value`]) is a strict recursive-descent reader of one
+//! complete JSON document. Numbers are read as `f64` — integer consumers
+//! use [`Value::as_u64`], which rejects fractional values; `u64` values
+//! that must survive bit-exactly (fingerprints, `f64::to_bits`) travel as
+//! hex *strings*, never as JSON numbers.
+
+use std::fmt::Write as _;
+
+// ---------------------------------------------------------------------------
+// Emission
+// ---------------------------------------------------------------------------
+
+/// `s` with JSON string escaping applied (quotes, backslash, control
+/// characters — enough that `python3 -m json.tool` round-trips it).
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// `s` as a JSON string token (escaped, quoted).
+pub fn string(s: &str) -> String {
+    format!("\"{}\"", escape(s))
+}
+
+/// A f64 as a JSON value: exponent form for finite numbers, a quoted
+/// string for NaN/inf (which are not valid JSON numbers).
+pub fn num_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:e}")
+    } else {
+        format!("\"{v}\"")
+    }
+}
+
+/// A JSON array from already-rendered element strings.
+pub fn array<S: AsRef<str>>(items: &[S]) -> String {
+    let mut out = String::from("[");
+    for (i, it) in items.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(it.as_ref());
+    }
+    out.push(']');
+    out
+}
+
+/// Builder for one JSON object, keys in insertion order.
+///
+/// ```
+/// # use gt4rs::jsonw::Obj;
+/// let line = Obj::new().str("op", "run").int("iters", 3).bool("ok", true).finish();
+/// assert_eq!(line, r#"{"op":"run","iters":3,"ok":true}"#);
+/// ```
+#[derive(Default)]
+pub struct Obj {
+    body: String,
+}
+
+impl Obj {
+    pub fn new() -> Obj {
+        Obj::default()
+    }
+
+    fn key(&mut self, key: &str) {
+        if !self.body.is_empty() {
+            self.body.push(',');
+        }
+        self.body.push_str(&string(key));
+        self.body.push(':');
+    }
+
+    /// A string-valued member (escaped).
+    pub fn str(mut self, key: &str, value: &str) -> Obj {
+        self.key(key);
+        self.body.push_str(&string(value));
+        self
+    }
+
+    /// A member whose value is already rendered JSON (nested object,
+    /// array, ...). The caller vouches for its validity.
+    pub fn raw(mut self, key: &str, value: &str) -> Obj {
+        self.key(key);
+        self.body.push_str(value);
+        self
+    }
+
+    pub fn bool(mut self, key: &str, value: bool) -> Obj {
+        self.key(key);
+        self.body.push_str(if value { "true" } else { "false" });
+        self
+    }
+
+    pub fn int<I: Into<i128>>(mut self, key: &str, value: I) -> Obj {
+        self.key(key);
+        let _ = write!(self.body, "{}", value.into());
+        self
+    }
+
+    /// A f64 member via [`num_f64`] (finite → number, else quoted string).
+    pub fn f64(mut self, key: &str, value: f64) -> Obj {
+        self.key(key);
+        self.body.push_str(&num_f64(value));
+        self
+    }
+
+    pub fn finish(self) -> String {
+        format!("{{{}}}", self.body)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Parsing
+// ---------------------------------------------------------------------------
+
+/// A parsed JSON value. Object member order is preserved; duplicate keys
+/// keep their first occurrence under [`Value::get`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    Obj(Vec<(String, Value)>),
+}
+
+impl Value {
+    /// Object member lookup (None for non-objects and missing keys).
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Obj(members) => members.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// The number as an exact unsigned integer (rejects fractions,
+    /// negatives, and magnitudes past 2^53 where f64 loses exactness).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::Num(v)
+                if *v >= 0.0 && v.fract() == 0.0 && *v <= 9_007_199_254_740_992.0 =>
+            {
+                Some(*v as u64)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&[(String, Value)]> {
+        match self {
+            Value::Obj(members) => Some(members),
+            _ => None,
+        }
+    }
+}
+
+/// Parse one complete JSON document (trailing whitespace allowed, trailing
+/// garbage rejected).
+pub fn parse(input: &str) -> Result<Value, String> {
+    let bytes = input.as_bytes();
+    let mut pos = 0usize;
+    let value = parse_value(bytes, &mut pos)?;
+    skip_ws(bytes, &mut pos);
+    if pos != bytes.len() {
+        return Err(format!("trailing garbage at byte {pos}"));
+    }
+    Ok(value)
+}
+
+fn skip_ws(bytes: &[u8], pos: &mut usize) {
+    while *pos < bytes.len() && matches!(bytes[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn expect(bytes: &[u8], pos: &mut usize, c: u8) -> Result<(), String> {
+    skip_ws(bytes, pos);
+    if *pos < bytes.len() && bytes[*pos] == c {
+        *pos += 1;
+        Ok(())
+    } else {
+        Err(format!("expected `{}` at byte {}", c as char, *pos))
+    }
+}
+
+fn parse_value(bytes: &[u8], pos: &mut usize) -> Result<Value, String> {
+    skip_ws(bytes, pos);
+    match bytes.get(*pos) {
+        None => Err("unexpected end of input".to_string()),
+        Some(b'{') => parse_obj(bytes, pos),
+        Some(b'[') => parse_arr(bytes, pos),
+        Some(b'"') => Ok(Value::Str(parse_string(bytes, pos)?)),
+        Some(b't') => parse_lit(bytes, pos, "true", Value::Bool(true)),
+        Some(b'f') => parse_lit(bytes, pos, "false", Value::Bool(false)),
+        Some(b'n') => parse_lit(bytes, pos, "null", Value::Null),
+        Some(_) => parse_num(bytes, pos),
+    }
+}
+
+fn parse_lit(bytes: &[u8], pos: &mut usize, lit: &str, value: Value) -> Result<Value, String> {
+    if bytes[*pos..].starts_with(lit.as_bytes()) {
+        *pos += lit.len();
+        Ok(value)
+    } else {
+        Err(format!("bad literal at byte {}", *pos))
+    }
+}
+
+fn parse_num(bytes: &[u8], pos: &mut usize) -> Result<Value, String> {
+    let start = *pos;
+    if matches!(bytes.get(*pos), Some(b'-')) {
+        *pos += 1;
+    }
+    while matches!(
+        bytes.get(*pos),
+        Some(b'0'..=b'9') | Some(b'.') | Some(b'e') | Some(b'E') | Some(b'+') | Some(b'-')
+    ) {
+        *pos += 1;
+    }
+    let text = std::str::from_utf8(&bytes[start..*pos]).map_err(|e| e.to_string())?;
+    text.parse::<f64>()
+        .map(Value::Num)
+        .map_err(|_| format!("bad number `{text}` at byte {start}"))
+}
+
+fn parse_string(bytes: &[u8], pos: &mut usize) -> Result<String, String> {
+    expect(bytes, pos, b'"')?;
+    let mut out = String::new();
+    loop {
+        match bytes.get(*pos) {
+            None => return Err("unterminated string".to_string()),
+            Some(b'"') => {
+                *pos += 1;
+                return Ok(out);
+            }
+            Some(b'\\') => {
+                *pos += 1;
+                match bytes.get(*pos) {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'b') => out.push('\u{0008}'),
+                    Some(b'f') => out.push('\u{000c}'),
+                    Some(b'u') => {
+                        let hex = bytes
+                            .get(*pos + 1..*pos + 5)
+                            .ok_or_else(|| "truncated \\u escape".to_string())?;
+                        let hex = std::str::from_utf8(hex).map_err(|e| e.to_string())?;
+                        let code =
+                            u32::from_str_radix(hex, 16).map_err(|e| e.to_string())?;
+                        // Surrogate pairs are not needed by this repo's
+                        // emitters; map lone surrogates to U+FFFD.
+                        out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        *pos += 4;
+                    }
+                    _ => return Err(format!("bad escape at byte {}", *pos)),
+                }
+                *pos += 1;
+            }
+            Some(_) => {
+                // Consume one full UTF-8 scalar (the input is &str, so
+                // boundaries are valid).
+                let rest = std::str::from_utf8(&bytes[*pos..]).map_err(|e| e.to_string())?;
+                let c = rest.chars().next().unwrap();
+                out.push(c);
+                *pos += c.len_utf8();
+            }
+        }
+    }
+}
+
+fn parse_arr(bytes: &[u8], pos: &mut usize) -> Result<Value, String> {
+    expect(bytes, pos, b'[')?;
+    let mut items = Vec::new();
+    skip_ws(bytes, pos);
+    if matches!(bytes.get(*pos), Some(b']')) {
+        *pos += 1;
+        return Ok(Value::Arr(items));
+    }
+    loop {
+        items.push(parse_value(bytes, pos)?);
+        skip_ws(bytes, pos);
+        match bytes.get(*pos) {
+            Some(b',') => *pos += 1,
+            Some(b']') => {
+                *pos += 1;
+                return Ok(Value::Arr(items));
+            }
+            _ => return Err(format!("expected `,` or `]` at byte {}", *pos)),
+        }
+    }
+}
+
+fn parse_obj(bytes: &[u8], pos: &mut usize) -> Result<Value, String> {
+    expect(bytes, pos, b'{')?;
+    let mut members = Vec::new();
+    skip_ws(bytes, pos);
+    if matches!(bytes.get(*pos), Some(b'}')) {
+        *pos += 1;
+        return Ok(Value::Obj(members));
+    }
+    loop {
+        skip_ws(bytes, pos);
+        let key = parse_string(bytes, pos)?;
+        expect(bytes, pos, b':')?;
+        let value = parse_value(bytes, pos)?;
+        members.push((key, value));
+        skip_ws(bytes, pos);
+        match bytes.get(*pos) {
+            Some(b',') => *pos += 1,
+            Some(b'}') => {
+                *pos += 1;
+                return Ok(Value::Obj(members));
+            }
+            _ => return Err(format!("expected `,` or `}}` at byte {}", *pos)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn obj_builder_emits_valid_json() {
+        let line = Obj::new()
+            .str("op", "run")
+            .int("iters", 3)
+            .bool("ok", true)
+            .f64("sum", 1.5)
+            .raw("domain", &array(&["4", "4", "2"]))
+            .str("weird", "a\"b\\c\nd\u{1}")
+            .finish();
+        let v = parse(&line).unwrap();
+        assert_eq!(v.get("op").unwrap().as_str(), Some("run"));
+        assert_eq!(v.get("iters").unwrap().as_u64(), Some(3));
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("sum").unwrap().as_f64(), Some(1.5));
+        assert_eq!(
+            v.get("domain").unwrap().as_arr().unwrap().len(),
+            3,
+            "{line}"
+        );
+        assert_eq!(v.get("weird").unwrap().as_str(), Some("a\"b\\c\nd\u{1}"));
+        assert_eq!(v.get("missing"), None);
+    }
+
+    #[test]
+    fn num_f64_policy() {
+        assert_eq!(parse(&num_f64(0.25)).unwrap().as_f64(), Some(0.25));
+        // Non-finite values become strings, keeping the document valid.
+        assert_eq!(parse(&num_f64(f64::NAN)).unwrap().as_str(), Some("NaN"));
+        assert_eq!(parse(&num_f64(f64::INFINITY)).unwrap().as_str(), Some("inf"));
+        // Exponent-form round-trip is exact for finite doubles.
+        let v = -1.2345678901234567e-89;
+        assert_eq!(parse(&num_f64(v)).unwrap().as_f64(), Some(v));
+    }
+
+    #[test]
+    fn parser_accepts_standard_documents() {
+        let v = parse(r#" { "a" : [1, -2.5, 1e3], "b": {"c": null}, "d": false } "#).unwrap();
+        let a = v.get("a").unwrap().as_arr().unwrap();
+        assert_eq!(a[0].as_u64(), Some(1));
+        assert_eq!(a[1].as_f64(), Some(-2.5));
+        assert_eq!(a[2].as_f64(), Some(1000.0));
+        assert_eq!(v.get("b").unwrap().get("c"), Some(&Value::Null));
+        assert_eq!(v.get("d").unwrap().as_bool(), Some(false));
+        assert_eq!(parse("[]").unwrap(), Value::Arr(vec![]));
+        assert_eq!(parse("{}").unwrap(), Value::Obj(vec![]));
+    }
+
+    #[test]
+    fn parser_rejects_malformed_documents() {
+        for bad in [
+            "", "{", "[1,", "{\"a\"}", "{\"a\":}", "tru", "1 2", "{\"a\":1}x", "\"abc",
+            "nul", "{'a':1}",
+        ] {
+            assert!(parse(bad).is_err(), "`{bad}` should not parse");
+        }
+    }
+
+    #[test]
+    fn as_u64_is_exactness_checked() {
+        assert_eq!(parse("42").unwrap().as_u64(), Some(42));
+        assert_eq!(parse("42.5").unwrap().as_u64(), None);
+        assert_eq!(parse("-1").unwrap().as_u64(), None);
+        assert_eq!(parse("1e300").unwrap().as_u64(), None);
+    }
+}

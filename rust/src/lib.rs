@@ -85,7 +85,17 @@
 //!   the [`runtime::pjrt_available`] probe backing structured
 //!   backend-unavailable errors;
 //! * **Model** ([`model`]) — an "isentropic-like" advection–diffusion model
-//!   (the paper's Tasmania analog) composed from framework stencils.
+//!   (the paper's Tasmania analog) composed from framework stencils;
+//! * **Serve** ([`serve`]) — `repro serve`, stencils as a long-running
+//!   service: a std-net TCP daemon speaking newline-delimited JSON, with
+//!   per-tenant stencil libraries (coordinator caches + lease tables of
+//!   [`BoundInvocation`]s), admission under a global
+//!   [`backend::shard::CoreBudget`] that composes outer request
+//!   concurrency with each run's inner [`Sharding`] fan-out, structured
+//!   429/408 load shedding, same-fingerprint small-domain run coalescing,
+//!   and a Prometheus-style `/metrics` snapshot. Execution options travel
+//!   the wire as the same [`ExecOptions`] surface the in-process API
+//!   uses; results cross as bit-exact digests.
 
 pub mod analysis;
 pub mod backend;
@@ -94,9 +104,11 @@ pub mod cache;
 pub mod coordinator;
 pub mod dsl;
 pub mod ir;
+pub mod jsonw;
 pub mod model;
 pub mod opt;
 pub mod runtime;
+pub mod serve;
 pub mod stdlib;
 pub mod storage;
 
@@ -105,4 +117,4 @@ pub use backend::shard::Sharding;
 pub use coordinator::{BoundInvocation, Coordinator, Stencil};
 pub use dsl::span::{CResult, CompileError};
 pub use ir::implir::StencilIr;
-pub use opt::{OptConfig, OptLevel, PassManager};
+pub use opt::{ExecOptions, OptConfig, OptLevel, PassManager};

@@ -7,11 +7,15 @@
 //!   validate  run a stencil on every backend and compare the results
 //!   bench     Figure-3 style backend sweep over domain sizes
 //!   model     run the isentropic-like demonstration model
+//!   serve     long-running stencil service (NDJSON over TCP)
+//!   client    send one request line to a running `repro serve`
 //!
 //! Every compiling subcommand accepts `--opt-level {0,1,2,3}` (default 2),
 //! selecting how much of the pass manager (`gt4rs::opt`) runs between
 //! analysis and the backends; level 3 additionally selects the fused
-//! loop-nest evaluator on the vector backend.
+//! loop-nest evaluator on the vector backend. The four execution knobs
+//! (`--opt-level`, `--fast-math`, `--threads`, `--tier`) are parsed into
+//! one [`ExecOptions`] and applied together.
 //!
 //! Executing subcommands go through the `Stencil` handle API: arguments
 //! are bound and validated once, and repeat calls only re-check shapes.
@@ -26,10 +30,12 @@ use gt4rs::backend::kernels::ExecTier;
 use gt4rs::backend::shard::Sharding;
 use gt4rs::backend::BACKEND_NAMES;
 use gt4rs::coordinator::{Coordinator, Stencil};
+use gt4rs::jsonw::{self, Obj};
 use gt4rs::model::{IsentropicModel, ModelConfig};
-use gt4rs::opt::{OptConfig, OptLevel, PassManager};
+use gt4rs::opt::{ExecOptions, OptConfig, OptLevel, PassManager};
+use gt4rs::serve::{ServeConfig, Server};
 use gt4rs::stdlib;
-use gt4rs::storage::Storage;
+use gt4rs::storage::{synthetic_fill, Storage};
 use std::collections::{BTreeMap, BTreeSet};
 use std::time::Instant;
 
@@ -127,6 +133,18 @@ fn parse_tier(flags: &Flags) -> Result<ExecTier> {
         .ok_or_else(|| anyhow!("--tier must be `interpreted` or `specialized`, got `{s}`"))
 }
 
+/// The full execution-option surface as one value: `--opt-level` and
+/// `--fast-math` (the compile half, salting cache keys) plus `--threads`
+/// and `--tier` (the scheduling half). Same struct the library API and
+/// the serve wire protocol use.
+fn parse_exec_options(flags: &Flags) -> Result<ExecOptions> {
+    Ok(ExecOptions::new()
+        .with_opt_level(parse_opt_level(flags)?)
+        .with_fast_math(flags.flag("fast-math"))
+        .with_sharding(parse_sharding(flags)?)
+        .with_tier(parse_tier(flags)?))
+}
+
 fn parse_externals(s: Option<&str>) -> Result<BTreeMap<String, f64>> {
     let mut out = BTreeMap::new();
     if let Some(s) = s {
@@ -153,6 +171,8 @@ fn dispatch(args: &[String]) -> Result<()> {
         "validate" => cmd_validate(&flags),
         "bench" => cmd_bench(&flags),
         "model" => cmd_model(&flags),
+        "serve" => cmd_serve(&flags),
+        "client" => cmd_client(&flags),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -188,6 +208,15 @@ SUBCOMMANDS
            also cargo bench); --json emits one row per (domain, backend)
   model    [--backend B] [--domain IxJxK] [--steps N] [--threads T]
            run the isentropic-like demo model, log diagnostics
+  serve    [--addr H:P] [--cores N] [--max-waiters N] [--deadline-ms N]
+           [--coalesce-elems N] [--max-leases N]
+           long-running stencil service: newline-delimited JSON over TCP
+           (ops: compile, bind, run, metrics, shutdown), per-tenant
+           stencil libraries, a global core budget with structured 429
+           backpressure + per-request deadlines, and coalescing of
+           same-stencil small-domain runs into one sharded dispatch
+  client   --addr H:P --request '<json line>'
+           send one request to a running serve daemon, print the reply
 
 All compiling subcommands take --opt-level 0|1|2|3 (default 2): 0 disables
 the optimizer, 1 enables fold-cse/dce/fuse, 2 adds temporary demotion, 3
@@ -240,10 +269,7 @@ fn load_source(flags: &Flags) -> Result<(String, String)> {
 /// Compile a stencil from --file or the standard library, honoring
 /// `--opt-level`; returns its cache fingerprint.
 fn load_fp(coord: &mut Coordinator, flags: &Flags) -> Result<u64> {
-    coord.set_opt_level(parse_opt_level(flags)?);
-    coord.set_sharding(parse_sharding(flags)?);
-    coord.set_exec_tier(parse_tier(flags)?);
-    coord.set_fast_math(flags.flag("fast-math"));
+    coord.set_exec_options(parse_exec_options(flags)?);
     coord.checks_enabled = !flags.flag("no-checks");
     let (name, src) = load_source(flags)?;
     let externals = parse_externals(flags.get("externals"))?;
@@ -304,19 +330,7 @@ fn synthetic_fields(stencil: &Stencil, domain: [usize; 3]) -> Result<Vec<(String
     let mut out = Vec::new();
     for (idx, f) in stencil.ir().fields.iter().enumerate() {
         let mut s = stencil.alloc_field(&f.name, domain)?;
-        let phase = idx as f64;
-        let [ni, nj, nk] = domain;
-        let h = s.info.halo;
-        for i in -(h[0].0 as i64)..(ni + h[0].1) as i64 {
-            for j in -(h[1].0 as i64)..(nj + h[1].1) as i64 {
-                for k in -(h[2].0 as i64)..(nk + h[2].1) as i64 {
-                    let v = (0.1 * (i as f64) + phase).sin()
-                        * (0.13 * (j as f64) - phase).cos()
-                        + 0.01 * k as f64;
-                    s.set(i, j, k, v);
-                }
-            }
-        }
+        synthetic_fill(&mut s, idx as f64);
         out.push((f.name.clone(), s));
     }
     Ok(out)
@@ -359,12 +373,14 @@ fn cmd_run(flags: &Flags) -> Result<()> {
         let stats = inv.run(&mut refs)?;
         threads_used = threads_used.max(stats.threads_used());
         if json {
-            iter_rows.push(format!(
-                "{{\"iter\":{it},\"checks_ns\":{},\"execute_ns\":{},\"threads\":{}}}",
-                stats.checks.as_nanos(),
-                stats.execute.as_nanos(),
-                stats.threads_used()
-            ));
+            iter_rows.push(
+                Obj::new()
+                    .int("iter", it as u64)
+                    .int("checks_ns", stats.checks.as_nanos() as i128)
+                    .int("execute_ns", stats.execute.as_nanos() as i128)
+                    .int("threads", stats.threads_used())
+                    .finish(),
+            );
         } else {
             println!(
                 "iter {it}: checks {:?}  execute {:?}  threads {}",
@@ -377,28 +393,26 @@ fn cmd_run(flags: &Flags) -> Result<()> {
     if json {
         let field_rows: Vec<String> = fields
             .iter()
-            .map(|(n, s)| {
-                format!("{{\"name\":\"{n}\",\"domain_sum\":{}}}", json_f64(s.domain_sum()))
-            })
+            .map(|(n, s)| Obj::new().str("name", n).f64("domain_sum", s.domain_sum()).finish())
             .collect();
+        let exec = parse_exec_options(flags)?;
         // `threads_used` is the *effective* count (a degraded Auto plan
         // reports 1), never an echo of the requested plan.
         println!(
-            "{{\"stencil\":\"{}\",\"backend\":\"{backend}\",\"domain\":[{},{},{}],\
-             \"opt_level\":\"{}\",\"checks_enabled\":{},\"sharding\":\"{}\",\
-             \"tier\":\"{}\",\"fast_math\":{},\
-             \"threads_used\":{threads_used},\"iters\":[{}],\"fields\":[{}]}}",
-            stencil.name(),
-            domain[0],
-            domain[1],
-            domain[2],
-            parse_opt_level(flags)?,
-            !flags.flag("no-checks"),
-            parse_sharding(flags)?,
-            parse_tier(flags)?,
-            flags.flag("fast-math"),
-            iter_rows.join(","),
-            field_rows.join(",")
+            "{}",
+            Obj::new()
+                .str("stencil", stencil.name())
+                .str("backend", backend)
+                .raw("domain", &format!("[{},{},{}]", domain[0], domain[1], domain[2]))
+                .str("opt_level", &exec.opt_level.to_string())
+                .bool("checks_enabled", !flags.flag("no-checks"))
+                .str("sharding", &exec.sharding.to_string())
+                .str("tier", &exec.tier.to_string())
+                .bool("fast_math", exec.fast_math)
+                .int("threads_used", threads_used)
+                .raw("iters", &jsonw::array(&iter_rows))
+                .raw("fields", &jsonw::array(&field_rows))
+                .finish()
         );
     } else {
         for (n, s) in &fields {
@@ -486,10 +500,7 @@ fn cmd_bench(flags: &Flags) -> Result<()> {
     let json = flags.flag("json");
 
     let mut coord = Coordinator::new();
-    coord.set_opt_level(parse_opt_level(flags)?);
-    coord.set_sharding(parse_sharding(flags)?);
-    coord.set_exec_tier(parse_tier(flags)?);
-    coord.set_fast_math(flags.flag("fast-math"));
+    coord.set_exec_options(parse_exec_options(flags)?);
     coord.checks_enabled = !flags.flag("no-checks");
     let fp = coord.compile_library(stencil_name)?;
     let mut rows: Vec<String> = Vec::new();
@@ -508,11 +519,14 @@ fn cmd_bench(flags: &Flags) -> Result<()> {
             let unavailable = |e: &anyhow::Error, rows: &mut Vec<String>| {
                 let reason = first_line(&format!("{e:#}"));
                 if json {
-                    rows.push(format!(
-                        "{{\"stencil\":\"{stencil_name}\",\"domain\":\"{dstr}\",\
-                         \"backend\":\"{be}\",\"error\":\"{}\"}}",
-                        reason.replace('"', "'")
-                    ));
+                    rows.push(
+                        Obj::new()
+                            .str("stencil", stencil_name)
+                            .str("domain", &dstr)
+                            .str("backend", be)
+                            .str("error", &reason)
+                            .finish(),
+                    );
                 } else {
                     println!("{dstr:<12} {be:>14} {:>14}", format!("n/a ({reason})"));
                 }
@@ -545,11 +559,15 @@ fn cmd_bench(flags: &Flags) -> Result<()> {
             }
             let mean = t0.elapsed() / iters as u32;
             if json {
-                rows.push(format!(
-                    "{{\"stencil\":\"{stencil_name}\",\"domain\":\"{dstr}\",\
-                     \"backend\":\"{be}\",\"mean_ns\":{},\"iters\":{iters}}}",
-                    mean.as_nanos()
-                ));
+                rows.push(
+                    Obj::new()
+                        .str("stencil", stencil_name)
+                        .str("domain", &dstr)
+                        .str("backend", be)
+                        .int("mean_ns", mean.as_nanos() as i128)
+                        .int("iters", iters as u64)
+                        .finish(),
+                );
             } else {
                 println!("{dstr:<12} {be:>14} {mean:>14?}");
             }
@@ -565,16 +583,6 @@ fn first_line(s: &str) -> String {
     s.lines().next().unwrap_or("").chars().take(60).collect()
 }
 
-/// A f64 as a JSON value: exponent form for finite numbers, a quoted
-/// string for NaN/inf (which are not valid JSON numbers).
-fn json_f64(v: f64) -> String {
-    if v.is_finite() {
-        format!("{v:e}")
-    } else {
-        format!("\"{v}\"")
-    }
-}
-
 fn cmd_model(flags: &Flags) -> Result<()> {
     let domain = parse_domain(flags.get_or("domain", "48x48x16"))?;
     let steps: usize = flags.get_or("steps", "100").parse()?;
@@ -582,9 +590,8 @@ fn cmd_model(flags: &Flags) -> Result<()> {
     let config = ModelConfig {
         domain,
         backend: backend.clone(),
-        opt_level: parse_opt_level(flags)?,
+        exec: parse_exec_options(flags)?,
         checks: !flags.flag("no-checks"),
-        sharding: parse_sharding(flags)?,
         ..ModelConfig::default()
     };
     let mut model = IsentropicModel::new(config)?;
@@ -601,5 +608,55 @@ fn cmd_model(flags: &Flags) -> Result<()> {
         }
     }
     println!("total wall: {:?}", t0.elapsed());
+    Ok(())
+}
+
+/// `repro serve`: bind, announce the resolved address (port 0 picks an
+/// ephemeral port — scripts parse this line), then serve until a
+/// `shutdown` request arrives.
+fn cmd_serve(flags: &Flags) -> Result<()> {
+    let mut config = ServeConfig {
+        addr: flags.get_or("addr", "127.0.0.1:7070").to_string(),
+        ..ServeConfig::default()
+    };
+    if let Some(s) = flags.get("cores") {
+        config.cores = s.parse()?;
+    }
+    if let Some(s) = flags.get("max-waiters") {
+        config.max_waiters = s.parse()?;
+    }
+    if let Some(s) = flags.get("deadline-ms") {
+        config.default_deadline_ms = s.parse()?;
+    }
+    if let Some(s) = flags.get("coalesce-elems") {
+        config.small_domain_elems = s.parse()?;
+    }
+    if let Some(s) = flags.get("max-leases") {
+        config.max_leases_per_tenant = s.parse()?;
+    }
+    let server = Server::bind(config)?;
+    println!("listening on {}", server.local_addr());
+    use std::io::Write as _;
+    std::io::stdout().flush()?;
+    server.run()
+}
+
+/// `repro client`: one request line in, one response line out — the
+/// smallest possible protocol probe for scripts and CI smokes.
+fn cmd_client(flags: &Flags) -> Result<()> {
+    use std::io::{BufRead, BufReader, Write as _};
+    let addr = flags
+        .get("addr")
+        .ok_or_else(|| anyhow!("--addr HOST:PORT is required"))?;
+    let request = flags
+        .get("request")
+        .ok_or_else(|| anyhow!("--request '<json line>' is required"))?;
+    let mut stream = std::net::TcpStream::connect(addr)?;
+    stream.write_all(request.as_bytes())?;
+    stream.write_all(b"\n")?;
+    stream.flush()?;
+    let mut line = String::new();
+    BufReader::new(stream).read_line(&mut line)?;
+    print!("{line}");
     Ok(())
 }

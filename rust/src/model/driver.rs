@@ -10,8 +10,8 @@
 //! error.
 
 use super::grid::{gaussian_blob, periodic_halo_update};
-use crate::backend::shard::Sharding;
 use crate::coordinator::{BoundInvocation, Coordinator, Stencil};
+use crate::opt::ExecOptions;
 use crate::storage::{Storage, StorageInfo};
 use anyhow::Result;
 use std::time::{Duration, Instant};
@@ -33,15 +33,13 @@ pub struct ModelConfig {
     pub dz: f64,
     /// Backend every stencil runs on.
     pub backend: String,
-    /// Optimization level for every compiled stencil.
-    pub opt_level: crate::opt::OptLevel,
+    /// Execution options for every compiled stencil: opt level and
+    /// fast-math select the artifacts, sharding and tier schedule the
+    /// invocations (the trajectory is bitwise identical at any plan/tier).
+    pub exec: ExecOptions,
     /// Run-time storage checks (bind-time validation; per-step shape
     /// re-checks). Disable for the Fig. 3 dashed-line configuration.
     pub checks: bool,
-    /// Intra-call domain sharding for every stencil invocation of the
-    /// model (the CLI's `--threads`); purely a scheduling knob, the
-    /// trajectory is bitwise identical at any plan.
-    pub sharding: Sharding,
 }
 
 impl Default for ModelConfig {
@@ -57,9 +55,8 @@ impl Default for ModelConfig {
             dy: 1.0,
             dz: 1.0,
             backend: "vector".to_string(),
-            opt_level: crate::opt::OptLevel::O2,
+            exec: ExecOptions::default(),
             checks: true,
-            sharding: Sharding::Off,
         }
     }
 }
@@ -96,9 +93,8 @@ pub struct IsentropicModel {
 
 impl IsentropicModel {
     pub fn new(config: ModelConfig) -> Result<IsentropicModel> {
-        let mut coord = Coordinator::with_opt_level(config.opt_level);
+        let mut coord = Coordinator::with_exec_options(config.exec);
         coord.checks_enabled = config.checks;
-        coord.set_sharding(config.sharding);
         let advect: Stencil = coord.stencil_library("upwind_advect", &config.backend)?;
         let hdiff: Stencil = coord.stencil_library("hdiff", &config.backend)?;
         let vadv: Stencil = coord.stencil_library("vadv", &config.backend)?;
@@ -306,7 +302,7 @@ mod tests {
         // Threads(2) really shards.
         let mut serial = IsentropicModel::new(small_config("vector")).unwrap();
         let mut sharded = IsentropicModel::new(ModelConfig {
-            sharding: Sharding::Threads(2),
+            exec: ExecOptions::default().with_sharding(crate::backend::shard::Sharding::Threads(2)),
             ..small_config("vector")
         })
         .unwrap();

@@ -80,6 +80,84 @@ impl std::fmt::Display for OptLevel {
     }
 }
 
+/// The one unified execution-options surface: every layer that accepts
+/// knobs — [`crate::coordinator::Coordinator`], [`crate::coordinator::Stencil`]
+/// handles, invocation builders, the model driver's config, CLI flag
+/// parsing, and the serve wire protocol — accepts this struct, so there is
+/// exactly one place that spells out which options salt compilation
+/// fingerprints and which are pure scheduling:
+///
+/// * **Fingerprint-salting half** (`opt_level`, `fast_math`): these select
+///   *what artifact* is compiled. Different values must never share a
+///   cache slot ([`OptConfig::salt`]).
+/// * **Scheduling half** (`sharding`, `tier`): these select *how a run is
+///   scheduled*. Every value is bitwise-identical by contract, so they
+///   stay out of every fingerprint and can be changed per invocation
+///   without recompiling.
+///
+/// The thin per-knob setters (`set_opt_level`, `set_sharding`,
+/// `set_exec_tier`, `set_fast_math`) survive as delegating conveniences.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExecOptions {
+    /// Pass-manager level (fingerprint-salting).
+    pub opt_level: OptLevel,
+    /// Opt-in numeric relaxation for the specialized executor
+    /// (fingerprint-salting — exact and relaxed artifacts never collide).
+    pub fast_math: bool,
+    /// Intra-call domain-sharding plan (pure scheduling).
+    pub sharding: Sharding,
+    /// Fused-path executor tier (pure scheduling).
+    pub tier: ExecTier,
+}
+
+impl Default for ExecOptions {
+    /// `--opt-level 2`, exact numerics, serial, specialized executor —
+    /// the defaults every layer starts from.
+    fn default() -> Self {
+        ExecOptions {
+            opt_level: OptLevel::O2,
+            fast_math: false,
+            sharding: Sharding::Off,
+            tier: ExecTier::default(),
+        }
+    }
+}
+
+impl ExecOptions {
+    pub fn new() -> ExecOptions {
+        ExecOptions::default()
+    }
+
+    pub fn with_opt_level(mut self, level: OptLevel) -> ExecOptions {
+        self.opt_level = level;
+        self
+    }
+
+    pub fn with_fast_math(mut self, fast_math: bool) -> ExecOptions {
+        self.fast_math = fast_math;
+        self
+    }
+
+    pub fn with_sharding(mut self, sharding: Sharding) -> ExecOptions {
+        self.sharding = sharding;
+        self
+    }
+
+    pub fn with_tier(mut self, tier: ExecTier) -> ExecOptions {
+        self.tier = tier;
+        self
+    }
+
+    /// The pass-manager configuration these options name — the single
+    /// mapping point from the user-facing surface to [`OptConfig`].
+    pub fn opt_config(&self) -> OptConfig {
+        OptConfig::level(self.opt_level)
+            .with_sharding(self.sharding)
+            .with_tier(self.tier)
+            .with_fast_math(self.fast_math)
+    }
+}
+
 /// Per-pass toggles. `Default` is the full [`OptLevel::O2`] configuration.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct OptConfig {
@@ -322,6 +400,27 @@ mod tests {
         assert_eq!(o3.canon(), "fold-cse,dce,fuse,demote,fused");
         assert_ne!(o0.salt(), o2.salt());
         assert_ne!(o2.salt(), o3.salt());
+    }
+
+    #[test]
+    fn exec_options_map_onto_opt_configs() {
+        use crate::backend::kernels::ExecTier;
+        use crate::backend::shard::Sharding;
+        // The defaults agree with OptConfig's defaults.
+        assert_eq!(ExecOptions::default().opt_config(), OptConfig::default());
+        // Builders set exactly their field; the mapping point is
+        // `opt_config`, so the fingerprint discipline is inherited: the
+        // scheduling half never changes the salt, the compile half does.
+        let base = ExecOptions::new().with_opt_level(OptLevel::O3);
+        assert_eq!(base.opt_config().canon(), "fold-cse,dce,fuse,demote,fused");
+        let sched = base
+            .with_sharding(Sharding::Threads(4))
+            .with_tier(ExecTier::Interpreted);
+        assert_eq!(sched.opt_config().salt(), base.opt_config().salt());
+        assert_eq!(sched.opt_config().sharding, Sharding::Threads(4));
+        assert_eq!(sched.opt_config().tier, ExecTier::Interpreted);
+        let fm = base.with_fast_math(true);
+        assert_ne!(fm.opt_config().salt(), base.opt_config().salt());
     }
 
     #[test]

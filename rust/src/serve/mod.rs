@@ -1,0 +1,23 @@
+//! `repro serve` — stencils as a long-running service.
+//!
+//! A daemon built entirely on `std::net`: newline-delimited JSON over
+//! TCP (one request per line, one response per line), many concurrent
+//! clients, zero heavy dependencies. The split:
+//!
+//! * [`protocol`] — the wire format: request parsing, [`WireOptions`]
+//!   (the over-the-wire spelling of [`crate::opt::ExecOptions`]),
+//!   structured errors with HTTP-flavored codes, and bit-exact hex64
+//!   digest transport.
+//! * [`server`] — session state (per-tenant coordinators + lease
+//!   tables), admission under a global [`CoreBudget`] composing request
+//!   concurrency with per-run sharding, leader/follower run coalescing,
+//!   the `/metrics` text snapshot, and the accept loop.
+//!
+//! [`CoreBudget`]: crate::backend::shard::CoreBudget
+//! [`WireOptions`]: protocol::WireOptions
+
+pub mod protocol;
+pub mod server;
+
+pub use protocol::{Op, Request, ServeError, WireOptions};
+pub use server::{ServeConfig, Server, ServerHandle};

@@ -1,0 +1,472 @@
+//! The `repro serve` wire protocol: newline-delimited JSON over a plain
+//! socket, one request object per line, one response object per line.
+//!
+//! ## Requests
+//!
+//! ```json
+//! {"op":"bind","id":1,"stencil":"hdiff","backend":"vector",
+//!  "domain":[32,32,8],"options":{"opt_level":"3","threads":"2"}}
+//! {"op":"run","id":2,"lease":1,"iters":4,"deadline_ms":2000}
+//! {"op":"metrics","id":3}
+//! {"op":"shutdown"}
+//! ```
+//!
+//! Fields: `op` (required: `compile` | `bind` | `run` | `metrics` |
+//! `shutdown`), `id` (optional request tag, echoed verbatim), `tenant`
+//! (library namespace, default `"default"`), `stencil` + optional `src`
+//! (library name, or any name with inline `.gts` source), `backend`
+//! (default `"vector"`), `domain` (`[ni,nj,nk]`), `scalars`
+//! (`{name: value}`), `lease` (from a prior `bind`), `iters`,
+//! `deadline_ms`, and `options` — the wire spelling of
+//! [`ExecOptions`]: `opt_level`, `fast_math`, `threads`, `tier`, parsed
+//! by the *same* `OptLevel::parse` / `Sharding::parse` / `ExecTier::parse`
+//! the CLI flags use, so library, CLI and wire agree on one surface.
+//!
+//! ## Responses
+//!
+//! Success: `{"ok":true,"id":…,…}`. Failure:
+//! `{"ok":false,"id":…,"code":N,"error":"…"[,"retry_after_ms":N]}` with
+//! HTTP-flavored codes: 400 malformed request, 404 unknown
+//! stencil/lease/backend, 408 deadline exceeded, 410 stale lease
+//! (re-bind), 429 overloaded (load shed — carries `retry_after_ms`),
+//! 500 internal, 503 backend unavailable.
+//!
+//! `u64` values that must survive bit-exactly (fingerprints,
+//! `f64::to_bits` digests) travel as zero-padded hex strings, never JSON
+//! numbers.
+
+use crate::backend::kernels::ExecTier;
+use crate::backend::shard::Sharding;
+use crate::jsonw::{self, Obj, Value};
+use crate::opt::{ExecOptions, OptLevel};
+
+pub const CODE_BAD_REQUEST: u16 = 400;
+pub const CODE_NOT_FOUND: u16 = 404;
+pub const CODE_DEADLINE: u16 = 408;
+pub const CODE_STALE_LEASE: u16 = 410;
+pub const CODE_OVERLOADED: u16 = 429;
+pub const CODE_INTERNAL: u16 = 500;
+pub const CODE_UNAVAILABLE: u16 = 503;
+
+/// A structured protocol-level failure (the `ok:false` body).
+#[derive(Debug, Clone)]
+pub struct ServeError {
+    pub code: u16,
+    pub message: String,
+    /// Backpressure hint on 429 responses.
+    pub retry_after_ms: Option<u64>,
+}
+
+impl ServeError {
+    fn new(code: u16, message: impl Into<String>) -> ServeError {
+        ServeError { code, message: message.into(), retry_after_ms: None }
+    }
+
+    pub fn bad_request(msg: impl Into<String>) -> ServeError {
+        ServeError::new(CODE_BAD_REQUEST, msg)
+    }
+
+    pub fn not_found(msg: impl Into<String>) -> ServeError {
+        ServeError::new(CODE_NOT_FOUND, msg)
+    }
+
+    pub fn deadline(msg: impl Into<String>) -> ServeError {
+        ServeError::new(CODE_DEADLINE, msg)
+    }
+
+    pub fn stale_lease(msg: impl Into<String>) -> ServeError {
+        ServeError::new(CODE_STALE_LEASE, msg)
+    }
+
+    pub fn overloaded(msg: impl Into<String>, retry_after_ms: u64) -> ServeError {
+        ServeError {
+            code: CODE_OVERLOADED,
+            message: msg.into(),
+            retry_after_ms: Some(retry_after_ms),
+        }
+    }
+
+    pub fn internal(msg: impl Into<String>) -> ServeError {
+        ServeError::new(CODE_INTERNAL, msg)
+    }
+
+    pub fn unavailable(msg: impl Into<String>) -> ServeError {
+        ServeError::new(CODE_UNAVAILABLE, msg)
+    }
+}
+
+/// Request verbs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    Compile,
+    Bind,
+    Run,
+    Metrics,
+    Shutdown,
+}
+
+impl Op {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Op::Compile => "compile",
+            Op::Bind => "bind",
+            Op::Run => "run",
+            Op::Metrics => "metrics",
+            Op::Shutdown => "shutdown",
+        }
+    }
+}
+
+/// The wire spelling of [`ExecOptions`]: every knob optional, resolved
+/// against a base. The scheduling half doubles as a per-`run` override.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WireOptions {
+    pub opt_level: Option<OptLevel>,
+    pub fast_math: Option<bool>,
+    pub sharding: Option<Sharding>,
+    pub tier: Option<ExecTier>,
+}
+
+impl WireOptions {
+    /// `base` with every present knob overridden.
+    pub fn resolve(&self, base: ExecOptions) -> ExecOptions {
+        let mut exec = base;
+        if let Some(level) = self.opt_level {
+            exec = exec.with_opt_level(level);
+        }
+        if let Some(fm) = self.fast_math {
+            exec = exec.with_fast_math(fm);
+        }
+        if let Some(sh) = self.sharding {
+            exec = exec.with_sharding(sh);
+        }
+        if let Some(t) = self.tier {
+            exec = exec.with_tier(t);
+        }
+        exec
+    }
+}
+
+/// One parsed request line.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub op: Op,
+    /// Echoed verbatim in the response (client-side correlation).
+    pub id: Option<u64>,
+    pub tenant: String,
+    pub stencil: Option<String>,
+    /// Inline `.gts` module source (library lookup when absent).
+    pub src: Option<String>,
+    pub backend: String,
+    pub domain: Option<[usize; 3]>,
+    pub scalars: Vec<(String, f64)>,
+    pub lease: Option<u64>,
+    pub iters: u64,
+    pub deadline_ms: Option<u64>,
+    pub options: WireOptions,
+}
+
+fn want_str(v: &Value, key: &str) -> Result<Option<String>, String> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(x) => x
+            .as_str()
+            .map(|s| Some(s.to_string()))
+            .ok_or_else(|| format!("`{key}` must be a string")),
+    }
+}
+
+fn want_u64(v: &Value, key: &str) -> Result<Option<u64>, String> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(x) => x
+            .as_u64()
+            .map(Some)
+            .ok_or_else(|| format!("`{key}` must be a non-negative integer")),
+    }
+}
+
+fn want_bool(v: &Value, key: &str) -> Result<Option<bool>, String> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(x) => {
+            x.as_bool().map(Some).ok_or_else(|| format!("`{key}` must be a boolean"))
+        }
+    }
+}
+
+fn parse_options(v: &Value) -> Result<WireOptions, String> {
+    let Some(opts) = v.get("options") else {
+        return Ok(WireOptions::default());
+    };
+    let members = opts.as_obj().ok_or("`options` must be an object")?;
+    for (k, _) in members {
+        if !matches!(k.as_str(), "opt_level" | "fast_math" | "threads" | "tier") {
+            return Err(format!("unknown option `{k}`"));
+        }
+    }
+    // Numbers are tolerated where the CLI takes a numeric spelling
+    // (`opt_level`, `threads`); everything funnels through the same
+    // parsers the CLI flags use.
+    let as_text = |key: &str| -> Result<Option<String>, String> {
+        match opts.get(key) {
+            None => Ok(None),
+            Some(Value::Str(s)) => Ok(Some(s.clone())),
+            Some(x) => x
+                .as_u64()
+                .map(|n| Some(n.to_string()))
+                .ok_or_else(|| format!("`{key}` must be a string or integer")),
+        }
+    };
+    let opt_level = match as_text("opt_level")? {
+        None => None,
+        Some(s) => Some(
+            OptLevel::parse(&s).ok_or_else(|| format!("bad opt_level `{s}`"))?,
+        ),
+    };
+    let sharding = match as_text("threads")? {
+        None => None,
+        Some(s) => {
+            Some(Sharding::parse(&s).ok_or_else(|| format!("bad threads `{s}`"))?)
+        }
+    };
+    let tier = match want_str(opts, "tier")? {
+        None => None,
+        Some(s) => Some(ExecTier::parse(&s).ok_or_else(|| format!("bad tier `{s}`"))?),
+    };
+    let fast_math = want_bool(opts, "fast_math")?;
+    Ok(WireOptions { opt_level, fast_math, sharding, tier })
+}
+
+/// Parse one request line. On failure the request `id` is still
+/// recovered when the line was at least valid JSON, so the error
+/// response can be correlated.
+pub fn parse_request(line: &str) -> Result<Request, (Option<u64>, ServeError)> {
+    let v = jsonw::parse(line).map_err(|e| {
+        (None, ServeError::bad_request(format!("malformed request: {e}")))
+    })?;
+    let id = v.get("id").and_then(Value::as_u64);
+    let bad = |msg: String| (id, ServeError::bad_request(msg));
+
+    let members = match v.as_obj() {
+        Some(m) => m,
+        None => return Err(bad("request must be a JSON object".to_string())),
+    };
+    const KNOWN: [&str; 12] = [
+        "op", "id", "tenant", "stencil", "src", "backend", "domain", "scalars",
+        "lease", "iters", "deadline_ms", "options",
+    ];
+    for (k, _) in members {
+        if !KNOWN.contains(&k.as_str()) {
+            return Err(bad(format!("unknown request field `{k}`")));
+        }
+    }
+
+    let op = match v.get("op").and_then(Value::as_str) {
+        Some("compile") => Op::Compile,
+        Some("bind") => Op::Bind,
+        Some("run") => Op::Run,
+        Some("metrics") => Op::Metrics,
+        Some("shutdown") => Op::Shutdown,
+        Some(other) => return Err(bad(format!("unknown op `{other}`"))),
+        None => return Err(bad("missing string field `op`".to_string())),
+    };
+
+    let tenant =
+        want_str(&v, "tenant").map_err(&bad)?.unwrap_or_else(|| "default".to_string());
+    let stencil = want_str(&v, "stencil").map_err(&bad)?;
+    let src = want_str(&v, "src").map_err(&bad)?;
+    let backend =
+        want_str(&v, "backend").map_err(&bad)?.unwrap_or_else(|| "vector".to_string());
+    let lease = want_u64(&v, "lease").map_err(&bad)?;
+    let iters = want_u64(&v, "iters").map_err(&bad)?.unwrap_or(1);
+    if iters == 0 {
+        return Err(bad("`iters` must be at least 1".to_string()));
+    }
+    let deadline_ms = want_u64(&v, "deadline_ms").map_err(&bad)?;
+
+    let domain = match v.get("domain") {
+        None => None,
+        Some(d) => {
+            let items = d.as_arr().ok_or_else(|| {
+                bad("`domain` must be an array of three integers".to_string())
+            })?;
+            let dims: Option<Vec<u64>> = items.iter().map(Value::as_u64).collect();
+            match dims.as_deref() {
+                Some([ni, nj, nk]) => Some([*ni as usize, *nj as usize, *nk as usize]),
+                _ => {
+                    return Err(bad(
+                        "`domain` must be an array of three integers".to_string(),
+                    ))
+                }
+            }
+        }
+    };
+
+    let scalars = match v.get("scalars") {
+        None => Vec::new(),
+        Some(s) => {
+            let members = s
+                .as_obj()
+                .ok_or_else(|| bad("`scalars` must be an object".to_string()))?;
+            let mut out = Vec::with_capacity(members.len());
+            for (name, value) in members {
+                let value = value.as_f64().ok_or_else(|| {
+                    bad(format!("scalar `{name}` must be a number"))
+                })?;
+                out.push((name.clone(), value));
+            }
+            out
+        }
+    };
+
+    let options = parse_options(&v).map_err(&bad)?;
+
+    Ok(Request {
+        op,
+        id,
+        tenant,
+        stencil,
+        src,
+        backend,
+        domain,
+        scalars,
+        lease,
+        iters,
+        deadline_ms,
+        options,
+    })
+}
+
+/// Start a success response: `{"ok":true[,"id":N]…}`.
+pub fn ok_response(id: Option<u64>) -> Obj {
+    let mut o = Obj::new().bool("ok", true);
+    if let Some(id) = id {
+        o = o.int("id", id);
+    }
+    o
+}
+
+/// Render a failure response line.
+pub fn error_response(id: Option<u64>, err: &ServeError) -> String {
+    let mut o = Obj::new().bool("ok", false);
+    if let Some(id) = id {
+        o = o.int("id", id);
+    }
+    o = o.int("code", err.code).str("error", &err.message);
+    if let Some(ms) = err.retry_after_ms {
+        o = o.int("retry_after_ms", ms);
+    }
+    o.finish()
+}
+
+/// A `u64` that must cross the wire bit-exactly, as zero-padded hex.
+pub fn hex64(v: u64) -> String {
+    format!("{v:016x}")
+}
+
+/// Inverse of [`hex64`].
+pub fn parse_hex64(s: &str) -> Option<u64> {
+    u64::from_str_radix(s, 16).ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_a_full_request() {
+        let r = parse_request(
+            r#"{"op":"bind","id":7,"tenant":"t1","stencil":"hdiff","backend":"vector",
+                "domain":[32,32,8],"scalars":{"alpha":0.25},
+                "options":{"opt_level":"3","threads":"2","tier":"interpreted","fast_math":true}}"#
+                .replace('\n', " ")
+                .as_str(),
+        )
+        .unwrap();
+        assert_eq!(r.op, Op::Bind);
+        assert_eq!(r.id, Some(7));
+        assert_eq!(r.tenant, "t1");
+        assert_eq!(r.stencil.as_deref(), Some("hdiff"));
+        assert_eq!(r.domain, Some([32, 32, 8]));
+        assert_eq!(r.scalars, vec![("alpha".to_string(), 0.25)]);
+        let exec = r.options.resolve(ExecOptions::default());
+        assert_eq!(exec.opt_level, OptLevel::O3);
+        assert_eq!(exec.sharding, Sharding::Threads(2));
+        assert_eq!(exec.tier, ExecTier::Interpreted);
+        assert!(exec.fast_math);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let r = parse_request(r#"{"op":"run","lease":3}"#).unwrap();
+        assert_eq!(r.op, Op::Run);
+        assert_eq!(r.tenant, "default");
+        assert_eq!(r.backend, "vector");
+        assert_eq!(r.iters, 1);
+        assert_eq!(r.lease, Some(3));
+        // No options present: resolve is the identity.
+        let base = ExecOptions::new().with_opt_level(OptLevel::O1);
+        assert_eq!(r.options.resolve(base), base);
+    }
+
+    #[test]
+    fn numeric_option_spellings_match_cli_parsers() {
+        let r = parse_request(
+            r#"{"op":"compile","stencil":"copy","options":{"opt_level":0,"threads":4}}"#,
+        )
+        .unwrap();
+        assert_eq!(r.options.opt_level, Some(OptLevel::O0));
+        assert_eq!(r.options.sharding, Some(Sharding::Threads(4)));
+    }
+
+    #[test]
+    fn rejects_malformed_requests_with_400() {
+        for bad in [
+            "not json",
+            r#"[1,2,3]"#,
+            r#"{"op":"frobnicate"}"#,
+            r#"{"stencil":"hdiff"}"#,
+            r#"{"op":"run","lease":-1}"#,
+            r#"{"op":"run","lease":1,"iters":0}"#,
+            r#"{"op":"bind","domain":[1,2]}"#,
+            r#"{"op":"bind","domain":[1,2,"x"]}"#,
+            r#"{"op":"bind","mystery":1}"#,
+            r#"{"op":"bind","options":{"opt_level":"9"}}"#,
+            r#"{"op":"bind","options":{"warp":1}}"#,
+            r#"{"op":"bind","scalars":{"a":"b"}}"#,
+        ] {
+            let (_, err) = parse_request(bad).unwrap_err();
+            assert_eq!(err.code, CODE_BAD_REQUEST, "`{bad}`");
+        }
+        // The id survives a field-level failure for correlation.
+        let (id, _) = parse_request(r#"{"op":"nope","id":42}"#).unwrap_err();
+        assert_eq!(id, Some(42));
+    }
+
+    #[test]
+    fn response_shapes() {
+        let ok = ok_response(Some(1)).str("fingerprint", &hex64(0xabc)).finish();
+        let v = crate::jsonw::parse(&ok).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("id").unwrap().as_u64(), Some(1));
+        assert_eq!(
+            parse_hex64(v.get("fingerprint").unwrap().as_str().unwrap()),
+            Some(0xabc)
+        );
+
+        let err = error_response(None, &ServeError::overloaded("core budget full", 25));
+        let v = crate::jsonw::parse(&err).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(v.get("code").unwrap().as_u64(), Some(CODE_OVERLOADED as u64));
+        assert_eq!(v.get("retry_after_ms").unwrap().as_u64(), Some(25));
+    }
+
+    #[test]
+    fn hex64_roundtrip() {
+        for v in [0u64, 1, u64::MAX, 0xdead_beef_cafe_f00d] {
+            assert_eq!(parse_hex64(&hex64(v)), Some(v));
+        }
+        assert_eq!(parse_hex64("zz"), None);
+    }
+}

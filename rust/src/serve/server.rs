@@ -1,0 +1,936 @@
+//! The `repro serve` daemon: session state, admission scheduling,
+//! run coalescing, and the TCP accept loop.
+//!
+//! ## Architecture
+//!
+//! * **Per-tenant stencil libraries.** Each tenant owns one
+//!   [`Coordinator`] (its `StencilCache` Arcs are the compiled-artifact
+//!   store) and one lease table of [`BoundInvocation`]s with server-side
+//!   storages. `bind` validates once; every `run` against the lease is
+//!   the cheap re-check-shapes path — the bind-once/run-many contract,
+//!   stretched across a socket.
+//! * **Admission under a global core budget.** A
+//!   [`CoreBudget`] semaphore sized to the machine composes *outer*
+//!   request concurrency with each request's *inner* [`Sharding`]
+//!   fan-out: a run acquires as many slots as its resolved shard plan
+//!   occupies. Saturation sheds load with structured 429 responses
+//!   (`retry_after_ms` included) or times queued requests out at their
+//!   per-request deadline — the queue is bounded, never a blowup.
+//! * **Coalescing.** Same-group (tenant, fingerprint, backend)
+//!   small-domain runs queue behind one leader that drains the whole
+//!   batch under a single budget admission — one sharded dispatch window
+//!   instead of N per-request admissions. Honest by construction:
+//!   scheduling never changes results, so a coalesced run is
+//!   bit-identical to a solo one.
+//! * **Determinism.** Storages are allocated server-side and filled with
+//!   [`synthetic_fill`], the same deterministic pattern the CLI uses, so
+//!   a wire run and an in-process run of the same stencil/domain/options
+//!   produce bit-identical `sum_bits`/`hash` digests.
+
+use crate::backend::is_unavailable;
+use crate::backend::shard::{Admission, CoreBudget, Sharding};
+use crate::coordinator::{BoundInvocation, Coordinator};
+use crate::jsonw::{self, Obj};
+use crate::opt::ExecOptions;
+use crate::serve::protocol::{
+    error_response, hex64, ok_response, parse_request, Op, Request, ServeError,
+    CODE_DEADLINE, CODE_OVERLOADED,
+};
+use crate::storage::{synthetic_fill, Storage};
+use anyhow::Result;
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::io::{BufRead, BufReader, Write as _};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Daemon configuration (CLI flags map onto this 1:1).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Bind address; port 0 picks an ephemeral port.
+    pub addr: String,
+    /// Global core budget shared by every request's shard fan-out.
+    pub cores: usize,
+    /// Requests allowed to wait for cores at once; excess is shed with
+    /// 429 immediately (0 = shed on any contention).
+    pub max_waiters: usize,
+    /// Deadline applied to requests that carry none.
+    pub default_deadline_ms: u64,
+    /// Domains up to this many elements are eligible for same-group run
+    /// coalescing (0 disables coalescing).
+    pub small_domain_elems: usize,
+    /// Leases retained per tenant; the oldest is evicted past this (a
+    /// later run against it gets a structured 410 re-bind error).
+    pub max_leases_per_tenant: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            cores: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            max_waiters: 64,
+            default_deadline_ms: 10_000,
+            small_domain_elems: 4096,
+            max_leases_per_tenant: 64,
+        }
+    }
+}
+
+const OPS: [&str; 5] = ["compile", "bind", "run", "metrics", "shutdown"];
+
+fn op_index(op: Op) -> usize {
+    match op {
+        Op::Compile => 0,
+        Op::Bind => 1,
+        Op::Run => 2,
+        Op::Metrics => 3,
+        Op::Shutdown => 4,
+    }
+}
+
+#[derive(Default)]
+struct ServeStats {
+    /// Requests received, by [`OPS`] index.
+    requests: [AtomicU64; 5],
+    errors: AtomicU64,
+    backpressure: AtomicU64,
+    deadline_exceeded: AtomicU64,
+    /// Runs that rode along behind another run's budget admission.
+    coalesced_runs: AtomicU64,
+    /// Dispatch windows that served more than one run.
+    coalesced_batches: AtomicU64,
+}
+
+/// One bound invocation plus its server-side storages.
+struct Lease {
+    inv: BoundInvocation,
+    /// `(name, storage)` in declaration order (the order `inv.run` takes).
+    fields: Vec<(String, Storage)>,
+    stencil: String,
+    backend: String,
+    fingerprint: u64,
+}
+
+#[derive(Default)]
+struct LeaseTable {
+    map: HashMap<u64, Arc<Mutex<Lease>>>,
+    /// Issue order, for eviction.
+    order: VecDeque<u64>,
+    /// Last issued id (ids start at 1).
+    next: u64,
+}
+
+impl LeaseTable {
+    fn insert(&mut self, lease: Lease, cap: usize) -> u64 {
+        self.next += 1;
+        let id = self.next;
+        self.map.insert(id, Arc::new(Mutex::new(lease)));
+        self.order.push_back(id);
+        while self.order.len() > cap.max(1) {
+            if let Some(old) = self.order.pop_front() {
+                self.map.remove(&old);
+            }
+        }
+        id
+    }
+
+    /// Distinguishes *stale* (was issued, since evicted → 410 with a
+    /// re-bind hint) from *never issued* (→ 404).
+    fn get(&self, id: u64) -> Result<Arc<Mutex<Lease>>, ServeError> {
+        if let Some(lease) = self.map.get(&id) {
+            return Ok(lease.clone());
+        }
+        if id >= 1 && id <= self.next {
+            Err(ServeError::stale_lease(format!(
+                "lease {id} expired (evicted); re-bind the invocation"
+            )))
+        } else {
+            Err(ServeError::not_found(format!("no lease {id}")))
+        }
+    }
+}
+
+struct Tenant {
+    coord: Mutex<Coordinator>,
+    leases: Mutex<LeaseTable>,
+}
+
+/// Digest of one executed run (never the field data itself — results
+/// cross the wire as bit-exact hex digests).
+struct RunOutcome {
+    execute_ns: u64,
+    threads_used: u32,
+    /// `(name, domain_sum().to_bits(), domain_hash())`, declaration order.
+    fields: Vec<(String, u64, u64)>,
+    /// This run rode along behind another run's admission.
+    coalesced: bool,
+}
+
+/// One queued run request inside a coalescing group.
+struct RunJob {
+    lease: Arc<Mutex<Lease>>,
+    iters: u64,
+    /// Scheduling-half overrides applied under the lease lock.
+    sharding: Option<Sharding>,
+    tier: Option<crate::backend::kernels::ExecTier>,
+    scalars: Vec<(String, f64)>,
+    deadline: Instant,
+    /// Cores this run's resolved shard plan occupies.
+    want: usize,
+    slot: Mutex<Option<Result<RunOutcome, ServeError>>>,
+    ready: Condvar,
+}
+
+#[derive(Default)]
+struct GroupState {
+    queue: VecDeque<Arc<RunJob>>,
+    /// A leader is currently draining this group.
+    leading: bool,
+}
+
+struct Group {
+    state: Mutex<GroupState>,
+}
+
+/// Same-(tenant, fingerprint, backend) run batching.
+#[derive(Default)]
+struct Coalescer {
+    groups: Mutex<HashMap<String, Arc<Group>>>,
+}
+
+impl Coalescer {
+    /// Enqueue `job`; returns the group and whether the caller must lead
+    /// (enqueue + leadership-take are atomic under the group lock, so
+    /// exactly one un-led queue ever gains exactly one leader).
+    fn enqueue(&self, key: &str, job: Arc<RunJob>) -> (Arc<Group>, bool) {
+        let group = self
+            .groups
+            .lock()
+            .unwrap()
+            .entry(key.to_string())
+            .or_insert_with(|| Arc::new(Group { state: Mutex::new(GroupState::default()) }))
+            .clone();
+        let mut st = group.state.lock().unwrap();
+        st.queue.push_back(job);
+        let leader = !st.leading;
+        if leader {
+            st.leading = true;
+        }
+        drop(st);
+        (group, leader)
+    }
+}
+
+struct ServerState {
+    config: ServeConfig,
+    local_addr: SocketAddr,
+    tenants: Mutex<HashMap<String, Arc<Tenant>>>,
+    budget: Arc<CoreBudget>,
+    coalescer: Coalescer,
+    stats: ServeStats,
+    shutdown: AtomicBool,
+}
+
+impl ServerState {
+    fn tenant(&self, name: &str) -> Arc<Tenant> {
+        self.tenants
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| {
+                Arc::new(Tenant {
+                    coord: Mutex::new(Coordinator::new()),
+                    leases: Mutex::new(LeaseTable::default()),
+                })
+            })
+            .clone()
+    }
+
+    fn existing_tenant(&self, name: &str) -> Option<Arc<Tenant>> {
+        self.tenants.lock().unwrap().get(name).cloned()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Request handlers
+// ---------------------------------------------------------------------------
+
+fn handle_line(state: &Arc<ServerState>, line: &str) -> String {
+    let req = match parse_request(line) {
+        Ok(r) => r,
+        Err((id, err)) => {
+            state.stats.errors.fetch_add(1, Ordering::Relaxed);
+            return error_response(id, &err);
+        }
+    };
+    state.stats.requests[op_index(req.op)].fetch_add(1, Ordering::Relaxed);
+    let result = match req.op {
+        Op::Compile => op_compile(state, &req),
+        Op::Bind => op_bind(state, &req),
+        Op::Run => op_run(state, &req),
+        Op::Metrics => op_metrics(state, &req),
+        Op::Shutdown => op_shutdown(state, &req),
+    };
+    match result {
+        Ok(resp) => resp,
+        Err(err) => {
+            match err.code {
+                CODE_OVERLOADED => {
+                    state.stats.backpressure.fetch_add(1, Ordering::Relaxed);
+                }
+                CODE_DEADLINE => {
+                    state.stats.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+                }
+                _ => {}
+            }
+            state.stats.errors.fetch_add(1, Ordering::Relaxed);
+            error_response(req.id, &err)
+        }
+    }
+}
+
+/// Compile `req`'s stencil in the tenant's coordinator under the
+/// request's resolved [`ExecOptions`]; returns the salted fingerprint.
+fn compile_in(tenant: &Tenant, req: &Request) -> Result<(u64, ExecOptions), ServeError> {
+    let name = req
+        .stencil
+        .as_deref()
+        .ok_or_else(|| ServeError::bad_request("missing `stencil`"))?;
+    let exec = req.options.resolve(ExecOptions::default());
+    let mut coord = tenant.coord.lock().unwrap();
+    coord.set_exec_options(exec);
+    let fp = match &req.src {
+        Some(src) => coord
+            .compile_source(src, name, &BTreeMap::new())
+            .map_err(|e| ServeError::bad_request(format!("compile failed: {e:#}")))?,
+        None => coord
+            .compile_library(name)
+            .map_err(|e| ServeError::not_found(format!("{e:#}")))?,
+    };
+    Ok((fp, exec))
+}
+
+fn op_compile(state: &Arc<ServerState>, req: &Request) -> Result<String, ServeError> {
+    let tenant = state.tenant(&req.tenant);
+    let (fp, exec) = compile_in(&tenant, req)?;
+    Ok(ok_response(req.id)
+        .str("fingerprint", &hex64(fp))
+        .str("opt_level", &exec.opt_level.to_string())
+        .bool("fast_math", exec.fast_math)
+        .finish())
+}
+
+fn op_bind(state: &Arc<ServerState>, req: &Request) -> Result<String, ServeError> {
+    let domain = req
+        .domain
+        .ok_or_else(|| ServeError::bad_request("bind needs `domain`"))?;
+    let tenant = state.tenant(&req.tenant);
+    let (fp, _exec) = compile_in(&tenant, req)?;
+    let stencil = {
+        let mut coord = tenant.coord.lock().unwrap();
+        coord.stencil_for(fp, &req.backend).map_err(|e| {
+            if is_unavailable(&e) {
+                ServeError::unavailable(format!("{e:#}"))
+            } else {
+                ServeError::not_found(format!("{e:#}"))
+            }
+        })?
+    };
+
+    // Server-side storages with the canonical deterministic fill: a wire
+    // run is bit-comparable to an in-process run of the same stencil.
+    let mut fields = Vec::with_capacity(stencil.ir().fields.len());
+    for (idx, f) in stencil.ir().fields.iter().enumerate() {
+        let mut s = stencil
+            .alloc_field(&f.name, domain)
+            .map_err(|e| ServeError::bad_request(format!("{e:#}")))?;
+        synthetic_fill(&mut s, idx as f64);
+        fields.push((f.name.clone(), s));
+    }
+    for (name, _) in &req.scalars {
+        if !stencil.ir().scalars.iter().any(|s| &s.name == name) {
+            return Err(ServeError::bad_request(format!(
+                "stencil `{}` has no scalar `{name}`",
+                stencil.name()
+            )));
+        }
+    }
+    let scalars: Vec<(String, f64)> = stencil
+        .ir()
+        .scalars
+        .iter()
+        .map(|s| {
+            let v = req
+                .scalars
+                .iter()
+                .find(|(n, _)| n == &s.name)
+                .map(|(_, v)| *v)
+                .unwrap_or(0.1);
+            (s.name.clone(), v)
+        })
+        .collect();
+    let inv = stencil
+        .bind()
+        .domain(domain)
+        .fields(&fields)
+        .scalars(&scalars)
+        .finish()
+        .map_err(|e| ServeError::bad_request(format!("{e:#}")))?;
+
+    let field_names: Vec<String> =
+        fields.iter().map(|(n, _)| jsonw::string(n)).collect();
+    let stencil_name = stencil.name().to_string();
+    let lease = Lease {
+        inv,
+        fields,
+        stencil: stencil_name.clone(),
+        backend: req.backend.clone(),
+        fingerprint: fp,
+    };
+    let lease_id = tenant
+        .leases
+        .lock()
+        .unwrap()
+        .insert(lease, state.config.max_leases_per_tenant);
+    Ok(ok_response(req.id)
+        .int("lease", lease_id)
+        .str("stencil", &stencil_name)
+        .str("backend", &req.backend)
+        .str("fingerprint", &hex64(fp))
+        .raw("domain", &format!("[{},{},{}]", domain[0], domain[1], domain[2]))
+        .raw("fields", &jsonw::array(&field_names))
+        .finish())
+}
+
+fn op_run(state: &Arc<ServerState>, req: &Request) -> Result<String, ServeError> {
+    let lease_id = req
+        .lease
+        .ok_or_else(|| ServeError::bad_request("run needs `lease`"))?;
+    let tenant = state
+        .existing_tenant(&req.tenant)
+        .ok_or_else(|| ServeError::not_found(format!("no tenant `{}`", req.tenant)))?;
+    let lease = tenant.leases.lock().unwrap().get(lease_id)?;
+    let deadline = Instant::now()
+        + Duration::from_millis(
+            req.deadline_ms.unwrap_or(state.config.default_deadline_ms),
+        );
+    let (want, elems, group_key) = {
+        let g = lease.lock().unwrap();
+        let sharding = req.options.sharding.unwrap_or_else(|| g.inv.sharding());
+        let d = g.inv.domain();
+        (
+            sharding.resolve(d[0]),
+            d[0] * d[1] * d[2],
+            format!("{}/{:016x}/{}", req.tenant, g.fingerprint, g.backend),
+        )
+    };
+    let job = Arc::new(RunJob {
+        lease,
+        iters: req.iters,
+        sharding: req.options.sharding,
+        tier: req.options.tier,
+        scalars: req.scalars.clone(),
+        deadline,
+        want,
+        slot: Mutex::new(None),
+        ready: Condvar::new(),
+    });
+    let outcome = if elems <= state.config.small_domain_elems {
+        let (group, leader) = state.coalescer.enqueue(&group_key, job.clone());
+        if leader {
+            lead_group(state, &group);
+        }
+        await_result(&group, &job)?
+    } else {
+        run_direct(state, &job)?
+    };
+
+    let field_rows: Vec<String> = outcome
+        .fields
+        .iter()
+        .map(|(n, sum_bits, hash)| {
+            Obj::new()
+                .str("name", n)
+                .str("sum_bits", &hex64(*sum_bits))
+                .str("hash", &hex64(*hash))
+                .finish()
+        })
+        .collect();
+    Ok(ok_response(req.id)
+        .int("lease", lease_id)
+        .int("iters", req.iters)
+        .int("threads_used", outcome.threads_used as u64)
+        .int("execute_ns", outcome.execute_ns)
+        .bool("coalesced", outcome.coalesced)
+        .raw("fields", &jsonw::array(&field_rows))
+        .finish())
+}
+
+fn overloaded_error(state: &ServerState, in_use: usize, waiters: usize) -> ServeError {
+    ServeError::overloaded(
+        format!(
+            "core budget saturated ({in_use}/{} cores in use, {waiters} waiting)",
+            state.budget.cores()
+        ),
+        50,
+    )
+}
+
+/// Large-domain path: one budget admission per run.
+fn run_direct(state: &Arc<ServerState>, job: &RunJob) -> Result<RunOutcome, ServeError> {
+    match state.budget.acquire(job.want, Some(job.deadline)) {
+        Admission::Granted(_permit) => execute_run(job, false),
+        Admission::Overloaded { in_use, waiters } => {
+            Err(overloaded_error(state, in_use, waiters))
+        }
+        Admission::DeadlineExceeded => {
+            Err(ServeError::deadline("deadline exceeded waiting for cores"))
+        }
+    }
+}
+
+/// Execute one job against its lease (the lease lock serializes runs on
+/// one lease; different leases run concurrently).
+fn execute_run(job: &RunJob, coalesced: bool) -> Result<RunOutcome, ServeError> {
+    let mut guard = job.lease.lock().unwrap();
+    let Lease { inv, fields, .. } = &mut *guard;
+    // Scheduling-half overrides stick to the lease (like
+    // `BoundInvocation::set_sharding` in-process).
+    if let Some(sh) = job.sharding {
+        inv.set_sharding(sh);
+    }
+    if let Some(t) = job.tier {
+        inv.set_exec_tier(t);
+    }
+    for (name, value) in &job.scalars {
+        inv.set_scalar(name, *value)
+            .map_err(|e| ServeError::bad_request(format!("{e:#}")))?;
+    }
+    let mut execute_ns: u128 = 0;
+    let mut threads_used = 1u32;
+    for _ in 0..job.iters {
+        let mut refs: Vec<&mut Storage> = fields.iter_mut().map(|(_, s)| s).collect();
+        let stats = inv
+            .run(&mut refs)
+            .map_err(|e| ServeError::internal(format!("{e:#}")))?;
+        execute_ns += stats.execute.as_nanos();
+        threads_used = threads_used.max(stats.threads_used());
+    }
+    let digests = fields
+        .iter()
+        .map(|(n, s)| (n.clone(), s.domain_sum().to_bits(), s.domain_hash()))
+        .collect();
+    Ok(RunOutcome {
+        execute_ns: execute_ns.min(u64::MAX as u128) as u64,
+        threads_used,
+        fields: digests,
+        coalesced,
+    })
+}
+
+fn deliver(job: &RunJob, res: Result<RunOutcome, ServeError>) {
+    *job.slot.lock().unwrap() = Some(res);
+    job.ready.notify_all();
+}
+
+/// Leader loop: acquire the budget once, then drain the group queue under
+/// that single admission (the coalesced dispatch window). Admission
+/// failure sheds the *whole* queued batch with structured errors —
+/// honest load shedding, never a silently growing queue.
+fn lead_group(state: &Arc<ServerState>, group: &Group) {
+    loop {
+        let front = { group.state.lock().unwrap().queue.front().cloned() };
+        let Some(front) = front else {
+            let mut st = group.state.lock().unwrap();
+            if st.queue.is_empty() {
+                st.leading = false;
+                return;
+            }
+            continue;
+        };
+        match state.budget.acquire(front.want, Some(front.deadline)) {
+            Admission::Granted(_permit) => {
+                let mut batch = 0u64;
+                loop {
+                    let job = {
+                        let mut st = group.state.lock().unwrap();
+                        match st.queue.pop_front() {
+                            Some(j) => j,
+                            None => {
+                                st.leading = false;
+                                break;
+                            }
+                        }
+                    };
+                    batch += 1;
+                    let res = if Instant::now() > job.deadline {
+                        Err(ServeError::deadline("deadline exceeded before dispatch"))
+                    } else {
+                        execute_run(&job, batch > 1)
+                    };
+                    deliver(&job, res);
+                }
+                if batch > 1 {
+                    state.stats.coalesced_batches.fetch_add(1, Ordering::Relaxed);
+                    state.stats.coalesced_runs.fetch_add(batch - 1, Ordering::Relaxed);
+                }
+                return;
+            }
+            Admission::Overloaded { in_use, waiters } => {
+                let err = overloaded_error(state, in_use, waiters);
+                let drained: Vec<Arc<RunJob>> = {
+                    let mut st = group.state.lock().unwrap();
+                    st.leading = false;
+                    st.queue.drain(..).collect()
+                };
+                for job in drained {
+                    deliver(&job, Err(err.clone()));
+                }
+                return;
+            }
+            Admission::DeadlineExceeded => {
+                // The front job's deadline lapsed while saturated: shed it
+                // and retry admission for whatever is still queued.
+                let popped = { group.state.lock().unwrap().queue.pop_front() };
+                match popped {
+                    Some(job) => deliver(
+                        &job,
+                        Err(ServeError::deadline("deadline exceeded waiting for cores")),
+                    ),
+                    None => {
+                        let mut st = group.state.lock().unwrap();
+                        if st.queue.is_empty() {
+                            st.leading = false;
+                            return;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Block until this job's result is delivered. A job whose deadline
+/// passes while still *queued* removes itself (408); once a leader has
+/// taken it, the leader's verdict is awaited.
+fn await_result(group: &Group, job: &Arc<RunJob>) -> Result<RunOutcome, ServeError> {
+    let mut slot = job.slot.lock().unwrap();
+    loop {
+        if let Some(res) = slot.take() {
+            return res;
+        }
+        let (guard, _) = job
+            .ready
+            .wait_timeout(slot, Duration::from_millis(25))
+            .unwrap();
+        slot = guard;
+        if slot.is_some() {
+            continue;
+        }
+        if Instant::now() > job.deadline {
+            let mut st = group.state.lock().unwrap();
+            if let Some(pos) = st.queue.iter().position(|j| Arc::ptr_eq(j, job)) {
+                st.queue.remove(pos);
+                drop(st);
+                return Err(ServeError::deadline("deadline exceeded while queued"));
+            }
+        }
+    }
+}
+
+fn op_metrics(state: &Arc<ServerState>, req: &Request) -> Result<String, ServeError> {
+    Ok(ok_response(req.id).str("text", &render_metrics(state)).finish())
+}
+
+/// The `/metrics` text body: serve counters, the core budget, per-tenant
+/// per-(stencil, backend) timings from `SharedMetrics`, and the vector
+/// backend's pool/executor counters from `PoolStats`.
+fn render_metrics(state: &Arc<ServerState>) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    for (i, op) in OPS.iter().enumerate() {
+        let _ = writeln!(
+            out,
+            "serve_requests_total{{op=\"{op}\"}} {}",
+            state.stats.requests[i].load(Ordering::Relaxed)
+        );
+    }
+    let simple: [(&str, u64); 5] = [
+        ("serve_errors_total", state.stats.errors.load(Ordering::Relaxed)),
+        ("serve_backpressure_total", state.stats.backpressure.load(Ordering::Relaxed)),
+        (
+            "serve_deadline_exceeded_total",
+            state.stats.deadline_exceeded.load(Ordering::Relaxed),
+        ),
+        ("serve_coalesced_runs_total", state.stats.coalesced_runs.load(Ordering::Relaxed)),
+        (
+            "serve_coalesced_batches_total",
+            state.stats.coalesced_batches.load(Ordering::Relaxed),
+        ),
+    ];
+    for (name, v) in simple {
+        let _ = writeln!(out, "{name} {v}");
+    }
+    let _ = writeln!(out, "serve_core_budget_cores {}", state.budget.cores());
+    let _ = writeln!(out, "serve_core_budget_in_use {}", state.budget.in_use());
+    let _ = writeln!(out, "serve_core_budget_waiters {}", state.budget.waiters());
+
+    let tenants: Vec<(String, Arc<Tenant>)> = {
+        let t = state.tenants.lock().unwrap();
+        let mut v: Vec<_> = t.iter().map(|(k, v)| (k.clone(), v.clone())).collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    };
+    for (name, tenant) in tenants {
+        {
+            let coord = tenant.coord.lock().unwrap();
+            for ((stencil, backend), t) in coord.metrics.entries() {
+                let labels =
+                    format!("tenant=\"{name}\",stencil=\"{stencil}\",backend=\"{backend}\"");
+                let _ = writeln!(out, "stencil_calls_total{{{labels}}} {}", t.calls);
+                let _ = writeln!(
+                    out,
+                    "stencil_checks_seconds_total{{{labels}}} {}",
+                    t.checks.as_secs_f64()
+                );
+                let _ = writeln!(
+                    out,
+                    "stencil_execute_seconds_total{{{labels}}} {}",
+                    t.execute.as_secs_f64()
+                );
+                let _ = writeln!(out, "stencil_max_threads{{{labels}}} {}", t.max_threads);
+            }
+            for (backend, p) in coord.pool_stats() {
+                let labels = format!("tenant=\"{name}\",backend=\"{backend}\"");
+                let counters: [(&str, u64); 7] = [
+                    ("pool_buffers_taken_total", p.taken),
+                    ("pool_buffers_allocated_total", p.allocated),
+                    ("pool_tiers_interpreted_total", p.tiers_interpreted),
+                    ("pool_tiers_specialized_total", p.tiers_specialized),
+                    ("pool_strips_interpreted_total", p.strips_interpreted),
+                    ("pool_strips_guarded_total", p.strips_guarded),
+                    ("pool_blocks_interior_total", p.blocks_interior),
+                ];
+                for (metric, v) in counters {
+                    let _ = writeln!(out, "{metric}{{{labels}}} {v}");
+                }
+            }
+        }
+        let leases = tenant.leases.lock().unwrap().map.len();
+        let _ = writeln!(out, "serve_leases{{tenant=\"{name}\"}} {leases}");
+    }
+    out
+}
+
+fn op_shutdown(state: &Arc<ServerState>, req: &Request) -> Result<String, ServeError> {
+    state.shutdown.store(true, Ordering::SeqCst);
+    // Poke the accept loop so it observes the flag without a new client.
+    let _ = TcpStream::connect(state.local_addr);
+    Ok(ok_response(req.id).bool("stopping", true).finish())
+}
+
+// ---------------------------------------------------------------------------
+// Server lifecycle
+// ---------------------------------------------------------------------------
+
+/// A bound-but-not-yet-serving daemon.
+pub struct Server {
+    listener: TcpListener,
+    state: Arc<ServerState>,
+}
+
+impl Server {
+    pub fn bind(config: ServeConfig) -> Result<Server> {
+        let listener = TcpListener::bind(&config.addr)?;
+        let local_addr = listener.local_addr()?;
+        let budget = CoreBudget::new(config.cores, config.max_waiters);
+        let state = Arc::new(ServerState {
+            config,
+            local_addr,
+            tenants: Mutex::new(HashMap::new()),
+            budget,
+            coalescer: Coalescer::default(),
+            stats: ServeStats::default(),
+            shutdown: AtomicBool::new(false),
+        });
+        Ok(Server { listener, state })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.state.local_addr
+    }
+
+    /// Blocking accept loop; one handler thread per connection. Returns
+    /// after a `shutdown` request (in-flight connections finish their
+    /// current request and close).
+    pub fn run(self) -> Result<()> {
+        for stream in self.listener.incoming() {
+            if self.state.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            let Ok(stream) = stream else { continue };
+            let state = self.state.clone();
+            std::thread::Builder::new()
+                .name("gt4rs-serve-conn".to_string())
+                .spawn(move || handle_connection(&state, stream))?;
+        }
+        Ok(())
+    }
+
+    /// Bind and serve on a background thread — the in-process harness the
+    /// protocol tests and the serve bench drive.
+    pub fn spawn(config: ServeConfig) -> Result<ServerHandle> {
+        let server = Server::bind(config)?;
+        let addr = server.local_addr();
+        let state = server.state.clone();
+        let join = std::thread::Builder::new()
+            .name("gt4rs-serve-accept".to_string())
+            .spawn(move || {
+                let _ = server.run();
+            })?;
+        Ok(ServerHandle { addr, state, join: Some(join) })
+    }
+}
+
+fn handle_connection(state: &Arc<ServerState>, stream: TcpStream) {
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let Ok(line) = line else { return };
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let resp = handle_line(state, line);
+        let sent = writer
+            .write_all(resp.as_bytes())
+            .and_then(|_| writer.write_all(b"\n"))
+            .and_then(|_| writer.flush());
+        if sent.is_err() || state.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+    }
+}
+
+/// Handle to a daemon spawned with [`Server::spawn`]; shuts the daemon
+/// down on drop.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    state: Arc<ServerState>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, wake the accept loop, and join it (idempotent).
+    pub fn shutdown(&mut self) {
+        self.state.shutdown.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+        if let Some(join) = self.join.take() {
+            let _ = join.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lease_table_distinguishes_stale_from_unknown() {
+        let mut c = Coordinator::new();
+        let mk = || {
+            let s = c.stencil_library("copy", "debug").unwrap();
+            let domain = [4, 4, 2];
+            let src = s.alloc_field("src", domain).unwrap();
+            let dst = s.alloc_field("dst", domain).unwrap();
+            let inv = s
+                .bind()
+                .field("src", &src)
+                .field("dst", &dst)
+                .domain(domain)
+                .finish()
+                .unwrap();
+            Lease {
+                inv,
+                fields: vec![("src".into(), src), ("dst".into(), dst)],
+                stencil: "copy".into(),
+                backend: "debug".into(),
+                fingerprint: 1,
+            }
+        };
+        let mut table = LeaseTable::default();
+        let a = table.insert(mk(), 2);
+        let b = table.insert(mk(), 2);
+        assert!(table.get(a).is_ok());
+        assert!(table.get(b).is_ok());
+        // Never-issued ids are 404s.
+        assert_eq!(table.get(99).unwrap_err().code, crate::serve::protocol::CODE_NOT_FOUND);
+        assert_eq!(table.get(0).unwrap_err().code, crate::serve::protocol::CODE_NOT_FOUND);
+        // Eviction past the cap turns the oldest into a 410 re-bind.
+        let _c = table.insert(mk(), 2);
+        let err = table.get(a).unwrap_err();
+        assert_eq!(err.code, crate::serve::protocol::CODE_STALE_LEASE);
+        assert!(err.message.contains("re-bind"), "{}", err.message);
+    }
+
+    #[test]
+    fn coalescer_grants_exactly_one_leader_per_drain() {
+        let state = {
+            let mut c = Coordinator::new();
+            let s = c.stencil_library("copy", "debug").unwrap();
+            let domain = [4, 4, 2];
+            let src = s.alloc_field("src", domain).unwrap();
+            let dst = s.alloc_field("dst", domain).unwrap();
+            let inv = s
+                .bind()
+                .field("src", &src)
+                .field("dst", &dst)
+                .domain(domain)
+                .finish()
+                .unwrap();
+            Arc::new(Mutex::new(Lease {
+                inv,
+                fields: vec![("src".into(), src), ("dst".into(), dst)],
+                stencil: "copy".into(),
+                backend: "debug".into(),
+                fingerprint: 1,
+            }))
+        };
+        let mk_job = || {
+            Arc::new(RunJob {
+                lease: state.clone(),
+                iters: 1,
+                sharding: None,
+                tier: None,
+                scalars: Vec::new(),
+                deadline: Instant::now() + Duration::from_secs(5),
+                want: 1,
+                slot: Mutex::new(None),
+                ready: Condvar::new(),
+            })
+        };
+        let co = Coalescer::default();
+        let (_g, lead1) = co.enqueue("k", mk_job());
+        let (_g, lead2) = co.enqueue("k", mk_job());
+        assert!(lead1, "first enqueue takes leadership");
+        assert!(!lead2, "second rides along");
+        // A different group gets its own leader.
+        let (_g, lead3) = co.enqueue("other", mk_job());
+        assert!(lead3);
+    }
+}

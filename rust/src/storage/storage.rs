@@ -358,6 +358,27 @@ impl Storage {
         }
         acc
     }
+
+    /// Order-sensitive FNV-1a hash of the compute-domain values' f64 bit
+    /// patterns (i, then j, then k). Two storages hash equal iff every
+    /// domain element is bit-identical — the digest the serve protocol and
+    /// the bitwise honesty gates compare, stronger than a summed checksum
+    /// (which cancels symmetric errors).
+    pub fn domain_hash(&self) -> u64 {
+        let s = self.info.shape;
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for i in 0..s[0] as i64 {
+            for j in 0..s[1] as i64 {
+                for k in 0..s[2] as i64 {
+                    for b in self.get(i, j, k).to_bits().to_le_bytes() {
+                        h ^= b as u64;
+                        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+                    }
+                }
+            }
+        }
+        h
+    }
 }
 
 impl fmt::Debug for Storage {

@@ -1,0 +1,353 @@
+//! End-to-end tests of the `repro serve` wire protocol against an
+//! in-process daemon: concurrent multi-client runs must be bitwise
+//! identical to serial in-process execution, saturation must shed load
+//! with structured backpressure, deadlines must be honored, stale leases
+//! must come back as re-bind errors, and malformed lines must never
+//! wedge a connection.
+
+use gt4rs::jsonw::{self, Value};
+use gt4rs::serve::protocol::hex64;
+use gt4rs::serve::{ServeConfig, Server};
+use gt4rs::storage::{synthetic_fill, Storage};
+use gt4rs::{Coordinator, ExecOptions, OptLevel};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+/// One NDJSON connection: send a line, read a line, parse it.
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect to serve daemon");
+        let writer = stream.try_clone().unwrap();
+        Client { reader: BufReader::new(stream), writer }
+    }
+
+    fn request(&mut self, line: &str) -> Value {
+        self.writer.write_all(line.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+        self.writer.flush().unwrap();
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp).unwrap();
+        jsonw::parse(resp.trim()).unwrap_or_else(|e| panic!("bad response `{resp}`: {e}"))
+    }
+}
+
+fn ok(v: &Value) -> bool {
+    v.get("ok").and_then(Value::as_bool) == Some(true)
+}
+
+fn code(v: &Value) -> Option<u64> {
+    v.get("code").and_then(Value::as_u64)
+}
+
+/// `(name, sum_bits, hash)` digests from a run response.
+fn response_digests(run: &Value) -> Vec<(String, String, String)> {
+    run.get("fields")
+        .and_then(Value::as_arr)
+        .expect("run response has fields")
+        .iter()
+        .map(|f| {
+            (
+                f.get("name").unwrap().as_str().unwrap().to_string(),
+                f.get("sum_bits").unwrap().as_str().unwrap().to_string(),
+                f.get("hash").unwrap().as_str().unwrap().to_string(),
+            )
+        })
+        .collect()
+}
+
+/// Serial in-process reference: same stencil, same domain, same
+/// deterministic fill, same default scalars as the daemon's `bind`.
+fn reference_digests(
+    level: OptLevel,
+    domain: [usize; 3],
+    iters: u64,
+) -> Vec<(String, String, String)> {
+    let mut coord = Coordinator::new();
+    coord.set_exec_options(ExecOptions::new().with_opt_level(level));
+    let stencil = coord.stencil_library("hdiff", "vector").unwrap();
+    let mut fields: Vec<(String, Storage)> = Vec::new();
+    for (idx, f) in stencil.ir().fields.iter().enumerate() {
+        let mut s = stencil.alloc_field(&f.name, domain).unwrap();
+        synthetic_fill(&mut s, idx as f64);
+        fields.push((f.name.clone(), s));
+    }
+    let scalars: Vec<(String, f64)> =
+        stencil.ir().scalars.iter().map(|s| (s.name.clone(), 0.1)).collect();
+    let mut inv = stencil
+        .bind()
+        .domain(domain)
+        .fields(&fields)
+        .scalars(&scalars)
+        .finish()
+        .unwrap();
+    for _ in 0..iters {
+        let mut refs: Vec<&mut Storage> = fields.iter_mut().map(|(_, s)| s).collect();
+        inv.run(&mut refs).unwrap();
+    }
+    fields
+        .iter()
+        .map(|(n, s)| {
+            (n.clone(), hex64(s.domain_sum().to_bits()), hex64(s.domain_hash()))
+        })
+        .collect()
+}
+
+const LEVELS: [OptLevel; 4] = [OptLevel::O0, OptLevel::O1, OptLevel::O2, OptLevel::O3];
+
+/// Four concurrent clients, all tenants sharing one stencil library,
+/// across O0–O3, on a domain small enough to ride the coalescer: every
+/// wire digest must be bit-identical to the serial in-process reference.
+#[test]
+fn concurrent_clients_match_serial_in_process_bitwise() {
+    let server = Server::spawn(ServeConfig::default()).unwrap();
+    let addr = server.addr();
+    const DOMAIN: [usize; 3] = [16, 16, 8]; // 2048 elems → coalesced path
+    const ITERS: u64 = 3;
+
+    let expected: Vec<_> =
+        LEVELS.iter().map(|&l| reference_digests(l, DOMAIN, ITERS)).collect();
+
+    let clients: Vec<_> = (0..4)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut client = Client::connect(addr);
+                LEVELS
+                    .iter()
+                    .map(|level| {
+                        let bind = client.request(&format!(
+                            r#"{{"op":"bind","tenant":"soak","stencil":"hdiff","domain":[16,16,8],"options":{{"opt_level":"{level}"}},"id":{c}}}"#
+                        ));
+                        assert!(ok(&bind), "bind failed: {bind:?}");
+                        let lease = bind.get("lease").unwrap().as_u64().unwrap();
+                        let run = client.request(&format!(
+                            r#"{{"op":"run","tenant":"soak","lease":{lease},"iters":{ITERS},"options":{{"threads":2}}}}"#
+                        ));
+                        assert!(ok(&run), "run failed: {run:?}");
+                        response_digests(&run)
+                    })
+                    .collect::<Vec<_>>()
+            })
+        })
+        .collect();
+
+    for handle in clients {
+        let per_client = handle.join().unwrap();
+        for (got, want) in per_client.iter().zip(&expected) {
+            assert_eq!(got, want, "wire digests diverged from serial reference");
+        }
+    }
+}
+
+/// The large-domain direct path (no coalescing) is bitwise identical too.
+#[test]
+fn direct_path_matches_serial_reference() {
+    let server = Server::spawn(ServeConfig::default()).unwrap();
+    let mut client = Client::connect(server.addr());
+    const DOMAIN: [usize; 3] = [24, 20, 12]; // 5760 elems → direct path
+    let expected = reference_digests(OptLevel::O2, DOMAIN, 2);
+    let bind = client.request(
+        r#"{"op":"bind","stencil":"hdiff","domain":[24,20,12],"options":{"opt_level":"2"}}"#,
+    );
+    assert!(ok(&bind), "{bind:?}");
+    let lease = bind.get("lease").unwrap().as_u64().unwrap();
+    let run = client.request(&format!(r#"{{"op":"run","lease":{lease},"iters":2}}"#));
+    assert!(ok(&run), "{run:?}");
+    assert_eq!(response_digests(&run), expected);
+}
+
+/// Bind + start a long cheap-to-describe run that occupies the (single)
+/// budget core; returns the join handle carrying the run response.
+fn spawn_holder(addr: SocketAddr, iters: u64) -> std::thread::JoinHandle<Value> {
+    std::thread::spawn(move || {
+        let mut c = Client::connect(addr);
+        let bind = c.request(
+            r#"{"op":"bind","tenant":"holder","stencil":"hdiff","domain":[64,64,32],"options":{"opt_level":"0"}}"#,
+        );
+        assert!(ok(&bind), "{bind:?}");
+        let lease = bind.get("lease").unwrap().as_u64().unwrap();
+        c.request(&format!(
+            r#"{{"op":"run","tenant":"holder","lease":{lease},"iters":{iters},"deadline_ms":120000}}"#
+        ))
+    })
+}
+
+/// Poll `/metrics` until the core budget shows `want` cores in use.
+fn wait_for_in_use(client: &mut Client, want: u64) {
+    for _ in 0..5000 {
+        let m = client.request(r#"{"op":"metrics"}"#);
+        let text = m.get("text").unwrap().as_str().unwrap().to_string();
+        if text.lines().any(|l| l == format!("serve_core_budget_in_use {want}")) {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    panic!("core budget never reached in_use {want}");
+}
+
+/// With one core and a zero-length wait queue, a second run is shed with
+/// a structured 429 (code + retry hint), not queued into a blowup.
+#[test]
+fn saturation_sheds_load_with_structured_backpressure() {
+    let config = ServeConfig {
+        cores: 1,
+        max_waiters: 0,
+        small_domain_elems: 0, // coalescing off: every run is admitted directly
+        ..ServeConfig::default()
+    };
+    let server = Server::spawn(config).unwrap();
+    let addr = server.addr();
+    let holder = spawn_holder(addr, 400);
+    let mut probe = Client::connect(addr);
+    wait_for_in_use(&mut probe, 1);
+
+    let bind = probe.request(
+        r#"{"op":"bind","tenant":"probe","stencil":"hdiff","domain":[16,16,8]}"#,
+    );
+    assert!(ok(&bind), "{bind:?}");
+    let lease = bind.get("lease").unwrap().as_u64().unwrap();
+    let shed = probe.request(&format!(
+        r#"{{"op":"run","tenant":"probe","lease":{lease},"deadline_ms":30000}}"#
+    ));
+    assert!(!ok(&shed), "expected backpressure, got {shed:?}");
+    assert_eq!(code(&shed), Some(429), "{shed:?}");
+    assert!(shed.get("retry_after_ms").and_then(Value::as_u64).is_some(), "{shed:?}");
+    assert!(
+        shed.get("error").unwrap().as_str().unwrap().contains("saturated"),
+        "{shed:?}"
+    );
+
+    assert!(ok(&holder.join().unwrap()), "holder run should have succeeded");
+
+    // The shed request is visible in the metrics counters.
+    let m = probe.request(r#"{"op":"metrics"}"#);
+    let text = m.get("text").unwrap().as_str().unwrap().to_string();
+    assert!(
+        text.lines().any(|l| {
+            l.starts_with("serve_backpressure_total ") && !l.ends_with(" 0")
+        }),
+        "{text}"
+    );
+}
+
+/// A queued run whose deadline lapses while waiting for cores comes back
+/// as a structured 408, and the wait queue drains.
+#[test]
+fn queued_run_times_out_at_its_deadline() {
+    let config = ServeConfig {
+        cores: 1,
+        max_waiters: 8,
+        small_domain_elems: 0,
+        ..ServeConfig::default()
+    };
+    let server = Server::spawn(config).unwrap();
+    let addr = server.addr();
+    let holder = spawn_holder(addr, 400);
+    let mut probe = Client::connect(addr);
+    wait_for_in_use(&mut probe, 1);
+
+    let bind = probe.request(
+        r#"{"op":"bind","tenant":"probe","stencil":"hdiff","domain":[16,16,8]}"#,
+    );
+    assert!(ok(&bind), "{bind:?}");
+    let lease = bind.get("lease").unwrap().as_u64().unwrap();
+    let timed_out = probe.request(&format!(
+        r#"{{"op":"run","tenant":"probe","lease":{lease},"deadline_ms":1}}"#
+    ));
+    assert!(!ok(&timed_out), "expected deadline error, got {timed_out:?}");
+    assert_eq!(code(&timed_out), Some(408), "{timed_out:?}");
+
+    assert!(ok(&holder.join().unwrap()));
+}
+
+/// Evicted leases produce 410 with a re-bind hint; never-issued lease ids
+/// and unknown tenants produce 404.
+#[test]
+fn stale_and_unknown_leases_are_distinguished() {
+    let config = ServeConfig { max_leases_per_tenant: 1, ..ServeConfig::default() };
+    let server = Server::spawn(config).unwrap();
+    let mut client = Client::connect(server.addr());
+
+    let bind1 = client
+        .request(r#"{"op":"bind","stencil":"hdiff","domain":[16,16,8]}"#);
+    assert!(ok(&bind1), "{bind1:?}");
+    let first = bind1.get("lease").unwrap().as_u64().unwrap();
+    let bind2 = client
+        .request(r#"{"op":"bind","stencil":"hdiff","domain":[16,16,8]}"#);
+    assert!(ok(&bind2), "{bind2:?}");
+
+    // The cap is 1, so the first lease was evicted: stale, re-bindable.
+    let stale = client.request(&format!(r#"{{"op":"run","lease":{first}}}"#));
+    assert_eq!(code(&stale), Some(410), "{stale:?}");
+    assert!(stale.get("error").unwrap().as_str().unwrap().contains("re-bind"), "{stale:?}");
+
+    // A lease id that was never issued is a plain 404.
+    let unknown = client.request(r#"{"op":"run","lease":999}"#);
+    assert_eq!(code(&unknown), Some(404), "{unknown:?}");
+
+    // As is a tenant that never bound anything.
+    let no_tenant = client.request(r#"{"op":"run","tenant":"ghost","lease":1}"#);
+    assert_eq!(code(&no_tenant), Some(404), "{no_tenant:?}");
+}
+
+/// Malformed lines produce structured 400s and leave the connection
+/// usable; request ids are echoed when recoverable.
+#[test]
+fn malformed_requests_do_not_wedge_the_connection() {
+    let server = Server::spawn(ServeConfig::default()).unwrap();
+    let mut client = Client::connect(server.addr());
+
+    let garbage = client.request("this is not json");
+    assert_eq!(code(&garbage), Some(400), "{garbage:?}");
+
+    let unknown_field = client.request(r#"{"op":"metrics","wat":1}"#);
+    assert_eq!(code(&unknown_field), Some(400), "{unknown_field:?}");
+
+    let bad_op = client.request(r#"{"op":"frobnicate","id":7}"#);
+    assert_eq!(code(&bad_op), Some(400), "{bad_op:?}");
+    assert_eq!(bad_op.get("id").and_then(Value::as_u64), Some(7), "{bad_op:?}");
+
+    // Compile without a stencil name: a handler-level 400.
+    let no_stencil = client.request(r#"{"op":"compile"}"#);
+    assert_eq!(code(&no_stencil), Some(400), "{no_stencil:?}");
+
+    // The connection is still fine.
+    let m = client.request(r#"{"op":"metrics"}"#);
+    assert!(ok(&m), "{m:?}");
+    assert!(m.get("text").unwrap().as_str().unwrap().contains("serve_requests_total"));
+}
+
+/// `compile` responses carry the opt-salted fingerprint: different opt
+/// levels are different cache entries, same level is the same entry.
+#[test]
+fn compile_fingerprints_are_opt_salted_across_the_wire() {
+    let server = Server::spawn(ServeConfig::default()).unwrap();
+    let mut client = Client::connect(server.addr());
+    let fp = |resp: &Value| resp.get("fingerprint").unwrap().as_str().unwrap().to_string();
+
+    let o2a = client.request(r#"{"op":"compile","stencil":"hdiff"}"#);
+    let o2b = client.request(r#"{"op":"compile","stencil":"hdiff"}"#);
+    let o0 = client
+        .request(r#"{"op":"compile","stencil":"hdiff","options":{"opt_level":0}}"#);
+    assert!(ok(&o2a) && ok(&o2b) && ok(&o0));
+    assert_eq!(fp(&o2a), fp(&o2b));
+    assert_ne!(fp(&o2a), fp(&o0));
+}
+
+/// The shutdown op stops the accept loop (join returns), and the
+/// response still makes it back to the requesting client.
+#[test]
+fn shutdown_op_stops_the_daemon() {
+    let mut server = Server::spawn(ServeConfig::default()).unwrap();
+    let mut client = Client::connect(server.addr());
+    let resp = client.request(r#"{"op":"shutdown"}"#);
+    assert!(ok(&resp), "{resp:?}");
+    assert_eq!(resp.get("stopping").and_then(Value::as_bool), Some(true));
+    // Joins promptly because the op already poked the accept loop.
+    server.shutdown();
+}
