@@ -105,6 +105,37 @@ if [[ "${1:-}" != "quick" ]]; then
         echo "serve bench --json: python3 missing, structural grep passed"
     fi
 
+    # The A9 warmstart bench (tiny mode) gates on warm-loaded artifacts
+    # being bitwise-identical to cold compiles at O0-O3 x tier x sharding
+    # before timing anything; its JSON artifact must parse under the same
+    # contract.
+    step cargo bench --bench warmstart -- --tiny --json /tmp/gt4rs_warmstart.json
+    echo
+    echo "=== BENCH_warmstart.json parse smoke ==="
+    if command -v python3 >/dev/null 2>&1; then
+        python3 -m json.tool /tmp/gt4rs_warmstart.json >/dev/null
+        echo "warmstart bench --json: parseable JSON"
+    else
+        grep -q '"speedup_warm_vs_cold"' /tmp/gt4rs_warmstart.json
+        echo "warmstart bench --json: python3 missing, structural grep passed"
+    fi
+
+    # Two-process warm-start smoke: `repro warm` populates a cache
+    # directory, then a *fresh process* serves the same stencil with zero
+    # pipeline runs (the pipeline_compiles honesty counter in the JSON
+    # output proves it) and at least one persist hit.
+    echo
+    echo "=== repro warm two-process smoke ==="
+    WARM_DIR=$(mktemp -d /tmp/gt4rs_warm.XXXXXX)
+    ./target/release/repro warm --cache-dir "$WARM_DIR" --stencil hdiff --opt-level 3
+    ./target/release/repro run --stencil hdiff --opt-level 3 --backend vector \
+        --domain 8x8x4 --cache-dir "$WARM_DIR" --json > /tmp/gt4rs_warmrun.json
+    grep -q '"pipeline_compiles":0' /tmp/gt4rs_warmrun.json
+    grep -q '"persist_hits":[1-9]' /tmp/gt4rs_warmrun.json
+    ./target/release/repro cache --cache-dir "$WARM_DIR" | grep -q 'ir'
+    rm -rf "$WARM_DIR"
+    echo "repro warm smoke: fresh process served hdiff with 0 pipeline compiles"
+
     # serve smoke: daemon on an ephemeral port, one bind/run/metrics/
     # shutdown round-trip through `repro client`, clean exit.
     echo

@@ -1,0 +1,243 @@
+//! A9: warm start from the persistent artifact store (`crate::persist`)
+//! vs a cold dsl→analysis→opt pipeline run. For each library stencil ×
+//! opt level this times two "fresh process" configurations:
+//!
+//! * `cold` — a brand-new coordinator with **no** cache attached:
+//!   `compile_library` runs the full pipeline, `prepare("vector")`
+//!   lowers the fused tape from scratch (at O3);
+//! * `warm` — a brand-new coordinator + a fresh [`PersistStore`] handle
+//!   over a pre-warmed cache directory: the IR comes back from disk
+//!   (zero pipeline runs, asserted via the `pipeline_compiles` honesty
+//!   counter every single iteration) and the O3 tape skips lowering.
+//!
+//! Honesty gates run before any timing: at **every** opt level O0–O3 the
+//! warm-loaded artifact must produce *bitwise*-identical results to its
+//! cold twin across executor tiers and sharding plans (the same matrix
+//! `tests/persist_warmstart.rs` pins). A latency table for a cache that
+//! changed the answer would be worthless.
+//!
+//!     cargo bench --bench warmstart [-- --tiny] [-- --json PATH]
+//!
+//! `--tiny` shrinks the stencil set/iterations for CI smoke runs;
+//! `--json PATH` writes every measured row as a JSON array, the
+//! `BENCH_warmstart.json` CI artifact published next to
+//! `BENCH_kernels.json` and `BENCH_serve.json`.
+
+#[path = "harness.rs"]
+mod harness;
+
+use gt4rs::coordinator::Coordinator;
+use gt4rs::opt::{ExecOptions, OptLevel};
+use gt4rs::persist::PersistStore;
+use gt4rs::storage::{synthetic_fill, Storage};
+use gt4rs::{ExecTier, Sharding};
+use harness::*;
+use std::sync::Arc;
+
+const LEVELS: [OptLevel; 4] = [OptLevel::O0, OptLevel::O1, OptLevel::O2, OptLevel::O3];
+/// The schedule matrix every warm artifact must agree with its cold
+/// twin on (tiers only differentiate at O3; elsewhere they are free).
+const SCHEDULES: [(ExecTier, Sharding); 3] = [
+    (ExecTier::Interpreted, Sharding::Off),
+    (ExecTier::Specialized, Sharding::Off),
+    (ExecTier::Specialized, Sharding::Threads(2)),
+];
+
+struct Row {
+    stencil: String,
+    opt_level: String,
+    phase: &'static str,
+    median_ns: u128,
+    speedup_warm_vs_cold: f64,
+    /// Pipeline runs observed per timed call — 1 for cold, 0 for warm
+    /// (asserted, then reported so the JSON artifact carries the proof).
+    pipeline_compiles_per_call: u64,
+}
+
+impl Row {
+    fn json(&self) -> String {
+        format!(
+            "{{\"bench\":\"A9\",\"stencil\":\"{}\",\"opt_level\":\"{}\",\
+             \"phase\":\"{}\",\"median_ns\":{},\"speedup_warm_vs_cold\":{:.4},\
+             \"pipeline_compiles_per_call\":{}}}",
+            self.stencil,
+            self.opt_level,
+            self.phase,
+            self.median_ns,
+            self.speedup_warm_vs_cold,
+            self.pipeline_compiles_per_call
+        )
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let tiny = args.iter().any(|a| a == "--tiny");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|p| args.get(p + 1))
+        .cloned();
+
+    let (stencils, iters): (&[&str], usize) =
+        if tiny { (&["hdiff"], 3) } else { (&["hdiff", "vadv", "diffuse"], 9) };
+
+    honesty_gate(stencils);
+
+    let mut rows: Vec<Row> = Vec::new();
+    a9_warmstart(stencils, iters, &mut rows);
+
+    if let Some(path) = json_path {
+        let body: Vec<String> = rows.iter().map(Row::json).collect();
+        let doc = format!("[\n  {}\n]\n", body.join(",\n  "));
+        std::fs::write(&path, doc).expect("write warmstart JSON artifact");
+        println!("# wrote {} rows to {path}", rows.len());
+    }
+}
+
+fn scratch_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("gt4rs_bench_ws_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn coordinator(level: OptLevel, store: Option<&Arc<PersistStore>>) -> Coordinator {
+    let mut c = Coordinator::new();
+    c.set_exec_options(ExecOptions::new().with_opt_level(level));
+    if let Some(store) = store {
+        c.set_persist(store.clone());
+    }
+    c
+}
+
+/// Run `fp` on the vector backend under one schedule; returns
+/// `(name, sum_bits, hash)` digests in declaration order.
+fn run_digests(
+    coord: &mut Coordinator,
+    fp: u64,
+    tier: ExecTier,
+    sharding: Sharding,
+) -> Vec<(String, u64, u64)> {
+    let stencil = coord.stencil_for(fp, "vector").unwrap();
+    let domain = [10, 9, 6];
+    let mut fields: Vec<(String, Storage)> = Vec::new();
+    for (idx, f) in stencil.ir().fields.iter().enumerate() {
+        let mut s = stencil.alloc_field(&f.name, domain).unwrap();
+        synthetic_fill(&mut s, idx as f64);
+        fields.push((f.name.clone(), s));
+    }
+    let scalars: Vec<(String, f64)> =
+        stencil.ir().scalars.iter().map(|s| (s.name.clone(), 0.1)).collect();
+    let mut inv = stencil
+        .bind()
+        .domain(domain)
+        .fields(&fields)
+        .scalars(&scalars)
+        .finish()
+        .unwrap();
+    inv.set_exec_tier(tier);
+    inv.set_sharding(sharding);
+    let mut refs: Vec<&mut Storage> = fields.iter_mut().map(|(_, s)| s).collect();
+    inv.run(&mut refs).unwrap();
+    fields
+        .iter()
+        .map(|(n, s)| (n.clone(), s.domain_sum().to_bits(), s.domain_hash()))
+        .collect()
+}
+
+/// Warm artifacts must be bitwise-indistinguishable from cold compiles
+/// at every opt level × executor tier × sharding plan before a single
+/// timed iteration runs.
+fn honesty_gate(stencils: &[&str]) {
+    let dir = scratch_dir("gate");
+    for level in LEVELS {
+        let store = Arc::new(PersistStore::open(&dir).unwrap());
+        let mut cold = coordinator(level, Some(&store));
+        let mut expected = Vec::new();
+        for name in stencils {
+            let fp = cold.compile_library(name).unwrap();
+            let runs: Vec<_> = SCHEDULES
+                .iter()
+                .map(|(tier, sharding)| run_digests(&mut cold, fp, *tier, *sharding))
+                .collect();
+            expected.push((*name, fp, runs));
+        }
+        drop(cold);
+        drop(store);
+
+        let store = Arc::new(PersistStore::open(&dir).unwrap());
+        let mut warm = coordinator(level, Some(&store));
+        for (name, fp, runs) in &expected {
+            let fp2 = warm.compile_library(name).unwrap();
+            assert_eq!(fp2, *fp, "O{level} {name}: warm cache key diverged");
+            for ((tier, sharding), cold_digests) in SCHEDULES.iter().zip(runs) {
+                let warm_digests = run_digests(&mut warm, fp2, *tier, *sharding);
+                assert_eq!(
+                    &warm_digests, cold_digests,
+                    "O{level} {name} {tier:?}/{sharding:?}: warm run not bitwise-identical"
+                );
+            }
+        }
+        assert_eq!(warm.pipeline_compiles(), 0, "O{level}: warm gate pass ran the pipeline");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+    println!("# honesty gate passed: warm == cold bitwise at O0-O3 x tier x sharding");
+}
+
+fn a9_warmstart(stencils: &[&str], iters: usize, rows: &mut Vec<Row>) {
+    println!("# A9: persistent-store warm start vs cold pipeline compile (compile+prepare latency)");
+    println!(
+        "{:<10} {:>6} {:>8} {:>12} {:>14}",
+        "stencil", "level", "phase", "median", "warm-vs-cold"
+    );
+    for name in stencils {
+        for level in LEVELS {
+            // Pre-warm a cache directory once; the warm phase reopens it
+            // with a fresh store handle + coordinator every iteration.
+            let dir = scratch_dir("time");
+            {
+                let store = Arc::new(PersistStore::open(&dir).unwrap());
+                let mut c = coordinator(level, Some(&store));
+                let fp = c.compile_library(name).unwrap();
+                c.prepare(fp, "vector").unwrap();
+            }
+
+            let cold = bench(iters, || {
+                let mut c = coordinator(level, None);
+                let fp = c.compile_library(name).unwrap();
+                c.prepare(fp, "vector").unwrap();
+                assert_eq!(c.pipeline_compiles(), 1, "cold call must run the pipeline");
+            });
+            let warm = bench(iters, || {
+                let store = Arc::new(PersistStore::open(&dir).unwrap());
+                let mut c = coordinator(level, Some(&store));
+                let fp = c.compile_library(name).unwrap();
+                c.prepare(fp, "vector").unwrap();
+                assert_eq!(c.pipeline_compiles(), 0, "warm call must skip the pipeline");
+            });
+            let _ = std::fs::remove_dir_all(&dir);
+
+            let speedup =
+                cold.median.as_secs_f64() / warm.median.as_secs_f64().max(1e-12);
+            for (phase, sample, pipeline) in
+                [("cold", cold, 1u64), ("warm", warm, 0u64)]
+            {
+                println!(
+                    "{name:<10} {:>6} {phase:>8} {:>12} {:>13.2}x",
+                    format!("O{level}"),
+                    fmt_duration(sample.median),
+                    if phase == "warm" { speedup } else { 1.0 },
+                );
+                rows.push(Row {
+                    stencil: name.to_string(),
+                    opt_level: format!("O{level}"),
+                    phase,
+                    median_ns: sample.median.as_nanos(),
+                    speedup_warm_vs_cold: if phase == "warm" { speedup } else { 1.0 },
+                    pipeline_compiles_per_call: pipeline,
+                });
+            }
+        }
+    }
+    println!();
+}

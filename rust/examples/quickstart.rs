@@ -1,8 +1,9 @@
 //! Quickstart: define a stencil in GTScript-RS, compile it to a
 //! first-class `Stencil` handle, bind its arguments **once**, run it
-//! many times, fan the same compiled handle out across threads, and
-//! split a *single call* across cores with intra-call domain sharding —
-//! the 60-second tour of the framework.
+//! many times, fan the same compiled handle out across threads, split a
+//! *single call* across cores with intra-call domain sharding, and
+//! warm-start a fresh coordinator from the on-disk artifact store — the
+//! 60-second tour of the framework.
 //!
 //!     cargo run --release --example quickstart
 //!
@@ -283,6 +284,50 @@ fn main() -> Result<()> {
         assert_eq!(wire_hash, local_hash, "wire run must match in-process bitwise");
         println!("serve round-trip agrees bitwise: hash {wire_hash}");
         server.shutdown();
+    }
+
+    // 11. Warm start: attach a persistent artifact store and the
+    //     compiled stencil survives the "process" (played here by a
+    //     brand-new coordinator). The reload runs **zero**
+    //     dsl→analysis→opt pipelines — the `pipeline_compiles` counter
+    //     proves it — and is bitwise-identical to the fresh compile.
+    //     Across real processes this is `repro warm --cache-dir DIR`
+    //     followed by `repro run ... --cache-dir DIR` (or the
+    //     `REPRO_CACHE_DIR` environment variable).
+    {
+        use gt4rs::persist::PersistStore;
+        use std::sync::Arc;
+
+        let dir = std::env::temp_dir().join(format!("gt4rs_quickstart_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+
+        let mut first = Coordinator::new();
+        first.set_persist(Arc::new(PersistStore::open(&dir)?));
+        first.stencil(SRC, "smooth", "vector", &Default::default())?;
+        assert_eq!(first.pipeline_compiles(), 1);
+        drop(first);
+
+        let mut fresh = Coordinator::new();
+        fresh.set_persist(Arc::new(PersistStore::open(&dir)?));
+        let warm = fresh.stencil(SRC, "smooth", "vector", &Default::default())?;
+        assert_eq!(fresh.pipeline_compiles(), 0, "warm start must skip the pipeline");
+        let mut pphi = warm.alloc_field("phi", domain)?;
+        let mut pout = warm.alloc_field("out", domain)?;
+        fill(&mut pphi);
+        warm.bind()
+            .field("phi", &pphi)
+            .field("out", &pout)
+            .scalar("w", 0.5)
+            .domain(domain)
+            .finish()?
+            .run(&mut [&mut pphi, &mut pout])?;
+        assert_eq!(
+            pout.domain_sum().to_bits(),
+            sum_vector.to_bits(),
+            "warm-started stencil must match the fresh compile bitwise"
+        );
+        println!("warm start from disk: 0 pipeline runs, checksum matches bitwise");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     println!("quickstart OK");

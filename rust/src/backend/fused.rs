@@ -107,7 +107,7 @@ pub struct FusedProgram {
     /// Allocation extent per slot, dense by slot index (for demoted slots:
     /// the analysis extent unioned with every writer's compute extent) —
     /// sizes scratch buffers and ring planes with no hashing at run time.
-    alloc: Vec<Extent>,
+    pub(crate) alloc: Vec<Extent>,
 }
 
 impl FusedProgram {

@@ -97,6 +97,14 @@ pub trait Backend: Send + Sync {
     fn pool_stats(&self) -> Option<vector::PoolStats> {
         None
     }
+
+    /// Attach a persistent artifact store (see [`crate::persist`]). The
+    /// coordinator forwards its store to every backend it creates;
+    /// backends with process-surviving artifacts (`vector`'s compiled
+    /// fused tapes, `pjrt-aot`'s HLO text) load-or-compile through it.
+    /// Default: no-op — interpreting and JIT-only backends have nothing
+    /// worth persisting beyond the IR the coordinator already stores.
+    fn set_persist(&self, _store: &std::sync::Arc<crate::persist::PersistStore>) {}
 }
 
 /// Names of all built-in backends, in the tier order of Fig. 3.

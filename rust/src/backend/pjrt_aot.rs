@@ -73,6 +73,10 @@ struct AotInner {
     cache: HashMap<(String, [usize; 3]), Arc<Executable>>,
     /// Reused host staging buffers (see EXPERIMENTS.md §Perf).
     staging: Vec<Vec<f64>>,
+    /// Optional persist store (see [`crate::persist`]): HLO text is
+    /// load-or-compiled through it, so a warmed cache serves artifacts
+    /// even when the `artifacts/` directory is absent.
+    persist: Option<Arc<crate::persist::PersistStore>>,
 }
 
 impl PjrtAotBackend {
@@ -88,6 +92,7 @@ impl PjrtAotBackend {
                 runtime,
                 cache: HashMap::new(),
                 staging: Vec::new(),
+                persist: None,
             }),
         }
     }
@@ -132,12 +137,46 @@ impl AotInner {
         if let Some(e) = self.cache.get(&key) {
             return Ok(e.clone());
         }
+        // Persist key: the artifact file stem (stencil, variant, domain —
+        // everything that shape-specializes the program).
+        let pkey = path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .map(|n| n.trim_end_matches(".hlo.txt").to_string());
+        if let (Some(store), Some(pkey)) = (self.persist.clone(), &pkey) {
+            if let Some(payload) = store.load("hlo", pkey) {
+                // `load_hlo_text` wants a file: stage the payload next to
+                // the store (same filesystem, private name) and clean up.
+                let tmp = store.root().join(format!(
+                    ".stage_{pkey}.{}.hlo.txt",
+                    std::process::id()
+                ));
+                let loaded = std::fs::write(&tmp, &payload)
+                    .ok()
+                    .and_then(|()| self.runtime.load_hlo_text(&tmp).ok());
+                let _ = std::fs::remove_file(&tmp);
+                match loaded {
+                    Some(exe) => {
+                        let exe = Arc::new(exe);
+                        self.cache.insert(key, exe.clone());
+                        return Ok(exe);
+                    }
+                    // Digest-valid but not loadable HLO: demote the hit.
+                    None => store.reject_loaded(),
+                }
+            }
+        }
         let exe = Arc::new(self.runtime.load_hlo_text(path).with_context(|| {
             format!(
                 "no AOT artifact for stencil `{stencil}` at domain {domain:?} — run `make artifacts` (looked at {})",
                 path.display()
             )
         })?);
+        if let (Some(store), Some(pkey)) = (&self.persist, &pkey) {
+            if let Ok(text) = std::fs::read_to_string(path) {
+                let _ = store.store("hlo", pkey, &text);
+            }
+        }
         self.cache.insert(key, exe.clone());
         Ok(exe)
     }
@@ -213,6 +252,10 @@ impl AotInner {
 impl Backend for PjrtAotBackend {
     fn name(&self) -> &'static str {
         "pjrt-aot"
+    }
+
+    fn set_persist(&self, store: &Arc<crate::persist::PersistStore>) {
+        self.inner.lock().unwrap().persist = Some(store.clone());
     }
 
     fn run(&self, ir: &StencilIr, args: &mut StencilArgs) -> Result<()> {

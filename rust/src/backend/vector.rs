@@ -69,6 +69,10 @@ pub struct VectorBackend {
     /// dispatches from many handle threads each get their own pool, so
     /// outer concurrency and inner sharding compose without contention.
     shard_pools: Mutex<Vec<WorkerPool>>,
+    /// Optional on-disk artifact store (see [`crate::persist`]): when
+    /// attached, fused tapes are loaded from / stored to it so `--opt-level
+    /// 3` warm starts skip tape lowering entirely.
+    persist: Mutex<Option<Arc<crate::persist::PersistStore>>>,
 }
 
 impl VectorBackend {
@@ -121,8 +125,39 @@ impl VectorBackend {
                 None => {
                     // `fast_math` is part of the opt tag and therefore of
                     // `ir.fingerprint`, so exact and relaxed plans never
-                    // share a cache entry.
-                    let compiled = Arc::new(FusedProgram::compile(&program, ir.fast_math));
+                    // share a cache entry — the persist key inherits the
+                    // same property.
+                    let store = self.persist.lock().unwrap().clone();
+                    let key = format!("{:016x}", ir.fingerprint);
+                    let loaded = store.as_ref().and_then(|s| {
+                        let payload = s.load("tape", &key)?;
+                        let classes: Vec<StorageClass> =
+                            program.slots.iter().map(|slot| slot.storage).collect();
+                        match crate::persist::tapeser::fused_from_json(
+                            &payload,
+                            &classes,
+                            ir.fast_math,
+                        ) {
+                            Some(fp) => Some(Arc::new(fp)),
+                            None => {
+                                // Digest-valid envelope but semantically
+                                // unusable payload: demote the hit.
+                                s.reject_loaded();
+                                None
+                            }
+                        }
+                    });
+                    let compiled = match loaded {
+                        Some(fp) => fp,
+                        None => {
+                            let fp = Arc::new(FusedProgram::compile(&program, ir.fast_math));
+                            if let Some(s) = &store {
+                                let _ =
+                                    s.store("tape", &key, &crate::persist::tapeser::fused_to_json(&fp));
+                            }
+                            fp
+                        }
+                    };
                     let mut fused = self.fused.write().unwrap();
                     fused.entry(ir.fingerprint).or_insert(compiled).clone()
                 }
@@ -948,6 +983,10 @@ impl Backend for VectorBackend {
     fn prepare(&self, ir: &StencilIr) -> Result<()> {
         self.programs_for(ir)?;
         Ok(())
+    }
+
+    fn set_persist(&self, store: &Arc<crate::persist::PersistStore>) {
+        *self.persist.lock().unwrap() = Some(store.clone());
     }
 
     fn run(&self, ir: &StencilIr, args: &mut StencilArgs) -> Result<()> {

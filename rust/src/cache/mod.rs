@@ -12,14 +12,15 @@
 //!   so artifacts compiled at different opt levels never share a slot;
 //! * an in-memory stencil cache ([`StencilCache`]) used by the coordinator
 //!   so re-compiling an unchanged source is a hash lookup;
-//! * an on-disk artifact store ([`DiskCache`]) keyed by fingerprint, used
-//!   to persist generated HLO text across processes (the analog of
-//!   GT4Py's `.gt_cache` directory).
+//! * the on-disk half — persisting artifacts across processes, the analog
+//!   of GT4Py's `.gt_cache` directory — lives in [`crate::persist`]: a
+//!   versioned, integrity-checked store the coordinator consults before
+//!   running the pipeline and the backends use for compiled tapes and
+//!   HLO text.
 
 use crate::ir::implir::StencilIr;
-use anyhow::{Context, Result};
+use anyhow::Result;
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 /// In-memory cache of analyzed stencils keyed by fingerprint.
@@ -64,50 +65,6 @@ impl StencilCache {
     }
 }
 
-/// On-disk cache directory: text blobs keyed by `(kind, fingerprint)`.
-pub struct DiskCache {
-    root: PathBuf,
-}
-
-impl DiskCache {
-    /// Default location, overridable with `GT4RS_CACHE_DIR`.
-    pub fn default_dir() -> PathBuf {
-        std::env::var("GT4RS_CACHE_DIR")
-            .map(PathBuf::from)
-            .unwrap_or_else(|_| PathBuf::from(".gt4rs_cache"))
-    }
-
-    pub fn new(root: impl AsRef<Path>) -> Result<DiskCache> {
-        let root = root.as_ref().to_path_buf();
-        std::fs::create_dir_all(&root)
-            .with_context(|| format!("creating cache dir {}", root.display()))?;
-        Ok(DiskCache { root })
-    }
-
-    fn path(&self, kind: &str, fingerprint: u64) -> PathBuf {
-        self.root.join(format!("{kind}_{fingerprint:016x}.txt"))
-    }
-
-    pub fn get(&self, kind: &str, fingerprint: u64) -> Option<String> {
-        std::fs::read_to_string(self.path(kind, fingerprint)).ok()
-    }
-
-    pub fn put(&self, kind: &str, fingerprint: u64, data: &str) -> Result<()> {
-        let p = self.path(kind, fingerprint);
-        // Write-then-rename for atomicity under concurrent builds.
-        let tmp = p.with_extension("tmp");
-        std::fs::write(&tmp, data)
-            .with_context(|| format!("writing cache file {}", tmp.display()))?;
-        std::fs::rename(&tmp, &p)
-            .with_context(|| format!("publishing cache file {}", p.display()))?;
-        Ok(())
-    }
-
-    pub fn contains(&self, kind: &str, fingerprint: u64) -> bool {
-        self.path(kind, fingerprint).is_file()
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -140,21 +97,5 @@ mod tests {
         let a = cache.get_or_insert(fp, || Ok(ir)).unwrap();
         let b = cache.get_or_insert(fp, || panic!("recompile")).unwrap();
         assert!(Arc::ptr_eq(&a, &b), "cache hit must not copy the IR");
-    }
-
-    #[test]
-    fn disk_cache_roundtrip() {
-        let dir = std::env::temp_dir().join(format!("gt4rs_cache_test_{}", std::process::id()));
-        let _ = std::fs::remove_dir_all(&dir);
-        let cache = DiskCache::new(&dir).unwrap();
-        assert!(!cache.contains("hlo", 42));
-        assert_eq!(cache.get("hlo", 42), None);
-        cache.put("hlo", 42, "HloModule m").unwrap();
-        assert!(cache.contains("hlo", 42));
-        assert_eq!(cache.get("hlo", 42).unwrap(), "HloModule m");
-        // Different kind or fingerprint miss.
-        assert!(!cache.contains("hlo", 43));
-        assert!(!cache.contains("cpp", 42));
-        let _ = std::fs::remove_dir_all(&dir);
     }
 }

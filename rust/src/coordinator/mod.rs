@@ -41,6 +41,7 @@ use crate::dsl::parser::parse_module;
 use crate::ir::canon;
 use crate::ir::implir::StencilIr;
 use crate::opt::{ExecOptions, OptConfig, OptLevel};
+use crate::persist::{self, PersistStore};
 use crate::stdlib;
 use crate::storage::Storage;
 use anyhow::{anyhow, Result};
@@ -143,6 +144,17 @@ pub struct Coordinator {
     /// [`Coordinator::exec_options`]; a raw [`Coordinator::set_opt_config`]
     /// escape-hatch call leaves it at the last level set).
     level: OptLevel,
+    /// Optional on-disk artifact store (see [`crate::persist`]). When
+    /// attached, compilation consults it before running the pipeline
+    /// (load-or-compile) and every backend the coordinator creates is
+    /// handed the same store for its own artifacts.
+    persist: Option<Arc<PersistStore>>,
+    /// Full dsl→analysis→opt pipeline runs this coordinator performed —
+    /// the warm-start honesty counter: a process served entirely from the
+    /// persist store reports zero here even though every stencil it minted
+    /// was a [`StencilCache`] *miss* (the in-memory cache counts lookups;
+    /// this counts actual compilations).
+    pipeline_compiles: u64,
     pub metrics: SharedMetrics,
 }
 
@@ -161,8 +173,39 @@ impl Coordinator {
             checks_enabled: true,
             opt: OptConfig::default(),
             level: OptLevel::O2,
+            persist: None,
+            pipeline_compiles: 0,
             metrics: SharedMetrics::new(),
         }
+    }
+
+    /// Attach a persistent artifact store: subsequent compilations
+    /// load-or-compile through it, and every backend instance (existing
+    /// and future) is handed the store for its own artifacts (fused
+    /// tapes, HLO text).
+    pub fn set_persist(&mut self, store: Arc<PersistStore>) {
+        for be in self.backends.values() {
+            be.set_persist(&store);
+        }
+        self.persist = Some(store);
+    }
+
+    /// The attached persist store, if any.
+    pub fn persist(&self) -> Option<&Arc<PersistStore>> {
+        self.persist.as_ref()
+    }
+
+    /// Persist-store `(hits, misses, rejects)` counters, `None` when no
+    /// store is attached.
+    pub fn persist_counters(&self) -> Option<(u64, u64, u64)> {
+        self.persist.as_ref().map(|s| s.counters())
+    }
+
+    /// How many times this coordinator ran the full dsl→analysis→opt
+    /// pipeline (persist hits and in-memory cache hits don't count). A
+    /// fresh process serving a warmed cache reports zero.
+    pub fn pipeline_compiles(&self) -> u64 {
+        self.pipeline_compiles
     }
 
     /// A coordinator pinned to an optimization level.
@@ -266,10 +309,40 @@ impl Coordinator {
     ) -> Result<u64> {
         let def_fp = def_fingerprint(src, stencil, externals)? ^ self.opt.salt();
         let opt = self.opt;
+        let store = self.persist.clone();
+        let mut ran_pipeline = false;
         let ir = self.stencils.get_or_insert(def_fp, || {
-            analysis::compile_source_opt(src, stencil, externals, &opt)
-                .map_err(|e| anyhow!("{e}"))
+            // Load-or-compile: a persist hit skips the pipeline entirely.
+            // Loaded IR is only trusted after its fingerprint recomputes
+            // from the canonical text under the *current* pass tag — a
+            // digest-valid entry that fails this is demoted to a reject.
+            let key = format!("{def_fp:016x}");
+            if let Some(s) = &store {
+                if let Some(payload) = s.load("ir", &key) {
+                    match persist::irser::ir_from_json(&payload) {
+                        Some(ir)
+                            if analysis::fingerprint_ir_with(&ir, &opt.canon())
+                                == ir.fingerprint =>
+                        {
+                            return Ok(ir)
+                        }
+                        _ => s.reject_loaded(),
+                    }
+                }
+            }
+            ran_pipeline = true;
+            let ir = analysis::compile_source_opt(src, stencil, externals, &opt)
+                .map_err(|e| anyhow!("{e}"))?;
+            if let Some(s) = &store {
+                if let Some(payload) = persist::irser::ir_to_json(&ir) {
+                    let _ = s.store("ir", &key, &payload);
+                }
+            }
+            Ok(ir)
         })?;
+        if ran_pipeline {
+            self.pipeline_compiles += 1;
+        }
         self.by_name.insert(ir.name.clone(), def_fp);
         Ok(def_fp)
     }
@@ -301,8 +374,11 @@ impl Coordinator {
 
     fn backend(&mut self, name: &str) -> Result<Arc<dyn Backend>> {
         if !self.backends.contains_key(name) {
-            let be = backend::create(name)?;
-            self.backends.insert(name.to_string(), Arc::from(be));
+            let be: Arc<dyn Backend> = Arc::from(backend::create(name)?);
+            if let Some(store) = &self.persist {
+                be.set_persist(store);
+            }
+            self.backends.insert(name.to_string(), be);
         }
         Ok(self.backends[name].clone())
     }
@@ -310,7 +386,20 @@ impl Coordinator {
     /// Register a custom backend instance under its name (e.g. a
     /// pre-warmed `XlaBackend` sharing a runtime).
     pub fn register_backend(&mut self, be: Box<dyn Backend>) {
-        self.backends.insert(be.name().to_string(), Arc::from(be));
+        let be: Arc<dyn Backend> = Arc::from(be);
+        if let Some(store) = &self.persist {
+            be.set_persist(store);
+        }
+        self.backends.insert(be.name().to_string(), be);
+    }
+
+    /// Force backend preparation (compilation/codegen) for an
+    /// already-compiled fingerprint without running it — `repro warm`
+    /// uses this so warmed caches include backend artifacts (e.g. the
+    /// vector backend's fused tapes), not just IR.
+    pub fn prepare(&mut self, fingerprint: u64, backend: &str) -> Result<()> {
+        let ir = self.ir(fingerprint)?;
+        self.backend(backend)?.prepare(&ir)
     }
 
     /// Compile `stencil` from `src` and return a [`Stencil`] handle bound

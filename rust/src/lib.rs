@@ -81,6 +81,18 @@
 //! * **Cache** ([`cache`]) — fingerprint-based compilation caching,
 //!   handing out shared `Arc<StencilIr>` artifacts (a hit is a refcount
 //!   bump, never a deep copy);
+//! * **Persist** ([`persist`]) — the on-disk half of caching (the
+//!   `.gt_cache` analog): a versioned, integrity-checked artifact store
+//!   keyed by the same opt-salted fingerprints, holding serialized
+//!   canonical IR, the vector backend's compiled fused tapes, and
+//!   `pjrt-aot` HLO text. Entries carry a schema version, toolchain tag
+//!   and FNV-1a content digest — corruption or version skew is a miss,
+//!   never an error — and writes are atomic (temp file + rename) so
+//!   concurrent processes share one cache root. Off by default; enabled
+//!   with `--cache-dir` / `REPRO_CACHE_DIR`, pre-populated with
+//!   `repro warm`, inspected with `repro cache`. A warm process compiles
+//!   zero stencils through the dsl→analysis→opt pipeline (the
+//!   `pipeline_compiles` counter in `repro run --json` proves it);
 //! * **Runtime** ([`runtime`]) — PJRT client / executable management plus
 //!   the [`runtime::pjrt_available`] probe backing structured
 //!   backend-unavailable errors;
@@ -107,6 +119,7 @@ pub mod ir;
 pub mod jsonw;
 pub mod model;
 pub mod opt;
+pub mod persist;
 pub mod runtime;
 pub mod serve;
 pub mod stdlib;

@@ -9,6 +9,8 @@
 //!   model     run the isentropic-like demonstration model
 //!   serve     long-running stencil service (NDJSON over TCP)
 //!   client    send one request line to a running `repro serve`
+//!   warm      pre-populate the persistent artifact cache
+//!   cache     inspect or clear the persistent artifact cache
 //!
 //! Every compiling subcommand accepts `--opt-level {0,1,2,3}` (default 2),
 //! selecting how much of the pass manager (`gt4rs::opt`) runs between
@@ -48,7 +50,7 @@ fn main() {
 }
 
 /// Presence-only flags (no value follows them on the command line).
-const BOOL_FLAGS: [&str; 4] = ["json", "no-checks", "fast-math", "tapes"];
+const BOOL_FLAGS: [&str; 5] = ["json", "no-checks", "fast-math", "tapes", "clear"];
 
 /// Minimal flag parser: `--key value` pairs plus presence-only booleans
 /// (`--json`, `--no-checks`, `--fast-math`, `--tapes`) after the
@@ -145,6 +147,17 @@ fn parse_exec_options(flags: &Flags) -> Result<ExecOptions> {
         .with_tier(parse_tier(flags)?))
 }
 
+/// Open the persistent artifact store (see `gt4rs::persist`): `--cache-dir
+/// DIR` wins, then the `REPRO_CACHE_DIR` environment variable; absent both,
+/// persistence stays off (`None`).
+fn open_persist(flags: &Flags) -> Result<Option<std::sync::Arc<gt4rs::persist::PersistStore>>> {
+    use std::sync::Arc;
+    if let Some(dir) = flags.get("cache-dir") {
+        return Ok(Some(Arc::new(gt4rs::persist::PersistStore::open(dir)?)));
+    }
+    Ok(gt4rs::persist::PersistStore::from_env()?.map(Arc::new))
+}
+
 fn parse_externals(s: Option<&str>) -> Result<BTreeMap<String, f64>> {
     let mut out = BTreeMap::new();
     if let Some(s) = s {
@@ -173,6 +186,8 @@ fn dispatch(args: &[String]) -> Result<()> {
         "model" => cmd_model(&flags),
         "serve" => cmd_serve(&flags),
         "client" => cmd_client(&flags),
+        "warm" => cmd_warm(&flags),
+        "cache" => cmd_cache(&flags),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -209,7 +224,7 @@ SUBCOMMANDS
   model    [--backend B] [--domain IxJxK] [--steps N] [--threads T]
            run the isentropic-like demo model, log diagnostics
   serve    [--addr H:P] [--cores N] [--max-waiters N] [--deadline-ms N]
-           [--coalesce-elems N] [--max-leases N]
+           [--coalesce-elems N] [--max-leases N] [--cache-dir DIR]
            long-running stencil service: newline-delimited JSON over TCP
            (ops: compile, bind, run, metrics, shutdown), per-tenant
            stencil libraries, a global core budget with structured 429
@@ -217,6 +232,14 @@ SUBCOMMANDS
            same-stencil small-domain runs into one sharded dispatch
   client   --addr H:P --request '<json line>'
            send one request to a running serve daemon, print the reply
+  warm     --cache-dir DIR [--stencil A,B,..] [--opt-level L] [--fast-math]
+           pre-populate the persistent artifact cache: compile library
+           stencils (default: all, at every opt level) through a
+           persist-attached coordinator and prepare the vector backend,
+           so later processes warm-start without running the pipeline
+  cache    --cache-dir DIR [--clear]
+           list the persistent cache's entries (kind, key, bytes) or
+           wipe it with --clear
 
 All compiling subcommands take --opt-level 0|1|2|3 (default 2): 0 disables
 the optimizer, 1 enables fold-cse/dce/fuse, 2 adds temporary demotion, 3
@@ -245,6 +268,14 @@ identical by contract. --fast-math opts into FMA contraction in the
 specialized executor; it changes results within a small tolerance, so
 it salts the compilation cache and is never substituted silently.
 
+--cache-dir DIR (or the REPRO_CACHE_DIR environment variable) attaches a
+persistent on-disk artifact store to every compiling subcommand:
+compiled IR, fused tapes and HLO text survive the process, so a later
+run (or `repro serve`) warm-starts without the dsl->analysis->opt
+pipeline. Entries are schema-versioned and digest-checked — corruption
+or version skew silently recompiles — and writes are atomic, so
+concurrent processes can share one cache root. Off by default.
+
 Backends: {}  (library stencils: {})",
         BACKEND_NAMES.join(", "),
         stdlib::names().join(", ")
@@ -271,6 +302,9 @@ fn load_source(flags: &Flags) -> Result<(String, String)> {
 fn load_fp(coord: &mut Coordinator, flags: &Flags) -> Result<u64> {
     coord.set_exec_options(parse_exec_options(flags)?);
     coord.checks_enabled = !flags.flag("no-checks");
+    if let Some(store) = open_persist(flags)? {
+        coord.set_persist(store);
+    }
     let (name, src) = load_source(flags)?;
     let externals = parse_externals(flags.get("externals"))?;
     coord.compile_source(&src, &name, &externals)
@@ -397,7 +431,10 @@ fn cmd_run(flags: &Flags) -> Result<()> {
             .collect();
         let exec = parse_exec_options(flags)?;
         // `threads_used` is the *effective* count (a degraded Auto plan
-        // reports 1), never an echo of the requested plan.
+        // reports 1), never an echo of the requested plan. The persist
+        // counters are the warm-start honesty surface: a fresh process on
+        // a warmed cache reports pipeline_compiles 0 and persist_hits > 0.
+        let (ph, pm, pr) = coord.persist_counters().unwrap_or((0, 0, 0));
         println!(
             "{}",
             Obj::new()
@@ -410,6 +447,10 @@ fn cmd_run(flags: &Flags) -> Result<()> {
                 .str("tier", &exec.tier.to_string())
                 .bool("fast_math", exec.fast_math)
                 .int("threads_used", threads_used)
+                .int("pipeline_compiles", coord.pipeline_compiles())
+                .int("persist_hits", ph)
+                .int("persist_misses", pm)
+                .int("persist_rejects", pr)
                 .raw("iters", &jsonw::array(&iter_rows))
                 .raw("fields", &jsonw::array(&field_rows))
                 .finish()
@@ -417,6 +458,12 @@ fn cmd_run(flags: &Flags) -> Result<()> {
     } else {
         for (n, s) in &fields {
             println!("  {:<12} domain sum = {:+.9e}", n, s.domain_sum());
+        }
+        if let Some((ph, pm, pr)) = coord.persist_counters() {
+            println!(
+                "  persist: {ph} hits, {pm} misses, {pr} rejects (pipeline compiles: {})",
+                coord.pipeline_compiles()
+            );
         }
     }
     Ok(())
@@ -502,6 +549,9 @@ fn cmd_bench(flags: &Flags) -> Result<()> {
     let mut coord = Coordinator::new();
     coord.set_exec_options(parse_exec_options(flags)?);
     coord.checks_enabled = !flags.flag("no-checks");
+    if let Some(store) = open_persist(flags)? {
+        coord.set_persist(store);
+    }
     let fp = coord.compile_library(stencil_name)?;
     let mut rows: Vec<String> = Vec::new();
     if !json {
@@ -634,7 +684,11 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     if let Some(s) = flags.get("max-leases") {
         config.max_leases_per_tenant = s.parse()?;
     }
+    config.cache_dir = flags.get("cache-dir").map(str::to_string);
     let server = Server::bind(config)?;
+    if let Some((root, entries)) = server.persist_info() {
+        println!("persist cache {root}: {entries} entries (warm start)");
+    }
     println!("listening on {}", server.local_addr());
     use std::io::Write as _;
     std::io::stdout().flush()?;
@@ -658,5 +712,78 @@ fn cmd_client(flags: &Flags) -> Result<()> {
     let mut line = String::new();
     BufReader::new(stream).read_line(&mut line)?;
     print!("{line}");
+    Ok(())
+}
+
+/// `repro warm`: pre-populate the persistent artifact cache for a stencil
+/// library so later processes (runs, serves) warm-start. Each opt level
+/// gets its own coordinator — levels salt the cache keys, so one pass per
+/// level writes one IR + tape entry per stencil.
+fn cmd_warm(flags: &Flags) -> Result<()> {
+    let store = open_persist(flags)?.ok_or_else(|| {
+        anyhow!("`repro warm` needs a cache root: pass --cache-dir DIR or set REPRO_CACHE_DIR")
+    })?;
+    let stencils: Vec<String> = match flags.get("stencil") {
+        Some(s) => s.split(',').map(str::to_string).collect(),
+        None => stdlib::names().iter().map(|s| s.to_string()).collect(),
+    };
+    let levels: Vec<OptLevel> = match flags.get("opt-level") {
+        Some(s) => vec![OptLevel::parse(s)
+            .ok_or_else(|| anyhow!("--opt-level must be 0, 1, 2 or 3, got `{s}`"))?],
+        None => vec![OptLevel::O0, OptLevel::O1, OptLevel::O2, OptLevel::O3],
+    };
+    let fast_math = flags.flag("fast-math");
+    let t0 = Instant::now();
+    let mut compiled = 0u64;
+    for level in &levels {
+        let mut coord = Coordinator::new();
+        coord.set_exec_options(
+            ExecOptions::new().with_opt_level(*level).with_fast_math(fast_math),
+        );
+        coord.set_persist(store.clone());
+        for name in &stencils {
+            let fp = coord.compile_library(name)?;
+            // Prepare the vector backend so the warmed cache includes
+            // compiled fused tapes (O3), not just IR.
+            coord.prepare(fp, "vector")?;
+        }
+        compiled += coord.pipeline_compiles();
+    }
+    let entries = store.entries();
+    println!(
+        "warmed {} ({} stencils x {} levels{}): {} pipeline compiles, {} entries on disk in {:?}",
+        store.root().display(),
+        stencils.len(),
+        levels.len(),
+        if fast_math { ", fast-math" } else { "" },
+        compiled,
+        entries.len(),
+        t0.elapsed()
+    );
+    Ok(())
+}
+
+/// `repro cache`: inspect (default) or `--clear` the persistent store.
+fn cmd_cache(flags: &Flags) -> Result<()> {
+    let store = open_persist(flags)?.ok_or_else(|| {
+        anyhow!("`repro cache` needs a cache root: pass --cache-dir DIR or set REPRO_CACHE_DIR")
+    })?;
+    if flags.flag("clear") {
+        let n = store.clear()?;
+        println!("cleared {n} entries from {}", store.root().display());
+        return Ok(());
+    }
+    let entries = store.entries();
+    println!("# {} — {} entries", store.root().display(), entries.len());
+    let mut by_kind: BTreeMap<&str, (usize, u64)> = BTreeMap::new();
+    for e in &entries {
+        let slot = by_kind.entry(e.kind.as_str()).or_default();
+        slot.0 += 1;
+        slot.1 += e.bytes;
+        println!("{:<6} {:<40} {:>10} bytes", e.kind, e.key, e.bytes);
+    }
+    for (kind, (count, bytes)) in &by_kind {
+        println!("# {kind}: {count} entries, {bytes} bytes");
+    }
     Ok(())
 }

@@ -1,0 +1,497 @@
+//! Serialize / deserialize the canonicalized implementation IR.
+//!
+//! The payload of a `kind = "ir"` persist entry: a compact JSON encoding
+//! of [`StencilIr`] built on [`crate::jsonw`], designed for *bit-exact*
+//! round-trips — every float (literals, folded externals) travels as the
+//! hex of its IEEE-754 bits, never as a decimal rendering.
+//!
+//! Two invariants the encoding relies on:
+//!
+//! * Post-analysis expressions contain only `Float` / `Bool` / `Field` /
+//!   `Scalar` / `Unary` / `Binary` / `Ternary` / `Builtin` nodes (`Name`,
+//!   `External` and `Call` are resolved away by the pipeline).
+//!   [`ir_to_json`] returns `None` if that invariant is violated rather
+//!   than persisting a half-representable artifact.
+//! * Source spans are *not* canonical (the whole point of the
+//!   formatting-insensitive fingerprint), so they are not serialized; a
+//!   reloaded IR carries default spans and is validated by recomputing
+//!   its canonical fingerprint, not by structural equality.
+
+use crate::dsl::ast::{
+    BinOp, Builtin, DType, Expr, Interval, IterationPolicy, LevelBound, Offset, ScalarDecl,
+    Span, UnOp,
+};
+use crate::ir::implir::{
+    Assign, Extent, FieldInfo, Intent, Multistage, Stage, StencilIr, StorageClass, TempField,
+};
+use crate::jsonw::{self, string, Value};
+use std::collections::BTreeMap;
+
+// ---------------------------------------------------------------------------
+// Shared scalar encoders / decoders (also used by `tapeser`)
+
+pub(crate) fn f64_to_json(v: f64) -> String {
+    string(&format!("{:016x}", v.to_bits()))
+}
+
+pub(crate) fn f64_from(v: &Value) -> Option<f64> {
+    let bits = u64::from_str_radix(v.as_str()?, 16).ok()?;
+    Some(f64::from_bits(bits))
+}
+
+pub(crate) fn i32_from(v: &Value) -> Option<i32> {
+    let f = v.as_f64()?;
+    if f.fract() != 0.0 || !(f64::from(i32::MIN)..=f64::from(i32::MAX)).contains(&f) {
+        return None;
+    }
+    Some(f as i32)
+}
+
+pub(crate) fn usize_from(v: &Value) -> Option<usize> {
+    v.as_u64().map(|n| n as usize)
+}
+
+pub(crate) fn extent_to_json(e: &Extent) -> String {
+    format!(
+        "[{},{},{},{},{},{}]",
+        e.i.0, e.i.1, e.j.0, e.j.1, e.k.0, e.k.1
+    )
+}
+
+pub(crate) fn extent_from(v: &Value) -> Option<Extent> {
+    let a = v.as_arr()?;
+    if a.len() != 6 {
+        return None;
+    }
+    let mut n = [0i32; 6];
+    for (slot, item) in n.iter_mut().zip(a) {
+        *slot = i32_from(item)?;
+    }
+    Some(Extent { i: (n[0], n[1]), j: (n[2], n[3]), k: (n[4], n[5]) })
+}
+
+pub(crate) fn interval_to_json(iv: &Interval) -> String {
+    let bound = |b: &LevelBound| match b {
+        LevelBound::FromStart(n) => format!("[\"s\",{n}]"),
+        LevelBound::FromEnd(n) => format!("[\"e\",{n}]"),
+    };
+    format!("[{},{}]", bound(&iv.lo), bound(&iv.hi))
+}
+
+pub(crate) fn interval_from(v: &Value) -> Option<Interval> {
+    let a = v.as_arr()?;
+    if a.len() != 2 {
+        return None;
+    }
+    let bound = |v: &Value| -> Option<LevelBound> {
+        let b = v.as_arr()?;
+        if b.len() != 2 {
+            return None;
+        }
+        let n = i32_from(&b[1])?;
+        match b[0].as_str()? {
+            "s" => Some(LevelBound::FromStart(n)),
+            "e" => Some(LevelBound::FromEnd(n)),
+            _ => None,
+        }
+    };
+    Some(Interval { lo: bound(&a[0])?, hi: bound(&a[1])? })
+}
+
+pub(crate) fn binop_from_symbol(sym: &str) -> Option<BinOp> {
+    Some(match sym {
+        "+" => BinOp::Add,
+        "-" => BinOp::Sub,
+        "*" => BinOp::Mul,
+        "/" => BinOp::Div,
+        "%" => BinOp::Mod,
+        "<" => BinOp::Lt,
+        "<=" => BinOp::Le,
+        ">" => BinOp::Gt,
+        ">=" => BinOp::Ge,
+        "==" => BinOp::Eq,
+        "!=" => BinOp::Ne,
+        "and" => BinOp::And,
+        "or" => BinOp::Or,
+        _ => return None,
+    })
+}
+
+pub(crate) fn policy_to_str(p: IterationPolicy) -> &'static str {
+    match p {
+        IterationPolicy::Parallel => "PARALLEL",
+        IterationPolicy::Forward => "FORWARD",
+        IterationPolicy::Backward => "BACKWARD",
+    }
+}
+
+pub(crate) fn policy_from(s: &str) -> Option<IterationPolicy> {
+    Some(match s {
+        "PARALLEL" => IterationPolicy::Parallel,
+        "FORWARD" => IterationPolicy::Forward,
+        "BACKWARD" => IterationPolicy::Backward,
+        _ => return None,
+    })
+}
+
+fn dtype_from(s: &str) -> Option<DType> {
+    Some(match s {
+        "f32" => DType::F32,
+        "f64" => DType::F64,
+        _ => return None,
+    })
+}
+
+fn intent_from(s: &str) -> Option<Intent> {
+    Some(match s {
+        "in" => Intent::In,
+        "out" => Intent::Out,
+        "inout" => Intent::InOut,
+        _ => return None,
+    })
+}
+
+fn storage_from(s: &str) -> Option<StorageClass> {
+    Some(match s {
+        "field3d" => StorageClass::Field3D,
+        "register" => StorageClass::Register,
+        "plane" => StorageClass::Plane,
+        "ring" => StorageClass::Ring,
+        _ => return None,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Expressions
+
+fn expr_to_json(e: &Expr) -> Option<String> {
+    Some(match e {
+        Expr::Float(v) => format!("[\"f\",{}]", f64_to_json(*v)),
+        Expr::Bool(b) => format!("[\"b\",{b}]"),
+        Expr::Field { name, offset, .. } => format!(
+            "[\"F\",{},{},{},{}]",
+            string(name),
+            offset[0],
+            offset[1],
+            offset[2]
+        ),
+        Expr::Scalar(name) => format!("[\"s\",{}]", string(name)),
+        Expr::Unary { op, operand } => {
+            let sym = match op {
+                UnOp::Neg => "-",
+                UnOp::Not => "!",
+            };
+            format!("[\"u\",\"{sym}\",{}]", expr_to_json(operand)?)
+        }
+        Expr::Binary { op, lhs, rhs } => format!(
+            "[\"o\",{},{},{}]",
+            string(op.symbol()),
+            expr_to_json(lhs)?,
+            expr_to_json(rhs)?
+        ),
+        Expr::Ternary { cond, then_e, else_e } => format!(
+            "[\"t\",{},{},{}]",
+            expr_to_json(cond)?,
+            expr_to_json(then_e)?,
+            expr_to_json(else_e)?
+        ),
+        Expr::Builtin { func, args } => {
+            let mut parts = vec!["\"B\"".to_string(), string(func.name())];
+            for a in args {
+                parts.push(expr_to_json(a)?);
+            }
+            format!("[{}]", parts.join(","))
+        }
+        // Analysis resolves these away; an IR still carrying them is not a
+        // persistable artifact.
+        Expr::Name(..) | Expr::External(..) | Expr::Call { .. } => return None,
+    })
+}
+
+fn expr_from(v: &Value) -> Option<Expr> {
+    let a = v.as_arr()?;
+    Some(match a.first()?.as_str()? {
+        "f" if a.len() == 2 => Expr::Float(f64_from(&a[1])?),
+        "b" if a.len() == 2 => Expr::Bool(a[1].as_bool()?),
+        "F" if a.len() == 5 => {
+            let off: Offset = [i32_from(&a[2])?, i32_from(&a[3])?, i32_from(&a[4])?];
+            Expr::field(a[1].as_str()?, off)
+        }
+        "s" if a.len() == 2 => Expr::Scalar(a[1].as_str()?.to_string()),
+        "u" if a.len() == 3 => {
+            let op = match a[1].as_str()? {
+                "-" => UnOp::Neg,
+                "!" => UnOp::Not,
+                _ => return None,
+            };
+            Expr::Unary { op, operand: Box::new(expr_from(&a[2])?) }
+        }
+        "o" if a.len() == 4 => Expr::binary(
+            binop_from_symbol(a[1].as_str()?)?,
+            expr_from(&a[2])?,
+            expr_from(&a[3])?,
+        ),
+        "t" if a.len() == 4 => {
+            Expr::ternary(expr_from(&a[1])?, expr_from(&a[2])?, expr_from(&a[3])?)
+        }
+        "B" if a.len() >= 2 => {
+            let func = Builtin::from_name(a[1].as_str()?)?;
+            let args: Vec<Expr> =
+                a[2..].iter().map(expr_from).collect::<Option<Vec<_>>>()?;
+            if args.len() != func.arity() {
+                return None;
+            }
+            Expr::Builtin { func, args }
+        }
+        _ => return None,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Whole-IR envelope
+
+/// Serialize an analyzed IR to the `"ir"` persist payload. Returns `None`
+/// if the IR violates the post-analysis expression invariant (never the
+/// case for pipeline output; the guard keeps a broken artifact out of the
+/// shared cache rather than panicking a server).
+pub fn ir_to_json(ir: &StencilIr) -> Option<String> {
+    let fields: Vec<String> = ir
+        .fields
+        .iter()
+        .map(|f| {
+            format!(
+                "{{\"name\":{},\"dtype\":\"{}\",\"intent\":\"{}\",\"extent\":{}}}",
+                string(&f.name),
+                f.dtype,
+                f.intent,
+                extent_to_json(&f.extent)
+            )
+        })
+        .collect();
+    let scalars: Vec<String> = ir
+        .scalars
+        .iter()
+        .map(|s| format!("{{\"name\":{},\"dtype\":\"{}\"}}", string(&s.name), s.dtype))
+        .collect();
+    let temps: Vec<String> = ir
+        .temporaries
+        .iter()
+        .map(|t| {
+            format!(
+                "{{\"name\":{},\"dtype\":\"{}\",\"extent\":{},\"storage\":\"{}\",\"ring_depth\":{}}}",
+                string(&t.name),
+                t.dtype,
+                extent_to_json(&t.extent),
+                t.storage,
+                t.ring_depth
+            )
+        })
+        .collect();
+    let externals: Vec<String> = ir
+        .externals
+        .iter()
+        .map(|(name, v)| format!("[{},{}]", string(name), f64_to_json(*v)))
+        .collect();
+    let mut multistages: Vec<String> = Vec::with_capacity(ir.multistages.len());
+    for ms in &ir.multistages {
+        let mut stages: Vec<String> = Vec::with_capacity(ms.stages.len());
+        for st in &ms.stages {
+            stages.push(format!(
+                "{{\"target\":{},\"value\":{},\"interval\":{},\"extent\":{},\"group\":{}}}",
+                string(&st.stmt.target),
+                expr_to_json(&st.stmt.value)?,
+                interval_to_json(&st.interval),
+                extent_to_json(&st.extent),
+                st.fusion_group
+            ));
+        }
+        multistages.push(format!(
+            "{{\"policy\":\"{}\",\"stages\":[{}]}}",
+            policy_to_str(ms.policy),
+            stages.join(",")
+        ));
+    }
+    Some(format!(
+        "{{\"name\":{},\"fingerprint\":{},\"fused\":{},\"fast_math\":{},\
+         \"fields\":[{}],\"scalars\":[{}],\"temporaries\":[{}],\"externals\":[{}],\
+         \"multistages\":[{}]}}",
+        string(&ir.name),
+        string(&format!("{:016x}", ir.fingerprint)),
+        ir.fused,
+        ir.fast_math,
+        fields.join(","),
+        scalars.join(","),
+        temps.join(","),
+        externals.join(","),
+        multistages.join(",")
+    ))
+}
+
+/// Deserialize a persisted IR payload. `None` on any structural mismatch —
+/// the caller treats that as a cache reject and compiles fresh. Stage read
+/// sets are *recomputed* from the deserialized expressions (they are a
+/// pure function of the assignment), and the caller must still validate
+/// the artifact by recomputing the canonical fingerprint.
+pub fn ir_from_json(payload: &str) -> Option<StencilIr> {
+    let v = jsonw::parse(payload).ok()?;
+    let name = v.get("name")?.as_str()?.to_string();
+    let fingerprint = u64::from_str_radix(v.get("fingerprint")?.as_str()?, 16).ok()?;
+    let fused = v.get("fused")?.as_bool()?;
+    let fast_math = v.get("fast_math")?.as_bool()?;
+
+    let mut fields = Vec::new();
+    for f in v.get("fields")?.as_arr()? {
+        fields.push(FieldInfo {
+            name: f.get("name")?.as_str()?.to_string(),
+            dtype: dtype_from(f.get("dtype")?.as_str()?)?,
+            intent: intent_from(f.get("intent")?.as_str()?)?,
+            extent: extent_from(f.get("extent")?)?,
+        });
+    }
+    let mut scalars = Vec::new();
+    for s in v.get("scalars")?.as_arr()? {
+        scalars.push(ScalarDecl {
+            name: s.get("name")?.as_str()?.to_string(),
+            dtype: dtype_from(s.get("dtype")?.as_str()?)?,
+            span: Span::default(),
+        });
+    }
+    let mut temporaries = Vec::new();
+    for t in v.get("temporaries")?.as_arr()? {
+        temporaries.push(TempField {
+            name: t.get("name")?.as_str()?.to_string(),
+            dtype: dtype_from(t.get("dtype")?.as_str()?)?,
+            extent: extent_from(t.get("extent")?)?,
+            storage: storage_from(t.get("storage")?.as_str()?)?,
+            ring_depth: i32_from(t.get("ring_depth")?)?,
+        });
+    }
+    let mut externals = BTreeMap::new();
+    for e in v.get("externals")?.as_arr()? {
+        let pair = e.as_arr()?;
+        if pair.len() != 2 {
+            return None;
+        }
+        externals.insert(pair[0].as_str()?.to_string(), f64_from(&pair[1])?);
+    }
+    let mut multistages = Vec::new();
+    for ms in v.get("multistages")?.as_arr()? {
+        let policy = policy_from(ms.get("policy")?.as_str()?)?;
+        let mut stages = Vec::new();
+        for st in ms.get("stages")?.as_arr()? {
+            let stmt = Assign {
+                target: st.get("target")?.as_str()?.to_string(),
+                value: expr_from(st.get("value")?)?,
+            };
+            let reads = Stage::collect_reads(&stmt);
+            stages.push(Stage {
+                stmt,
+                interval: interval_from(st.get("interval")?)?,
+                extent: extent_from(st.get("extent")?)?,
+                reads,
+                fusion_group: usize_from(st.get("group")?)?,
+            });
+        }
+        multistages.push(Multistage { policy, stages });
+    }
+
+    Some(StencilIr {
+        name,
+        fields,
+        scalars,
+        temporaries,
+        multistages,
+        externals,
+        fingerprint,
+        fused,
+        fast_math,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis;
+    use crate::ir::canon;
+    use crate::opt::{OptConfig, OptLevel};
+    use crate::stdlib;
+
+    const LEVELS: [OptLevel; 4] = [OptLevel::O0, OptLevel::O1, OptLevel::O2, OptLevel::O3];
+
+    /// The tentpole round-trip property: for every stdlib stencil at every
+    /// opt level (and the fast-math variants), a reloaded IR is canon- and
+    /// fingerprint-identical to the original.
+    #[test]
+    fn stdlib_roundtrip_is_canon_and_fingerprint_identical() {
+        for name in stdlib::names() {
+            let src = stdlib::source(name).unwrap();
+            for level in LEVELS {
+                for fast_math in [false, true] {
+                    let config = OptConfig::level(level).with_fast_math(fast_math);
+                    let ir = analysis::compile_source_opt(
+                        src,
+                        name,
+                        &Default::default(),
+                        &config,
+                    )
+                    .unwrap();
+                    let payload = ir_to_json(&ir)
+                        .unwrap_or_else(|| panic!("{name} O{level}: unserializable IR"));
+                    let back = ir_from_json(&payload)
+                        .unwrap_or_else(|| panic!("{name} O{level}: reload failed"));
+                    let tag = config.canon();
+                    assert_eq!(
+                        canon::canon_ir(&ir, &tag),
+                        canon::canon_ir(&back, &tag),
+                        "{name} O{level} fast_math={fast_math}: canon text diverged"
+                    );
+                    assert_eq!(
+                        analysis::fingerprint_ir_with(&back, &tag),
+                        ir.fingerprint,
+                        "{name} O{level} fast_math={fast_math}: fingerprint diverged"
+                    );
+                    assert_eq!(back.fingerprint, ir.fingerprint);
+                    // Derived read sets must be rebuilt identically too.
+                    for (m0, m1) in ir.multistages.iter().zip(&back.multistages) {
+                        for (s0, s1) in m0.stages.iter().zip(&m1.stages) {
+                            assert_eq!(s0.reads, s1.reads);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Floats survive bit-exactly, including values a decimal rendering
+    /// would mangle.
+    #[test]
+    fn float_bits_survive_exactly() {
+        for v in [0.1f64, 1.0 / 3.0, f64::MIN_POSITIVE, 1e300, -0.0] {
+            let e = Expr::binary(crate::dsl::ast::BinOp::Add, Expr::Float(v), Expr::Float(v));
+            let json = expr_to_json(&e).unwrap();
+            let back = expr_from(&jsonw::parse(&json).unwrap()).unwrap();
+            match back {
+                Expr::Binary { lhs, .. } => match *lhs {
+                    Expr::Float(got) => assert_eq!(got.to_bits(), v.to_bits()),
+                    _ => panic!("wrong node"),
+                },
+                _ => panic!("wrong node"),
+            }
+        }
+    }
+
+    /// Structural garbage is a reject (`None`), never a panic.
+    #[test]
+    fn malformed_payloads_reject_cleanly() {
+        for bad in [
+            "",
+            "42",
+            "{\"name\":\"x\"}",
+            "{\"name\":\"x\",\"fingerprint\":\"zz\",\"fused\":false,\"fast_math\":false,\
+             \"fields\":[],\"scalars\":[],\"temporaries\":[],\"externals\":[],\
+             \"multistages\":[]}",
+        ] {
+            assert!(ir_from_json(bad).is_none(), "accepted: {bad}");
+        }
+    }
+}

@@ -1,0 +1,359 @@
+//! Persistent on-disk artifact store — compiled stencils that survive the
+//! process (the analog of GT4Py's `.gt_cache` directory).
+//!
+//! GT4Py pays code generation once because generated extensions live in an
+//! on-disk cache keyed by stencil definition + backend options. gt4rs'
+//! [`crate::cache::StencilCache`] is per-process: without this layer every
+//! cold `repro run`, model-driver launch and `repro serve` restart re-pays
+//! the full dsl → analysis → opt → compile pipeline per stencil. The
+//! persist store closes that gap with three artifact kinds, all keyed by
+//! the existing opt-salted fingerprints:
+//!
+//! * `ir` — the canonicalized [`StencilIr`](crate::ir::implir::StencilIr),
+//!   serialized by [`irser`] and re-validated on load by recomputing the
+//!   canonical fingerprint (a warm coordinator skips the whole pipeline);
+//! * `tape` — the vector backend's compiled fused program ([`tapeser`]):
+//!   the value-numbered `CTape`s, scratch/alloc extents and shardability
+//!   verdicts, so an O3 warm start skips tape lowering (kernel plans are
+//!   deterministically re-derived from the tapes, see `tapeser` docs);
+//! * `hlo` — HLO module text for the `pjrt-aot` backend, so a warmed cache
+//!   can stand in for the `make artifacts` directory. (The `xla` JIT
+//!   backend builds its computation through the PJRT C API and has no
+//!   text-emission path, so it warm-starts at the IR level only — the
+//!   boundary of what the binding exposes.)
+//!
+//! # Integrity and versioning
+//!
+//! Every entry is one JSON envelope carrying a schema version, the
+//! toolchain tag (`CARGO_PKG_VERSION`) and an FNV-1a content digest of the
+//! payload. *Any* mismatch — unparseable file, wrong schema, different
+//! toolchain, digest mismatch, or a payload that deserializes to something
+//! whose recomputed fingerprint disagrees — is a **miss, never an error**:
+//! the caller falls back to a fresh compile and (best-effort) overwrites
+//! the bad entry. Corruption is counted separately from plain misses so
+//! `/metrics` can distinguish "cold" from "rotten".
+//!
+//! # Concurrency
+//!
+//! Writes are atomic: the payload goes to a process-unique temp file in the
+//! same directory and is `rename`d into place, so a killed process can
+//! never publish a torn entry and concurrent processes can share one cache
+//! root. Last writer wins, which is sound because entries are keyed by
+//! content fingerprint. The root is chosen with `--cache-dir` or the
+//! `REPRO_CACHE_DIR` environment variable and is **off by default** so
+//! tests and one-shot runs stay hermetic.
+
+pub mod irser;
+pub(crate) mod tapeser;
+
+use crate::ir::canon::fnv1a64;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Bumped whenever any payload encoding changes shape; older entries
+/// become misses, not errors.
+const SCHEMA_VERSION: u64 = 1;
+
+/// Toolchain tag stamped into every entry: artifacts never cross crate
+/// versions (the compile pipeline may have changed under the same schema).
+const TOOL_TAG: &str = env!("CARGO_PKG_VERSION");
+
+/// Environment variable naming the shared cache root (the CLI flag
+/// `--cache-dir` takes precedence).
+pub const CACHE_DIR_ENV: &str = "REPRO_CACHE_DIR";
+
+/// One artifact listed by [`PersistStore::entries`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EntryInfo {
+    pub kind: String,
+    pub key: String,
+    /// On-disk envelope size in bytes.
+    pub bytes: u64,
+}
+
+/// A shared on-disk artifact store — see the module docs. Cheap to clone
+/// behind an `Arc`; all methods take `&self` and the hit/miss/reject
+/// counters are atomics, so one store instance is safely shared by every
+/// coordinator, backend and serve tenant in the process.
+pub struct PersistStore {
+    root: PathBuf,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    rejects: AtomicU64,
+}
+
+impl PersistStore {
+    /// Open (creating if needed) a store rooted at `root`.
+    pub fn open(root: impl AsRef<Path>) -> Result<PersistStore> {
+        let root = root.as_ref().to_path_buf();
+        std::fs::create_dir_all(&root)
+            .with_context(|| format!("creating cache dir {}", root.display()))?;
+        Ok(PersistStore {
+            root,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            rejects: AtomicU64::new(0),
+        })
+    }
+
+    /// Open the store named by `REPRO_CACHE_DIR`, if set. A set-but-unusable
+    /// directory is reported as an error; unset is simply `Ok(None)`.
+    pub fn from_env() -> Result<Option<PersistStore>> {
+        match std::env::var(CACHE_DIR_ENV) {
+            Ok(dir) if !dir.is_empty() => Ok(Some(PersistStore::open(dir)?)),
+            _ => Ok(None),
+        }
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn path(&self, kind: &str, key: &str) -> PathBuf {
+        self.root.join(format!("{kind}_{key}.json"))
+    }
+
+    /// Load an artifact payload. Counts exactly one of hit / miss / reject:
+    /// a missing, unparseable or wrong-version entry is a miss; an entry
+    /// whose content digest disagrees with its payload is a reject. Never
+    /// returns an error — corruption means "compile fresh".
+    pub fn load(&self, kind: &str, key: &str) -> Option<String> {
+        let text = match std::fs::read_to_string(self.path(kind, key)) {
+            Ok(t) => t,
+            Err(_) => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+        };
+        let parsed = match crate::jsonw::parse(&text) {
+            Ok(v) => v,
+            Err(_) => {
+                // Torn or truncated entry (writes are atomic, so this means
+                // external corruption): a miss, the writer will replace it.
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+        };
+        let schema = parsed.get("schema").and_then(|v| v.as_u64());
+        let tool = parsed.get("tool").and_then(|v| v.as_str());
+        let entry_kind = parsed.get("kind").and_then(|v| v.as_str());
+        let digest = parsed.get("digest").and_then(|v| v.as_str());
+        let payload = parsed.get("payload").and_then(|v| v.as_str());
+        let (Some(digest), Some(payload)) = (digest, payload) else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        };
+        if schema != Some(SCHEMA_VERSION) || tool != Some(TOOL_TAG) || entry_kind != Some(kind)
+        {
+            // A different toolchain's (or future schema's) entry: stale,
+            // not corrupt.
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        if u64::from_str_radix(digest, 16).ok() != Some(fnv1a64(payload.as_bytes())) {
+            self.rejects.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        Some(payload.to_string())
+    }
+
+    /// Demote the most recent digest-valid load to a corrupt-reject: used
+    /// by callers whose *semantic* validation failed (e.g. a reloaded IR
+    /// whose recomputed canonical fingerprint disagrees with the stored
+    /// one, or a tape referencing out-of-range slots).
+    pub fn reject_loaded(&self) {
+        self.hits.fetch_sub(1, Ordering::Relaxed);
+        self.rejects.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Publish an artifact atomically (temp file + rename). Best-effort by
+    /// design: persistence failures must never fail a compile, so callers
+    /// are expected to ignore the result in hot paths.
+    pub fn store(&self, kind: &str, key: &str, payload: &str) -> Result<()> {
+        let digest = fnv1a64(payload.as_bytes());
+        let envelope = crate::jsonw::Obj::new()
+            .int("schema", SCHEMA_VERSION as i64)
+            .str("tool", TOOL_TAG)
+            .str("kind", kind)
+            .str("digest", &format!("{digest:016x}"))
+            .str("payload", payload)
+            .finish();
+        let target = self.path(kind, key);
+        let tmp = self.root.join(format!(
+            ".{kind}_{key}.{}.tmp",
+            std::process::id()
+        ));
+        std::fs::write(&tmp, envelope)
+            .with_context(|| format!("writing cache temp {}", tmp.display()))?;
+        std::fs::rename(&tmp, &target)
+            .with_context(|| format!("publishing cache entry {}", target.display()))?;
+        Ok(())
+    }
+
+    /// List every entry (kind, key, envelope bytes), sorted by kind then
+    /// key — the `repro cache` inspection surface.
+    pub fn entries(&self) -> Vec<EntryInfo> {
+        let mut out = Vec::new();
+        let Ok(dir) = std::fs::read_dir(&self.root) else {
+            return out;
+        };
+        for e in dir.flatten() {
+            let name = e.file_name();
+            let Some(name) = name.to_str() else { continue };
+            let Some(stem) = name.strip_suffix(".json") else { continue };
+            // Kinds never contain '_'; keys may (pjrt-aot stems).
+            let Some((kind, key)) = stem.split_once('_') else { continue };
+            if kind.is_empty() || name.starts_with('.') {
+                continue;
+            }
+            let bytes = e.metadata().map(|m| m.len()).unwrap_or(0);
+            out.push(EntryInfo { kind: kind.to_string(), key: key.to_string(), bytes });
+        }
+        out.sort_by(|a, b| (&a.kind, &a.key).cmp(&(&b.kind, &b.key)));
+        out
+    }
+
+    /// Delete every entry (and any stale temp files), returning how many
+    /// entries were removed.
+    pub fn clear(&self) -> Result<usize> {
+        let mut removed = 0;
+        for e in std::fs::read_dir(&self.root)
+            .with_context(|| format!("reading cache dir {}", self.root.display()))?
+            .flatten()
+        {
+            let name = e.file_name();
+            let Some(name) = name.to_str() else { continue };
+            if name.ends_with(".json") || name.ends_with(".tmp") {
+                std::fs::remove_file(e.path())
+                    .with_context(|| format!("removing {}", e.path().display()))?;
+                if name.ends_with(".json") {
+                    removed += 1;
+                }
+            }
+        }
+        Ok(removed)
+    }
+
+    /// `(hits, misses, rejects)` since this store handle was opened.
+    pub fn counters(&self) -> (u64, u64, u64) {
+        (
+            self.hits.load(Ordering::Relaxed),
+            self.misses.load(Ordering::Relaxed),
+            self.rejects.load(Ordering::Relaxed),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch_store(tag: &str) -> (PathBuf, PersistStore) {
+        let dir = std::env::temp_dir()
+            .join(format!("gt4rs_persist_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = PersistStore::open(&dir).unwrap();
+        (dir, store)
+    }
+
+    #[test]
+    fn roundtrip_counts_hit_after_miss() {
+        let (dir, store) = scratch_store("rt");
+        assert_eq!(store.load("ir", "0000000000000001"), None);
+        store.store("ir", "0000000000000001", "payload body").unwrap();
+        assert_eq!(store.load("ir", "0000000000000001").as_deref(), Some("payload body"));
+        // Different kind or key miss independently.
+        assert_eq!(store.load("tape", "0000000000000001"), None);
+        assert_eq!(store.load("ir", "0000000000000002"), None);
+        assert_eq!(store.counters(), (1, 3, 0));
+        // A second handle over the same root sees everything (shared-root
+        // contract for concurrent processes).
+        let reopened = PersistStore::open(&dir).unwrap();
+        assert_eq!(
+            reopened.load("ir", "0000000000000001").as_deref(),
+            Some("payload body")
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_entry_is_a_miss() {
+        let (dir, store) = scratch_store("trunc");
+        store.store("hlo", "k", "HloModule m, lots of text here").unwrap();
+        let path = dir.join("hlo_k.json");
+        let full = std::fs::read_to_string(&path).unwrap();
+        // A torn write: only the first half of the envelope made it.
+        std::fs::write(&path, &full[..full.len() / 2]).unwrap();
+        assert_eq!(store.load("hlo", "k"), None);
+        let (h, m, r) = store.counters();
+        assert_eq!((h, m, r), (0, 1, 0), "truncation must be a plain miss");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bit_flipped_payload_is_a_reject() {
+        let (dir, store) = scratch_store("flip");
+        store.store("hlo", "k", "HloModule m").unwrap();
+        let path = dir.join("hlo_k.json");
+        let full = std::fs::read_to_string(&path).unwrap();
+        // Flip one payload character without breaking the JSON shape.
+        let corrupted = full.replace("HloModule m", "HloModule x");
+        assert_ne!(corrupted, full);
+        std::fs::write(&path, corrupted).unwrap();
+        assert_eq!(store.load("hlo", "k"), None);
+        assert_eq!(store.counters(), (0, 0, 1), "digest mismatch must count as reject");
+        // Overwriting repairs the entry.
+        store.store("hlo", "k", "HloModule m").unwrap();
+        assert_eq!(store.load("hlo", "k").as_deref(), Some("HloModule m"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn schema_or_tool_mismatch_is_a_miss() {
+        let (dir, store) = scratch_store("ver");
+        store.store("ir", "a", "body").unwrap();
+        let path = dir.join("ir_a.json");
+        let full = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, full.replace("\"schema\":1", "\"schema\":999")).unwrap();
+        assert_eq!(store.load("ir", "a"), None);
+        store.store("ir", "a", "body").unwrap();
+        let full = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(
+            &path,
+            full.replace(TOOL_TAG, "0.0.0-someone-elses-build"),
+        )
+        .unwrap();
+        assert_eq!(store.load("ir", "a"), None);
+        assert_eq!(store.counters(), (0, 2, 0));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn entries_and_clear() {
+        let (dir, store) = scratch_store("ls");
+        store.store("ir", "b", "x").unwrap();
+        store.store("ir", "a", "y").unwrap();
+        store.store("tape", "a", "z").unwrap();
+        let listed = store.entries();
+        assert_eq!(
+            listed.iter().map(|e| (e.kind.as_str(), e.key.as_str())).collect::<Vec<_>>(),
+            vec![("ir", "a"), ("ir", "b"), ("tape", "a")]
+        );
+        assert!(listed.iter().all(|e| e.bytes > 0));
+        assert_eq!(store.clear().unwrap(), 3);
+        assert!(store.entries().is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn reject_loaded_demotes_a_hit() {
+        let (dir, store) = scratch_store("demote");
+        store.store("ir", "a", "digest-valid but semantically wrong").unwrap();
+        assert!(store.load("ir", "a").is_some());
+        store.reject_loaded();
+        assert_eq!(store.counters(), (0, 0, 1));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,293 @@
+//! Serialize / deserialize the vector backend's compiled fused programs.
+//!
+//! The payload of a `kind = "tape"` persist entry: the expensive half of
+//! [`FusedProgram::compile`] — per-group value-numbered SSA tapes
+//! ([`CTape`]), scratch/alloc extents, intervals and shardability
+//! verdicts — so an O3 warm start skips tape lowering entirely.
+//!
+//! Kernel plans ([`TierPlan`]) are deliberately *not* serialized: they
+//! contain monomorphized kernel variants (and the fast-math FMA choice)
+//! that are a cheap, deterministic function of `(tape, storage classes,
+//! fast_math)`, so a load re-derives each tier's plan with
+//! [`TierPlan::lower`] — the same call the fresh compile path makes,
+//! which is what keeps warm-loaded programs bitwise-identical to fresh
+//! ones by construction.
+//!
+//! Every slot and SSA operand index is bounds-checked on load; a payload
+//! that fails any check deserializes to `None` and the caller counts a
+//! cache reject and compiles fresh.
+
+use crate::backend::cexpr::{CTape, TapeInst, TapeOp};
+use crate::backend::fused::{FusedGroup, FusedMultistage, FusedProgram, Tier};
+use crate::backend::kernels::TierPlan;
+use crate::dsl::ast::Builtin;
+use crate::ir::implir::{Extent, StorageClass};
+use crate::jsonw::{self, string, Value};
+
+use super::irser::{
+    extent_from, extent_to_json, f64_from, f64_to_json, i32_from, interval_from,
+    interval_to_json, policy_from, policy_to_str, usize_from,
+};
+
+fn op_to_json(op: &TapeOp) -> String {
+    match op {
+        TapeOp::Const(c) => format!("[\"c\",{}]", f64_to_json(*c)),
+        TapeOp::Scalar(ix) => format!("[\"s\",{ix}]"),
+        TapeOp::Load { slot, off } => {
+            format!("[\"l\",{slot},{},{},{}]", off[0], off[1], off[2])
+        }
+        TapeOp::LoadLocal { slot, off } => {
+            format!("[\"L\",{slot},{},{},{}]", off[0], off[1], off[2])
+        }
+        TapeOp::Neg(a) => format!("[\"n\",{a}]"),
+        TapeOp::Not(a) => format!("[\"!\",{a}]"),
+        TapeOp::Bin(op, a, b) => format!("[\"o\",{},{a},{b}]", string(op.symbol())),
+        TapeOp::Select(c, t, f) => format!("[\"sel\",{c},{t},{f}]"),
+        TapeOp::Call1(f, a) => format!("[\"1\",{},{a}]", string(f.name())),
+        TapeOp::Call2(f, a, b) => format!("[\"2\",{},{a},{b}]", string(f.name())),
+        TapeOp::StoreField { slot, v } => format!("[\"S\",{slot},{v}]"),
+        TapeOp::StoreLocal { slot, v } => format!("[\"T\",{slot},{v}]"),
+    }
+}
+
+/// Decode one tape op. `ix` is the op's own SSA index and `num_slots` the
+/// program's slot count: every operand must reference an earlier value and
+/// every slot must exist, otherwise the payload is rejected.
+fn op_from(v: &Value, ix: usize, num_slots: usize) -> Option<TapeOp> {
+    let a = v.as_arr()?;
+    let val = |v: &Value| -> Option<u32> {
+        let n = v.as_u64()?;
+        ((n as usize) < ix).then_some(n as u32)
+    };
+    let slot = |v: &Value| -> Option<usize> {
+        let s = usize_from(v)?;
+        (s < num_slots).then_some(s)
+    };
+    Some(match a.first()?.as_str()? {
+        "c" if a.len() == 2 => TapeOp::Const(f64_from(&a[1])?),
+        "s" if a.len() == 2 => TapeOp::Scalar(usize_from(&a[1])?),
+        "l" if a.len() == 5 => TapeOp::Load {
+            slot: slot(&a[1])?,
+            off: [i32_from(&a[2])?, i32_from(&a[3])?, i32_from(&a[4])?],
+        },
+        "L" if a.len() == 5 => TapeOp::LoadLocal {
+            slot: slot(&a[1])?,
+            off: [i32_from(&a[2])?, i32_from(&a[3])?, i32_from(&a[4])?],
+        },
+        "n" if a.len() == 2 => TapeOp::Neg(val(&a[1])?),
+        "!" if a.len() == 2 => TapeOp::Not(val(&a[1])?),
+        "o" if a.len() == 4 => TapeOp::Bin(
+            super::irser::binop_from_symbol(a[1].as_str()?)?,
+            val(&a[2])?,
+            val(&a[3])?,
+        ),
+        "sel" if a.len() == 4 => TapeOp::Select(val(&a[1])?, val(&a[2])?, val(&a[3])?),
+        "1" if a.len() == 3 => {
+            let f = Builtin::from_name(a[1].as_str()?)?;
+            if f.arity() != 1 {
+                return None;
+            }
+            TapeOp::Call1(f, val(&a[2])?)
+        }
+        "2" if a.len() == 4 => {
+            let f = Builtin::from_name(a[1].as_str()?)?;
+            if f.arity() != 2 {
+                return None;
+            }
+            TapeOp::Call2(f, val(&a[2])?, val(&a[3])?)
+        }
+        "S" if a.len() == 3 => TapeOp::StoreField { slot: slot(&a[1])?, v: val(&a[2])? },
+        "T" if a.len() == 3 => TapeOp::StoreLocal { slot: slot(&a[1])?, v: val(&a[2])? },
+        _ => return None,
+    })
+}
+
+/// Serialize a compiled fused program to the `"tape"` persist payload.
+pub(crate) fn fused_to_json(fp: &FusedProgram) -> String {
+    let alloc: Vec<String> = fp.alloc.iter().map(extent_to_json).collect();
+    let mut multistages: Vec<String> = Vec::with_capacity(fp.multistages.len());
+    for ms in &fp.multistages {
+        let mut groups: Vec<String> = Vec::with_capacity(ms.groups.len());
+        for g in &ms.groups {
+            let scratch: Vec<String> = g
+                .scratch
+                .iter()
+                .map(|(slot, e)| format!("[{slot},{}]", extent_to_json(e)))
+                .collect();
+            let tiers: Vec<String> = g
+                .tiers
+                .iter()
+                .map(|t| {
+                    let ops: Vec<String> = t
+                        .tape
+                        .ops
+                        .iter()
+                        .map(|inst| {
+                            format!(
+                                "[{},{}]",
+                                op_to_json(&inst.op),
+                                extent_to_json(&inst.region)
+                            )
+                        })
+                        .collect();
+                    format!(
+                        "{{\"extent\":{},\"ops\":[{}]}}",
+                        extent_to_json(&t.extent),
+                        ops.join(",")
+                    )
+                })
+                .collect();
+            groups.push(format!(
+                "{{\"interval\":{},\"scratch\":[{}],\"tiers\":[{}]}}",
+                interval_to_json(&g.interval),
+                scratch.join(","),
+                tiers.join(",")
+            ));
+        }
+        multistages.push(format!(
+            "{{\"policy\":\"{}\",\"shardable\":{},\"groups\":[{}]}}",
+            policy_to_str(ms.policy),
+            ms.shardable,
+            groups.join(",")
+        ));
+    }
+    format!(
+        "{{\"alloc\":[{}],\"multistages\":[{}]}}",
+        alloc.join(","),
+        multistages.join(",")
+    )
+}
+
+/// Deserialize a persisted fused program, re-lowering each tier's kernel
+/// plan from its tape. `classes` must be the slot storage classes of the
+/// `Program` compiled from the same fingerprint's IR (they size and type
+/// the plan), and `fast_math` the IR's fingerprint-salted flag. `None` on
+/// any structural mismatch.
+pub(crate) fn fused_from_json(
+    payload: &str,
+    classes: &[StorageClass],
+    fast_math: bool,
+) -> Option<FusedProgram> {
+    let v = jsonw::parse(payload).ok()?;
+    let alloc_v = v.get("alloc")?.as_arr()?;
+    if alloc_v.len() != classes.len() {
+        return None;
+    }
+    let alloc: Vec<Extent> = alloc_v.iter().map(extent_from).collect::<Option<Vec<_>>>()?;
+    let mut multistages = Vec::new();
+    for ms in v.get("multistages")?.as_arr()? {
+        let policy = policy_from(ms.get("policy")?.as_str()?)?;
+        let shardable = ms.get("shardable")?.as_bool()?;
+        let mut groups = Vec::new();
+        for g in ms.get("groups")?.as_arr()? {
+            let interval = interval_from(g.get("interval")?)?;
+            let mut scratch = Vec::new();
+            for s in g.get("scratch")?.as_arr()? {
+                let pair = s.as_arr()?;
+                if pair.len() != 2 {
+                    return None;
+                }
+                let slot = usize_from(&pair[0])?;
+                if slot >= classes.len() {
+                    return None;
+                }
+                scratch.push((slot, extent_from(&pair[1])?));
+            }
+            let mut tiers = Vec::new();
+            for t in g.get("tiers")?.as_arr()? {
+                let extent = extent_from(t.get("extent")?)?;
+                let mut ops = Vec::new();
+                for (ix, inst) in t.get("ops")?.as_arr()?.iter().enumerate() {
+                    let pair = inst.as_arr()?;
+                    if pair.len() != 2 {
+                        return None;
+                    }
+                    ops.push(TapeInst {
+                        op: op_from(&pair[0], ix, classes.len())?,
+                        region: extent_from(&pair[1])?,
+                    });
+                }
+                let tape = CTape { ops };
+                // Same lowering call as the fresh-compile path: plans are
+                // derived, never trusted from disk.
+                let plan = TierPlan::lower(&tape, classes, fast_math);
+                tiers.push(Tier { extent, tape, plan });
+            }
+            groups.push(FusedGroup { interval, scratch, tiers });
+        }
+        multistages.push(FusedMultistage { policy, groups, shardable });
+    }
+    Some(FusedProgram { multistages, alloc })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis;
+    use crate::backend::fused::FusedProgram;
+    use crate::backend::program::Program;
+    use crate::opt::{OptConfig, OptLevel};
+    use crate::stdlib;
+
+    fn compiled(name: &str, fast_math: bool) -> (Program, FusedProgram) {
+        let src = stdlib::source(name).unwrap();
+        let ir = analysis::compile_source_opt(
+            src,
+            name,
+            &Default::default(),
+            &OptConfig::level(OptLevel::O3).with_fast_math(fast_math),
+        )
+        .unwrap();
+        let p = Program::compile(&ir).unwrap();
+        let fp = FusedProgram::compile(&p, fast_math);
+        (p, fp)
+    }
+
+    /// Round-trip every stdlib stencil's O3 fused program (exact and
+    /// fast-math): the reloaded program — tapes, extents, intervals,
+    /// scratch, shardability *and re-lowered kernel plans* — must be
+    /// structurally identical to the fresh compile.
+    #[test]
+    fn stdlib_fused_programs_roundtrip_identically() {
+        for name in stdlib::names() {
+            for fast_math in [false, true] {
+                let (program, fp) = compiled(name, fast_math);
+                let classes: Vec<StorageClass> =
+                    program.slots.iter().map(|s| s.storage).collect();
+                let payload = fused_to_json(&fp);
+                let back = fused_from_json(&payload, &classes, fast_math)
+                    .unwrap_or_else(|| panic!("{name}: reload failed"));
+                // Debug formatting covers the full structure including the
+                // re-lowered plans; f64 Debug is shortest-roundtrip, so
+                // bitwise-identical constants format identically.
+                assert_eq!(
+                    format!("{fp:?}"),
+                    format!("{back:?}"),
+                    "{name} fast_math={fast_math}: reloaded fused program diverged"
+                );
+            }
+        }
+    }
+
+    /// Slot and SSA-operand bounds are enforced on load.
+    #[test]
+    fn out_of_range_indices_reject() {
+        let (program, fp) = compiled("hdiff", false);
+        let classes: Vec<StorageClass> = program.slots.iter().map(|s| s.storage).collect();
+        let payload = fused_to_json(&fp);
+        // Fewer classes than slots: alloc length check must reject.
+        assert!(fused_from_json(&payload, &classes[..1], false).is_none());
+        // A forward SSA reference must reject (operand index >= own index).
+        let zero = "[0,0,0,0,0,0]";
+        let bad = format!(
+            "{{\"alloc\":[{zero}],\"multistages\":[{{\"policy\":\"PARALLEL\",\
+             \"shardable\":true,\"groups\":[{{\"interval\":[[\"s\",0],[\"e\",0]],\
+             \"scratch\":[],\"tiers\":[{{\"extent\":{zero},\"ops\":[[[\"n\",0],{zero}]]}}]}}]}}]}}"
+        );
+        assert!(fused_from_json(&bad, &classes[..1], false).is_none());
+        // Garbage payloads never panic.
+        for bad in ["", "17", "{\"alloc\":[]}"] {
+            assert!(fused_from_json(bad, &classes, false).is_none());
+        }
+    }
+}

@@ -63,6 +63,12 @@ pub struct ServeConfig {
     /// Leases retained per tenant; the oldest is evicted past this (a
     /// later run against it gets a structured 410 re-bind error).
     pub max_leases_per_tenant: usize,
+    /// Persistent artifact cache root (see [`crate::persist`]). `None`
+    /// falls back to the `REPRO_CACHE_DIR` environment variable; absent
+    /// both, persistence is off. When set, the store is opened at bind
+    /// time (warm start) and every tenant coordinator compiles through
+    /// it.
+    pub cache_dir: Option<String>,
 }
 
 impl Default for ServeConfig {
@@ -74,6 +80,7 @@ impl Default for ServeConfig {
             default_deadline_ms: 10_000,
             small_domain_elems: 4096,
             max_leases_per_tenant: 64,
+            cache_dir: None,
         }
     }
 }
@@ -231,6 +238,9 @@ struct ServerState {
     coalescer: Coalescer,
     stats: ServeStats,
     shutdown: AtomicBool,
+    /// Persistent artifact store shared by every tenant coordinator
+    /// (opened once at bind time — the warm start).
+    persist: Option<Arc<crate::persist::PersistStore>>,
 }
 
 impl ServerState {
@@ -240,8 +250,12 @@ impl ServerState {
             .unwrap()
             .entry(name.to_string())
             .or_insert_with(|| {
+                let mut coord = Coordinator::new();
+                if let Some(store) = &self.persist {
+                    coord.set_persist(store.clone());
+                }
                 Arc::new(Tenant {
-                    coord: Mutex::new(Coordinator::new()),
+                    coord: Mutex::new(coord),
                     leases: Mutex::new(LeaseTable::default()),
                 })
             })
@@ -676,6 +690,12 @@ fn render_metrics(state: &Arc<ServerState>) -> String {
     let _ = writeln!(out, "serve_core_budget_cores {}", state.budget.cores());
     let _ = writeln!(out, "serve_core_budget_in_use {}", state.budget.in_use());
     let _ = writeln!(out, "serve_core_budget_waiters {}", state.budget.waiters());
+    // Persist counters are always present (zeros without a store) so
+    // scrapers never need existence checks.
+    let (ph, pm, pr) = state.persist.as_ref().map(|s| s.counters()).unwrap_or((0, 0, 0));
+    let _ = writeln!(out, "persist_hits {ph}");
+    let _ = writeln!(out, "persist_misses {pm}");
+    let _ = writeln!(out, "persist_rejects {pr}");
 
     let tenants: Vec<(String, Arc<Tenant>)> = {
         let t = state.tenants.lock().unwrap();
@@ -746,6 +766,12 @@ impl Server {
         let listener = TcpListener::bind(&config.addr)?;
         let local_addr = listener.local_addr()?;
         let budget = CoreBudget::new(config.cores, config.max_waiters);
+        // Warm start: open the persist store at bind time so the first
+        // request of every tenant compiles through it.
+        let persist = match &config.cache_dir {
+            Some(dir) => Some(Arc::new(crate::persist::PersistStore::open(dir)?)),
+            None => crate::persist::PersistStore::from_env()?.map(Arc::new),
+        };
         let state = Arc::new(ServerState {
             config,
             local_addr,
@@ -754,12 +780,22 @@ impl Server {
             coalescer: Coalescer::default(),
             stats: ServeStats::default(),
             shutdown: AtomicBool::new(false),
+            persist,
         });
         Ok(Server { listener, state })
     }
 
     pub fn local_addr(&self) -> SocketAddr {
         self.state.local_addr
+    }
+
+    /// `(cache root, entries on disk)` of the persist store opened at
+    /// bind time, if any — the CLI announces this as the warm-start line.
+    pub fn persist_info(&self) -> Option<(String, usize)> {
+        self.state
+            .persist
+            .as_ref()
+            .map(|s| (s.root().display().to_string(), s.entries().len()))
     }
 
     /// Blocking accept loop; one handler thread per connection. Returns

@@ -1,12 +1,13 @@
-//! Cache-layer coverage: `DiskCache` persistence, `StencilCache`
-//! hit/miss accounting through the coordinator, and the fingerprint
-//! properties the caching design rests on — *invariant under source
-//! reformatting, distinct across optimization levels*.
+//! Cache-layer coverage: `PersistStore` on-disk persistence,
+//! `StencilCache` hit/miss accounting through the coordinator, and the
+//! fingerprint properties the caching design rests on — *invariant under
+//! source reformatting, distinct across optimization levels*.
 
 use gt4rs::analysis;
-use gt4rs::cache::{DiskCache, StencilCache};
+use gt4rs::cache::StencilCache;
 use gt4rs::coordinator::Coordinator;
 use gt4rs::opt::{OptConfig, OptLevel};
+use gt4rs::persist::PersistStore;
 use std::collections::BTreeMap;
 
 /// Deterministic reformatting: inject whitespace/newlines around
@@ -46,24 +47,27 @@ fn gen_source(seed: u64) -> String {
 }
 
 #[test]
-fn disk_cache_roundtrip_and_isolation() {
+fn persist_store_roundtrip_and_isolation() {
     let dir = std::env::temp_dir().join(format!("gt4rs_dc_it_{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&dir);
-    let cache = DiskCache::new(&dir).unwrap();
-    assert!(!cache.contains("hlo", 7));
-    cache.put("hlo", 7, "HloModule a").unwrap();
-    cache.put("hlo", 8, "HloModule b").unwrap();
-    cache.put("cpp", 7, "int main() {}").unwrap();
-    assert_eq!(cache.get("hlo", 7).unwrap(), "HloModule a");
-    assert_eq!(cache.get("hlo", 8).unwrap(), "HloModule b");
-    assert_eq!(cache.get("cpp", 7).unwrap(), "int main() {}");
-    assert!(cache.get("hlo", 9).is_none());
+    let cache = PersistStore::open(&dir).unwrap();
+    assert!(cache.load("hlo", "0007").is_none());
+    cache.store("hlo", "0007", "HloModule a").unwrap();
+    cache.store("hlo", "0008", "HloModule b").unwrap();
+    cache.store("ir", "0007", "{\"name\":\"x\"}").unwrap();
+    assert_eq!(cache.load("hlo", "0007").unwrap(), "HloModule a");
+    assert_eq!(cache.load("hlo", "0008").unwrap(), "HloModule b");
+    assert_eq!(cache.load("ir", "0007").unwrap(), "{\"name\":\"x\"}");
+    assert!(cache.load("hlo", "0009").is_none());
     // Overwrite is atomic-replace, last write wins.
-    cache.put("hlo", 7, "HloModule a2").unwrap();
-    assert_eq!(cache.get("hlo", 7).unwrap(), "HloModule a2");
-    // A second handle over the same directory sees everything.
-    let reopened = DiskCache::new(&dir).unwrap();
-    assert!(reopened.contains("hlo", 8));
+    cache.store("hlo", "0007", "HloModule a2").unwrap();
+    assert_eq!(cache.load("hlo", "0007").unwrap(), "HloModule a2");
+    // Kinds are isolated per key; a second handle over the same
+    // directory sees everything, counters start fresh per handle.
+    let reopened = PersistStore::open(&dir).unwrap();
+    assert_eq!(reopened.load("hlo", "0008").unwrap(), "HloModule b");
+    assert_eq!(reopened.entries().len(), 3);
+    assert_eq!(reopened.counters(), (1, 0, 0));
     let _ = std::fs::remove_dir_all(&dir);
 }
 

@@ -1,0 +1,202 @@
+//! Warm-start equivalence: compile → persist → drop the coordinator →
+//! reload in a fresh coordinator from the same cache root. The reloaded
+//! artifacts must be *indistinguishable* from fresh compiles — identical
+//! fingerprints, identical canonical IR text, bitwise-identical run
+//! results at every opt level × executor tier × sharding plan — and the
+//! fresh coordinator must get there with **zero** dsl→analysis→opt
+//! pipeline runs (the `pipeline_compiles` honesty counter).
+
+use gt4rs::coordinator::Coordinator;
+use gt4rs::ir::canon;
+use gt4rs::opt::{ExecOptions, OptLevel};
+use gt4rs::persist::PersistStore;
+use gt4rs::storage::{synthetic_fill, Storage};
+use gt4rs::{ExecTier, Sharding};
+use std::sync::Arc;
+
+const STENCILS: [&str; 3] = ["hdiff", "vadv", "diffuse"];
+const LEVELS: [OptLevel; 4] = [OptLevel::O0, OptLevel::O1, OptLevel::O2, OptLevel::O3];
+/// Scheduling combos every warm artifact must agree with its cold twin
+/// on. Tiers only differentiate at O3; running them everywhere is a
+/// free no-op elsewhere.
+const SCHEDULES: [(ExecTier, Sharding); 3] = [
+    (ExecTier::Interpreted, Sharding::Off),
+    (ExecTier::Specialized, Sharding::Off),
+    (ExecTier::Specialized, Sharding::Threads(2)),
+];
+
+fn scratch_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("gt4rs_ws_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn coordinator(level: OptLevel, store: &Arc<PersistStore>) -> Coordinator {
+    let mut c = Coordinator::new();
+    c.set_exec_options(ExecOptions::new().with_opt_level(level));
+    c.set_persist(store.clone());
+    c
+}
+
+/// Run `fp` on the vector backend under one schedule; returns
+/// `(name, sum_bits, hash)` digests in declaration order.
+fn run_digests(
+    coord: &mut Coordinator,
+    fp: u64,
+    tier: ExecTier,
+    sharding: Sharding,
+) -> Vec<(String, u64, u64)> {
+    let stencil = coord.stencil_for(fp, "vector").unwrap();
+    let domain = [10, 9, 6];
+    let mut fields: Vec<(String, Storage)> = Vec::new();
+    for (idx, f) in stencil.ir().fields.iter().enumerate() {
+        let mut s = stencil.alloc_field(&f.name, domain).unwrap();
+        synthetic_fill(&mut s, idx as f64);
+        fields.push((f.name.clone(), s));
+    }
+    let scalars: Vec<(String, f64)> =
+        stencil.ir().scalars.iter().map(|s| (s.name.clone(), 0.1)).collect();
+    let mut inv = stencil
+        .bind()
+        .domain(domain)
+        .fields(&fields)
+        .scalars(&scalars)
+        .finish()
+        .unwrap();
+    inv.set_exec_tier(tier);
+    inv.set_sharding(sharding);
+    let mut refs: Vec<&mut Storage> = fields.iter_mut().map(|(_, s)| s).collect();
+    inv.run(&mut refs).unwrap();
+    fields
+        .iter()
+        .map(|(n, s)| (n.clone(), s.domain_sum().to_bits(), s.domain_hash()))
+        .collect()
+}
+
+#[test]
+fn warm_start_is_bitwise_identical_and_pipeline_free() {
+    let dir = scratch_dir("equiv");
+    for level in LEVELS {
+        // --- Cold pass: compile through the pipeline, store-through. ---
+        let store = Arc::new(PersistStore::open(&dir).unwrap());
+        let mut cold = coordinator(level, &store);
+        let mut expected = Vec::new();
+        for name in STENCILS {
+            let fp = cold.compile_library(name).unwrap();
+            let ir = cold.ir(fp).unwrap();
+            let tag = cold.opt_config().canon();
+            let canon_text = canon::canon_ir(&ir, &tag);
+            let mut runs = Vec::new();
+            for (tier, sharding) in SCHEDULES {
+                runs.push(run_digests(&mut cold, fp, tier, sharding));
+            }
+            expected.push((name, fp, ir.fingerprint, canon_text, runs));
+        }
+        assert_eq!(
+            cold.pipeline_compiles(),
+            STENCILS.len() as u64,
+            "O{level}: cold pass must run the pipeline once per stencil"
+        );
+        drop(cold);
+        drop(store);
+
+        // --- Warm pass: fresh coordinator + fresh store handle, same
+        // root. Everything must come back from disk. ---
+        let store = Arc::new(PersistStore::open(&dir).unwrap());
+        let mut warm = coordinator(level, &store);
+        for (name, fp, ir_fp, canon_text, runs) in &expected {
+            let fp2 = warm.compile_library(name).unwrap();
+            assert_eq!(fp2, *fp, "O{level} {name}: warm cache key diverged");
+            let ir = warm.ir(fp2).unwrap();
+            assert_eq!(ir.fingerprint, *ir_fp, "O{level} {name}: IR fingerprint diverged");
+            let tag = warm.opt_config().canon();
+            assert_eq!(
+                &canon::canon_ir(&ir, &tag),
+                canon_text,
+                "O{level} {name}: canonical IR text diverged after reload"
+            );
+            for ((tier, sharding), cold_digests) in SCHEDULES.iter().zip(runs) {
+                let warm_digests = run_digests(&mut warm, fp2, *tier, *sharding);
+                assert_eq!(
+                    &warm_digests, cold_digests,
+                    "O{level} {name} {tier:?}/{sharding:?}: warm run not bitwise-identical"
+                );
+            }
+        }
+        assert_eq!(
+            warm.pipeline_compiles(),
+            0,
+            "O{level}: warm pass must not run the pipeline at all"
+        );
+        let (hits, _misses, rejects) = warm.persist_counters().unwrap();
+        assert!(hits > 0, "O{level}: warm pass must load from the store");
+        assert_eq!(rejects, 0, "O{level}: warm pass rejected valid entries");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupted_ir_entry_is_rejected_and_recompiled() {
+    let dir = scratch_dir("reject");
+    let store = Arc::new(PersistStore::open(&dir).unwrap());
+    let mut cold = coordinator(OptLevel::O2, &store);
+    let fp = cold.compile_library("hdiff").unwrap();
+    let sum_cold = run_digests(&mut cold, fp, ExecTier::Specialized, Sharding::Off);
+    drop(cold);
+    // Replace the IR entry with a digest-valid envelope whose payload is
+    // not a deserializable IR: the loader must demote the hit to a
+    // reject and silently fall back to the pipeline.
+    store.store("ir", &format!("{fp:016x}"), "{\"not\":\"an ir\"}").unwrap();
+    drop(store);
+
+    let store = Arc::new(PersistStore::open(&dir).unwrap());
+    let mut warm = coordinator(OptLevel::O2, &store);
+    let fp2 = warm.compile_library("hdiff").unwrap();
+    assert_eq!(fp2, fp);
+    assert_eq!(warm.pipeline_compiles(), 1, "corrupt entry must force a recompile");
+    let (_, _, rejects) = warm.persist_counters().unwrap();
+    assert_eq!(rejects, 1, "semantic corruption must count as a reject");
+    // The recompile stored a good entry back; results are unaffected.
+    let sum_warm = run_digests(&mut warm, fp2, ExecTier::Specialized, Sharding::Off);
+    assert_eq!(sum_warm, sum_cold);
+    drop(warm);
+    let store = Arc::new(PersistStore::open(&dir).unwrap());
+    let mut again = coordinator(OptLevel::O2, &store);
+    again.compile_library("hdiff").unwrap();
+    assert_eq!(again.pipeline_compiles(), 0, "repaired entry must load cleanly");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn stale_tool_or_schema_recompiles_without_error() {
+    // A store written by "another toolchain" (entries whose tool tag
+    // differs) must behave exactly like an empty store.
+    let dir = scratch_dir("skew");
+    let store = Arc::new(PersistStore::open(&dir).unwrap());
+    let mut cold = coordinator(OptLevel::O3, &store);
+    let fp = cold.compile_library("diffuse").unwrap();
+    drop(cold);
+    // Rewrite every entry's tool tag in place (digest untouched — the
+    // tool check fires first and classifies the entry as a plain miss).
+    for e in store.entries() {
+        let path = dir.join(format!("{}_{}.json", e.kind, e.key));
+        let text = std::fs::read_to_string(&path).unwrap();
+        let skewed = text.replace(
+            &format!("\"tool\":\"{}\"", env!("CARGO_PKG_VERSION")),
+            "\"tool\":\"0.0.0-other\"",
+        );
+        assert_ne!(text, skewed, "test must actually rewrite the tool tag");
+        std::fs::write(&path, skewed).unwrap();
+    }
+    drop(store);
+    let store = Arc::new(PersistStore::open(&dir).unwrap());
+    let mut warm = coordinator(OptLevel::O3, &store);
+    let fp2 = warm.compile_library("diffuse").unwrap();
+    assert_eq!(fp2, fp);
+    assert_eq!(warm.pipeline_compiles(), 1, "skewed entries must recompile");
+    let (hits, misses, rejects) = warm.persist_counters().unwrap();
+    assert_eq!(hits, 0);
+    assert!(misses >= 1);
+    assert_eq!(rejects, 0, "version skew is a miss, never a reject");
+    let _ = std::fs::remove_dir_all(&dir);
+}

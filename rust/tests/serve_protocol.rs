@@ -339,6 +339,63 @@ fn compile_fingerprints_are_opt_salted_across_the_wire() {
     assert_ne!(fp(&o2a), fp(&o0));
 }
 
+/// `/metrics` always exposes the persist counters; with a cache-dir
+/// configured they actually move — a cold tenant misses and stores, a
+/// second tenant compiling the same stencil hits the entries the first
+/// one published.
+#[test]
+fn persist_counters_appear_in_metrics_and_move() {
+    // Without a store: counters present, all zero.
+    {
+        let server = Server::spawn(ServeConfig::default()).unwrap();
+        let mut client = Client::connect(server.addr());
+        let m = client.request(r#"{"op":"metrics"}"#);
+        let text = m.get("text").unwrap().as_str().unwrap().to_string();
+        for line in ["persist_hits 0", "persist_misses 0", "persist_rejects 0"] {
+            assert!(text.lines().any(|l| l == line), "missing `{line}` in:\n{text}");
+        }
+    }
+
+    let dir = std::env::temp_dir()
+        .join(format!("gt4rs_serve_persist_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let config = ServeConfig {
+        cache_dir: Some(dir.to_string_lossy().to_string()),
+        ..ServeConfig::default()
+    };
+    let server = Server::spawn(config).unwrap();
+    let mut client = Client::connect(server.addr());
+
+    let metric = |client: &mut Client, name: &str| -> u64 {
+        let m = client.request(r#"{"op":"metrics"}"#);
+        let text = m.get("text").unwrap().as_str().unwrap().to_string();
+        text.lines()
+            .find_map(|l| l.strip_prefix(&format!("{name} ")))
+            .unwrap_or_else(|| panic!("no `{name}` in:\n{text}"))
+            .parse()
+            .unwrap()
+    };
+
+    // Tenant A compiles cold: misses recorded, entries stored.
+    let a = client.request(r#"{"op":"compile","tenant":"a","stencil":"hdiff"}"#);
+    assert!(ok(&a), "{a:?}");
+    assert!(metric(&mut client, "persist_misses") >= 1, "cold compile must miss");
+    assert_eq!(metric(&mut client, "persist_hits"), 0);
+
+    // Tenant B (fresh coordinator, same store) compiles the same stencil
+    // at the same options: served from the store.
+    let b = client.request(r#"{"op":"compile","tenant":"b","stencil":"hdiff"}"#);
+    assert!(ok(&b), "{b:?}");
+    assert_eq!(
+        b.get("fingerprint").unwrap().as_str().unwrap(),
+        a.get("fingerprint").unwrap().as_str().unwrap()
+    );
+    assert!(metric(&mut client, "persist_hits") >= 1, "warm compile must hit");
+    assert_eq!(metric(&mut client, "persist_rejects"), 0);
+    drop(server);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// The shutdown op stops the accept loop (join returns), and the
 /// response still makes it back to the requesting client.
 #[test]
