@@ -78,8 +78,9 @@ if [[ "${1:-}" != "quick" ]]; then
 
     # The A7 kernels bench (tiny mode) runs its own honesty gates —
     # specialized bitwise-equal to interpreted, fast-math within
-    # tolerance — before timing anything; its JSON artifact must parse
-    # under the same contract.
+    # tolerance, the f32 column bitwise-equal to its own f32 interpreted
+    # run and genuinely narrower than f64 — before timing anything; its
+    # JSON artifact must parse under the same contract.
     step cargo bench --bench kernels -- --tiny --json /tmp/gt4rs_kernels.json
     echo
     echo "=== BENCH_kernels.json parse smoke ==="
@@ -163,6 +164,20 @@ if [[ "${1:-}" != "quick" ]]; then
 fi
 
 step cargo test -q
+
+# The UnsafeCell-based shared-slab storage views and the sharded writers
+# built on their disjoint-write contract are exactly the code Miri exists
+# to check. Gated on the component being installed (the hosted `miri` job
+# always runs it); quick mode skips it for latency.
+if [[ "${1:-}" != "quick" ]]; then
+    if cargo miri --version >/dev/null 2>&1; then
+        step env MIRIFLAGS="-Zmiri-disable-isolation" \
+            cargo miri test --lib -- storage:: backend::shard::
+    else
+        echo
+        echo "=== cargo miri test (skipped: miri component not installed) ==="
+    fi
+fi
 
 echo
 echo "ci.sh: all checks passed"

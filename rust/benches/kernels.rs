@@ -1,6 +1,6 @@
 //! A7: executor-tier ablation for the O3 fused evaluator — the
 //! measurement behind the specialized kernel-plan tier. For hdiff and
-//! vadv at `--opt-level 3` this times three configurations per call:
+//! vadv at `--opt-level 3` this times four configurations per call:
 //!
 //! * `interpreted` — the per-strip CTape walk (`ExecTier::Interpreted`),
 //!   every op bounds-checked per lane row;
@@ -9,13 +9,20 @@
 //!   slice kernels over a cache-blocked j-tiled interior;
 //! * `fast-math` — the specialized executor on the separately
 //!   fingerprinted fast-math artifact (FMA contraction). Reported as its
-//!   own column, never merged into the exact ones.
+//!   own column, never merged into the exact ones;
+//! * `f32` — the specialized executor on the f32-retyped artifact
+//!   (`OptConfig::with_dtype`), measuring what narrower storage buys at
+//!   the same plan shape. Like fast-math it is a separately fingerprinted
+//!   artifact and its own column.
 //!
 //! Honesty gates run before any timing: `specialized` must be **bitwise**
-//! identical to `interpreted` on fresh inputs, and the fast-math column
+//! identical to `interpreted` on fresh inputs, the fast-math column
 //! must agree within a relative tolerance (the property suite pins the
-//! stronger per-point bound). A timing table for an executor that changed
-//! the answer would be worthless.
+//! stronger per-point bound), and the f32 column must be bitwise
+//! identical to its own f32 interpreted run, within a loose tolerance of
+//! f64, and *not* bitwise equal to f64 (proof the storage is genuinely
+//! narrower, not silently widened). A timing table for an executor that
+//! changed the answer would be worthless.
 //!
 //!     cargo bench --bench kernels [-- --tiny] [-- --json PATH]
 //!
@@ -30,6 +37,7 @@ mod harness;
 use gt4rs::backend::kernels::ExecTier;
 use gt4rs::backend::vector::VectorBackend;
 use gt4rs::backend::{Backend, RunConfig, StencilArgs};
+use gt4rs::dsl::ast::DType;
 use gt4rs::opt::{OptConfig, OptLevel, PassManager};
 use gt4rs::stdlib;
 use gt4rs::storage::Storage;
@@ -40,6 +48,7 @@ struct Row {
     stencil: String,
     domain: String,
     config: &'static str,
+    dtype: &'static str,
     fast_math: bool,
     median_ns: u128,
     speedup_vs_interpreted: f64,
@@ -55,12 +64,13 @@ impl Row {
     fn json(&self) -> String {
         format!(
             "{{\"bench\":\"A7\",\"stencil\":\"{}\",\"domain\":\"{}\",\
-             \"config\":\"{}\",\"fast_math\":{},\"median_ns\":{},\
+             \"config\":\"{}\",\"dtype\":\"{}\",\"fast_math\":{},\"median_ns\":{},\
              \"speedup_vs_interpreted\":{:.4},\"strips_interpreted\":{},\
              \"strips_guarded\":{},\"blocks_interior\":{}}}",
             self.stencil,
             self.domain,
             self.config,
+            self.dtype,
             self.fast_math,
             self.median_ns,
             self.speedup_vs_interpreted,
@@ -94,31 +104,37 @@ fn main() {
     }
 }
 
-/// Compile a library stencil at O3, optionally as the fast-math artifact
-/// (a distinct fingerprint — the exact and relaxed IRs never share a
-/// cache entry).
-fn compiled(name: &str, fast_math: bool) -> StencilIr {
+/// Compile a library stencil at O3, optionally as the fast-math or
+/// dtype-retyped artifact (each a distinct fingerprint — relaxed,
+/// narrowed and exact IRs never share a cache entry).
+fn compiled(name: &str, fast_math: bool, dtype: Option<DType>) -> StencilIr {
     let mut ir = stdlib::compile(name).unwrap();
-    let config = OptConfig::level(OptLevel::O3).with_fast_math(fast_math);
+    let config =
+        OptConfig::level(OptLevel::O3).with_fast_math(fast_math).with_dtype(dtype);
     PassManager::new(&config).run(&mut ir);
     ir
 }
 
-/// Fresh deterministically-filled storages for `ir` over `domain`.
+/// Fresh deterministically-filled storages for `ir` over `domain`,
+/// allocated at each field's declared dtype (the fill goes through the
+/// f64 facade, so f32 storages hold the rounded values).
 fn fresh_fields(ir: &StencilIr, domain: [usize; 3]) -> Vec<(String, Storage)> {
     ir.fields
         .iter()
         .enumerate()
         .map(|(ix, f)| {
             let e = f.extent;
-            let mut s = Storage::zeros(gt4rs::storage::StorageInfo::new(
-                domain,
-                [
-                    ((-e.i.0) as usize, e.i.1 as usize),
-                    ((-e.j.0) as usize, e.j.1 as usize),
-                    ((-e.k.0) as usize, e.k.1 as usize),
-                ],
-            ));
+            let mut s = Storage::zeros(
+                gt4rs::storage::StorageInfo::new(
+                    domain,
+                    [
+                        ((-e.i.0) as usize, e.i.1 as usize),
+                        ((-e.j.0) as usize, e.j.1 as usize),
+                        ((-e.k.0) as usize, e.k.1 as usize),
+                    ],
+                )
+                .with_dtype(f.dtype),
+            );
             fill_storage(&mut s, 1.0 + ix as f64 * 0.5);
             (f.name.clone(), s)
         })
@@ -157,8 +173,9 @@ fn a7_tiers(domain: [usize; 3], iters: usize, rows: &mut Vec<Row>) {
         "domain", "stencil", "config", "median", "vs interp", "interp", "guarded", "blocks"
     );
     for (name, scalars) in [("hdiff", vec![]), ("vadv", vec![("dtdz", 0.3)])] {
-        let exact = compiled(name, false);
-        let relaxed = compiled(name, true);
+        let exact = compiled(name, false, None);
+        let relaxed = compiled(name, true, None);
+        let narrow = compiled(name, false, Some(DType::F32));
         let be = VectorBackend::new();
         // Honesty gates on fresh inputs before a single timed iteration.
         let interp = run_once_sums(&be, &exact, domain, &scalars, ExecTier::Interpreted);
@@ -177,16 +194,40 @@ fn a7_tiers(domain: [usize; 3], iters: usize, rows: &mut Vec<Row>) {
                 "{name}: fast-math sum out of tolerance (exact {a}, fast-math {b})"
             );
         }
+        // f32 gates: the specialized f32 executor must be bitwise
+        // identical to the f32 interpreted walk, close to f64 (loose
+        // norm — roundoff accumulates over the domain sum), and not
+        // bitwise equal to f64 (the storage really is narrower).
+        let n32i = run_once_sums(&be, &narrow, domain, &scalars, ExecTier::Interpreted);
+        let n32 = run_once_sums(&be, &narrow, domain, &scalars, ExecTier::Specialized);
+        for (a, b) in n32i.iter().zip(&n32) {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{name}: f32 specialized result diverged from f32 interpreted"
+            );
+        }
+        for (a, b) in interp.iter().zip(&n32) {
+            assert!(
+                (a - b).abs() <= 1e-3 * (1.0 + a.abs()),
+                "{name}: f32 sum out of tolerance (f64 {a}, f32 {b})"
+            );
+        }
+        assert!(
+            interp.iter().zip(&n32).any(|(a, b)| a.to_bits() != b.to_bits()),
+            "{name}: f32 sums bitwise-matched f64 — storage silently widened"
+        );
         let _ = be.take_pool_stats();
         // interpreted is measured first so every later row's speedup is
         // computed against a real baseline (never fabricated).
-        let configs: [(&'static str, &StencilIr, ExecTier, bool); 3] = [
-            ("interpreted", &exact, ExecTier::Interpreted, false),
-            ("specialized", &exact, ExecTier::Specialized, false),
-            ("fast-math", &relaxed, ExecTier::Specialized, true),
+        let configs: [(&'static str, &StencilIr, ExecTier, bool, &'static str); 4] = [
+            ("interpreted", &exact, ExecTier::Interpreted, false, "f64"),
+            ("specialized", &exact, ExecTier::Specialized, false, "f64"),
+            ("fast-math", &relaxed, ExecTier::Specialized, true, "f64"),
+            ("f32", &narrow, ExecTier::Specialized, false, "f32"),
         ];
         let mut interp_median: Option<f64> = None;
-        for (label, ir, tier, fast_math) in configs {
+        for (label, ir, tier, fast_math, dtype) in configs {
             let mut fields = fresh_fields(ir, domain);
             let mut calls = 0u64;
             let sample = bench(iters, || {
@@ -218,6 +259,7 @@ fn a7_tiers(domain: [usize; 3], iters: usize, rows: &mut Vec<Row>) {
                 stencil: name.to_string(),
                 domain: dstr.clone(),
                 config: label,
+                dtype,
                 fast_math,
                 median_ns: sample.median.as_nanos(),
                 speedup_vs_interpreted: speedup,

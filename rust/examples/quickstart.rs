@@ -1,9 +1,10 @@
 //! Quickstart: define a stencil in GTScript-RS, compile it to a
 //! first-class `Stencil` handle, bind its arguments **once**, run it
 //! many times, fan the same compiled handle out across threads, split a
-//! *single call* across cores with intra-call domain sharding, and
-//! warm-start a fresh coordinator from the on-disk artifact store — the
-//! 60-second tour of the framework.
+//! *single call* across cores with intra-call domain sharding,
+//! warm-start a fresh coordinator from the on-disk artifact store, and
+//! re-run the whole program at f32 to measure what the narrower storage
+//! costs in roundoff — the 60-second tour of the framework.
 //!
 //!     cargo run --release --example quickstart
 //!
@@ -328,6 +329,48 @@ fn main() -> Result<()> {
         );
         println!("warm start from disk: 0 pipeline runs, checksum matches bitwise");
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    // 12. Precision: `ExecOptions::with_dtype` retypes the whole program
+    //     — every field, scalar slot and temporary — so storage, tapes
+    //     and kernel plans all run genuinely at f32. The dtype salts the
+    //     fingerprint (an f32 artifact never shadows an f64 one in any
+    //     cache), and each dtype is bitwise-reproducible against its own
+    //     debug interpreter; *across* dtypes the difference is real
+    //     roundoff, which we report as a relative L2 norm. On the CLI
+    //     this is `repro run ... --dtype f32` and
+    //     `repro model --precision-sweep`.
+    {
+        use gt4rs::dsl::ast::DType;
+
+        let mut prec = Coordinator::new();
+        prec.set_exec_options(ExecOptions::new().with_opt_level(OptLevel::O3));
+        let run_at = |coord: &mut Coordinator, dtype: Option<DType>| -> Result<(u64, Storage)> {
+            coord.set_dtype(dtype);
+            let handle = coord.stencil(SRC, "smooth", "vector", &Default::default())?;
+            let mut phi = handle.alloc_field("phi", domain)?;
+            let mut out = handle.alloc_field("out", domain)?;
+            fill(&mut phi); // f64 facade: values round on the way into f32 storage
+            handle
+                .bind()
+                .field("phi", &phi)
+                .field("out", &out)
+                .scalar("w", 0.5)
+                .domain(domain)
+                .finish()?
+                .run(&mut [&mut phi, &mut out])?;
+            Ok((handle.fingerprint(), out))
+        };
+        let (fp64, out64) = run_at(&mut prec, None)?;
+        let (fp32, out32) = run_at(&mut prec, Some(DType::F32))?;
+        assert_ne!(fp64, fp32, "dtype must salt the fingerprint");
+        assert_eq!(out32.dtype(), DType::F32);
+        let rel = out32.rel_l2_error(&out64);
+        assert!(rel > 0.0, "f32 bitwise-matched f64 — storage silently widened");
+        assert!(rel < 1e-5, "one smoothing step should stay near f32 epsilon");
+        println!(
+            "f32 vs f64: fingerprints {fp64:016x} / {fp32:016x}, rel_l2 {rel:.3e}"
+        );
     }
 
     println!("quickstart OK");

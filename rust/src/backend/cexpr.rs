@@ -5,6 +5,7 @@
 
 use crate::dsl::ast::{BinOp, Builtin, Expr, Offset, UnOp};
 use crate::ir::implir::{Extent, StorageClass};
+use crate::storage::Element;
 use anyhow::{bail, Result};
 use std::collections::{HashMap, HashSet};
 
@@ -352,9 +353,11 @@ impl TapeBuilder {
     }
 }
 
-/// Apply a binary operator to scalar values (booleans as 0.0/1.0).
+/// Apply a binary operator to scalar values (booleans as `ONE`/`ZERO`).
+/// Generic over the element dtype — monomorphized per backend, all
+/// arithmetic at `T`'s native precision.
 #[inline(always)]
-pub fn apply_bin(op: BinOp, a: f64, b: f64) -> f64 {
+pub fn apply_bin<T: Element>(op: BinOp, a: T, b: T) -> T {
     match op {
         BinOp::Add => a + b,
         BinOp::Sub => a - b,
@@ -362,20 +365,20 @@ pub fn apply_bin(op: BinOp, a: f64, b: f64) -> f64 {
         BinOp::Div => a / b,
         // Truncated remainder, matching XLA's `rem` so all backends agree.
         BinOp::Mod => a % b,
-        BinOp::Lt => ((a < b) as u8) as f64,
-        BinOp::Le => ((a <= b) as u8) as f64,
-        BinOp::Gt => ((a > b) as u8) as f64,
-        BinOp::Ge => ((a >= b) as u8) as f64,
-        BinOp::Eq => ((a == b) as u8) as f64,
-        BinOp::Ne => ((a != b) as u8) as f64,
-        BinOp::And => (((a != 0.0) && (b != 0.0)) as u8) as f64,
-        BinOp::Or => (((a != 0.0) || (b != 0.0)) as u8) as f64,
+        BinOp::Lt => T::from_bool(a < b),
+        BinOp::Le => T::from_bool(a <= b),
+        BinOp::Gt => T::from_bool(a > b),
+        BinOp::Ge => T::from_bool(a >= b),
+        BinOp::Eq => T::from_bool(a == b),
+        BinOp::Ne => T::from_bool(a != b),
+        BinOp::And => T::from_bool(a.truthy() && b.truthy()),
+        BinOp::Or => T::from_bool(a.truthy() || b.truthy()),
     }
 }
 
-/// Apply a unary builtin.
+/// Apply a unary builtin at `T`'s native precision.
 #[inline(always)]
-pub fn apply_builtin1(f: Builtin, a: f64) -> f64 {
+pub fn apply_builtin1<T: Element>(f: Builtin, a: T) -> T {
     match f {
         Builtin::Abs => a.abs(),
         Builtin::Sqrt => a.sqrt(),
@@ -390,9 +393,9 @@ pub fn apply_builtin1(f: Builtin, a: f64) -> f64 {
     }
 }
 
-/// Apply a binary builtin.
+/// Apply a binary builtin at `T`'s native precision.
 #[inline(always)]
-pub fn apply_builtin2(f: Builtin, a: f64, b: f64) -> f64 {
+pub fn apply_builtin2<T: Element>(f: Builtin, a: T, b: T) -> T {
     match f {
         Builtin::Min => a.min(b),
         Builtin::Max => a.max(b),

@@ -15,10 +15,11 @@
 //! is exactly what makes it the arbiter in the equivalence suites.
 
 use super::cexpr::{apply_bin, apply_builtin1, apply_builtin2, CExpr};
-use super::program::{Env, Program};
+use super::program::{Env, EnvView, Program};
 use super::{Backend, StencilArgs};
-use crate::dsl::ast::IterationPolicy;
+use crate::dsl::ast::{DType, IterationPolicy};
 use crate::ir::implir::StencilIr;
+use crate::storage::Element;
 use anyhow::Result;
 use std::sync::{Arc, RwLock};
 
@@ -45,30 +46,33 @@ impl DebugBackend {
     }
 }
 
-fn eval(env: &Env, e: &CExpr, i: i64, j: i64, k: i64) -> f64 {
+/// Recursive tree-walk at the stencil's native precision `T` (constants
+/// converted round-to-nearest once per visit — deterministic).
+///
+/// SAFETY of the view accesses: the debug backend runs single-threaded over
+/// an exclusively owned [`Env`], so the disjoint-write contract holds
+/// trivially; coordinates stay inside the allocated box by the extent
+/// analysis (debug-asserted in the views).
+fn eval<T: Element>(env: &EnvView<'_, T>, e: &CExpr, i: i64, j: i64, k: i64) -> T {
     match e {
-        CExpr::Const(v) => *v,
+        CExpr::Const(v) => T::from_f64(*v),
         CExpr::Scalar(ix) => env.scalars[*ix],
-        CExpr::Field { slot, off } => env.storages[*slot].get(
-            i + off[0] as i64,
-            j + off[1] as i64,
-            k + off[2] as i64,
-        ),
+        CExpr::Field { slot, off } => unsafe {
+            env.storages[*slot].get(
+                i + off[0] as i64,
+                j + off[1] as i64,
+                k + off[2] as i64,
+            )
+        },
         CExpr::Neg(a) => -eval(env, a, i, j, k),
-        CExpr::Not(a) => {
-            if eval(env, a, i, j, k) != 0.0 {
-                0.0
-            } else {
-                1.0
-            }
-        }
+        CExpr::Not(a) => T::from_bool(!eval(env, a, i, j, k).truthy()),
         CExpr::Bin(op, a, b) => {
             apply_bin(*op, eval(env, a, i, j, k), eval(env, b, i, j, k))
         }
         // Short-circuit select: only the taken branch is evaluated, the
         // natural semantics for a per-point interpreter.
         CExpr::Select(c, t, f) => {
-            if eval(env, c, i, j, k) != 0.0 {
+            if eval(env, c, i, j, k).truthy() {
                 eval(env, t, i, j, k)
             } else {
                 eval(env, f, i, j, k)
@@ -81,7 +85,7 @@ fn eval(env: &Env, e: &CExpr, i: i64, j: i64, k: i64) -> f64 {
     }
 }
 
-fn run_program(program: &Program, env: &mut Env) {
+fn run_program<T: Element>(program: &Program, env: &EnvView<'_, T>) {
     let [ni, nj, _] = env.domain;
     for ms in &program.multistages {
         match ms.policy {
@@ -95,7 +99,8 @@ fn run_program(program: &Program, env: &mut Env) {
                         for i in e.i.0 as i64..ni as i64 + e.i.1 as i64 {
                             for j in e.j.0 as i64..nj as i64 + e.j.1 as i64 {
                                 let v = eval(env, &st.expr, i, j, k);
-                                env.storages[st.target].set(i, j, k, v);
+                                // SAFETY: single-threaded exclusive Env.
+                                unsafe { env.storages[st.target].set(i, j, k, v) };
                             }
                         }
                     }
@@ -122,7 +127,8 @@ fn run_program(program: &Program, env: &mut Env) {
                         for i in e.i.0 as i64..ni as i64 + e.i.1 as i64 {
                             for j in e.j.0 as i64..nj as i64 + e.j.1 as i64 {
                                 let v = eval(env, &st.expr, i, j, k);
-                                env.storages[st.target].set(i, j, k, v);
+                                // SAFETY: single-threaded exclusive Env.
+                                unsafe { env.storages[st.target].set(i, j, k, v) };
                             }
                         }
                     }
@@ -145,7 +151,11 @@ impl Backend for DebugBackend {
     fn run(&self, ir: &StencilIr, args: &mut StencilArgs) -> Result<()> {
         let program = self.program(ir)?;
         let mut env = Env::build(&program, args.fields, args.scalars, args.domain)?;
-        run_program(&program, &mut env);
+        // One dtype dispatch per run; the evaluator is monomorphized.
+        match program.dtype {
+            DType::F64 => run_program(&program, &env.view::<f64>()),
+            DType::F32 => run_program(&program, &env.view::<f32>()),
+        }
         env.restore(&program, args.fields);
         Ok(())
     }

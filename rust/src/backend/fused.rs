@@ -48,6 +48,16 @@
 //! relaxation is a *compile*-time property of the plan (it salts the
 //! fingerprint) and only ever engages in the specialized executor.
 //!
+//! ## Dtype generality
+//!
+//! The compiled artifacts (tapes, kernel plans, bounds) are dtype-agnostic
+//! — constants stay `f64` in the tape and are narrowed once per strip via
+//! [`Element::from_f64`] (round-to-nearest, deterministic). The evaluators
+//! are generic over `T: Element` and field access goes through the shared
+//! [`EnvView`]'s `StorageView`s under the disjoint-write contract of
+//! `storage/view.rs`, so serial and sharded execution share one evaluator
+//! per dtype with no `&mut` aliasing.
+//!
 //! Bitwise equivalence to the `debug` reference interpreter at every opt
 //! level is enforced by `tests/property_equivalence.rs`.
 
@@ -55,18 +65,18 @@ use super::cexpr::{
     apply_bin, apply_builtin1, apply_builtin2, CTape, TapeBuilder, TapeCtx, TapeInst, TapeOp,
 };
 use super::kernels::{self, ExecTier, TierPlan};
-use super::program::{CStage, Env, Program};
-use super::shard::SyncCell;
-use super::vector::{prune_rings, Pool, Region, Rings, ShardExec};
+use super::program::{CStage, EnvView, Program};
+use super::vector::{prune_rings, Pool, PoolElem, Region, Rings, ShardExec};
 use crate::dsl::ast::{BinOp, Interval, IterationPolicy, Offset};
 use crate::ir::implir::{Extent, StorageClass};
+use crate::storage::Element;
 use std::collections::{HashMap, HashSet};
 use std::sync::Barrier;
 
 /// Group-scoped scratch buffers for plane/register locals, dense by slot:
 /// `scratch[slot] = Some((region, values))` for the group's scratch-backed
 /// locals, `None` elsewhere — no hashing on the strip path.
-pub(crate) type Scratch = Vec<Option<(Region, Vec<f64>)>>;
+pub(crate) type Scratch<T> = Vec<Option<(Region, Vec<T>)>>;
 
 /// A fused group: consecutive stages of one multistage sharing a fusion
 /// group id (and therefore a vertical interval).
@@ -418,10 +428,10 @@ fn ms_shardable_fused(groups: &[FusedGroup], policy: IterationPolicy) -> bool {
 /// Execute a fused program serially (called from the vector backend's
 /// dispatch; the full slab `(0, ni)` makes every region identical to the
 /// pre-sharding evaluator).
-pub(crate) fn run_program(
+pub(crate) fn run_program<T: PoolElem>(
     fp: &FusedProgram,
     program: &Program,
-    env: &mut Env,
+    env: &EnvView<'_, T>,
     pool: &mut Pool,
     exec: ExecTier,
 ) {
@@ -429,7 +439,7 @@ pub(crate) fn run_program(
     let depths: Vec<i32> = program.slots.iter().map(|s| s.ring_depth).collect();
     let ni = env.domain[0] as i64;
     // One strip buffer for the whole run, grown to the largest tier.
-    let mut vals: Vec<f64> = Vec::new();
+    let mut vals: Vec<T> = Vec::new();
     for ms in &fp.multistages {
         run_multistage(ms, fp, &classes, &depths, env, pool, &mut vals, (0, ni), exec);
     }
@@ -441,14 +451,14 @@ pub(crate) fn run_program(
 /// `PARALLEL` multistages need per-tier barriers and go through
 /// [`run_program_sharded`]'s group fan-out instead.
 #[allow(clippy::too_many_arguments)]
-fn run_multistage(
+fn run_multistage<T: PoolElem>(
     ms: &FusedMultistage,
     fp: &FusedProgram,
     classes: &[StorageClass],
     depths: &[i32],
-    env: &mut Env,
+    env: &EnvView<'_, T>,
     pool: &mut Pool,
-    vals: &mut Vec<f64>,
+    vals: &mut Vec<T>,
     slab: (i64, i64),
     exec: ExecTier,
 ) {
@@ -456,7 +466,7 @@ fn run_multistage(
     // them once per multistage, not once per sweep level.
     let bounds: Vec<Vec<Vec<[i64; 4]>>> =
         ms.groups.iter().map(|g| resolve_bounds(g, env.domain, slab)).collect();
-    let mut rings = Rings::default();
+    let mut rings: Rings<T> = Rings::default();
     match ms.policy {
         IterationPolicy::Parallel => {
             for (g, gb) in ms.groups.iter().zip(&bounds) {
@@ -502,22 +512,24 @@ fn run_multistage(
 /// fusion group out over the slab partition with a barrier between tiers;
 /// shardable sequential multistages run one slab-local sweep per thread;
 /// anything else degrades to the serial evaluator on the calling thread.
-pub(crate) fn run_program_sharded(
+/// Every worker captures the same `EnvView`; all field access inside goes
+/// through its views under the disjoint-write contract (stores clamped to
+/// owned slab ranges, cross-slab reads ordered by the tier barriers or by
+/// the fork/join between multistages).
+pub(crate) fn run_program_sharded<T: PoolElem>(
     fp: &FusedProgram,
     program: &Program,
-    env: &mut Env,
+    env: &EnvView<'_, T>,
     exec: &ShardExec,
     tier: ExecTier,
 ) {
     let classes: Vec<StorageClass> = program.slots.iter().map(|s| s.storage).collect();
     let depths: Vec<i32> = program.slots.iter().map(|s| s.ring_depth).collect();
     let ni = env.domain[0] as i64;
-    let cell = SyncCell::new(env);
     for ms in &fp.multistages {
         if !ms.shardable {
-            let env = unsafe { cell.get() };
             let mut pool = exec.serial_pool();
-            let mut vals: Vec<f64> = Vec::new();
+            let mut vals: Vec<T> = Vec::new();
             run_multistage(
                 ms, fp, &classes, &depths, env, &mut pool, &mut vals, (0, ni), tier,
             );
@@ -527,7 +539,7 @@ pub(crate) fn run_program_sharded(
             IterationPolicy::Parallel => {
                 for g in &ms.groups {
                     let barrier = Barrier::new(exec.slabs.len());
-                    exec.run(&cell, &|s, env, pool| {
+                    exec.run(&|s, pool| {
                         let slab = exec.slabs[s];
                         let (k0, k1) = env.krange(&g.interval);
                         // k-bounds are slab-independent: either every slab
@@ -535,8 +547,8 @@ pub(crate) fn run_program_sharded(
                         // barriers) or none does.
                         if k0 < k1 {
                             let gb = resolve_bounds(g, env.domain, slab);
-                            let mut rings = Rings::default();
-                            let mut vals: Vec<f64> = Vec::new();
+                            let mut rings: Rings<T> = Rings::default();
+                            let mut vals: Vec<T> = Vec::new();
                             run_group(
                                 env, g, &gb, &classes, &fp.alloc, k0, k1, 2,
                                 &mut rings, pool, &mut vals, slab, Some(&barrier),
@@ -547,8 +559,8 @@ pub(crate) fn run_program_sharded(
                 }
             }
             IterationPolicy::Forward | IterationPolicy::Backward => {
-                exec.run(&cell, &|s, env, pool| {
-                    let mut vals: Vec<f64> = Vec::new();
+                exec.run(&|s, pool| {
+                    let mut vals: Vec<T> = Vec::new();
                     run_multistage(
                         ms, fp, &classes, &depths, env, pool, &mut vals,
                         exec.slabs[s], tier,
@@ -607,8 +619,8 @@ fn resolve_bounds(
 /// ordered barriers, which is what makes cross-slab reads of fields
 /// written by an earlier tier race-free.
 #[allow(clippy::too_many_arguments)]
-fn run_group(
-    env: &mut Env,
+fn run_group<T: PoolElem>(
+    env: &EnvView<'_, T>,
     g: &FusedGroup,
     gbounds: &[Vec<[i64; 4]>],
     classes: &[StorageClass],
@@ -616,9 +628,9 @@ fn run_group(
     k0: i64,
     k1: i64,
     axis: usize,
-    rings: &mut Rings,
+    rings: &mut Rings<T>,
     pool: &mut Pool,
-    vals: &mut Vec<f64>,
+    vals: &mut Vec<T>,
     slab: (i64, i64),
     barrier: Option<&Barrier>,
     exec: ExecTier,
@@ -627,7 +639,7 @@ fn run_group(
     let (a, b) = slab;
     // Group-scoped scratch, zero-initialized (reads before the first write
     // see zeros, like the zero-initialized field a demoted temp replaces).
-    let mut scratch: Scratch = vec![None; classes.len()];
+    let mut scratch: Scratch<T> = vec![None; classes.len()];
     for (slot, e) in &g.scratch {
         let r = Region {
             i0: a + e.i.0 as i64,
@@ -637,7 +649,7 @@ fn run_group(
             k0,
             k1,
         };
-        let buf = pool.take(r.len());
+        let buf = pool.take::<T>(r.len());
         scratch[*slot] = Some((r, buf));
     }
     for (tix, (t, bounds)) in g.tiers.iter().zip(gbounds).enumerate() {
@@ -660,7 +672,7 @@ fn run_group(
         }
         let need = t.tape.ops.len() * wl;
         if vals.len() < need {
-            vals.resize(need, 0.0);
+            vals.resize(need, T::ZERO);
         }
         if axis == 2 {
             if exec == ExecTier::Specialized {
@@ -736,13 +748,14 @@ fn run_group(
 }
 
 /// Copy `dst.len()` lanes out of `src`, starting at flat index
-/// `base + lane0 * stride`.
+/// `base + lane0 * stride` (scratch/ring plane gathers; field gathers go
+/// through `StorageView::read_lanes`).
 #[inline]
-pub(crate) fn copy_lanes_in(
-    src: &[f64],
+pub(crate) fn copy_lanes_in<T: Element>(
+    src: &[T],
     base: i64,
     stride: i64,
-    dst: &mut [f64],
+    dst: &mut [T],
     lane0: usize,
 ) {
     if stride == 1 {
@@ -758,11 +771,12 @@ pub(crate) fn copy_lanes_in(
 }
 
 /// Copy `src.len()` lanes into `dst`, starting at flat index
-/// `base + lane0 * stride`.
+/// `base + lane0 * stride` (scratch/ring plane scatters; field scatters go
+/// through `StorageView::write_lanes`).
 #[inline]
-pub(crate) fn copy_lanes_out(
-    src: &[f64],
-    dst: &mut [f64],
+pub(crate) fn copy_lanes_out<T: Element>(
+    src: &[T],
+    dst: &mut [T],
     base: i64,
     stride: i64,
     lane0: usize,
@@ -785,11 +799,11 @@ pub(crate) fn copy_lanes_out(
 /// sizes lazily-allocated ring planes (slab-local under sharding; the
 /// full slab for serial runs).
 #[allow(clippy::too_many_arguments)]
-fn eval_strip(
-    env: &mut Env,
+fn eval_strip<T: PoolElem>(
+    env: &EnvView<'_, T>,
     ops: &[TapeInst],
     bounds: &[[i64; 4]],
-    vals: &mut [f64],
+    vals: &mut [T],
     wl: usize,
     i: i64,
     jbase: i64,
@@ -797,8 +811,8 @@ fn eval_strip(
     axis: usize,
     classes: &[StorageClass],
     alloc: &[Extent],
-    scratch: &mut Scratch,
-    rings: &mut Rings,
+    scratch: &mut Scratch<T>,
+    rings: &mut Rings<T>,
     pool: &mut Pool,
     slab: (i64, i64),
 ) {
@@ -823,25 +837,29 @@ fn eval_strip(
         };
         let base = x * wl;
         match &inst.op {
-            TapeOp::Const(c) => vals[base + lo..base + hi].fill(*c),
+            TapeOp::Const(c) => vals[base + lo..base + hi].fill(T::from_f64(*c)),
             TapeOp::Scalar(ix) => {
                 let v = env.scalars[*ix];
                 vals[base + lo..base + hi].fill(v);
             }
             TapeOp::Load { slot, off } => {
-                let s = &env.storages[*slot];
-                let st = s.raw_strides();
-                let sbase = s.raw_origin() as i64
+                let v = env.storages[*slot];
+                let st = v.strides();
+                let sbase = v.origin() as i64
                     + (i + off[0] as i64) * st[0] as i64
                     + (jbase + off[1] as i64) * st[1] as i64
                     + (k0 + off[2] as i64) * st[2] as i64;
-                copy_lanes_in(
-                    s.raw(),
-                    sbase,
-                    st[axis] as i64,
-                    &mut vals[base + lo..base + hi],
-                    lo,
-                );
+                let stride = st[axis];
+                // SAFETY: in-bounds by the extent analysis; ordered before
+                // conflicting writes by the tier barriers / slab model
+                // (disjoint-write contract, `storage/view.rs`).
+                unsafe {
+                    v.read_lanes(
+                        (sbase + lo as i64 * stride as i64) as usize,
+                        stride,
+                        &mut vals[base + lo..base + hi],
+                    );
+                }
             }
             TapeOp::LoadLocal { slot, off } => {
                 let entry = if classes[*slot] == StorageClass::Ring {
@@ -851,7 +869,7 @@ fn eval_strip(
                 };
                 match entry {
                     // Never written (this group / that level): zeros.
-                    None => vals[base + lo..base + hi].fill(0.0),
+                    None => vals[base + lo..base + hi].fill(T::ZERO),
                     Some((sr, sbuf)) => {
                         let sdj = sr.j1 - sr.j0;
                         let swk = sr.wk() as i64;
@@ -877,7 +895,7 @@ fn eval_strip(
                 let sa = &src[*a as usize * wl + lo..*a as usize * wl + hi];
                 let d = &mut dst[lo..hi];
                 for n in 0..d.len() {
-                    d[n] = if sa[n] != 0.0 { 0.0 } else { 1.0 };
+                    d[n] = T::from_bool(!sa[n].truthy());
                 }
             }
             TapeOp::Bin(op, a, b2) => {
@@ -920,7 +938,7 @@ fn eval_strip(
                 let sf = &src[*f as usize * wl + lo..*f as usize * wl + hi];
                 let d = &mut dst[lo..hi];
                 for n in 0..d.len() {
-                    d[n] = if sc[n] != 0.0 { st_[n] } else { sf[n] };
+                    d[n] = if sc[n].truthy() { st_[n] } else { sf[n] };
                 }
             }
             TapeOp::Call1(fun, a) => {
@@ -942,13 +960,23 @@ fn eval_strip(
             }
             TapeOp::StoreField { slot, v } => {
                 let src = &vals[*v as usize * wl + lo..*v as usize * wl + hi];
-                let s = &mut env.storages[*slot];
-                let st = s.raw_strides();
-                let dbase = s.raw_origin() as i64
+                let s = env.storages[*slot];
+                let st = s.strides();
+                let dbase = s.origin() as i64
                     + i * st[0] as i64
                     + jbase * st[1] as i64
                     + k0 * st[2] as i64;
-                copy_lanes_out(src, s.raw_mut(), dbase, st[axis] as i64, lo);
+                let stride = st[axis];
+                // SAFETY: store bounds are clamped to the slab's owned
+                // partition (`resolve_bounds`), so this thread is the
+                // unique writer of every stored element.
+                unsafe {
+                    s.write_lanes(
+                        (dbase + lo as i64 * stride as i64) as usize,
+                        stride,
+                        src,
+                    );
+                }
             }
             TapeOp::StoreLocal { slot, v } => {
                 if classes[*slot] == StorageClass::Ring && !rings.contains_key(&(*slot, k0))
@@ -965,7 +993,7 @@ fn eval_strip(
                         k0,
                         k1: k0 + 1,
                     };
-                    let buf = pool.take(r.len());
+                    let buf = pool.take::<T>(r.len());
                     rings.insert((*slot, k0), (r, buf));
                 }
                 let (sr, sbuf) = if classes[*slot] == StorageClass::Ring {

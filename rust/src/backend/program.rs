@@ -2,9 +2,9 @@
 //! the interpreting backends (`debug`, `vector`).
 
 use super::cexpr::CExpr;
-use crate::dsl::ast::{Interval, IterationPolicy};
+use crate::dsl::ast::{DType, Interval, IterationPolicy};
 use crate::ir::implir::{Extent, StencilIr, StorageClass};
-use crate::storage::{Storage, StorageInfo};
+use crate::storage::{Element, Storage, StorageInfo, StorageView};
 use anyhow::{bail, Result};
 use std::collections::HashMap;
 
@@ -58,6 +58,11 @@ pub struct Program {
     pub num_params: usize,
     pub scalar_names: Vec<String>,
     pub multistages: Vec<CMultistage>,
+    /// Uniform element dtype of every field, temporary and scalar
+    /// (`analysis::check_dtypes` rejects mixed declarations). Backends
+    /// dispatch on this once per run to pick the `f64` or `f32`
+    /// monomorphization of their evaluator.
+    pub dtype: DType,
 }
 
 impl Program {
@@ -110,7 +115,7 @@ impl Program {
             }
             multistages.push(CMultistage { policy: ms.policy, stages });
         }
-        Ok(Program { slots, num_params, scalar_names, multistages })
+        Ok(Program { slots, num_params, scalar_names, multistages, dtype: ir.dtype() })
     }
 }
 
@@ -163,7 +168,8 @@ impl Env {
             } else if slot.demoted() && !materialize_demoted {
                 storages.push(Storage::zeros(StorageInfo::new([0, 0, 0], [(0, 0); 3])));
             } else {
-                // Temporary: allocate with its analysis extent as halo.
+                // Temporary: allocate with its analysis extent as halo, at
+                // the program's element dtype.
                 let e = slot.extent;
                 let info = StorageInfo::new(
                     domain,
@@ -172,7 +178,8 @@ impl Env {
                         ((-e.j.0) as usize, e.j.1 as usize),
                         ((-e.k.0) as usize, e.k.1 as usize),
                     ],
-                );
+                )
+                .with_dtype(program.dtype);
                 storages.push(Storage::zeros(info));
             }
         }
@@ -204,6 +211,48 @@ impl Env {
         }
     }
 
+    /// Resolve a stage's vertical range against the domain, clamped.
+    pub fn krange(&self, interval: &Interval) -> (i64, i64) {
+        let (lo, hi) = interval.resolve(self.domain[2]);
+        (lo.max(0), hi.min(self.domain[2] as i64))
+    }
+
+    /// A typed window over the whole environment: one [`StorageView`] per
+    /// slot plus the scalar parameters converted once (round-to-nearest)
+    /// to `T`. This is the structure every evaluator executes against —
+    /// serial paths and sharded slabs alike — so there is exactly one
+    /// generic evaluator per backend. Zero-size placeholder slots
+    /// (non-materialized demoted temporaries) become inert empty views.
+    pub fn view<T: Element>(&mut self) -> EnvView<'_, T> {
+        EnvView {
+            storages: self.storages.iter_mut().map(|s| s.view::<T>()).collect(),
+            scalars: self.scalars.iter().map(|&v| T::from_f64(v)).collect(),
+            domain: self.domain,
+        }
+    }
+}
+
+/// Typed, shareable execution window over an [`Env`] (see [`Env::view`]).
+/// Cheap to clone per worker slab; access soundness follows the
+/// [`StorageView`] disjoint-write contract.
+pub struct EnvView<'a, T: Element> {
+    pub storages: Vec<StorageView<'a, T>>,
+    /// Scalar parameters at native precision (converted once from `f64`).
+    pub scalars: Vec<T>,
+    pub domain: [usize; 3],
+}
+
+impl<T: Element> Clone for EnvView<'_, T> {
+    fn clone(&self) -> Self {
+        EnvView {
+            storages: self.storages.clone(),
+            scalars: self.scalars.clone(),
+            domain: self.domain,
+        }
+    }
+}
+
+impl<T: Element> EnvView<'_, T> {
     /// Resolve a stage's vertical range against the domain, clamped.
     pub fn krange(&self, interval: &Interval) -> (i64, i64) {
         let (lo, hi) = interval.resolve(self.domain[2]);

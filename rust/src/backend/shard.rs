@@ -177,46 +177,11 @@ pub(crate) fn owned_store_range(
     )
 }
 
-/// Shared-mutable cell handing each slab job a view of one value (the
-/// run's `Env`) during sharded execution.
-///
-/// # Safety contract
-///
-/// Callers must uphold the sharding execution model documented at module
-/// level: slabs write disjoint owned i-ranges of every storage, and only
-/// read data that is read-only for the whole run, produced by the same
-/// slab, or produced before the last barrier/join (the worker pool's
-/// fork/join and the per-tier `Barrier`s provide the happens-before
-/// edges). The multistage shardability analysis serializes anything that
-/// cannot be proven to satisfy this.
-///
-/// Known soundness debt (documented, like the PJRT `Send`/`Sync`
-/// impls): each slab materializes its own `&mut Env` from this cell, so
-/// several `&mut` aliases to one `Env` are live at once. The writes are
-/// provably disjoint and the reads barriered, but Rust's aliasing model
-/// does not admit overlapping `&mut` at all — a fully sound version
-/// would route storage access through `UnsafeCell`/raw-slice views.
-/// Tracked as a ROADMAP open item; until then the sharded evaluators
-/// must keep every storage access inside the discipline above.
-pub(crate) struct SyncCell<T>(*mut T);
-
-unsafe impl<T> Send for SyncCell<T> {}
-unsafe impl<T> Sync for SyncCell<T> {}
-
-impl<T> SyncCell<T> {
-    pub(crate) fn new(v: &mut T) -> SyncCell<T> {
-        SyncCell(v as *mut T)
-    }
-
-    /// # Safety
-    /// See the type-level contract; the returned reference aliases every
-    /// other slab's, so accesses must stay within the disjoint-write /
-    /// barriered-read discipline.
-    #[allow(clippy::mut_from_ref)]
-    pub(crate) unsafe fn get(&self) -> &mut T {
-        &mut *self.0
-    }
-}
+// Slab jobs access the run's storages through the typed
+// `storage::StorageView`s of a shared `program::EnvView` — element-granular
+// `UnsafeCell` interior mutability under the disjoint-write contract
+// documented in `storage/view.rs`. (The old `&mut`-aliasing `SyncCell`
+// lived here; it is gone, which is what makes this module Miri-clean.)
 
 /// One queued fan-out: a borrowed slab closure, lifetime-erased. The
 /// pointer is only dereferenced while [`WorkerPool::run_slabs`] blocks

@@ -25,6 +25,16 @@
 //! are skipped. Reads before the first write see zeros, exactly like the
 //! zero-initialized field they replace.
 //!
+//! Dtype generality: every evaluator in this module (and in
+//! [`crate::backend::fused`] / [`crate::backend::kernels`]) is generic over
+//! `T: Element` and monomorphized per dtype. Field access goes through
+//! [`crate::storage::StorageView`]s of a shared
+//! [`EnvView`](crate::backend::program::EnvView) — interior-mutable, `Send +
+//! Sync`, sound under the disjoint-write contract documented in
+//! `storage/view.rs` — so the serial and sharded paths share one evaluator
+//! and no `&mut` aliasing ever occurs. Dispatch on the program's dtype
+//! happens exactly once per run, in [`Backend::run_sharded`].
+//!
 //! Fused execution (`--opt-level 3`): when the IR carries the
 //! [`fused`](crate::ir::implir::StencilIr::fused) strategy bit, dispatch
 //! leaves this materializing path entirely and runs the tape-based fused
@@ -34,11 +44,13 @@
 
 use super::cexpr::{apply_bin, apply_builtin1, apply_builtin2, CExpr};
 use super::fused::FusedProgram;
-use super::program::{CStage, CMultistage, Env, Program};
-use super::shard::{split_slabs, ShardReport, SyncCell, WorkerPool};
+use super::kernels::ExecTier;
+use super::program::{CMultistage, CStage, Env, EnvView, Program};
+use super::shard::{split_slabs, ShardReport, WorkerPool};
 use super::{Backend, RunConfig, StencilArgs};
-use crate::dsl::ast::{BinOp, IterationPolicy};
+use crate::dsl::ast::{BinOp, DType, IterationPolicy};
 use crate::ir::implir::{StencilIr, StorageClass};
+use crate::storage::Element;
 use anyhow::Result;
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -194,41 +206,66 @@ pub struct PoolStats {
     pub blocks_interior: u64,
 }
 
+/// Pool routing for an element type: which of the dtype-segregated free
+/// lists a `Vec<T>` recycles through. Crate-internal companion of
+/// [`Element`] — the evaluators in this module, `fused` and `kernels` all
+/// bound on it.
+pub(crate) trait PoolElem: Element {
+    fn free_list(pool: &mut Pool) -> &mut Vec<Vec<Self>>;
+}
+
+impl PoolElem for f64 {
+    #[inline(always)]
+    fn free_list(pool: &mut Pool) -> &mut Vec<Vec<f64>> {
+        &mut pool.free64
+    }
+}
+
+impl PoolElem for f32 {
+    #[inline(always)]
+    fn free_list(pool: &mut Pool) -> &mut Vec<Vec<f32>> {
+        &mut pool.free32
+    }
+}
+
 /// Recycles region buffers between expression nodes and stages; also
 /// carries the per-run executor counters (checked out and absorbed with
-/// the pool, so concurrent runs never contend).
+/// the pool, so concurrent runs never contend). One free list per dtype —
+/// a buffer only ever recycles at its own element width.
 #[derive(Default)]
 pub(crate) struct Pool {
-    free: Vec<Vec<f64>>,
+    free64: Vec<Vec<f64>>,
+    free32: Vec<Vec<f32>>,
     pub(crate) stats: PoolStats,
 }
 
-/// Max free buffers retained by a pool (shared by `put` and `absorb`).
+/// Max free buffers retained per dtype list (shared by `put` and `absorb`).
 const POOL_FREE_CAP: usize = 48;
 
 impl Pool {
-    pub(crate) fn take(&mut self, n: usize) -> Vec<f64> {
+    pub(crate) fn take<T: PoolElem>(&mut self, n: usize) -> Vec<T> {
         self.stats.taken += 1;
-        match self.free.pop() {
+        match T::free_list(self).pop() {
             Some(mut b) => {
                 b.clear();
-                b.resize(n, 0.0);
+                b.resize(n, T::ZERO);
                 b
             }
             None => {
                 self.stats.allocated += 1;
-                vec![0.0; n]
+                vec![T::ZERO; n]
             }
         }
     }
-    pub(crate) fn put(&mut self, b: Vec<f64>) {
-        if self.free.len() < POOL_FREE_CAP {
-            self.free.push(b);
+    pub(crate) fn put<T: PoolElem>(&mut self, b: Vec<T>) {
+        let list = T::free_list(self);
+        if list.len() < POOL_FREE_CAP {
+            list.push(b);
         }
     }
 
     /// Merge a checked-out pool back into the shared slot: stats are
-    /// summed, free buffers are kept up to the shared cap.
+    /// summed, free buffers are kept up to the shared per-dtype cap.
     fn absorb(&mut self, mut other: Pool) {
         self.stats.taken += other.stats.taken;
         self.stats.allocated += other.stats.allocated;
@@ -237,9 +274,15 @@ impl Pool {
         self.stats.strips_interpreted += other.stats.strips_interpreted;
         self.stats.strips_guarded += other.stats.strips_guarded;
         self.stats.blocks_interior += other.stats.blocks_interior;
-        while self.free.len() < POOL_FREE_CAP {
-            match other.free.pop() {
-                Some(b) => self.free.push(b),
+        while self.free64.len() < POOL_FREE_CAP {
+            match other.free64.pop() {
+                Some(b) => self.free64.push(b),
+                None => break,
+            }
+        }
+        while self.free32.len() < POOL_FREE_CAP {
+            match other.free32.pop() {
+                Some(b) => self.free32.push(b),
                 None => break,
             }
         }
@@ -269,20 +312,25 @@ impl Region {
 }
 
 /// Evaluation result: a broadcast scalar or a materialized region buffer.
-enum Val {
-    S(f64),
-    B(Vec<f64>),
+enum Val<T> {
+    S(T),
+    B(Vec<T>),
 }
 
 /// Group-local buffers of demoted temporaries: slot → (region, values).
 /// Flushed at every fusion-group boundary (and every level, for
 /// sequential multistages).
-#[derive(Default)]
-struct Locals {
-    bufs: HashMap<usize, (Region, Vec<f64>)>,
+struct Locals<T> {
+    bufs: HashMap<usize, (Region, Vec<T>)>,
 }
 
-impl Locals {
+impl<T> Default for Locals<T> {
+    fn default() -> Self {
+        Locals { bufs: HashMap::new() }
+    }
+}
+
+impl<T: PoolElem> Locals<T> {
     fn flush(&mut self, pool: &mut Pool) {
         for (_, (_, b)) in self.bufs.drain() {
             pool.put(b);
@@ -293,15 +341,15 @@ impl Locals {
 /// Ring of recent level planes for [`StorageClass::Ring`] sweep carries:
 /// `(slot, level) -> (plane region, values)`, scoped to one sequential
 /// multistage and pruned to each slot's ring depth as the sweep advances.
-pub(crate) type Rings = HashMap<(usize, i64), (Region, Vec<f64>)>;
+pub(crate) type Rings<T> = HashMap<(usize, i64), (Region, Vec<T>)>;
 
 /// Shared read-only state for one stage evaluation.
-struct EvalCtx<'a> {
-    env: &'a Env,
+struct EvalCtx<'a, T: Element> {
+    env: &'a EnvView<'a, T>,
     /// Per-slot storage class (`program.slots[i].storage`).
     classes: &'a [StorageClass],
-    locals: &'a Locals,
-    rings: &'a Rings,
+    locals: &'a Locals<T>,
+    rings: &'a Rings<T>,
 }
 
 /// Window a demoted temporary's region buffer: copy `r` shifted by `off`
@@ -309,17 +357,17 @@ struct EvalCtx<'a> {
 /// containment (extent-checked offsets; for ring planes the vertical
 /// offset selects the source plane), so the window never leaves the
 /// buffer.
-pub(crate) fn gather_local(
+pub(crate) fn gather_local<T: PoolElem>(
     src_region: Region,
-    src: &[f64],
+    src: &[T],
     off: [i32; 3],
     r: Region,
     pool: &mut Pool,
-) -> Vec<f64> {
+) -> Vec<T> {
     let sdj = (src_region.j1 - src_region.j0) as usize;
     let sdk = src_region.wk();
     let wk = r.wk();
-    let mut buf = pool.take(r.len());
+    let mut buf = pool.take::<T>(r.len());
     let mut idx = 0;
     for i in r.i0..r.i1 {
         let si = (i + off[0] as i64 - src_region.i0) as usize;
@@ -334,14 +382,19 @@ pub(crate) fn gather_local(
     buf
 }
 
-fn gather(env: &Env, slot: usize, off: [i32; 3], r: Region, pool: &mut Pool) -> Vec<f64> {
-    let s = &env.storages[slot];
-    let raw = s.raw();
-    let st = s.raw_strides();
+fn gather<T: PoolElem>(
+    env: &EnvView<'_, T>,
+    slot: usize,
+    off: [i32; 3],
+    r: Region,
+    pool: &mut Pool,
+) -> Vec<T> {
+    let v = env.storages[slot];
+    let st = v.strides();
     let (s0, s1, s2) = (st[0] as i64, st[1] as i64, st[2] as i64);
-    let org = s.raw_origin() as i64;
+    let org = v.origin() as i64;
     let wk = r.wk();
-    let mut buf = pool.take(r.len());
+    let mut buf = pool.take::<T>(r.len());
     let mut idx = 0;
     if s2 == 1 {
         // stride-1 K rows: bulk copies
@@ -350,7 +403,11 @@ fn gather(env: &Env, slot: usize, off: [i32; 3], r: Region, pool: &mut Pool) -> 
             for j in r.j0..r.j1 {
                 let base =
                     (ibase + (j + off[1] as i64) * s1 + (r.k0 + off[2] as i64)) as usize;
-                buf[idx..idx + wk].copy_from_slice(&raw[base..base + wk]);
+                // SAFETY: in-bounds by the extent analysis; reads of shared
+                // storage are ordered before any conflicting write by the
+                // sharding model (per-stage barriers / slab-local sweeps) —
+                // the disjoint-write contract of `storage/view.rs`.
+                unsafe { v.read_lanes(base, 1, &mut buf[idx..idx + wk]) };
                 idx += wk;
             }
         }
@@ -360,7 +417,8 @@ fn gather(env: &Env, slot: usize, off: [i32; 3], r: Region, pool: &mut Pool) -> 
             for j in r.j0..r.j1 {
                 let jbase = ibase + (j + off[1] as i64) * s1;
                 for k in r.k0..r.k1 {
-                    buf[idx] = raw[(jbase + (k + off[2] as i64) * s2) as usize];
+                    // SAFETY: same contract as the bulk path above.
+                    buf[idx] = unsafe { v.read((jbase + (k + off[2] as i64) * s2) as usize) };
                     idx += 1;
                 }
             }
@@ -369,12 +427,11 @@ fn gather(env: &Env, slot: usize, off: [i32; 3], r: Region, pool: &mut Pool) -> 
     buf
 }
 
-fn scatter(env: &mut Env, slot: usize, r: Region, buf: &[f64]) {
-    let s = &mut env.storages[slot];
-    let st = s.raw_strides();
+fn scatter<T: Element>(env: &EnvView<'_, T>, slot: usize, r: Region, buf: &[T]) {
+    let v = env.storages[slot];
+    let st = v.strides();
     let (s0, s1, s2) = (st[0] as i64, st[1] as i64, st[2] as i64);
-    let org = s.raw_origin() as i64;
-    let raw = s.raw_mut();
+    let org = v.origin() as i64;
     let wk = r.wk();
     let mut idx = 0;
     if s2 == 1 {
@@ -382,7 +439,10 @@ fn scatter(env: &mut Env, slot: usize, r: Region, buf: &[f64]) {
             let ibase = org + i * s0;
             for j in r.j0..r.j1 {
                 let base = (ibase + j * s1 + r.k0) as usize;
-                raw[base..base + wk].copy_from_slice(&buf[idx..idx + wk]);
+                // SAFETY: `r` is clamped to this slab's owned store range
+                // (`stage_region`), so this thread is the unique writer of
+                // every element — the disjoint-write contract holds.
+                unsafe { v.write_lanes(base, 1, &buf[idx..idx + wk]) };
                 idx += wk;
             }
         }
@@ -392,7 +452,8 @@ fn scatter(env: &mut Env, slot: usize, r: Region, buf: &[f64]) {
             for j in r.j0..r.j1 {
                 let jbase = ibase + j * s1;
                 for k in r.k0..r.k1 {
-                    raw[(jbase + k * s2) as usize] = buf[idx];
+                    // SAFETY: same ownership argument as the bulk path.
+                    unsafe { v.write((jbase + k * s2) as usize, buf[idx]) };
                     idx += 1;
                 }
             }
@@ -402,7 +463,7 @@ fn scatter(env: &mut Env, slot: usize, r: Region, buf: &[f64]) {
 
 /// Elementwise binary op with buffer reuse; specializes the hot arithmetic
 /// operators so the inner loops are branch-free and auto-vectorizable.
-fn bin_bb(op: BinOp, mut a: Vec<f64>, b: &[f64]) -> Vec<f64> {
+fn bin_bb<T: Element>(op: BinOp, mut a: Vec<T>, b: &[T]) -> Vec<T> {
     match op {
         BinOp::Add => {
             for (x, y) in a.iter_mut().zip(b) {
@@ -433,9 +494,14 @@ fn bin_bb(op: BinOp, mut a: Vec<f64>, b: &[f64]) -> Vec<f64> {
     a
 }
 
-fn eval_region(ctx: &EvalCtx, e: &CExpr, r: Region, pool: &mut Pool) -> Val {
+fn eval_region<T: PoolElem>(
+    ctx: &EvalCtx<'_, T>,
+    e: &CExpr,
+    r: Region,
+    pool: &mut Pool,
+) -> Val<T> {
     match e {
-        CExpr::Const(v) => Val::S(*v),
+        CExpr::Const(v) => Val::S(T::from_f64(*v)),
         CExpr::Scalar(ix) => Val::S(ctx.env.scalars[*ix]),
         CExpr::Field { slot, off } => match ctx.classes[*slot] {
             StorageClass::Field3D => Val::B(gather(ctx.env, *slot, *off, r, pool)),
@@ -444,7 +510,7 @@ fn eval_region(ctx: &EvalCtx, e: &CExpr, r: Region, pool: &mut Pool) -> Val {
                     Some((sr, sbuf)) => Val::B(gather_local(*sr, sbuf, *off, r, pool)),
                     // Demoted temporary read before its first in-group
                     // write: zeros, like the field it replaces.
-                    None => Val::S(0.0),
+                    None => Val::S(T::ZERO),
                 }
             }
             StorageClass::Ring => {
@@ -455,7 +521,7 @@ fn eval_region(ctx: &EvalCtx, e: &CExpr, r: Region, pool: &mut Pool) -> Val {
                 let level = r.k0 + off[2] as i64;
                 match ctx.rings.get(&(*slot, level)) {
                     Some((sr, sbuf)) => Val::B(gather_local(*sr, sbuf, *off, r, pool)),
-                    None => Val::S(0.0),
+                    None => Val::S(T::ZERO),
                 }
             }
         },
@@ -469,10 +535,10 @@ fn eval_region(ctx: &EvalCtx, e: &CExpr, r: Region, pool: &mut Pool) -> Val {
             }
         },
         CExpr::Not(a) => match eval_region(ctx, a, r, pool) {
-            Val::S(v) => Val::S(if v != 0.0 { 0.0 } else { 1.0 }),
+            Val::S(v) => Val::S(T::from_bool(!v.truthy())),
             Val::B(mut b) => {
                 for x in &mut b {
-                    *x = if *x != 0.0 { 0.0 } else { 1.0 };
+                    *x = T::from_bool(!x.truthy());
                 }
                 Val::B(b)
             }
@@ -512,7 +578,7 @@ fn eval_region(ctx: &EvalCtx, e: &CExpr, r: Region, pool: &mut Pool) -> Val {
             let vf = eval_region(ctx, f, r, pool);
             match vc {
                 Val::S(cv) => {
-                    let keep = cv != 0.0;
+                    let keep = cv.truthy();
                     let (sel, other) = if keep { (vt, vf) } else { (vf, vt) };
                     if let Val::B(b) = other {
                         pool.put(b);
@@ -521,26 +587,26 @@ fn eval_region(ctx: &EvalCtx, e: &CExpr, r: Region, pool: &mut Pool) -> Val {
                 }
                 Val::B(cb) => {
                     let n = cb.len();
-                    let mut out = pool.take(n);
+                    let mut out = pool.take::<T>(n);
                     match (&vt, &vf) {
                         (Val::B(tb), Val::B(fb)) => {
                             for i in 0..n {
-                                out[i] = if cb[i] != 0.0 { tb[i] } else { fb[i] };
+                                out[i] = if cb[i].truthy() { tb[i] } else { fb[i] };
                             }
                         }
                         (Val::B(tb), Val::S(fv)) => {
                             for i in 0..n {
-                                out[i] = if cb[i] != 0.0 { tb[i] } else { *fv };
+                                out[i] = if cb[i].truthy() { tb[i] } else { *fv };
                             }
                         }
                         (Val::S(tv), Val::B(fb)) => {
                             for i in 0..n {
-                                out[i] = if cb[i] != 0.0 { *tv } else { fb[i] };
+                                out[i] = if cb[i].truthy() { *tv } else { fb[i] };
                             }
                         }
                         (Val::S(tv), Val::S(fv)) => {
                             for i in 0..n {
-                                out[i] = if cb[i] != 0.0 { *tv } else { *fv };
+                                out[i] = if cb[i].truthy() { *tv } else { *fv };
                             }
                         }
                     }
@@ -620,11 +686,11 @@ fn stage_region(
 }
 
 #[allow(clippy::too_many_arguments)]
-fn run_stage_region(
-    env: &mut Env,
+fn run_stage_region<T: PoolElem>(
+    env: &EnvView<'_, T>,
     classes: &[StorageClass],
-    locals: &mut Locals,
-    rings: &mut Rings,
+    locals: &mut Locals<T>,
+    rings: &mut Rings<T>,
     stage: &CStage,
     k0: i64,
     k1: i64,
@@ -634,7 +700,7 @@ fn run_stage_region(
     let [ni, nj, _] = env.domain;
     let r = stage_region(stage, classes, slab, ni as i64, nj as i64, k0, k1);
     let v = {
-        let ctx = EvalCtx { env: &*env, classes, locals: &*locals, rings: &*rings };
+        let ctx = EvalCtx { env, classes, locals: &*locals, rings: &*rings };
         eval_region(&ctx, &stage.expr, r, pool)
     };
     if classes[stage.target] != StorageClass::Field3D {
@@ -642,7 +708,7 @@ fn run_stage_region(
         // field is allocated and nothing is scattered.
         let buf = match v {
             Val::S(s) => {
-                let mut b = pool.take(r.len());
+                let mut b = pool.take::<T>(r.len());
                 b.fill(s);
                 b
             }
@@ -662,7 +728,7 @@ fn run_stage_region(
     }
     match v {
         Val::S(s) => {
-            let mut buf = pool.take(r.len());
+            let mut buf = pool.take::<T>(r.len());
             buf.fill(s);
             scatter(env, stage.target, r, &buf);
             pool.put(buf);
@@ -675,7 +741,12 @@ fn run_stage_region(
 }
 
 /// Drop ring planes further than each slot's depth from the current level.
-pub(crate) fn prune_rings(rings: &mut Rings, level: i64, depths: &[i32], pool: &mut Pool) {
+pub(crate) fn prune_rings<T: PoolElem>(
+    rings: &mut Rings<T>,
+    level: i64,
+    depths: &[i32],
+    pool: &mut Pool,
+) {
     let stale: Vec<(usize, i64)> = rings
         .keys()
         .copied()
@@ -695,16 +766,16 @@ pub(crate) fn prune_rings(rings: &mut Rings, level: i64, depths: &[i32], pool: &
 /// slab), and as the serial fallback for unshardable multistages.
 /// Sharded `PARALLEL` multistages go through [`run_parallel_group`]
 /// instead, which interleaves the per-stage barriers.
-fn run_multistage(
+fn run_multistage<T: PoolElem>(
     ms: &CMultistage,
     classes: &[StorageClass],
     depths: &[i32],
-    env: &mut Env,
+    env: &EnvView<'_, T>,
     pool: &mut Pool,
     slab: (i64, i64),
 ) {
     let mut locals = Locals::default();
-    let mut rings: Rings = Rings::default();
+    let mut rings: Rings<T> = Rings::default();
     match ms.policy {
         IterationPolicy::Parallel => {
             // Whole 3-D region per stage: one gather/op/scatter pass.
@@ -763,7 +834,7 @@ fn run_multistage(
     }
 }
 
-fn run_program(program: &Program, env: &mut Env, pool: &mut Pool) {
+fn run_program<T: PoolElem>(program: &Program, env: &EnvView<'_, T>, pool: &mut Pool) {
     let classes: Vec<StorageClass> = program.slots.iter().map(|s| s.storage).collect();
     let depths: Vec<i32> = program.slots.iter().map(|s| s.ring_depth).collect();
     let ni = env.domain[0] as i64;
@@ -864,23 +935,18 @@ impl<'a> ShardExec<'a> {
         self.pools[0].lock().unwrap()
     }
 
-    /// Fan `f(slab index, env, pool)` out over every slab and join.
-    ///
-    /// Safety of the `SyncCell` deref: see the sharding execution model —
-    /// slabs write disjoint owned i-ranges, and cross-slab reads are
-    /// separated from the writes they observe by this fork/join or by the
-    /// barriers the caller threads through `f`.
-    pub(crate) fn run(
-        &self,
-        cell: &SyncCell<Env>,
-        f: &(dyn Fn(usize, &mut Env, &mut Pool) + Sync),
-    ) {
+    /// Fan `f(slab index, pool)` out over every slab and join. Callers
+    /// capture the shared `EnvView` in `f`; all field access inside goes
+    /// through its `StorageView`s under the disjoint-write contract (slabs
+    /// write disjoint owned i-ranges, cross-slab reads are separated from
+    /// the writes they observe by this fork/join or by the barriers the
+    /// caller threads through `f`).
+    pub(crate) fn run(&self, f: &(dyn Fn(usize, &mut Pool) + Sync)) {
         self.used.fetch_max(self.slabs.len() as u64, Ordering::Relaxed);
         self.workers.run_slabs(self.slabs.len(), &|s| {
             let t0 = Instant::now();
-            let env = unsafe { cell.get() };
             let mut pool = self.pools[s].lock().unwrap();
-            f(s, env, &mut pool);
+            f(s, &mut pool);
             self.busy[s].fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         });
     }
@@ -909,17 +975,17 @@ impl<'a> ShardExec<'a> {
 /// a barrier after every stage so cross-slab readers of `Field3D`
 /// outputs observe completed writes (the materializing path's analog of
 /// the fused evaluator's tier barriers).
-fn run_parallel_group(
+fn run_parallel_group<T: PoolElem>(
     stages: &[CStage],
     classes: &[StorageClass],
     exec: &ShardExec,
-    cell: &SyncCell<Env>,
+    env: &EnvView<'_, T>,
 ) {
     let barrier = Barrier::new(exec.slabs.len());
-    exec.run(cell, &|s, env, pool| {
+    exec.run(&|s, pool| {
         let slab = exec.slabs[s];
         let mut locals = Locals::default();
-        let mut rings: Rings = Rings::default();
+        let mut rings: Rings<T> = Rings::default();
         for (si, st) in stages.iter().enumerate() {
             let (k0, k1) = env.krange(&st.interval);
             if k0 < k1 {
@@ -938,14 +1004,16 @@ fn run_parallel_group(
 /// The sharded materializing path: each multistage either fans out over
 /// the slab partition or (when the shardability analysis says no) runs
 /// serially on the calling thread.
-fn run_program_sharded(program: &Program, env: &mut Env, exec: &ShardExec) {
+fn run_program_sharded<T: PoolElem>(
+    program: &Program,
+    env: &EnvView<'_, T>,
+    exec: &ShardExec,
+) {
     let classes: Vec<StorageClass> = program.slots.iter().map(|s| s.storage).collect();
     let depths: Vec<i32> = program.slots.iter().map(|s| s.ring_depth).collect();
     let ni = env.domain[0] as i64;
-    let cell = SyncCell::new(env);
     for ms in &program.multistages {
         if !ms_shardable(ms, &classes) {
-            let env = unsafe { cell.get() };
             let mut pool = exec.serial_pool();
             run_multistage(ms, &classes, &depths, env, &mut pool, (0, ni));
             continue;
@@ -960,18 +1028,52 @@ fn run_program_sharded(program: &Program, env: &mut Env, exec: &ShardExec) {
                     while end < ms.stages.len() && ms.stages[end].fusion_group == gid {
                         end += 1;
                     }
-                    run_parallel_group(&ms.stages[start..end], &classes, exec, &cell);
+                    run_parallel_group(&ms.stages[start..end], &classes, exec, env);
                     start = end;
                 }
             }
             IterationPolicy::Forward | IterationPolicy::Backward => {
                 // Slab-local vertical sweeps: every slab runs the whole
                 // k-loop with its own locals and ring k-cache.
-                exec.run(&cell, &|s, env, pool| {
+                exec.run(&|s, pool| {
                     run_multistage(ms, &classes, &depths, env, pool, exec.slabs[s]);
                 });
             }
         }
+    }
+}
+
+/// The dtype-monomorphized run body shared by every dispatch path: build
+/// the typed view once, then route serial/sharded × materializing/fused.
+fn run_typed<T: PoolElem>(
+    be: &VectorBackend,
+    program: &Program,
+    fused: Option<&FusedProgram>,
+    env: &mut Env,
+    pool: Pool,
+    threads: usize,
+    tier: ExecTier,
+) -> (Pool, ShardReport) {
+    let view = env.view::<T>();
+    if threads <= 1 {
+        let mut pool = pool;
+        if let Some(fp) = fused {
+            super::fused::run_program(fp, program, &view, &mut pool, tier);
+        } else {
+            run_program(program, &view, &mut pool);
+        }
+        (pool, ShardReport::serial())
+    } else {
+        let workers = be.checkout_workers(threads - 1);
+        let exec = ShardExec::new(split_slabs(view.domain[0], threads), &workers, pool);
+        if let Some(fp) = fused {
+            super::fused::run_program_sharded(fp, program, &view, &exec, tier);
+        } else {
+            run_program_sharded(program, &view, &exec);
+        }
+        let (merged, report) = exec.finish();
+        be.return_workers(workers);
+        (merged, report)
     }
 }
 
@@ -1006,28 +1108,17 @@ impl Backend for VectorBackend {
             Env::build_with(&program, args.fields, args.scalars, args.domain, false)?;
         // Check the shared pool out for the duration of the run (no lock
         // held while executing; concurrent runs get an empty pool).
-        let mut pool = std::mem::take(&mut *self.pool.lock().unwrap());
+        let pool = std::mem::take(&mut *self.pool.lock().unwrap());
         let threads = cfg.sharding.resolve(args.domain[0]);
-        let report = if threads <= 1 {
-            if let Some(fp) = &fused {
-                super::fused::run_program(fp, &program, &mut env, &mut pool, cfg.tier);
-            } else {
-                run_program(&program, &mut env, &mut pool);
-            }
-            ShardReport::serial()
-        } else {
-            let workers = self.checkout_workers(threads - 1);
-            let exec =
-                ShardExec::new(split_slabs(args.domain[0], threads), &workers, pool);
-            if let Some(fp) = &fused {
-                super::fused::run_program_sharded(fp, &program, &mut env, &exec, cfg.tier);
-            } else {
-                run_program_sharded(&program, &mut env, &exec);
-            }
-            let (merged, report) = exec.finish();
-            pool = merged;
-            self.return_workers(workers);
-            report
+        // The once-per-run dtype dispatch: everything below is
+        // monomorphized over the program's element type.
+        let (pool, report) = match program.dtype {
+            DType::F64 => run_typed::<f64>(
+                self, &program, fused.as_deref(), &mut env, pool, threads, cfg.tier,
+            ),
+            DType::F32 => run_typed::<f32>(
+                self, &program, fused.as_deref(), &mut env, pool, threads, cfg.tier,
+            ),
         };
         self.pool.lock().unwrap().absorb(pool);
         env.restore(&program, args.fields);
@@ -1230,6 +1321,93 @@ mod tests {
             &["out"],
             [6, 5, 4],
         );
+    }
+
+    #[test]
+    fn f32_programs_run_all_vector_paths() {
+        // The dtype tentpole at the backend level: an f32 stencil runs the
+        // materializing, optimized and fused vector paths and each stays
+        // bitwise-identical to the f32 debug interpreter — while genuinely
+        // differing from the f64 run of the same program.
+        const SRC64: &str = "
+            stencil s(a: Field<f64>, out: Field<f64>) {
+                with computation(PARALLEL), interval(...) {
+                    t = a * 0.1 + a[1,0,0];
+                    out = t + t[-1,0,0] * 0.3;
+                }
+            }";
+        let src32 = SRC64.replace("f64", "f32");
+        let domain = [6, 5, 4];
+        let run = |src: &str, dtype: DType, level: crate::opt::OptLevel| -> Storage {
+            let ir = crate::analysis::compile_source_opt(
+                src,
+                "s",
+                &BTreeMap::new(),
+                &crate::opt::OptConfig::level(level),
+            )
+            .unwrap();
+            let info = crate::storage::StorageInfo::new(domain, [(3, 3); 3]).with_dtype(dtype);
+            let mut fields: Vec<Storage> = (0..2)
+                .map(|_| {
+                    let mut s = Storage::zeros(info);
+                    for i in -3..domain[0] as i64 + 3 {
+                        for j in -3..domain[1] as i64 + 3 {
+                            for k in -3..domain[2] as i64 + 3 {
+                                s.set(i, j, k, ((i * 7 + j * 3 + k) as f64) * 0.013);
+                            }
+                        }
+                    }
+                    s
+                })
+                .collect();
+            let be = VectorBackend::new();
+            let mut refs: Vec<(&str, &mut Storage)> =
+                ["a", "out"].into_iter().zip(fields.iter_mut()).collect();
+            be.run(&ir, &mut StencilArgs { fields: &mut refs, scalars: &[], domain })
+                .unwrap();
+            fields.pop().unwrap()
+        };
+        let debug32 = {
+            let ir = compile_source(&src32, "s", &BTreeMap::new()).unwrap();
+            let info =
+                crate::storage::StorageInfo::new(domain, [(3, 3); 3]).with_dtype(DType::F32);
+            let mut fields: Vec<Storage> = (0..2)
+                .map(|_| {
+                    let mut s = Storage::zeros(info);
+                    for i in -3..domain[0] as i64 + 3 {
+                        for j in -3..domain[1] as i64 + 3 {
+                            for k in -3..domain[2] as i64 + 3 {
+                                s.set(i, j, k, ((i * 7 + j * 3 + k) as f64) * 0.013);
+                            }
+                        }
+                    }
+                    s
+                })
+                .collect();
+            let be = DebugBackend::new();
+            let mut refs: Vec<(&str, &mut Storage)> =
+                ["a", "out"].into_iter().zip(fields.iter_mut()).collect();
+            be.run(&ir, &mut StencilArgs { fields: &mut refs, scalars: &[], domain })
+                .unwrap();
+            fields.pop().unwrap()
+        };
+        for level in [
+            crate::opt::OptLevel::O0,
+            crate::opt::OptLevel::O2,
+            crate::opt::OptLevel::O3,
+        ] {
+            let got = run(&src32, DType::F32, level);
+            assert_eq!(got.dtype(), DType::F32);
+            assert_eq!(
+                got.domain_hash(),
+                debug32.domain_hash(),
+                "O{level} f32 vector != f32 debug"
+            );
+        }
+        // And the widths are genuinely different computations.
+        let got64 = run(SRC64, DType::F64, crate::opt::OptLevel::O3);
+        assert_ne!(got64.domain_hash(), debug32.domain_hash());
+        assert!(got64.max_abs_diff(&debug32) > 0.0, "f32 must round differently");
     }
 
     #[test]

@@ -388,7 +388,19 @@ fn insert_box(
 }
 
 /// Build the XLA computation for `ir` over a concrete `domain`.
+///
+/// The binding's staging path is f64-only (`ElementType::F64` parameters,
+/// `run_f64` transfers), so a non-f64 program is a structured error here —
+/// silently widening it would break the per-dtype bitwise-honesty contract.
 pub fn build_computation(ir: &StencilIr, domain: [usize; 3]) -> Result<xla::XlaComputation> {
+    if ir.dtype() != crate::dsl::ast::DType::F64 {
+        bail!(
+            "backend `xla` supports f64 programs only; `{}` is {} \
+             (use the debug/vector backends for f32)",
+            ir.name,
+            ir.dtype()
+        );
+    }
     let builder = xla::XlaBuilder::new(&format!("{}_{:016x}", ir.name, ir.fingerprint));
     let mut ctx = GraphCtx {
         builder: &builder,

@@ -238,6 +238,7 @@ impl Coordinator {
         ExecOptions {
             opt_level: self.level,
             fast_math: self.opt.fast_math,
+            dtype: self.opt.dtype,
             sharding: self.opt.sharding,
             tier: self.opt.tier,
         }
@@ -284,6 +285,19 @@ impl Coordinator {
 
     pub fn fast_math(&self) -> bool {
         self.opt.fast_math
+    }
+
+    /// Thin delegate: storage-precision override for subsequent
+    /// compilations (`None` honors the source declarations). Salts the
+    /// compilation cache key like fast-math — an f32 artifact computes
+    /// genuinely different bits than the f64 one, so the two must never
+    /// share a slot.
+    pub fn set_dtype(&mut self, dtype: Option<crate::dsl::ast::DType>) {
+        self.opt.dtype = dtype;
+    }
+
+    pub fn dtype(&self) -> Option<crate::dsl::ast::DType> {
+        self.opt.dtype
     }
 
     /// Low-level escape hatch: install an arbitrary pass combination that
@@ -708,6 +722,34 @@ mod tests {
         // (set to Specialized above).
         let s = c.stencil_for(d, "vector").unwrap();
         assert_eq!(s.exec_tier(), ExecTier::Specialized);
+    }
+
+    #[test]
+    fn dtype_override_salts_cache_keys_and_runs_f32() {
+        use crate::dsl::ast::DType;
+        let mut c = Coordinator::new();
+        let a = c.compile_library("copy").unwrap();
+        c.set_dtype(Some(DType::F32));
+        let b = c.compile_library("copy").unwrap();
+        assert_ne!(a, b, "dtype override must salt compilation cache keys");
+        assert_eq!(c.ir(b).unwrap().dtype(), DType::F32);
+        // And the minted handle allocates + runs genuine f32 storages.
+        let s = c.stencil_for(b, "vector").unwrap();
+        assert_eq!(s.exec_options().dtype, Some(DType::F32));
+        let domain = [4, 3, 2];
+        let mut src = s.alloc_field("src", domain).unwrap();
+        let mut dst = s.alloc_field("dst", domain).unwrap();
+        assert_eq!(src.info.dtype, DType::F32);
+        src.set(1, 2, 1, 7.5);
+        let mut inv = s
+            .bind()
+            .field("src", &src)
+            .field("dst", &dst)
+            .domain(domain)
+            .finish()
+            .unwrap();
+        inv.run(&mut [&mut src, &mut dst]).unwrap();
+        assert_eq!(dst.get(1, 2, 1), 7.5);
     }
 
     #[test]

@@ -506,7 +506,8 @@ impl BoundInvocation {
 }
 
 /// Allocate a zeroed storage with exactly the halo `ir`'s `field` requires
-/// for `domain`.
+/// for `domain`, at the field's declared (or overridden) element dtype —
+/// an f32 stencil gets genuine f32 buffers, never silently-widened f64.
 pub(super) fn alloc_field_for(
     ir: &StencilIr,
     field: &str,
@@ -516,14 +517,17 @@ pub(super) fn alloc_field_for(
         .field(field)
         .ok_or_else(|| anyhow!("stencil `{}` has no field `{field}`", ir.name))?;
     let e = f.extent;
-    Ok(Storage::zeros(StorageInfo::new(
-        domain,
-        [
-            ((-e.i.0) as usize, e.i.1 as usize),
-            ((-e.j.0) as usize, e.j.1 as usize),
-            ((-e.k.0) as usize, e.k.1 as usize),
-        ],
-    )))
+    Ok(Storage::zeros(
+        StorageInfo::new(
+            domain,
+            [
+                ((-e.i.0) as usize, e.i.1 as usize),
+                ((-e.j.0) as usize, e.j.1 as usize),
+                ((-e.k.0) as usize, e.k.1 as usize),
+            ],
+        )
+        .with_dtype(f.dtype),
+    ))
 }
 
 #[cfg(test)]
@@ -762,6 +766,54 @@ mod tests {
             .finish()
             .unwrap();
         assert_eq!(inv2.exec_tier(), ExecTier::Interpreted);
+    }
+
+    #[test]
+    fn f32_sources_get_f32_storages_not_widened_f64() {
+        use crate::dsl::ast::DType;
+        // Regression: an f32 declaration used to be silently widened —
+        // alloc_field handed back f64 buffers. Now the allocation honors
+        // the declared dtype end to end and the arithmetic genuinely
+        // rounds at single precision.
+        // `(a + h) - a` with `h` below half an f32 ulp of 1: genuine f32
+        // arithmetic absorbs `h` (result exactly 0), while f64 arithmetic
+        // narrowed at the end keeps it (result ≈ h ≠ 0).
+        const SRC: &str = "
+            stencil cancel(a: Field<f32>, out: Field<f32>) {
+                with computation(PARALLEL), interval(...) {
+                    out = (a + 0.00000001) - a;
+                }
+            }";
+        let mut c = Coordinator::new();
+        let s = c.stencil(SRC, "cancel", "vector", &std::collections::BTreeMap::new()).unwrap();
+        let domain = [4, 3, 2];
+        let mut a = s.alloc_field("a", domain).unwrap();
+        assert_eq!(a.info.dtype, DType::F32, "allocation must honor the declared dtype");
+        let mut out = s.alloc_field("out", domain).unwrap();
+        a.fill(1.0);
+        let mut inv = s
+            .bind()
+            .field("a", &a)
+            .field("out", &out)
+            .domain(domain)
+            .finish()
+            .unwrap();
+        inv.run(&mut [&mut a, &mut out]).unwrap();
+        assert_eq!(out.get_t::<f32>(1, 1, 1), 0.0, "f32 must absorb the sub-ulp term");
+        let widened = ((1.0f64 + 0.00000001) - 1.0) as f32;
+        assert_ne!(widened, 0.0, "test must discriminate the paths");
+
+        // Mixed-dtype binding is a structured bind-time error, not a
+        // silent conversion: hand the f32 stencil an f64 storage.
+        let bad = Storage::with_halo(domain, 0); // f64 default
+        let err = s
+            .bind()
+            .field("a", &bad)
+            .field("out", &out)
+            .domain(domain)
+            .finish()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("dtype"), "{err:#}");
     }
 
     #[test]

@@ -20,6 +20,25 @@ pub enum DType {
     F64,
 }
 
+impl DType {
+    /// Parse the CLI/wire spelling (`f32` / `f64`).
+    pub fn parse(s: &str) -> Option<DType> {
+        match s.trim() {
+            "f32" => Some(DType::F32),
+            "f64" => Some(DType::F64),
+            _ => None,
+        }
+    }
+
+    /// Element width in bytes.
+    pub fn size_of(self) -> usize {
+        match self {
+            DType::F32 => 4,
+            DType::F64 => 8,
+        }
+    }
+}
+
 impl fmt::Display for DType {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {

@@ -253,6 +253,14 @@ impl StencilIr {
         self.temporary(name).is_some()
     }
 
+    /// The stencil's uniform element dtype. `analysis::check_dtypes`
+    /// guarantees every field, scalar and temporary shares one dtype, so
+    /// the first field's dtype is the stencil's (f64 for the degenerate
+    /// field-less case).
+    pub fn dtype(&self) -> DType {
+        self.fields.first().map(|f| f.dtype).unwrap_or(DType::F64)
+    }
+
     pub fn num_stages(&self) -> usize {
         self.multistages.iter().map(|m| m.stages.len()).sum()
     }

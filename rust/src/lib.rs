@@ -108,6 +108,18 @@
 //!   and a Prometheus-style `/metrics` snapshot. Execution options travel
 //!   the wire as the same [`ExecOptions`] surface the in-process API
 //!   uses; results cross as bit-exact digests.
+//!
+//! Storage is dtype-generic (f64 and f32) end to end: the sealed
+//! [`storage::element::Element`] trait monomorphizes every hot path per
+//! dtype, `ExecOptions::with_dtype` retypes a whole program (salting its
+//! fingerprint, so precisions never share cached artifacts), and each
+//! dtype is bitwise-reproducible against its own debug interpreter.
+//!
+//! A prose tour of the layering, the [`ExecOptions`] knob taxonomy
+//! (pure scheduling knobs vs fingerprint-salted artifact knobs), the
+//! bitwise-equivalence invariants, and the persist/serve subsystems
+//! lives in [`docs/ARCHITECTURE.md`](../../../docs/ARCHITECTURE.md) at
+//! the repository root.
 
 pub mod analysis;
 pub mod backend;

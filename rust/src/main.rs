@@ -16,8 +16,8 @@
 //! selecting how much of the pass manager (`gt4rs::opt`) runs between
 //! analysis and the backends; level 3 additionally selects the fused
 //! loop-nest evaluator on the vector backend. The four execution knobs
-//! (`--opt-level`, `--fast-math`, `--threads`, `--tier`) are parsed into
-//! one [`ExecOptions`] and applied together.
+//! (`--opt-level`, `--fast-math`, `--threads`, `--tier`, `--dtype`) are
+//! parsed into one [`ExecOptions`] and applied together.
 //!
 //! Executing subcommands go through the `Stencil` handle API: arguments
 //! are bound and validated once, and repeat calls only re-check shapes.
@@ -50,7 +50,8 @@ fn main() {
 }
 
 /// Presence-only flags (no value follows them on the command line).
-const BOOL_FLAGS: [&str; 5] = ["json", "no-checks", "fast-math", "tapes", "clear"];
+const BOOL_FLAGS: [&str; 6] =
+    ["json", "no-checks", "fast-math", "tapes", "clear", "precision-sweep"];
 
 /// Minimal flag parser: `--key value` pairs plus presence-only booleans
 /// (`--json`, `--no-checks`, `--fast-math`, `--tapes`) after the
@@ -135,14 +136,27 @@ fn parse_tier(flags: &Flags) -> Result<ExecTier> {
         .ok_or_else(|| anyhow!("--tier must be `interpreted` or `specialized`, got `{s}`"))
 }
 
-/// The full execution-option surface as one value: `--opt-level` and
-/// `--fast-math` (the compile half, salting cache keys) plus `--threads`
-/// and `--tier` (the scheduling half). Same struct the library API and
-/// the serve wire protocol use.
+/// Storage-precision override: `--dtype f32|f64` recompiles the stencil
+/// with every field/scalar/temporary at that element type; absent, the
+/// source declarations stand.
+fn parse_dtype(flags: &Flags) -> Result<Option<gt4rs::dsl::ast::DType>> {
+    match flags.get("dtype") {
+        None => Ok(None),
+        Some(s) => gt4rs::dsl::ast::DType::parse(s)
+            .map(Some)
+            .ok_or_else(|| anyhow!("--dtype must be `f32` or `f64`, got `{s}`")),
+    }
+}
+
+/// The full execution-option surface as one value: `--opt-level`,
+/// `--fast-math` and `--dtype` (the compile half, salting cache keys)
+/// plus `--threads` and `--tier` (the scheduling half). Same struct the
+/// library API and the serve wire protocol use.
 fn parse_exec_options(flags: &Flags) -> Result<ExecOptions> {
     Ok(ExecOptions::new()
         .with_opt_level(parse_opt_level(flags)?)
         .with_fast_math(flags.flag("fast-math"))
+        .with_dtype(parse_dtype(flags)?)
         .with_sharding(parse_sharding(flags)?)
         .with_tier(parse_tier(flags)?))
 }
@@ -212,6 +226,7 @@ SUBCOMMANDS
            interior rectangle)
   run      --stencil NAME [--backend B] [--domain IxJxK] [--iters N]
            [--threads T] [--tier interpreted|specialized] [--fast-math]
+           [--dtype f32|f64]
            compile to a stencil handle, bind the arguments once, run N
            times; prints checksum + per-call timing (--json for
            machine-readable output)
@@ -219,10 +234,15 @@ SUBCOMMANDS
            cross-check every backend against `debug` (unavailable
            backends are skipped)
   bench    [--stencil hdiff|vadv] [--domains 32x32x16,..] [--iters N]
-           [--backends a,b,..] [--threads T] Figure-3 style sweep (see
-           also cargo bench); --json emits one row per (domain, backend)
+           [--backends a,b,..] [--threads T] [--dtype f32|f64]
+           Figure-3 style sweep (see also cargo bench); --json emits one
+           row per (domain, backend)
   model    [--backend B] [--domain IxJxK] [--steps N] [--threads T]
-           run the isentropic-like demo model, log diagnostics
+           [--dtype f32|f64] [--precision-sweep]
+           run the isentropic-like demo model, log diagnostics;
+           --precision-sweep runs the same model at f32 and f64 and
+           reports per-field relative-error norms against per-stencil
+           tolerances instead of a single-precision run
   serve    [--addr H:P] [--cores N] [--max-waiters N] [--deadline-ms N]
            [--coalesce-elems N] [--max-leases N] [--cache-dir DIR]
            long-running stencil service: newline-delimited JSON over TCP
@@ -259,6 +279,14 @@ core, off for narrow domains) or `off` (default). The REPRO_THREADS
 environment variable supplies the plan when --threads is absent. Every
 plan is bitwise identical to `off`; timing output reports the thread
 count *actually used*.
+
+--dtype f32|f64 recompiles a stencil with every field, scalar and
+temporary at that element type (absent, source declarations stand). Like
+--fast-math it salts the compilation cache — an f32 artifact computes
+genuinely different bits than the f64 one, so the two never share a
+cache entry, in memory or on disk. Storages must be allocated at the
+matching dtype; binding a mismatched storage is a structured bind-time
+error.
 
 --tier selects the fused-path executor at --opt-level 3: `specialized`
 (default) pre-compiles each tape into a kernel plan — dense stride
@@ -446,6 +474,10 @@ fn cmd_run(flags: &Flags) -> Result<()> {
                 .str("sharding", &exec.sharding.to_string())
                 .str("tier", &exec.tier.to_string())
                 .bool("fast_math", exec.fast_math)
+                .str(
+                    "dtype",
+                    &exec.dtype.map(|d| d.to_string()).unwrap_or_else(|| "declared".into()),
+                )
                 .int("threads_used", threads_used)
                 .int("pipeline_compiles", coord.pipeline_compiles())
                 .int("persist_hits", ph)
@@ -644,6 +676,26 @@ fn cmd_model(flags: &Flags) -> Result<()> {
         checks: !flags.flag("no-checks"),
         ..ModelConfig::default()
     };
+    if flags.flag("precision-sweep") {
+        println!("# precision sweep: domain {domain:?} backend {backend} steps {steps}");
+        println!("{:>20} {:>14} {:>12} {:>8}", "stencil", "rel_l2(f32)", "tolerance", "status");
+        let reports = gt4rs::model::precision_sweep(&config, steps)?;
+        let mut failed = false;
+        for r in &reports {
+            println!(
+                "{:>20} {:>14.6e} {:>12.1e} {:>8}",
+                r.stencil,
+                r.rel_l2,
+                r.tolerance,
+                if r.within() { "ok" } else { "FAIL" }
+            );
+            failed |= !r.within();
+        }
+        if failed {
+            anyhow::bail!("precision sweep exceeded tolerance");
+        }
+        return Ok(());
+    }
     let mut model = IsentropicModel::new(config)?;
     println!("# isentropic-like model: domain {domain:?} backend {backend} steps {steps}");
     println!("{:>6} {:>16} {:>12} {:>12} {:>12}", "step", "mass", "min", "max", "wall");

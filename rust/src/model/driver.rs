@@ -11,6 +11,7 @@
 
 use super::grid::{gaussian_blob, periodic_halo_update};
 use crate::coordinator::{BoundInvocation, Coordinator, Stencil};
+use crate::dsl::ast::DType;
 use crate::opt::ExecOptions;
 use crate::storage::{Storage, StorageInfo};
 use anyhow::Result;
@@ -105,14 +106,23 @@ impl IsentropicModel {
         let ci = domain[0] as f64 / 2.0;
         let cj = domain[1] as f64 / 2.0;
         let sigma = domain[0] as f64 / 8.0;
-        let phi = gaussian_blob(domain, halo, ci, cj, sigma);
-        let out = Storage::with_horizontal_halo(domain, halo);
-        let mut coeff = Storage::with_horizontal_halo(domain, halo);
+        // An `exec.dtype` override recompiles every stencil at that
+        // element type, and bind-time validation demands matching
+        // storages — so the model's allocations follow the knob.
+        let retype = |s: Storage| -> Storage {
+            match config.exec.dtype {
+                Some(dt) if dt != s.dtype() => s.cast(dt),
+                _ => s,
+            }
+        };
+        let phi = retype(gaussian_blob(domain, halo, ci, cj, sigma));
+        let out = retype(Storage::with_horizontal_halo(domain, halo));
+        let mut coeff = retype(Storage::with_horizontal_halo(domain, halo));
         coeff.fill(config.diffusion_coeff);
         // Gentle vertically-sheared updraft.
-        let w = Storage::from_fn(domain, 0, |_, _, k| {
+        let w = retype(Storage::from_fn(domain, 0, |_, _, k| {
             config.w_amp * (k as f64 / domain[2].max(1) as f64 - 0.5)
-        });
+        }));
 
         // Bind once: full validation here; step() only re-checks shapes.
         // phi and out share a geometry, so the per-step double-buffer swap
@@ -242,6 +252,131 @@ impl IsentropicModel {
     }
 }
 
+/// One row of a [`precision_sweep`]: the f32-vs-f64 relative L2 error of
+/// a stencil (or of the composed trajectory) against its tolerance.
+#[derive(Debug, Clone)]
+pub struct PrecisionReport {
+    /// Stencil name, or `model(N steps)` for the composed trajectory.
+    pub stencil: String,
+    /// Relative L2 norm of the f32 result against the f64 reference.
+    pub rel_l2: f64,
+    /// Acceptance threshold for this stencil.
+    pub tolerance: f64,
+}
+
+impl PrecisionReport {
+    pub fn within(&self) -> bool {
+        self.rel_l2 <= self.tolerance
+    }
+}
+
+/// Per-stencil f32-vs-f64 tolerances on a single application to the
+/// Gaussian-blob initial condition. All three operators are pointwise
+/// stable (no cancellation-dominated reductions), so one application
+/// stays within a few hundred ulps of f32 epsilon; the composed
+/// trajectory accumulates roundoff once per operator per step.
+const SWEEP_STENCILS: [(&str, f64); 3] =
+    [("upwind_advect", 1e-5), ("hdiff", 1e-5), ("vadv", 1e-5)];
+
+/// Per-√step tolerance for the composed model trajectory: roundoff
+/// accumulates as a random walk, so the acceptance threshold is
+/// `SWEEP_TRAJECTORY_TOL * sqrt(steps)`.
+const SWEEP_TRAJECTORY_TOL: f64 = 5e-5;
+
+/// Run the model suite at f32 and at f64 and report relative-error
+/// norms: one single-application row per library stencil (each checked
+/// against a per-stencil tolerance) plus one row for the composed
+/// trajectory after `steps` steps. Any `exec.dtype` already present in
+/// `config` is overridden by the sweep's own precision pair; every
+/// other knob (opt level, tier, sharding, fast-math) is honored, so the
+/// sweep measures precision alone.
+pub fn precision_sweep(config: &ModelConfig, steps: usize) -> Result<Vec<PrecisionReport>> {
+    let mut reports = Vec::new();
+    for (name, tolerance) in SWEEP_STENCILS {
+        let lo = apply_once(config, DType::F32, name)?;
+        let hi = apply_once(config, DType::F64, name)?;
+        reports.push(PrecisionReport {
+            stencil: name.to_string(),
+            rel_l2: lo.rel_l2_error(&hi),
+            tolerance,
+        });
+    }
+    let at = |dt: DType| ModelConfig {
+        exec: config.exec.with_dtype(Some(dt)),
+        ..config.clone()
+    };
+    let mut lo = IsentropicModel::new(at(DType::F32))?;
+    let mut hi = IsentropicModel::new(at(DType::F64))?;
+    lo.run(steps)?;
+    hi.run(steps)?;
+    reports.push(PrecisionReport {
+        stencil: format!("model({steps} steps)"),
+        rel_l2: lo.phi_snapshot().rel_l2_error(&hi.phi_snapshot()),
+        tolerance: SWEEP_TRAJECTORY_TOL * (steps.max(1) as f64).sqrt(),
+    });
+    Ok(reports)
+}
+
+/// Apply one library stencil once to the model's initial condition at
+/// the given precision and return the (dtype-native) result field.
+fn apply_once(config: &ModelConfig, dtype: DType, name: &str) -> Result<Storage> {
+    let mut coord = Coordinator::with_exec_options(config.exec.with_dtype(Some(dtype)));
+    coord.checks_enabled = config.checks;
+    let stencil: Stencil = coord.stencil_library(name, &config.backend)?;
+    let domain = config.domain;
+    let halo = 3;
+    let ci = domain[0] as f64 / 2.0;
+    let cj = domain[1] as f64 / 2.0;
+    let sigma = domain[0] as f64 / 8.0;
+    let mut phi = gaussian_blob(domain, halo, ci, cj, sigma).cast(dtype);
+    let mut out = Storage::with_horizontal_halo(domain, halo).cast(dtype);
+    match name {
+        "upwind_advect" => {
+            let mut bound = stencil
+                .bind()
+                .field("phi", &phi)
+                .field("out", &out)
+                .scalar("u", config.u)
+                .scalar("v", config.v)
+                .scalar("dtdx", config.dt / config.dx)
+                .scalar("dtdy", config.dt / config.dy)
+                .domain(domain)
+                .finish()?;
+            bound.run(&mut [&mut phi, &mut out])?;
+            Ok(out)
+        }
+        "hdiff" => {
+            let mut coeff = Storage::with_horizontal_halo(domain, halo).cast(dtype);
+            coeff.fill(config.diffusion_coeff);
+            let mut bound = stencil
+                .bind()
+                .field("in_phi", &phi)
+                .field("coeff", &coeff)
+                .field("out_phi", &out)
+                .domain(domain)
+                .finish()?;
+            bound.run(&mut [&mut phi, &mut coeff, &mut out])?;
+            Ok(out)
+        }
+        "vadv" => {
+            let mut w = Storage::from_fn(domain, 0, |_, _, k| {
+                config.w_amp * (k as f64 / domain[2].max(1) as f64 - 0.5)
+            })
+            .cast(dtype);
+            let mut bound = stencil
+                .bind()
+                .field("phi", &phi)
+                .field("w", &w)
+                .scalar("dtdz", config.dt / config.dz)
+                .domain(domain)
+                .finish()?;
+            bound.run(&mut [&mut phi, &mut w])?;
+            Ok(phi)
+        }
+        other => anyhow::bail!("precision sweep has no harness for stencil `{other}`"),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -342,6 +477,42 @@ mod tests {
         m.run(8).unwrap();
         let t = m.coordinator().metrics.get("hdiff", "vector").unwrap();
         assert_eq!(t.calls, 8);
+    }
+
+    #[test]
+    fn f32_model_allocates_f32_and_stays_stable() {
+        let mut cfg = small_config("vector");
+        cfg.exec = cfg.exec.with_dtype(Some(DType::F32));
+        let mut m = IsentropicModel::new(cfg).unwrap();
+        assert_eq!(m.phi.dtype(), DType::F32);
+        let diags = m.run(5).unwrap();
+        let last = diags.last().unwrap();
+        assert!(last.max.is_finite());
+        assert!(last.max <= 1.5, "f32 model blew up: max {}", last.max);
+    }
+
+    #[test]
+    fn precision_sweep_separates_f32_from_f64_within_tolerance() {
+        let cfg = small_config("vector");
+        let reports = precision_sweep(&cfg, 5).unwrap();
+        assert_eq!(reports.len(), SWEEP_STENCILS.len() + 1);
+        for r in &reports {
+            assert!(
+                r.within(),
+                "{} rel_l2 {} exceeds tolerance {}",
+                r.stencil,
+                r.rel_l2,
+                r.tolerance
+            );
+        }
+        // The trajectory row must show *genuine* single-precision
+        // arithmetic: if f32 silently widened to f64 the error would be
+        // exactly zero.
+        let traj = reports.last().unwrap();
+        assert!(
+            traj.rel_l2 > 0.0,
+            "f32 trajectory bitwise-matched f64 — storage silently widened"
+        );
     }
 
     #[test]

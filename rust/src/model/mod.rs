@@ -19,5 +19,5 @@
 pub mod driver;
 pub mod grid;
 
-pub use driver::{IsentropicModel, ModelConfig, StepDiagnostics};
+pub use driver::{precision_sweep, IsentropicModel, ModelConfig, PrecisionReport, StepDiagnostics};
 pub use grid::periodic_halo_update;

@@ -38,6 +38,7 @@ pub mod fusion;
 
 use crate::backend::kernels::ExecTier;
 use crate::backend::shard::Sharding;
+use crate::dsl::ast::DType;
 use crate::ir::implir::{Stage, StencilIr};
 
 /// Coarse optimization levels, the CLI's `--opt-level {0,1,2,3}`.
@@ -87,9 +88,9 @@ impl std::fmt::Display for OptLevel {
 /// exactly one place that spells out which options salt compilation
 /// fingerprints and which are pure scheduling:
 ///
-/// * **Fingerprint-salting half** (`opt_level`, `fast_math`): these select
-///   *what artifact* is compiled. Different values must never share a
-///   cache slot ([`OptConfig::salt`]).
+/// * **Fingerprint-salting half** (`opt_level`, `fast_math`, `dtype`):
+///   these select *what artifact* is compiled. Different values must never
+///   share a cache slot ([`OptConfig::salt`]).
 /// * **Scheduling half** (`sharding`, `tier`): these select *how a run is
 ///   scheduled*. Every value is bitwise-identical by contract, so they
 ///   stay out of every fingerprint and can be changed per invocation
@@ -104,6 +105,12 @@ pub struct ExecOptions {
     /// Opt-in numeric relaxation for the specialized executor
     /// (fingerprint-salting — exact and relaxed artifacts never collide).
     pub fast_math: bool,
+    /// Storage-precision override (fingerprint-salting): `Some(dtype)`
+    /// recompiles the stencil with every field, scalar and temporary at
+    /// that element type; `None` honors the source declarations. An f32
+    /// artifact computes genuinely different bits than the f64 one, so
+    /// the two never share a cache slot.
+    pub dtype: Option<DType>,
     /// Intra-call domain-sharding plan (pure scheduling).
     pub sharding: Sharding,
     /// Fused-path executor tier (pure scheduling).
@@ -117,6 +124,7 @@ impl Default for ExecOptions {
         ExecOptions {
             opt_level: OptLevel::O2,
             fast_math: false,
+            dtype: None,
             sharding: Sharding::Off,
             tier: ExecTier::default(),
         }
@@ -148,6 +156,11 @@ impl ExecOptions {
         self
     }
 
+    pub fn with_dtype(mut self, dtype: Option<DType>) -> ExecOptions {
+        self.dtype = dtype;
+        self
+    }
+
     /// The pass-manager configuration these options name — the single
     /// mapping point from the user-facing surface to [`OptConfig`].
     pub fn opt_config(&self) -> OptConfig {
@@ -155,6 +168,7 @@ impl ExecOptions {
             .with_sharding(self.sharding)
             .with_tier(self.tier)
             .with_fast_math(self.fast_math)
+            .with_dtype(self.dtype)
     }
 }
 
@@ -191,6 +205,14 @@ pub struct OptConfig {
     /// `fast_math` toggle above, *not* this one), so both tiers share one
     /// cached artifact, exactly like sharding plans.
     pub tier: ExecTier,
+    /// Storage-precision override, applied by [`PassManager::finish`]: the
+    /// IR's fields, scalars and temporaries are rewritten to this dtype
+    /// before the fingerprint restamp. The canonical IR form spells out
+    /// every field's dtype, so the rewritten IR fingerprints differently
+    /// from the declared-dtype one without any `canon()` involvement —
+    /// but [`OptConfig::salt`] (used for cache keys computed *before*
+    /// analysis) must still mix it in explicitly.
+    pub dtype: Option<DType>,
 }
 
 impl Default for OptConfig {
@@ -211,6 +233,7 @@ impl OptConfig {
             fast_math: false,
             sharding: Sharding::Off,
             tier: ExecTier::default(),
+            dtype: None,
         }
     }
 
@@ -262,6 +285,13 @@ impl OptConfig {
         self
     }
 
+    /// The same pass configuration with a storage-precision override
+    /// (which *does* change fingerprints — see [`OptConfig::dtype`]).
+    pub fn with_dtype(mut self, dtype: Option<DType>) -> OptConfig {
+        self.dtype = dtype;
+        self
+    }
+
     /// Canonical string of the enabled passes, mixed into IR fingerprints.
     /// Empty exactly when no pass is enabled, so opt-level 0 keeps the
     /// pipeline's pre-opt fingerprint unchanged. The `fused` execution
@@ -292,8 +322,17 @@ impl OptConfig {
 
     /// Stable hash of the configuration, for salting cache keys computed
     /// *before* analysis (the coordinator's definition-fingerprint memo).
+    /// The precision override is mixed in here (unlike [`OptConfig::canon`],
+    /// which names only passes): an f32 request must never hit a memoized
+    /// f64 handle, even though post-analysis the rewritten field dtypes
+    /// already separate the IR fingerprints.
     pub fn salt(&self) -> u64 {
-        crate::ir::canon::fnv1a64(self.canon().as_bytes())
+        let mut tag = self.canon();
+        if let Some(dt) = self.dtype {
+            tag.push_str(";dtype=");
+            tag.push_str(&dt.to_string());
+        }
+        crate::ir::canon::fnv1a64(tag.as_bytes())
     }
 }
 
@@ -350,6 +389,20 @@ impl PassManager {
 
     fn finish(&self, ir: &mut StencilIr) {
         refresh_reads(ir);
+        // Apply the storage-precision override before restamping: the
+        // canonical IR form spells out every field's dtype, so the
+        // rewritten IR fingerprints differently from the declared one.
+        if let Some(dt) = self.config.dtype {
+            for f in &mut ir.fields {
+                f.dtype = dt;
+            }
+            for sc in &mut ir.scalars {
+                sc.dtype = dt;
+            }
+            for t in &mut ir.temporaries {
+                t.dtype = dt;
+            }
+        }
         ir.fused = self.config.fused;
         ir.fast_math = self.config.fast_math;
         ir.fingerprint = crate::analysis::fingerprint_ir_with(ir, &self.config.canon());
@@ -459,6 +512,30 @@ mod tests {
         assert!(!exact.fast_math);
         assert!(relaxed.fast_math);
         assert_ne!(exact.fingerprint, relaxed.fingerprint);
+    }
+
+    #[test]
+    fn dtype_override_rewrites_ir_and_salts_fingerprints() {
+        use crate::dsl::ast::DType;
+        let base = OptConfig::level(OptLevel::O2);
+        let f32c = base.with_dtype(Some(DType::F32));
+        // Pre-analysis memo keys must separate too.
+        assert_ne!(base.salt(), f32c.salt());
+        // canon() names passes only; the dtype rides on salt + IR rewrite.
+        assert_eq!(base.canon(), f32c.canon());
+        let i64_ = ir_at(base);
+        let i32_ = ir_at(f32c);
+        assert_eq!(i64_.dtype(), DType::F64);
+        assert_eq!(i32_.dtype(), DType::F32);
+        assert!(i32_.fields.iter().all(|f| f.dtype == DType::F32));
+        assert!(i32_.temporaries.iter().all(|t| t.dtype == DType::F32));
+        assert_ne!(i64_.fingerprint, i32_.fingerprint);
+        // An explicit f64 override on f64 sources is a no-op for the IR
+        // fingerprint (the rewrite changes nothing) but still salts the
+        // pre-analysis memo key.
+        let f64c = base.with_dtype(Some(DType::F64));
+        assert_eq!(ir_at(f64c).fingerprint, i64_.fingerprint);
+        assert_ne!(f64c.salt(), base.salt());
     }
 
     #[test]

@@ -427,34 +427,44 @@ mod tests {
             let src = stdlib::source(name).unwrap();
             for level in LEVELS {
                 for fast_math in [false, true] {
-                    let config = OptConfig::level(level).with_fast_math(fast_math);
-                    let ir = analysis::compile_source_opt(
-                        src,
-                        name,
-                        &Default::default(),
-                        &config,
-                    )
-                    .unwrap();
-                    let payload = ir_to_json(&ir)
-                        .unwrap_or_else(|| panic!("{name} O{level}: unserializable IR"));
-                    let back = ir_from_json(&payload)
-                        .unwrap_or_else(|| panic!("{name} O{level}: reload failed"));
-                    let tag = config.canon();
-                    assert_eq!(
-                        canon::canon_ir(&ir, &tag),
-                        canon::canon_ir(&back, &tag),
-                        "{name} O{level} fast_math={fast_math}: canon text diverged"
-                    );
-                    assert_eq!(
-                        analysis::fingerprint_ir_with(&back, &tag),
-                        ir.fingerprint,
-                        "{name} O{level} fast_math={fast_math}: fingerprint diverged"
-                    );
-                    assert_eq!(back.fingerprint, ir.fingerprint);
-                    // Derived read sets must be rebuilt identically too.
-                    for (m0, m1) in ir.multistages.iter().zip(&back.multistages) {
-                        for (s0, s1) in m0.stages.iter().zip(&m1.stages) {
-                            assert_eq!(s0.reads, s1.reads);
+                    for dtype in [None, Some(DType::F32)] {
+                        let config = OptConfig::level(level)
+                            .with_fast_math(fast_math)
+                            .with_dtype(dtype);
+                        let ir = analysis::compile_source_opt(
+                            src,
+                            name,
+                            &Default::default(),
+                            &config,
+                        )
+                        .unwrap();
+                        if let Some(dt) = dtype {
+                            assert!(ir.fields.iter().all(|f| f.dtype == dt));
+                        }
+                        let payload = ir_to_json(&ir)
+                            .unwrap_or_else(|| panic!("{name} O{level}: unserializable IR"));
+                        let back = ir_from_json(&payload)
+                            .unwrap_or_else(|| panic!("{name} O{level}: reload failed"));
+                        // dtypes ride the canonical text, so a reloaded
+                        // f32 artifact keeps its element type.
+                        assert_eq!(ir.dtype(), back.dtype());
+                        let tag = config.canon();
+                        assert_eq!(
+                            canon::canon_ir(&ir, &tag),
+                            canon::canon_ir(&back, &tag),
+                            "{name} O{level} fast_math={fast_math}: canon text diverged"
+                        );
+                        assert_eq!(
+                            analysis::fingerprint_ir_with(&back, &tag),
+                            ir.fingerprint,
+                            "{name} O{level} fast_math={fast_math}: fingerprint diverged"
+                        );
+                        assert_eq!(back.fingerprint, ir.fingerprint);
+                        // Derived read sets must be rebuilt identically too.
+                        for (m0, m1) in ir.multistages.iter().zip(&back.multistages) {
+                            for (s0, s1) in m0.stages.iter().zip(&m1.stages) {
+                                assert_eq!(s0.reads, s1.reads);
+                            }
                         }
                     }
                 }

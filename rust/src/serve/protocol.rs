@@ -18,9 +18,10 @@
 //! (default `"vector"`), `domain` (`[ni,nj,nk]`), `scalars`
 //! (`{name: value}`), `lease` (from a prior `bind`), `iters`,
 //! `deadline_ms`, and `options` — the wire spelling of
-//! [`ExecOptions`]: `opt_level`, `fast_math`, `threads`, `tier`, parsed
-//! by the *same* `OptLevel::parse` / `Sharding::parse` / `ExecTier::parse`
-//! the CLI flags use, so library, CLI and wire agree on one surface.
+//! [`ExecOptions`]: `opt_level`, `fast_math`, `threads`, `tier`,
+//! `dtype`, parsed by the *same* `OptLevel::parse` / `Sharding::parse` /
+//! `ExecTier::parse` / `DType::parse` the CLI flags use, so library,
+//! CLI and wire agree on one surface.
 //!
 //! ## Responses
 //!
@@ -37,6 +38,7 @@
 
 use crate::backend::kernels::ExecTier;
 use crate::backend::shard::Sharding;
+use crate::dsl::ast::DType;
 use crate::jsonw::{self, Obj, Value};
 use crate::opt::{ExecOptions, OptLevel};
 
@@ -125,6 +127,10 @@ pub struct WireOptions {
     pub fast_math: Option<bool>,
     pub sharding: Option<Sharding>,
     pub tier: Option<ExecTier>,
+    /// Element-type override (`"f32"` / `"f64"`). Like `opt_level` and
+    /// `fast_math` it salts the artifact fingerprint, so leases at
+    /// different precisions never share a compiled stencil.
+    pub dtype: Option<DType>,
 }
 
 impl WireOptions {
@@ -142,6 +148,9 @@ impl WireOptions {
         }
         if let Some(t) = self.tier {
             exec = exec.with_tier(t);
+        }
+        if let Some(dt) = self.dtype {
+            exec = exec.with_dtype(Some(dt));
         }
         exec
     }
@@ -201,7 +210,7 @@ fn parse_options(v: &Value) -> Result<WireOptions, String> {
     };
     let members = opts.as_obj().ok_or("`options` must be an object")?;
     for (k, _) in members {
-        if !matches!(k.as_str(), "opt_level" | "fast_math" | "threads" | "tier") {
+        if !matches!(k.as_str(), "opt_level" | "fast_math" | "threads" | "tier" | "dtype") {
             return Err(format!("unknown option `{k}`"));
         }
     }
@@ -234,8 +243,12 @@ fn parse_options(v: &Value) -> Result<WireOptions, String> {
         None => None,
         Some(s) => Some(ExecTier::parse(&s).ok_or_else(|| format!("bad tier `{s}`"))?),
     };
+    let dtype = match want_str(opts, "dtype")? {
+        None => None,
+        Some(s) => Some(DType::parse(&s).ok_or_else(|| format!("bad dtype `{s}`"))?),
+    };
     let fast_math = want_bool(opts, "fast_math")?;
-    Ok(WireOptions { opt_level, fast_math, sharding, tier })
+    Ok(WireOptions { opt_level, fast_math, sharding, tier, dtype })
 }
 
 /// Parse one request line. On failure the request `id` is still
@@ -379,7 +392,7 @@ mod tests {
         let r = parse_request(
             r#"{"op":"bind","id":7,"tenant":"t1","stencil":"hdiff","backend":"vector",
                 "domain":[32,32,8],"scalars":{"alpha":0.25},
-                "options":{"opt_level":"3","threads":"2","tier":"interpreted","fast_math":true}}"#
+                "options":{"opt_level":"3","threads":"2","tier":"interpreted","fast_math":true,"dtype":"f32"}}"#
                 .replace('\n', " ")
                 .as_str(),
         )
@@ -395,6 +408,7 @@ mod tests {
         assert_eq!(exec.sharding, Sharding::Threads(2));
         assert_eq!(exec.tier, ExecTier::Interpreted);
         assert!(exec.fast_math);
+        assert_eq!(exec.dtype, Some(DType::F32));
     }
 
     #[test]
@@ -434,6 +448,7 @@ mod tests {
             r#"{"op":"bind","mystery":1}"#,
             r#"{"op":"bind","options":{"opt_level":"9"}}"#,
             r#"{"op":"bind","options":{"warp":1}}"#,
+            r#"{"op":"bind","options":{"dtype":"f16"}}"#,
             r#"{"op":"bind","scalars":{"a":"b"}}"#,
         ] {
             let (_, err) = parse_request(bad).unwrap_err();

@@ -1,0 +1,444 @@
+//! The element-type abstraction behind dtype-generic storages.
+//!
+//! [`Element`] is a *sealed* trait implemented exactly for `f64` and `f32`
+//! — the two dtypes the DSL declares ([`DType`]). Every execution path
+//! (the debug interpreter, the materializing and fused vector paths, the
+//! specialized kernel plans) is generic over `T: Element` and monomorphized
+//! per dtype, so there is no `dyn` dispatch on any hot path and the
+//! autovectorizer sees full-width `f32` lanes.
+//!
+//! [`Buf`] is the matching enum-of-buffers a [`crate::storage::Storage`]
+//! owns: one tagged flat allocation, viewed as `&[T]` through the trait's
+//! dispatch hooks. The tag always equals the storage's `info.dtype`, so a
+//! `Buf::F32` never masquerades as an `f64` field.
+//!
+//! ## Numeric honesty
+//!
+//! All arithmetic on the execution paths happens in `T`'s native precision:
+//! constants and scalar parameters are converted from their `f64` source
+//! representation exactly once (round-to-nearest, deterministic), then every
+//! operation — including the builtins below — runs at `T` width. This is
+//! what makes the per-dtype bitwise-equivalence contract meaningful: an
+//! `f32` run is a genuine single-precision computation, not an `f64`
+//! computation rounded at the end.
+
+use crate::dsl::ast::DType;
+use std::ops::{Add, AddAssign, Div, DivAssign, Mul, MulAssign, Neg, Rem, Sub, SubAssign};
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for f64 {}
+    impl Sealed for f32 {}
+}
+
+/// A storage element type (`f64` or `f32`). Sealed: the two impls in this
+/// module are the only ones possible, which lets unsafe storage-view code
+/// rely on `T` being a plain IEEE-754 float with no drop glue.
+pub trait Element:
+    sealed::Sealed
+    + Copy
+    + Send
+    + Sync
+    + PartialEq
+    + PartialOrd
+    + std::fmt::Debug
+    + std::fmt::Display
+    + Default
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Div<Output = Self>
+    + Rem<Output = Self>
+    + Neg<Output = Self>
+    + AddAssign
+    + SubAssign
+    + MulAssign
+    + DivAssign
+    + 'static
+{
+    /// The DSL dtype this element type implements.
+    const DTYPE: DType;
+    const ZERO: Self;
+    const ONE: Self;
+
+    /// Deterministic round-to-nearest conversion from the `f64` source
+    /// representation of constants, scalars and fill patterns.
+    fn from_f64(v: f64) -> Self;
+    /// Widening (exact for `f32`) conversion for diagnostics and norms.
+    fn to_f64(self) -> f64;
+    /// Native IEEE-754 bit pattern, zero-extended to 64 bits — cache and
+    /// fingerprint material.
+    fn to_bits64(self) -> u64;
+    /// One FNV-1a step per *native-width* little-endian byte: `f32` and
+    /// `f64` storages holding "the same" values hash differently, which is
+    /// exactly what the serve digests and honesty gates need.
+    fn fnv1a_step(self, h: u64) -> u64;
+
+    /// Boolean encoding shared by every backend: comparisons and logic
+    /// produce `ONE`/`ZERO`, truthiness is `!= ZERO`.
+    #[inline(always)]
+    fn from_bool(b: bool) -> Self {
+        if b {
+            Self::ONE
+        } else {
+            Self::ZERO
+        }
+    }
+    #[inline(always)]
+    fn truthy(self) -> bool {
+        self != Self::ZERO
+    }
+
+    fn abs(self) -> Self;
+    fn sqrt(self) -> Self;
+    fn exp(self) -> Self;
+    fn ln(self) -> Self;
+    fn floor(self) -> Self;
+    fn ceil(self) -> Self;
+    fn sin(self) -> Self;
+    fn cos(self) -> Self;
+    fn tanh(self) -> Self;
+    fn min(self, other: Self) -> Self;
+    fn max(self, other: Self) -> Self;
+    fn powf(self, other: Self) -> Self;
+    /// Fused multiply-add `self * b + c` (used only behind the opt-in
+    /// fast-math artifact; exact paths never contract).
+    fn mul_add(self, b: Self, c: Self) -> Self;
+
+    /// Slice-level FMA `out[x] = a[x] * b[x] + c[x]`, hardware-contracted
+    /// when the CPU has FMA units (fast-math specialized kernels only).
+    fn mul_add_slices(out: &mut [Self], a: &[Self], b: &[Self], c: &[Self]);
+    /// Slice-level FMS `out[x] = a[x] * b[x] - c[x]` (fast-math only).
+    fn mul_sub_slices(out: &mut [Self], a: &[Self], b: &[Self], c: &[Self]);
+
+    // Enum-of-buffers dispatch hooks (monomorphized, no `dyn`).
+
+    /// Wrap an owned vector in the matching [`Buf`] variant.
+    fn buf(v: Vec<Self>) -> Buf;
+    /// View a [`Buf`] as `&[Self]`; panics if the tag does not match —
+    /// unreachable after bind-time dtype validation.
+    fn slice(buf: &Buf) -> &[Self];
+    /// Mutable variant of [`Element::slice`].
+    fn slice_mut(buf: &mut Buf) -> &mut [Self];
+}
+
+/// Whether the host CPU exposes hardware FMA (x86_64 `fma` feature);
+/// checked once per call site that contracts — cheap (cpuid is cached by
+/// `is_x86_feature_detected`).
+#[inline]
+pub(crate) fn hw_fma() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+macro_rules! impl_element {
+    ($ty:ty, $dtype:expr, $variant:ident, $bits_as:ty) => {
+        impl Element for $ty {
+            const DTYPE: DType = $dtype;
+            const ZERO: Self = 0.0;
+            const ONE: Self = 1.0;
+
+            #[inline(always)]
+            fn from_f64(v: f64) -> Self {
+                v as $ty
+            }
+            #[inline(always)]
+            fn to_f64(self) -> f64 {
+                self as f64
+            }
+            #[inline(always)]
+            fn to_bits64(self) -> u64 {
+                self.to_bits() as u64
+            }
+            #[inline(always)]
+            fn fnv1a_step(self, mut h: u64) -> u64 {
+                for b in self.to_bits().to_le_bytes() {
+                    h ^= b as u64;
+                    h = h.wrapping_mul(0x0000_0100_0000_01b3);
+                }
+                h
+            }
+
+            #[inline(always)]
+            fn abs(self) -> Self {
+                self.abs()
+            }
+            #[inline(always)]
+            fn sqrt(self) -> Self {
+                self.sqrt()
+            }
+            #[inline(always)]
+            fn exp(self) -> Self {
+                self.exp()
+            }
+            #[inline(always)]
+            fn ln(self) -> Self {
+                self.ln()
+            }
+            #[inline(always)]
+            fn floor(self) -> Self {
+                self.floor()
+            }
+            #[inline(always)]
+            fn ceil(self) -> Self {
+                self.ceil()
+            }
+            #[inline(always)]
+            fn sin(self) -> Self {
+                self.sin()
+            }
+            #[inline(always)]
+            fn cos(self) -> Self {
+                self.cos()
+            }
+            #[inline(always)]
+            fn tanh(self) -> Self {
+                self.tanh()
+            }
+            #[inline(always)]
+            fn min(self, other: Self) -> Self {
+                self.min(other)
+            }
+            #[inline(always)]
+            fn max(self, other: Self) -> Self {
+                self.max(other)
+            }
+            #[inline(always)]
+            fn powf(self, other: Self) -> Self {
+                self.powf(other)
+            }
+            #[inline(always)]
+            fn mul_add(self, b: Self, c: Self) -> Self {
+                self.mul_add(b, c)
+            }
+
+            fn mul_add_slices(out: &mut [Self], a: &[Self], b: &[Self], c: &[Self]) {
+                if hw_fma() {
+                    #[cfg(target_arch = "x86_64")]
+                    // SAFETY: `hw_fma` verified the `fma` target feature.
+                    unsafe {
+                        return fma_slices_hw::$variant(out, a, b, c, false);
+                    }
+                }
+                for x in 0..out.len() {
+                    out[x] = a[x].mul_add(b[x], c[x]);
+                }
+            }
+
+            fn mul_sub_slices(out: &mut [Self], a: &[Self], b: &[Self], c: &[Self]) {
+                if hw_fma() {
+                    #[cfg(target_arch = "x86_64")]
+                    // SAFETY: `hw_fma` verified the `fma` target feature.
+                    unsafe {
+                        return fma_slices_hw::$variant(out, a, b, c, true);
+                    }
+                }
+                for x in 0..out.len() {
+                    out[x] = a[x].mul_add(b[x], -c[x]);
+                }
+            }
+
+            #[inline]
+            fn buf(v: Vec<Self>) -> Buf {
+                Buf::$variant(v)
+            }
+            #[inline(always)]
+            fn slice(buf: &Buf) -> &[Self] {
+                match buf {
+                    Buf::$variant(v) => v,
+                    other => panic!(
+                        "storage dtype mismatch: expected {}, buffer holds {}",
+                        Self::DTYPE,
+                        other.dtype()
+                    ),
+                }
+            }
+            #[inline(always)]
+            fn slice_mut(buf: &mut Buf) -> &mut [Self] {
+                match buf {
+                    Buf::$variant(v) => v,
+                    other => panic!(
+                        "storage dtype mismatch: expected {}, buffer holds {}",
+                        Self::DTYPE,
+                        other.dtype()
+                    ),
+                }
+            }
+        }
+    };
+}
+
+impl_element!(f64, DType::F64, F64, u64);
+impl_element!(f32, DType::F32, F32, u32);
+
+/// `#[target_feature(enable = "fma")]` slice kernels, one per dtype. The
+/// feature attribute makes the *compiler* emit `vfmadd`, so contraction is
+/// guaranteed (not at the autovectorizer's whim) once `hw_fma()` approves.
+#[cfg(target_arch = "x86_64")]
+mod fma_slices_hw {
+    macro_rules! fma_hw {
+        ($name:ident, $ty:ty) => {
+            #[target_feature(enable = "fma")]
+            #[allow(non_snake_case)]
+            pub unsafe fn $name(out: &mut [$ty], a: &[$ty], b: &[$ty], c: &[$ty], sub: bool) {
+                if sub {
+                    for x in 0..out.len() {
+                        out[x] = a[x].mul_add(b[x], -c[x]);
+                    }
+                } else {
+                    for x in 0..out.len() {
+                        out[x] = a[x].mul_add(b[x], c[x]);
+                    }
+                }
+            }
+        };
+    }
+    fma_hw!(F64, f64);
+    fma_hw!(F32, f32);
+}
+
+/// The tagged flat buffer behind a [`crate::storage::Storage`]: exactly one
+/// allocation, its variant always matching the storage's `info.dtype`.
+#[derive(Clone)]
+pub enum Buf {
+    F64(Vec<f64>),
+    F32(Vec<f32>),
+}
+
+impl Buf {
+    /// A zero-filled buffer of `len` elements of `dtype`.
+    pub fn zeros(dtype: DType, len: usize) -> Buf {
+        match dtype {
+            DType::F64 => Buf::F64(vec![0.0; len]),
+            DType::F32 => Buf::F32(vec![0.0; len]),
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Buf::F64(_) => DType::F64,
+            Buf::F32(_) => DType::F32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Buf::F64(v) => v.len(),
+            Buf::F32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Element read converted to `f64` (diagnostics / fills — execution
+    /// paths use the typed [`Element::slice`] views instead).
+    #[inline(always)]
+    pub fn get_f64(&self, idx: usize) -> f64 {
+        match self {
+            Buf::F64(v) => v[idx],
+            Buf::F32(v) => v[idx] as f64,
+        }
+    }
+
+    /// Element write rounded from `f64` (round-to-nearest for `f32`).
+    #[inline(always)]
+    pub fn set_f64(&mut self, idx: usize, val: f64) {
+        match self {
+            Buf::F64(v) => v[idx] = val,
+            Buf::F32(v) => v[idx] = val as f32,
+        }
+    }
+
+    /// Fill every element with `v` (rounded once per dtype).
+    pub fn fill_f64(&mut self, v: f64) {
+        match self {
+            Buf::F64(d) => d.fill(v),
+            Buf::F32(d) => d.fill(v as f32),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn eval_generic<T: Element>(a: f64, b: f64) -> u64 {
+        // A tiny expression evaluated at T precision end-to-end.
+        let (a, b) = (T::from_f64(a), T::from_f64(b));
+        (a * b + a.sqrt().max(b)).to_bits64()
+    }
+
+    #[test]
+    fn f32_and_f64_are_genuinely_different_precisions() {
+        // 0.1 is not exactly representable: single- and double-precision
+        // evaluation must produce different bit patterns.
+        assert_ne!(eval_generic::<f32>(0.1, 0.3), eval_generic::<f64>(0.1, 0.3));
+        // The f32 path really is f32: it equals hand-written f32 math.
+        let (a, b) = (0.1f32, 0.3f32);
+        assert_eq!(
+            eval_generic::<f32>(0.1, 0.3),
+            (a * b + a.sqrt().max(b)).to_bits() as u64
+        );
+    }
+
+    #[test]
+    fn buf_tags_and_dispatch() {
+        let b = Buf::zeros(DType::F32, 4);
+        assert_eq!(b.dtype(), DType::F32);
+        assert_eq!(b.len(), 4);
+        assert_eq!(<f32 as Element>::slice(&b).len(), 4);
+        let mut b = Buf::zeros(DType::F64, 2);
+        b.set_f64(1, 0.25);
+        assert_eq!(b.get_f64(1), 0.25);
+        assert_eq!(<f64 as Element>::slice(&b), &[0.0, 0.25]);
+    }
+
+    #[test]
+    #[should_panic(expected = "dtype mismatch")]
+    fn mismatched_slice_panics() {
+        let b = Buf::zeros(DType::F64, 4);
+        let _ = <f32 as Element>::slice(&b);
+    }
+
+    #[test]
+    fn fnv_steps_differ_by_width() {
+        // Same value, different dtype: different digest material.
+        let h64 = 1.0f64.fnv1a_step(0xcbf2_9ce4_8422_2325);
+        let h32 = 1.0f32.fnv1a_step(0xcbf2_9ce4_8422_2325);
+        assert_ne!(h64, h32);
+    }
+
+    #[test]
+    fn fma_slices_match_scalar_mul_add() {
+        let a = [0.1f64, 0.2, 0.3, 0.7];
+        let b = [1.5f64, -2.5, 3.5, 0.25];
+        let c = [0.01f64, 0.02, -0.03, 4.0];
+        let mut out = [0.0f64; 4];
+        f64::mul_add_slices(&mut out, &a, &b, &c);
+        for x in 0..4 {
+            assert_eq!(out[x].to_bits(), a[x].mul_add(b[x], c[x]).to_bits());
+        }
+        let mut out = [0.0f64; 4];
+        f64::mul_sub_slices(&mut out, &a, &b, &c);
+        for x in 0..4 {
+            assert_eq!(out[x].to_bits(), a[x].mul_add(b[x], -c[x]).to_bits());
+        }
+        // And the f32 monomorphization.
+        let a32 = a.map(|v| v as f32);
+        let b32 = b.map(|v| v as f32);
+        let c32 = c.map(|v| v as f32);
+        let mut out32 = [0.0f32; 4];
+        f32::mul_add_slices(&mut out32, &a32, &b32, &c32);
+        for x in 0..4 {
+            assert_eq!(out32[x].to_bits(), a32[x].mul_add(b32[x], c32[x]).to_bits());
+        }
+    }
+}

@@ -1,11 +1,15 @@
 //! Backend-aware 3-D field storages (paper §2.2 "storage" containers).
 
+pub mod element;
 pub mod layout;
 #[allow(clippy::module_inception)]
 pub mod storage;
+pub mod view;
 
+pub use element::{Buf, Element};
 pub use layout::{Alignment, Layout};
 pub use storage::{Storage, StorageInfo};
+pub use view::StorageView;
 
 /// Fill `s` (halo included) with the canonical smooth deterministic test
 /// pattern, parameterized by `phase` — by convention the field's

@@ -7,8 +7,18 @@
 //! (mirroring GT4Py's `origin` convention). Exports/imports to C-order
 //! buffers provide the zero-copy-in-spirit Buffer-Protocol interop with the
 //! PJRT runtime.
+//!
+//! Storages are dtype-generic: the buffer is a tagged [`Buf`] whose variant
+//! always matches `info.dtype` (`f64` or `f32`). The convenience accessors
+//! ([`Storage::get`], [`Storage::set`], [`Storage::fill`]) speak `f64` and
+//! convert at the boundary (round-to-nearest on `f32` storages) — they
+//! exist for fills and diagnostics. Execution paths use the typed
+//! [`Storage::view`] / [`Storage::raw_t`] accessors so all arithmetic
+//! happens at native precision.
 
+use super::element::{Buf, Element};
 use super::layout::{Alignment, Layout};
+use super::view::StorageView;
 use crate::dsl::ast::DType;
 use std::fmt;
 
@@ -33,6 +43,12 @@ impl StorageInfo {
             alignment: Alignment::default(),
             dtype: DType::F64,
         }
+    }
+
+    /// The same geometry with a different element dtype.
+    pub fn with_dtype(mut self, dtype: DType) -> Self {
+        self.dtype = dtype;
+        self
     }
 
     /// Total (unpadded) size along each axis including halos.
@@ -70,25 +86,25 @@ impl StorageInfo {
 #[derive(Clone)]
 pub struct Storage {
     pub info: StorageInfo,
-    /// Flat buffer in `info.layout` order with padding; f64 host
-    /// representation regardless of `dtype` (converted at PJRT boundaries).
-    data: Vec<f64>,
+    /// Flat buffer in `info.layout` order with padding; the [`Buf`] variant
+    /// always matches `info.dtype`.
+    data: Buf,
     strides: [usize; 3],
     /// Flat offset of compute-domain origin (0,0,0).
     origin: usize,
 }
 
 impl Storage {
-    /// Allocate a zero-filled storage.
+    /// Allocate a zero-filled storage (dtype from `info.dtype`).
     pub fn zeros(info: StorageInfo) -> Storage {
         let strides = info.strides();
         let origin = info.halo[0].0 * strides[0]
             + info.halo[1].0 * strides[1]
             + info.halo[2].0 * strides[2];
-        Storage { data: vec![0.0; info.len()], strides, origin, info }
+        Storage { data: Buf::zeros(info.dtype, info.len()), strides, origin, info }
     }
 
-    /// Shorthand: domain shape with a symmetric halo, default layout.
+    /// Shorthand: domain shape with a symmetric halo, default layout, f64.
     pub fn with_halo(shape: [usize; 3], halo: usize) -> Storage {
         Storage::zeros(StorageInfo::new(
             shape,
@@ -96,7 +112,7 @@ impl Storage {
         ))
     }
 
-    /// Shorthand: symmetric horizontal halo, no vertical halo.
+    /// Shorthand: symmetric horizontal halo, no vertical halo, f64.
     pub fn with_horizontal_halo(shape: [usize; 3], halo: usize) -> Storage {
         Storage::zeros(StorageInfo::new(shape, [(halo, halo), (halo, halo), (0, 0)]))
     }
@@ -137,6 +153,30 @@ impl Storage {
         s
     }
 
+    /// Element dtype of this storage.
+    #[inline(always)]
+    pub fn dtype(&self) -> DType {
+        self.info.dtype
+    }
+
+    /// Reallocate this storage at `dtype`, converting every element —
+    /// halo included — through the f64 facade (round-to-nearest on a
+    /// narrowing cast). Always returns a fresh allocation, even for a
+    /// same-dtype cast, so the result never aliases `self`.
+    pub fn cast(&self, dtype: DType) -> Storage {
+        let mut out = Storage::zeros(StorageInfo { dtype, ..self.info });
+        let [ni, nj, nk] = self.info.shape;
+        let h = self.info.halo;
+        for i in -(h[0].0 as i64)..ni as i64 + h[0].1 as i64 {
+            for j in -(h[1].0 as i64)..nj as i64 + h[1].1 as i64 {
+                for k in -(h[2].0 as i64)..nk as i64 + h[2].1 as i64 {
+                    out.set(i, j, k, self.get(i, j, k));
+                }
+            }
+        }
+        out
+    }
+
     #[inline(always)]
     fn flat(&self, i: i64, j: i64, k: i64) -> usize {
         (self.origin as i64
@@ -145,19 +185,37 @@ impl Storage {
             + k * self.strides[2] as i64) as usize
     }
 
-    /// Read at signed domain coordinates (negative = halo). Panics on
-    /// out-of-allocation access in debug builds.
+    /// Read at signed domain coordinates (negative = halo), widened to
+    /// `f64` (exact). Panics on out-of-allocation access in debug builds.
     #[inline(always)]
     pub fn get(&self, i: i64, j: i64, k: i64) -> f64 {
         debug_assert!(self.in_bounds(i, j, k), "storage OOB read ({i},{j},{k})");
-        self.data[self.flat(i, j, k)]
+        self.data.get_f64(self.flat(i, j, k))
     }
 
+    /// Write at signed domain coordinates, rounded to the storage dtype
+    /// (round-to-nearest on `f32` storages).
     #[inline(always)]
     pub fn set(&mut self, i: i64, j: i64, k: i64, v: f64) {
         debug_assert!(self.in_bounds(i, j, k), "storage OOB write ({i},{j},{k})");
         let idx = self.flat(i, j, k);
-        self.data[idx] = v;
+        self.data.set_f64(idx, v);
+    }
+
+    /// Native-precision read at signed domain coordinates; panics if `T`
+    /// does not match the storage dtype.
+    #[inline(always)]
+    pub fn get_t<T: Element>(&self, i: i64, j: i64, k: i64) -> T {
+        debug_assert!(self.in_bounds(i, j, k), "storage OOB read ({i},{j},{k})");
+        T::slice(&self.data)[self.flat(i, j, k)]
+    }
+
+    /// Native-precision write; panics if `T` does not match the dtype.
+    #[inline(always)]
+    pub fn set_t<T: Element>(&mut self, i: i64, j: i64, k: i64, v: T) {
+        debug_assert!(self.in_bounds(i, j, k), "storage OOB write ({i},{j},{k})");
+        let idx = self.flat(i, j, k);
+        T::slice_mut(&mut self.data)[idx] = v;
     }
 
     /// Whether signed coordinates fall inside the allocated halo+domain box.
@@ -176,19 +234,49 @@ impl Storage {
         self.info.shape
     }
 
+    /// Fill the whole allocation (halo included) with `v`, rounded once to
+    /// the storage dtype.
     pub fn fill(&mut self, v: f64) {
-        self.data.fill(v);
+        self.data.fill_f64(v);
     }
 
-    /// Raw flat access for the vector backend's inner loops.
+    /// Raw flat access as `&[f64]` — panics on non-f64 storages. Retained
+    /// for the f64-only compiled backends and diagnostics; dtype-generic
+    /// code uses [`Storage::raw_t`] or [`Storage::view`].
     #[inline(always)]
     pub fn raw(&self) -> &[f64] {
-        &self.data
+        <f64 as Element>::slice(&self.data)
     }
 
     #[inline(always)]
     pub fn raw_mut(&mut self) -> &mut [f64] {
-        &mut self.data
+        <f64 as Element>::slice_mut(&mut self.data)
+    }
+
+    /// Raw flat access at native precision; panics if `T` does not match
+    /// the storage dtype.
+    #[inline(always)]
+    pub fn raw_t<T: Element>(&self) -> &[T] {
+        T::slice(&self.data)
+    }
+
+    #[inline(always)]
+    pub fn raw_mut_t<T: Element>(&mut self) -> &mut [T] {
+        T::slice_mut(&mut self.data)
+    }
+
+    /// A typed shared-slab view over this storage (see
+    /// [`crate::storage::StorageView`]): the access path of every
+    /// evaluator, serial and sharded. Empty storages (the demoted-temporary
+    /// placeholders) yield an inert empty view whatever their tag; a
+    /// non-empty dtype mismatch panics — unreachable after bind-time
+    /// validation.
+    #[inline]
+    pub fn view<T: Element>(&mut self) -> StorageView<'_, T> {
+        if self.data.is_empty() {
+            return StorageView::empty();
+        }
+        StorageView::new(T::slice_mut(&mut self.data), self.origin, self.strides)
     }
 
     #[inline(always)]
@@ -202,7 +290,8 @@ impl Storage {
     }
 
     /// Export the full halo-inclusive box to a C-order (I,J,K) f64 buffer —
-    /// the PJRT interchange format (the Buffer-Protocol analog).
+    /// the PJRT interchange format (the Buffer-Protocol analog). Widens
+    /// `f32` storages exactly.
     pub fn to_c_order(&self) -> Vec<f64> {
         let fs = self.info.full_shape();
         let h = self.info.halo;
@@ -263,12 +352,12 @@ impl Storage {
         let org = self.origin as i64;
         let wk = dims[2];
         let mut idx = 0;
-        if s2 == 1 {
+        if let (Buf::F64(data), 1) = (&self.data, s2) {
             for i in 0..dims[0] as i64 {
                 let ibase = org + (lo[0] + i) * s0;
                 for j in 0..dims[1] as i64 {
                     let base = (ibase + (lo[1] + j) * s1 + lo[2]) as usize;
-                    out[idx..idx + wk].copy_from_slice(&self.data[base..base + wk]);
+                    out[idx..idx + wk].copy_from_slice(&data[base..base + wk]);
                     idx += wk;
                 }
             }
@@ -304,7 +393,7 @@ impl Storage {
         let s = self.info.shape;
         assert_eq!(buf.len(), s[0] * s[1] * s[2], "domain buffer size mismatch");
         let st = self.strides;
-        if st[2] == 1 {
+        if let (Buf::F64(data), 1) = (&mut self.data, st[2]) {
             let (s0, s1) = (st[0], st[1]);
             let org = self.origin;
             let wk = s[2];
@@ -313,7 +402,7 @@ impl Storage {
                 let ibase = org + i * s0;
                 for j in 0..s[1] {
                     let base = ibase + j * s1;
-                    self.data[base..base + wk].copy_from_slice(&buf[idx..idx + wk]);
+                    data[base..base + wk].copy_from_slice(&buf[idx..idx + wk]);
                     idx += wk;
                 }
             }
@@ -330,7 +419,7 @@ impl Storage {
         }
     }
 
-    /// Max |a - b| over the compute domain.
+    /// Max |a - b| over the compute domain (widened to f64).
     pub fn max_abs_diff(&self, other: &Storage) -> f64 {
         assert_eq!(self.info.shape, other.info.shape);
         let s = self.info.shape;
@@ -345,7 +434,32 @@ impl Storage {
         m
     }
 
-    /// Sum over the compute domain (conservation diagnostics).
+    /// Relative L2 error of `self` against reference `other` over the
+    /// compute domain: `||self - other||_2 / ||other||_2` (both widened to
+    /// f64; 0 when the reference norm is 0 and the fields agree). The
+    /// cross-precision validation norm of the model driver's sweep.
+    pub fn rel_l2_error(&self, other: &Storage) -> f64 {
+        assert_eq!(self.info.shape, other.info.shape);
+        let s = self.info.shape;
+        let (mut num, mut den) = (0.0f64, 0.0f64);
+        for i in 0..s[0] as i64 {
+            for j in 0..s[1] as i64 {
+                for k in 0..s[2] as i64 {
+                    let r = other.get(i, j, k);
+                    let d = self.get(i, j, k) - r;
+                    num += d * d;
+                    den += r * r;
+                }
+            }
+        }
+        if den == 0.0 {
+            return if num == 0.0 { 0.0 } else { f64::INFINITY };
+        }
+        (num / den).sqrt()
+    }
+
+    /// Sum over the compute domain (conservation diagnostics; f64
+    /// accumulator whatever the dtype).
     pub fn domain_sum(&self) -> f64 {
         let s = self.info.shape;
         let mut acc = 0.0;
@@ -359,21 +473,28 @@ impl Storage {
         acc
     }
 
-    /// Order-sensitive FNV-1a hash of the compute-domain values' f64 bit
-    /// patterns (i, then j, then k). Two storages hash equal iff every
-    /// domain element is bit-identical — the digest the serve protocol and
-    /// the bitwise honesty gates compare, stronger than a summed checksum
-    /// (which cancels symmetric errors).
+    /// Order-sensitive FNV-1a hash of the compute-domain values'
+    /// *native-width* bit patterns (i, then j, then k). Two storages hash
+    /// equal iff they share dtype and every domain element is
+    /// bit-identical — the digest the serve protocol and the bitwise
+    /// honesty gates compare, stronger than a summed checksum (which
+    /// cancels symmetric errors). `f32` storages hash 4 bytes per element,
+    /// so same-value f32/f64 fields never collide.
     pub fn domain_hash(&self) -> u64 {
+        match self.data {
+            Buf::F64(_) => self.domain_hash_t::<f64>(),
+            Buf::F32(_) => self.domain_hash_t::<f32>(),
+        }
+    }
+
+    fn domain_hash_t<T: Element>(&self) -> u64 {
         let s = self.info.shape;
+        let data = T::slice(&self.data);
         let mut h: u64 = 0xcbf2_9ce4_8422_2325;
         for i in 0..s[0] as i64 {
             for j in 0..s[1] as i64 {
                 for k in 0..s[2] as i64 {
-                    for b in self.get(i, j, k).to_bits().to_le_bytes() {
-                        h ^= b as u64;
-                        h = h.wrapping_mul(0x0000_0100_0000_01b3);
-                    }
+                    h = data[self.flat(i, j, k)].fnv1a_step(h);
                 }
             }
         }
@@ -485,5 +606,57 @@ mod tests {
         assert!(s.in_bounds(5, 5, 3));
         assert!(!s.in_bounds(0, 0, -1));
         assert!(!s.in_bounds(0, 0, 4));
+    }
+
+    #[test]
+    fn f32_storage_stores_single_precision() {
+        let info = StorageInfo::new([2, 2, 2], [(0, 0); 3]).with_dtype(DType::F32);
+        let mut s = Storage::zeros(info);
+        assert_eq!(s.dtype(), DType::F32);
+        // 0.1 is inexact: the f32 round-trip must differ from f64 by the
+        // rounding error, proving the buffer really is 4 bytes wide.
+        s.set(0, 0, 0, 0.1);
+        assert_eq!(s.get(0, 0, 0), 0.1f32 as f64);
+        assert_ne!(s.get(0, 0, 0), 0.1f64);
+        assert_eq!(s.get_t::<f32>(0, 0, 0), 0.1f32);
+        s.set_t::<f32>(1, 1, 1, 2.5f32);
+        assert_eq!(s.get(1, 1, 1), 2.5);
+        assert_eq!(s.raw_t::<f32>().len(), s.info.len());
+    }
+
+    #[test]
+    fn domain_hash_is_dtype_salted() {
+        // Integer values representable exactly in both widths: the values
+        // agree, the hashes must not (native-width bit patterns).
+        let f64s = Storage::from_fn([3, 3, 2], 0, |i, j, k| (i + j + k) as f64);
+        let mut f32s =
+            Storage::zeros(StorageInfo::new([3, 3, 2], [(0, 0); 3]).with_dtype(DType::F32));
+        for i in 0..3 {
+            for j in 0..3 {
+                for k in 0..2 {
+                    f32s.set(i, j, k, (i + j + k) as f64);
+                }
+            }
+        }
+        assert_eq!(f64s.max_abs_diff(&f32s), 0.0);
+        assert_ne!(f64s.domain_hash(), f32s.domain_hash());
+    }
+
+    #[test]
+    fn rel_l2_error_norm() {
+        let a = Storage::from_fn([2, 2, 1], 0, |_, _, _| 2.0);
+        let b = Storage::from_fn([2, 2, 1], 0, |_, _, _| 1.0);
+        assert_eq!(a.rel_l2_error(&a), 0.0);
+        assert_eq!(a.rel_l2_error(&b), 1.0); // ||2-1||/||1|| per element
+        let z = Storage::with_halo([2, 2, 1], 0);
+        assert_eq!(z.rel_l2_error(&z), 0.0);
+        assert_eq!(a.rel_l2_error(&z), f64::INFINITY);
+    }
+
+    #[test]
+    #[should_panic(expected = "dtype mismatch")]
+    fn typed_access_rejects_wrong_dtype() {
+        let s = Storage::with_halo([2, 2, 1], 0);
+        let _ = s.raw_t::<f32>();
     }
 }

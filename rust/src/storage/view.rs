@@ -1,0 +1,292 @@
+//! Shared-slab storage views: the sound replacement for the old
+//! `&mut`-aliasing `SyncCell<Env>` trick in `backend/shard.rs`.
+//!
+//! A [`StorageView`] is a typed window over one storage's flat buffer,
+//! borrowed for lifetime `'a` and accessed through `UnsafeCell` element
+//! pointers. Unlike handing every worker slab its own `&mut Env`, no two
+//! `&mut` references to the same memory ever exist: every read and write
+//! goes through a raw element pointer derived from the same
+//! `&[UnsafeCell<T>]`, which Rust's aliasing model permits to be shared
+//! and concurrently mutated — soundness then rests on the documented
+//! *disjoint-write contract* below instead of on UB-adjacent aliasing.
+//! This is what makes the storage and shard suites Miri-clean.
+//!
+//! ## The disjoint-write contract
+//!
+//! Sharded execution splits the compute domain into i-slabs. Callers of
+//! the `unsafe` accessors must uphold, for the lifetime of the view:
+//!
+//! 1. **Disjoint writes** — no element is written by two threads without
+//!    synchronization. The slab ownership rule
+//!    (`backend/shard.rs::owned_store_range`) partitions every store
+//!    range by slab.
+//! 2. **No read/write races** — no element is read by one thread while
+//!    another writes it. Stage barriers order cross-slab halo reads after
+//!    the writes they observe (PARALLEL multistages); sequential sweeps
+//!    are slab-local by the shardability analysis.
+//! 3. **In-bounds** — flat indices stay inside the view (checked in debug
+//!    builds).
+//!
+//! The same views are used on the serial paths (created from `&mut Env`,
+//! one thread), so there is exactly one evaluator per backend, not a
+//! serial/sharded pair.
+
+use super::element::Element;
+use std::cell::UnsafeCell;
+use std::marker::PhantomData;
+
+/// A typed, shareable window over one storage buffer (see module docs).
+/// `Copy`, pointer-sized cheap; `Send + Sync` by the disjoint-write
+/// contract.
+pub struct StorageView<'a, T: Element> {
+    /// Base of the buffer, element-granular interior mutability.
+    cells: *const UnsafeCell<T>,
+    len: usize,
+    origin: usize,
+    strides: [usize; 3],
+    _borrow: PhantomData<&'a UnsafeCell<T>>,
+}
+
+impl<T: Element> Clone for StorageView<'_, T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T: Element> Copy for StorageView<'_, T> {}
+
+// SAFETY: all element access goes through `UnsafeCell` raw pointers inside
+// `unsafe` methods whose callers uphold the disjoint-write contract; `T` is
+// a sealed plain float (no drop glue, no references).
+unsafe impl<T: Element> Send for StorageView<'_, T> {}
+unsafe impl<T: Element> Sync for StorageView<'_, T> {}
+
+impl<'a, T: Element> StorageView<'a, T> {
+    /// Build a view over an exclusively borrowed element slice. The `&mut`
+    /// entry point is what makes the construction safe: for `'a` the slice
+    /// is unreachable except through views derived from this call.
+    pub(crate) fn new(data: &'a mut [T], origin: usize, strides: [usize; 3]) -> Self {
+        let len = data.len();
+        // `UnsafeCell<T>` has the same layout as `T`; re-typing an
+        // exclusive borrow as a shared slice of cells is the standard
+        // (sound) way to hand out element-granular shared mutability.
+        let cells = data.as_mut_ptr() as *const UnsafeCell<T>;
+        StorageView { cells, len, origin, strides, _borrow: PhantomData }
+    }
+
+    /// An empty view (demoted-temporary placeholders).
+    pub fn empty() -> Self {
+        StorageView {
+            cells: std::ptr::NonNull::dangling().as_ptr(),
+            len: 0,
+            origin: 0,
+            strides: [0; 3],
+            _borrow: PhantomData,
+        }
+    }
+
+    #[inline(always)]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline(always)]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Flat offset of domain origin (0,0,0).
+    #[inline(always)]
+    pub fn origin(&self) -> usize {
+        self.origin
+    }
+
+    /// Flat strides per axis.
+    #[inline(always)]
+    pub fn strides(&self) -> [usize; 3] {
+        self.strides
+    }
+
+    /// Flat index of signed domain coordinates (negative = halo).
+    #[inline(always)]
+    pub fn flat(&self, i: i64, j: i64, k: i64) -> usize {
+        (self.origin as i64
+            + i * self.strides[0] as i64
+            + j * self.strides[1] as i64
+            + k * self.strides[2] as i64) as usize
+    }
+
+    /// Read one element at a flat index.
+    ///
+    /// # Safety
+    /// `idx < len`, and the disjoint-write contract holds (no concurrent
+    /// writer of this element).
+    #[inline(always)]
+    pub unsafe fn read(&self, idx: usize) -> T {
+        debug_assert!(idx < self.len, "storage view OOB read {idx} >= {}", self.len);
+        *(*self.cells.add(idx)).get()
+    }
+
+    /// Write one element at a flat index.
+    ///
+    /// # Safety
+    /// `idx < len`, and the disjoint-write contract holds (this thread is
+    /// the element's unique writer, nobody concurrently reads it).
+    #[inline(always)]
+    pub unsafe fn write(&self, idx: usize, v: T) {
+        debug_assert!(idx < self.len, "storage view OOB write {idx} >= {}", self.len);
+        *(*self.cells.add(idx)).get() = v;
+    }
+
+    /// Read at signed domain coordinates.
+    ///
+    /// # Safety
+    /// Coordinates in the allocated box; disjoint-write contract.
+    #[inline(always)]
+    pub unsafe fn get(&self, i: i64, j: i64, k: i64) -> T {
+        self.read(self.flat(i, j, k))
+    }
+
+    /// Write at signed domain coordinates.
+    ///
+    /// # Safety
+    /// Coordinates in the allocated box; disjoint-write contract.
+    #[inline(always)]
+    pub unsafe fn set(&self, i: i64, j: i64, k: i64, v: T) {
+        self.write(self.flat(i, j, k), v);
+    }
+
+    /// Gather `dst.len()` elements starting at `base`, stepping `stride`
+    /// elements, into a thread-local buffer (the strip-load primitive; a
+    /// `memcpy` when `stride == 1`).
+    ///
+    /// # Safety
+    /// The whole strided range in-bounds; disjoint-write contract (no
+    /// concurrent writer of any gathered element).
+    #[inline]
+    pub unsafe fn read_lanes(&self, base: usize, stride: usize, dst: &mut [T]) {
+        let w = dst.len();
+        if w == 0 {
+            return;
+        }
+        debug_assert!(base + (w - 1) * stride < self.len, "view OOB lane read");
+        if stride == 1 {
+            // dst is an exclusive local buffer: never overlaps the view.
+            std::ptr::copy_nonoverlapping(
+                (*self.cells.add(base)).get() as *const T,
+                dst.as_mut_ptr(),
+                w,
+            );
+        } else {
+            for (x, d) in dst.iter_mut().enumerate() {
+                *d = *(*self.cells.add(base + x * stride)).get();
+            }
+        }
+    }
+
+    /// Scatter `src.len()` elements starting at `base`, stepping `stride`
+    /// elements (the strip-store primitive; a `memcpy` when `stride == 1`).
+    ///
+    /// # Safety
+    /// The whole strided range in-bounds; this thread owns the written
+    /// elements per the disjoint-write contract.
+    #[inline]
+    pub unsafe fn write_lanes(&self, base: usize, stride: usize, src: &[T]) {
+        let w = src.len();
+        if w == 0 {
+            return;
+        }
+        debug_assert!(base + (w - 1) * stride < self.len, "view OOB lane write");
+        if stride == 1 {
+            // src is an exclusive local buffer: never overlaps the view.
+            std::ptr::copy_nonoverlapping(src.as_ptr(), (*self.cells.add(base)).get(), w);
+        } else {
+            for (x, s) in src.iter().enumerate() {
+                *(*self.cells.add(base + x * stride)).get() = *s;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::Storage;
+
+    #[test]
+    fn view_reads_and_writes_roundtrip() {
+        let mut s = Storage::with_halo([4, 3, 2], 1);
+        s.set(1, 1, 1, 6.5);
+        let v: StorageView<'_, f64> = s.view();
+        // SAFETY: single thread, exclusive borrow — contract trivially holds.
+        unsafe {
+            assert_eq!(v.get(1, 1, 1), 6.5);
+            v.set(-1, 0, 0, 2.25);
+            assert_eq!(v.get(-1, 0, 0), 2.25);
+        }
+        assert_eq!(s.get(-1, 0, 0), 2.25);
+    }
+
+    #[test]
+    fn lanes_roundtrip_strided_and_contiguous() {
+        let mut s = Storage::with_halo([4, 4, 4], 0);
+        for k in 0..4 {
+            s.set(0, 0, k, k as f64 + 0.5);
+        }
+        let v: StorageView<'_, f64> = s.view();
+        let base = v.flat(0, 0, 0);
+        let mut buf = [0.0f64; 4];
+        // SAFETY: single thread.
+        unsafe {
+            v.read_lanes(base, 1, &mut buf); // k is stride-1 in IJK layout
+            assert_eq!(buf, [0.5, 1.5, 2.5, 3.5]);
+            let kstride = v.strides()[1];
+            v.read_lanes(v.flat(0, 0, 0), kstride, &mut buf[..2]);
+            buf.reverse();
+            v.write_lanes(base, 1, &buf);
+            assert_eq!(v.get(0, 0, 0), 3.5);
+            // Strided scatter mirrors the strided gather.
+            v.write_lanes(v.flat(0, 0, 0), kstride, &[9.0, 8.0]);
+            assert_eq!(v.get(0, 1, 0), 8.0);
+        }
+    }
+
+    #[test]
+    fn concurrent_disjoint_writes_are_sound() {
+        // The exact sharded-execution shape: two threads write disjoint
+        // i-slabs of one storage through copies of the same view. Run
+        // under Miri, this is the regression test for the SyncCell
+        // replacement.
+        let mut s = Storage::with_halo([8, 2, 2], 0);
+        let v: StorageView<'_, f64> = s.view();
+        std::thread::scope(|scope| {
+            for slab in 0..2usize {
+                scope.spawn(move || {
+                    let (i0, i1) = (slab as i64 * 4, slab as i64 * 4 + 4);
+                    for i in i0..i1 {
+                        for j in 0..2 {
+                            for k in 0..2 {
+                                // SAFETY: i-ranges are disjoint per slab.
+                                unsafe { v.set(i, j, k, (i * 100 + j * 10 + k) as f64) };
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(s.get(0, 0, 0), 0.0);
+        assert_eq!(s.get(3, 1, 1), 311.0);
+        assert_eq!(s.get(7, 1, 0), 710.0);
+    }
+
+    #[test]
+    fn empty_view_is_inert() {
+        let v = StorageView::<'_, f32>::empty();
+        assert!(v.is_empty());
+        assert_eq!(v.len(), 0);
+        // Zero-length lane ops are no-ops even on the dangling base.
+        unsafe {
+            v.read_lanes(0, 1, &mut []);
+            v.write_lanes(0, 1, &[]);
+        }
+    }
+}

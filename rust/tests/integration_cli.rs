@@ -336,6 +336,66 @@ fn threads_flag_shards_without_changing_checksums() {
 }
 
 #[test]
+fn dtype_flag_runs_all_stencils_and_changes_results() {
+    // `--dtype f32` must execute every library stencil at every opt
+    // level, both executor tiers, sharded and serial — and must report
+    // the dtype in --json.
+    for stencil in ["laplacian", "diffuse", "hdiff", "vadv"] {
+        for level in ["0", "1", "2", "3"] {
+            for (tier, threads) in
+                [("interpreted", "off"), ("specialized", "off"), ("specialized", "2")]
+            {
+                let (ok, text) = repro(&[
+                    "run", "--stencil", stencil, "--backend", "vector", "--domain",
+                    "12x10x6", "--iters", "1", "--opt-level", level, "--tier", tier,
+                    "--threads", threads, "--dtype", "f32",
+                ]);
+                assert!(ok, "{stencil} O{level} {tier} threads={threads}:\n{text}");
+                assert!(text.contains("domain sum"), "{text}");
+            }
+        }
+    }
+    let (ok, text) = repro(&[
+        "run", "--stencil", "hdiff", "--backend", "vector", "--domain", "12x10x6",
+        "--iters", "1", "--dtype", "f32", "--json",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("\"dtype\":\"f32\""), "{text}");
+
+    // The precision knob must actually change the computed bits.
+    let sum = |dtype: &str| {
+        let (ok, text) = repro(&[
+            "run", "--stencil", "hdiff", "--backend", "vector", "--domain", "12x10x6",
+            "--iters", "1", "--dtype", dtype,
+        ]);
+        assert!(ok, "{text}");
+        text.lines()
+            .filter(|l| l.contains("domain sum"))
+            .map(str::to_string)
+            .collect::<Vec<_>>()
+    };
+    assert_ne!(sum("f32"), sum("f64"), "f32 run produced f64 bits");
+
+    // A bad value fails cleanly.
+    let (ok, text) = repro(&["run", "--stencil", "hdiff", "--dtype", "f16"]);
+    assert!(!ok);
+    assert!(text.contains("--dtype"), "{text}");
+}
+
+#[test]
+fn model_precision_sweep_reports_per_stencil_errors() {
+    let (ok, text) = repro(&[
+        "model", "--steps", "4", "--domain", "12x12x4", "--backend", "vector",
+        "--precision-sweep",
+    ]);
+    assert!(ok, "{text}");
+    for needle in ["rel_l2", "upwind_advect", "hdiff", "vadv", "model(4 steps)", "ok"] {
+        assert!(text.contains(needle), "missing `{needle}`:\n{text}");
+    }
+    assert!(!text.contains("FAIL"), "{text}");
+}
+
+#[test]
 fn no_checks_flag_disables_validation() {
     let (ok, text) = repro(&[
         "run", "--stencil", "laplacian", "--backend", "vector", "--domain", "8x8x4",

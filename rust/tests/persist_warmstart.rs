@@ -136,6 +136,66 @@ fn warm_start_is_bitwise_identical_and_pipeline_free() {
 }
 
 #[test]
+fn f32_artifacts_warm_start_and_never_alias_f64_entries() {
+    use gt4rs::dsl::ast::DType;
+    let dir = scratch_dir("f32");
+    // --- Cold pass at both precisions through one store. ---
+    let store = Arc::new(PersistStore::open(&dir).unwrap());
+    let mut cold = coordinator(OptLevel::O3, &store);
+    let fp64 = cold.compile_library("hdiff").unwrap();
+    cold.set_dtype(Some(DType::F32));
+    let fp32 = cold.compile_library("hdiff").unwrap();
+    assert_ne!(fp32, fp64, "f32 and f64 artifacts must have distinct fingerprints");
+    let keys: Vec<String> = store
+        .entries()
+        .iter()
+        .filter(|e| e.kind == "ir")
+        .map(|e| e.key.clone())
+        .collect();
+    assert!(keys.contains(&format!("{fp32:016x}")));
+    assert!(keys.contains(&format!("{fp64:016x}")), "distinct persist entries required");
+    let digests32 = run_digests(&mut cold, fp32, ExecTier::Specialized, Sharding::Off);
+    drop(cold);
+    drop(store);
+
+    // --- Warm pass at f32: pipeline-free, bitwise-identical. ---
+    let store = Arc::new(PersistStore::open(&dir).unwrap());
+    let mut warm = coordinator(OptLevel::O3, &store);
+    warm.set_dtype(Some(DType::F32));
+    let fp = warm.compile_library("hdiff").unwrap();
+    assert_eq!(fp, fp32);
+    assert_eq!(warm.pipeline_compiles(), 0, "f32 warm start must skip the pipeline");
+    let ir = warm.ir(fp).unwrap();
+    assert_eq!(ir.dtype(), DType::F32, "reloaded artifact lost its element type");
+    let warm32 = run_digests(&mut warm, fp, ExecTier::Specialized, Sharding::Off);
+    assert_eq!(warm32, digests32, "f32 warm run not bitwise-identical");
+    drop(warm);
+    drop(store);
+
+    // --- Dtype skew is a miss: a store holding only f32 entries must
+    // not satisfy an f64 compile (and vice versa — the fingerprints
+    // simply never collide). ---
+    let skew_dir = scratch_dir("f32skew");
+    let store = Arc::new(PersistStore::open(&skew_dir).unwrap());
+    let mut c = coordinator(OptLevel::O3, &store);
+    c.set_dtype(Some(DType::F32));
+    c.compile_library("hdiff").unwrap();
+    drop(c);
+    drop(store);
+    let store = Arc::new(PersistStore::open(&skew_dir).unwrap());
+    let mut c = coordinator(OptLevel::O3, &store);
+    let fp = c.compile_library("hdiff").unwrap();
+    assert_eq!(fp, fp64);
+    assert_eq!(
+        c.pipeline_compiles(),
+        1,
+        "an f64 compile must treat a dtype-skewed (f32-only) store as cold"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&skew_dir);
+}
+
+#[test]
 fn corrupted_ir_entry_is_rejected_and_recompiled() {
     let dir = scratch_dir("reject");
     let store = Arc::new(PersistStore::open(&dir).unwrap());

@@ -747,6 +747,78 @@ fn sharding_reports_effective_thread_count() {
 }
 
 #[test]
+fn dtype_axis_is_bitwise_identical_to_same_dtype_debug() {
+    // The dtype leg of the honesty contract: every library stencil under
+    // an element-type override, at every opt level × executor tier ×
+    // sharding plan, must be bitwise identical to the *same-dtype* debug
+    // interpreter. (Cross-dtype agreement is neither expected nor wanted
+    // — see the divergence check at the end.)
+    use gt4rs::dsl::ast::DType;
+    let domain = [9, 8, 6];
+    for dtype in [DType::F64, DType::F32] {
+        for name in gt4rs::stdlib::names() {
+            let mut coord0 = Coordinator::with_opt_level(OptLevel::O0);
+            coord0.set_dtype(Some(dtype));
+            let fp0 = coord0.compile_library(name).unwrap();
+            let scalars: Vec<(String, f64)> = coord0
+                .ir(fp0)
+                .unwrap()
+                .scalars
+                .iter()
+                .map(|s| (s.name.clone(), 0.21))
+                .collect();
+            let srefs: Vec<(&str, f64)> =
+                scalars.iter().map(|(n, v)| (n.as_str(), *v)).collect();
+            let reference = run_backend(&mut coord0, fp0, "debug", domain, 7, &srefs);
+            assert_eq!(
+                reference[0].1.dtype(),
+                dtype,
+                "{name}: allocated storages must carry the override dtype"
+            );
+            for level in LEVELS {
+                let mut coord = Coordinator::with_opt_level(level);
+                coord.set_dtype(Some(dtype));
+                let fp = coord.compile_library(name).unwrap();
+                let got = run_backend(&mut coord, fp, "debug", domain, 7, &srefs);
+                assert_fields_match(
+                    &reference,
+                    &got,
+                    0.0,
+                    &format!("{name} {dtype} O{level} debug"),
+                );
+                for sharding in [Sharding::Off, Sharding::Threads(2)] {
+                    for tier in [ExecTier::Interpreted, ExecTier::Specialized] {
+                        let got = run_vector_with_tier(
+                            &mut coord, fp, domain, 7, &srefs, sharding, tier,
+                        );
+                        assert_fields_match(
+                            &reference,
+                            &got,
+                            0.0,
+                            &format!("{name} {dtype} O{level} {sharding} {tier}"),
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    // And f32 must be *genuinely* single precision: distinct fingerprint,
+    // different bits than the f64 run of the same program and inputs.
+    let mut c64 = Coordinator::with_opt_level(OptLevel::O3);
+    let fp64 = c64.compile_library("hdiff").unwrap();
+    let r64 = run_backend(&mut c64, fp64, "vector", domain, 7, &[]);
+    let mut c32 = Coordinator::with_opt_level(OptLevel::O3);
+    c32.set_dtype(Some(DType::F32));
+    let fp32 = c32.compile_library("hdiff").unwrap();
+    assert_ne!(fp32, fp64, "dtype must salt the compilation cache key");
+    let r32 = run_backend(&mut c32, fp32, "vector", domain, 7, &[]);
+    let differs =
+        r64.iter().zip(&r32).any(|((_, a), (_, b))| a.max_abs_diff(b) > 0.0);
+    assert!(differs, "f32 run bitwise-matched f64 — storage silently widened");
+}
+
+#[test]
 fn fingerprints_are_stable_and_distinct() {
     // Distinct generated programs (almost surely) have distinct
     // fingerprints; identical sources always collide.

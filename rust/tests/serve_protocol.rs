@@ -161,6 +161,36 @@ fn direct_path_matches_serial_reference() {
     assert_eq!(response_digests(&run), expected);
 }
 
+/// Over the wire, `options.dtype` salts the artifact fingerprint and
+/// changes the run digests: an f32 lease never shares compiled stencils
+/// — or bits — with an f64 lease of the same definition.
+#[test]
+fn wire_dtype_salts_fingerprints_and_digests() {
+    let server = Server::spawn(ServeConfig::default()).unwrap();
+    let mut client = Client::connect(server.addr());
+    let mut runs = Vec::new();
+    for dtype in ["f64", "f32"] {
+        let bind = client.request(&format!(
+            r#"{{"op":"bind","tenant":"prec","stencil":"hdiff","domain":[16,16,8],"options":{{"opt_level":"3","dtype":"{dtype}"}}}}"#
+        ));
+        assert!(ok(&bind), "{bind:?}");
+        let fp = bind.get("fingerprint").unwrap().as_str().unwrap().to_string();
+        let lease = bind.get("lease").unwrap().as_u64().unwrap();
+        let run = client.request(&format!(
+            r#"{{"op":"run","tenant":"prec","lease":{lease},"iters":2}}"#
+        ));
+        assert!(ok(&run), "{run:?}");
+        runs.push((fp, response_digests(&run)));
+    }
+    let (fp64, digests64) = &runs[0];
+    let (fp32, digests32) = &runs[1];
+    assert_ne!(fp64, fp32, "dtype must salt the wire fingerprint");
+    assert_ne!(
+        digests64, digests32,
+        "f32 digests bitwise-matched f64 — storage silently widened"
+    );
+}
+
 /// Bind + start a long cheap-to-describe run that occupies the (single)
 /// budget core; returns the join handle carrying the run response.
 fn spawn_holder(addr: SocketAddr, iters: u64) -> std::thread::JoinHandle<Value> {
