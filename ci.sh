@@ -7,6 +7,9 @@
 #   ./ci.sh quick    fast feedback: fmt + clippy + bench compile-check +
 #                    tests (skips the release build, examples, doc build
 #                    and the JSON smoke runs)
+#   ./ci.sh tsan     ThreadSanitizer pass over the concurrency unit tests
+#                    (halo exchange, worker pool, storage views); needs a
+#                    nightly toolchain with the rust-src component
 #
 # PJRT-dependent tests skip themselves when no PJRT runtime is present, so
 # this script is expected to pass on machines without one.
@@ -27,6 +30,24 @@ step() {
     echo "=== $* ==="
     "$@"
 }
+
+# ThreadSanitizer mode: interpret the halo-exchange rendezvous, worker
+# pool and storage-view tests under TSan (mirrors the hosted `tsan` job).
+# `-Zsanitizer=thread` needs nightly, and std must be rebuilt instrumented
+# (`-Zbuild-std`, which needs the rust-src component).
+if [[ "${1:-}" == "tsan" ]]; then
+    if ! cargo +nightly --version >/dev/null 2>&1; then
+        echo "ci.sh tsan: nightly toolchain not installed; skipping." >&2
+        echo "ci.sh tsan: rustup toolchain install nightly && rustup component add rust-src --toolchain nightly" >&2
+        exit 0
+    fi
+    step env RUSTFLAGS="-Zsanitizer=thread" \
+        cargo +nightly test -Zbuild-std --target x86_64-unknown-linux-gnu \
+        --lib -- backend::shard:: storage::view::
+    echo
+    echo "ci.sh: tsan checks passed"
+    exit 0
+fi
 
 step cargo fmt --check
 
@@ -64,13 +85,31 @@ if [[ "${1:-}" != "quick" ]]; then
 
     # The A6 scaling bench (tiny mode) runs its bitwise honesty gate and
     # the Auto-degrade assertion, and its JSON artifact must parse under
-    # the same contract as `repro run --json`.
+    # the same contract as `repro run --json`. The scaling-regression
+    # gate (mirrored by the hosted bench-smoke job) then checks that the
+    # `vadv_carry` sequential-carry kernel really runs sharded at
+    # threads=4 — effective_threads == 1 there would mean the per-level
+    # halo exchange regressed back to the serial fallback.
     step cargo bench --bench scaling -- --tiny --json /tmp/gt4rs_scaling.json
     echo
-    echo "=== BENCH_scaling.json parse smoke ==="
+    echo "=== BENCH_scaling.json parse + scaling-regression gate ==="
     if command -v python3 >/dev/null 2>&1; then
         python3 -m json.tool /tmp/gt4rs_scaling.json >/dev/null
-        echo "scaling bench --json: parseable JSON"
+        python3 - /tmp/gt4rs_scaling.json <<'EOF'
+import json, sys
+rows = json.load(open(sys.argv[1]))
+carry = [r for r in rows
+         if r["stencil"] == "vadv_carry" and r["config"] == "threads=4"]
+assert carry, "no vadv_carry threads=4 rows in scaling JSON"
+bad = [r for r in carry if r["threads_used"] <= 1]
+assert not bad, f"serial-fallback regression (threads_used <= 1): {bad}"
+bad = [r for r in carry if r["serial_fallbacks"] > 0]
+assert not bad, f"serial fallbacks reported for a sharded carry: {bad}"
+print("scaling gate: vadv_carry sharded at threads=4 "
+      f"(used={[r['threads_used'] for r in carry]}, "
+      f"exchanges={[r['exchanges'] for r in carry]})")
+EOF
+        echo "scaling bench --json: parseable JSON, carry kernel sharded"
     else
         grep -q '"threads_used"' /tmp/gt4rs_scaling.json
         echo "scaling bench --json: python3 missing, structural grep passed"
@@ -165,10 +204,13 @@ fi
 
 step cargo test -q
 
-# The UnsafeCell-based shared-slab storage views and the sharded writers
-# built on their disjoint-write contract are exactly the code Miri exists
-# to check. Gated on the component being installed (the hosted `miri` job
-# always runs it); quick mode skips it for latency.
+# The UnsafeCell-based shared-slab storage views, the sharded writers
+# built on their disjoint-write contract, and the per-level halo-exchange
+# rendezvous (publish/wait on StorageView halo columns) are exactly the
+# code Miri exists to check — the `storage::`/`backend::shard::` filters
+# reach the halo_* and rendezvous unit tests too. Gated on the component
+# being installed (the hosted `miri` job always runs it); quick mode
+# skips it for latency.
 if [[ "${1:-}" != "quick" ]]; then
     if cargo miri --version >/dev/null 2>&1; then
         step env MIRIFLAGS="-Zmiri-disable-isolation" \

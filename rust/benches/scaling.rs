@@ -6,10 +6,12 @@
 //! For the fused O3 evaluator (and the O2 materializing path as a
 //! contrast row) this sweeps `Threads(1/2/4/8)` plus `Auto`, measuring
 //! median wall time per call, the *effective* thread count the schedule
-//! used, and buffer-pool traffic. Before any timing, every sharded
-//! configuration is checked **bitwise** against `Sharding::Off` on fresh
-//! inputs — a scaling curve for a parallel schedule that changed the
-//! answer would be worthless.
+//! used, buffer-pool traffic, and per-call halo-rendezvous crossings /
+//! serial fallbacks (the `vadv_carry` rows prove the old
+//! sequential-carry serial fallback is gone). Before any timing, every
+//! sharded configuration is checked **bitwise** against `Sharding::Off`
+//! on fresh inputs — a scaling curve for a parallel schedule that
+//! changed the answer would be worthless.
 //!
 //!     cargo bench --bench scaling [-- --tiny] [-- --json PATH]
 //!
@@ -41,6 +43,11 @@ struct Row {
     speedup_vs_t1: f64,
     pool_taken: u64,
     pool_allocated: u64,
+    /// Per-call halo-rendezvous crossings (0 on sync-free plans).
+    exchanges: u64,
+    /// Per-call serial-fallback multistages (the scaling-regression
+    /// gate fails CI when a carry kernel reports these at threads=4).
+    serial_fallbacks: u64,
 }
 
 impl Row {
@@ -48,7 +55,8 @@ impl Row {
         format!(
             "{{\"bench\":\"A6\",\"stencil\":\"{}\",\"domain\":\"{}\",\"opt\":\"{}\",\
              \"config\":\"{}\",\"threads_used\":{},\"median_ns\":{},\
-             \"speedup_vs_t1\":{:.4},\"pool_taken\":{},\"pool_allocated\":{}}}",
+             \"speedup_vs_t1\":{:.4},\"pool_taken\":{},\"pool_allocated\":{},\
+             \"exchanges\":{},\"serial_fallbacks\":{}}}",
             self.stencil,
             self.domain,
             self.opt,
@@ -57,7 +65,9 @@ impl Row {
             self.median_ns,
             self.speedup_vs_t1,
             self.pool_taken,
-            self.pool_allocated
+            self.pool_allocated,
+            self.exchanges,
+            self.serial_fallbacks
         )
     }
 }
@@ -155,7 +165,15 @@ fn a6_scaling(domain: [usize; 3], iters: usize, tiny: bool, rows: &mut Vec<Row>)
         ("threads=8".to_string(), Sharding::Threads(8)),
         ("auto".to_string(), Sharding::Auto),
     ];
-    for (name, scalars) in [("hdiff", vec![]), ("vadv", vec![("dtdz", 0.3)])] {
+    // `vadv_carry` is the kernel that used to hit the serial fallback:
+    // its rows prove the per-level halo exchange actually shards it
+    // (threads_used > 1 with nonzero exchanges), which CI's
+    // scaling-regression gate checks from the JSON artifact.
+    for (name, scalars) in [
+        ("hdiff", vec![]),
+        ("vadv", vec![("dtdz", 0.3)]),
+        ("vadv_carry", vec![("dtdz", 0.3)]),
+    ] {
         for (opt_name, level) in [("O3", OptLevel::O3), ("O2", OptLevel::O2)] {
             let ir = compiled(name, level);
             let be = VectorBackend::new();
@@ -181,6 +199,7 @@ fn a6_scaling(domain: [usize; 3], iters: usize, tiny: bool, rows: &mut Vec<Row>)
                 let mut fields = fresh_fields(&ir, domain);
                 let mut calls = 0u64;
                 let mut used = 1u32;
+                let mut exchanges = 0u64;
                 let sample = bench(iters, || {
                     calls += 1;
                     let mut refs: Vec<(&str, &mut Storage)> =
@@ -197,6 +216,7 @@ fn a6_scaling(domain: [usize; 3], iters: usize, tiny: bool, rows: &mut Vec<Row>)
                         )
                         .unwrap();
                     used = used.max(report.threads);
+                    exchanges += report.exchanges;
                 });
                 let stats = be.take_pool_stats();
                 if *label == "threads=1" {
@@ -218,6 +238,8 @@ fn a6_scaling(domain: [usize; 3], iters: usize, tiny: bool, rows: &mut Vec<Row>)
                     speedup_vs_t1: speedup,
                     pool_taken: stats.taken / calls.max(1),
                     pool_allocated: stats.allocated / calls.max(1),
+                    exchanges: exchanges / calls.max(1),
+                    serial_fallbacks: stats.serial_fallbacks / calls.max(1),
                 });
             }
         }

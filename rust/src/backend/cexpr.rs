@@ -129,10 +129,11 @@ impl CExpr {
 /// `[a + i.0, b + i.1)` (recomputing the halo overlap into slab-local
 /// buffers), while [`TapeOp::StoreField`] resolves to the slab's *owned*
 /// partition — see `shard::owned_store_range` and
-/// `fused::resolve_bounds`. The region also feeds the fused shardability
-/// analysis: a `Load` of a field stored in the same multistage is only
-/// slab-safe when column-local (zero i-offset *and* zero region
-/// i-extent).
+/// `fused::resolve_bounds`. The region also feeds the fused halo-plan
+/// analysis: a `Load` of a field stored in the same multistage is
+/// sync-free only when column-local (zero i-offset *and* zero region
+/// i-extent); wider reads pick the cheapest sufficient rendezvous
+/// schedule (`fused::ms_halo_plan_fused`).
 #[derive(Debug, Clone)]
 pub struct TapeInst {
     pub op: TapeOp,

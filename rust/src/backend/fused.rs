@@ -66,12 +66,13 @@ use super::cexpr::{
 };
 use super::kernels::{self, ExecTier, TierPlan};
 use super::program::{CStage, EnvView, Program};
+use super::shard::{HaloPlan, HaloRendezvous};
 use super::vector::{prune_rings, Pool, PoolElem, Region, Rings, ShardExec};
 use crate::dsl::ast::{BinOp, Interval, IterationPolicy, Offset};
 use crate::ir::implir::{Extent, StorageClass};
 use crate::storage::Element;
 use std::collections::{HashMap, HashSet};
-use std::sync::Barrier;
+use std::time::Instant;
 
 /// Group-scoped scratch buffers for plane/register locals, dense by slot:
 /// `scratch[slot] = Some((region, values))` for the group's scratch-backed
@@ -104,10 +105,10 @@ pub struct Tier {
 pub struct FusedMultistage {
     pub policy: IterationPolicy,
     pub groups: Vec<FusedGroup>,
-    /// Whether this multistage may fan out over i-slabs (see
-    /// [`ms_shardable_fused`]); `false` entries run serially inside an
-    /// otherwise sharded call.
-    pub shardable: bool,
+    /// The synchronization schedule an i-slab fan-out needs (see
+    /// [`ms_halo_plan_fused`]); [`HaloPlan::Serial`] entries run serially
+    /// inside an otherwise sharded call.
+    pub halo: HaloPlan,
 }
 
 /// The fused form of a whole stencil program.
@@ -154,8 +155,8 @@ impl FusedProgram {
                 ));
                 start = end;
             }
-            let shardable = ms_shardable_fused(&groups, ms.policy);
-            multistages.push(FusedMultistage { policy: ms.policy, groups, shardable });
+            let halo = ms_halo_plan_fused(&groups, ms.policy);
+            multistages.push(FusedMultistage { policy: ms.policy, groups, halo });
         }
         FusedProgram { multistages, alloc }
     }
@@ -182,8 +183,8 @@ impl FusedProgram {
         for (mi, ms) in self.multistages.iter().enumerate() {
             let _ = writeln!(
                 out,
-                "multistage {mi}: {:?} shardable={}",
-                ms.policy, ms.shardable
+                "multistage {mi}: {:?} halo={}",
+                ms.policy, ms.halo
             );
             for (gi, g) in ms.groups.iter().enumerate() {
                 let scratch: Vec<&str> =
@@ -370,21 +371,24 @@ fn compile_group(
     FusedGroup { interval: stages[0].interval, scratch, tiers }
 }
 
-/// The fused analog of `vector::ms_shardable`, computed from the tapes.
+/// The fused analog of `vector::ms_halo_plan`, computed from the tapes.
 /// Demoted locals (scratch, rings) are slab-local under sharding, so only
 /// `Field3D` flow can cross a slab boundary:
 ///
 /// * In `PARALLEL` multistages, tiers are barriers — cross-*tier* field
-///   flow is safe at any offset. The hazard is a tier that both stores a
-///   field slot and loads it with a non-column-local access (nonzero
-///   i-offset — which tier splitting already rules out for earlier-stage
-///   defs — or a load region whose i-extent leaves the slab): per-point
-///   store/load ordering would then observe a neighbor slab's concurrent
-///   writes.
-/// * In sequential multistages, each slab sweeps all levels without
-///   synchronizing, so *every* load of a field stored anywhere in the
-///   multistage must be column-local (zero i-offset, zero i-extent).
-fn ms_shardable_fused(groups: &[FusedGroup], policy: IterationPolicy) -> bool {
+///   flow is safe at any offset with no extra plan (`Local`). The one
+///   hazard is a tier that both stores a field slot and loads it with a
+///   non-column-local access (nonzero i-offset — which tier splitting
+///   already rules out for earlier-stage defs — or a load region whose
+///   i-extent leaves the slab): per-point store/load ordering would then
+///   observe a neighbor slab's concurrent writes — `Serial`.
+/// * In sequential multistages the slabs sweep levels in lockstep under
+///   the rendezvous schedule. A non-column-local load of a stored field
+///   at another level (`off.k != 0`) needs `PerLevel`; a same-level one
+///   of *another* tier's store needs `PerStage` (tier-granular lockstep);
+///   a same-level one of the *same* tier's store is the irreducible
+///   in-pass wavefront — `Serial`.
+pub(crate) fn ms_halo_plan_fused(groups: &[FusedGroup], policy: IterationPolicy) -> HaloPlan {
     let mut written: HashSet<usize> = HashSet::new();
     for g in groups {
         for t in &g.tiers {
@@ -395,6 +399,7 @@ fn ms_shardable_fused(groups: &[FusedGroup], policy: IterationPolicy) -> bool {
             }
         }
     }
+    let mut plan = HaloPlan::Local;
     for g in groups {
         for t in &g.tiers {
             let tier_stores: HashSet<usize> = t
@@ -409,20 +414,38 @@ fn ms_shardable_fused(groups: &[FusedGroup], policy: IterationPolicy) -> bool {
             for inst in &t.tape.ops {
                 if let TapeOp::Load { slot, off } = &inst.op {
                     let wide = off[0] != 0 || inst.region.i != (0, 0);
-                    let hazard = match policy {
-                        IterationPolicy::Parallel => tier_stores.contains(slot) && wide,
+                    if !wide {
+                        continue;
+                    }
+                    let need = match policy {
+                        IterationPolicy::Parallel => {
+                            if tier_stores.contains(slot) {
+                                HaloPlan::Serial
+                            } else {
+                                HaloPlan::Local
+                            }
+                        }
                         IterationPolicy::Forward | IterationPolicy::Backward => {
-                            written.contains(slot) && wide
+                            if !written.contains(slot) {
+                                HaloPlan::Local
+                            } else if off[2] != 0 {
+                                HaloPlan::PerLevel
+                            } else if tier_stores.contains(slot) {
+                                HaloPlan::Serial
+                            } else {
+                                HaloPlan::PerStage
+                            }
                         }
                     };
-                    if hazard {
-                        return false;
+                    plan = plan.merge(need);
+                    if plan == HaloPlan::Serial {
+                        return plan;
                     }
                 }
             }
         }
     }
-    true
+    plan
 }
 
 /// Execute a fused program serially (called from the vector backend's
@@ -446,9 +469,11 @@ pub(crate) fn run_program<T: PoolElem>(
 }
 
 /// Run one fused multistage for one i-slab (the serial path passes the
-/// full slab; sharded sequential multistages pass each slab — the
-/// slab-local vertical sweep with its slab-local ring k-cache). Sharded
-/// `PARALLEL` multistages need per-tier barriers and go through
+/// full slab; sharded exchange-free sequential multistages pass each
+/// slab — the zero-sync slab-local vertical sweep with its slab-local
+/// ring k-cache). Sequential multistages whose [`HaloPlan`] demands
+/// exchange go through [`run_multistage_synced`]; sharded `PARALLEL`
+/// multistages need per-tier barriers and go through
 /// [`run_program_sharded`]'s group fan-out instead.
 #[allow(clippy::too_many_arguments)]
 fn run_multistage<T: PoolElem>(
@@ -508,14 +533,95 @@ fn run_multistage<T: PoolElem>(
     }
 }
 
-/// The sharded fused path: shardable `PARALLEL` multistages fan every
-/// fusion group out over the slab partition with a barrier between tiers;
-/// shardable sequential multistages run one slab-local sweep per thread;
-/// anything else degrades to the serial evaluator on the calling thread.
-/// Every worker captures the same `EnvView`; all field access inside goes
-/// through its views under the disjoint-write contract (stores clamped to
-/// owned slab ranges, cross-slab reads ordered by the tier barriers or by
-/// the fork/join between multistages).
+/// One slab's share of a *sequential* fused multistage that needs
+/// cross-slab halo exchange: the same level loop as [`run_multistage`],
+/// run in lockstep with every other slab. Under [`HaloPlan::PerLevel`]
+/// the slabs rendezvous once after each k-level; under
+/// [`HaloPlan::PerStage`] they additionally rendezvous between
+/// consecutive tiers and groups of a level (the rendezvous is threaded
+/// into [`run_group`] as its inter-tier barrier), ordering same-level
+/// cross-slab reads after the tier that produced them. All wait counts
+/// derive from `env.krange` and static tier counts — slab-independent,
+/// per the worker pool's barrier caveat.
+#[allow(clippy::too_many_arguments)]
+fn run_multistage_synced<T: PoolElem>(
+    ms: &FusedMultistage,
+    fp: &FusedProgram,
+    classes: &[StorageClass],
+    depths: &[i32],
+    env: &EnvView<'_, T>,
+    pool: &mut Pool,
+    vals: &mut Vec<T>,
+    slab: (i64, i64),
+    gate: &HaloRendezvous,
+    per_tier: bool,
+    exec: ExecTier,
+) {
+    debug_assert!(matches!(
+        ms.policy,
+        IterationPolicy::Forward | IterationPolicy::Backward
+    ));
+    let bounds: Vec<Vec<Vec<[i64; 4]>>> =
+        ms.groups.iter().map(|g| resolve_bounds(g, env.domain, slab)).collect();
+    let mut rings: Rings<T> = Rings::default();
+    let ranges: Vec<(i64, i64)> =
+        ms.groups.iter().map(|g| env.krange(&g.interval)).collect();
+    let kmin = ranges.iter().map(|r| r.0).min().unwrap_or(0);
+    let kmax = ranges.iter().map(|r| r.1).max().unwrap_or(0);
+    let ks: Vec<i64> = if ms.policy == IterationPolicy::Forward {
+        (kmin..kmax).collect()
+    } else {
+        (kmin..kmax).rev().collect()
+    };
+    for k in ks {
+        let mut ran_any = false;
+        for ((g, gb), (gk0, gk1)) in ms.groups.iter().zip(&bounds).zip(&ranges) {
+            if k >= *gk0 && k < *gk1 {
+                // Tier-granular lockstep across group boundaries: publish
+                // the previous group's last tier before any slab's
+                // same-level wide read in this group.
+                if per_tier && ran_any {
+                    gate.wait();
+                }
+                ran_any = true;
+                run_group(
+                    env,
+                    g,
+                    gb,
+                    classes,
+                    &fp.alloc,
+                    k,
+                    k + 1,
+                    1,
+                    &mut rings,
+                    pool,
+                    vals,
+                    slab,
+                    if per_tier { Some(gate) } else { None },
+                    exec,
+                );
+            }
+        }
+        prune_rings(&mut rings, k, depths, pool);
+        // The per-level halo rendezvous: all of this level's stores
+        // happen-before any slab's next-level neighbor reads.
+        gate.wait();
+    }
+    for (_, (_, b)) in rings.drain() {
+        pool.put(b);
+    }
+}
+
+/// The sharded fused path: `PARALLEL` multistages fan every fusion group
+/// out over the slab partition with a rendezvous between tiers;
+/// sequential multistages run under their [`HaloPlan`] — zero-sync
+/// slab-local sweeps for `Local`, level/tier-lockstep synced sweeps for
+/// `PerLevel`/`PerStage`, and an honestly timed serial fallback only for
+/// the irreducible `Serial` wavefronts. Every worker captures the same
+/// `EnvView`; all field access inside goes through its views under the
+/// disjoint-write contract (stores clamped to owned slab ranges,
+/// cross-slab reads ordered by the tier barriers, the halo rendezvous,
+/// or the fork/join between multistages).
 pub(crate) fn run_program_sharded<T: PoolElem>(
     fp: &FusedProgram,
     program: &Program,
@@ -527,31 +633,35 @@ pub(crate) fn run_program_sharded<T: PoolElem>(
     let depths: Vec<i32> = program.slots.iter().map(|s| s.ring_depth).collect();
     let ni = env.domain[0] as i64;
     for ms in &fp.multistages {
-        if !ms.shardable {
-            let mut pool = exec.serial_pool();
-            let mut vals: Vec<T> = Vec::new();
-            run_multistage(
-                ms, fp, &classes, &depths, env, &mut pool, &mut vals, (0, ni), tier,
-            );
+        if ms.halo == HaloPlan::Serial {
+            let t0 = Instant::now();
+            {
+                let mut pool = exec.serial_pool();
+                let mut vals: Vec<T> = Vec::new();
+                run_multistage(
+                    ms, fp, &classes, &depths, env, &mut pool, &mut vals, (0, ni), tier,
+                );
+            }
+            exec.note_serial_fallback(t0.elapsed());
             continue;
         }
         match ms.policy {
             IterationPolicy::Parallel => {
                 for g in &ms.groups {
-                    let barrier = Barrier::new(exec.slabs.len());
+                    let gate = HaloRendezvous::new(exec.slabs.len());
                     exec.run(&|s, pool| {
                         let slab = exec.slabs[s];
                         let (k0, k1) = env.krange(&g.interval);
                         // k-bounds are slab-independent: either every slab
                         // runs the group's tiers (waiting on the same
-                        // barriers) or none does.
+                        // rendezvous) or none does.
                         if k0 < k1 {
                             let gb = resolve_bounds(g, env.domain, slab);
                             let mut rings: Rings<T> = Rings::default();
                             let mut vals: Vec<T> = Vec::new();
                             run_group(
                                 env, g, &gb, &classes, &fp.alloc, k0, k1, 2,
-                                &mut rings, pool, &mut vals, slab, Some(&barrier),
+                                &mut rings, pool, &mut vals, slab, Some(&gate),
                                 tier,
                             );
                         }
@@ -559,13 +669,29 @@ pub(crate) fn run_program_sharded<T: PoolElem>(
                 }
             }
             IterationPolicy::Forward | IterationPolicy::Backward => {
-                exec.run(&|s, pool| {
-                    let mut vals: Vec<T> = Vec::new();
-                    run_multistage(
-                        ms, fp, &classes, &depths, env, pool, &mut vals,
-                        exec.slabs[s], tier,
-                    );
-                });
+                if ms.halo == HaloPlan::Local {
+                    // Zero-sync slab-local sweeps.
+                    exec.run(&|s, pool| {
+                        let mut vals: Vec<T> = Vec::new();
+                        run_multistage(
+                            ms, fp, &classes, &depths, env, pool, &mut vals,
+                            exec.slabs[s], tier,
+                        );
+                    });
+                } else {
+                    // Cross-slab halo exchange: level-lockstep sweeps
+                    // (tier-lockstep for PerStage).
+                    let gate = HaloRendezvous::new(exec.slabs.len());
+                    let per_tier = ms.halo == HaloPlan::PerStage;
+                    exec.run(&|s, pool| {
+                        let mut vals: Vec<T> = Vec::new();
+                        run_multistage_synced(
+                            ms, fp, &classes, &depths, env, pool, &mut vals,
+                            exec.slabs[s], &gate, per_tier, tier,
+                        );
+                    });
+                    exec.note_exchanges(gate.crossings());
+                }
             }
         }
     }
@@ -614,10 +740,11 @@ fn resolve_bounds(
 /// direction (2 = contiguous k strips for PARALLEL, 1 = j strips per
 /// level for sequential multistages). Scratch buffers cover the slab's
 /// extent-expanded range, so offset reads of demoted locals never leave
-/// the slab. When `barrier` is set (sharded PARALLEL groups), every slab
-/// synchronizes before each tier after the first — tiers are globally
-/// ordered barriers, which is what makes cross-slab reads of fields
-/// written by an earlier tier race-free.
+/// the slab. When `barrier` is set (sharded PARALLEL groups, and
+/// sequential `HaloPlan::PerStage` sweeps via [`run_multistage_synced`]),
+/// every slab rendezvouses before each tier after the first — tiers are
+/// globally ordered barriers, which is what makes cross-slab reads of
+/// fields written by an earlier tier race-free.
 #[allow(clippy::too_many_arguments)]
 fn run_group<T: PoolElem>(
     env: &EnvView<'_, T>,
@@ -632,7 +759,7 @@ fn run_group<T: PoolElem>(
     pool: &mut Pool,
     vals: &mut Vec<T>,
     slab: (i64, i64),
-    barrier: Option<&Barrier>,
+    barrier: Option<&HaloRendezvous>,
     exec: ExecTier,
 ) {
     let nj = env.domain[1] as i64;
@@ -1047,7 +1174,7 @@ mod tests {
         let (p, fp) = fused_program(crate::stdlib::HDIFF_SRC, "hdiff");
         let dump = fp.dump_tapes(&p, [16, 16, 8]);
         assert!(dump.contains("multistage 0"));
-        assert!(dump.contains("shardable=true"));
+        assert!(dump.contains("halo=local"));
         assert!(dump.contains("reorderable"));
         // Kernel classes, op rendering and resolved bounds all surface.
         assert!(dump.contains("store-plane"));
@@ -1108,28 +1235,47 @@ mod tests {
     }
 
     #[test]
-    fn shardability_flags_match_execution_model() {
+    fn halo_plans_match_execution_model() {
         // hdiff (PARALLEL, all temporaries demoted to slab-local scratch)
         // and vadv (sequential, but every in-sweep field read is
-        // column-local) both shard.
+        // column-local) both run with zero cross-slab synchronization.
         let (_, fp) = fused_program(crate::stdlib::HDIFF_SRC, "hdiff");
-        assert!(fp.multistages.iter().all(|ms| ms.shardable), "hdiff must shard");
+        assert!(
+            fp.multistages.iter().all(|ms| ms.halo == HaloPlan::Local),
+            "hdiff must shard sync-free"
+        );
         let (_, fp) = fused_program(crate::stdlib::VADV_SRC, "vadv");
-        assert!(fp.multistages.iter().all(|ms| ms.shardable), "vadv must shard");
+        assert!(
+            fp.multistages.iter().all(|ms| ms.halo == HaloPlan::Local),
+            "vadv must shard sync-free"
+        );
         // A sweep whose carry lives in a *field* read at a horizontal
-        // offset cannot run slab-local sweeps: the multistage must be
-        // flagged for the serial fallback.
-        const SRC: &str = "
+        // offset into the previous level sheds the old serial fallback:
+        // it now runs sharded with a per-level halo rendezvous.
+        const CARRY: &str = "
             stencil s(a: Field<f64>, x: Field<f64>) {
                 with computation(FORWARD) {
                     interval(0, 1) { x = a; }
                     interval(1, None) { x = a + x[1,0,-1] * 0.5; }
                 }
             }";
-        let (_, fp) = fused_program(SRC, "s");
+        let (_, fp) = fused_program(CARRY, "s");
         assert!(
-            fp.multistages.iter().any(|ms| !ms.shardable),
-            "field carry with horizontal offset must degrade to serial"
+            fp.multistages.iter().any(|ms| ms.halo == HaloPlan::PerLevel),
+            "cross-level field carry must get a per-level halo plan"
+        );
+        // A same-level self-read of the sweep's own target is the
+        // irreducible in-pass wavefront: still serial.
+        const WAVEFRONT: &str = "
+            stencil s(a: Field<f64>, x: Field<f64>) {
+                with computation(FORWARD), interval(...) {
+                    x = a + x[1,0,0] * 0.5;
+                }
+            }";
+        let (_, fp) = fused_program(WAVEFRONT, "s");
+        assert!(
+            fp.multistages.iter().any(|ms| ms.halo == HaloPlan::Serial),
+            "in-level wavefront must stay on the serial fallback"
         );
     }
 

@@ -31,7 +31,7 @@
 //!   tile working set L2-resident (tile width scales with the element
 //!   size, so f32 tiles cover twice the lanes of f64 at the same bytes).
 //!   Tile bounds derive from the slab bounds, so tiling composes with
-//!   `backend::shard` without touching the shardability analysis.
+//!   `backend::shard` without touching the halo-plan analysis.
 //!
 //! **Bitwise contract.** Without fast-math the specialized executor is
 //! bitwise-identical to the interpreted tape walker *of the same dtype*:

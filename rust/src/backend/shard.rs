@@ -20,11 +20,19 @@
 //!   Inside a `PARALLEL` multistage, every slab finishes loop-nest pass
 //!   *t* before any slab starts pass *t+1*, which gives cross-slab
 //!   readers of just-written fields a happens-before edge.
-//! * **Vertical sweeps are slab-local.** A sequential (FORWARD/BACKWARD)
-//!   multistage runs each slab's whole k-sweep independently, ring
-//!   k-cache included; the shardability analysis in the vector backend
-//!   proves all in-sweep field flow is column-local first (and falls back
-//!   to serial execution for the rare multistage where it is not).
+//! * **Vertical sweeps exchange halos per level.** A sequential
+//!   (FORWARD/BACKWARD) multistage runs each slab's k-sweep with ring
+//!   k-caches and demoted scratch kept slab-local. The [`HaloPlan`]
+//!   analysis in the vector backend classifies the multistage's cross-slab
+//!   field flow: column-local sweeps run with zero synchronization
+//!   ([`HaloPlan::Local`]); sweeps whose horizontal field carries only
+//!   cross k-levels rendezvous once per level ([`HaloPlan::PerLevel`]) —
+//!   every slab's writes to level *k* are published before any slab reads
+//!   neighbor columns at the next level; same-level cross-slab flow
+//!   between stages/tiers adds a rendezvous after every executed stage
+//!   ([`HaloPlan::PerStage`]). Only an irreducible in-pass wavefront (a
+//!   stage both storing a field and reading it at a horizontal offset on
+//!   the *same* level) still runs serially ([`HaloPlan::Serial`]).
 //!
 //! Every plan is bitwise-identical to [`Sharding::Off`]: values are
 //! computed by the same floating-point expressions over the same inputs,
@@ -104,6 +112,132 @@ impl std::fmt::Display for Sharding {
     }
 }
 
+/// The synchronization schedule one sequential multistage needs to run
+/// sharded, computed at compile time from stage read/write extents (the
+/// vector backend's `ms_halo_plan` / the fused evaluator's
+/// `ms_halo_plan_fused`). Variants are ordered by strictness, so an
+/// analysis folds per-read requirements with [`HaloPlan::merge`].
+///
+/// Soundness argument (level/stage lockstep): between two consecutive
+/// rendezvous every slab executes the same level (and, under `PerStage`,
+/// the same stage/tier). Writes in that window touch only the current
+/// level's owned columns, so a cross-slab read is safe iff it targets a
+/// *different* level (`PerLevel`) or a slot written by an *earlier*,
+/// already-published stage (`PerStage`). A stage reading its own
+/// same-level store at a horizontal offset has no such window — that is
+/// the irreducible `Serial` wavefront. j-offsets never cross i-slabs and
+/// k-ranges are slab-independent, so rendezvous schedules are identical
+/// on every slab (the [`WorkerPool::run_slabs`] barrier caveat).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum HaloPlan {
+    /// No cross-slab field flow: slabs sweep with zero synchronization
+    /// (`PARALLEL` multistages also report `Local`; their per-stage/tier
+    /// barriers are part of the parallel execution model, not of this
+    /// plan).
+    Local,
+    /// Horizontal field carries cross k-levels only (`off.k != 0`): one
+    /// halo rendezvous after every k-level of the sweep.
+    PerLevel,
+    /// Some stage reads another stage's same-level store at a horizontal
+    /// offset: rendezvous after every executed stage of every level (in
+    /// the fused evaluator, after every tier), plus the per-level one.
+    PerStage,
+    /// A stage both stores a field and reads it at a horizontal offset on
+    /// the same level (gather/scatter or strip-order wavefront): no
+    /// level- or stage-granular schedule is sound — run serially.
+    Serial,
+}
+
+impl HaloPlan {
+    /// Fold two per-read requirements: the stricter plan wins.
+    #[must_use]
+    pub fn merge(self, other: HaloPlan) -> HaloPlan {
+        self.max(other)
+    }
+
+    /// Whether the multistage can run sharded at all under this plan.
+    pub fn sharded(self) -> bool {
+        self != HaloPlan::Serial
+    }
+
+    /// Stable lowercase spelling (tape dumps, persisted tapes).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            HaloPlan::Local => "local",
+            HaloPlan::PerLevel => "per-level",
+            HaloPlan::PerStage => "per-stage",
+            HaloPlan::Serial => "serial",
+        }
+    }
+}
+
+impl std::fmt::Display for HaloPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// A reusable rendezvous for per-level halo exchange: `n` slab
+/// participants meeting on the same mutex/condvar generation pattern as
+/// the worker pool's job epochs. Semantically a `std::sync::Barrier`,
+/// plus a crossing counter the reports surface — each full rendezvous is
+/// one "halo exchange" in [`ShardReport::exchanges`] and the
+/// `pool_halo_exchanges_total` metric.
+pub struct HaloRendezvous {
+    state: Mutex<GateState>,
+    all: Condvar,
+    n: usize,
+    crossings: std::sync::atomic::AtomicU64,
+}
+
+struct GateState {
+    arrived: usize,
+    generation: u64,
+}
+
+impl HaloRendezvous {
+    pub fn new(n: usize) -> HaloRendezvous {
+        HaloRendezvous {
+            state: Mutex::new(GateState { arrived: 0, generation: 0 }),
+            all: Condvar::new(),
+            n: n.max(1),
+            crossings: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    /// Number of participants each rendezvous waits for.
+    pub fn participants(&self) -> usize {
+        self.n
+    }
+
+    /// Block until all `n` participants arrive. The last arriver opens
+    /// the gate for everyone and bumps the crossing count; the gate then
+    /// resets for the next level (generations make it safely reusable
+    /// back-to-back, exactly like an epoch bump in [`WorkerPool`]).
+    pub fn wait(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.arrived += 1;
+        if st.arrived == self.n {
+            st.arrived = 0;
+            st.generation = st.generation.wrapping_add(1);
+            self.crossings
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            drop(st);
+            self.all.notify_all();
+        } else {
+            let gen = st.generation;
+            while st.generation == gen {
+                st = self.all.wait(st).unwrap();
+            }
+        }
+    }
+
+    /// Completed rendezvous so far (the run's halo-exchange count).
+    pub fn crossings(&self) -> u64 {
+        self.crossings.load(std::sync::atomic::Ordering::Relaxed)
+    }
+}
+
 /// What a sharded run actually did — surfaced through
 /// [`crate::coordinator::RunStats`] so `--json` consumers see the
 /// *effective* thread count, never the requested plan.
@@ -126,17 +260,32 @@ pub struct ShardReport {
     /// Total per-slab wall time across all slabs; same occupancy caveat
     /// as [`ShardReport::busy_min`].
     pub busy_total: Duration,
+    /// Cross-slab halo rendezvous the run crossed (0 on the zero-sync
+    /// paths). A nonzero count on a sequential-carry kernel is the proof
+    /// the serial fallback did not run — `benches/scaling.rs` and the CI
+    /// scaling-regression gate key off it.
+    pub exchanges: u64,
 }
 
 impl ShardReport {
-    /// The report of an unsharded run.
+    /// The report of an unsharded run with no timing attached (trait
+    /// defaults, backends that never shard).
     pub fn serial() -> ShardReport {
+        ShardReport::serial_with(Duration::ZERO)
+    }
+
+    /// The report of an unsharded run that took `busy` on the calling
+    /// thread — serial execution still reports honest busy time, so the
+    /// scaling bench's occupancy columns mean the same thing whether or
+    /// not a plan degraded.
+    pub fn serial_with(busy: Duration) -> ShardReport {
         ShardReport {
             threads: 1,
             slabs: 1,
-            busy_min: Duration::ZERO,
-            busy_max: Duration::ZERO,
-            busy_total: Duration::ZERO,
+            busy_min: busy,
+            busy_max: busy,
+            busy_total: busy,
+            exchanges: 0,
         }
     }
 }
@@ -584,6 +733,144 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn halo_plan_merge_orders_by_strictness() {
+        use HaloPlan::*;
+        assert_eq!(Local.merge(PerLevel), PerLevel);
+        assert_eq!(PerLevel.merge(Local), PerLevel);
+        assert_eq!(PerLevel.merge(PerStage), PerStage);
+        assert_eq!(PerStage.merge(PerLevel), PerStage);
+        assert_eq!(Serial.merge(Local), Serial);
+        assert_eq!(PerStage.merge(Serial), Serial);
+        assert!(Local.sharded() && PerLevel.sharded() && PerStage.sharded());
+        assert!(!Serial.sharded());
+        assert_eq!(PerLevel.to_string(), "per-level");
+        assert_eq!(Serial.as_str(), "serial");
+    }
+
+    #[test]
+    fn halo_rendezvous_is_reusable_and_counts_crossings() {
+        // One participant never blocks (narrow domains degrade cleanly).
+        let solo = HaloRendezvous::new(1);
+        solo.wait();
+        solo.wait();
+        assert_eq!(solo.crossings(), 2);
+        // Four slabs on the worker pool, five back-to-back levels: after
+        // each rendezvous every slab must observe all contributions of
+        // the level (the happens-before edge the halo exchange needs).
+        let mut pool = WorkerPool::new();
+        pool.ensure_workers(3);
+        let gate = HaloRendezvous::new(4);
+        assert_eq!(gate.participants(), 4);
+        let sum = AtomicUsize::new(0);
+        let levels = 5usize;
+        pool.run_slabs(4, &|s| {
+            for lvl in 0..levels {
+                sum.fetch_add(s + 1, Ordering::SeqCst);
+                gate.wait();
+                assert_eq!(sum.load(Ordering::SeqCst), 10 * (lvl + 1));
+                // Second gate: nobody starts the next level's adds until
+                // every slab has checked this one.
+                gate.wait();
+            }
+        });
+        assert_eq!(gate.crossings(), 2 * levels as u64);
+    }
+
+    #[test]
+    fn halo_exchange_publishes_neighbor_columns_per_level() {
+        // The exact per-level exchange shape the sequential evaluators
+        // run, reduced to its synchronization skeleton: each slab writes
+        // its owned columns of level k through a shared StorageView,
+        // meets the rendezvous, and only then reads neighbor-owned
+        // columns of level k to produce level k+1. Run under Miri and
+        // TSan, this is the regression test for the halo-exchange
+        // aliasing and happens-before obligations.
+        use crate::storage::Storage;
+        use crate::storage::view::StorageView;
+        let (ni, nj, nk) = (8i64, 2i64, 5i64);
+        let mut s = Storage::with_halo([ni as usize, nj as usize, nk as usize], 1);
+        for j in 0..nj {
+            for k in 0..nk {
+                s.set(-1, j, k, 0.25);
+                s.set(ni, j, k, 0.75);
+            }
+            for i in 0..ni {
+                s.set(i, j, 0, (i + 1) as f64);
+            }
+        }
+        // Serial reference for the carry x[i,k] = x[i-1,k-1] + x[i+1,k-1].
+        let mut want = vec![0.0f64; (ni * nj * nk) as usize];
+        let at = |i: i64, j: i64, k: i64, w: &[f64]| -> f64 {
+            if i < 0 {
+                0.25
+            } else if i >= ni {
+                0.75
+            } else {
+                w[((i * nj + j) * nk + k) as usize]
+            }
+        };
+        for j in 0..nj {
+            for i in 0..ni {
+                want[((i * nj + j) * nk) as usize] = (i + 1) as f64;
+            }
+        }
+        for k in 1..nk {
+            for j in 0..nj {
+                for i in 0..ni {
+                    let v = at(i - 1, j, k - 1, &want) + at(i + 1, j, k - 1, &want);
+                    want[((i * nj + j) * nk + k) as usize] = v;
+                }
+            }
+        }
+        let slabs = split_slabs(ni as usize, 2);
+        let gate = HaloRendezvous::new(slabs.len());
+        let mut pool = WorkerPool::new();
+        pool.ensure_workers(slabs.len() - 1);
+        let view: StorageView<'_, f64> = s.view();
+        pool.run_slabs(slabs.len(), &|sx| {
+            let (a, b) = slabs[sx];
+            for k in 1..nk {
+                for j in 0..nj {
+                    for i in a..b {
+                        // SAFETY: reads touch only level k-1 (published by
+                        // the previous rendezvous or the pre-fan-out fill);
+                        // writes touch only this slab's owned columns of
+                        // level k — the disjoint-write contract.
+                        unsafe {
+                            let v = view.get(i - 1, j, k - 1) + view.get(i + 1, j, k - 1);
+                            view.set(i, j, k, v);
+                        }
+                    }
+                }
+                gate.wait();
+            }
+        });
+        assert_eq!(gate.crossings(), (nk - 1) as u64);
+        for i in 0..ni {
+            for j in 0..nj {
+                for k in 0..nk {
+                    assert_eq!(
+                        s.get(i, j, k),
+                        want[((i * nj + j) * nk + k) as usize],
+                        "halo exchange diverged at ({i},{j},{k})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn serial_report_carries_busy_time() {
+        let r = ShardReport::serial_with(Duration::from_millis(7));
+        assert_eq!(r.threads, 1);
+        assert_eq!(r.slabs, 1);
+        assert_eq!(r.exchanges, 0);
+        assert_eq!(r.busy_total, Duration::from_millis(7));
+        assert_eq!(r.busy_min, r.busy_max);
+        assert_eq!(ShardReport::default(), ShardReport::serial());
     }
 
     #[test]

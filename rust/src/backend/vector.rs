@@ -46,7 +46,7 @@ use super::cexpr::{apply_bin, apply_builtin1, apply_builtin2, CExpr};
 use super::fused::FusedProgram;
 use super::kernels::ExecTier;
 use super::program::{CMultistage, CStage, Env, EnvView, Program};
-use super::shard::{split_slabs, ShardReport, WorkerPool};
+use super::shard::{split_slabs, HaloPlan, HaloRendezvous, ShardReport, WorkerPool};
 use super::{Backend, RunConfig, StencilArgs};
 use crate::dsl::ast::{BinOp, DType, IterationPolicy};
 use crate::ir::implir::{StencilIr, StorageClass};
@@ -204,6 +204,13 @@ pub struct PoolStats {
     /// Guard-free j-tiled interior blocks evaluated by the specialized
     /// executor (each covers up to `tile × wl` lanes per op).
     pub blocks_interior: u64,
+    /// Cross-slab halo rendezvous crossed by sharded sequential sweeps
+    /// (each counted once per rendezvous, not per slab). Zero-sync
+    /// (`HaloPlan::Local`) multistages never bump this.
+    pub halo_exchanges: u64,
+    /// Multistages that degraded to serial execution inside an otherwise
+    /// sharded call (`HaloPlan::Serial` — irreducible in-pass wavefronts).
+    pub serial_fallbacks: u64,
 }
 
 /// Pool routing for an element type: which of the dtype-segregated free
@@ -274,6 +281,8 @@ impl Pool {
         self.stats.strips_interpreted += other.stats.strips_interpreted;
         self.stats.strips_guarded += other.stats.strips_guarded;
         self.stats.blocks_interior += other.stats.blocks_interior;
+        self.stats.halo_exchanges += other.stats.halo_exchanges;
+        self.stats.serial_fallbacks += other.stats.serial_fallbacks;
         while self.free64.len() < POOL_FREE_CAP {
             match other.free64.pop() {
                 Some(b) => self.free64.push(b),
@@ -405,8 +414,10 @@ fn gather<T: PoolElem>(
                     (ibase + (j + off[1] as i64) * s1 + (r.k0 + off[2] as i64)) as usize;
                 // SAFETY: in-bounds by the extent analysis; reads of shared
                 // storage are ordered before any conflicting write by the
-                // sharding model (per-stage barriers / slab-local sweeps) —
-                // the disjoint-write contract of `storage/view.rs`.
+                // sharding model (per-stage barriers / per-level halo
+                // rendezvous / slab-local sweeps, as the multistage's
+                // HaloPlan demands) — the disjoint-write contract of
+                // `storage/view.rs`.
                 unsafe { v.read_lanes(base, 1, &mut buf[idx..idx + wk]) };
                 idx += wk;
             }
@@ -761,11 +772,13 @@ pub(crate) fn prune_rings<T: PoolElem>(
 
 /// Run one multistage for one i-slab (the full slab `(0, ni)` is the
 /// serial execution). Used by the serial path for every multistage, by
-/// sharded runs for each slab of a shardable *sequential* multistage
-/// (the slab-local vertical sweep: rings and locals never leave the
-/// slab), and as the serial fallback for unshardable multistages.
-/// Sharded `PARALLEL` multistages go through [`run_parallel_group`]
-/// instead, which interleaves the per-stage barriers.
+/// sharded runs for each slab of an exchange-free (`HaloPlan::Local`)
+/// *sequential* multistage (the zero-sync slab-local vertical sweep:
+/// rings and locals never leave the slab), and as the serial fallback
+/// for `HaloPlan::Serial` multistages. Sequential multistages that need
+/// halo exchange go through [`run_multistage_synced`]; sharded
+/// `PARALLEL` multistages go through [`run_parallel_group`] instead,
+/// which interleaves the per-stage barriers.
 fn run_multistage<T: PoolElem>(
     ms: &CMultistage,
     classes: &[StorageClass],
@@ -834,6 +847,77 @@ fn run_multistage<T: PoolElem>(
     }
 }
 
+/// One slab's share of a *sequential* multistage that needs cross-slab
+/// halo exchange: the same level loop as [`run_multistage`], run in
+/// lockstep with every other slab. Under [`HaloPlan::PerLevel`] the
+/// slabs rendezvous once after each k-level — every slab's level-`k`
+/// stores are published before any slab reads neighbor columns at the
+/// next level. Under [`HaloPlan::PerStage`] they additionally rendezvous
+/// between consecutive *executed* stages of a level, ordering same-level
+/// cross-slab reads after the stage that produced them. Both schedules
+/// are slab-independent (stage k-ranges come from `env.krange`, which
+/// never looks at the slab), so the rendezvous can never skew — the
+/// [`WorkerPool::run_slabs`] barrier caveat.
+///
+/// Rings and demoted locals stay slab-local exactly as in the zero-sync
+/// sweep; only `Field3D` stores cross the rendezvous.
+#[allow(clippy::too_many_arguments)]
+fn run_multistage_synced<T: PoolElem>(
+    ms: &CMultistage,
+    classes: &[StorageClass],
+    depths: &[i32],
+    env: &EnvView<'_, T>,
+    pool: &mut Pool,
+    slab: (i64, i64),
+    gate: &HaloRendezvous,
+    per_stage: bool,
+) {
+    debug_assert!(matches!(
+        ms.policy,
+        IterationPolicy::Forward | IterationPolicy::Backward
+    ));
+    let mut locals = Locals::default();
+    let mut rings: Rings<T> = Rings::default();
+    let ranges: Vec<(i64, i64)> =
+        ms.stages.iter().map(|s| env.krange(&s.interval)).collect();
+    let kmin = ranges.iter().map(|r| r.0).min().unwrap_or(0);
+    let kmax = ranges.iter().map(|r| r.1).max().unwrap_or(0);
+    let ks: Vec<i64> = if ms.policy == IterationPolicy::Forward {
+        (kmin..kmax).collect()
+    } else {
+        (kmin..kmax).rev().collect()
+    };
+    for k in ks {
+        let mut group = None;
+        let mut ran_any = false;
+        for (st, (k0, k1)) in ms.stages.iter().zip(&ranges) {
+            if k >= *k0 && k < *k1 {
+                // Stage-granular lockstep: publish the previous stage's
+                // owned columns before any slab's same-level wide read.
+                if per_stage && ran_any {
+                    gate.wait();
+                }
+                ran_any = true;
+                if group != Some(st.fusion_group) {
+                    locals.flush(pool);
+                    group = Some(st.fusion_group);
+                }
+                run_stage_region(
+                    env, classes, &mut locals, &mut rings, st, k, k + 1, pool, slab,
+                );
+            }
+        }
+        locals.flush(pool);
+        prune_rings(&mut rings, k, depths, pool);
+        // The per-level halo rendezvous: all of this level's stores
+        // happen-before any slab's next-level neighbor reads.
+        gate.wait();
+    }
+    for (_, (_, b)) in rings.drain() {
+        pool.put(b);
+    }
+}
+
 fn run_program<T: PoolElem>(program: &Program, env: &EnvView<'_, T>, pool: &mut Pool) {
     let classes: Vec<StorageClass> = program.slots.iter().map(|s| s.storage).collect();
     let depths: Vec<i32> = program.slots.iter().map(|s| s.ring_depth).collect();
@@ -843,54 +927,74 @@ fn run_program<T: PoolElem>(program: &Program, env: &EnvView<'_, T>, pool: &mut 
     }
 }
 
-/// Whether a multistage can fan out over i-slabs without cross-slab
-/// races. Demoted temporaries are always slab-local (recomputed in the
-/// halo overlap), so only *undemoted* (`Field3D`) slots written inside
-/// the multistage can carry values across a slab boundary:
+/// Classify a multistage's cross-slab field flow into the [`HaloPlan`]
+/// that makes an i-slab fan-out race-free. Demoted temporaries are always
+/// slab-local (recomputed in the halo overlap), so only *undemoted*
+/// (`Field3D`) slots written inside the multistage can carry values
+/// across a slab boundary:
 ///
 /// * `PARALLEL` multistages get a barrier after every stage, making
-///   cross-stage flow through fields safe; the one remaining hazard is a
-///   stage reading its own `Field3D` target (gather-then-scatter
-///   semantics would observe a neighbor slab's concurrent writes
-///   whenever the stage's compute extent leaves its slab).
-/// * Sequential multistages run each slab's whole vertical sweep with no
-///   per-level synchronization, so every read of a `Field3D` slot
-///   written anywhere in the multistage must be column-local: zero
-///   i-offset *and* a zero i-extent on the reading stage.
+///   cross-stage flow through fields safe with no extra plan
+///   (`Local`); the one remaining hazard is a stage reading its own
+///   `Field3D` target (gather-then-scatter semantics would observe a
+///   neighbor slab's concurrent writes whenever the stage's compute
+///   extent leaves its slab) — irreducibly `Serial`.
+/// * Sequential multistages sweep level by level. A read of a written
+///   `Field3D` slot that is column-local (zero i-offset and a zero
+///   i-extent on the reading stage) needs nothing. A horizontal read of
+///   another level (`off.k != 0`) needs the slabs level-locked:
+///   `PerLevel`. A horizontal same-level read of *another* stage's
+///   store needs stage-locked slabs on top: `PerStage`. A horizontal
+///   same-level read of the stage's *own* target is the in-pass
+///   wavefront no rendezvous schedule fixes: `Serial`.
 ///
-/// Unshardable multistages run serially inside an otherwise sharded
-/// call — degrading is always bitwise-safe.
-pub(crate) fn ms_shardable(ms: &CMultistage, classes: &[StorageClass]) -> bool {
+/// `Serial` multistages run serially inside an otherwise sharded call —
+/// degrading is always bitwise-safe (and now honestly timed).
+pub(crate) fn ms_halo_plan(ms: &CMultistage, classes: &[StorageClass]) -> HaloPlan {
     let written: HashSet<usize> = ms
         .stages
         .iter()
         .filter(|st| classes[st.target] == StorageClass::Field3D)
         .map(|st| st.target)
         .collect();
+    let mut plan = HaloPlan::Local;
     for st in &ms.stages {
         let wide = st.extent.i != (0, 0);
-        let mut ok = true;
         st.expr.visit_reads(&mut |slot, off| {
             if classes[slot] != StorageClass::Field3D {
                 return;
             }
-            let hazard = match ms.policy {
+            let horizontal = off[0] != 0 || wide;
+            if !horizontal {
+                return;
+            }
+            let need = match ms.policy {
                 IterationPolicy::Parallel => {
-                    slot == st.target && (off[0] != 0 || wide)
+                    if slot == st.target {
+                        HaloPlan::Serial
+                    } else {
+                        HaloPlan::Local
+                    }
                 }
                 IterationPolicy::Forward | IterationPolicy::Backward => {
-                    written.contains(&slot) && (off[0] != 0 || wide)
+                    if !written.contains(&slot) {
+                        HaloPlan::Local
+                    } else if off[2] != 0 {
+                        HaloPlan::PerLevel
+                    } else if slot == st.target {
+                        HaloPlan::Serial
+                    } else {
+                        HaloPlan::PerStage
+                    }
                 }
             };
-            if hazard {
-                ok = false;
-            }
+            plan = plan.merge(need);
         });
-        if !ok {
-            return false;
+        if plan == HaloPlan::Serial {
+            return plan;
         }
     }
-    true
+    plan
 }
 
 /// Shared state of one sharded run: the slab partition, the checked-out
@@ -907,6 +1011,9 @@ pub(crate) struct ShardExec<'a> {
     busy: Vec<AtomicU64>,
     /// Largest fan-out any region of this run actually used.
     used: AtomicU64,
+    /// Cross-slab halo rendezvous crossed by this run's sequential
+    /// sweeps (see [`ShardReport::exchanges`]).
+    exchanges: AtomicU64,
 }
 
 impl<'a> ShardExec<'a> {
@@ -927,12 +1034,29 @@ impl<'a> ShardExec<'a> {
             pools,
             busy: (0..n).map(|_| AtomicU64::new(0)).collect(),
             used: AtomicU64::new(1),
+            exchanges: AtomicU64::new(0),
         }
     }
 
     /// The buffer pool serial fallbacks borrow (slab 0's).
     pub(crate) fn serial_pool(&self) -> std::sync::MutexGuard<'_, Pool> {
         self.pools[0].lock().unwrap()
+    }
+
+    /// Record a serial fallback: the calling thread just spent `busy`
+    /// running one multistage unsharded, which must show up in the
+    /// occupancy columns exactly like fanned-out work (the scaling
+    /// bench's honesty requirement), and in the fallback counter.
+    pub(crate) fn note_serial_fallback(&self, busy: Duration) {
+        self.busy[0].fetch_add(busy.as_nanos() as u64, Ordering::Relaxed);
+        self.serial_pool().stats.serial_fallbacks += 1;
+    }
+
+    /// Record `n` completed halo rendezvous (once per run region, from
+    /// the rendezvous' own crossing counter — never per slab).
+    pub(crate) fn note_exchanges(&self, n: u64) {
+        self.exchanges.fetch_add(n, Ordering::Relaxed);
+        self.pools[0].lock().unwrap().stats.halo_exchanges += n;
     }
 
     /// Fan `f(slab index, pool)` out over every slab and join. Callers
@@ -965,6 +1089,7 @@ impl<'a> ShardExec<'a> {
             busy_min: busy.iter().copied().min().unwrap_or_default(),
             busy_max: busy.iter().copied().max().unwrap_or_default(),
             busy_total: busy.iter().sum(),
+            exchanges: self.exchanges.load(Ordering::Relaxed),
         };
         (merged, report)
     }
@@ -1001,9 +1126,10 @@ fn run_parallel_group<T: PoolElem>(
     });
 }
 
-/// The sharded materializing path: each multistage either fans out over
-/// the slab partition or (when the shardability analysis says no) runs
-/// serially on the calling thread.
+/// The sharded materializing path: each multistage fans out over the
+/// slab partition under its [`HaloPlan`] — zero-sync for `Local`,
+/// rendezvous-synced sweeps for `PerLevel`/`PerStage`, and an honestly
+/// timed serial fallback only for the irreducible `Serial` wavefronts.
 fn run_program_sharded<T: PoolElem>(
     program: &Program,
     env: &EnvView<'_, T>,
@@ -1013,9 +1139,14 @@ fn run_program_sharded<T: PoolElem>(
     let depths: Vec<i32> = program.slots.iter().map(|s| s.ring_depth).collect();
     let ni = env.domain[0] as i64;
     for ms in &program.multistages {
-        if !ms_shardable(ms, &classes) {
-            let mut pool = exec.serial_pool();
-            run_multistage(ms, &classes, &depths, env, &mut pool, (0, ni));
+        let plan = ms_halo_plan(ms, &classes);
+        if plan == HaloPlan::Serial {
+            let t0 = Instant::now();
+            {
+                let mut pool = exec.serial_pool();
+                run_multistage(ms, &classes, &depths, env, &mut pool, (0, ni));
+            }
+            exec.note_serial_fallback(t0.elapsed());
             continue;
         }
         match ms.policy {
@@ -1033,11 +1164,26 @@ fn run_program_sharded<T: PoolElem>(
                 }
             }
             IterationPolicy::Forward | IterationPolicy::Backward => {
-                // Slab-local vertical sweeps: every slab runs the whole
-                // k-loop with its own locals and ring k-cache.
-                exec.run(&|s, pool| {
-                    run_multistage(ms, &classes, &depths, env, pool, exec.slabs[s]);
-                });
+                if plan == HaloPlan::Local {
+                    // Zero-sync slab-local vertical sweeps: every slab
+                    // runs the whole k-loop with its own locals and
+                    // ring k-cache, no rendezvous at all.
+                    exec.run(&|s, pool| {
+                        run_multistage(ms, &classes, &depths, env, pool, exec.slabs[s]);
+                    });
+                } else {
+                    // Cross-slab halo exchange: one fan-out running the
+                    // sweep level-lockstep (stage-lockstep for PerStage).
+                    let gate = HaloRendezvous::new(exec.slabs.len());
+                    let per_stage = plan == HaloPlan::PerStage;
+                    exec.run(&|s, pool| {
+                        run_multistage_synced(
+                            ms, &classes, &depths, env, pool, exec.slabs[s], &gate,
+                            per_stage,
+                        );
+                    });
+                    exec.note_exchanges(gate.crossings());
+                }
             }
         }
     }
@@ -1057,12 +1203,13 @@ fn run_typed<T: PoolElem>(
     let view = env.view::<T>();
     if threads <= 1 {
         let mut pool = pool;
+        let t0 = Instant::now();
         if let Some(fp) = fused {
             super::fused::run_program(fp, program, &view, &mut pool, tier);
         } else {
             run_program(program, &view, &mut pool);
         }
-        (pool, ShardReport::serial())
+        (pool, ShardReport::serial_with(t0.elapsed()))
     } else {
         let workers = be.checkout_workers(threads - 1);
         let exec = ShardExec::new(split_slabs(view.domain[0], threads), &workers, pool);
@@ -1138,6 +1285,7 @@ mod tests {
     use super::*;
     use crate::analysis::compile_source;
     use crate::backend::debug::DebugBackend;
+    use crate::backend::shard::Sharding;
     use crate::storage::Storage;
     use std::collections::BTreeMap;
 
@@ -1609,13 +1757,53 @@ mod tests {
         }
     }
 
+    /// Shared driver for the halo-plan execution tests: run `SRC` at
+    /// `level` under `sharding`, returning the fields and the report.
+    fn run_carry_source(
+        src: &str,
+        field_names: &[&str],
+        domain: [usize; 3],
+        level: crate::opt::OptLevel,
+        sharding: Sharding,
+    ) -> (Vec<Storage>, ShardReport) {
+        let ir = crate::analysis::compile_source_opt(
+            src,
+            "s",
+            &BTreeMap::new(),
+            &crate::opt::OptConfig::level(level),
+        )
+        .unwrap();
+        let be = VectorBackend::new();
+        let mut fields: Vec<Storage> = (0..field_names.len())
+            .map(|f| {
+                Storage::from_fn_extended(domain, 2, move |i, j, k| {
+                    (i * 7 + j * 2 + k * 3 + f) as f64 * 0.01
+                })
+            })
+            .collect();
+        let report = {
+            let mut refs: Vec<(&str, &mut Storage)> = field_names
+                .iter()
+                .copied()
+                .zip(fields.iter_mut())
+                .collect();
+            be.run_sharded(
+                &ir,
+                &mut StencilArgs { fields: &mut refs, scalars: &[], domain },
+                &RunConfig { sharding, ..RunConfig::default() },
+            )
+            .unwrap()
+        };
+        (fields, report)
+    }
+
     #[test]
-    fn unshardable_multistage_degrades_to_serial_and_stays_exact() {
+    fn cross_level_carry_runs_sharded_with_halo_exchange() {
         use crate::backend::shard::Sharding;
         // A FORWARD sweep carrying state in a *field* read at a horizontal
-        // offset cannot run slab-local sweeps; the shardability analysis
-        // must serialize it (threads reported as 1) and the result must
-        // stay bitwise equal to the serial run.
+        // offset used to degrade to serial; under the per-level halo
+        // exchange it must fan out (threads > 1, exchanges > 0) and stay
+        // bitwise equal to the serial run at every opt level.
         const SRC: &str = "
             stencil s(a: Field<f64>, x: Field<f64>) {
                 with computation(FORWARD) {
@@ -1625,45 +1813,84 @@ mod tests {
             }";
         let domain = [10, 6, 7];
         for level in [crate::opt::OptLevel::O0, crate::opt::OptLevel::O3] {
-            let ir = crate::analysis::compile_source_opt(
-                SRC,
-                "s",
-                &BTreeMap::new(),
-                &crate::opt::OptConfig::level(level),
-            )
-            .unwrap();
-            let be = VectorBackend::new();
-            let run_with = |sharding: Sharding| -> (Vec<Storage>, ShardReport) {
-                let mut fields: Vec<Storage> = (0..2)
-                    .map(|_| {
-                        Storage::from_fn_extended(domain, 2, |i, j, k| {
-                            (i * 7 + j * 2 + k * 3) as f64 * 0.01
-                        })
-                    })
-                    .collect();
-                let report = {
-                    let mut refs: Vec<(&str, &mut Storage)> = ["a", "x"]
-                        .into_iter()
-                        .zip(fields.iter_mut())
-                        .collect();
-                    be.run_sharded(
-                        &ir,
-                        &mut StencilArgs {
-                            fields: &mut refs,
-                            scalars: &[],
-                            domain,
-                        },
-                        &RunConfig { sharding, ..RunConfig::default() },
-                    )
-                    .unwrap()
-                };
-                (fields, report)
-            };
-            let (reference, _) = run_with(Sharding::Off);
-            let (got, rep) = run_with(Sharding::Threads(3));
+            let (reference, rep0) =
+                run_carry_source(SRC, &["a", "x"], domain, level, Sharding::Off);
+            assert_eq!(rep0.threads, 1);
+            assert_eq!(rep0.exchanges, 0);
+            let (got, rep) =
+                run_carry_source(SRC, &["a", "x"], domain, level, Sharding::Threads(3));
+            assert_eq!(
+                rep.threads, 3,
+                "cross-level carry must shard under halo exchange, O{level}"
+            );
+            // One rendezvous per swept level (k = 0..7).
+            assert_eq!(rep.exchanges, 7, "per-level rendezvous count, O{level}");
+            for (r, g) in reference.iter().zip(&got) {
+                assert_eq!(r.max_abs_diff(g), 0.0, "O{level} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn same_level_cross_stage_carry_runs_stage_lockstep() {
+        use crate::backend::shard::Sharding;
+        // Stage 2 reads stage 1's same-level store at an i-offset: the
+        // plan must escalate to per-stage rendezvous, still sharded and
+        // still bitwise-exact.
+        const SRC: &str = "
+            stencil s(a: Field<f64>, x: Field<f64>, y: Field<f64>) {
+                with computation(FORWARD) {
+                    interval(0, 1) { x = a; y = x[1,0,0] + x[-1,0,0]; }
+                    interval(1, None) {
+                        x = a + x[0,0,-1] * 0.5;
+                        y = (x[1,0,0] + x[-1,0,0]) * 0.5;
+                    }
+                }
+            }";
+        let domain = [12, 4, 5];
+        for level in [crate::opt::OptLevel::O0, crate::opt::OptLevel::O3] {
+            let (reference, _) =
+                run_carry_source(SRC, &["a", "x", "y"], domain, level, Sharding::Off);
+            let (got, rep) =
+                run_carry_source(SRC, &["a", "x", "y"], domain, level, Sharding::Threads(4));
+            assert!(
+                rep.threads > 1,
+                "same-level cross-stage carry must shard, O{level}"
+            );
+            assert!(rep.exchanges > 0, "stage rendezvous must be counted, O{level}");
+            for (r, g) in reference.iter().zip(&got) {
+                assert_eq!(r.max_abs_diff(g), 0.0, "O{level} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn in_stage_wavefront_still_degrades_to_serial_and_stays_exact() {
+        use crate::backend::shard::Sharding;
+        // A stage reading its *own* same-level store at an i-offset is the
+        // irreducible wavefront: no rendezvous schedule fixes it, so the
+        // plan must stay Serial (threads reported as 1) and the result
+        // must stay bitwise equal to the serial run.
+        const SRC: &str = "
+            stencil s(a: Field<f64>, x: Field<f64>) {
+                with computation(FORWARD) {
+                    interval(0, None) { x = a + x[1,0,0] * 0.5; }
+                }
+            }";
+        let domain = [10, 6, 7];
+        for level in [crate::opt::OptLevel::O0, crate::opt::OptLevel::O3] {
+            let (reference, _) =
+                run_carry_source(SRC, &["a", "x"], domain, level, Sharding::Off);
+            let (got, rep) =
+                run_carry_source(SRC, &["a", "x"], domain, level, Sharding::Threads(3));
             assert_eq!(
                 rep.threads, 1,
-                "unshardable program must report serial execution, O{level}"
+                "in-stage wavefront must report serial execution, O{level}"
+            );
+            assert_eq!(rep.exchanges, 0, "serial fallback exchanges, O{level}");
+            assert!(
+                rep.busy_total > Duration::ZERO,
+                "serial fallback must report honest busy time, O{level}"
             );
             for (r, g) in reference.iter().zip(&got) {
                 assert_eq!(r.max_abs_diff(g), 0.0, "O{level} diverged");

@@ -61,7 +61,9 @@
 //!   domain into halo-correct i-slabs run on a persistent worker pool —
 //!   slabs are the parallel units (demoted temporaries and ring k-caches
 //!   stay slab-local, halo overlap is recomputed), tiers/stages are
-//!   globally ordered barriers, sequential k-sweeps run slab-local, and
+//!   globally ordered barriers, sequential k-sweeps with cross-slab
+//!   field carries exchange halos at per-level (or per-stage) rendezvous
+//!   points instead of degrading to serial, and
 //!   `Field3D` writes are clamped to each slab's owned columns. Every
 //!   plan is bitwise-identical to serial execution, enforced by the
 //!   property suites and the hosted CI thread-matrix;

@@ -278,7 +278,13 @@ i-slabs executed on T std threads. T is a count, `auto` (one slab per
 core, off for narrow domains) or `off` (default). The REPRO_THREADS
 environment variable supplies the plan when --threads is absent. Every
 plan is bitwise identical to `off`; timing output reports the thread
-count *actually used*.
+count *actually used*. Sequential sweeps whose carry crosses slab
+boundaries (horizontal field reads) run sharded too, exchanging halo
+columns at per-level (or per-stage) rendezvous points; only in-level
+wavefronts (a stage reading its own same-level output at an i-offset)
+fall back to serial. The serve daemon's /metrics surface the counters:
+pool_halo_exchanges_total (rendezvous crossings) and
+pool_serial_fallbacks_total (multistages that degraded).
 
 --dtype f32|f64 recompiles a stencil with every field, scalar and
 temporary at that element type (absent, source declarations stand). Like
@@ -430,10 +436,12 @@ fn cmd_run(flags: &Flags) -> Result<()> {
 
     let mut iter_rows: Vec<String> = Vec::new();
     let mut threads_used = 1u32;
+    let mut halo_exchanges = 0u64;
     for it in 0..iters {
         let mut refs: Vec<&mut Storage> = fields.iter_mut().map(|(_, s)| s).collect();
         let stats = inv.run(&mut refs)?;
         threads_used = threads_used.max(stats.threads_used());
+        halo_exchanges += stats.shard.exchanges;
         if json {
             iter_rows.push(
                 Obj::new()
@@ -441,6 +449,7 @@ fn cmd_run(flags: &Flags) -> Result<()> {
                     .int("checks_ns", stats.checks.as_nanos() as i128)
                     .int("execute_ns", stats.execute.as_nanos() as i128)
                     .int("threads", stats.threads_used())
+                    .int("halo_exchanges", stats.shard.exchanges)
                     .finish(),
             );
         } else {
@@ -479,6 +488,7 @@ fn cmd_run(flags: &Flags) -> Result<()> {
                     &exec.dtype.map(|d| d.to_string()).unwrap_or_else(|| "declared".into()),
                 )
                 .int("threads_used", threads_used)
+                .int("halo_exchanges", halo_exchanges)
                 .int("pipeline_compiles", coord.pipeline_compiles())
                 .int("persist_hits", ph)
                 .int("persist_misses", pm)

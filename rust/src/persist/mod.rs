@@ -13,8 +13,8 @@
 //!   serialized by [`irser`] and re-validated on load by recomputing the
 //!   canonical fingerprint (a warm coordinator skips the whole pipeline);
 //! * `tape` — the vector backend's compiled fused program ([`tapeser`]):
-//!   the value-numbered `CTape`s, scratch/alloc extents and shardability
-//!   verdicts, so an O3 warm start skips tape lowering (kernel plans are
+//!   the value-numbered `CTape`s and scratch/alloc extents, so an O3 warm
+//!   start skips tape lowering (kernel plans and halo plans are
 //!   deterministically re-derived from the tapes, see `tapeser` docs);
 //! * `hlo` — HLO module text for the `pjrt-aot` backend, so a warmed cache
 //!   can stand in for the `make artifacts` directory. (The `xla` JIT

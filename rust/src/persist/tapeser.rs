@@ -2,8 +2,11 @@
 //!
 //! The payload of a `kind = "tape"` persist entry: the expensive half of
 //! [`FusedProgram::compile`] — per-group value-numbered SSA tapes
-//! ([`CTape`]), scratch/alloc extents, intervals and shardability
-//! verdicts — so an O3 warm start skips tape lowering entirely.
+//! ([`CTape`]), scratch/alloc extents and intervals — so an O3 warm
+//! start skips tape lowering entirely. The halo plan is *not* stored: a
+//! load recomputes it from the tapes with the same analysis the fresh
+//! compile runs, so a stale payload can never smuggle in a laxer
+//! synchronization verdict.
 //!
 //! Kernel plans ([`TierPlan`]) are deliberately *not* serialized: they
 //! contain monomorphized kernel variants (and the fast-math FMA choice)
@@ -145,9 +148,8 @@ pub(crate) fn fused_to_json(fp: &FusedProgram) -> String {
             ));
         }
         multistages.push(format!(
-            "{{\"policy\":\"{}\",\"shardable\":{},\"groups\":[{}]}}",
+            "{{\"policy\":\"{}\",\"groups\":[{}]}}",
             policy_to_str(ms.policy),
-            ms.shardable,
             groups.join(",")
         ));
     }
@@ -177,7 +179,6 @@ pub(crate) fn fused_from_json(
     let mut multistages = Vec::new();
     for ms in v.get("multistages")?.as_arr()? {
         let policy = policy_from(ms.get("policy")?.as_str()?)?;
-        let shardable = ms.get("shardable")?.as_bool()?;
         let mut groups = Vec::new();
         for g in ms.get("groups")?.as_arr()? {
             let interval = interval_from(g.get("interval")?)?;
@@ -215,7 +216,10 @@ pub(crate) fn fused_from_json(
             }
             groups.push(FusedGroup { interval, scratch, tiers });
         }
-        multistages.push(FusedMultistage { policy, groups, shardable });
+        // Like kernel plans, the halo plan is derived, never trusted from
+        // disk: recompute it from the reloaded tapes.
+        let halo = crate::backend::fused::ms_halo_plan_fused(&groups, policy);
+        multistages.push(FusedMultistage { policy, groups, halo });
     }
     Some(FusedProgram { multistages, alloc })
 }
@@ -245,8 +249,8 @@ mod tests {
 
     /// Round-trip every stdlib stencil's O3 fused program (exact and
     /// fast-math): the reloaded program — tapes, extents, intervals,
-    /// scratch, shardability *and re-lowered kernel plans* — must be
-    /// structurally identical to the fresh compile.
+    /// scratch, the recomputed halo plan *and re-lowered kernel plans* —
+    /// must be structurally identical to the fresh compile.
     #[test]
     fn stdlib_fused_programs_roundtrip_identically() {
         for name in stdlib::names() {
@@ -281,7 +285,7 @@ mod tests {
         let zero = "[0,0,0,0,0,0]";
         let bad = format!(
             "{{\"alloc\":[{zero}],\"multistages\":[{{\"policy\":\"PARALLEL\",\
-             \"shardable\":true,\"groups\":[{{\"interval\":[[\"s\",0],[\"e\",0]],\
+             \"groups\":[{{\"interval\":[[\"s\",0],[\"e\",0]],\
              \"scratch\":[],\"tiers\":[{{\"extent\":{zero},\"ops\":[[[\"n\",0],{zero}]]}}]}}]}}]}}"
         );
         assert!(fused_from_json(&bad, &classes[..1], false).is_none());

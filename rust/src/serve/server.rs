@@ -724,7 +724,7 @@ fn render_metrics(state: &Arc<ServerState>) -> String {
             }
             for (backend, p) in coord.pool_stats() {
                 let labels = format!("tenant=\"{name}\",backend=\"{backend}\"");
-                let counters: [(&str, u64); 7] = [
+                let counters: [(&str, u64); 9] = [
                     ("pool_buffers_taken_total", p.taken),
                     ("pool_buffers_allocated_total", p.allocated),
                     ("pool_tiers_interpreted_total", p.tiers_interpreted),
@@ -732,6 +732,12 @@ fn render_metrics(state: &Arc<ServerState>) -> String {
                     ("pool_strips_interpreted_total", p.strips_interpreted),
                     ("pool_strips_guarded_total", p.strips_guarded),
                     ("pool_blocks_interior_total", p.blocks_interior),
+                    // Cross-slab halo-rendezvous crossings on sequential
+                    // sweeps, and multistages that still fell back to
+                    // serial (in-level wavefronts) — together these prove
+                    // whether sharded calls actually ran concurrent.
+                    ("pool_halo_exchanges_total", p.halo_exchanges),
+                    ("pool_serial_fallbacks_total", p.serial_fallbacks),
                 ];
                 for (metric, v) in counters {
                     let _ = writeln!(out, "{metric}{{{labels}}} {v}");

@@ -3,6 +3,8 @@
 //!
 //! * `hdiff` — horizontal diffusion with flux limiting (Fig. 3 left);
 //! * `vadv` — implicit vertical advection / Thomas solver (Fig. 3 right);
+//! * `vadv_carry` — vertical sweep with a horizontally spread carry
+//!   (`x[±1,0,-1]`): the per-level halo-exchange workload;
 //! * `diffusion` — the paper's Figure 1 listing, verbatim;
 //! * `basic` — copy/laplacian/diffuse/upwind/column-sum/smagorinsky
 //!   building blocks used by the examples and the model.
@@ -18,9 +20,10 @@ pub const FIGURE1_SRC: &str = include_str!("gts/figure1.gts");
 pub const BASIC_SRC: &str = include_str!("gts/basic.gts");
 
 /// `(stencil name, module source)` for every library stencil.
-pub const LIBRARY: [(&str, &str); 9] = [
+pub const LIBRARY: [(&str, &str); 10] = [
     ("hdiff", HDIFF_SRC),
     ("vadv", VADV_SRC),
+    ("vadv_carry", VADV_SRC),
     ("diffusion", FIGURE1_SRC),
     ("copy", BASIC_SRC),
     ("laplacian", BASIC_SRC),
@@ -102,6 +105,20 @@ mod tests {
         // No horizontal halo for a purely vertical solver.
         assert_eq!(phi.extent.i, (0, 0));
         assert_eq!(phi.extent.j, (0, 0));
+    }
+
+    #[test]
+    fn vadv_carry_structure() {
+        let ir = compile("vadv_carry").unwrap();
+        assert_eq!(ir.multistages.len(), 1);
+        assert_eq!(
+            ir.multistages[0].policy,
+            crate::dsl::ast::IterationPolicy::Forward
+        );
+        // The carry is horizontally spread: one-column halo each side.
+        let x = ir.field("x").unwrap();
+        assert_eq!(x.extent.i, (-1, 1));
+        assert_eq!(x.extent.j, (0, 0));
     }
 
     #[test]

@@ -23,7 +23,11 @@
 //! 2. **No read/write races** — no element is read by one thread while
 //!    another writes it. Stage barriers order cross-slab halo reads after
 //!    the writes they observe (PARALLEL multistages); sequential sweeps
-//!    are slab-local by the shardability analysis.
+//!    with cross-slab field carries rendezvous per level (or per stage)
+//!    so every halo read observes a published, quiescent level
+//!    (`backend/shard.rs::HaloPlan` / `HaloRendezvous`); sweeps the
+//!    halo-plan analysis proves column-local run with no synchronization
+//!    at all.
 //! 3. **In-bounds** — flat indices stay inside the view (checked in debug
 //!    builds).
 //!
@@ -276,6 +280,67 @@ mod tests {
         assert_eq!(s.get(0, 0, 0), 0.0);
         assert_eq!(s.get(3, 1, 1), 311.0);
         assert_eq!(s.get(7, 1, 0), 710.0);
+    }
+
+    #[test]
+    fn halo_reads_after_rendezvous_are_sound() {
+        // The per-level halo-exchange shape (contract point 2): two slabs
+        // sweep k-levels in lockstep, and at each level every slab reads
+        // the *neighbor's* just-written boundary column from the previous
+        // level. The rendezvous between levels is the only ordering; run
+        // under Miri/TSan this is the regression test for the sequential
+        // cross-slab carry path.
+        use crate::backend::shard::HaloRendezvous;
+        let (ni, nk) = (6i64, 4i64);
+        let mut s = Storage::with_halo([ni as usize, 1, nk as usize], 0);
+        for i in 0..ni {
+            s.set(i, 0, 0, i as f64); // level 0 seeds the carry
+        }
+        let v: StorageView<'_, f64> = s.view();
+        let gate = HaloRendezvous::new(2);
+        std::thread::scope(|scope| {
+            for slab in 0..2i64 {
+                let gate = &gate;
+                scope.spawn(move || {
+                    let (i0, i1) = (slab * 3, slab * 3 + 3);
+                    for k in 1..nk {
+                        gate.wait(); // level k-1 fully published
+                        for i in i0..i1 {
+                            // Reads at i±1 cross the slab boundary at the
+                            // owned edges; clamp at the domain edges.
+                            let l = (i - 1).max(0);
+                            let r = (i + 1).min(ni - 1);
+                            // SAFETY: reads touch only level k-1 (quiescent
+                            // since the rendezvous); the write is to this
+                            // slab's owned column at level k.
+                            unsafe {
+                                let x = v.get(l, 0, k - 1) + v.get(r, 0, k - 1);
+                                v.set(i, 0, k, x);
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(gate.crossings(), (nk - 1) as u64);
+        // Serial reference.
+        let mut want = vec![0.0f64; (ni * nk) as usize];
+        for i in 0..ni {
+            want[i as usize] = i as f64;
+        }
+        for k in 1..nk {
+            for i in 0..ni {
+                let l = (i - 1).max(0) as usize;
+                let r = (i + 1).min(ni - 1) as usize;
+                want[(k * ni + i) as usize] =
+                    want[(k - 1) as usize * ni as usize + l] + want[(k - 1) as usize * ni as usize + r];
+            }
+        }
+        for k in 0..nk {
+            for i in 0..ni {
+                assert_eq!(s.get(i, 0, k), want[(k * ni + i) as usize], "i={i} k={k}");
+            }
+        }
     }
 
     #[test]

@@ -21,6 +21,11 @@
 //!   (swept explicitly below, and the whole suite re-runs under any plan
 //!   named by `REPRO_THREADS` — the hosted CI thread-matrix exports 1/2/8
 //!   on real multi-core runners);
+//! * sequential sweeps whose carry crosses slab boundaries (horizontal
+//!   field reads at `k±1`, and same-level cross-stage consumers) run
+//!   **sharded through the per-level/per-stage halo exchange** and stay
+//!   bitwise identical to the same-dtype debug reference over the full
+//!   O0–O3 × executor-tier × `Threads(1..=4)` × {f64,f32} matrix;
 //! * the O3 **specialized kernel-plan executor** (`ExecTier::Specialized`,
 //!   the default) is bitwise identical to the interpreted tape walk and to
 //!   the debug reference under every sharding plan; fast-math relaxation
@@ -700,6 +705,93 @@ fn sharding_sweep_is_bitwise_identical_at_every_opt_level() {
                     0.0,
                     &format!("{name} O{level} Threads({threads})\n{src}\n"),
                 );
+            }
+        }
+    }
+}
+
+#[test]
+fn cross_slab_field_carries_are_bitwise_over_the_full_matrix() {
+    // The halo-exchange honesty gate: random sequential multistages whose
+    // carry is a *field* read at a horizontal offset — the shape that used
+    // to degrade to the serial fallback — now run sharded through the
+    // per-level (k±1 carries) or per-stage (same-level cross-stage
+    // consumers) rendezvous, and must stay bitwise identical to the
+    // same-dtype debug reference at every opt level × executor tier ×
+    // thread count × dtype.
+    use gt4rs::dsl::ast::DType;
+    let domain = [10, 4, 6];
+    let mut cases: Vec<String> = Vec::new();
+    for seed in 0..6u64 {
+        let mut rng = Rng(seed.wrapping_mul(40503).wrapping_add(99));
+        let alpha = 0.2 + 0.5 * (rng.f64() + 0.5);
+        let beta = rng.f64();
+        let (policy, first, rest, dk) = if seed % 2 == 0 {
+            ("FORWARD", "interval(0, 1)", "interval(1, None)", -1)
+        } else {
+            ("BACKWARD", "interval(-1, None)", "interval(0, -1)", 1)
+        };
+        let src = if seed % 3 != 2 {
+            // Per-level exchange: the carry mixes the previous level's
+            // left/right neighbor columns.
+            format!(
+                "stencil iprop(a: Field<f64>, x: Field<f64>) {{\n\
+                   with computation({policy}) {{\n\
+                     {first} {{ x = a * {beta:.3}; }}\n\
+                     {rest} {{ x = a + (x[1,0,{dk}] + x[-1,0,{dk}]) * {alpha:.3}; }}\n\
+                   }}\n\
+                 }}"
+            )
+        } else {
+            // Per-stage exchange: a later stage reads the sweep's target
+            // at a same-level horizontal offset.
+            format!(
+                "stencil iprop(a: Field<f64>, x: Field<f64>, y: Field<f64>) {{\n\
+                   with computation({policy}) {{\n\
+                     {first} {{ x = a * {beta:.3}; y = x; }}\n\
+                     {rest} {{ x = a + x[0,0,{dk}] * {alpha:.3}; \
+                               y = x[1,0,0] + x[-1,0,0]; }}\n\
+                   }}\n\
+                 }}"
+            )
+        };
+        cases.push(src);
+    }
+    for (seed, src) in cases.iter().enumerate() {
+        let seed = seed as u64;
+        for dtype in [DType::F64, DType::F32] {
+            let mut coord0 = Coordinator::with_opt_level(OptLevel::O0);
+            coord0.set_dtype(Some(dtype));
+            let fp0 = coord0
+                .compile_source(src, "iprop", &Default::default())
+                .unwrap_or_else(|e| panic!("seed {seed}: {e:#}\n{src}"));
+            let reference = run_backend(&mut coord0, fp0, "debug", domain, seed, &[]);
+            for level in LEVELS {
+                let mut coord = Coordinator::with_opt_level(level);
+                coord.set_dtype(Some(dtype));
+                let fp =
+                    coord.compile_source(src, "iprop", &Default::default()).unwrap();
+                for threads in 1..=4usize {
+                    for tier in [ExecTier::Interpreted, ExecTier::Specialized] {
+                        let got = run_vector_with_tier(
+                            &mut coord,
+                            fp,
+                            domain,
+                            seed,
+                            &[],
+                            Sharding::Threads(threads),
+                            tier,
+                        );
+                        assert_fields_match(
+                            &reference,
+                            &got,
+                            0.0,
+                            &format!(
+                                "seed {seed} {dtype} O{level} Threads({threads}) {tier}\n{src}\n"
+                            ),
+                        );
+                    }
+                }
             }
         }
     }
